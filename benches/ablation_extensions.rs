@@ -1,0 +1,124 @@
+//! Ablations for the paper's named future-work schemes (§VII/§VIII):
+//! sequence parallelism and expert parallelism, quantified with the same
+//! volume + α–β machinery as the main figures.
+
+use commsim::analysis::{
+    ExpertParallelModel, InferenceShape, SequenceParallelModel, VolumeModel,
+};
+use commsim::cluster::NetModel;
+use commsim::model::ModelArch;
+use commsim::perfmodel::Calibration;
+use commsim::report::{fmt_bytes, render_table};
+
+fn main() -> anyhow::Result<()> {
+    let arch = ModelArch::llama31_8b();
+    let shape = InferenceShape::new(128, 128, 2);
+    let net: NetModel = Calibration::default().net;
+
+    // --- Sequence parallelism: same bytes, double the launches ---------
+    let mut rows = Vec::new();
+    for t in [2usize, 4, 8] {
+        let tp = VolumeModel::new(arch.clone()).tensor_parallel(t, shape);
+        let sp = SequenceParallelModel::new(arch.clone()).volume(t, shape);
+        let spm = SequenceParallelModel::new(arch.clone());
+        // Decode-step latency comparison (one token window, intra-node):
+        let msg = (arch.hidden * 2) as f64;
+        let tp_lat = spm.tp_ops_per_step(t) as f64 * net.allreduce(msg, t, false).total();
+        let sp_lat: f64 = spm
+            .ops_per_step(t)
+            .iter()
+            .map(|(k, c)| {
+                let cost = match k {
+                    commsim::comm::CollectiveKind::ReduceScatter
+                    | commsim::comm::CollectiveKind::AllGather => {
+                        net.allgather(msg, t, false).total()
+                    }
+                    _ => net.allreduce(msg, t, false).total(),
+                };
+                *c as f64 * cost
+            })
+            .sum();
+        rows.push(vec![
+            format!("t={t}"),
+            fmt_bytes(tp.total()),
+            fmt_bytes(sp.total()),
+            format!("{:.1} µs", tp_lat * 1e6),
+            format!("{:.1} µs", sp_lat * 1e6),
+        ]);
+        anyhow::ensure!((tp.total() - sp.total()).abs() < 1e-6, "SP volume == TP volume");
+        // Ring identity: AllReduce(n) = ReduceScatter(n) + AllGather(n) in
+        // both bytes and ring hops — SP is communication-neutral.
+        anyhow::ensure!(
+            (sp_lat - tp_lat).abs() / tp_lat < 0.01,
+            "SP α–β cost equals TP's (ring identity)"
+        );
+    }
+    print!(
+        "{}",
+        render_table(
+            "Ablation — sequence parallelism vs TP (Llama-3.1-8B, Sp=Sd=128)",
+            &["TP size", "TP volume", "SP volume", "TP decode comm", "SP decode comm"],
+            &rows,
+        )
+    );
+    println!("=> SP is communication-neutral (ring AR ≡ RS+AG); its win is activation memory.");
+    println!("   At decode the token window (1) cannot shard across t sequence ranks — why serving engines keep SP off the decode path.\n");
+
+    // --- Expert parallelism: dispatch/combine vs dense AllReduce -------
+    let mut rows = Vec::new();
+    for (top_k, frac) in [(1usize, 1.0f64), (2, 1.0), (2, 0.5)] {
+        let ep = ExpertParallelModel::new(arch.clone(), top_k, frac);
+        let (ep_dec, tp_dec) = ep.decode_volume_vs_tp(4, 4, shape);
+        rows.push(vec![
+            format!("top-{top_k}, {:.0}% MoE layers", frac * 100.0),
+            fmt_bytes(ep.volume(4, shape).total()),
+            fmt_bytes(ep_dec),
+            fmt_bytes(tp_dec),
+            if ep_dec < tp_dec { "EP wins".into() } else { "TP wins".into() },
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            "Ablation — expert parallelism (e=4) vs dense TP=4 decode volume",
+            &["Routing", "EP total volume", "EP decode", "Dense TP decode", "Verdict"],
+            &rows,
+        )
+    );
+    println!("=> top-1 routing undercuts dense TP volume; top-2 on every layer exceeds it — capacity factor is the communication knob.\n");
+
+    // --- Prefill/decode disaggregation (DistServe) ----------------------
+    use commsim::analysis::DisaggregationModel;
+    let m = DisaggregationModel::new(
+        arch.clone(),
+        commsim::analysis::ParallelLayout::new(4, 1), // prefill pool: TTFT-optimal
+        commsim::analysis::ParallelLayout::new(1, 4), // decode pool: volume-optimal
+    );
+    let mut rows = Vec::new();
+    for sd in [16usize, 128, 512] {
+        let s = InferenceShape::new(128, sd, 2);
+        let v = m.volume(s);
+        let colo = m.colocated_volume(commsim::analysis::ParallelLayout::new(4, 1), s);
+        rows.push(vec![
+            format!("Sd={sd}"),
+            fmt_bytes(v.prefill_internal),
+            fmt_bytes(v.kv_transfer),
+            fmt_bytes(v.decode_internal),
+            fmt_bytes(v.total()),
+            fmt_bytes(colo),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            "Ablation — disaggregated prefill(TP4)/decode(PP4) vs colocated TP4 (8B)",
+            &["Decode len", "Prefill pool", "KV migration", "Decode pool", "Disagg total", "Colocated TP4"],
+            &rows,
+        )
+    );
+    let be = m
+        .break_even_decode_len(commsim::analysis::ParallelLayout::new(4, 1), 128, 2, 4096)
+        .unwrap();
+    println!("=> KV migration (16 MiB @ Sp=128) amortizes after Sd >= {be}; past that, stage-specialized pools dominate colocated TP on volume.");
+    Ok(())
+}

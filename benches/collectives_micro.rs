@@ -1,0 +1,94 @@
+//! Microbenchmark: the in-process collective library (AllReduce /
+//! AllGather / Gather / p2p) across group sizes and message sizes — the L3
+//! hot path underneath every decode step. Used by the §Perf pass.
+
+use std::thread;
+
+use commsim::comm::collectives::CommWorld;
+use commsim::comm::{Stage, TraceSink};
+use commsim::testutil::bench;
+
+fn bench_allreduce(size: usize, elems: usize, rounds: usize) {
+    let sink = TraceSink::new();
+    sink.set_enabled(false); // measure the data path, not the tracer
+    let world = CommWorld::new(size, 4, sink);
+    let handles = world.create_group(&(0..size).collect::<Vec<_>>());
+    thread::scope(|s| {
+        for h in handles {
+            s.spawn(move || {
+                let mut buf = vec![1.0f32; elems];
+                for _ in 0..rounds {
+                    h.all_reduce(&mut buf, &[elems], Stage::Decode);
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    println!("collective microbenchmarks (per-op latency = mean/rounds)\n");
+    for (size, elems, rounds) in [
+        (2usize, 4096usize, 200usize), // decode-step AllReduce [1, 4096]
+        (4, 4096, 200),
+        (8, 4096, 100),
+        (2, 128 * 4096, 20), // prefill AllReduce [128, 4096]
+        (4, 128 * 4096, 20),
+    ] {
+        let stats = bench(
+            &format!("allreduce d={size} elems={elems}"),
+            1,
+            10,
+            || bench_allreduce(size, elems, rounds),
+        );
+        let per_op = stats.mean / rounds as u32;
+        println!("{}  -> {:?}/op", stats.report(), per_op);
+    }
+
+    // Tracing overhead: same op with the sink enabled.
+    for enabled in [false, true] {
+        let sink = TraceSink::new();
+        sink.set_enabled(enabled);
+        let world = CommWorld::new(2, 4, sink);
+        let handles = world.create_group(&[0, 1]);
+        let stats = bench(
+            &format!("allreduce d=2 elems=4096 trace={enabled}"),
+            1,
+            10,
+            || {
+                let hs = handles.clone();
+                thread::scope(|s| {
+                    for h in hs {
+                        s.spawn(move || {
+                            let mut buf = vec![1.0f32; 4096];
+                            for _ in 0..200 {
+                                h.all_reduce(&mut buf, &[1, 4096], Stage::Decode);
+                            }
+                        });
+                    }
+                });
+            },
+        );
+        println!("{}", stats.report());
+    }
+
+    // p2p throughput (fresh endpoints per iteration; Sender moves into the
+    // producer thread, Receiver drains on this one).
+    let sink = TraceSink::new();
+    sink.set_enabled(false);
+    let world = CommWorld::new(2, 4, sink);
+    let rx = world.receiver(0, 1);
+    let stats = bench("p2p send+recv elems=4096 x200", 1, 10, || {
+        let tx = world.sender(0, 1);
+        thread::scope(|s| {
+            s.spawn(move || {
+                for _ in 0..200 {
+                    tx.send(vec![1.0f32; 4096], &[1, 4096], Stage::Decode);
+                }
+            });
+            for _ in 0..200 {
+                let _ = rx.recv(&[1, 4096], Stage::Decode);
+            }
+        });
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,77 @@
+//! Microbenchmark: end-to-end engine throughput.
+//!
+//! - structural mode: coordinator + collectives overhead at paper scale
+//!   (the communication skeleton without compute);
+//! - numeric mode (if artifacts are built): the tiny real model through
+//!   PJRT — the serve_e2e hot path the §Perf pass optimizes.
+
+use commsim::analysis::ParallelLayout;
+use commsim::engine::{Engine, EngineConfig};
+use commsim::model::ModelArch;
+use commsim::runtime::ArtifactStore;
+use commsim::testutil::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("engine microbenchmarks\n");
+
+    // Structural skeleton at 8B scale. The request total is dominated by
+    // prefill buffer churn ([128, 4096] AllReduces); decode-step cost is
+    // reported from the engine's own per-step latencies.
+    for (tp, pp) in [(2usize, 1usize), (4, 1), (1, 2), (2, 2)] {
+        let mut engine = Engine::new(EngineConfig::structural(
+            ModelArch::llama31_8b(),
+            ParallelLayout::new(tp, pp),
+        ))?;
+        let mut last_tpot = std::time::Duration::ZERO;
+        let stats = bench(
+            &format!("structural 8B tp={tp} pp={pp} (Sp=128, Sd=16)"),
+            1,
+            5,
+            || {
+                let r = engine.generate(&vec![0i32; 128], 16).unwrap();
+                last_tpot = r.tpot;
+            },
+        );
+        println!("{}  -> decode step {last_tpot:?}", stats.report());
+        engine.trace().clear();
+    }
+
+    // Numeric tiny model (needs `make artifacts`).
+    match ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(store) => {
+            let sp = store.meta.prefill_len;
+            let prompt: Vec<i32> = (0..sp as i32).collect();
+            for (tp, pp) in [(1usize, 1usize), (2, 1), (2, 2)] {
+                let mut engine =
+                    Engine::new(EngineConfig::numeric(store.clone(), ParallelLayout::new(tp, pp)))?;
+                engine.warmup()?;
+                let stats = bench(
+                    &format!("numeric tiny tp={tp} pp={pp} (Sp={sp}, Sd=16)"),
+                    1,
+                    5,
+                    || {
+                        engine.generate(&prompt, 16).unwrap();
+                    },
+                );
+                let tokens_per_s = 16.0 / stats.mean.as_secs_f64();
+                println!("{}  -> {tokens_per_s:.1} tok/s", stats.report());
+            }
+
+            // Fused single-dispatch fast path vs the segment loop (t=1).
+            let mut fused = commsim::engine::fused::FusedEngine::new(store.clone())?;
+            fused.generate(&prompt, 2)?; // warmup
+            let stats = bench(
+                &format!("numeric tiny FUSED t=1 (Sp={sp}, Sd=16)"),
+                1,
+                5,
+                || {
+                    fused.generate(&prompt, 16).unwrap();
+                },
+            );
+            let tokens_per_s = 16.0 / stats.mean.as_secs_f64();
+            println!("{}  -> {tokens_per_s:.1} tok/s", stats.report());
+        }
+        Err(e) => println!("(numeric benches skipped: {e})"),
+    }
+    Ok(())
+}

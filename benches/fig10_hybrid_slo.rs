@@ -1,0 +1,76 @@
+//! Figure 10 reproduction: Llama-2-13B SLO metrics across hybrid
+//! parallelism strategies on 8 GPUs / 2 nodes: TP=8, TP=4×PP=2 (the
+//! paper's "catastrophic" unbalanced config), TP=2×PP=4, PP=8.
+
+use commsim::analysis::{InferenceShape, ParallelLayout};
+use commsim::model::ModelArch;
+use commsim::perfmodel::SloSimulator;
+use commsim::report::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let arch = ModelArch::llama2_13b();
+    let shape = InferenceShape::new(128, 128, 2);
+    // Paper Fig. 10 (numbers quoted in §V.C; '-' = not stated precisely).
+    let paper: &[(usize, usize, Option<f64>, Option<f64>, Option<f64>)] = &[
+        // (tp, pp, e2e s, ttft ms, tpot ms)
+        (8, 1, Some(2.37), Some(70.0), Some(18.0)),
+        (4, 2, Some(15.15), None, Some(103.0)),
+        (2, 4, None, None, None), // "intermediate performance"
+        (1, 8, None, Some(2430.0), None), // "moderate"
+    ];
+
+    let mut rows = Vec::new();
+    let mut sims = Vec::new();
+    for &(tp, pp, p_e2e, p_ttft, p_tpot) in paper {
+        let sim = SloSimulator::on_cardinal(arch.clone(), ParallelLayout::new(tp, pp))?;
+        let r = sim.simulate(shape);
+        sims.push(((tp, pp), r));
+        let fmt_opt = |v: Option<f64>, scale: f64, digits: usize| match v {
+            Some(x) => format!("{:.*}", digits, x * scale),
+            None => "-".to_string(),
+        };
+        rows.push(vec![
+            ParallelLayout::new(tp, pp).label(),
+            format!("{} / {:.2}", fmt_opt(p_e2e, 1.0, 2), r.e2e_s),
+            format!("{} / {:.0}", fmt_opt(p_ttft, 1.0, 0), r.ttft_s * 1e3),
+            format!("{} / {:.1}", fmt_opt(p_tpot, 1.0, 1), r.tpot_s * 1e3),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            "Fig. 10 — Llama-2-13B SLOs, 8 GPUs / 2 nodes (paper / simulated)",
+            &["Config", "E2E (s)", "TTFT (ms)", "TPOT (ms)"],
+            &rows,
+        )
+    );
+
+    let r = |tp: usize, pp: usize| {
+        sims.iter().find(|((t, p), _)| *t == tp && *p == pp).unwrap().1
+    };
+    // Paper's headline findings.
+    anyhow::ensure!(
+        r(8, 1).e2e_s < r(2, 4).e2e_s && r(8, 1).e2e_s < r(1, 8).e2e_s
+            && r(8, 1).e2e_s < r(4, 2).e2e_s,
+        "pure TP=8 is the best configuration"
+    );
+    anyhow::ensure!(
+        r(4, 2).e2e_s > r(2, 4).e2e_s && r(4, 2).e2e_s > r(1, 8).e2e_s,
+        "unbalanced TP=4 PP=2 is catastrophic"
+    );
+    anyhow::ensure!(
+        r(8, 1).ttft_s < 0.1 * r(1, 8).ttft_s,
+        "TP=8 TTFT advantage over PP=8 (prefill parallelization)"
+    );
+    // Quantitative where the paper quotes numbers (within 35%).
+    let close = |got: f64, want: f64, what: &str| {
+        anyhow::ensure!((got - want).abs() / want < 0.35, "{what}: {got} vs {want}");
+        Ok(())
+    };
+    close(r(8, 1).e2e_s, 2.37, "TP8 E2E")?;
+    close(r(8, 1).tpot_s * 1e3, 18.0, "TP8 TPOT")?;
+    close(r(4, 2).tpot_s * 1e3, 103.0, "TP4PP2 TPOT")?;
+    close(r(1, 8).ttft_s * 1e3, 2430.0, "PP8 TTFT")?;
+    println!("\nFig. 10 reproduced: TP8 optimal, TP4 PP2 catastrophic, TP2 PP4 intermediate.");
+    Ok(())
+}

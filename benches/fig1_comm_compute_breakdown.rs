@@ -1,0 +1,68 @@
+//! Figure 1 reproduction: communication/computation breakdown for
+//! Llama-3.1-8B inference under various parallelism settings.
+//!
+//! The paper's motivating figure shows the fraction of execution time spent
+//! in communication per layout. Our SLO simulator decomposes every phase
+//! into {compute, comm, framework overhead} (perfmodel::slo); this bench
+//! prints the same series.
+
+use commsim::analysis::{InferenceShape, ParallelLayout};
+use commsim::model::ModelArch;
+use commsim::perfmodel::SloSimulator;
+use commsim::report::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let arch = ModelArch::llama31_8b();
+    let shape = InferenceShape::new(128, 128, 2);
+    let layouts = [
+        ParallelLayout::new(2, 1),
+        ParallelLayout::new(4, 1),
+        ParallelLayout::new(1, 2),
+        ParallelLayout::new(1, 4),
+        ParallelLayout::new(2, 2),
+    ];
+
+    let mut rows = Vec::new();
+    let mut fractions = Vec::new();
+    for layout in layouts {
+        let sim = SloSimulator::on_cardinal(arch.clone(), layout)?;
+        let r = sim.simulate(shape);
+        let f = r.comm_fraction(shape);
+        fractions.push((layout, f));
+        let steps = (shape.decode_len - 1) as f64;
+        let compute = r.prefill.compute_s + steps * r.decode_step.compute_s;
+        let comm = r.prefill.comm_s + steps * r.decode_step.comm_s;
+        let overhead = r.prefill.overhead_s + steps * r.decode_step.overhead_s;
+        rows.push(vec![
+            layout.label(),
+            format!("{:.1}%", f * 100.0),
+            format!("{:.1} ms", compute * 1e3),
+            format!("{:.1} ms", comm * 1e3),
+            format!("{:.1} ms", overhead * 1e3),
+            format!("{:.3} s", r.e2e_s),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            "Fig. 1 — comm/compute breakdown, Llama-3.1-8B, Sp=Sd=128",
+            &["Layout", "Comm fraction", "Compute", "Comm", "Framework", "E2E"],
+            &rows,
+        )
+    );
+
+    // Paper's qualitative claims: TP is the most communication-bound;
+    // decode-stage comm dominates; PP comm fraction is the smallest.
+    let f = |tp: usize, pp: usize| {
+        fractions
+            .iter()
+            .find(|(l, _)| l.tp == tp && l.pp == pp)
+            .map(|(_, f)| *f)
+            .unwrap()
+    };
+    anyhow::ensure!(f(4, 1) > f(1, 4), "TP must be more comm-bound than PP");
+    anyhow::ensure!(f(4, 1) > f(2, 1), "comm fraction grows with TP degree");
+    println!("\nFig. 1 shape holds: TP4 comm share {:.1}% > TP2 {:.1}% > PP4 {:.1}%",
+        f(4,1) * 100.0, f(2,1) * 100.0, f(1,4) * 100.0);
+    Ok(())
+}

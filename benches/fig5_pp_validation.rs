@@ -1,0 +1,74 @@
+//! Figure 5 reproduction: pipeline parallelism — analytical model validated
+//! against observed data (E2E point-to-point count & total message size),
+//! Llama-3.1-8B, across PP degrees.
+
+use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout};
+use commsim::comm::{CollectiveKind, Stage};
+use commsim::engine::{Engine, EngineConfig};
+use commsim::model::ModelArch;
+use commsim::report::{fmt_bytes, render_table};
+
+fn main() -> anyhow::Result<()> {
+    let arch = ModelArch::llama31_8b();
+    let shape = InferenceShape::new(128, 128, 2);
+    let mut rows = Vec::new();
+    let mut failures = 0;
+
+    for pp in [2usize, 4, 8] {
+        let layout = ParallelLayout::new(1, pp);
+        let model = OpCountModel::new(arch.clone(), layout, shape);
+        let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
+        engine.generate(&vec![0i32; 128], 128)?;
+        let s = engine.trace().summary();
+
+        let mut a_count = 0usize;
+        let mut a_bytes = 0f64;
+        let mut m_count = 0usize;
+        let mut m_bytes = 0usize;
+        for stage in [Stage::Prefill, Stage::Decode] {
+            for o in model
+                .predict_global(stage)
+                .ops
+                .iter()
+                .filter(|o| o.op == CollectiveKind::Send)
+            {
+                let elems: usize = o.shape.iter().product();
+                a_count += o.count;
+                a_bytes += (o.count * elems * shape.dtype_bytes) as f64;
+            }
+            // Global sends (each transfer counted once, like the paper).
+            for (k, v) in s.global.iter().filter(|(k, _)| {
+                k.op == CollectiveKind::Send && k.stage == stage
+            }) {
+                let _ = k;
+                m_count += v.count;
+                m_bytes += v.total_message_bytes;
+            }
+        }
+        let ok = a_count == m_count && (a_bytes - m_bytes as f64).abs() < 0.5;
+        if !ok {
+            failures += 1;
+        }
+        rows.push(vec![
+            format!("PP={pp}"),
+            a_count.to_string(),
+            m_count.to_string(),
+            fmt_bytes(a_bytes),
+            fmt_bytes(m_bytes as f64),
+            if ok { "OK".into() } else { "MISMATCH".into() },
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            "Fig. 5 — PP validation: E2E p2p count & total message size (Llama-3.1-8B)",
+            &["Degree", "Count (model)", "Count (observed)", "Bytes (model)", "Bytes (observed)", ""],
+            &rows,
+        )
+    );
+    if failures > 0 {
+        anyhow::bail!("{failures} degrees diverged");
+    }
+    println!("\nFig. 5 reproduced: analytical model matches observation exactly for all degrees.");
+    Ok(())
+}

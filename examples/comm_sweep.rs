@@ -1,0 +1,65 @@
+//! Communication sweep — regenerates the paper's full measurement campaign
+//! in one run: every (model × layout × decode length) cell, engine-traced
+//! and analytically cross-checked. The CSV on stdout is the input for
+//! re-plotting Figs. 4–7.
+//!
+//! Run: `cargo run --release --example comm_sweep [--fast]`
+
+use commsim::analysis::{InferenceShape, ParallelLayout, VolumeModel};
+use commsim::comm::{CollectiveKind, Stage};
+use commsim::engine::{Engine, EngineConfig};
+use commsim::model::ModelArch;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let sds: &[usize] = if fast { &[32] } else { &[128, 256, 512] };
+    let layouts = [
+        ParallelLayout::new(2, 1),
+        ParallelLayout::new(4, 1),
+        ParallelLayout::new(1, 2),
+        ParallelLayout::new(1, 4),
+        ParallelLayout::new(2, 2),
+    ];
+
+    println!("model,layout,sp,sd,op,stage,count,message_bytes,corrected_bytes,analytical_total");
+    let mut cells = 0;
+    for arch in ModelArch::paper_models() {
+        for layout in layouts {
+            for &sd in sds {
+                let sp = 128;
+                let shape = InferenceShape::new(sp, sd, 2);
+                let analytical = VolumeModel::new(arch.clone()).volume(layout, shape).total();
+                let mut engine =
+                    Engine::new(EngineConfig::structural(arch.clone(), layout))?;
+                engine.generate(&vec![0i32; sp], sd)?;
+                let s = engine.trace().summary();
+                for stage in [Stage::Prefill, Stage::Decode] {
+                    for op in [
+                        CollectiveKind::AllReduce,
+                        CollectiveKind::AllGather,
+                        CollectiveKind::Gather,
+                        CollectiveKind::Send,
+                    ] {
+                        let v = s.paper_view(op, stage);
+                        if v.count == 0 {
+                            continue;
+                        }
+                        println!(
+                            "{},{},{sp},{sd},{},{},{},{},{:.0},{analytical:.0}",
+                            arch.name,
+                            layout.label().replace(' ', "x"),
+                            op.label(),
+                            stage.label(),
+                            v.count,
+                            v.total_message_bytes,
+                            v.corrected_volume_bytes,
+                        );
+                    }
+                }
+                cells += 1;
+            }
+        }
+    }
+    eprintln!("swept {cells} (model x layout x Sd) cells");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Parallelism advisor — the paper's Future Work §VII made executable:
+//! "automated parallelism selection tools that dynamically choose optimal
+//! configurations based on infrastructure characteristics and workload
+//! requirements".
+//!
+//! Enumerates every feasible (TP, PP) layout of a model on a given cluster,
+//! simulates TTFT/TPOT/E2E + communication volume for the workload, and
+//! recommends per objective (interactive latency / long-form generation /
+//! bandwidth-constrained).
+//!
+//! Run: `cargo run --release --example parallelism_advisor [model] [gpus] [sp] [sd]`
+
+use commsim::analysis::{InferenceShape, ParallelLayout, VolumeModel};
+use commsim::cluster::{Placement, Topology};
+use commsim::model::ModelArch;
+use commsim::perfmodel::SloSimulator;
+use commsim::report::{fmt_bytes, render_table};
+
+fn feasible_layouts(arch: &ModelArch, gpus: usize) -> Vec<ParallelLayout> {
+    let mut out = Vec::new();
+    for tp in [1usize, 2, 4, 8, 16] {
+        if tp > gpus || !arch.supports_tp(tp) {
+            continue;
+        }
+        for pp in [1usize, 2, 4, 8] {
+            if tp * pp == gpus && arch.supports_pp(pp) {
+                out.push(ParallelLayout::new(tp, pp));
+            }
+        }
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arch = ModelArch::by_name(args.first().map(|s| s.as_str()).unwrap_or("13b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let gpus: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let sp: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(128);
+    let sd: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(128);
+    let shape = InferenceShape::new(sp, sd, 2);
+    let topology = Topology::cardinal(gpus.div_ceil(4).max(1));
+
+    println!(
+        "advisor: {} on {} GPUs ({} nodes x 4), Sp={sp} Sd={sd}\n",
+        arch.name, gpus, topology.nodes
+    );
+
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for layout in feasible_layouts(&arch, gpus) {
+        let placement = Placement::new(topology, layout)?;
+        let sim = SloSimulator::new(arch.clone(), placement);
+        let r = sim.simulate(shape);
+        let vol = VolumeModel::new(arch.clone()).volume(layout, shape).total();
+        results.push((layout, r, vol));
+        rows.push(vec![
+            layout.label(),
+            format!("{:.1}", r.ttft_s * 1e3),
+            format!("{:.2}", r.tpot_s * 1e3),
+            format!("{:.2}", r.e2e_s),
+            fmt_bytes(vol),
+            format!("{:.0}%", r.comm_fraction(shape) * 100.0),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            "Feasible layouts",
+            &["Layout", "TTFT (ms)", "TPOT (ms)", "E2E (s)", "Comm volume", "Comm share"],
+            &rows,
+        )
+    );
+
+    let best_by = |f: &dyn Fn(&(ParallelLayout, commsim::perfmodel::SloReport, f64)) -> f64| {
+        results
+            .iter()
+            .min_by(|a, b| f(a).partial_cmp(&f(b)).unwrap())
+            .unwrap()
+    };
+    let ttft = best_by(&|x| x.1.ttft_s);
+    let tpot = best_by(&|x| x.1.tpot_s);
+    let e2e = best_by(&|x| x.1.e2e_s);
+    let vol = best_by(&|x| x.2);
+    println!("\nrecommendations (paper §V.C key takeaways):");
+    println!("  interactive / TTFT-critical : {}", ttft.0.label());
+    println!("  sustained decode (TPOT)     : {}", tpot.0.label());
+    println!("  overall latency (E2E)       : {}", e2e.0.label());
+    println!("  bandwidth-constrained fabric: {} ({} total)", vol.0.label(), fmt_bytes(vol.2));
+    Ok(())
+}

@@ -1,0 +1,236 @@
+"""AOT compilation: lower L2 segments to HLO *text* + weight shard blobs.
+
+Run once at build time (``make artifacts``); the Rust engine then serves
+without Python. For every tensor-parallel degree ``t`` we emit one HLO file
+per (segment, phase) — the executable is rank-agnostic, each rank feeds its
+own weight shard at run time:
+
+    artifacts/
+      meta.json                      model dims, Sp, artifact inventory
+      {embed,attn,mlp,logits}_{prefill,decode}_t{t}.hlo.txt
+      full_{prefill,decode}_t1.hlo.txt      fused whole-model graphs (oracle
+                                            + single-worker fast path)
+      weights_t{t}_rank{r}.bin       f32 LE tensors, canonical order
+      weights_t{t}_rank{r}.json      manifest: name/shape/offset per tensor
+
+Interchange is HLO **text**, not ``HloModuleProto.serialize()``: jax >= 0.5
+emits 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md). All graphs
+are lowered with ``return_tuple=True`` and unwrapped on the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def segment_specs(cfg: M.ModelConfig, t: int, s_len: int) -> dict:
+    """Example-arg specs for each segment at (t, S)."""
+    h, d = cfg.hidden, cfg.head_dim
+    a_local = cfg.heads // t
+    f_local = cfg.intermediate // t
+    v_local = cfg.vocab // t
+    qd_local = a_local * d
+    T = cfg.max_seq
+    i32 = jnp.int32
+    return {
+        "embed": (
+            functools.partial(M.embed_partial, cfg, t),
+            [_spec((s_len,), i32), _spec((v_local, h)), _spec((1,), i32)],
+        ),
+        "attn": (
+            functools.partial(M.attn_partial, cfg, t),
+            [
+                _spec((s_len, h)),
+                _spec((T, a_local, d)),
+                _spec((T, a_local, d)),
+                _spec((1,), i32),
+                _spec((h,)),
+                _spec((h, qd_local)),
+                _spec((h, qd_local)),
+                _spec((h, qd_local)),
+                _spec((qd_local, h)),
+            ],
+        ),
+        "mlp": (
+            functools.partial(M.mlp_partial, cfg, t),
+            [
+                _spec((s_len, h)),
+                _spec((h,)),
+                _spec((h, f_local)),
+                _spec((h, f_local)),
+                _spec((f_local, h)),
+            ],
+        ),
+        "logits": (
+            functools.partial(M.logits_partial, cfg, t),
+            [_spec((s_len, h)), _spec((h,)), _spec((h, v_local))],
+        ),
+    }
+
+
+# Canonical per-shard tensor order shared with rust/src/runtime/weights.rs.
+def shard_tensor_list(cfg: M.ModelConfig, shard: dict) -> list[tuple[str, np.ndarray]]:
+    out = [
+        ("embed", shard["embed"]),
+        ("final_norm", shard["final_norm"]),
+        ("lm_head", shard["lm_head"]),
+    ]
+    for i, lw in enumerate(shard["layers"]):
+        for name in (
+            "attn_norm", "wq", "wk", "wv", "wo",
+            "mlp_norm", "w_gate", "w_up", "w_down",
+        ):
+            out.append((f"layer{i}.{name}", lw[name]))
+    return [(n, np.asarray(a, np.float32)) for n, a in out]
+
+
+def write_shard(out_dir: str, t: int, rank: int, tensors) -> None:
+    manifest, offset = [], 0
+    blob_path = os.path.join(out_dir, f"weights_t{t}_rank{rank}.bin")
+    with open(blob_path, "wb") as f:
+        for name, arr in tensors:
+            data = arr.tobytes()  # f32 little-endian, C order
+            manifest.append({"name": name, "shape": list(arr.shape), "offset": offset})
+            f.write(data)
+            offset += len(data)
+    with open(os.path.join(out_dir, f"weights_t{t}_rank{rank}.json"), "w") as f:
+        json.dump({"tensors": manifest, "total_bytes": offset}, f, indent=1)
+    # Line-based manifest for the Rust loader (std-only, no JSON parser):
+    #   total_bytes <n>
+    #   <name> <offset> <dim0,dim1,...>
+    with open(os.path.join(out_dir, f"weights_t{t}_rank{rank}.manifest"), "w") as f:
+        f.write(f"total_bytes {offset}\n")
+        for e in manifest:
+            dims = ",".join(str(d) for d in e["shape"])
+            f.write(f"{e['name']} {e['offset']} {dims}\n")
+
+
+def full_step_flat(cfg: M.ModelConfig, tokens, pos, k_caches, v_caches, *flat):
+    """full_step with weights flattened into positional params (AOT-friendly)."""
+    weights = {"embed": flat[0], "final_norm": flat[1], "lm_head": flat[2], "layers": []}
+    names = ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down")
+    for i in range(cfg.layers):
+        base = 3 + i * len(names)
+        weights["layers"].append(dict(zip(names, flat[base : base + len(names)])))
+    return M.full_step(cfg, tokens, pos, k_caches, v_caches, weights)
+
+
+def full_specs(cfg: M.ModelConfig, s_len: int) -> list:
+    h, f, v, qd, d = cfg.hidden, cfg.intermediate, cfg.vocab, cfg.q_dim, cfg.head_dim
+    T, L, a = cfg.max_seq, cfg.layers, cfg.heads
+    specs = [
+        _spec((s_len,), jnp.int32),
+        _spec((1,), jnp.int32),
+        _spec((L, T, a, d)),
+        _spec((L, T, a, d)),
+        _spec((v, h)),
+        _spec((h,)),
+        _spec((h, v)),
+    ]
+    for _ in range(L):
+        specs += [
+            _spec((h,)), _spec((h, qd)), _spec((h, qd)), _spec((h, qd)),
+            _spec((qd, h)), _spec((h,)), _spec((h, f)), _spec((h, f)),
+            _spec((f, h)),
+        ]
+    return specs
+
+
+def build(out_dir: str, tp_degrees: list[int], sp: int, seed: int) -> list[str]:
+    cfg = M.TINY
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+
+    def emit(name: str, fn, specs) -> None:
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(f"{name}.hlo.txt")
+        print(f"  {name}.hlo.txt ({len(text)} chars)")
+
+    for t in tp_degrees:
+        cfg.validate_tp(t)
+        for phase, s_len in (("prefill", sp), ("decode", 1)):
+            for seg, (fn, specs) in segment_specs(cfg, t, s_len).items():
+                emit(f"{seg}_{phase}_t{t}", fn, specs)
+
+    # Fused whole-model graphs (t=1): numeric oracle + fast path.
+    for phase, s_len in (("prefill", sp), ("decode", 1)):
+        emit(
+            f"full_{phase}_t1",
+            functools.partial(full_step_flat, cfg),
+            full_specs(cfg, s_len),
+        )
+
+    weights = M.init_weights(cfg, seed)
+    for t in tp_degrees:
+        for rank in range(t):
+            shard = M.shard_weights(cfg, weights, t, rank)
+            write_shard(out_dir, t, rank, shard_tensor_list(cfg, shard))
+            written.append(f"weights_t{t}_rank{rank}.bin")
+
+    meta = {
+        "model": "tiny-llama",
+        "vocab": cfg.vocab,
+        "hidden": cfg.hidden,
+        "intermediate": cfg.intermediate,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "head_dim": cfg.head_dim,
+        "max_seq": cfg.max_seq,
+        "prefill_len": sp,
+        "tp_degrees": tp_degrees,
+        "seed": seed,
+        "dtype": "f32",
+        "artifacts": written,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    # key=value twin for the Rust loader.
+    with open(os.path.join(out_dir, "meta.txt"), "w") as f:
+        for key in ("model", "vocab", "hidden", "intermediate", "layers", "heads",
+                    "head_dim", "max_seq", "prefill_len", "seed", "dtype"):
+            f.write(f"{key}={meta[key]}\n")
+        f.write("tp_degrees=" + ",".join(str(t) for t in tp_degrees) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tp-degrees", default="1,2,4")
+    ap.add_argument("--sp", type=int, default=32, help="prefill sequence length")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    degrees = [int(x) for x in args.tp_degrees.split(",")]
+    written = build(args.out_dir, degrees, args.sp, args.seed)
+    print(f"wrote {len(written)} artifacts + meta.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Public surface:
+  attention.decode_attention   — flash-decoding step over the KV cache
+  attention.prefill_attention  — causal flash attention over the prompt
+  swiglu.swiglu                — fused SwiGLU MLP activation
+  swiglu.matmul_f32            — tiled accumulation matmul building block
+  rmsnorm.rmsnorm              — fused RMSNorm
+  ref.*                        — pure-jnp oracles for all of the above
+"""
+
+from . import attention, ref, rmsnorm, swiglu  # noqa: F401

@@ -1,0 +1,193 @@
+"""Pallas attention kernels — the decode/prefill hot spots of LLM inference.
+
+The paper (§II.A, §V) identifies the autoregressive *decode* stage as the
+dominant phase of distributed inference: one token per step, attention over
+the whole KV cache, repeated Sd times. ``decode_attention`` implements that
+step as a flash-decoding style Pallas kernel; ``prefill_attention``
+implements the causal prompt pass with q-block × kv-block tiling.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's testbed is
+H100 + CUDA; on TPU the same insight — keep the KV tile resident in fast
+memory and stream blocks through the systolic array — maps to VMEM-sized
+``BlockSpec`` tiles and MXU-friendly [block, d] GEMM shapes instead of
+warp-level WMMA. Kernels are lowered with ``interpret=True`` so the CPU PJRT
+client can execute the emitted HLO (real-TPU lowering produces Mosaic
+custom-calls the CPU plugin cannot run).
+
+Layouts match the serving engine: KV caches are ``[T, a, d]`` (time-major so
+the Rust side can append a token with one contiguous write per step).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30  # finite sentinel: avoids nan from exp(-inf - -inf)
+
+
+def _decode_attention_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, *, block_t: int):
+    """One program per head: flash-decoding over KV blocks.
+
+    q_ref: [1, d]; k_ref/v_ref: [T, 1, d]; o_ref: [1, d]; kvlen_ref: [1].
+    """
+    t_total = k_ref.shape[0]
+    d = q_ref.shape[-1]
+    kv_len = kvlen_ref[0]
+    scale = 1.0 / math.sqrt(d)
+    q = q_ref[0, :].astype(jnp.float32) * scale  # [d]
+
+    n_blocks = t_total // block_t
+
+    def body(i, carry):
+        m, l, acc = carry
+        start = i * block_t
+        k = k_ref[pl.dslice(start, block_t), 0, :].astype(jnp.float32)  # [bt, d]
+        v = v_ref[pl.dslice(start, block_t), 0, :].astype(jnp.float32)
+        s = k @ q  # [bt]
+        idx = start + jax.lax.broadcasted_iota(jnp.int32, (block_t,), 0)
+        valid = idx < kv_len
+        s = jnp.where(valid, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)  # kill exp(0)=1 leaks when block all-masked
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p)
+        acc_new = acc * alpha + p @ v  # [d]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(_NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0, :] = (acc / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # [a, d]
+    k_cache: jax.Array,  # [T, a, d]
+    v_cache: jax.Array,  # [T, a, d]
+    kv_len: jax.Array,  # [1] int32 — number of valid cache rows
+    *,
+    block_t: int = 64,
+) -> jax.Array:
+    """Single-token attention over the padded KV cache. Returns [a, d]."""
+    t_total, a, d = k_cache.shape
+    if q.shape != (a, d):
+        raise ValueError(f"q shape {q.shape} != ({a}, {d})")
+    block_t = min(block_t, t_total)
+    if t_total % block_t != 0:
+        raise ValueError(f"T={t_total} not divisible by block_t={block_t}")
+    kernel = functools.partial(_decode_attention_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=(a,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),  # kv_len
+            pl.BlockSpec((1, d), lambda h: (h, 0)),  # q head slice
+            pl.BlockSpec((t_total, 1, d), lambda h: (0, h, 0)),  # K head slice
+            pl.BlockSpec((t_total, 1, d), lambda h: (0, h, 0)),  # V head slice
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((a, d), q.dtype),
+        interpret=True,
+    )(kv_len, q, k_cache, v_cache)
+
+
+def _prefill_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_t: int
+):
+    """One program per (head, q-block): causal flash attention.
+
+    q_ref: [block_q, 1, d]; k_ref/v_ref: [S, 1, d]; o_ref: [block_q, 1, d].
+    """
+    d = q_ref.shape[-1]
+    qb = pl.program_id(1)
+    scale = 1.0 / math.sqrt(d)
+    q = q_ref[:, 0, :].astype(jnp.float32) * scale  # [bq, d]
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q,), 0)
+
+    # Only kv blocks at or before this q block can contribute (causal).
+    n_kv_blocks = (qb * block_q) // block_t + pl.cdiv(block_q, block_t)
+
+    def body(i, carry):
+        m, l, acc = carry
+        start = i * block_t
+        k = k_ref[pl.dslice(start, block_t), 0, :].astype(jnp.float32)  # [bt, d]
+        v = v_ref[pl.dslice(start, block_t), 0, :].astype(jnp.float32)
+        s = q @ k.T  # [bq, bt]
+        k_pos = start + jax.lax.broadcasted_iota(jnp.int32, (block_t,), 0)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))  # [bq]
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(causal, p, 0.0)
+        alpha = jnp.exp(m - m_new)  # [bq]
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v  # [bq, d]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kv_blocks, body, (m0, l0, acc0))
+    o_ref[:, 0, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def prefill_attention(
+    q: jax.Array,  # [S, a, d]
+    k: jax.Array,  # [S, a, d]
+    v: jax.Array,  # [S, a, d]
+    *,
+    block_q: int = 32,
+    block_t: int = 32,
+) -> jax.Array:
+    """Causal self-attention over the prompt. Returns [S, a, d]."""
+    s_len, a, d = q.shape
+    block_q = min(block_q, s_len)
+    block_t = min(block_t, s_len)
+    if s_len % block_q != 0 or s_len % block_t != 0 or block_q % block_t != 0:
+        raise ValueError(
+            f"S={s_len} must be divisible by block_q={block_q} and block_t={block_t},"
+            " and block_q by block_t (diagonal alignment)"
+        )
+    kernel = functools.partial(
+        _prefill_attention_kernel, block_q=block_q, block_t=block_t
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(a, s_len // block_q),
+        in_specs=[
+            pl.BlockSpec((block_q, 1, d), lambda h, qb: (qb, h, 0)),
+            pl.BlockSpec((s_len, 1, d), lambda h, qb: (0, h, 0)),
+            pl.BlockSpec((s_len, 1, d), lambda h, qb: (0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1, d), lambda h, qb: (qb, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_len, a, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(
+    t_total: int, a: int, d: int, *, block_t: int = 64, dtype_bytes: int = 4
+) -> dict:
+    """Estimated VMEM residency for one decode_attention program (one head).
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to reason about real-TPU block
+    sizing (interpret-mode wallclock is not a TPU proxy). Per program we hold
+    q [d], one K block [block_t, d], one V block [block_t, d], and the
+    accumulator [d] in f32.
+    """
+    q_bytes = d * dtype_bytes
+    kv_block_bytes = 2 * block_t * d * dtype_bytes
+    acc_bytes = d * 4 + 2 * 4  # acc + (m, l) scalars
+    total = q_bytes + kv_block_bytes + acc_bytes
+    return {
+        "per_program_bytes": total,
+        "kv_stream_bytes": 2 * t_total * d * dtype_bytes,  # streamed via blocks
+        "fits_16mb_vmem": total < 16 * 2**20,
+    }

@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact (up to float accumulation order)
+counterpart here. pytest + hypothesis sweep shapes/dtypes and assert
+allclose between the Pallas implementation (interpret=True) and these
+references. These functions are also reused by ``model_ref.py`` to build the
+unsharded whole-model oracle that the Rust integration tests compare
+against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis: x / rms(x) * weight."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array) -> jax.Array:
+    """Fused SwiGLU activation: silu(x @ w_gate) * (x @ w_up).
+
+    x: [S, h]; w_gate, w_up: [h, f] -> out [S, f].
+    """
+    g = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [a, d]   single-token query, a heads, head dim d
+    k_cache: jax.Array,  # [T, a, d] (T = max seq len, zero-padded past kv_len)
+    v_cache: jax.Array,  # [T, a, d]
+    kv_len: jax.Array | int,  # number of valid cache entries (<= T)
+) -> jax.Array:
+    """Single-token attention over a (padded) KV cache with length masking."""
+    T = k_cache.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = (
+        jnp.einsum("ad,tad->at", q.astype(jnp.float32), k_cache.astype(jnp.float32))
+        * scale
+    )  # [a, T]
+    mask = jnp.arange(T) < kv_len  # [T]
+    scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("at,tad->ad", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def prefill_attention_ref(
+    q: jax.Array,  # [S, a, d]
+    k: jax.Array,  # [S, a, d]
+    v: jax.Array,  # [S, a, d]
+) -> jax.Array:
+    """Causal self-attention over the prompt (prefill phase)."""
+    S = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = (
+        jnp.einsum("sad,tad->ast", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )  # [a, S, S]
+    causal = jnp.tril(jnp.ones((S, S), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("ast,tad->sad", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled-matmul oracle: x [M, K] @ w [K, N] -> [M, N]."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

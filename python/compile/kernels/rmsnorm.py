@@ -1,0 +1,58 @@
+"""RMSNorm Pallas kernel — the per-layer normalization on both residual
+branches (every transformer block runs it twice, so it brackets every
+AllReduce the paper counts).
+
+One program per row-block: compute the row's mean-square in f32, scale, and
+apply the learned weight — a single fused pass instead of the four-op jnp
+graph (square, mean, rsqrt, mul). Row-blocked over S so prefill tiles VMEM;
+h stays unblocked (the reduction axis must be resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [bm, h]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (x * inv * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,  # [S, h]
+    weight: jax.Array,  # [h]
+    eps: float = 1e-5,
+    *,
+    block_m: int = 32,
+) -> jax.Array:
+    """Fused RMSNorm over the last axis. Returns [S, h]."""
+    s_len, h = x.shape
+    if weight.shape != (h,):
+        raise ValueError(f"weight shape {weight.shape} != ({h},)")
+    block_m = min(block_m, s_len)
+    while s_len % block_m:
+        block_m -= 1
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(s_len // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_len, h), x.dtype),
+        interpret=True,
+    )(x, weight)
+
+
+def vmem_footprint_bytes(h: int, *, block_m: int = 32, dtype_bytes: int = 4) -> dict:
+    """VMEM residency of one rmsnorm program tile (perf-analysis helper)."""
+    total = block_m * h * dtype_bytes * 2 + h * dtype_bytes
+    return {"per_program_bytes": total, "fits_16mb_vmem": total < 16 * 2**20}

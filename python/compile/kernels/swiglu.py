@@ -1,0 +1,122 @@
+"""Fused SwiGLU Pallas kernel — the MLP half of the transformer layer.
+
+Computes ``silu(x @ w_gate) * (x @ w_up)`` in a single pass: one program per
+(row-block, column-block) tile computes both GEMM tiles and the elementwise
+epilogue without materializing the two [S, f] intermediates in HBM. On real
+TPU hardware this halves the HBM round-trips of the naive three-op graph;
+under ``interpret=True`` we keep the identical structure for correctness.
+
+The K dimension (hidden size h) is kept unblocked: serving-scale h (2k-8k)
+times a [bm, bn] tile comfortably fits VMEM (see ``vmem_footprint_bytes``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # [bm, h]
+    g = x @ wg_ref[...].astype(jnp.float32)  # [bm, bn]
+    u = x @ wu_ref[...].astype(jnp.float32)
+    o_ref[...] = (g * jax.lax.logistic(g) * u).astype(o_ref.dtype)
+
+
+def swiglu(
+    x: jax.Array,  # [S, h]
+    w_gate: jax.Array,  # [h, f]
+    w_up: jax.Array,  # [h, f]
+    *,
+    block_m: int = 32,
+    block_n: int = 128,
+) -> jax.Array:
+    """Fused silu(x@w_gate) * (x@w_up). Returns [S, f]."""
+    s_len, h = x.shape
+    f = w_gate.shape[1]
+    if w_gate.shape != (h, f) or w_up.shape != (h, f):
+        raise ValueError(f"weight shapes {w_gate.shape}/{w_up.shape} != ({h},{f})")
+    block_m = min(block_m, s_len)
+    block_n = min(block_n, f)
+    if s_len % block_m != 0 or f % block_n != 0:
+        raise ValueError(
+            f"S={s_len} %% block_m={block_m} or f={f} %% block_n={block_n} != 0"
+        )
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(s_len // block_m, f // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((h, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s_len, f), x.dtype),
+        interpret=True,
+    )(x, w_gate, w_up)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].astype(jnp.float32) @ w_ref[...].astype(jnp.float32)
+
+
+def matmul_f32(
+    x: jax.Array,  # [M, K]
+    w: jax.Array,  # [K, N]
+    *,
+    block_m: int = 32,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Tiled matmul with K-loop accumulation in the output tile (f32 out).
+
+    Building block for the projection GEMMs; grid order puts K innermost so
+    the output tile stays resident while K blocks stream through — the
+    MXU-friendly schedule on real hardware.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims {k} != {k2}")
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(f"shape ({m},{k},{n}) not divisible by blocks")
+    n_k = k // block_k
+    kernel = functools.partial(_matmul_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kb: (kb, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_footprint_bytes(
+    h: int, f: int, *, block_m: int = 32, block_n: int = 128, dtype_bytes: int = 4
+) -> dict:
+    """VMEM residency of one swiglu program tile (perf-analysis helper)."""
+    x_bytes = block_m * h * dtype_bytes
+    w_bytes = 2 * h * block_n * dtype_bytes
+    o_bytes = block_m * block_n * dtype_bytes
+    total = x_bytes + w_bytes + o_bytes
+    return {
+        "per_program_bytes": total,
+        "fits_16mb_vmem": total < 16 * 2**20,
+        "mxu_tile_aligned": block_n % 128 == 0,
+    }

@@ -1,0 +1,314 @@
+"""Layer-2 JAX model: TP-shardable Llama-style transformer segments.
+
+The serving engine (Rust, L3) composes distributed inference out of
+*segment* executables whose boundaries are exactly the points where vLLM
+places NCCL collectives (DESIGN.md §6):
+
+    embed_partial  -> AllReduce                       (vocab-parallel embed)
+    attn_partial   -> AllReduce  (per layer)          (row-parallel out-proj)
+    mlp_partial    -> AllReduce  (per layer)          (row-parallel down-proj)
+    logits_partial -> Gather                          (column-parallel lm head)
+
+Each segment is a pure function of (activations, kv cache, weights) so
+``aot.py`` can lower it once per tensor-parallel degree ``t`` with weights as
+runtime parameters; every TP rank then runs the *same* executable with its
+own weight shard. Pipeline parallelism needs no extra executables: a stage
+is a Rust-side loop over its local layers.
+
+Sharding follows Megatron-LM (the scheme vLLM implements and the paper
+analyzes in §III.A):
+  - attention: QKV projections column-parallel (each rank owns a/t heads),
+    out-projection row-parallel -> partial [S, h] summed by AllReduce;
+  - MLP: gate/up column-parallel (f/t columns), down row-parallel;
+  - embedding: vocab-parallel rows, partial summed by AllReduce;
+  - LM head: column-parallel, logits slice [v/t] gathered.
+
+All math is f32 (deterministic CPU PJRT); the analytical byte model in Rust
+is parameterized on dtype width separately.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernels
+from .kernels import rmsnorm as rmsnorm_kernel
+from .kernels import swiglu as swiglu_kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (see rust/src/model/arch.rs for the
+    paper-scale registry; this mirrors the fields the analysis needs)."""
+
+    vocab: int = 512
+    hidden: int = 256
+    intermediate: int = 768
+    layers: int = 4
+    heads: int = 8
+    head_dim: int = 32
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    def validate_tp(self, t: int) -> None:
+        if self.heads % t or self.intermediate % t or self.vocab % t:
+            raise ValueError(f"config not divisible by tp={t}")
+
+    @property
+    def q_dim(self) -> int:
+        return self.heads * self.head_dim
+
+
+TINY = ModelConfig()  # the numeric-mode model served end-to-end by Rust
+
+
+def _block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (Pallas block-shape helper)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (interleaved-pair convention)
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE. x: [S, a, d]; positions: [S] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)  # [d/2]
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, d/2]
+    cos = jnp.cos(angles)[:, None, :]  # [S, 1, d/2]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Segments (each lowered to one HLO executable per (t, S) by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def embed_partial(
+    cfg: ModelConfig, t: int, tokens: jax.Array, w_emb_shard: jax.Array, rank_offset: jax.Array
+) -> jax.Array:
+    """Vocab-parallel embedding: rank holds rows [off, off + v/t).
+
+    tokens: [S] int32; w_emb_shard: [v/t, h]; rank_offset: [1] int32.
+    Returns the *partial* embedding [S, h] (zeros for out-of-shard tokens);
+    the Rust engine AllReduces partials into the full embedding — the
+    "(2L+1)" +1 AllReduce of Eq. 1.
+    """
+    v_local = cfg.vocab // t
+    idx = tokens.astype(jnp.int32) - rank_offset[0]
+    valid = (idx >= 0) & (idx < v_local)
+    safe = jnp.clip(idx, 0, v_local - 1)
+    out = w_emb_shard[safe]  # [S, h]
+    return jnp.where(valid[:, None], out, 0.0)
+
+
+def attn_partial(
+    cfg: ModelConfig,
+    t: int,
+    x: jax.Array,  # [S, h] full (post-AllReduce) residual stream
+    k_cache: jax.Array,  # [T, a/t, d]
+    v_cache: jax.Array,  # [T, a/t, d]
+    pos: jax.Array,  # [1] int32 — write offset / number of tokens already cached
+    norm_w: jax.Array,  # [h]
+    wq: jax.Array,  # [h, (a/t)*d]
+    wk: jax.Array,  # [h, (a/t)*d]
+    wv: jax.Array,  # [h, (a/t)*d]
+    wo: jax.Array,  # [(a/t)*d, h]
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Column-parallel QKV + attention over local heads + row-parallel out-proj.
+
+    Returns (partial_out [S, h], k_cache', v_cache'). The partial output is
+    this rank's contribution to the attention block output; the engine
+    AllReduces it (first of the two per-layer AllReduces of Eq. 1).
+    """
+    s_len = x.shape[0]
+    a_local = cfg.heads // t
+    d = cfg.head_dim
+    xn = rmsnorm_kernel.rmsnorm(x, norm_w, cfg.norm_eps, block_m=_block(s_len, 32))
+    q = (xn @ wq).reshape(s_len, a_local, d)
+    k = (xn @ wk).reshape(s_len, a_local, d)
+    v = (xn @ wv).reshape(s_len, a_local, d)
+    positions = pos[0] + jnp.arange(s_len, dtype=jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (pos[0], 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (pos[0], 0, 0))
+
+    if s_len == 1:
+        # Decode step: flash-decoding Pallas kernel over the padded cache.
+        out = attn_kernels.decode_attention(
+            q[0], k_cache, v_cache, pos + 1, block_t=_block(cfg.max_seq, 64)
+        )[None, :, :]  # [1, a/t, d]
+    else:
+        # Prefill: causal flash attention over the prompt (pos[0] == 0).
+        bq = _block(s_len, 32)
+        out = attn_kernels.prefill_attention(
+            q, k, v, block_q=bq, block_t=_block(bq, 32)
+        )
+    partial = out.reshape(s_len, a_local * d) @ wo  # [S, h] partial sum
+    return partial, k_cache, v_cache
+
+
+def mlp_partial(
+    cfg: ModelConfig,
+    t: int,
+    x: jax.Array,  # [S, h] full residual stream
+    norm_w: jax.Array,  # [h]
+    w_gate: jax.Array,  # [h, f/t]
+    w_up: jax.Array,  # [h, f/t]
+    w_down: jax.Array,  # [f/t, h]
+) -> jax.Array:
+    """Column-parallel gate/up + fused SwiGLU kernel + row-parallel down.
+
+    Returns partial [S, h]; AllReduced by the engine (second per-layer
+    AllReduce of Eq. 1).
+    """
+    xn = rmsnorm_kernel.rmsnorm(x, norm_w, cfg.norm_eps, block_m=_block(x.shape[0], 32))
+    f_local = w_gate.shape[1]
+    act = swiglu_kernels.swiglu(
+        xn, w_gate, w_up,
+        block_m=_block(x.shape[0], 32),
+        block_n=_block(f_local, 128),
+    )
+    return act @ w_down
+
+
+def logits_partial(
+    cfg: ModelConfig,
+    t: int,
+    x: jax.Array,  # [S, h]
+    norm_w: jax.Array,  # [h]
+    w_lm: jax.Array,  # [h, v/t]
+) -> jax.Array:
+    """Final norm + column-parallel LM head on the *last* token.
+
+    Returns [1, v/t]; ranks' slices are Gathered by the engine (the Gather
+    term of Eq. 1) and argmax-sampled by the coordinator.
+    """
+    last = x[-1:, :]
+    xn = rmsnorm_kernel.rmsnorm(last, norm_w, cfg.norm_eps, block_m=1)
+    return xn @ w_lm
+
+
+# ---------------------------------------------------------------------------
+# Whole-model single-device graphs (oracle + fused fast path)
+# ---------------------------------------------------------------------------
+
+
+def full_step(
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [S] int32
+    pos: jax.Array,  # [1] int32
+    k_caches: jax.Array,  # [L, T, a, d]
+    v_caches: jax.Array,  # [L, T, a, d]
+    weights: dict,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unsharded forward over all layers: the numeric oracle for segment
+    composition, and the fused single-executable fast path (t=1, p=1).
+
+    Returns (logits [1, v], k_caches', v_caches').
+    """
+    x = embed_partial(cfg, 1, tokens, weights["embed"], jnp.zeros((1,), jnp.int32))
+    new_k, new_v = [], []
+    for layer in range(cfg.layers):
+        lw = weights["layers"][layer]
+        pa, kc, vc = attn_partial(
+            cfg, 1, x, k_caches[layer], v_caches[layer], pos,
+            lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+        x = x + pa
+        pm = mlp_partial(cfg, 1, x, lw["mlp_norm"], lw["w_gate"], lw["w_up"], lw["w_down"])
+        x = x + pm
+    logits = logits_partial(cfg, 1, x, weights["final_norm"], weights["lm_head"])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic weight generation + TP sharding
+# ---------------------------------------------------------------------------
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Deterministic tiny-model weights (scaled for stable forward pass)."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 6 + 9 * cfg.layers))
+
+    def mat(shape, scale):
+        return (jax.random.normal(next(keys), shape, jnp.float32) * scale)
+
+    h, f, v, qd = cfg.hidden, cfg.intermediate, cfg.vocab, cfg.q_dim
+    w = {
+        "embed": mat((v, h), 0.02),
+        "final_norm": jnp.ones((h,), jnp.float32),
+        "lm_head": mat((h, v), 1.0 / math.sqrt(h)),
+        "layers": [],
+    }
+    for _ in range(cfg.layers):
+        w["layers"].append(
+            {
+                "attn_norm": jnp.ones((h,), jnp.float32),
+                "wq": mat((h, qd), 1.0 / math.sqrt(h)),
+                "wk": mat((h, qd), 1.0 / math.sqrt(h)),
+                "wv": mat((h, qd), 1.0 / math.sqrt(h)),
+                "wo": mat((qd, h), 1.0 / math.sqrt(qd)),
+                "mlp_norm": jnp.ones((h,), jnp.float32),
+                "w_gate": mat((h, f), 1.0 / math.sqrt(h)),
+                "w_up": mat((h, f), 1.0 / math.sqrt(h)),
+                "w_down": mat((f, h), 1.0 / math.sqrt(f)),
+            }
+        )
+    return w
+
+
+def shard_weights(cfg: ModelConfig, weights: dict, t: int, rank: int) -> dict:
+    """Extract rank's Megatron-style shard of every weight tensor."""
+    cfg.validate_tp(t)
+    a_local = cfg.heads // t
+    d = cfg.head_dim
+    f_local = cfg.intermediate // t
+    v_local = cfg.vocab // t
+
+    def col(w, n_local):  # column-parallel: split dim 1
+        return w[:, rank * n_local : (rank + 1) * n_local]
+
+    def row(w, n_local):  # row-parallel: split dim 0
+        return w[rank * n_local : (rank + 1) * n_local, :]
+
+    out = {
+        "embed": row(weights["embed"], v_local),
+        "final_norm": weights["final_norm"],
+        "lm_head": col(weights["lm_head"], v_local),
+        "layers": [],
+    }
+    qd_local = a_local * d
+    for lw in weights["layers"]:
+        out["layers"].append(
+            {
+                "attn_norm": lw["attn_norm"],
+                "wq": col(lw["wq"], qd_local),
+                "wk": col(lw["wk"], qd_local),
+                "wv": col(lw["wv"], qd_local),
+                "wo": row(lw["wo"], qd_local),
+                "mlp_norm": lw["mlp_norm"],
+                "w_gate": col(lw["w_gate"], f_local),
+                "w_up": col(lw["w_up"], f_local),
+                "w_down": row(lw["w_down"], f_local),
+            }
+        )
+    return out

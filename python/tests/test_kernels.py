@@ -1,0 +1,288 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; every test asserts allclose against ref.py.
+This is the core correctness signal for the compute hot path that the AOT
+artifacts embed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref, swiglu
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == BF16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t_total=st.sampled_from([32, 64, 128, 256]),
+    heads=st.sampled_from([1, 2, 4, 8]),
+    d=st.sampled_from([16, 32, 64]),
+    block_t=st.sampled_from([16, 32, 64]),
+    kv_frac=st.floats(min_value=0.01, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_decode_attention_matches_ref(t_total, heads, d, block_t, kv_frac, seed):
+    if t_total % block_t:
+        block_t = t_total
+    rng = np.random.default_rng(seed)
+    kv_len = max(1, int(kv_frac * t_total))
+    q = _rand(rng, (heads, d), F32)
+    k = _rand(rng, (t_total, heads, d), F32)
+    v = _rand(rng, (t_total, heads, d), F32)
+    out = attention.decode_attention(
+        q, k, v, jnp.array([kv_len], jnp.int32), block_t=block_t
+    )
+    exp = ref.decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(out, exp, **_tol(F32))
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_decode_attention_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (4, 32), dtype)
+    k = _rand(rng, (64, 4, 32), dtype)
+    v = _rand(rng, (64, 4, 32), dtype)
+    out = attention.decode_attention(q, k, v, jnp.array([40], jnp.int32))
+    assert out.dtype == dtype
+    exp = ref.decode_attention_ref(q, k, v, 40)
+    np.testing.assert_allclose(
+        out.astype(F32), exp.astype(F32), **_tol(dtype)
+    )
+
+
+def test_decode_attention_kv_len_one():
+    """Degenerate cache: attends solely to the first entry -> returns v[0]."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (2, 16), F32)
+    k = _rand(rng, (32, 2, 16), F32)
+    v = _rand(rng, (32, 2, 16), F32)
+    out = attention.decode_attention(q, k, v, jnp.array([1], jnp.int32), block_t=16)
+    np.testing.assert_allclose(out, v[0], rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_ignores_padding():
+    """Garbage beyond kv_len must not affect the output."""
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (2, 16), F32)
+    k = _rand(rng, (64, 2, 16), F32)
+    v = _rand(rng, (64, 2, 16), F32)
+    out1 = attention.decode_attention(q, k, v, jnp.array([10], jnp.int32), block_t=16)
+    k2 = k.at[10:].set(1e6)
+    v2 = v.at[10:].set(-1e6)
+    out2 = attention.decode_attention(q, k2, v2, jnp.array([10], jnp.int32), block_t=16)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_shape_validation():
+    q = jnp.zeros((3, 16), F32)  # heads mismatch vs cache
+    k = jnp.zeros((32, 2, 16), F32)
+    with pytest.raises(ValueError):
+        attention.decode_attention(q, k, k, jnp.array([1], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# prefill_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s_len=st.sampled_from([16, 32, 64, 128]),
+    heads=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_prefill_attention_matches_ref(s_len, heads, d, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (s_len, heads, d), F32)
+    k = _rand(rng, (s_len, heads, d), F32)
+    v = _rand(rng, (s_len, heads, d), F32)
+    bq = min(32, s_len)
+    out = attention.prefill_attention(q, k, v, block_q=bq, block_t=min(16, bq))
+    exp = ref.prefill_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, **_tol(F32))
+
+
+def test_prefill_attention_is_causal():
+    """Changing future K/V must not change earlier rows."""
+    rng = np.random.default_rng(5)
+    s = 32
+    q = _rand(rng, (s, 2, 16), F32)
+    k = _rand(rng, (s, 2, 16), F32)
+    v = _rand(rng, (s, 2, 16), F32)
+    out1 = attention.prefill_attention(q, k, v, block_q=16, block_t=16)
+    k2 = k.at[s // 2 :].set(1e3)
+    v2 = v.at[s // 2 :].set(-1e3)
+    out2 = attention.prefill_attention(q, k2, v2, block_q=16, block_t=16)
+    np.testing.assert_allclose(out1[: s // 2], out2[: s // 2], rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_attention_first_token_is_v0():
+    rng = np.random.default_rng(6)
+    q = _rand(rng, (16, 2, 16), F32)
+    k = _rand(rng, (16, 2, 16), F32)
+    v = _rand(rng, (16, 2, 16), F32)
+    out = attention.prefill_attention(q, k, v, block_q=16, block_t=16)
+    np.testing.assert_allclose(out[0], v[0], rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_block_validation():
+    q = jnp.zeros((48, 2, 16), F32)
+    with pytest.raises(ValueError):
+        attention.prefill_attention(q, q, q, block_q=32, block_t=32)  # 48 % 32
+
+
+# ---------------------------------------------------------------------------
+# swiglu / matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s_len=st.sampled_from([8, 16, 32, 64]),
+    h=st.sampled_from([32, 64, 128]),
+    f=st.sampled_from([128, 256, 384]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_swiglu_matches_ref(s_len, h, f, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (s_len, h), F32)
+    wg = _rand(rng, (h, f), F32) * 0.1
+    wu = _rand(rng, (h, f), F32) * 0.1
+    out = swiglu.swiglu(x, wg, wu, block_m=min(16, s_len), block_n=min(128, f))
+    exp = ref.swiglu_ref(x, wg, wu)
+    np.testing.assert_allclose(out, exp, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_swiglu_dtypes(dtype):
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (16, 64), dtype)
+    wg = _rand(rng, (64, 128), dtype)
+    wu = _rand(rng, (64, 128), dtype)
+    out = swiglu.swiglu(x, wg, wu)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        out.astype(F32), ref.swiglu_ref(x, wg, wu).astype(F32), **_tol(dtype)
+    )
+
+
+def test_swiglu_zero_gate_is_zero():
+    x = jnp.ones((8, 32), F32)
+    wg = jnp.zeros((32, 128), F32)
+    wu = jnp.ones((32, 128), F32)
+    out = swiglu.swiglu(x, wg, wu)
+    np.testing.assert_allclose(out, jnp.zeros((8, 128)), atol=1e-7)
+
+
+def test_swiglu_shape_validation():
+    x = jnp.zeros((8, 32), F32)
+    with pytest.raises(ValueError):
+        swiglu.swiglu(x, jnp.zeros((32, 100), F32), jnp.zeros((32, 100), F32),
+                      block_n=64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([16, 32, 64]),
+    k=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([128, 256]),
+    block_k=st.sampled_from([32, 64, 128]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_matmul_matches_ref(m, k, n, block_k, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), F32)
+    w = _rand(rng, (k, n), F32)
+    out = swiglu.matmul_f32(x, w, block_m=min(16, m), block_n=128, block_k=block_k)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, w), rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_inner_dim_validation():
+    with pytest.raises(ValueError):
+        swiglu.matmul_f32(jnp.zeros((8, 32), F32), jnp.zeros((64, 128), F32))
+
+
+# ---------------------------------------------------------------------------
+# perf-analysis helpers
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprints_fit():
+    att = attention.vmem_footprint_bytes(4096, 32, 128, block_t=128, dtype_bytes=2)
+    assert att["fits_16mb_vmem"]
+    mlp = swiglu.vmem_footprint_bytes(4096, 14336, block_m=32, block_n=128,
+                                      dtype_bytes=2)
+    assert mlp["fits_16mb_vmem"] and mlp["mxu_tile_aligned"]
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+from compile.kernels import rmsnorm  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s_len=st.integers(min_value=1, max_value=64),
+    h=st.sampled_from([32, 64, 256, 512]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_rmsnorm_matches_ref(s_len, h, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (s_len, h), F32)
+    w = _rand(rng, (h,), F32)
+    out = rmsnorm.rmsnorm(x, w)
+    np.testing.assert_allclose(out, ref.rmsnorm_ref(x, w), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_rmsnorm_dtypes(dtype):
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (8, 64), dtype)
+    w = _rand(rng, (64,), dtype)
+    out = rmsnorm.rmsnorm(x, w)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        out.astype(F32), ref.rmsnorm_ref(x, w).astype(F32), **_tol(dtype)
+    )
+
+
+def test_rmsnorm_unit_weight_normalizes():
+    """With unit weight, output rows have RMS ~= 1."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (16, 128), F32) * 5.0
+    out = rmsnorm.rmsnorm(x, jnp.ones((128,), F32))
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, np.ones(16), rtol=1e-4)
+
+
+def test_rmsnorm_rejects_bad_weight_shape():
+    with pytest.raises(ValueError):
+        rmsnorm.rmsnorm(jnp.zeros((4, 32), F32), jnp.zeros((16,), F32))
+
+
+def test_rmsnorm_vmem_estimate():
+    est = rmsnorm.vmem_footprint_bytes(8192, block_m=32, dtype_bytes=2)
+    assert est["fits_16mb_vmem"]

@@ -1,0 +1,51 @@
+"""Cross-language numeric pin: the greedy token trajectory of the tiny
+model for a fixed prompt, asserted identically here and in
+rust/tests/integration_numeric.rs. If either side drifts (weights, RoPE,
+kernel numerics, sharding), this pins down which layer moved.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+CFG = M.TINY
+# Same constants as rust/tests/integration_numeric.rs.
+PROMPT = [(7 * i) % CFG.vocab for i in range(32)]
+EXPECTED = [95, 497, 497, 497, 109, 379, 109, 291, 497, 497, 109, 269]
+
+
+def _greedy(n):
+    w = M.init_weights(CFG, 0)
+    kc = jnp.zeros((CFG.layers, CFG.max_seq, CFG.heads, CFG.head_dim), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    logits, kc, vc = M.full_step(
+        CFG, jnp.array(PROMPT, jnp.int32), jnp.zeros((1,), jnp.int32), kc, vc, w
+    )
+    out = [int(jnp.argmax(logits))]
+    for i in range(1, n):
+        pos = jnp.array([len(PROMPT) + i - 1], jnp.int32)
+        logits, kc, vc = M.full_step(
+            CFG, jnp.array([out[-1]], jnp.int32), pos, kc, vc, w
+        )
+        out.append(int(jnp.argmax(logits)))
+    return out
+
+
+def test_greedy_trajectory_matches_pin():
+    assert _greedy(len(EXPECTED)) == EXPECTED
+
+
+def test_prefix_stability():
+    """Shorter generations are prefixes of longer ones (greedy + KV cache)."""
+    assert _greedy(4) == EXPECTED[:4]
+
+
+def test_logits_are_finite():
+    w = M.init_weights(CFG, 0)
+    kc = jnp.zeros((CFG.layers, CFG.max_seq, CFG.heads, CFG.head_dim), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    logits, _, _ = M.full_step(
+        CFG, jnp.array(PROMPT, jnp.int32), jnp.zeros((1,), jnp.int32), kc, vc, w
+    )
+    assert np.isfinite(np.asarray(logits)).all()

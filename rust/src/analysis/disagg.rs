@@ -1,0 +1,177 @@
+//! Prefill/decode disaggregation (DistServe [25], discussed in the paper's
+//! Related Work): prefill and decode run on *separate* worker pools, so
+//! after prefill the whole KV cache must cross the network once per
+//! request. This module quantifies that trade against colocated serving
+//! with the same accounting as Eq. 1–7 — the natural next question after
+//! the paper's Fig. 6/7 analysis ("what if the stages don't share GPUs?").
+
+use crate::model::ModelArch;
+
+use super::volume::{InferenceShape, ParallelLayout, VolumeModel};
+
+/// Disaggregated deployment: a prefill pool and a decode pool, each with
+/// its own parallel layout, connected by the inter-node fabric.
+#[derive(Debug, Clone)]
+pub struct DisaggregationModel {
+    pub arch: ModelArch,
+    pub prefill_layout: ParallelLayout,
+    pub decode_layout: ParallelLayout,
+}
+
+/// Volume decomposition of one disaggregated request (bytes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DisaggVolume {
+    /// Collective traffic inside the prefill pool (Eq. 1–7 over Sp only).
+    pub prefill_internal: f64,
+    /// Collective traffic inside the decode pool (Eq. 1–7 over Sd steps).
+    pub decode_internal: f64,
+    /// One-shot KV-cache migration: `Sp · 2 · L · kv_heads · d_head · b`.
+    pub kv_transfer: f64,
+}
+
+impl DisaggVolume {
+    pub fn total(&self) -> f64 {
+        self.prefill_internal + self.decode_internal + self.kv_transfer
+    }
+}
+
+impl DisaggregationModel {
+    pub fn new(
+        arch: ModelArch,
+        prefill_layout: ParallelLayout,
+        decode_layout: ParallelLayout,
+    ) -> Self {
+        assert!(arch.supports_tp(prefill_layout.tp) && arch.supports_pp(prefill_layout.pp));
+        assert!(arch.supports_tp(decode_layout.tp) && arch.supports_pp(decode_layout.pp));
+        Self { arch, prefill_layout, decode_layout }
+    }
+
+    /// Per-request volume under disaggregation.
+    ///
+    /// Prefill-pool internal traffic is Eq. 1–7 with `S_d = 1` (the pool
+    /// produces exactly the first token); decode-pool traffic is Eq. 1–7
+    /// with a 1-token prompt (it never sees the prefill window); the KV
+    /// migration ships every layer's K and V for the `S_p` cached tokens.
+    pub fn volume(&self, shape: InferenceShape) -> DisaggVolume {
+        let vm = VolumeModel::new(self.arch.clone());
+        let prefill_shape = InferenceShape::new(shape.prefill_len, 1, shape.dtype_bytes);
+        let decode_shape = InferenceShape::new(1, shape.decode_len, shape.dtype_bytes);
+        let kv_transfer = (shape.prefill_len
+            * self.arch.kv_bytes_per_token(shape.dtype_bytes)) as f64;
+        DisaggVolume {
+            prefill_internal: vm.volume(self.prefill_layout, prefill_shape).total(),
+            decode_internal: vm.volume(self.decode_layout, decode_shape).total(),
+            kv_transfer,
+        }
+    }
+
+    /// Colocated baseline (same total GPUs in one pool, the paper's
+    /// setting) for comparison.
+    pub fn colocated_volume(&self, layout: ParallelLayout, shape: InferenceShape) -> f64 {
+        VolumeModel::new(self.arch.clone()).volume(layout, shape).total()
+    }
+
+    /// The decode-length break-even: disaggregation amortizes its KV
+    /// migration over generated tokens; returns the smallest `S_d` at which
+    /// the disaggregated total undercuts the colocated baseline, if any
+    /// (searching `1..=max_sd`).
+    pub fn break_even_decode_len(
+        &self,
+        colocated: ParallelLayout,
+        sp: usize,
+        dtype_bytes: usize,
+        max_sd: usize,
+    ) -> Option<usize> {
+        (1..=max_sd).find(|&sd| {
+            let shape = InferenceShape::new(sp, sd, dtype_bytes);
+            self.volume(shape).total() < self.colocated_volume(colocated, shape)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelArch, DTYPE_BYTES_BF16};
+
+    fn model() -> DisaggregationModel {
+        DisaggregationModel::new(
+            ModelArch::llama31_8b(),
+            ParallelLayout::new(4, 1), // prefill pool: TP4 (TTFT-optimal)
+            ParallelLayout::new(1, 4), // decode pool: PP4 (volume-optimal)
+        )
+    }
+
+    #[test]
+    fn kv_transfer_hand_computed() {
+        // 8B GQA: 2 * 32 layers * 8 kv heads * 128 dim * 2 B = 131072 B/token.
+        let v = model().volume(InferenceShape::new(128, 128, DTYPE_BYTES_BF16));
+        assert_eq!(v.kv_transfer, (128 * 131_072) as f64);
+    }
+
+    #[test]
+    fn pools_see_only_their_stage() {
+        let m = model();
+        let shape = InferenceShape::new(128, 128, DTYPE_BYTES_BF16);
+        let v = m.volume(shape);
+        // Prefill pool: Eq. 1 over (Sp, Sd=1) — the (2L+1)·Sp·h·b·f term.
+        let expect_prefill = VolumeModel::new(m.arch.clone())
+            .tensor_parallel(4, InferenceShape::new(128, 1, DTYPE_BYTES_BF16))
+            .total();
+        assert!((v.prefill_internal - expect_prefill).abs() < 1e-9);
+        // Decode pool: pure-PP p2p over the decode steps only.
+        let expect_decode = VolumeModel::new(m.arch.clone())
+            .pipeline_parallel(4, InferenceShape::new(1, 128, DTYPE_BYTES_BF16))
+            .total();
+        assert!((v.decode_internal - expect_decode).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disagg_beats_colocated_tp_for_long_generation() {
+        // Colocated TP=4 pays (2L+1)·h AllReduces for *every* decode token;
+        // the disaggregated decode pool (PP4) pays only p2p. Past some Sd
+        // the one-shot KV migration is amortized.
+        let m = model();
+        let be = m.break_even_decode_len(ParallelLayout::new(4, 1), 128, 2, 4096);
+        assert!(be.is_some(), "break-even must exist");
+        let be = be.unwrap();
+        assert!(be < 64, "KV migration amortizes quickly, got {be}");
+        // And before break-even, colocation wins.
+        if be > 1 {
+            let shape = InferenceShape::new(128, be - 1, DTYPE_BYTES_BF16);
+            assert!(
+                m.volume(shape).total()
+                    >= m.colocated_volume(ParallelLayout::new(4, 1), shape)
+            );
+        }
+    }
+
+    #[test]
+    fn disagg_never_beats_colocated_pp_on_volume() {
+        // Colocated PP is already volume-minimal; disaggregation adds the
+        // KV migration on top of the same decode-pool traffic.
+        let arch = ModelArch::llama32_3b();
+        let m = DisaggregationModel::new(
+            arch.clone(),
+            ParallelLayout::new(4, 1),
+            ParallelLayout::new(1, 4),
+        );
+        for sd in [32usize, 128, 512] {
+            let shape = InferenceShape::new(128, sd, DTYPE_BYTES_BF16);
+            assert!(
+                m.volume(shape).total() > m.colocated_volume(ParallelLayout::new(1, 4), shape),
+                "sd={sd}"
+            );
+        }
+    }
+
+    #[test]
+    fn kv_transfer_scales_with_prompt_only() {
+        let m = model();
+        let v1 = m.volume(InferenceShape::new(128, 128, 2));
+        let v2 = m.volume(InferenceShape::new(256, 128, 2));
+        let v3 = m.volume(InferenceShape::new(128, 512, 2));
+        assert!((v2.kv_transfer / v1.kv_transfer - 2.0).abs() < 1e-12);
+        assert_eq!(v1.kv_transfer, v3.kv_transfer);
+    }
+}

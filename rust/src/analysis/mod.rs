@@ -1,0 +1,16 @@
+//! The paper's analytical models (§III).
+//!
+//! [`volume`] implements Eq. 1–7: predicted communication *bytes* for TP,
+//! PP and hybrid parallelism. [`ops`] predicts the *operation counts and
+//! message shapes* that the PyTorch profiler observed (Tables III–VI) —
+//! the per-stage breakdown the volume formulas integrate over.
+
+pub mod disagg;
+pub mod extensions;
+pub mod ops;
+pub mod volume;
+
+pub use disagg::{DisaggVolume, DisaggregationModel};
+pub use extensions::{ExpertParallelModel, SequenceParallelModel};
+pub use ops::{OpCountModel, PredictedOps, StageOps};
+pub use volume::{InferenceShape, ParallelLayout, VolumeBreakdown, VolumeModel};

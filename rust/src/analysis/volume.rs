@@ -1,0 +1,312 @@
+//! Communication-volume models — paper §III, Equations 1–7.
+//!
+//! Volumes follow the NCCL accounting the paper adopts ([16]): message size
+//! multiplied by the algorithm's correction factor — `2(d−1)/d` for
+//! AllReduce, `(d−1)/d` for AllGather, `1` for point-to-point and Gather,
+//! where `d` is the number of participating workers.
+
+
+use crate::model::ModelArch;
+
+/// A parallelism layout: `t` tensor-parallel × `p` pipeline-parallel ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelLayout {
+    /// Tensor-parallel size `t`.
+    pub tp: usize,
+    /// Pipeline-parallel size `p`.
+    pub pp: usize,
+}
+
+impl ParallelLayout {
+    pub fn new(tp: usize, pp: usize) -> Self {
+        assert!(tp >= 1 && pp >= 1, "degrees must be >= 1");
+        Self { tp, pp }
+    }
+
+    /// Total number of GPU workers.
+    pub fn world_size(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    pub fn label(&self) -> String {
+        match (self.tp, self.pp) {
+            (t, 1) => format!("TP={t}"),
+            (1, p) => format!("PP={p}"),
+            (t, p) => format!("TP={t} PP={p}"),
+        }
+    }
+}
+
+/// Sequence-length setting of one inference request (paper Table I:
+/// `S_p` prefill tokens, `S_d` decode tokens, `b` bytes per element).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InferenceShape {
+    pub prefill_len: usize,
+    pub decode_len: usize,
+    pub dtype_bytes: usize,
+}
+
+impl InferenceShape {
+    pub fn new(prefill_len: usize, decode_len: usize, dtype_bytes: usize) -> Self {
+        assert!(prefill_len >= 1 && decode_len >= 1);
+        Self { prefill_len, decode_len, dtype_bytes }
+    }
+
+    /// The `(S_p + S_d − 1)` term: total forward steps' token-positions —
+    /// the final sampled token never re-enters the network.
+    pub fn total_steps_tokens(&self) -> usize {
+        self.prefill_len + self.decode_len - 1
+    }
+}
+
+/// Per-collective-class volume decomposition (bytes). `total()` is the
+/// paper's reported communication volume.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct VolumeBreakdown {
+    pub allreduce: f64,
+    pub allgather: f64,
+    pub gather: f64,
+    pub p2p: f64,
+}
+
+impl VolumeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.allreduce + self.allgather + self.gather + self.p2p
+    }
+}
+
+/// Analytical volume model over (architecture, layout, sequence shape).
+#[derive(Debug, Clone)]
+pub struct VolumeModel {
+    pub arch: ModelArch,
+}
+
+impl VolumeModel {
+    pub fn new(arch: ModelArch) -> Self {
+        Self { arch }
+    }
+
+    /// AllReduce correction factor `2(d−1)/d` (ring algorithm bytes/GPU).
+    pub fn allreduce_factor(d: usize) -> f64 {
+        if d <= 1 { 0.0 } else { 2.0 * (d as f64 - 1.0) / d as f64 }
+    }
+
+    /// AllGather correction factor `(d−1)/d`.
+    pub fn allgather_factor(d: usize) -> f64 {
+        if d <= 1 { 0.0 } else { (d as f64 - 1.0) / d as f64 }
+    }
+
+    /// Eq. 1 — pure tensor parallelism:
+    /// `V_tp = (2L+1)(S_p+S_d−1) h b · 2(t−1)/t + S_d (v/t) b`.
+    pub fn tensor_parallel(&self, t: usize, shape: InferenceShape) -> VolumeBreakdown {
+        assert!(t >= 1);
+        let a = &self.arch;
+        let b = shape.dtype_bytes as f64;
+        let tokens = shape.total_steps_tokens() as f64;
+        let allreduce = (2 * a.layers + 1) as f64
+            * tokens
+            * a.hidden as f64
+            * b
+            * Self::allreduce_factor(t);
+        let gather = if t > 1 {
+            shape.decode_len as f64 * (a.vocab as f64 / t as f64) * b
+        } else {
+            0.0
+        };
+        VolumeBreakdown { allreduce, gather, ..Default::default() }
+    }
+
+    /// Eq. 2 — pure pipeline parallelism:
+    /// `V_pp = (p−1) · 2 · (S_p+S_d−1) h b`.
+    ///
+    /// The factor 2 is the two tensors vLLM ships per stage boundary
+    /// (hidden states + deferred residual; §V.A "separate transmission").
+    pub fn pipeline_parallel(&self, p: usize, shape: InferenceShape) -> VolumeBreakdown {
+        assert!(p >= 1);
+        let a = &self.arch;
+        let p2p = (p.saturating_sub(1)) as f64
+            * 2.0
+            * shape.total_steps_tokens() as f64
+            * a.hidden as f64
+            * shape.dtype_bytes as f64;
+        VolumeBreakdown { p2p, ..Default::default() }
+    }
+
+    /// Eq. 3–7 — hybrid: `V = V_ar + V_ag + V_gather + V_p2p`, with the
+    /// rank-0-stage embedding AllReduce correction (§III.C final note).
+    pub fn hybrid(&self, layout: ParallelLayout, shape: InferenceShape) -> VolumeBreakdown {
+        let (t, p) = (layout.tp, layout.pp);
+        if p == 1 {
+            return self.tensor_parallel(t, shape);
+        }
+        if t == 1 {
+            return self.pipeline_parallel(p, shape);
+        }
+        let a = &self.arch;
+        let b = shape.dtype_bytes as f64;
+        let tokens = shape.total_steps_tokens() as f64;
+        let h = a.hidden as f64;
+
+        // Eq. 4 + embedding contribution on the first pipeline rank.
+        let layer_ar = (2 * a.layers) as f64 / p as f64;
+        let allreduce =
+            (layer_ar + 1.0) * tokens * h * b * Self::allreduce_factor(t);
+
+        // Eq. 5 — stage-entry redistribution among TP workers.
+        let allgather = 2.0
+            * (p - 1) as f64
+            * tokens
+            * h
+            * b
+            * Self::allgather_factor(t);
+
+        // Eq. 6 — logits gather.
+        let gather = shape.decode_len as f64 * (a.vocab as f64 / t as f64) * b;
+
+        // Eq. 7 — p2p carries the TP-local slice h/t (×2 tensors).
+        let p2p = (p - 1) as f64 * 2.0 * tokens * (h / t as f64) * b;
+
+        VolumeBreakdown { allreduce, allgather, gather, p2p }
+    }
+
+    /// Dispatch on layout shape (the benches' single entry point).
+    pub fn volume(&self, layout: ParallelLayout, shape: InferenceShape) -> VolumeBreakdown {
+        self.hybrid(layout, shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelArch, DTYPE_BYTES_BF16};
+
+    fn shape128() -> InferenceShape {
+        InferenceShape::new(128, 128, DTYPE_BYTES_BF16)
+    }
+
+    #[test]
+    fn eq1_tensor_parallel_hand_computed() {
+        let m = VolumeModel::new(ModelArch::llama31_8b());
+        let v = m.tensor_parallel(4, shape128());
+        // (2*32+1) * 255 * 4096 * 2 * 2*(3/4)
+        let expect_ar = 65.0 * 255.0 * 4096.0 * 2.0 * 1.5;
+        assert!((v.allreduce - expect_ar).abs() < 1e-6);
+        let expect_gather = 128.0 * (128_256.0 / 4.0) * 2.0;
+        assert!((v.gather - expect_gather).abs() < 1e-6);
+        assert_eq!(v.p2p, 0.0);
+        assert_eq!(v.allgather, 0.0);
+    }
+
+    #[test]
+    fn eq2_pipeline_parallel_hand_computed() {
+        let m = VolumeModel::new(ModelArch::llama31_8b());
+        let v = m.pipeline_parallel(4, shape128());
+        let expect = 3.0 * 2.0 * 255.0 * 4096.0 * 2.0;
+        assert!((v.p2p - expect).abs() < 1e-6);
+        assert_eq!(v.total(), v.p2p);
+    }
+
+    #[test]
+    fn eq4_to_7_hybrid_hand_computed() {
+        let m = VolumeModel::new(ModelArch::llama31_8b());
+        let v = m.hybrid(ParallelLayout::new(2, 2), shape128());
+        let b = 2.0;
+        let tokens = 255.0;
+        let h = 4096.0;
+        let ar = (32.0 + 1.0) * tokens * h * b * 1.0; // 2L/p=32, +1 embed; factor 2*(1/2)=1
+        let ag = 2.0 * 1.0 * tokens * h * b * 0.5;
+        let g = 128.0 * (128_256.0 / 2.0) * b;
+        let p2p = 1.0 * 2.0 * tokens * (h / 2.0) * b;
+        assert!((v.allreduce - ar).abs() < 1e-6, "{} vs {}", v.allreduce, ar);
+        assert!((v.allgather - ag).abs() < 1e-6);
+        assert!((v.gather - g).abs() < 1e-6);
+        assert!((v.p2p - p2p).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hybrid_degenerates_to_pure_forms() {
+        let m = VolumeModel::new(ModelArch::llama32_3b());
+        let s = shape128();
+        assert_eq!(
+            m.hybrid(ParallelLayout::new(4, 1), s),
+            m.tensor_parallel(4, s)
+        );
+        assert_eq!(
+            m.hybrid(ParallelLayout::new(1, 4), s),
+            m.pipeline_parallel(4, s)
+        );
+    }
+
+    #[test]
+    fn single_gpu_volume_is_zero() {
+        let m = VolumeModel::new(ModelArch::llama32_3b());
+        let v = m.volume(ParallelLayout::new(1, 1), shape128());
+        assert_eq!(v.total(), 0.0);
+    }
+
+    #[test]
+    fn fig6_ordering_tp_highest_pp_lowest() {
+        // Paper Fig. 6: TP=4 highest volume, PP=4 lowest, hybrid between —
+        // for every evaluation model.
+        let s = shape128();
+        for arch in ModelArch::paper_models() {
+            let m = VolumeModel::new(arch.clone());
+            let tp = m.volume(ParallelLayout::new(4, 1), s).total();
+            let pp = m.volume(ParallelLayout::new(1, 4), s).total();
+            let hy = m.volume(ParallelLayout::new(2, 2), s).total();
+            assert!(tp > hy && hy > pp, "{}: tp={tp} hy={hy} pp={pp}", arch.name);
+        }
+    }
+
+    #[test]
+    fn fig7_sublinear_decode_scaling_ratios() {
+        // Paper §V.B: growth factors 1.50x (128->256) and 1.67x (256->512)
+        // from the (S_p + S_d − 1) term.
+        let m = VolumeModel::new(ModelArch::llama31_8b());
+        let v = |layout: ParallelLayout, sd: usize| {
+            m.volume(layout, InferenceShape::new(128, sd, DTYPE_BYTES_BF16)).total()
+        };
+        // Pure (S_p + S_d − 1) scaling (PP volume): exactly 383/255, 639/383.
+        let pp = ParallelLayout::new(1, 4);
+        assert!((v(pp, 256) / v(pp, 128) - 383.0 / 255.0).abs() < 1e-12);
+        assert!((v(pp, 512) / v(pp, 256) - 639.0 / 383.0).abs() < 1e-12);
+        // TP adds the Gather term (∝ S_d), shifting ratios by ~1-2%.
+        let tp = ParallelLayout::new(4, 1);
+        let g1 = v(tp, 256) / v(tp, 128);
+        let g2 = v(tp, 512) / v(tp, 256);
+        assert!((g1 - 1.50).abs() < 0.03, "g1={g1}");
+        assert!((g2 - 1.67).abs() < 0.03, "g2={g2}");
+    }
+
+    #[test]
+    fn volume_scales_with_model_size() {
+        // Fig. 6 note: volume increases 3B -> 8B -> 13B for every strategy.
+        let s = shape128();
+        for layout in [
+            ParallelLayout::new(4, 1),
+            ParallelLayout::new(1, 4),
+            ParallelLayout::new(2, 2),
+        ] {
+            let v3 = VolumeModel::new(ModelArch::llama32_3b()).volume(layout, s).total();
+            let v8 = VolumeModel::new(ModelArch::llama31_8b()).volume(layout, s).total();
+            let v13 = VolumeModel::new(ModelArch::llama2_13b()).volume(layout, s).total();
+            assert!(v3 < v8 && v8 < v13, "{}", layout.label());
+        }
+    }
+
+    #[test]
+    fn layout_helpers() {
+        assert_eq!(ParallelLayout::new(2, 4).world_size(), 8);
+        assert_eq!(ParallelLayout::new(8, 1).label(), "TP=8");
+        assert_eq!(ParallelLayout::new(1, 8).label(), "PP=8");
+        assert_eq!(ParallelLayout::new(2, 4).label(), "TP=2 PP=4");
+    }
+
+    #[test]
+    fn correction_factors() {
+        assert_eq!(VolumeModel::allreduce_factor(1), 0.0);
+        assert!((VolumeModel::allreduce_factor(2) - 1.0).abs() < 1e-12);
+        assert!((VolumeModel::allreduce_factor(4) - 1.5).abs() < 1e-12);
+        assert!((VolumeModel::allgather_factor(4) - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Cluster substrate: node/GPU topology, worker placement, and the α–β
+//! link model standing in for the paper's NVLink + InfiniBand NDR400
+//! testbed (DESIGN.md §5 Substitutions).
+
+pub mod netmodel;
+pub mod topology;
+
+pub use netmodel::{CollectiveCost, LinkClass, LinkParams, NetModel};
+pub use topology::{Placement, Topology};

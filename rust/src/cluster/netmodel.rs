@@ -1,0 +1,183 @@
+//! α–β network cost model for the paper's interconnects.
+//!
+//! We cannot measure NVLink/InfiniBand on this testbed, so collective costs
+//! are modeled with the standard latency–bandwidth (α–β) form the NCCL
+//! performance guide uses ([16] in the paper): a ring AllReduce over `d`
+//! workers moves `2(d−1)/d · n` bytes per GPU in `2(d−1)` steps, etc.
+//! Constants are calibrated in [`crate::perfmodel::calibration`]; the
+//! *ratios* (NVLink ≫ IB in bandwidth, IB ≫ NVLink in latency) are what the
+//! paper's SLO shapes depend on.
+
+
+use super::topology::Placement;
+use crate::comm::CollectiveKind;
+
+/// Link class between two workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// Intra-node NVLink (NVLink4 on H100).
+    NvLink,
+    /// Inter-node InfiniBand NDR400 (4 NICs/node on the paper's testbed).
+    InfiniBand,
+}
+
+/// α–β parameters of one link class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkParams {
+    /// Per-operation launch + wire latency (seconds).
+    pub alpha_s: f64,
+    /// Effective per-GPU bus bandwidth (bytes/second).
+    pub bus_bw: f64,
+}
+
+/// Network model over a placement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetModel {
+    pub nvlink: LinkParams,
+    pub ib: LinkParams,
+}
+
+/// Cost decomposition of one collective (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveCost {
+    pub latency_s: f64,
+    pub transfer_s: f64,
+}
+
+impl CollectiveCost {
+    pub fn total(&self) -> f64 {
+        self.latency_s + self.transfer_s
+    }
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        Self {
+            // NVLink4: ~450 GB/s/dir peak; NCCL ring busbw on 2-4 GPUs
+            // measured around 300 GB/s effective; small-message launch ~4 µs.
+            nvlink: LinkParams { alpha_s: 4.0e-6, bus_bw: 300.0e9 },
+            // NDR400: 50 GB/s/NIC raw; NCCL cross-node small-message launch
+            // ~14 µs, effective per-GPU busbw ~40 GB/s.
+            ib: LinkParams { alpha_s: 14.0e-6, bus_bw: 40.0e9 },
+        }
+    }
+}
+
+impl NetModel {
+    /// Link parameters governing a group: the slowest member link.
+    pub fn group_params(&self, crosses_nodes: bool) -> LinkParams {
+        if crosses_nodes { self.ib } else { self.nvlink }
+    }
+
+    /// Ring AllReduce over `d` workers, message `n` bytes:
+    /// `2(d−1) α + 2(d−1)/d · n / busbw`.
+    pub fn allreduce(&self, n_bytes: f64, d: usize, crosses_nodes: bool) -> CollectiveCost {
+        if d <= 1 {
+            return CollectiveCost { latency_s: 0.0, transfer_s: 0.0 };
+        }
+        let p = self.group_params(crosses_nodes);
+        CollectiveCost {
+            latency_s: 2.0 * (d as f64 - 1.0) * p.alpha_s,
+            transfer_s: CollectiveKind::AllReduce.correction_factor(d) * n_bytes / p.bus_bw,
+        }
+    }
+
+    /// Ring AllGather to `n_out` gathered bytes over `d` workers:
+    /// `(d−1) α + (d−1)/d · n_out / busbw`.
+    pub fn allgather(&self, n_out_bytes: f64, d: usize, crosses_nodes: bool) -> CollectiveCost {
+        if d <= 1 {
+            return CollectiveCost { latency_s: 0.0, transfer_s: 0.0 };
+        }
+        let p = self.group_params(crosses_nodes);
+        CollectiveCost {
+            latency_s: (d as f64 - 1.0) * p.alpha_s,
+            transfer_s: CollectiveKind::AllGather.correction_factor(d) * n_out_bytes / p.bus_bw,
+        }
+    }
+
+    /// Gather of `d` slices of `n_slice` bytes to a root: the root drains
+    /// `(d−1)` slices at link bandwidth after one launch.
+    pub fn gather(&self, n_slice_bytes: f64, d: usize, crosses_nodes: bool) -> CollectiveCost {
+        if d <= 1 {
+            return CollectiveCost { latency_s: 0.0, transfer_s: 0.0 };
+        }
+        let p = self.group_params(crosses_nodes);
+        CollectiveCost {
+            latency_s: p.alpha_s,
+            transfer_s: (d as f64 - 1.0) * n_slice_bytes / p.bus_bw,
+        }
+    }
+
+    /// Point-to-point transfer of `n` bytes across one link.
+    pub fn p2p(&self, n_bytes: f64, crosses_nodes: bool) -> CollectiveCost {
+        let p = self.group_params(crosses_nodes);
+        CollectiveCost { latency_s: p.alpha_s, transfer_s: n_bytes / p.bus_bw }
+    }
+
+    /// AllReduce cost for a TP group of a placement's stage.
+    pub fn tp_allreduce(
+        &self,
+        placement: &Placement,
+        pp_stage: usize,
+        n_bytes: f64,
+    ) -> CollectiveCost {
+        self.allreduce(
+            n_bytes,
+            placement.layout.tp,
+            placement.tp_group_crosses_nodes(pp_stage),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ParallelLayout;
+    use crate::cluster::Topology;
+
+    #[test]
+    fn allreduce_cost_formula() {
+        let nm = NetModel::default();
+        let c = nm.allreduce(1.0e6, 4, false);
+        assert!((c.latency_s - 6.0 * 4.0e-6).abs() < 1e-12);
+        assert!((c.transfer_s - 1.5e6 / 300.0e9).abs() < 1e-15);
+        // degenerate group
+        assert_eq!(nm.allreduce(1.0e6, 1, false).total(), 0.0);
+    }
+
+    #[test]
+    fn internode_is_slower_for_small_and_large_messages() {
+        let nm = NetModel::default();
+        for bytes in [8.0e3, 1.0e6, 1.0e9] {
+            let intra = nm.allreduce(bytes, 4, false).total();
+            let inter = nm.allreduce(bytes, 4, true).total();
+            assert!(inter > intra, "bytes={bytes}");
+        }
+    }
+
+    #[test]
+    fn small_message_allreduce_is_latency_dominated() {
+        // Paper §V.C: decode-stage [1, h] AllReduces (8 KB) are dominated
+        // by launch latency, which is why cross-node TP wrecks TPOT.
+        let nm = NetModel::default();
+        let c = nm.allreduce(8192.0, 8, true);
+        assert!(c.latency_s > 10.0 * c.transfer_s);
+    }
+
+    #[test]
+    fn p2p_and_gather_scale_with_bytes() {
+        let nm = NetModel::default();
+        assert!(nm.p2p(2.0e6, true).total() > nm.p2p(1.0e6, true).total());
+        assert!(nm.gather(1.0e6, 4, false).total() > nm.gather(1.0e5, 4, false).total());
+    }
+
+    #[test]
+    fn placement_aware_allreduce_uses_slow_fabric_when_spanning() {
+        let nm = NetModel::default();
+        let p8 = Placement::new(Topology::cardinal(2), ParallelLayout::new(8, 1)).unwrap();
+        let p4 = Placement::new(Topology::cardinal(1), ParallelLayout::new(4, 1)).unwrap();
+        let cross = nm.tp_allreduce(&p8, 0, 8192.0).total();
+        let local = nm.tp_allreduce(&p4, 0, 8192.0).total();
+        assert!(cross > 3.0 * local);
+    }
+}

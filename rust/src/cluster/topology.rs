@@ -1,0 +1,175 @@
+//! Node/GPU topology and worker placement.
+//!
+//! The paper's testbed (Table II): nodes of 4× H100 with NVLink inside and
+//! InfiniBand NDR400 between. Parallelism placement follows vLLM: global
+//! rank `r` = `pp_stage * tp + tp_rank`, ranks filled onto GPUs in order,
+//! TP groups packed within a node first (§II.B: "TP within compute nodes,
+//! PP across").
+
+
+use crate::analysis::ParallelLayout;
+
+/// Physical cluster shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, gpus_per_node: usize) -> Self {
+        assert!(nodes >= 1 && gpus_per_node >= 1);
+        Self { nodes, gpus_per_node }
+    }
+
+    /// The paper's testbed: 4×H100 per node.
+    pub fn cardinal(nodes: usize) -> Self {
+        Self::new(nodes, 4)
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Node hosting a global rank (ranks fill nodes in order).
+    pub fn node_of(&self, rank: usize) -> usize {
+        assert!(rank < self.total_gpus(), "rank {rank} out of range");
+        rank / self.gpus_per_node
+    }
+
+    /// Whether two ranks share a node (NVLink) or cross nodes (IB).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+/// Mapping of a parallel layout onto a topology.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub topology: Topology,
+    pub layout: ParallelLayout,
+}
+
+impl Placement {
+    pub fn new(topology: Topology, layout: ParallelLayout) -> crate::Result<Self> {
+        if layout.world_size() > topology.total_gpus() {
+            anyhow::bail!(
+                "layout {} needs {} GPUs but topology has {}",
+                layout.label(),
+                layout.world_size(),
+                topology.total_gpus()
+            );
+        }
+        Ok(Self { topology, layout })
+    }
+
+    /// Global rank of (pp_stage, tp_rank) — vLLM placement.
+    pub fn global_rank(&self, pp_stage: usize, tp_rank: usize) -> usize {
+        assert!(pp_stage < self.layout.pp && tp_rank < self.layout.tp);
+        pp_stage * self.layout.tp + tp_rank
+    }
+
+    /// Ranks of one TP group (a pipeline stage's workers).
+    pub fn tp_group(&self, pp_stage: usize) -> Vec<usize> {
+        (0..self.layout.tp).map(|t| self.global_rank(pp_stage, t)).collect()
+    }
+
+    /// Whether the TP group of `pp_stage` spans nodes (forces its
+    /// AllReduces onto the inter-node fabric).
+    pub fn tp_group_crosses_nodes(&self, pp_stage: usize) -> bool {
+        let ranks = self.tp_group(pp_stage);
+        let first = self.topology.node_of(ranks[0]);
+        ranks.iter().any(|&r| self.topology.node_of(r) != first)
+    }
+
+    /// Whether the pipeline boundary `stage -> stage+1` crosses nodes
+    /// (checked pairwise on the slice-exchanging rank pairs).
+    pub fn pp_boundary_crosses_nodes(&self, stage: usize) -> bool {
+        assert!(stage + 1 < self.layout.pp);
+        (0..self.layout.tp).any(|t| {
+            !self.topology.same_node(
+                self.global_rank(stage, t),
+                self.global_rank(stage + 1, t),
+            )
+        })
+    }
+
+    /// Number of pipeline boundaries that cross nodes.
+    pub fn internode_boundaries(&self) -> usize {
+        (0..self.layout.pp.saturating_sub(1))
+            .filter(|&s| self.pp_boundary_crosses_nodes(s))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_assignment() {
+        let t = Topology::cardinal(2);
+        assert_eq!(t.total_gpus(), 8);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert!(t.same_node(0, 3));
+        assert!(!t.same_node(3, 4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn node_of_out_of_range_panics() {
+        Topology::cardinal(1).node_of(4);
+    }
+
+    #[test]
+    fn placement_rejects_oversubscription() {
+        let t = Topology::cardinal(1);
+        assert!(Placement::new(t, ParallelLayout::new(8, 1)).is_err());
+        assert!(Placement::new(t, ParallelLayout::new(4, 1)).is_ok());
+    }
+
+    #[test]
+    fn tp8_on_two_nodes_crosses() {
+        // Paper Fig. 8: TP=8 spans two 4-GPU nodes -> inter-node AllReduce.
+        let p = Placement::new(Topology::cardinal(2), ParallelLayout::new(8, 1)).unwrap();
+        assert!(p.tp_group_crosses_nodes(0));
+        // TP=4 on one node does not.
+        let p4 = Placement::new(Topology::cardinal(1), ParallelLayout::new(4, 1)).unwrap();
+        assert!(!p4.tp_group_crosses_nodes(0));
+    }
+
+    #[test]
+    fn pp8_has_one_internode_boundary() {
+        // Paper Fig. 9: PP=8 on two nodes -> the 3->4 boundary crosses.
+        let p = Placement::new(Topology::cardinal(2), ParallelLayout::new(1, 8)).unwrap();
+        assert_eq!(p.internode_boundaries(), 1);
+        assert!(p.pp_boundary_crosses_nodes(3));
+        assert!(!p.pp_boundary_crosses_nodes(2));
+    }
+
+    #[test]
+    fn hybrid_placements_fig10() {
+        let topo = Topology::cardinal(2);
+        // TP=2 PP=4: stages {0,1} node0, {2,3} node1 -> TP intra-node,
+        // one inter-node pp boundary.
+        let p = Placement::new(topo, ParallelLayout::new(2, 4)).unwrap();
+        assert!(!p.tp_group_crosses_nodes(0));
+        assert!(!p.tp_group_crosses_nodes(3));
+        assert_eq!(p.internode_boundaries(), 1);
+        // TP=4 PP=2: each stage's TP group fills one node.
+        let p = Placement::new(topo, ParallelLayout::new(4, 2)).unwrap();
+        assert!(!p.tp_group_crosses_nodes(0));
+        assert_eq!(p.internode_boundaries(), 1);
+    }
+
+    #[test]
+    fn rank_numbering_is_tp_major() {
+        let p = Placement::new(Topology::cardinal(2), ParallelLayout::new(2, 2)).unwrap();
+        assert_eq!(p.global_rank(0, 0), 0);
+        assert_eq!(p.global_rank(0, 1), 1);
+        assert_eq!(p.global_rank(1, 0), 2);
+        assert_eq!(p.tp_group(1), vec![2, 3]);
+    }
+}

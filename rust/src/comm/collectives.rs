@@ -1,0 +1,663 @@
+//! Shared-memory collective implementations.
+//!
+//! One [`CommWorld`] per engine run owns the rendezvous state; workers hold
+//! [`GroupHandle`]s (TP groups) and [`P2pEndpoint`]s (pipeline links). Data
+//! is genuinely reduced/gathered/moved between worker threads — the numeric
+//! engine's correctness depends on it — and every call is traced through the
+//! shared [`TraceSink`].
+//!
+//! Collectives in a group are SPMD-ordered (every member issues the same
+//! sequence), so a single generation-counted slot per group suffices; a
+//! two-phase (fill → drain) protocol lets a fast worker block until the
+//! previous operation fully drains before depositing into the next.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::profiler::{CommRecord, Stage, TraceSink};
+use super::CollectiveKind;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Filling,
+    Draining,
+}
+
+struct SlotState {
+    phase: Phase,
+    contributions: Vec<Option<Vec<f32>>>,
+    result: Option<Arc<Vec<f32>>>,
+    /// Reused sum accumulator for the reduce fast path (no per-op allocs).
+    acc: Vec<f32>,
+    arrived: usize,
+    departed: usize,
+}
+
+struct GroupShared {
+    size: usize,
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl GroupShared {
+    fn new(size: usize) -> Self {
+        Self {
+            size,
+            state: Mutex::new(SlotState {
+                phase: Phase::Filling,
+                contributions: vec![None; size],
+                result: None,
+                acc: Vec::new(),
+                arrived: 0,
+                departed: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Run one collective round: deposit `input`, combine when everyone has
+    /// arrived, hand the combined value to each member.
+    fn round(
+        &self,
+        rank: usize,
+        input: Vec<f32>,
+        combine: impl FnOnce(&mut Vec<Option<Vec<f32>>>) -> Vec<f32>,
+    ) -> Arc<Vec<f32>> {
+        let mut st = self.state.lock().expect("group lock poisoned");
+        // Wait out the previous operation's drain phase.
+        while st.phase == Phase::Draining {
+            st = self.cv.wait(st).expect("group lock poisoned");
+        }
+        debug_assert!(st.contributions[rank].is_none(), "double deposit rank {rank}");
+        st.contributions[rank] = Some(input);
+        st.arrived += 1;
+        if st.arrived == self.size {
+            let combined = combine(&mut st.contributions);
+            st.result = Some(Arc::new(combined));
+            st.phase = Phase::Draining;
+            self.cv.notify_all();
+        } else {
+            // Measured alternative (EXPERIMENTS.md §Perf): spin-then-park
+            // before the condvar wait improved p50 slightly but regressed
+            // mean latency 2.4x on this (shared) testbed via lock thrash —
+            // reverted; plain condvar parking is the keeper.
+            while st.phase != Phase::Draining {
+                st = self.cv.wait(st).expect("group lock poisoned");
+            }
+        }
+        let res = st.result.as_ref().expect("result present in drain phase").clone();
+        st.departed += 1;
+        if st.departed == self.size {
+            st.phase = Phase::Filling;
+            st.arrived = 0;
+            st.departed = 0;
+            st.result = None;
+            st.contributions.iter_mut().for_each(|c| *c = None);
+            self.cv.notify_all();
+        }
+        res
+    }
+
+    /// Allocation-free sum round: ranks add into a shared accumulator under
+    /// the slot lock and copy it out on drain — the AllReduce fast path
+    /// (EXPERIMENTS.md §Perf: removes both the per-rank `to_vec` and the
+    /// combine pass of the generic round).
+    fn reduce_round(&self, buf: &mut [f32]) {
+        let mut st = self.state.lock().expect("group lock poisoned");
+        while st.phase == Phase::Draining {
+            st = self.cv.wait(st).expect("group lock poisoned");
+        }
+        if st.arrived == 0 {
+            st.acc.clear();
+            st.acc.extend_from_slice(buf);
+        } else {
+            debug_assert_eq!(st.acc.len(), buf.len(), "mismatched reduce sizes");
+            for (a, b) in st.acc.iter_mut().zip(buf.iter()) {
+                *a += *b;
+            }
+        }
+        st.arrived += 1;
+        if st.arrived == self.size {
+            st.phase = Phase::Draining;
+            self.cv.notify_all();
+        } else {
+            while st.phase != Phase::Draining {
+                st = self.cv.wait(st).expect("group lock poisoned");
+            }
+        }
+        buf.copy_from_slice(&st.acc);
+        st.departed += 1;
+        if st.departed == self.size {
+            st.phase = Phase::Filling;
+            st.arrived = 0;
+            st.departed = 0;
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// One worker's membership in a communication group.
+#[derive(Clone)]
+pub struct GroupHandle {
+    shared: Arc<GroupShared>,
+    /// Rank within the group (0-based).
+    pub group_rank: usize,
+    /// Global rank, used for trace attribution.
+    pub global_rank: usize,
+    sink: Arc<TraceSink>,
+    /// Logical element width recorded in traces (BF16 in the paper's runs,
+    /// F32 for the numeric tiny model).
+    pub dtype_bytes: usize,
+}
+
+impl GroupHandle {
+    /// Number of participants.
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    fn record(&self, op: CollectiveKind, stage: Stage, shape: &[usize]) {
+        self.sink.record(CommRecord {
+            op,
+            stage,
+            rank: self.global_rank,
+            group_size: self.shared.size,
+            shape: shape.to_vec(),
+            elems: shape.iter().product(),
+            dtype_bytes: self.dtype_bytes,
+            peer: None,
+        });
+    }
+
+    /// Sum-AllReduce `buf` in place across the group. `shape` is the
+    /// logical tensor shape for the trace (e.g. `[S, h]`).
+    pub fn all_reduce(&self, buf: &mut [f32], shape: &[usize], stage: Stage) {
+        assert_eq!(buf.len(), shape.iter().product::<usize>(), "shape/len mismatch");
+        if self.shared.size == 1 {
+            return; // vLLM issues no NCCL call for single-member groups
+        }
+        self.record(CollectiveKind::AllReduce, stage, shape);
+        self.shared.reduce_round(buf);
+    }
+
+    /// AllGather rank slices into the full tensor (concatenated by group
+    /// rank along the leading memory order). `out_shape` is the gathered
+    /// shape the trace reports (Table VI convention).
+    pub fn all_gather(&self, local: &[f32], out_shape: &[usize], stage: Stage) -> Vec<f32> {
+        if self.shared.size == 1 {
+            return local.to_vec();
+        }
+        assert_eq!(
+            local.len() * self.shared.size,
+            out_shape.iter().product::<usize>(),
+            "local slice size inconsistent with gathered shape"
+        );
+        self.record(CollectiveKind::AllGather, stage, out_shape);
+        let res = self.shared.round(self.group_rank, local.to_vec(), |contribs| {
+            let mut full = Vec::with_capacity(
+                contribs.iter().map(|c| c.as_ref().map_or(0, |v| v.len())).sum(),
+            );
+            for c in contribs.iter_mut() {
+                full.extend_from_slice(c.take().expect("contribution").as_slice());
+            }
+            full
+        });
+        res.as_ref().clone()
+    }
+
+    /// Gather rank slices to `root`; non-roots return `None`. The trace
+    /// records the *slice* shape (Table III convention: `[v/t]`).
+    pub fn gather(
+        &self,
+        local: &[f32],
+        slice_shape: &[usize],
+        root: usize,
+        stage: Stage,
+    ) -> Option<Vec<f32>> {
+        assert_eq!(local.len(), slice_shape.iter().product::<usize>());
+        if self.shared.size == 1 {
+            return Some(local.to_vec());
+        }
+        self.record(CollectiveKind::Gather, stage, slice_shape);
+        let res = self.shared.round(self.group_rank, local.to_vec(), |contribs| {
+            let mut full = Vec::new();
+            for c in contribs.iter_mut() {
+                full.extend_from_slice(c.take().expect("contribution").as_slice());
+            }
+            full
+        });
+        (self.group_rank == root).then(|| res.as_ref().clone())
+    }
+
+    /// ReduceScatter: sum all contributions, return this rank's `1/d`
+    /// slice (by leading order). Megatron-SP replaces each row-parallel
+    /// AllReduce with ReduceScatter (+ AllGather at the region exit); the
+    /// trace records the *input* shape like NCCL kernel profiles do.
+    pub fn reduce_scatter(&self, buf: &[f32], in_shape: &[usize], stage: Stage) -> Vec<f32> {
+        assert_eq!(buf.len(), in_shape.iter().product::<usize>());
+        let d = self.shared.size;
+        if d == 1 {
+            return buf.to_vec();
+        }
+        assert!(buf.len() % d == 0, "message not divisible across group");
+        self.record(CollectiveKind::ReduceScatter, stage, in_shape);
+        let res = self.shared.round(self.group_rank, buf.to_vec(), |contribs| {
+            let mut acc = contribs[0].take().expect("rank0 contribution");
+            for c in contribs.iter_mut().skip(1) {
+                let c = c.take().expect("contribution");
+                for (a, b) in acc.iter_mut().zip(c.iter()) {
+                    *a += *b;
+                }
+            }
+            acc
+        });
+        let slice = buf.len() / d;
+        res[self.group_rank * slice..(self.group_rank + 1) * slice].to_vec()
+    }
+
+    /// AllToAll: every rank contributes `d` equal chunks; rank `r` receives
+    /// chunk `r` from every member, concatenated by source rank. This is
+    /// the MoE dispatch/combine primitive (tokens routed to expert owners).
+    pub fn all_to_all(&self, buf: &[f32], in_shape: &[usize], stage: Stage) -> Vec<f32> {
+        assert_eq!(buf.len(), in_shape.iter().product::<usize>());
+        let d = self.shared.size;
+        if d == 1 {
+            return buf.to_vec();
+        }
+        assert!(buf.len() % d == 0, "message not divisible across group");
+        self.record(CollectiveKind::AllToAll, stage, in_shape);
+        let chunk = buf.len() / d;
+        let my_rank = self.group_rank;
+        // Everyone deposits the full buffer; each departs with its column.
+        let res = self.shared.round(my_rank, buf.to_vec(), |contribs| {
+            // Flatten all contributions (rank-major) so every member can
+            // extract its column on the way out.
+            let mut all = Vec::with_capacity(chunk * d * d);
+            for c in contribs.iter_mut() {
+                all.extend_from_slice(c.take().expect("contribution").as_slice());
+            }
+            all
+        });
+        let mut out = Vec::with_capacity(chunk * d);
+        for src in 0..d {
+            let base = src * (chunk * d) + my_rank * chunk;
+            out.extend_from_slice(&res[base..base + chunk]);
+        }
+        out
+    }
+
+    /// Barrier (no data) — engine lifecycle synchronization, untraced.
+    pub fn barrier(&self) {
+        if self.shared.size > 1 {
+            self.shared.round(self.group_rank, Vec::new(), |_| Vec::new());
+        }
+    }
+}
+
+/// Directed point-to-point channel between two pipeline ranks. The sender
+/// side records `Send`, the receiver side records `Recv` — matching the
+/// per-rank NCCL kernels of Table V.
+pub struct P2pEndpoint {
+    pub global_rank: usize,
+    pub peer: usize,
+    tx: Option<Sender<Vec<f32>>>,
+    rx: Option<Receiver<Vec<f32>>>,
+    sink: Arc<TraceSink>,
+    pub dtype_bytes: usize,
+}
+
+impl P2pEndpoint {
+    /// Send a tensor to the peer.
+    pub fn send(&self, data: Vec<f32>, shape: &[usize], stage: Stage) {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        self.sink.record(CommRecord {
+            op: CollectiveKind::Send,
+            stage,
+            rank: self.global_rank,
+            group_size: 2,
+            shape: shape.to_vec(),
+            elems: data.len(),
+            dtype_bytes: self.dtype_bytes,
+            peer: Some(self.peer),
+        });
+        self.tx
+            .as_ref()
+            .expect("endpoint is send-capable")
+            .send(data)
+            .expect("peer hung up");
+    }
+
+    /// Receive a tensor from the peer (blocking).
+    pub fn recv(&self, shape: &[usize], stage: Stage) -> Vec<f32> {
+        let data = self
+            .rx
+            .as_ref()
+            .expect("endpoint is recv-capable")
+            .recv()
+            .expect("peer hung up");
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "recv shape mismatch");
+        self.sink.record(CommRecord {
+            op: CollectiveKind::Recv,
+            stage,
+            rank: self.global_rank,
+            group_size: 2,
+            shape: shape.to_vec(),
+            elems: data.len(),
+            dtype_bytes: self.dtype_bytes,
+            peer: Some(self.peer),
+        });
+        data
+    }
+}
+
+/// Factory for groups and p2p links of one engine run.
+pub struct CommWorld {
+    pub world_size: usize,
+    pub sink: Arc<TraceSink>,
+    pub dtype_bytes: usize,
+    channels: Mutex<HashMap<(usize, usize), (Sender<Vec<f32>>, Option<Receiver<Vec<f32>>>)>>,
+}
+
+impl CommWorld {
+    pub fn new(world_size: usize, dtype_bytes: usize, sink: Arc<TraceSink>) -> Arc<Self> {
+        Arc::new(Self {
+            world_size,
+            sink,
+            dtype_bytes,
+            channels: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Create a collective group over `global_ranks`; returns one handle per
+    /// member, in rank order.
+    pub fn create_group(&self, global_ranks: &[usize]) -> Vec<GroupHandle> {
+        assert!(!global_ranks.is_empty());
+        let shared = Arc::new(GroupShared::new(global_ranks.len()));
+        global_ranks
+            .iter()
+            .enumerate()
+            .map(|(group_rank, &global_rank)| GroupHandle {
+                shared: shared.clone(),
+                group_rank,
+                global_rank,
+                sink: self.sink.clone(),
+                dtype_bytes: self.dtype_bytes,
+            })
+            .collect()
+    }
+
+    /// Sender endpoint `src -> dst`.
+    pub fn sender(&self, src: usize, dst: usize) -> P2pEndpoint {
+        assert!(src < self.world_size && dst < self.world_size && src != dst);
+        let mut map = self.channels.lock().expect("channel map poisoned");
+        let (tx, _) = map.entry((src, dst)).or_insert_with(|| {
+            let (tx, rx) = channel();
+            (tx, Some(rx))
+        });
+        P2pEndpoint {
+            global_rank: src,
+            peer: dst,
+            tx: Some(tx.clone()),
+            rx: None,
+            sink: self.sink.clone(),
+            dtype_bytes: self.dtype_bytes,
+        }
+    }
+
+    /// Receiver endpoint for messages `src -> dst` (single consumer: the
+    /// receiving half can be claimed exactly once).
+    pub fn receiver(&self, src: usize, dst: usize) -> P2pEndpoint {
+        assert!(src < self.world_size && dst < self.world_size && src != dst);
+        let mut map = self.channels.lock().expect("channel map poisoned");
+        let entry = map.entry((src, dst)).or_insert_with(|| {
+            let (tx, rx) = channel();
+            (tx, Some(rx))
+        });
+        let rx = entry.1.take().expect("receiver endpoint already claimed");
+        P2pEndpoint {
+            global_rank: dst,
+            peer: src,
+            tx: None,
+            rx: Some(rx),
+            sink: self.sink.clone(),
+            dtype_bytes: self.dtype_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn world(n: usize) -> (Arc<CommWorld>, Arc<TraceSink>) {
+        let sink = TraceSink::new();
+        (CommWorld::new(n, 4, sink.clone()), sink)
+    }
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        for size in [2usize, 3, 4, 8] {
+            let (w, _) = world(size);
+            let handles = w.create_group(&(0..size).collect::<Vec<_>>());
+            let outs: Vec<Vec<f32>> = thread::scope(|s| {
+                let joins: Vec<_> = handles
+                    .into_iter()
+                    .map(|h| {
+                        s.spawn(move || {
+                            let mut buf =
+                                vec![(h.group_rank + 1) as f32, 10.0 * (h.group_rank + 1) as f32];
+                            h.all_reduce(&mut buf, &[2], Stage::Prefill);
+                            buf
+                        })
+                    })
+                    .collect();
+                joins.into_iter().map(|j| j.join().unwrap()).collect()
+            });
+            let expect: f32 = (1..=size).map(|r| r as f32).sum();
+            for out in outs {
+                assert_eq!(out, vec![expect, 10.0 * expect], "size={size}");
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_collectives_reuse_slot() {
+        let (w, _) = world(2);
+        let handles = w.create_group(&[0, 1]);
+        let outs: Vec<f32> = thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|h| {
+                    s.spawn(move || {
+                        let mut total = 0.0f32;
+                        for i in 0..100 {
+                            let mut buf = vec![i as f32 + h.group_rank as f32];
+                            h.all_reduce(&mut buf, &[1], Stage::Decode);
+                            total += buf[0];
+                        }
+                        total
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        // sum over i of (2i + 1) = 2*4950 + 100
+        assert_eq!(outs, vec![10000.0, 10000.0]);
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let (w, _) = world(4);
+        let handles = w.create_group(&[0, 1, 2, 3]);
+        let outs: Vec<Vec<f32>> = thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|h| {
+                    s.spawn(move || {
+                        let local = vec![h.group_rank as f32; 2];
+                        h.all_gather(&local, &[8], Stage::Prefill)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        for out in outs {
+            assert_eq!(out, vec![0., 0., 1., 1., 2., 2., 3., 3.]);
+        }
+    }
+
+    #[test]
+    fn gather_returns_only_at_root() {
+        let (w, _) = world(2);
+        let handles = w.create_group(&[0, 1]);
+        let outs: Vec<Option<Vec<f32>>> = thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|h| {
+                    s.spawn(move || {
+                        let local = vec![h.group_rank as f32];
+                        h.gather(&local, &[1], 0, Stage::Decode)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert_eq!(outs[0], Some(vec![0.0, 1.0]));
+        assert_eq!(outs[1], None);
+    }
+
+    #[test]
+    fn p2p_moves_data_and_traces_both_sides() {
+        let (w, sink) = world(2);
+        let tx = w.sender(0, 1);
+        let rx = w.receiver(0, 1);
+        let handle = thread::spawn(move || rx.recv(&[3], Stage::Prefill));
+        tx.send(vec![1.0, 2.0, 3.0], &[3], Stage::Prefill);
+        assert_eq!(handle.join().unwrap(), vec![1.0, 2.0, 3.0]);
+        let s = sink.summary();
+        assert_eq!(s.global_count(CollectiveKind::Send, Stage::Prefill), 1);
+        assert_eq!(s.global_count(CollectiveKind::Recv, Stage::Prefill), 1);
+        assert_eq!(s.rank_count(0, CollectiveKind::Send, Stage::Prefill), 1);
+        assert_eq!(s.rank_count(1, CollectiveKind::Recv, Stage::Prefill), 1);
+    }
+
+    #[test]
+    fn reduce_scatter_returns_summed_slice() {
+        let (w, sink) = world(2);
+        let handles = w.create_group(&[0, 1]);
+        let outs: Vec<Vec<f32>> = thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|h| {
+                    s.spawn(move || {
+                        let buf = vec![
+                            1.0 + h.group_rank as f32,
+                            2.0 + h.group_rank as f32,
+                            3.0 + h.group_rank as f32,
+                            4.0 + h.group_rank as f32,
+                        ];
+                        h.reduce_scatter(&buf, &[4], Stage::Prefill)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        // sums: [3, 5, 7, 9]; rank0 gets [3,5], rank1 [7,9]
+        assert_eq!(outs[0], vec![3.0, 5.0]);
+        assert_eq!(outs[1], vec![7.0, 9.0]);
+        let s = sink.summary();
+        assert_eq!(s.global_count(CollectiveKind::ReduceScatter, Stage::Prefill), 2);
+    }
+
+    #[test]
+    fn all_to_all_transposes_chunks() {
+        let (w, sink) = world(2);
+        let handles = w.create_group(&[0, 1]);
+        let outs: Vec<Vec<f32>> = thread::scope(|s| {
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|h| {
+                    s.spawn(move || {
+                        let r = h.group_rank as f32;
+                        // rank r contributes chunks [r*10+0..] for dst 0, 1
+                        let buf = vec![r * 10.0, r * 10.0 + 1.0, r * 10.0 + 5.0, r * 10.0 + 6.0];
+                        h.all_to_all(&buf, &[4], Stage::Decode)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        // rank0 receives chunk0 of rank0 + chunk0 of rank1
+        assert_eq!(outs[0], vec![0.0, 1.0, 10.0, 11.0]);
+        // rank1 receives chunk1 of each
+        assert_eq!(outs[1], vec![5.0, 6.0, 15.0, 16.0]);
+        let s = sink.summary();
+        assert_eq!(s.global_count(CollectiveKind::AllToAll, Stage::Decode), 2);
+    }
+
+    #[test]
+    fn reduce_scatter_plus_all_gather_equals_all_reduce() {
+        // The Megatron-SP identity the analysis module relies on.
+        for size in [2usize, 4] {
+            let (w, _) = world(size);
+            let handles = w.create_group(&(0..size).collect::<Vec<_>>());
+            let outs: Vec<(Vec<f32>, Vec<f32>)> = thread::scope(|s| {
+                let joins: Vec<_> = handles
+                    .into_iter()
+                    .map(|h| {
+                        s.spawn(move || {
+                            let n = 8;
+                            let buf: Vec<f32> =
+                                (0..n).map(|i| (i + h.group_rank) as f32).collect();
+                            let slice = h.reduce_scatter(&buf, &[n], Stage::Prefill);
+                            let gathered = h.all_gather(&slice, &[n], Stage::Prefill);
+                            let mut ar = buf.clone();
+                            h.all_reduce(&mut ar, &[n], Stage::Prefill);
+                            (gathered, ar)
+                        })
+                    })
+                    .collect();
+                joins.into_iter().map(|j| j.join().unwrap()).collect()
+            });
+            for (rs_ag, ar) in outs {
+                assert_eq!(rs_ag, ar, "size={size}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_member_group_is_silent() {
+        let (w, sink) = world(1);
+        let handles = w.create_group(&[0]);
+        let mut buf = vec![5.0f32];
+        handles[0].all_reduce(&mut buf, &[1], Stage::Prefill);
+        assert_eq!(buf, vec![5.0]);
+        let g = handles[0].gather(&buf, &[1], 0, Stage::Prefill);
+        assert_eq!(g, Some(vec![5.0]));
+        assert!(sink.is_empty(), "no NCCL calls for t=1");
+    }
+
+    #[test]
+    fn traces_match_issued_ops() {
+        let (w, sink) = world(2);
+        let handles = w.create_group(&[0, 1]);
+        thread::scope(|s| {
+            for h in handles {
+                s.spawn(move || {
+                    let mut buf = vec![0.0f32; 8];
+                    h.all_reduce(&mut buf, &[2, 4], Stage::Prefill);
+                    let _ = h.all_gather(&buf[..4].to_vec(), &[8], Stage::Decode);
+                });
+            }
+        });
+        let s = sink.summary();
+        assert_eq!(s.global_count(CollectiveKind::AllReduce, Stage::Prefill), 2);
+        assert_eq!(s.global_count(CollectiveKind::AllGather, Stage::Decode), 2);
+        assert_eq!(
+            s.shapes(CollectiveKind::AllGather, Stage::Decode),
+            vec![vec![8]]
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! In-process NCCL-like communication substrate with first-class tracing.
+//!
+//! The paper's empirical side is a PyTorch-profiler trace of NCCL calls
+//! inside vLLM; here every collective is implemented by [`collectives`] over
+//! shared-memory rendezvous between worker threads (data is *actually*
+//! reduced/gathered/moved), and every call emits a [`profiler::CommRecord`].
+//! The profiler's aggregations regenerate the paper's Tables III–VI.
+
+pub mod collectives;
+pub mod profiler;
+
+pub use collectives::{CommWorld, GroupHandle, P2pEndpoint};
+pub use profiler::{AggKey, CommRecord, OpAggregate, Stage, TraceSink, TraceSummary};
+
+
+/// Communication primitive classes observed in distributed LLM inference
+/// (paper §V.A). `Send`/`Recv` are the pipeline point-to-point pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CollectiveKind {
+    AllReduce,
+    AllGather,
+    Gather,
+    Send,
+    Recv,
+    /// Megatron-style sequence parallelism splits each AllReduce into a
+    /// ReduceScatter + AllGather pair (paper §VIII future work).
+    ReduceScatter,
+    /// MoE expert-parallel token dispatch/combine (paper §VII future work).
+    AllToAll,
+}
+
+impl CollectiveKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "Allreduce",
+            CollectiveKind::AllGather => "Allgather",
+            CollectiveKind::Gather => "Gather",
+            CollectiveKind::Send => "Send",
+            CollectiveKind::Recv => "Recv",
+            CollectiveKind::ReduceScatter => "ReduceScatter",
+            CollectiveKind::AllToAll => "AllToAll",
+        }
+    }
+
+    /// NCCL volume correction factor for `d` participants (paper §V.B).
+    pub fn correction_factor(&self, d: usize) -> f64 {
+        match self {
+            CollectiveKind::AllReduce => {
+                if d <= 1 { 0.0 } else { 2.0 * (d as f64 - 1.0) / d as f64 }
+            }
+            CollectiveKind::AllGather
+            | CollectiveKind::ReduceScatter
+            | CollectiveKind::AllToAll => {
+                if d <= 1 { 0.0 } else { (d as f64 - 1.0) / d as f64 }
+            }
+            CollectiveKind::Gather | CollectiveKind::Send | CollectiveKind::Recv => 1.0,
+        }
+    }
+}

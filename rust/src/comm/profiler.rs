@@ -1,0 +1,293 @@
+//! Communication tracing — our analogue of the paper's PyTorch-profiler
+//! methodology (§IV.B), but exact: every collective call site records one
+//! [`CommRecord`] into a shared [`TraceSink`]; aggregation reproduces the
+//! paper's table rows (per-op counts, shapes, total message sizes and
+//! corrected volumes), with the paper's rank-selection conventions.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::CollectiveKind;
+
+/// Inference stage a communication belongs to (paper splits every table
+/// into Prefill / Decode columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    Prefill,
+    Decode,
+}
+
+impl Stage {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::Prefill => "Prefill",
+            Stage::Decode => "Decode",
+        }
+    }
+}
+
+/// One observed communication operation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommRecord {
+    pub op: CollectiveKind,
+    pub stage: Stage,
+    /// Global rank of the worker that issued the call.
+    pub rank: usize,
+    /// Participants in the group (collectives) or 2 (p2p).
+    pub group_size: usize,
+    /// Logical message shape as the profiler reports it (e.g. `[128, 4096]`
+    /// for a prefill AllReduce; for AllGather the *gathered* output shape,
+    /// matching Table VI).
+    pub shape: Vec<usize>,
+    /// Element count of `shape`.
+    pub elems: usize,
+    pub dtype_bytes: usize,
+    /// Peer rank for Send/Recv.
+    pub peer: Option<usize>,
+}
+
+impl CommRecord {
+    /// Raw message bytes (count × element size), the paper's
+    /// "Total Message Size" axis in Figs. 4–5.
+    pub fn message_bytes(&self) -> usize {
+        self.elems * self.dtype_bytes
+    }
+
+    /// NCCL-corrected volume contribution (paper §V.B accounting).
+    pub fn corrected_bytes(&self) -> f64 {
+        self.message_bytes() as f64 * self.op.correction_factor(self.group_size)
+    }
+}
+
+/// Thread-safe sink shared by all workers of an engine run.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    records: Mutex<Vec<CommRecord>>,
+    enabled: std::sync::atomic::AtomicBool,
+}
+
+impl TraceSink {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            records: Mutex::new(Vec::new()),
+            enabled: std::sync::atomic::AtomicBool::new(true),
+        })
+    }
+
+    /// Disable recording (perf runs measure the engine without tracing).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn record(&self, rec: CommRecord) {
+        if self.enabled.load(std::sync::atomic::Ordering::Relaxed) {
+            self.records.lock().expect("sink poisoned").push(rec);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().expect("sink poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.records.lock().expect("sink poisoned").clear();
+    }
+
+    /// Snapshot of all records (cloned; the engine keeps appending).
+    pub fn snapshot(&self) -> Vec<CommRecord> {
+        self.records.lock().expect("sink poisoned").clone()
+    }
+
+    pub fn summary(&self) -> TraceSummary {
+        TraceSummary::from_records(&self.snapshot())
+    }
+}
+
+/// Aggregation key: (op, stage, shape) — one table row.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AggKey {
+    pub op: CollectiveKind,
+    pub stage: Stage,
+    pub shape: Vec<usize>,
+}
+
+/// Aggregated statistics for one (op, stage, shape) row.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpAggregate {
+    pub count: usize,
+    pub total_message_bytes: usize,
+    pub corrected_volume_bytes: f64,
+}
+
+/// Full aggregation of a trace, with the paper's viewing conventions.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    /// Global (all ranks) per-row aggregates.
+    pub global: BTreeMap<AggKey, OpAggregate>,
+    /// Per-rank aggregates: `per_rank[rank][key]`.
+    pub per_rank: Vec<BTreeMap<AggKey, OpAggregate>>,
+}
+
+impl TraceSummary {
+    pub fn from_records(records: &[CommRecord]) -> Self {
+        let n_ranks = records.iter().map(|r| r.rank + 1).max().unwrap_or(0);
+        let mut global: BTreeMap<AggKey, OpAggregate> = BTreeMap::new();
+        let mut per_rank: Vec<BTreeMap<AggKey, OpAggregate>> =
+            vec![BTreeMap::new(); n_ranks];
+        for rec in records {
+            let key = AggKey {
+                op: rec.op,
+                stage: rec.stage,
+                shape: rec.shape.clone(),
+            };
+            for map in [&mut global, &mut per_rank[rec.rank]] {
+                let agg = map.entry(key.clone()).or_default();
+                agg.count += 1;
+                agg.total_message_bytes += rec.message_bytes();
+                agg.corrected_volume_bytes += rec.corrected_bytes();
+            }
+        }
+        Self { global, per_rank }
+    }
+
+    /// Count for (op, stage) summed over shapes, global across ranks.
+    pub fn global_count(&self, op: CollectiveKind, stage: Stage) -> usize {
+        self.global
+            .iter()
+            .filter(|(k, _)| k.op == op && k.stage == stage)
+            .map(|(_, v)| v.count)
+            .sum()
+    }
+
+    /// Count for (op, stage) as observed by one rank.
+    pub fn rank_count(&self, rank: usize, op: CollectiveKind, stage: Stage) -> usize {
+        self.per_rank
+            .get(rank)
+            .map(|m| {
+                m.iter()
+                    .filter(|(k, _)| k.op == op && k.stage == stage)
+                    .map(|(_, v)| v.count)
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// The paper's table convention for TP / hybrid (Tables III, VI):
+    /// per-op statistics from the rank that observes the most of that op
+    /// (profiles merge rank views; rank 0 is excluded in §IV.B, which the
+    /// max over ranks reproduces since TP peers see identical streams).
+    pub fn paper_view(&self, op: CollectiveKind, stage: Stage) -> OpAggregate {
+        let mut best = OpAggregate::default();
+        for m in &self.per_rank {
+            let mut agg = OpAggregate::default();
+            for (k, v) in m.iter().filter(|(k, _)| k.op == op && k.stage == stage) {
+                let _ = k;
+                agg.count += v.count;
+                agg.total_message_bytes += v.total_message_bytes;
+                agg.corrected_volume_bytes += v.corrected_volume_bytes;
+            }
+            if agg.count > best.count {
+                best = agg;
+            }
+        }
+        best
+    }
+
+    /// Distinct shapes recorded for (op, stage), ordered.
+    pub fn shapes(&self, op: CollectiveKind, stage: Stage) -> Vec<Vec<usize>> {
+        self.global
+            .keys()
+            .filter(|k| k.op == op && k.stage == stage)
+            .map(|k| k.shape.clone())
+            .collect()
+    }
+
+    /// Total corrected communication volume (paper Figs. 6–7 y-axis).
+    pub fn corrected_volume_total(&self) -> f64 {
+        self.global.values().map(|v| v.corrected_volume_bytes).sum()
+    }
+
+    /// Corrected volume for one op class.
+    pub fn corrected_volume(&self, op: CollectiveKind) -> f64 {
+        self.global
+            .iter()
+            .filter(|(k, _)| k.op == op)
+            .map(|(_, v)| v.corrected_volume_bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(op: CollectiveKind, stage: Stage, rank: usize, shape: &[usize]) -> CommRecord {
+        CommRecord {
+            op,
+            stage,
+            rank,
+            group_size: 2,
+            shape: shape.to_vec(),
+            elems: shape.iter().product(),
+            dtype_bytes: 2,
+            peer: None,
+        }
+    }
+
+    #[test]
+    fn record_byte_math() {
+        let r = rec(CollectiveKind::AllReduce, Stage::Prefill, 0, &[128, 4096]);
+        assert_eq!(r.message_bytes(), 128 * 4096 * 2);
+        // d=2 -> factor 1.0
+        assert!((r.corrected_bytes() - r.message_bytes() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sink_records_and_clears() {
+        let sink = TraceSink::new();
+        sink.record(rec(CollectiveKind::Gather, Stage::Decode, 1, &[64128]));
+        assert_eq!(sink.len(), 1);
+        sink.set_enabled(false);
+        sink.record(rec(CollectiveKind::Gather, Stage::Decode, 1, &[64128]));
+        assert_eq!(sink.len(), 1, "disabled sink must not record");
+        sink.set_enabled(true);
+        sink.clear();
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn summary_global_and_per_rank() {
+        let sink = TraceSink::new();
+        for step in 0..3 {
+            let _ = step;
+            for rank in 0..2 {
+                sink.record(rec(CollectiveKind::AllReduce, Stage::Decode, rank, &[1, 4096]));
+            }
+        }
+        sink.record(rec(CollectiveKind::Gather, Stage::Decode, 0, &[64128]));
+        let s = sink.summary();
+        assert_eq!(s.global_count(CollectiveKind::AllReduce, Stage::Decode), 6);
+        assert_eq!(s.rank_count(1, CollectiveKind::AllReduce, Stage::Decode), 3);
+        assert_eq!(s.rank_count(1, CollectiveKind::Gather, Stage::Decode), 0);
+        assert_eq!(s.paper_view(CollectiveKind::AllReduce, Stage::Decode).count, 3);
+        let shapes = s.shapes(CollectiveKind::AllReduce, Stage::Decode);
+        assert_eq!(shapes, vec![vec![1, 4096]]);
+    }
+
+    #[test]
+    fn corrected_volume_sums_by_op() {
+        let sink = TraceSink::new();
+        sink.record(rec(CollectiveKind::AllReduce, Stage::Prefill, 0, &[2, 8]));
+        sink.record(rec(CollectiveKind::Send, Stage::Prefill, 0, &[2, 8]));
+        let s = sink.summary();
+        let ar = s.corrected_volume(CollectiveKind::AllReduce);
+        let p2p = s.corrected_volume(CollectiveKind::Send);
+        assert!((ar - 32.0).abs() < 1e-9); // 16 elems * 2B * factor 1.0 (d=2)
+        assert!((p2p - 32.0).abs() < 1e-9); // factor 1.0
+        assert!((s.corrected_volume_total() - 64.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,300 @@
+//! Per-worker compute backends.
+//!
+//! [`ComputeBackend`] is the segment-level compute interface the worker
+//! loop drives; collectives happen *between* calls, in the worker (exactly
+//! where vLLM places NCCL ops). Two implementations:
+//!
+//! - [`PjrtBackend`] — numeric mode: executes the AOT segment executables
+//!   (tiny model) on a thread-local PJRT CPU client, holding its rank's
+//!   weight shard and KV cache as resident literals.
+//! - [`StructuralBackend`] — structural mode: paper-scale architectures
+//!   whose compute cannot run on CPU; produces zero tensors of the correct
+//!   shapes so the *communication stream* (what the paper profiles) is
+//!   identical while compute is a no-op.
+
+use crate::model::ModelArch;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{
+    compile_hlo, execute_b_tuple, i32_to_device, to_device, ArtifactStore, Phase, ShardWeights,
+};
+use crate::Result;
+
+/// Segment-level compute of one TP rank. `window` (= rows of `x`) selects
+/// the prefill or decode variant.
+pub trait ComputeBackend: Send {
+    /// Vocab-parallel embedding partial: `tokens [S] -> [S, h]`.
+    fn embed(&mut self, tokens: &[i32]) -> Result<HostTensor>;
+    /// Attention block partial for `layer`: `[S, h] -> [S, h]`; updates the
+    /// rank's KV cache at `pos`.
+    fn attn(&mut self, layer: usize, x: &HostTensor, pos: usize) -> Result<HostTensor>;
+    /// MLP block partial for `layer`: `[S, h] -> [S, h]`.
+    fn mlp(&mut self, layer: usize, x: &HostTensor) -> Result<HostTensor>;
+    /// Final-norm + LM-head slice on the last token: `[S, h] -> [1, v/t]`.
+    fn logits(&mut self, x: &HostTensor) -> Result<HostTensor>;
+    /// Clear KV state between requests.
+    fn reset(&mut self) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// Structural backend
+// ---------------------------------------------------------------------------
+
+/// Zero-compute backend for paper-scale architectures: correct shapes, no
+/// FLOPs. The worker's collective sequence — the object of study — is
+/// unchanged.
+pub struct StructuralBackend {
+    hidden: usize,
+    vocab_slice: usize,
+}
+
+impl StructuralBackend {
+    pub fn new(arch: &ModelArch, tp: usize) -> Self {
+        assert!(arch.supports_tp(tp));
+        Self { hidden: arch.hidden, vocab_slice: arch.vocab / tp }
+    }
+}
+
+impl ComputeBackend for StructuralBackend {
+    fn embed(&mut self, tokens: &[i32]) -> Result<HostTensor> {
+        Ok(HostTensor::zeros(&[tokens.len(), self.hidden]))
+    }
+
+    fn attn(&mut self, _layer: usize, x: &HostTensor, _pos: usize) -> Result<HostTensor> {
+        Ok(HostTensor::zeros(&x.shape))
+    }
+
+    fn mlp(&mut self, _layer: usize, x: &HostTensor) -> Result<HostTensor> {
+        Ok(HostTensor::zeros(&x.shape))
+    }
+
+    fn logits(&mut self, _x: &HostTensor) -> Result<HostTensor> {
+        Ok(HostTensor::zeros(&[1, self.vocab_slice]))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (numeric mode)
+// ---------------------------------------------------------------------------
+
+struct LayerBufs {
+    attn_norm: xla::PjRtBuffer,
+    wq: xla::PjRtBuffer,
+    wk: xla::PjRtBuffer,
+    wv: xla::PjRtBuffer,
+    wo: xla::PjRtBuffer,
+    mlp_norm: xla::PjRtBuffer,
+    w_gate: xla::PjRtBuffer,
+    w_up: xla::PjRtBuffer,
+    w_down: xla::PjRtBuffer,
+}
+
+struct SegmentExes {
+    embed: xla::PjRtLoadedExecutable,
+    attn: xla::PjRtLoadedExecutable,
+    mlp: xla::PjRtLoadedExecutable,
+    logits: xla::PjRtLoadedExecutable,
+}
+
+/// Numeric backend over the tiny-model AOT artifacts. Not `Send` members
+/// live behind thread-local construction (see `engine::worker`); the struct
+/// itself is only ever used on its creating thread.
+///
+/// Weights live in device buffers uploaded once; executions use
+/// `execute_b` — both for speed (no per-call weight re-upload) and because
+/// the crate's literal-input `execute()` leaks its input device buffers
+/// (~input bytes per call; see runtime::execute_tuple docs).
+pub struct PjrtBackend {
+    /// TP degree the executables were built for (asserted at load).
+    pub tp: usize,
+    prefill_len: usize,
+    max_seq: usize,
+    hidden: usize,
+    heads_local: usize,
+    head_dim: usize,
+    layers: usize,
+    client: xla::PjRtClient,
+    prefill: SegmentExes,
+    decode: SegmentExes,
+    emb_weight: xla::PjRtBuffer,
+    rank_offset: xla::PjRtBuffer,
+    final_norm: xla::PjRtBuffer,
+    lm_head: xla::PjRtBuffer,
+    layer_bufs: Vec<LayerBufs>,
+    /// Per-layer (K, V) caches `[T, a/t, d]`, replaced after every attn call.
+    kv: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+}
+
+// SAFETY: PjrtBackend is constructed and used on exactly one worker thread;
+// the Send bound on ComputeBackend is satisfied because ownership moves to
+// that thread before any PJRT object is created (see `new_on_thread`).
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Build on the current thread (creates the thread-local PJRT client).
+    pub fn new_on_thread(store: &ArtifactStore, tp: usize, rank: usize) -> Result<Self> {
+        if !store.supports_tp(tp) {
+            anyhow::bail!("artifacts built without tp={tp} (have {:?})", store.meta.tp_degrees);
+        }
+        let meta = &store.meta;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        let compile_phase = |phase: Phase| -> Result<SegmentExes> {
+            Ok(SegmentExes {
+                embed: compile_hlo(&client, &store.hlo_path("embed", phase, tp))?,
+                attn: compile_hlo(&client, &store.hlo_path("attn", phase, tp))?,
+                mlp: compile_hlo(&client, &store.hlo_path("mlp", phase, tp))?,
+                logits: compile_hlo(&client, &store.hlo_path("logits", phase, tp))?,
+            })
+        };
+        let prefill = compile_phase(Phase::Prefill)?;
+        let decode = compile_phase(Phase::Decode)?;
+
+        let w = ShardWeights::load(store, tp, rank)?;
+        let up = |name: &str| -> Result<xla::PjRtBuffer> { to_device(&client, w.get(name)?) };
+        let mut layer_bufs = Vec::with_capacity(meta.layers);
+        for l in 0..meta.layers {
+            layer_bufs.push(LayerBufs {
+                attn_norm: up(&format!("layer{l}.attn_norm"))?,
+                wq: up(&format!("layer{l}.wq"))?,
+                wk: up(&format!("layer{l}.wk"))?,
+                wv: up(&format!("layer{l}.wv"))?,
+                wo: up(&format!("layer{l}.wo"))?,
+                mlp_norm: up(&format!("layer{l}.mlp_norm"))?,
+                w_gate: up(&format!("layer{l}.w_gate"))?,
+                w_up: up(&format!("layer{l}.w_up"))?,
+                w_down: up(&format!("layer{l}.w_down"))?,
+            });
+        }
+
+        let heads_local = meta.heads / tp;
+        let emb_weight = up("embed")?;
+        let final_norm = up("final_norm")?;
+        let lm_head = up("lm_head")?;
+        let rank_offset = i32_to_device(&client, &[(rank * meta.vocab / tp) as i32])?;
+        let mut backend = Self {
+            tp,
+            prefill_len: meta.prefill_len,
+            max_seq: meta.max_seq,
+            hidden: meta.hidden,
+            heads_local,
+            head_dim: meta.head_dim,
+            layers: meta.layers,
+            client,
+            prefill,
+            decode,
+            emb_weight,
+            rank_offset,
+            final_norm,
+            lm_head,
+            layer_bufs,
+            kv: Vec::new(),
+        };
+        backend.reset()?;
+        Ok(backend)
+    }
+
+    fn kv_shape(&self) -> [usize; 3] {
+        [self.max_seq, self.heads_local, self.head_dim]
+    }
+
+    fn exes(&self, window: usize) -> Result<&SegmentExes> {
+        if window == self.prefill_len {
+            Ok(&self.prefill)
+        } else if window == 1 {
+            Ok(&self.decode)
+        } else {
+            anyhow::bail!(
+                "window {window} has no executable (prefill_len={}, decode=1)",
+                self.prefill_len
+            )
+        }
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn embed(&mut self, tokens: &[i32]) -> Result<HostTensor> {
+        let exe = &self.exes(tokens.len())?.embed;
+        let toks = i32_to_device(&self.client, tokens)?;
+        let out = execute_b_tuple(exe, &[&toks, &self.emb_weight, &self.rank_offset])?;
+        HostTensor::from_literal(&out[0], &[tokens.len(), self.hidden])
+    }
+
+    fn attn(&mut self, layer: usize, x: &HostTensor, pos: usize) -> Result<HostTensor> {
+        let window = x.rows();
+        let exe = &self.exes(window)?.attn;
+        let lw = &self.layer_bufs[layer];
+        let (k, v) = &self.kv[layer];
+        let x_buf = to_device(&self.client, x)?;
+        let pos_buf = i32_to_device(&self.client, &[pos as i32])?;
+        let inputs = [
+            &x_buf, k, v, &pos_buf,
+            &lw.attn_norm, &lw.wq, &lw.wk, &lw.wv, &lw.wo,
+        ];
+        let mut out = execute_b_tuple(exe, &inputs)?;
+        let partial = HostTensor::from_literal(&out[0], &[window, self.hidden])?;
+        // Tuple outputs come back as one literal; re-upload the updated
+        // caches so the next step's execute_b can consume them.
+        let v_new = out.pop().expect("v cache");
+        let k_new = out.pop().expect("k cache");
+        let kv_shape = self.kv_shape();
+        let k_host = HostTensor::from_literal(&k_new, &kv_shape)?;
+        let v_host = HostTensor::from_literal(&v_new, &kv_shape)?;
+        self.kv[layer] = (
+            to_device(&self.client, &k_host)?,
+            to_device(&self.client, &v_host)?,
+        );
+        Ok(partial)
+    }
+
+    fn mlp(&mut self, layer: usize, x: &HostTensor) -> Result<HostTensor> {
+        let window = x.rows();
+        let exe = &self.exes(window)?.mlp;
+        let lw = &self.layer_bufs[layer];
+        let x_buf = to_device(&self.client, x)?;
+        let inputs = [&x_buf, &lw.mlp_norm, &lw.w_gate, &lw.w_up, &lw.w_down];
+        let out = execute_b_tuple(exe, &inputs)?;
+        HostTensor::from_literal(&out[0], &[window, self.hidden])
+    }
+
+    fn logits(&mut self, x: &HostTensor) -> Result<HostTensor> {
+        let window = x.rows();
+        let exe = &self.exes(window)?.logits;
+        let x_buf = to_device(&self.client, x)?;
+        let out = execute_b_tuple(exe, &[&x_buf, &self.final_norm, &self.lm_head])?;
+        let v_local = out[0].element_count(); // lm_head shard is [h, v/t]
+        HostTensor::from_literal(&out[0], &[1, v_local])
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        let shape = self.kv_shape();
+        self.kv.clear();
+        for _ in 0..self.layers {
+            let zeros = HostTensor::zeros(&shape);
+            let k = to_device(&self.client, &zeros)?;
+            let v = to_device(&self.client, &zeros)?;
+            self.kv.push((k, v));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structural_backend_shapes() {
+        let arch = ModelArch::llama31_8b();
+        let mut b = StructuralBackend::new(&arch, 4);
+        let e = b.embed(&[1, 2, 3]).unwrap();
+        assert_eq!(e.shape, vec![3, 4096]);
+        let a = b.attn(0, &e, 0).unwrap();
+        assert_eq!(a.shape, e.shape);
+        let l = b.logits(&e).unwrap();
+        assert_eq!(l.shape, vec![1, 128_256 / 4]);
+        b.reset().unwrap();
+    }
+}

@@ -1,0 +1,119 @@
+//! Fused single-worker fast path (L2 §Perf optimization).
+//!
+//! For the degenerate layout (t=1, p=1) the segment loop costs 2L+2
+//! executable dispatches per step plus host↔device hops between them. The
+//! AOT build also emits whole-model graphs (`full_{prefill,decode}_t1`)
+//! where XLA fuses across layer boundaries; [`FusedEngine`] runs those —
+//! one dispatch per step — and is the numeric oracle the segment engine is
+//! compared against (identical tokens) and the perf baseline in
+//! `benches/engine_micro.rs`.
+
+use std::time::{Duration, Instant};
+
+use crate::runtime::tensor::{argmax, HostTensor};
+use crate::runtime::{
+    compile_hlo, execute_b_tuple, i32_to_device, to_device, ArtifactStore, Phase, ShardWeights,
+};
+use crate::Result;
+
+/// Whole-model single-device engine over the fused AOT graphs.
+pub struct FusedEngine {
+    store: ArtifactStore,
+    client: xla::PjRtClient,
+    prefill: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+    /// embed, final_norm, lm_head, then 9 tensors per layer (canonical
+    /// full_step_flat order).
+    weights: Vec<xla::PjRtBuffer>,
+    kv_shape: [usize; 4],
+    k_cache: xla::PjRtBuffer,
+    v_cache: xla::PjRtBuffer,
+}
+
+impl FusedEngine {
+    pub fn new(store: ArtifactStore) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        let prefill = compile_hlo(&client, &store.full_path(Phase::Prefill))?;
+        let decode = compile_hlo(&client, &store.full_path(Phase::Decode))?;
+        let w = ShardWeights::load(&store, 1, 0)?;
+        let mut names = vec!["embed".to_string(), "final_norm".into(), "lm_head".into()];
+        for l in 0..store.meta.layers {
+            for n in [
+                "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down",
+            ] {
+                names.push(format!("layer{l}.{n}"));
+            }
+        }
+        let weights = names
+            .iter()
+            .map(|n| to_device(&client, w.get(n)?))
+            .collect::<Result<Vec<_>>>()?;
+        let m = &store.meta;
+        let kv_shape = [m.layers, m.max_seq, m.heads, m.head_dim];
+        let zeros = HostTensor::zeros(&kv_shape);
+        let k_cache = to_device(&client, &zeros)?;
+        let v_cache = to_device(&client, &zeros)?;
+        Ok(Self { store, client, prefill, decode, weights, kv_shape, k_cache, v_cache })
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        let zeros = HostTensor::zeros(&self.kv_shape);
+        self.k_cache = to_device(&self.client, &zeros)?;
+        self.v_cache = to_device(&self.client, &zeros)?;
+        Ok(())
+    }
+
+    /// One forward step; returns the gathered logits.
+    fn step(&mut self, tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
+        let exe = if tokens.len() == 1 { &self.decode } else { &self.prefill };
+        let toks = i32_to_device(&self.client, tokens)?;
+        let pos_buf = i32_to_device(&self.client, &[pos as i32])?;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            vec![&toks, &pos_buf, &self.k_cache, &self.v_cache];
+        inputs.extend(self.weights.iter());
+        let mut out = execute_b_tuple(exe, &inputs)?;
+        // (logits, k', v')
+        let v_new = out.pop().expect("v cache");
+        let k_new = out.pop().expect("k cache");
+        let logits_lit = out.pop().expect("logits");
+        let logits = logits_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits to_vec: {e}"))?;
+        let k_host = HostTensor::from_literal(&k_new, &self.kv_shape)?;
+        let v_host = HostTensor::from_literal(&v_new, &self.kv_shape)?;
+        self.k_cache = to_device(&self.client, &k_host)?;
+        self.v_cache = to_device(&self.client, &v_host)?;
+        Ok(logits)
+    }
+
+    /// Greedy generation with the same semantics as `Engine::generate`.
+    pub fn generate(&mut self, prompt: &[i32], decode_len: usize) -> Result<super::GenerationResult> {
+        assert!(decode_len >= 1);
+        if prompt.len() != self.store.meta.prefill_len {
+            anyhow::bail!(
+                "fused engine serves fixed prompts of {} tokens",
+                self.store.meta.prefill_len
+            );
+        }
+        self.reset()?;
+        let start = Instant::now();
+        let logits = self.step(prompt, 0)?;
+        let mut tokens = vec![argmax(&logits) as i32];
+        let ttft = start.elapsed();
+        let mut step_latencies = Vec::with_capacity(decode_len - 1);
+        for i in 1..decode_len {
+            let t0 = Instant::now();
+            let pos = prompt.len() + i - 1;
+            let logits = self.step(&[tokens[i - 1]], pos)?;
+            tokens.push(argmax(&logits) as i32);
+            step_latencies.push(t0.elapsed());
+        }
+        let e2e = start.elapsed();
+        let tpot = if step_latencies.is_empty() {
+            Duration::ZERO
+        } else {
+            step_latencies.iter().sum::<Duration>() / step_latencies.len() as u32
+        };
+        Ok(super::GenerationResult { tokens, ttft, tpot, e2e, step_latencies })
+    }
+}

@@ -1,0 +1,181 @@
+//! Paged KV-cache block manager (vLLM-style, PagedAttention [23]).
+//!
+//! The paper's serving substrate manages KV memory in fixed-size token
+//! blocks; the scheduler admits requests only when blocks are available and
+//! may preempt when decode growth exhausts the pool. This manager is the
+//! admission-control substrate for [`crate::server::scheduler`]; the tiny
+//! numeric model keeps its KV dense inside PJRT literals (DESIGN.md §5).
+
+use std::collections::HashMap;
+
+use crate::Result;
+
+/// Identifier of one sequence (request) holding cache blocks.
+pub type SeqId = u64;
+
+/// Paged allocator over a fixed pool of KV blocks.
+#[derive(Debug)]
+pub struct KvBlockManager {
+    block_size: usize,
+    free: Vec<usize>,
+    allocated: HashMap<SeqId, SeqAlloc>,
+    total_blocks: usize,
+}
+
+#[derive(Debug, Clone)]
+struct SeqAlloc {
+    blocks: Vec<usize>,
+    tokens: usize,
+}
+
+impl KvBlockManager {
+    /// Pool of `total_blocks` blocks of `block_size` tokens each.
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size >= 1 && total_blocks >= 1);
+        Self {
+            block_size,
+            free: (0..total_blocks).rev().collect(),
+            allocated: HashMap::new(),
+            total_blocks,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Whether a new sequence of `tokens` prompt tokens can be admitted.
+    pub fn can_allocate(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens.max(1)) <= self.free.len()
+    }
+
+    /// Admit a sequence with its prompt tokens.
+    pub fn allocate(&mut self, seq: SeqId, tokens: usize) -> Result<()> {
+        if self.allocated.contains_key(&seq) {
+            anyhow::bail!("seq {seq} already allocated");
+        }
+        let need = self.blocks_for(tokens.max(1));
+        if need > self.free.len() {
+            anyhow::bail!("out of KV blocks: need {need}, have {}", self.free.len());
+        }
+        let blocks = self.free.split_off(self.free.len() - need);
+        self.allocated.insert(seq, SeqAlloc { blocks, tokens: tokens.max(1) });
+        Ok(())
+    }
+
+    /// Record one generated token; allocates a new block on crossing a
+    /// block boundary. Returns true if a block was consumed.
+    pub fn append_token(&mut self, seq: SeqId) -> Result<bool> {
+        let alloc = self
+            .allocated
+            .get_mut(&seq)
+            .ok_or_else(|| anyhow::anyhow!("seq {seq} not allocated"))?;
+        alloc.tokens += 1;
+        let need = alloc.tokens.div_ceil(self.block_size);
+        if need > alloc.blocks.len() {
+            let block = self
+                .free
+                .pop()
+                .ok_or_else(|| anyhow::anyhow!("out of KV blocks appending to seq {seq}"))?;
+            alloc.blocks.push(block);
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    /// Release all blocks of a finished sequence.
+    pub fn release(&mut self, seq: SeqId) -> Result<()> {
+        let alloc = self
+            .allocated
+            .remove(&seq)
+            .ok_or_else(|| anyhow::anyhow!("seq {seq} not allocated"))?;
+        self.free.extend(alloc.blocks);
+        Ok(())
+    }
+
+    /// Tokens currently cached for a sequence.
+    pub fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+        self.allocated.get(&seq).map(|a| a.tokens)
+    }
+
+    /// Number of live sequences.
+    pub fn live_seqs(&self) -> usize {
+        self.allocated.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let mut m = KvBlockManager::new(10, 16);
+        assert!(m.can_allocate(128));
+        m.allocate(1, 128).unwrap(); // 8 blocks
+        assert_eq!(m.used_blocks(), 8);
+        assert!(!m.can_allocate(64));
+        assert!(m.can_allocate(32));
+        m.release(1).unwrap();
+        assert_eq!(m.free_blocks(), 10);
+        assert_eq!(m.live_seqs(), 0);
+    }
+
+    #[test]
+    fn append_crosses_block_boundary() {
+        let mut m = KvBlockManager::new(4, 4);
+        m.allocate(7, 4).unwrap(); // exactly 1 block
+        assert_eq!(m.used_blocks(), 1);
+        assert!(m.append_token(7).unwrap(), "5th token needs a new block");
+        assert!(!m.append_token(7).unwrap());
+        assert!(!m.append_token(7).unwrap());
+        assert!(!m.append_token(7).unwrap());
+        assert!(m.append_token(7).unwrap(), "9th token needs a third block");
+        assert_eq!(m.seq_tokens(7), Some(9));
+        assert_eq!(m.used_blocks(), 3);
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut m = KvBlockManager::new(2, 4);
+        m.allocate(1, 8).unwrap();
+        assert!(m.allocate(2, 1).is_err());
+        assert!(m.append_token(1).is_err(), "no block left for growth");
+        m.release(1).unwrap();
+        m.allocate(2, 1).unwrap();
+    }
+
+    #[test]
+    fn double_allocate_and_unknown_seq_rejected() {
+        let mut m = KvBlockManager::new(4, 4);
+        m.allocate(1, 4).unwrap();
+        assert!(m.allocate(1, 4).is_err());
+        assert!(m.release(99).is_err());
+        assert!(m.append_token(99).is_err());
+    }
+
+    #[test]
+    fn zero_token_prompt_takes_one_block() {
+        let mut m = KvBlockManager::new(4, 4);
+        m.allocate(1, 0).unwrap();
+        assert_eq!(m.used_blocks(), 1);
+        assert_eq!(m.seq_tokens(1), Some(1));
+    }
+}

@@ -1,0 +1,377 @@
+//! The distributed inference engine: TP/PP/hybrid worker groups driven by a
+//! coordinator, with every inter-worker byte flowing through the traced
+//! collective library.
+//!
+//! Two modes share the identical control path (DESIGN.md §5):
+//! - **numeric** — the tiny AOT model, real PJRT compute on every worker;
+//!   used by the end-to-end example and the cross-layout equivalence tests;
+//! - **structural** — paper-scale architectures with no-op compute; the
+//!   communication stream (the paper's object of study) is unchanged, which
+//!   is what the table/figure benches trace.
+
+pub mod backend;
+pub mod fused;
+pub mod kv;
+pub mod worker;
+
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::analysis::ParallelLayout;
+use crate::comm::{CommWorld, TraceSink};
+use crate::model::ModelArch;
+use crate::runtime::tensor::argmax;
+use crate::runtime::ArtifactStore;
+use crate::Result;
+
+use backend::{ComputeBackend, PjrtBackend, StructuralBackend};
+use worker::{StepOutput, WorkerCmd, WorkerCtx};
+
+/// Compute mode of the engine.
+#[derive(Debug, Clone)]
+pub enum EngineMode {
+    /// Execute the tiny AOT model via PJRT on every worker.
+    Numeric(ArtifactStore),
+    /// No-op compute at paper scale; collective stream only.
+    Structural,
+}
+
+/// Engine construction parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub arch: ModelArch,
+    pub layout: ParallelLayout,
+    pub mode: EngineMode,
+    /// Element width recorded in traces (2 = BF16 like the paper's runs;
+    /// numeric mode serves f32 and records 4).
+    pub trace_dtype_bytes: usize,
+}
+
+impl EngineConfig {
+    /// Structural engine at paper scale (BF16 trace accounting).
+    pub fn structural(arch: ModelArch, layout: ParallelLayout) -> Self {
+        Self { arch, layout, mode: EngineMode::Structural, trace_dtype_bytes: 2 }
+    }
+
+    /// Numeric engine over built artifacts (f32 tiny model).
+    pub fn numeric(store: ArtifactStore, layout: ParallelLayout) -> Self {
+        Self {
+            arch: ModelArch::tiny(),
+            layout,
+            mode: EngineMode::Numeric(store),
+            trace_dtype_bytes: 4,
+        }
+    }
+}
+
+/// Result of one generation request.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    /// Generated token ids (length = requested decode length).
+    pub tokens: Vec<i32>,
+    /// Time to first token (prefill + first sample).
+    pub ttft: Duration,
+    /// Mean time per output token after the first.
+    pub tpot: Duration,
+    /// Total request latency.
+    pub e2e: Duration,
+    /// Per-decode-step latencies.
+    pub step_latencies: Vec<Duration>,
+}
+
+/// The engine: owns worker threads for the lifetime of the object.
+pub struct Engine {
+    cfg: EngineConfig,
+    cmd_txs: Vec<Sender<WorkerCmd>>,
+    out_rx: Receiver<Result<StepOutput>>,
+    sink: std::sync::Arc<TraceSink>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Build worker topology and spawn worker threads.
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let layout = cfg.layout;
+        let (t, p) = (layout.tp, layout.pp);
+        if !cfg.arch.supports_tp(t) {
+            anyhow::bail!("{} does not divide across tp={t}", cfg.arch.name);
+        }
+        if !cfg.arch.supports_pp(p) {
+            anyhow::bail!("{} does not divide across pp={p}", cfg.arch.name);
+        }
+        if let EngineMode::Numeric(store) = &cfg.mode {
+            if !store.supports_tp(t) {
+                anyhow::bail!("artifacts not built for tp={t}");
+            }
+        }
+
+        let world = layout.world_size();
+        let sink = TraceSink::new();
+        let comm = CommWorld::new(world, cfg.trace_dtype_bytes, sink.clone());
+        let (out_tx, out_rx) = channel();
+
+        // Stage layer ranges.
+        let mut ranges = Vec::with_capacity(p);
+        let mut start = 0usize;
+        for s in 0..p {
+            let n = cfg.arch.stage_layers(p, s);
+            ranges.push(start..start + n);
+            start += n;
+        }
+
+        // TP groups per stage (global rank = s*t + tp_rank).
+        let mut stage_groups: Vec<Vec<crate::comm::GroupHandle>> = Vec::with_capacity(p);
+        for s in 0..p {
+            let ranks: Vec<usize> = (0..t).map(|r| s * t + r).collect();
+            stage_groups.push(comm.create_group(&ranks));
+        }
+
+        let mut cmd_txs = Vec::with_capacity(world);
+        let mut joins = Vec::with_capacity(world);
+        for s in 0..p {
+            for r in 0..t {
+                let global_rank = s * t + r;
+                let (cmd_tx, cmd_rx) = channel();
+                cmd_txs.push(cmd_tx);
+                let prev = (s > 0).then(|| comm.receiver((s - 1) * t + r, global_rank));
+                let next = (s + 1 < p).then(|| comm.sender(global_rank, (s + 1) * t + r));
+                let is_driver = s == p - 1 && r == 0;
+                let ctx = WorkerCtx {
+                    global_rank,
+                    pp_stage: s,
+                    tp_rank: r,
+                    tp: t,
+                    pp: p,
+                    hidden: cfg.arch.hidden,
+                    layer_range: ranges[s].clone(),
+                    tp_group: stage_groups[s][r].clone(),
+                    prev,
+                    next,
+                    cmd_rx,
+                    out_tx: is_driver.then(|| out_tx.clone()),
+                };
+                let mode = cfg.mode.clone();
+                let arch = cfg.arch.clone();
+                let join = std::thread::Builder::new()
+                    .name(format!("worker-{global_rank}"))
+                    .spawn(move || {
+                        let backend: Box<dyn ComputeBackend> = match &mode {
+                            EngineMode::Structural => {
+                                Box::new(StructuralBackend::new(&arch, t))
+                            }
+                            EngineMode::Numeric(store) => {
+                                match PjrtBackend::new_on_thread(store, t, r) {
+                                    Ok(b) => Box::new(b),
+                                    Err(e) => panic!("worker {global_rank} backend: {e:?}"),
+                                }
+                            }
+                        };
+                        ctx.run(backend);
+                    })
+                    .map_err(|e| anyhow::anyhow!("spawn: {e}"))?;
+                joins.push(join);
+            }
+        }
+
+        Ok(Self { cfg, cmd_txs, out_rx, sink, joins })
+    }
+
+    /// The shared communication trace.
+    pub fn trace(&self) -> std::sync::Arc<TraceSink> {
+        self.sink.clone()
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    fn broadcast(&self, cmd: WorkerCmd) -> Result<()> {
+        for tx in &self.cmd_txs {
+            tx.send(cmd.clone()).map_err(|_| anyhow::anyhow!("worker hung up"))?;
+        }
+        Ok(())
+    }
+
+    /// Maximum time to wait for a step result before declaring the worker
+    /// group wedged (a worker panic inside a collective would otherwise
+    /// deadlock its peers forever).
+    const STEP_TIMEOUT: Duration = Duration::from_secs(120);
+
+    fn recv_logits(&self) -> Result<Vec<f32>> {
+        match self.out_rx.recv_timeout(Self::STEP_TIMEOUT) {
+            Ok(Ok(out)) => Ok(out.logits),
+            Ok(Err(e)) => Err(e),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Err(anyhow::anyhow!(
+                "no step result within {:?} — a worker likely failed mid-collective",
+                Self::STEP_TIMEOUT
+            )),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow::anyhow!("driver worker hung up"))
+            }
+        }
+    }
+
+    /// Run one throwaway request to trigger lazy first-execution setup in
+    /// every worker's executables (PJRT finalizes on first run), excluded
+    /// from the trace. Serving paths call this once so the first real
+    /// request's TTFT is not inflated — the same warmup vLLM performs.
+    pub fn warmup(&mut self) -> Result<()> {
+        let prompt_len = match &self.cfg.mode {
+            EngineMode::Numeric(store) => store.meta.prefill_len,
+            EngineMode::Structural => 8,
+        };
+        self.sink.set_enabled(false);
+        let result = self.generate(&vec![0i32; prompt_len], 2);
+        self.sink.set_enabled(true);
+        self.sink.clear();
+        result.map(|_| ())
+    }
+
+    /// Serve one request: prefill on `prompt`, then greedy-decode
+    /// `decode_len` tokens total (first token comes out of prefill —
+    /// paper's S_d counting).
+    pub fn generate(&mut self, prompt: &[i32], decode_len: usize) -> Result<GenerationResult> {
+        assert!(decode_len >= 1);
+        if let EngineMode::Numeric(store) = &self.cfg.mode {
+            if prompt.len() != store.meta.prefill_len {
+                anyhow::bail!(
+                    "numeric mode serves fixed prompts of {} tokens (got {})",
+                    store.meta.prefill_len,
+                    prompt.len()
+                );
+            }
+            if prompt.len() + decode_len > store.meta.max_seq {
+                anyhow::bail!(
+                    "prompt {} + decode {} exceeds max_seq {}",
+                    prompt.len(),
+                    decode_len,
+                    store.meta.max_seq
+                );
+            }
+        }
+
+        self.broadcast(WorkerCmd::Reset)?;
+        let start = Instant::now();
+        self.broadcast(WorkerCmd::Prefill { tokens: prompt.to_vec() })?;
+        let logits = self.recv_logits()?;
+        let mut tokens = vec![argmax(&logits) as i32];
+        let ttft = start.elapsed();
+
+        let mut step_latencies = Vec::with_capacity(decode_len.saturating_sub(1));
+        for i in 1..decode_len {
+            let step_start = Instant::now();
+            let pos = prompt.len() + i - 1;
+            self.broadcast(WorkerCmd::Decode { token: tokens[i - 1], pos })?;
+            let logits = self.recv_logits()?;
+            tokens.push(argmax(&logits) as i32);
+            step_latencies.push(step_start.elapsed());
+        }
+        let e2e = start.elapsed();
+        let tpot = if step_latencies.is_empty() {
+            Duration::ZERO
+        } else {
+            step_latencies.iter().sum::<Duration>() / step_latencies.len() as u32
+        };
+        Ok(GenerationResult { tokens, ttft, tpot, e2e, step_latencies })
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.broadcast(WorkerCmd::Shutdown);
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{InferenceShape, OpCountModel};
+    use crate::comm::{CollectiveKind, Stage};
+
+    fn structural_engine(arch: ModelArch, tp: usize, pp: usize) -> Engine {
+        Engine::new(EngineConfig::structural(arch, ParallelLayout::new(tp, pp))).unwrap()
+    }
+
+    #[test]
+    fn structural_tp2_trace_matches_analytical_counts() {
+        let arch = ModelArch::tiny();
+        let mut e = structural_engine(arch.clone(), 2, 1);
+        let prompt = vec![0i32; 16];
+        let r = e.generate(&prompt, 8).unwrap();
+        assert_eq!(r.tokens.len(), 8);
+
+        let summary = e.trace().summary();
+        let model = OpCountModel::new(
+            arch,
+            ParallelLayout::new(2, 1),
+            InferenceShape::new(16, 8, 2),
+        );
+        for stage in [Stage::Prefill, Stage::Decode] {
+            let predicted = model.predict_paper_view(stage);
+            for op in [CollectiveKind::AllReduce, CollectiveKind::Gather] {
+                assert_eq!(
+                    summary.paper_view(op, stage).count,
+                    predicted.count(op),
+                    "{op:?} {stage:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn structural_pp_trace_matches_table5_pattern() {
+        let arch = ModelArch::tiny(); // 4 layers
+        let mut e = structural_engine(arch.clone(), 1, 2);
+        let r = e.generate(&vec![0i32; 16], 8).unwrap();
+        assert_eq!(r.tokens.len(), 8);
+        let s = e.trace().summary();
+        // (p-1) * 2 tensors per step; prefill 1 step, decode 7 steps.
+        assert_eq!(s.global_count(CollectiveKind::Send, Stage::Prefill), 2);
+        assert_eq!(s.global_count(CollectiveKind::Recv, Stage::Prefill), 2);
+        assert_eq!(s.global_count(CollectiveKind::Send, Stage::Decode), 14);
+        assert_eq!(s.global_count(CollectiveKind::Recv, Stage::Decode), 14);
+        // No collectives at t=1.
+        assert_eq!(s.global_count(CollectiveKind::AllReduce, Stage::Decode), 0);
+    }
+
+    #[test]
+    fn structural_hybrid_trace_matches_table6_pattern() {
+        let arch = ModelArch::tiny(); // L=4 -> per stage 2L/p = 4, +1 embed
+        let mut e = structural_engine(arch.clone(), 2, 2);
+        e.generate(&vec![0i32; 16], 8).unwrap();
+        let s = e.trace().summary();
+        // Stage-0 ranks: 2*2+1 = 5 AllReduce prefill.
+        assert_eq!(s.paper_view(CollectiveKind::AllReduce, Stage::Prefill).count, 5);
+        assert_eq!(s.paper_view(CollectiveKind::AllGather, Stage::Prefill).count, 2);
+        assert_eq!(s.paper_view(CollectiveKind::Gather, Stage::Prefill).count, 1);
+        // Send shape is the TP-local slice.
+        let shapes = s.shapes(CollectiveKind::Send, Stage::Prefill);
+        assert_eq!(shapes, vec![vec![16, arch.hidden / 2]]);
+        // Decode: x7 steps.
+        assert_eq!(s.paper_view(CollectiveKind::AllReduce, Stage::Decode).count, 35);
+        assert_eq!(s.paper_view(CollectiveKind::AllGather, Stage::Decode).count, 14);
+    }
+
+    #[test]
+    fn engine_rejects_unsupported_layouts() {
+        let arch = ModelArch::tiny();
+        assert!(Engine::new(EngineConfig::structural(arch.clone(), ParallelLayout::new(3, 1)))
+            .is_err());
+        assert!(Engine::new(EngineConfig::structural(arch, ParallelLayout::new(1, 8))).is_err());
+    }
+
+    #[test]
+    fn consecutive_requests_are_isolated() {
+        let mut e = structural_engine(ModelArch::tiny(), 2, 1);
+        e.generate(&vec![0i32; 8], 4).unwrap();
+        let first = e.trace().len();
+        e.trace().clear();
+        e.generate(&vec![0i32; 8], 4).unwrap();
+        assert_eq!(e.trace().len(), first, "same request -> same trace size");
+    }
+}

@@ -1,0 +1,184 @@
+//! Worker thread: one simulated GPU.
+//!
+//! Each worker owns a compute backend (its TP shard / PP stage) and blocks
+//! on a command channel; the coordinator drives prefill/decode steps. All
+//! inter-worker data flows through the traced collective library:
+//!
+//! ```text
+//!   stage entry : Recv ×2 [S, h/t]  →  AllGather ×2 → [S, h]      (t>1, s>0)
+//!   per layer   : attn partial → AllReduce [S,h] → +residual
+//!                 mlp  partial → AllReduce [S,h] → deferred add
+//!   stage exit  : Send ×2 [S, h/t]                                 (s<p−1)
+//!   last stage  : logits slice → Gather [v/t] → coordinator samples
+//! ```
+//!
+//! The residual of the *last* layer of a stage is deliberately left
+//! un-added and shipped as the second boundary tensor ("deferred
+//! residual"), matching vLLM's IntermediateTensors {hidden_states,
+//! residual} — this is why the paper observes exactly two p2p tensors per
+//! boundary per step (Table V).
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::comm::{GroupHandle, P2pEndpoint, Stage};
+use crate::runtime::tensor::HostTensor;
+use crate::Result;
+
+use super::backend::ComputeBackend;
+
+/// Commands from the coordinator (broadcast to every worker).
+#[derive(Debug, Clone)]
+pub enum WorkerCmd {
+    /// Run prefill over the prompt; workers then hold KV state.
+    Prefill { tokens: Vec<i32> },
+    /// Run one decode step for `token` at cache position `pos`.
+    Decode { token: i32, pos: usize },
+    /// Clear KV state for the next request.
+    Reset,
+    /// Exit the worker loop.
+    Shutdown,
+}
+
+/// Sent to the coordinator by the driver (last stage, TP rank 0).
+#[derive(Debug)]
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+}
+
+/// Everything a worker thread needs; `backend` is constructed inside the
+/// thread for PJRT (non-`Send` internals).
+pub struct WorkerCtx {
+    pub global_rank: usize,
+    pub pp_stage: usize,
+    pub tp_rank: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub hidden: usize,
+    /// Global layer indices owned by this stage.
+    pub layer_range: std::ops::Range<usize>,
+    pub tp_group: GroupHandle,
+    pub prev: Option<P2pEndpoint>,
+    pub next: Option<P2pEndpoint>,
+    pub cmd_rx: Receiver<WorkerCmd>,
+    /// Present only on the driver (last stage, tp rank 0).
+    pub out_tx: Option<Sender<Result<StepOutput>>>,
+}
+
+impl WorkerCtx {
+    pub fn is_first_stage(&self) -> bool {
+        self.pp_stage == 0
+    }
+
+    pub fn is_last_stage(&self) -> bool {
+        self.pp_stage == self.pp - 1
+    }
+
+    /// Worker main loop. Runs until `Shutdown` or channel disconnect.
+    pub fn run(mut self, mut backend: Box<dyn ComputeBackend>) {
+        loop {
+            let cmd = match self.cmd_rx.recv() {
+                Ok(c) => c,
+                Err(_) => return, // coordinator dropped
+            };
+            let result = match cmd {
+                WorkerCmd::Prefill { tokens } => {
+                    let stage = Stage::Prefill;
+                    self.step(&mut *backend, &tokens, 0, stage)
+                }
+                WorkerCmd::Decode { token, pos } => {
+                    self.step(&mut *backend, &[token], pos, Stage::Decode)
+                }
+                WorkerCmd::Reset => backend.reset().map(|_| ()),
+                WorkerCmd::Shutdown => return,
+            };
+            if let Err(e) = result {
+                // Surface the failure to the coordinator if we're the
+                // driver; otherwise panic the worker (tests will see the
+                // disconnect).
+                if let Some(tx) = &self.out_tx {
+                    let _ = tx.send(Err(e));
+                } else {
+                    panic!("worker {} failed: {e:?}", self.global_rank);
+                }
+            }
+        }
+    }
+
+    /// One forward step (prefill: window = prompt len; decode: window = 1).
+    fn step(
+        &mut self,
+        backend: &mut dyn ComputeBackend,
+        tokens: &[i32],
+        pos: usize,
+        stage: Stage,
+    ) -> Result<()> {
+        let window = tokens.len();
+        let h = self.hidden;
+        let full_shape = [window, h];
+        let slice_shape = [window, h / self.tp];
+
+        // --- stage entry -------------------------------------------------
+        let (mut x, mut pending): (HostTensor, Option<HostTensor>) = if self.is_first_stage() {
+            let mut emb = backend.embed(tokens)?;
+            self.tp_group.all_reduce(&mut emb.data, &full_shape, stage);
+            (emb, None)
+        } else {
+            let prev = self.prev.as_ref().expect("non-first stage has prev link");
+            let x_slice = prev.recv(&slice_shape, stage);
+            let r_slice = prev.recv(&slice_shape, stage);
+            let x = self.regather(x_slice, window, stage);
+            let r = self.regather(r_slice, window, stage);
+            (x, Some(r))
+        };
+
+        // --- local layers --------------------------------------------------
+        for layer in self.layer_range.clone() {
+            if let Some(p) = pending.take() {
+                x.add_assign(&p); // residual deferred across the boundary/layer
+            }
+            let mut pa = backend.attn(layer, &x, pos)?;
+            self.tp_group.all_reduce(&mut pa.data, &full_shape, stage);
+            x.add_assign(&pa);
+            let mut pm = backend.mlp(layer, &x)?;
+            self.tp_group.all_reduce(&mut pm.data, &full_shape, stage);
+            pending = Some(pm);
+        }
+
+        // --- stage exit ------------------------------------------------------
+        if self.is_last_stage() {
+            if let Some(p) = pending.take() {
+                x.add_assign(&p);
+            }
+            let logits_slice = backend.logits(&x)?;
+            let v_local = logits_slice.elems();
+            let gathered =
+                self.tp_group
+                    .gather(&logits_slice.data, &[v_local], 0, stage);
+            if let Some(full) = gathered {
+                if let Some(tx) = &self.out_tx {
+                    tx.send(Ok(StepOutput { logits: full }))
+                        .map_err(|_| anyhow::anyhow!("coordinator hung up"))?;
+                }
+            }
+        } else {
+            let next = self.next.as_ref().expect("non-last stage has next link");
+            let pending = pending.take().expect("stage has >= 1 layer");
+            let xs = x.column_slice(self.tp_rank, self.tp);
+            let rs = pending.column_slice(self.tp_rank, self.tp);
+            next.send(xs.data, &slice_shape, stage);
+            next.send(rs.data, &slice_shape, stage);
+        }
+        Ok(())
+    }
+
+    /// AllGather a received `[S, h/t]` slice back to `[S, h]` (hybrid stage
+    /// entry); identity for t=1.
+    fn regather(&self, slice: Vec<f32>, window: usize, stage: Stage) -> HostTensor {
+        let h = self.hidden;
+        if self.tp == 1 {
+            return HostTensor::from_vec(&[window, h], slice);
+        }
+        let full = self.tp_group.all_gather(&slice, &[window, h], stage);
+        HostTensor::from_column_chunks(&full, window, h, self.tp)
+    }
+}

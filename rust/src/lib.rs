@@ -1,0 +1,43 @@
+//! # commsim — Communication Patterns in Distributed LLM Inference
+//!
+//! Full-system reproduction of *"Characterizing Communication Patterns in
+//! Distributed Large Language Model Inference"* (Xu et al., CS.DC 2025).
+//!
+//! The crate is a vLLM-like serving stack whose every inter-worker
+//! communication is a first-class, traced operation:
+//!
+//! - [`model`] — transformer architecture registry (paper models + the tiny
+//!   real model served end-to-end).
+//! - [`analysis`] — the paper's analytical models (Eq. 1–7): communication
+//!   volume, operation counts and message shapes for TP / PP / hybrid.
+//! - [`comm`] — an in-process NCCL-like collective library (AllReduce,
+//!   AllGather, Gather, Send/Recv) with built-in tracing.
+//! - [`cluster`] — node/GPU topology and the α–β link model (NVLink vs
+//!   InfiniBand NDR400).
+//! - [`perfmodel`] — H100 roofline compute model + SLO simulator that
+//!   regenerates the paper's latency figures (TTFT / TPOT / E2E).
+//! - [`runtime`] — PJRT artifact loading and execution (`xla` crate); the
+//!   AOT bridge from the JAX/Pallas build path.
+//! - [`engine`] — the distributed inference engine: TP/PP/hybrid worker
+//!   groups, paged KV cache, prefill/decode loop.
+//! - [`server`] — request router, continuous-batching scheduler, SLO
+//!   metrics.
+//! - [`report`] — renders paper tables/figures side-by-side with our
+//!   measured + analytical values.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! serving path is pure Rust.
+
+pub mod analysis;
+pub mod cluster;
+pub mod comm;
+pub mod engine;
+pub mod model;
+pub mod perfmodel;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod testutil;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,230 @@
+//! `commsim` CLI — the leader entrypoint.
+//!
+//! Subcommands map onto the paper's workflow:
+//! - `analyze` — analytical communication volume + op predictions (Eq. 1–7)
+//! - `trace`   — run the structural engine and validate trace vs analytics
+//! - `slo`     — simulate TTFT/TPOT/E2E for a layout (Figs. 8–10)
+//! - `serve`   — serve the tiny real model end-to-end via PJRT (numeric)
+//! - `tables`  — print all paper-table reproductions at once
+//!
+//! Flag parsing is hand-rolled (`--key value`); the vendored build
+//! environment provides no CLI crate (DESIGN.md §5).
+
+use std::collections::HashMap;
+
+use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
+use commsim::cluster::{Placement, Topology};
+use commsim::engine::{Engine, EngineConfig};
+use commsim::model::ModelArch;
+use commsim::perfmodel::SloSimulator;
+use commsim::report;
+use commsim::runtime::ArtifactStore;
+use commsim::server::{Request, SchedulerConfig, Server};
+
+const USAGE: &str = "\
+commsim — communication patterns in distributed LLM inference (paper reproduction)
+
+USAGE: commsim <COMMAND> [--flag value]...
+
+COMMANDS:
+  analyze   Analytical communication volume and op counts (Eq. 1-7)
+            --model 3b|8b|13b|tiny  --tp N  --pp N  --sp N  --sd N
+  trace     Run the structural engine; compare trace vs analytical model
+            --model ...  --tp N  --pp N  --sp N  --sd N
+  slo       Simulate TTFT/TPOT/E2E on the paper's testbed model
+            --model ...  --tp N  --pp N  --sp N  --sd N  --gpus-per-node N
+  serve     Serve the tiny real model via PJRT (requires `make artifacts`)
+            --tp N  --pp N  --requests N  --decode-len N  --artifacts DIR
+  tables    Print all paper-table reproductions (Tables III-VI)
+";
+
+/// Minimal `--key value` flag parser.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Self> {
+        let mut map = HashMap::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got '{a}'"))?;
+            let val = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+            map.insert(key.replace('-', "_"), val.clone());
+        }
+        Ok(Self(map))
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn num(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.0.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn arch(name: &str) -> anyhow::Result<ModelArch> {
+    ModelArch::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (3b|8b|13b|tiny)"))
+}
+
+fn cmd_analyze(f: &Flags) -> anyhow::Result<()> {
+    let arch = arch(&f.str("model", "8b"))?;
+    let layout = ParallelLayout::new(f.num("tp", 2)?, f.num("pp", 1)?);
+    let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 128)?);
+    let shape = InferenceShape::new(sp, sd, 2);
+    let v = VolumeModel::new(arch.clone()).volume(layout, shape);
+    println!("model={} layout={} Sp={sp} Sd={sd} (BF16)", arch.name, layout.label());
+    println!("{}", report::volume_line(&arch, layout, shape));
+    let ops = OpCountModel::new(arch, layout, shape);
+    for stage in [commsim::comm::Stage::Prefill, commsim::comm::Stage::Decode] {
+        println!("\n{} ops (paper-table view):", stage.label());
+        for o in ops.predict_paper_view(stage).ops {
+            println!(
+                "  {:<10} count={:<6} shape={}",
+                o.op.label(),
+                o.count,
+                report::fmt_shape(&o.shape)
+            );
+        }
+    }
+    println!("\ntotal corrected volume: {}", report::fmt_bytes(v.total()));
+    Ok(())
+}
+
+fn cmd_trace(f: &Flags) -> anyhow::Result<()> {
+    let arch = arch(&f.str("model", "8b"))?;
+    let layout = ParallelLayout::new(f.num("tp", 2)?, f.num("pp", 1)?);
+    let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 128)?);
+    let shape = InferenceShape::new(sp, sd, 2);
+    let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
+    let r = engine.generate(&vec![0i32; sp], sd)?;
+    eprintln!("generated {} tokens (structural)", r.tokens.len());
+    let summary = engine.trace().summary();
+    print!(
+        "{}",
+        report::comparison_table(
+            &format!("{} {} Sp={sp} Sd={sd}", arch.name, layout.label()),
+            &arch,
+            layout,
+            shape,
+            &summary,
+        )
+    );
+    Ok(())
+}
+
+fn cmd_slo(f: &Flags) -> anyhow::Result<()> {
+    let arch = arch(&f.str("model", "3b"))?;
+    let layout = ParallelLayout::new(f.num("tp", 2)?, f.num("pp", 1)?);
+    let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 128)?);
+    let gpn = f.num("gpus_per_node", 4)?;
+    let nodes = layout.world_size().div_ceil(gpn).max(1);
+    let placement = Placement::new(Topology::new(nodes, gpn), layout)?;
+    let sim = SloSimulator::new(arch.clone(), placement);
+    let shape = InferenceShape::new(sp, sd, 2);
+    let r = sim.simulate(shape);
+    println!("model={} layout={} nodes={nodes}", arch.name, layout.label());
+    println!("TTFT  {:>10.2} ms", r.ttft_s * 1e3);
+    println!("TPOT  {:>10.2} ms", r.tpot_s * 1e3);
+    println!("E2E   {:>10.2} s", r.e2e_s);
+    println!("comm fraction {:>6.1}%", r.comm_fraction(shape) * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
+    let store = ArtifactStore::open(f.str("artifacts", "artifacts"))?;
+    let sp = store.meta.prefill_len;
+    let vocab = store.meta.vocab as i32;
+    let layout = ParallelLayout::new(f.num("tp", 2)?, f.num("pp", 1)?);
+    let requests = f.num("requests", 4)?;
+    let decode_len = f.num("decode_len", 16)?;
+    let engine = Engine::new(EngineConfig::numeric(store, layout))?;
+    let mut server = Server::new(engine, SchedulerConfig::default());
+    let reqs: Vec<Request> = (0..requests as u64)
+        .map(|id| Request {
+            id,
+            prompt: (0..sp as i32).map(|i| (id as i32 * 31 + i) % vocab).collect(),
+            decode_len,
+        })
+        .collect();
+    let summary = server.serve_batch(reqs)?;
+    println!("served {} requests, {} tokens", summary.requests, summary.total_tokens);
+    println!(
+        "throughput {:.1} tok/s, {:.2} req/s",
+        summary.tokens_per_s, summary.requests_per_s
+    );
+    println!(
+        "TTFT p50 {:.1} ms, TPOT p50 {:.2} ms, E2E mean {:.2} s",
+        summary.ttft_p50_s * 1e3,
+        summary.tpot_p50_s * 1e3,
+        summary.e2e_mean_s
+    );
+    Ok(())
+}
+
+fn cmd_tables() -> anyhow::Result<()> {
+    let shape = InferenceShape::new(128, 128, 2);
+    let cases: Vec<(&str, ModelArch, Vec<ParallelLayout>)> = vec![
+        (
+            "Table III (TP)",
+            ModelArch::llama31_8b(),
+            vec![ParallelLayout::new(2, 1), ParallelLayout::new(4, 1)],
+        ),
+        (
+            "Table V (PP)",
+            ModelArch::llama31_8b(),
+            vec![ParallelLayout::new(1, 2), ParallelLayout::new(1, 4)],
+        ),
+        ("Table VI (hybrid)", ModelArch::llama31_8b(), vec![ParallelLayout::new(2, 2)]),
+    ];
+    for (label, arch, layouts) in cases {
+        for layout in layouts {
+            let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
+            engine.generate(&vec![0i32; 128], 128)?;
+            let summary = engine.trace().summary();
+            print!(
+                "{}",
+                report::comparison_table(
+                    &format!("{label} {}", layout.label()),
+                    &arch,
+                    layout,
+                    shape,
+                    &summary,
+                )
+            );
+            println!();
+        }
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "analyze" => cmd_analyze(&flags),
+        "trace" => cmd_trace(&flags),
+        "slo" => cmd_slo(&flags),
+        "serve" => cmd_serve(&flags),
+        "tables" => cmd_tables(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

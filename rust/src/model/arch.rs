@@ -1,0 +1,229 @@
+//! Architecture registry (Table I variables: h, L, a, d_head, v, …).
+//!
+//! The paper evaluates three dense Llama-family models (§V); their
+//! dimensions determine every communication count and message size, so the
+//! registry is the ground truth the analytical models and the structural
+//! engine share. Byte-exact cross-checks against the paper's Table IV live
+//! in the unit tests below.
+
+
+/// BF16 — the serving dtype used in all of the paper's experiments.
+pub const DTYPE_BYTES_BF16: usize = 2;
+/// F32 — the dtype of the tiny numeric-mode model (deterministic CPU PJRT).
+pub const DTYPE_BYTES_F32: usize = 4;
+
+/// Dense transformer architecture parameters (paper Table I).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelArch {
+    /// Display name, e.g. "Llama-3.1-8B".
+    pub name: String,
+    /// Hidden dimension `h`.
+    pub hidden: usize,
+    /// Number of transformer layers `L`.
+    pub layers: usize,
+    /// Attention heads `a`.
+    pub heads: usize,
+    /// KV heads (GQA); equals `heads` for MHA. Does not change collective
+    /// counts, only PP KV-transfer sizes in disaggregated setups.
+    pub kv_heads: usize,
+    /// Head dimension `d_head`.
+    pub head_dim: usize,
+    /// MLP intermediate (expanded) dimension.
+    pub intermediate: usize,
+    /// Vocabulary size `v`.
+    pub vocab: usize,
+}
+
+impl ModelArch {
+    /// Llama-3.2-3B (paper §V: L=28, h=3072, v=128256).
+    pub fn llama32_3b() -> Self {
+        Self {
+            name: "Llama-3.2-3B".into(),
+            hidden: 3072,
+            layers: 28,
+            heads: 24,
+            kv_heads: 8,
+            head_dim: 128,
+            intermediate: 8192,
+            vocab: 128_256,
+        }
+    }
+
+    /// Llama-3.1-8B (paper §V: L=32, h=4096, v=128256).
+    pub fn llama31_8b() -> Self {
+        Self {
+            name: "Llama-3.1-8B".into(),
+            hidden: 4096,
+            layers: 32,
+            heads: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            intermediate: 14336,
+            vocab: 128_256,
+        }
+    }
+
+    /// Llama-2-13B (paper §V: L=40, h=5120, v=32000).
+    pub fn llama2_13b() -> Self {
+        Self {
+            name: "Llama-2-13B".into(),
+            hidden: 5120,
+            layers: 40,
+            heads: 40,
+            kv_heads: 40,
+            head_dim: 128,
+            intermediate: 13824,
+            vocab: 32_000,
+        }
+    }
+
+    /// The tiny real model served numerically (mirrors python TINY config;
+    /// dims must match artifacts/meta.json).
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny-llama".into(),
+            hidden: 256,
+            layers: 4,
+            heads: 8,
+            kv_heads: 8,
+            head_dim: 32,
+            intermediate: 768,
+            vocab: 512,
+        }
+    }
+
+    /// Look up a registry model by (case-insensitive) short name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "llama-3.2-3b" | "3b" => Some(Self::llama32_3b()),
+            "llama-3.1-8b" | "8b" => Some(Self::llama31_8b()),
+            "llama-2-13b" | "13b" => Some(Self::llama2_13b()),
+            "tiny" | "tiny-llama" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// The three paper evaluation models, in paper order (3B, 8B, 13B).
+    pub fn paper_models() -> Vec<Self> {
+        vec![Self::llama32_3b(), Self::llama31_8b(), Self::llama2_13b()]
+    }
+
+    /// Approximate parameter count (dense Llama layout, untied embeddings).
+    pub fn param_count(&self) -> usize {
+        let h = self.hidden;
+        let qd = self.heads * self.head_dim;
+        let kvd = self.kv_heads * self.head_dim;
+        let attn = h * qd + 2 * h * kvd + qd * h;
+        let mlp = 3 * h * self.intermediate;
+        let norms = 2 * h;
+        self.layers * (attn + mlp + norms) + 2 * self.vocab * h + h
+    }
+
+    /// Per-token KV cache bytes across all layers.
+    pub fn kv_bytes_per_token(&self, dtype_bytes: usize) -> usize {
+        2 * self.layers * self.kv_heads * self.head_dim * dtype_bytes
+    }
+
+    /// True iff the architecture divides evenly across `t` TP ranks.
+    pub fn supports_tp(&self, t: usize) -> bool {
+        t > 0
+            && self.heads % t == 0
+            && self.kv_heads % t == 0
+            && self.intermediate % t == 0
+            && self.vocab % t == 0
+    }
+
+    /// True iff layers split into `p` non-empty pipeline stages.
+    pub fn supports_pp(&self, p: usize) -> bool {
+        p > 0 && p <= self.layers
+    }
+
+    /// Layers owned by pipeline stage `s` of `p` (vLLM-style near-even
+    /// split; earlier stages take the remainder).
+    pub fn stage_layers(&self, p: usize, s: usize) -> usize {
+        assert!(s < p, "stage {s} out of range for p={p}");
+        let base = self.layers / p;
+        let rem = self.layers % p;
+        base + usize::from(s < rem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_message_sizes_match_paper() {
+        // Paper Table IV: AllReduce prefill message bytes at Sp=128, BF16.
+        let cases = [
+            (ModelArch::llama32_3b(), 786_432usize, 6_144usize, 57usize, 7_239usize),
+            (ModelArch::llama31_8b(), 1_048_576, 8_192, 65, 8_255),
+            (ModelArch::llama2_13b(), 1_310_720, 10_240, 81, 10_287),
+        ];
+        for (m, prefill_bytes, decode_bytes, prefill_count, decode_count) in cases {
+            assert_eq!(128 * m.hidden * DTYPE_BYTES_BF16, prefill_bytes, "{}", m.name);
+            assert_eq!(m.hidden * DTYPE_BYTES_BF16, decode_bytes, "{}", m.name);
+            assert_eq!(2 * m.layers + 1, prefill_count, "{}", m.name);
+            assert_eq!((2 * m.layers + 1) * 127, decode_count, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn table3_gather_slice_matches_paper() {
+        // Paper Table III: Gather shape = v/t -> 64128 (TP=2), 32064 (TP=4).
+        let m = ModelArch::llama31_8b();
+        assert_eq!(m.vocab / 2, 64_128);
+        assert_eq!(m.vocab / 4, 32_064);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(ModelArch::by_name("8b").unwrap().layers, 32);
+        assert_eq!(ModelArch::by_name("LLAMA-2-13B").unwrap().hidden, 5120);
+        assert!(ModelArch::by_name("70b").is_none());
+        assert_eq!(ModelArch::paper_models().len(), 3);
+    }
+
+    #[test]
+    fn param_counts_are_plausible() {
+        let b = 1_000_000_000f64;
+        let p3 = ModelArch::llama32_3b().param_count() as f64 / b;
+        let p8 = ModelArch::llama31_8b().param_count() as f64 / b;
+        let p13 = ModelArch::llama2_13b().param_count() as f64 / b;
+        assert!((2.0..4.5).contains(&p3), "3B -> {p3}");
+        assert!((6.5..9.5).contains(&p8), "8B -> {p8}");
+        assert!((11.0..14.5).contains(&p13), "13B -> {p13}");
+    }
+
+    #[test]
+    fn tp_divisibility() {
+        let m = ModelArch::llama31_8b();
+        for t in [1, 2, 4, 8] {
+            assert!(m.supports_tp(t), "tp={t}");
+        }
+        assert!(!m.supports_tp(3));
+        assert!(!m.supports_tp(0));
+        let tiny = ModelArch::tiny();
+        assert!(tiny.supports_tp(4));
+        assert!(!tiny.supports_tp(16)); // vocab 512 / 16 = 32 ok, heads 8/16 no
+    }
+
+    #[test]
+    fn stage_layers_partition_fully() {
+        let m = ModelArch::llama32_3b(); // 28 layers
+        for p in [1, 2, 4, 8] {
+            let total: usize = (0..p).map(|s| m.stage_layers(p, s)).sum();
+            assert_eq!(total, m.layers, "p={p}");
+            // near-even: max-min <= 1
+            let sizes: Vec<_> = (0..p).map(|s| m.stage_layers(p, s)).collect();
+            assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let m = ModelArch::llama31_8b();
+        // 2 * 32 layers * 8 kv heads * 128 dim * 2 bytes = 131072
+        assert_eq!(m.kv_bytes_per_token(DTYPE_BYTES_BF16), 131_072);
+    }
+}

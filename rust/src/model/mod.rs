@@ -1,0 +1,6 @@
+//! Transformer model descriptions: the paper's evaluation architectures and
+//! the tiny real model the engine serves numerically.
+
+pub mod arch;
+
+pub use arch::{ModelArch, DTYPE_BYTES_BF16, DTYPE_BYTES_F32};

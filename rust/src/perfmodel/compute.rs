@@ -1,0 +1,134 @@
+//! H100 roofline compute model.
+//!
+//! Prefill processes `S_p` tokens in parallel → large GEMMs → FLOP-bound:
+//! `time = flops / (peak · eff_prefill)`. Decode processes one token →
+//! GEMV-shaped → bound by streaming the weights from HBM:
+//! `time = weight_bytes / (hbm_bw · eff_decode)`. Both are per-GPU after
+//! tensor-parallel sharding by `t`.
+
+
+use crate::model::ModelArch;
+
+/// Accelerator + efficiency constants (defaults: H100 SXM, BF16).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeModel {
+    /// Peak dense BF16 throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// HBM bandwidth (bytes/s).
+    pub hbm_bw: f64,
+    /// Achieved fraction of peak for prefill GEMMs.
+    pub eff_prefill: f64,
+    /// Achieved fraction of HBM bandwidth for decode weight streaming.
+    pub eff_decode: f64,
+    /// Serving dtype width (bytes).
+    pub dtype_bytes: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        Self {
+            peak_flops: 989e12, // H100 SXM dense BF16
+            hbm_bw: 3.35e12,    // HBM3
+            eff_prefill: 0.45,
+            eff_decode: 0.90,
+            dtype_bytes: 2.0,
+        }
+    }
+}
+
+impl ComputeModel {
+    /// Weight parameters in one transformer layer.
+    pub fn layer_params(arch: &ModelArch) -> f64 {
+        let h = arch.hidden as f64;
+        let qd = (arch.heads * arch.head_dim) as f64;
+        let kvd = (arch.kv_heads * arch.head_dim) as f64;
+        h * qd + 2.0 * h * kvd + qd * h + 3.0 * h * arch.intermediate as f64
+    }
+
+    /// FLOPs to prefill `s_p` tokens through `layers` layers (GEMM 2·params
+    /// per token + quadratic attention term).
+    pub fn prefill_flops(&self, arch: &ModelArch, layers: usize, s_p: usize) -> f64 {
+        let per_token_gemm = 2.0 * Self::layer_params(arch);
+        let attn_quad =
+            4.0 * (s_p as f64) * (arch.heads * arch.head_dim) as f64; // per token per layer
+        layers as f64 * s_p as f64 * (per_token_gemm + attn_quad)
+    }
+
+    /// Prefill wall time of `layers` layers sharded over `t` GPUs (seconds).
+    pub fn prefill_time(&self, arch: &ModelArch, layers: usize, s_p: usize, t: usize) -> f64 {
+        self.prefill_flops(arch, layers, s_p) / (t as f64 * self.peak_flops * self.eff_prefill)
+    }
+
+    /// Decode-step wall time of `layers` layers sharded over `t` GPUs:
+    /// stream the local weight shard + the KV cache once from HBM.
+    pub fn decode_time(
+        &self,
+        arch: &ModelArch,
+        layers: usize,
+        kv_len: usize,
+        t: usize,
+    ) -> f64 {
+        let weight_bytes = Self::layer_params(arch) * layers as f64 * self.dtype_bytes;
+        let kv_bytes = (arch.kv_bytes_per_token(self.dtype_bytes as usize) as f64)
+            * (layers as f64 / arch.layers as f64)
+            * kv_len as f64;
+        (weight_bytes + kv_bytes) / (t as f64 * self.hbm_bw * self.eff_decode)
+    }
+
+    /// Whole-model decode step on `t` GPUs (all layers).
+    pub fn full_decode_time(&self, arch: &ModelArch, kv_len: usize, t: usize) -> f64 {
+        self.decode_time(arch, arch.layers, kv_len, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_params_match_arch_totals() {
+        let arch = ModelArch::llama31_8b();
+        let per_layer = ComputeModel::layer_params(&arch);
+        let embeddings = 2.0 * (arch.vocab * arch.hidden) as f64;
+        let total = per_layer * arch.layers as f64 + embeddings;
+        let counted = arch.param_count() as f64;
+        assert!((total - counted).abs() / counted < 0.01);
+    }
+
+    #[test]
+    fn decode_is_memory_bound_sane() {
+        // 3B over 2 GPUs: ~3.2 GB/GPU over 3.35 TB/s * 0.9 ≈ 1.05 ms —
+        // the right magnitude for the paper's 1.17 ms TPOT at TP=2.
+        let cm = ComputeModel::default();
+        let t = cm.full_decode_time(&ModelArch::llama32_3b(), 128, 2);
+        assert!((0.8e-3..1.4e-3).contains(&t), "decode {t}");
+    }
+
+    #[test]
+    fn prefill_ms_scale() {
+        // 3B, Sp=128 on 2 GPUs at 45% of peak: ~1 ms — prefill compute is
+        // NOT the 150 ms TTFT the paper reports; framework overhead is
+        // (see calibration.rs).
+        let cm = ComputeModel::default();
+        let t = cm.prefill_time(&ModelArch::llama32_3b(), 28, 128, 2);
+        assert!((0.2e-3..4e-3).contains(&t), "prefill {t}");
+    }
+
+    #[test]
+    fn sharding_speeds_up_both_phases() {
+        let cm = ComputeModel::default();
+        let arch = ModelArch::llama2_13b();
+        assert!(
+            cm.prefill_time(&arch, arch.layers, 128, 8)
+                < cm.prefill_time(&arch, arch.layers, 128, 2)
+        );
+        assert!(cm.full_decode_time(&arch, 128, 8) < cm.full_decode_time(&arch, 128, 2));
+    }
+
+    #[test]
+    fn decode_time_grows_with_kv_len() {
+        let cm = ComputeModel::default();
+        let arch = ModelArch::llama31_8b();
+        assert!(cm.full_decode_time(&arch, 4096, 1) > cm.full_decode_time(&arch, 1, 1));
+    }
+}

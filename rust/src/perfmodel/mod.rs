@@ -1,0 +1,24 @@
+//! Predictive performance models — regenerate the paper's SLO figures.
+//!
+//! The paper measures TTFT / TPOT / E2E on 4×H100 nodes (Figs. 1, 8–10);
+//! this testbed has neither H100s nor InfiniBand, so latency is *simulated*
+//! from three calibrated components (DESIGN.md §5):
+//!
+//! 1. [`compute`] — H100 roofline: prefill is FLOP-bound on the tensor
+//!    cores, decode is weight-streaming-bound on HBM3;
+//! 2. [`crate::cluster::netmodel`] — α–β collective costs over the
+//!    placement's link classes;
+//! 3. [`calibration`] — fitted vLLM-V0 framework overheads (per-step
+//!    scheduling, pipeline-stage handoffs), the constants the paper's
+//!    anomalously large PP latencies are made of.
+//!
+//! [`slo`] composes the three into per-request TTFT/TPOT/E2E and the
+//! comm/compute fraction breakdown of Fig. 1.
+
+pub mod calibration;
+pub mod compute;
+pub mod slo;
+
+pub use calibration::Calibration;
+pub use compute::ComputeModel;
+pub use slo::{PhaseBreakdown, SloReport, SloSimulator};

@@ -1,0 +1,322 @@
+//! SLO simulator: per-request TTFT / TPOT / E2E for any (model, layout,
+//! placement, sequence shape) — regenerates Figs. 1 and 8–10.
+//!
+//! Single-request semantics (the paper isolates batching effects, §IV.B):
+//! the pipeline processes one microbatch, so stages execute strictly
+//! serially; a decode step flows through all stages then returns the
+//! sampled token to the first stage.
+
+
+use crate::analysis::{InferenceShape, ParallelLayout};
+use crate::cluster::{Placement, Topology};
+use crate::comm::Stage;
+use crate::model::ModelArch;
+
+use super::calibration::Calibration;
+
+/// Time decomposition of one phase (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub overhead_s: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_s + self.overhead_s
+    }
+
+    /// Communication fraction of total phase time (Fig. 1 y-axis).
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 { 0.0 } else { self.comm_s / t }
+    }
+}
+
+/// Simulated SLO metrics for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloReport {
+    pub ttft_s: f64,
+    /// Mean time per output token after the first.
+    pub tpot_s: f64,
+    pub e2e_s: f64,
+    pub prefill: PhaseBreakdown,
+    /// Per-decode-step breakdown (multiply by `S_d − 1` for phase totals).
+    pub decode_step: PhaseBreakdown,
+}
+
+impl SloReport {
+    /// Whole-request communication fraction (Fig. 1).
+    pub fn comm_fraction(&self, shape: InferenceShape) -> f64 {
+        let steps = (shape.decode_len - 1) as f64;
+        let comm = self.prefill.comm_s + steps * self.decode_step.comm_s;
+        let total = self.prefill.total() + steps * self.decode_step.total();
+        if total == 0.0 { 0.0 } else { comm / total }
+    }
+}
+
+/// The simulator: composes roofline compute, α–β collectives and calibrated
+/// framework overheads over a placement.
+#[derive(Debug, Clone)]
+pub struct SloSimulator {
+    pub arch: ModelArch,
+    pub placement: Placement,
+    pub cal: Calibration,
+}
+
+impl SloSimulator {
+    pub fn new(arch: ModelArch, placement: Placement) -> Self {
+        Self { arch, placement, cal: Calibration::default() }
+    }
+
+    pub fn with_calibration(mut self, cal: Calibration) -> Self {
+        self.cal = cal;
+        self
+    }
+
+    /// Convenience: place a layout on the paper's 4-GPU-node topology with
+    /// just enough nodes.
+    pub fn on_cardinal(arch: ModelArch, layout: ParallelLayout) -> crate::Result<Self> {
+        let nodes = layout.world_size().div_ceil(4).max(1);
+        let placement = Placement::new(Topology::cardinal(nodes), layout)?;
+        Ok(Self::new(arch, placement))
+    }
+
+    fn layout(&self) -> ParallelLayout {
+        self.placement.layout
+    }
+
+    /// Per-step communication time of stage `s` over a `window`-token
+    /// message (TP collectives + boundary p2p wire time).
+    fn stage_comm(&self, s: usize, window: usize, stage: Stage) -> f64 {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        let b = self.cal.compute.dtype_bytes;
+        let h = self.arch.hidden as f64;
+        let msg = window as f64 * h * b;
+        let crosses = self.placement.tp_group_crosses_nodes(s);
+        let net = &self.cal.net;
+        let mut time = 0.0;
+
+        if t > 1 {
+            let mut ars = 2 * self.arch.stage_layers(p, s);
+            if s == 0 {
+                ars += 1; // vocab-parallel embedding
+            }
+            time += ars as f64 * net.allreduce(msg, t, crosses).total();
+            if p > 1 && s > 0 {
+                time += 2.0 * net.allgather(msg, t, crosses).total();
+            }
+            if s == p - 1 {
+                // Logits gather of v/t slices, once per sampled token; the
+                // prefill step samples exactly one token too.
+                let slice = (self.arch.vocab / t) as f64 * b;
+                let _ = stage;
+                time += net.gather(slice, t, crosses).total();
+            }
+        }
+        if p > 1 && s < p - 1 {
+            let cross = self.placement.pp_boundary_crosses_nodes(s);
+            let slice = msg / t as f64;
+            time += 2.0 * net.p2p(slice, cross).total();
+        }
+        time
+    }
+
+    /// Framework handoff overhead (per step) for pipeline boundaries,
+    /// including the sampled-token return hop to stage 0.
+    fn decode_handoff_overhead(&self) -> f64 {
+        let p = self.layout().pp;
+        if p <= 1 {
+            return 0.0;
+        }
+        let t = self.layout().tp;
+        let mut crossings = self.placement.internode_boundaries();
+        // Return hop: last stage -> first stage.
+        let last = self.placement.global_rank(p - 1, 0);
+        let first = self.placement.global_rank(0, 0);
+        if !self.placement.topology.same_node(last, first) {
+            crossings += 1;
+        }
+        crossings as f64 * self.cal.internode_handoff(t)
+    }
+
+    /// Prefill phase breakdown → TTFT.
+    pub fn prefill(&self, shape: InferenceShape) -> PhaseBreakdown {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        let sp = shape.prefill_len;
+        let mut compute = 0.0;
+        let mut comm = 0.0;
+        for s in 0..p {
+            let layers = self.arch.stage_layers(p, s);
+            compute += self.cal.compute.prefill_time(&self.arch, layers, sp, t);
+            comm += self.stage_comm(s, sp, Stage::Prefill);
+        }
+        let mut overhead = self.cal.ttft_framework_overhead(self.layout().world_size());
+        overhead += (p - 1) as f64 * self.cal.pp_boundary_prefill_s * (t as f64).powf(
+            if p > 1 { self.cal.handoff_tp_exp } else { 0.0 },
+        );
+        PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
+    }
+
+    /// One decode step breakdown → TPOT.
+    pub fn decode_step(&self, shape: InferenceShape) -> PhaseBreakdown {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        // Mid-generation context length for KV streaming cost.
+        let kv_len = shape.prefill_len + shape.decode_len / 2;
+        let mut compute = 0.0;
+        let mut comm = 0.0;
+        for s in 0..p {
+            let layers = self.arch.stage_layers(p, s);
+            compute += self.cal.compute.decode_time(&self.arch, layers, kv_len, t);
+            comm += self.stage_comm(s, 1, Stage::Decode);
+        }
+        let overhead = self.cal.step_overhead_s + self.decode_handoff_overhead();
+        PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
+    }
+
+    /// Full-request SLO metrics.
+    pub fn simulate(&self, shape: InferenceShape) -> SloReport {
+        let prefill = self.prefill(shape);
+        let decode_step = self.decode_step(shape);
+        let steps = (shape.decode_len - 1) as f64;
+        let ttft = prefill.total();
+        let tpot = decode_step.total();
+        SloReport {
+            ttft_s: ttft,
+            tpot_s: tpot,
+            e2e_s: ttft + steps * tpot,
+            prefill,
+            decode_step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DTYPE_BYTES_BF16;
+
+    fn shape128() -> InferenceShape {
+        InferenceShape::new(128, 128, DTYPE_BYTES_BF16)
+    }
+
+    fn sim(arch: ModelArch, tp: usize, pp: usize) -> SloSimulator {
+        SloSimulator::on_cardinal(arch, ParallelLayout::new(tp, pp)).unwrap()
+    }
+
+    fn ms(x: f64) -> f64 {
+        x * 1e3
+    }
+
+    #[test]
+    fn fig8_tp_scaling_shape() {
+        // Paper Fig. 8 (3B): TP=2 {e2e 310, ttft 150, tpot 1.17};
+        // TP=4 {210, 90, 0.86}; TP=8 cross-node {1520, 30, 11.56}.
+        let a = ModelArch::llama32_3b;
+        let r2 = sim(a(), 2, 1).simulate(shape128());
+        let r4 = sim(a(), 4, 1).simulate(shape128());
+        let r8 = sim(a(), 8, 1).simulate(shape128());
+
+        // orderings
+        assert!(r4.ttft_s < r2.ttft_s && r8.ttft_s < r4.ttft_s, "TTFT monotone in t");
+        assert!(r4.tpot_s < r2.tpot_s, "TP4 improves TPOT intra-node");
+        assert!(r8.tpot_s > 5.0 * r4.tpot_s, "cross-node TP wrecks TPOT");
+        assert!(r8.e2e_s > r2.e2e_s && r4.e2e_s < r2.e2e_s);
+
+        // magnitudes within 25% of the paper
+        let close = |got: f64, want: f64, tol: f64| {
+            assert!((got - want).abs() / want < tol, "got {got}, want {want}");
+        };
+        close(ms(r2.ttft_s), 150.0, 0.25);
+        close(ms(r4.ttft_s), 90.0, 0.25);
+        close(ms(r8.ttft_s), 30.0, 0.60); // paper 30ms; comm-heavy tail
+        close(ms(r2.tpot_s), 1.17, 0.25);
+        close(ms(r4.tpot_s), 0.86, 0.25);
+        close(ms(r8.tpot_s), 11.56, 0.25);
+        close(r8.e2e_s, 1.52, 0.25);
+    }
+
+    #[test]
+    fn fig9_pp_scaling_shape() {
+        // Paper Fig. 9 (3B): PP=2 {e2e 0.69s, ttft 430ms, tpot ~2ms};
+        // PP=4 {1.36s, 1110ms, ~2ms}; PP=8 {4.98s, 2520ms, 19.22ms}.
+        let a = ModelArch::llama32_3b;
+        let r2 = sim(a(), 1, 2).simulate(shape128());
+        let r4 = sim(a(), 1, 4).simulate(shape128());
+        let r8 = sim(a(), 1, 8).simulate(shape128());
+
+        assert!(r4.ttft_s > r2.ttft_s && r8.ttft_s > r4.ttft_s, "TTFT grows with depth");
+        assert!((r2.tpot_s - r4.tpot_s).abs() < 0.5e-3, "TPOT stable intra-node");
+        assert!(r8.tpot_s > 8.0 * r4.tpot_s, "cross-node handoffs dominate PP=8");
+
+        let close = |got: f64, want: f64, tol: f64| {
+            assert!((got - want).abs() / want < tol, "got {got}, want {want}");
+        };
+        close(ms(r2.ttft_s), 430.0, 0.25);
+        close(ms(r4.ttft_s), 1110.0, 0.25);
+        close(ms(r8.ttft_s), 2520.0, 0.25);
+        close(ms(r8.tpot_s), 19.22, 0.25);
+        close(r2.e2e_s, 0.69, 0.25);
+        close(r4.e2e_s, 1.36, 0.25);
+        close(r8.e2e_s, 4.98, 0.25);
+    }
+
+    #[test]
+    fn fig10_hybrid_13b_shape() {
+        // Paper Fig. 10 (13B, 8 GPUs/2 nodes): TP8 best {2.37s, 70ms, 18ms};
+        // TP4 PP2 catastrophic {15.15s, ~103ms tpot}; TP2 PP4 intermediate;
+        // PP8 moderate {ttft 2430ms}.
+        let a = ModelArch::llama2_13b;
+        let tp8 = sim(a(), 8, 1).simulate(shape128());
+        let tp4pp2 = sim(a(), 4, 2).simulate(shape128());
+        let tp2pp4 = sim(a(), 2, 4).simulate(shape128());
+        let pp8 = sim(a(), 1, 8).simulate(shape128());
+
+        // The paper's headline ordering.
+        assert!(tp8.e2e_s < tp2pp4.e2e_s && tp8.e2e_s < pp8.e2e_s);
+        assert!(tp4pp2.e2e_s > tp2pp4.e2e_s, "unbalanced hybrid is worst");
+        assert!(tp4pp2.e2e_s > pp8.e2e_s);
+        assert!(tp8.ttft_s < 0.2 * pp8.ttft_s, "TP8 TTFT advantage");
+
+        let close = |got: f64, want: f64, tol: f64| {
+            assert!((got - want).abs() / want < tol, "got {got}, want {want}");
+        };
+        close(tp8.e2e_s, 2.37, 0.30);
+        close(ms(tp8.tpot_s), 18.0, 0.30);
+        close(ms(tp4pp2.tpot_s), 103.0, 0.35);
+        close(ms(pp8.ttft_s), 2430.0, 0.25);
+    }
+
+    #[test]
+    fn fig1_comm_fraction_ordering() {
+        // Fig. 1: TP layouts are the most communication-bound for 8B.
+        let a = ModelArch::llama31_8b;
+        let s = shape128();
+        let f_tp4 = sim(a(), 4, 1).simulate(s).comm_fraction(s);
+        let f_pp4 = sim(a(), 1, 4).simulate(s).comm_fraction(s);
+        let f_tp2 = sim(a(), 2, 1).simulate(s).comm_fraction(s);
+        assert!(f_tp4 > f_pp4, "tp4 {f_tp4} vs pp4 {f_pp4}");
+        assert!(f_tp4 > 0.05 && f_tp4 < 0.95);
+        assert!(f_tp2 > 0.0);
+    }
+
+    #[test]
+    fn breakdown_totals_are_consistent() {
+        let s = shape128();
+        let r = sim(ModelArch::llama31_8b(), 2, 2).simulate(s);
+        let manual =
+            r.prefill.total() + (s.decode_len as f64 - 1.0) * r.decode_step.total();
+        assert!((r.e2e_s - manual).abs() < 1e-12);
+        assert!(r.ttft_s > 0.0 && r.tpot_s > 0.0);
+    }
+
+    #[test]
+    fn single_gpu_has_no_comm() {
+        let s = shape128();
+        let r = sim(ModelArch::llama32_3b(), 1, 1).simulate(s);
+        assert_eq!(r.prefill.comm_s, 0.0);
+        assert_eq!(r.decode_step.comm_s, 0.0);
+        assert_eq!(r.comm_fraction(s), 0.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Report rendering: paper tables/figures side-by-side with analytical
+//! predictions and engine-measured values. Used by the benches and the CLI.
+
+use crate::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
+use crate::comm::{CollectiveKind, Stage, TraceSummary};
+use crate::model::ModelArch;
+
+/// Fixed-width text table.
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&fmt_row(&sep, &widths));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Human-readable bytes.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+pub fn fmt_shape(shape: &[usize]) -> String {
+    let inner: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    format!("[{}]", inner.join(","))
+}
+
+/// One (op, stage) row comparing analytical prediction vs engine trace
+/// under the paper's table-view convention.
+pub fn compare_row(
+    op: CollectiveKind,
+    stage: Stage,
+    model: &OpCountModel,
+    trace: &TraceSummary,
+) -> Vec<String> {
+    let predicted = model.predict_paper_view(stage);
+    let observed = trace.paper_view(op, stage);
+    let pred_count = predicted.count(op);
+    let pred_shape = predicted.shape(op).map(fmt_shape).unwrap_or_else(|| "-".into());
+    let obs_shapes = trace.shapes(op, stage);
+    let obs_shape = obs_shapes.first().map(|s| fmt_shape(s)).unwrap_or_else(|| "-".into());
+    let status = if pred_count == observed.count && (pred_count == 0 || pred_shape == obs_shape) {
+        "OK"
+    } else {
+        "MISMATCH"
+    };
+    vec![
+        format!("{} ({})", op.label(), stage.label()),
+        pred_count.to_string(),
+        pred_shape,
+        observed.count.to_string(),
+        obs_shape,
+        status.to_string(),
+    ]
+}
+
+/// Render a full measured-vs-analytical comparison for a layout run.
+pub fn comparison_table(
+    title: &str,
+    arch: &ModelArch,
+    layout: ParallelLayout,
+    shape: InferenceShape,
+    trace: &TraceSummary,
+) -> String {
+    let model = OpCountModel::new(arch.clone(), layout, shape);
+    let ops = [
+        CollectiveKind::AllReduce,
+        CollectiveKind::AllGather,
+        CollectiveKind::Gather,
+        CollectiveKind::Send,
+        CollectiveKind::Recv,
+    ];
+    let mut rows = Vec::new();
+    for stage in [Stage::Prefill, Stage::Decode] {
+        for op in ops {
+            let predicted = model.predict_paper_view(stage).count(op);
+            let observed = trace.paper_view(op, stage).count;
+            if predicted == 0 && observed == 0 {
+                continue;
+            }
+            rows.push(compare_row(op, stage, &model, trace));
+        }
+    }
+    render_table(
+        title,
+        &["Operation", "Count (analytical)", "Shape (analytical)", "Count (measured)", "Shape (measured)", "Status"],
+        &rows,
+    )
+}
+
+/// Volume summary line for a layout (Figs. 6–7 series points).
+pub fn volume_line(arch: &ModelArch, layout: ParallelLayout, shape: InferenceShape) -> String {
+    let v = VolumeModel::new(arch.clone()).volume(layout, shape);
+    format!(
+        "{:<14} {:>12} total  (AR {:>12} | AG {:>12} | G {:>12} | P2P {:>12})",
+        layout.label(),
+        fmt_bytes(v.total()),
+        fmt_bytes(v.allreduce),
+        fmt_bytes(v.allgather),
+        fmt_bytes(v.gather),
+        fmt_bytes(v.p2p),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DTYPE_BYTES_BF16;
+
+    #[test]
+    fn render_basic_table() {
+        let s = render_table(
+            "T",
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(s.contains("## T"));
+        assert!(s.contains("| a   | bb |"));
+        assert!(s.contains("| 333 | 4  |"));
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512.00 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.0 * 1024.0 * 1024.0 * 1024.0), "3.00 GiB");
+    }
+
+    #[test]
+    fn shape_formatting() {
+        assert_eq!(fmt_shape(&[128, 4096]), "[128,4096]");
+        assert_eq!(fmt_shape(&[64128]), "[64128]");
+    }
+
+    #[test]
+    fn volume_line_contains_layout() {
+        let line = volume_line(
+            &ModelArch::llama31_8b(),
+            ParallelLayout::new(4, 1),
+            InferenceShape::new(128, 128, DTYPE_BYTES_BF16),
+        );
+        assert!(line.contains("TP=4"));
+        assert!(line.contains("total"));
+    }
+}

@@ -1,0 +1,258 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the CPU
+//! client — the Rust half of the AOT bridge (see python/compile/aot.py).
+//!
+//! PJRT objects from the `xla` crate are **not `Send`** (the client is an
+//! `Rc`), so every engine worker thread owns its own [`xla::PjRtClient`] and
+//! compiles its own executables; [`ArtifactStore`] is the shared, `Send`
+//! description of what to load.
+
+pub mod tensor;
+pub mod weights;
+
+pub use tensor::HostTensor;
+pub use weights::ShardWeights;
+
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// Parsed `artifacts/meta.txt` — the contract between `aot.py` and the
+/// engine (tiny-model dims, prefill length, available TP degrees). The
+/// build also writes a `meta.json` twin for the Python tests; Rust parses
+/// the line-based format (std-only, DESIGN.md §5 substitutions).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub tp_degrees: Vec<usize>,
+    pub seed: u64,
+    pub dtype: String,
+}
+
+impl ArtifactMeta {
+    /// Parse the `key=value` meta format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = std::collections::HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("meta line {}: missing '='", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<String> {
+            map.get(k).cloned().ok_or_else(|| anyhow::anyhow!("meta missing key '{k}'"))
+        };
+        let num = |k: &str| -> Result<usize> {
+            get(k)?.parse().map_err(|e| anyhow::anyhow!("meta key '{k}': {e}"))
+        };
+        let tp_degrees = get("tp_degrees")?
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<Vec<_>, _>>()
+            .map_err(|e| anyhow::anyhow!("meta tp_degrees: {e}"))?;
+        Ok(Self {
+            model: get("model")?,
+            vocab: num("vocab")?,
+            hidden: num("hidden")?,
+            intermediate: num("intermediate")?,
+            layers: num("layers")?,
+            heads: num("heads")?,
+            head_dim: num("head_dim")?,
+            max_seq: num("max_seq")?,
+            prefill_len: num("prefill_len")?,
+            tp_degrees,
+            seed: get("seed")?.parse()?,
+            dtype: get("dtype")?,
+        })
+    }
+}
+
+/// Locator + metadata for a built artifact directory. Cheap to clone and
+/// `Send` — workers use it to construct their thread-local runtimes.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory (reads `meta.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.txt");
+        let text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", meta_path.display()))?;
+        let meta = ArtifactMeta::parse(&text)?;
+        Ok(Self { dir, meta })
+    }
+
+    /// Default location relative to the repo root / current directory.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts")
+    }
+
+    /// Path of a segment HLO, e.g. `("attn", Phase::Decode, 2)`.
+    pub fn hlo_path(&self, segment: &str, phase: Phase, tp: usize) -> PathBuf {
+        self.dir.join(format!("{segment}_{}_t{tp}.hlo.txt", phase.suffix()))
+    }
+
+    /// Path of the fused whole-model graph (t=1 only).
+    pub fn full_path(&self, phase: Phase) -> PathBuf {
+        self.dir.join(format!("full_{}_t1.hlo.txt", phase.suffix()))
+    }
+
+    /// Weight shard blob + manifest paths for (t, rank).
+    pub fn shard_paths(&self, tp: usize, rank: usize) -> (PathBuf, PathBuf) {
+        (
+            self.dir.join(format!("weights_t{tp}_rank{rank}.bin")),
+            self.dir.join(format!("weights_t{tp}_rank{rank}.manifest")),
+        )
+    }
+
+    /// Verify the store supports a TP degree.
+    pub fn supports_tp(&self, tp: usize) -> bool {
+        self.meta.tp_degrees.contains(&tp)
+    }
+}
+
+/// Inference phase of a segment executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    fn suffix(&self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// Compile one HLO-text file on a client.
+pub fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+        anyhow::anyhow!("non-utf8 path {}", path.display())
+    })?)
+    .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))
+}
+
+/// Execute with borrowed literal inputs; unwrap the
+/// lowered-with-`return_tuple` output into its tuple elements.
+///
+/// NOTE: the `xla` 0.1.6 C++ shim *leaks the input device buffers* of
+/// `execute()` (`BufferFromHostLiteral(...).release()` with no matching
+/// free) — ~input-size bytes per call. Use [`execute_b_tuple`] with
+/// caller-owned [`xla::PjRtBuffer`] inputs on any hot path; this variant is
+/// kept for one-shot tooling and tests.
+pub fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[&xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let out = exe
+        .execute::<&xla::Literal>(inputs)
+        .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+    let lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+    lit.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e}"))
+}
+
+/// Execute with caller-owned device buffers (leak-free, and skips the
+/// host→device weight re-upload `execute()` performs on every call);
+/// unwrap the tuple output.
+pub fn execute_b_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[&xla::PjRtBuffer],
+) -> Result<Vec<xla::Literal>> {
+    let out = exe
+        .execute_b::<&xla::PjRtBuffer>(inputs)
+        .map_err(|e| anyhow::anyhow!("execute_b: {e}"))?;
+    let lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+    lit.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e}"))
+}
+
+/// Upload an f32 host tensor to the device.
+pub fn to_device(client: &xla::PjRtClient, t: &tensor::HostTensor) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+        .map_err(|e| anyhow::anyhow!("to_device: {e}"))
+}
+
+/// Upload i32 data (token ids / positions) to the device.
+pub fn i32_to_device(client: &xla::PjRtClient, data: &[i32]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer::<i32>(data, &[data.len()], None)
+        .map_err(|e| anyhow::anyhow!("i32_to_device: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META_TEXT: &str = "model=tiny-llama\nvocab=512\nhidden=256\nintermediate=768\n\
+        layers=4\nheads=8\nhead_dim=32\nmax_seq=128\nprefill_len=32\nseed=0\n\
+        dtype=f32\ntp_degrees=1,2,4\n";
+
+    #[test]
+    fn meta_parses_key_value_format() {
+        let m = ArtifactMeta::parse(META_TEXT).unwrap();
+        assert_eq!(m.model, "tiny-llama");
+        assert_eq!(m.hidden, 256);
+        assert_eq!(m.tp_degrees, vec![1, 2, 4]);
+        assert_eq!(m.prefill_len, 32);
+    }
+
+    #[test]
+    fn meta_rejects_missing_keys_and_garbage() {
+        assert!(ArtifactMeta::parse("model=x\n").is_err());
+        assert!(ArtifactMeta::parse(&META_TEXT.replace("vocab=512", "vocab=abc")).is_err());
+        assert!(ArtifactMeta::parse(&META_TEXT.replace("hidden=256", "hidden")).is_err());
+        // comments and blank lines are fine
+        let ok = format!("# comment\n\n{META_TEXT}");
+        assert!(ArtifactMeta::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let store = ArtifactStore {
+            dir: PathBuf::from("/tmp/a"),
+            meta: ArtifactMeta::parse(META_TEXT).unwrap(),
+        };
+        assert_eq!(
+            store.hlo_path("attn", Phase::Decode, 2),
+            PathBuf::from("/tmp/a/attn_decode_t2.hlo.txt")
+        );
+        assert_eq!(store.full_path(Phase::Prefill), PathBuf::from("/tmp/a/full_prefill_t1.hlo.txt"));
+        let (bin, manifest) = store.shard_paths(4, 3);
+        assert!(bin.ends_with("weights_t4_rank3.bin"));
+        assert!(manifest.ends_with("weights_t4_rank3.manifest"));
+        assert!(store.supports_tp(2));
+        assert!(!store.supports_tp(8));
+    }
+
+    #[test]
+    fn open_missing_dir_errors_helpfully() {
+        let err = ArtifactStore::open("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal host-side f32 tensor used on the engine's data path, with the
+//! layout helpers the TP/PP boundary exchanges need (column slicing for
+//! `[S, h/t]` pipeline messages, rank-chunk reassembly after AllGather).
+
+use crate::Result;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    /// Columns of a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    /// Elementwise `self += other` (the residual adds the engine performs
+    /// between AllReduced segment outputs).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Column slice `[S, h] -> [S, cols_per_rank]` for rank `r` of `t`
+    /// (the `[S, h/t]` tensor a pipeline boundary ships per TP rank).
+    pub fn column_slice(&self, rank: usize, t: usize) -> HostTensor {
+        let (s, h) = (self.rows(), self.cols());
+        assert!(h % t == 0 && rank < t);
+        let w = h / t;
+        let mut out = Vec::with_capacity(s * w);
+        for row in 0..s {
+            let base = row * h + rank * w;
+            out.extend_from_slice(&self.data[base..base + w]);
+        }
+        HostTensor::from_vec(&[s, w], out)
+    }
+
+    /// Inverse of [`Self::column_slice`]: reassemble `[S, h]` from `t`
+    /// rank-ordered column chunks of `[S, h/t]` (what our AllGather
+    /// returns: chunks concatenated by rank).
+    pub fn from_column_chunks(chunks_concat: &[f32], s: usize, h: usize, t: usize) -> HostTensor {
+        assert_eq!(chunks_concat.len(), s * h);
+        assert!(h % t == 0);
+        let w = h / t;
+        let mut out = vec![0.0f32; s * h];
+        for rank in 0..t {
+            let chunk = &chunks_concat[rank * s * w..(rank + 1) * s * w];
+            for row in 0..s {
+                out[row * h + rank * w..row * h + (rank + 1) * w]
+                    .copy_from_slice(&chunk[row * w..(row + 1) * w]);
+            }
+        }
+        HostTensor::from_vec(&[s, h], out)
+    }
+
+    /// Last row of a 2-D tensor as a new `[1, h]` tensor.
+    pub fn last_row(&self) -> HostTensor {
+        let (s, h) = (self.rows(), self.cols());
+        HostTensor::from_vec(&[1, h], self.data[(s - 1) * h..].to_vec())
+    }
+
+    /// Convert to an XLA literal (f32).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = bytemuck_cast(&self.data);
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &self.shape, bytes)
+            .map_err(|e| anyhow::anyhow!("literal: {e}"))
+    }
+
+    /// Read back from an XLA literal of known shape.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<HostTensor> {
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        Ok(HostTensor::from_vec(shape, data))
+    }
+}
+
+/// i32 token ids to an XLA literal of shape `[n]`.
+pub fn i32_literal(tokens: &[i32]) -> Result<xla::Literal> {
+    let bytes: &[u8] = bytemuck_cast(tokens);
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[tokens.len()],
+        bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("i32 literal: {e}"))
+}
+
+/// Greedy sampler over gathered logits.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
+    // f32/i32 are plain-old-data; layout is the native little-endian the
+    // AOT weight blobs use.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_slice_roundtrip() {
+        // [2, 4] with t=2 -> two [2, 2] slices -> reassembled.
+        let x = HostTensor::from_vec(&[2, 4], (0..8).map(|i| i as f32).collect());
+        let s0 = x.column_slice(0, 2);
+        let s1 = x.column_slice(1, 2);
+        assert_eq!(s0.data, vec![0.0, 1.0, 4.0, 5.0]);
+        assert_eq!(s1.data, vec![2.0, 3.0, 6.0, 7.0]);
+        let mut concat = s0.data.clone();
+        concat.extend_from_slice(&s1.data);
+        let back = HostTensor::from_column_chunks(&concat, 2, 4, 2);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn column_slice_identity_t1() {
+        let x = HostTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(x.column_slice(0, 1), x);
+        let back = HostTensor::from_column_chunks(&x.data, 2, 3, 1);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn add_assign_and_last_row() {
+        let mut a = HostTensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = HostTensor::from_vec(&[2, 2], vec![10., 20., 30., 40.]);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![11., 22., 33., 44.]);
+        assert_eq!(a.last_row().data, vec![33., 44.]);
+        assert_eq!(a.last_row().shape, vec![1, 2]);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let x = HostTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = x.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, x);
+        let toks = i32_literal(&[7, 8, 9]).unwrap();
+        assert_eq!(toks.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+}

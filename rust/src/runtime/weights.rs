@@ -1,0 +1,180 @@
+//! Weight shard loading: parse the `weights_t{t}_rank{r}.{bin,manifest}`
+//! pair written by `aot.py` (canonical tensor order, f32 little-endian;
+//! line-based manifest: `total_bytes <n>` then `<name> <offset> <dims>`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::tensor::HostTensor;
+use super::ArtifactStore;
+use crate::Result;
+
+#[derive(Debug)]
+struct ManifestEntry {
+    name: String,
+    shape: Vec<usize>,
+    offset: usize,
+}
+
+fn parse_manifest(text: &str) -> Result<(Vec<ManifestEntry>, usize)> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty manifest"))?;
+    let total_bytes: usize = header
+        .strip_prefix("total_bytes ")
+        .ok_or_else(|| anyhow::anyhow!("manifest missing total_bytes header"))?
+        .trim()
+        .parse()?;
+    let mut entries = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let mut parts = line.split_whitespace();
+        let (name, offset, dims) = (
+            parts.next().ok_or_else(|| anyhow::anyhow!("manifest line {}: name", i + 2))?,
+            parts.next().ok_or_else(|| anyhow::anyhow!("manifest line {}: offset", i + 2))?,
+            parts.next().ok_or_else(|| anyhow::anyhow!("manifest line {}: dims", i + 2))?,
+        );
+        let shape = dims
+            .split(',')
+            .map(|d| d.parse::<usize>())
+            .collect::<std::result::Result<Vec<_>, _>>()
+            .map_err(|e| anyhow::anyhow!("manifest line {}: {e}", i + 2))?;
+        entries.push(ManifestEntry {
+            name: name.to_string(),
+            shape,
+            offset: offset.parse()?,
+        });
+    }
+    Ok((entries, total_bytes))
+}
+
+/// One TP rank's weight shard, loaded to host tensors by name.
+#[derive(Debug, Clone)]
+pub struct ShardWeights {
+    pub tp: usize,
+    pub rank: usize,
+    tensors: HashMap<String, HostTensor>,
+}
+
+impl ShardWeights {
+    /// Load rank `rank` of degree `tp` from an artifact store.
+    pub fn load(store: &ArtifactStore, tp: usize, rank: usize) -> Result<Self> {
+        let (bin_path, manifest_path) = store.shard_paths(tp, rank);
+        Self::load_paths(&bin_path, &manifest_path, tp, rank)
+    }
+
+    fn load_paths(bin_path: &Path, manifest_path: &Path, tp: usize, rank: usize) -> Result<Self> {
+        let text = std::fs::read_to_string(manifest_path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", manifest_path.display())
+        })?;
+        let (entries, total_bytes) = parse_manifest(&text)?;
+        let blob = std::fs::read(bin_path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", bin_path.display()))?;
+        if blob.len() != total_bytes {
+            anyhow::bail!(
+                "{}: blob is {} bytes, manifest says {}",
+                bin_path.display(),
+                blob.len(),
+                total_bytes
+            );
+        }
+        let mut tensors = HashMap::with_capacity(entries.len());
+        for e in &entries {
+            let n_elems: usize = e.shape.iter().product();
+            let n_bytes = n_elems * 4;
+            let end = e.offset + n_bytes;
+            if end > blob.len() {
+                anyhow::bail!("{}: tensor {} overruns blob", bin_path.display(), e.name);
+            }
+            let mut data = vec![0.0f32; n_elems];
+            // f32 little-endian, native on every supported target.
+            for (i, chunk) in blob[e.offset..end].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            tensors.insert(e.name.clone(), HostTensor::from_vec(&e.shape, data));
+        }
+        Ok(Self { tp, rank, tensors })
+    }
+
+    /// Fetch a tensor by canonical name (e.g. `"layer2.wq"`, `"embed"`).
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight tensor {name} missing from shard"))
+    }
+
+    pub fn tensor_names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    fn write_test_shard(dir: &Path) {
+        // Two tensors: a [2,2] and a [3].
+        let t0: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
+        let t1: Vec<f32> = vec![5.0, 6.0, 7.0];
+        let mut blob = Vec::new();
+        for v in t0.iter().chain(t1.iter()) {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join("weights_t2_rank0.bin"), &blob).unwrap();
+        let manifest = "total_bytes 28\nembed 0 2,2\nfinal_norm 16 3\n";
+        std::fs::write(dir.join("weights_t2_rank0.manifest"), manifest).unwrap();
+    }
+
+    #[test]
+    fn loads_manifest_and_blob() {
+        let dir = TempDir::new("commsim-weights");
+        write_test_shard(dir.path());
+        let w = ShardWeights::load_paths(
+            &dir.path().join("weights_t2_rank0.bin"),
+            &dir.path().join("weights_t2_rank0.manifest"),
+            2,
+            0,
+        )
+        .unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.get("embed").unwrap().shape, vec![2, 2]);
+        assert_eq!(w.get("embed").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.get("final_norm").unwrap().data, vec![5.0, 6.0, 7.0]);
+        assert!(w.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_blob() {
+        let dir = TempDir::new("commsim-weights-trunc");
+        write_test_shard(dir.path());
+        let path = dir.path().join("weights_t2_rank0.bin");
+        let blob = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &blob[..20]).unwrap();
+        let err = ShardWeights::load_paths(
+            &path,
+            &dir.path().join("weights_t2_rank0.manifest"),
+            2,
+            0,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("bytes"));
+    }
+
+    #[test]
+    fn manifest_parse_errors() {
+        assert!(parse_manifest("").is_err());
+        assert!(parse_manifest("nonsense\n").is_err());
+        assert!(parse_manifest("total_bytes 4\nfoo 0\n").is_err(), "missing dims");
+        assert!(parse_manifest("total_bytes 4\nfoo 0 2,x\n").is_err(), "bad dim");
+        let (e, total) = parse_manifest("total_bytes 8\nfoo 0 2\n").unwrap();
+        assert_eq!(total, 8);
+        assert_eq!(e[0].shape, vec![2]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Per-request SLO metrics and aggregation (paper §II.A: TTFT, TPOT,
+//! throughput; §V.C evaluates these across parallelism layouts).
+
+use std::time::Duration;
+
+
+/// SLO record of one served request.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub request_id: u64,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    /// Queue wait before the engine started prefill.
+    pub queue_s: f64,
+    /// Time to first token, excluding queueing.
+    pub ttft_s: f64,
+    /// Mean time per output token after the first.
+    pub tpot_s: f64,
+    /// End-to-end latency including queueing.
+    pub e2e_s: f64,
+}
+
+/// Aggregate over a batch of served requests.
+#[derive(Debug, Clone, Default)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub total_tokens: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+    pub requests_per_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p99_s: f64,
+    pub e2e_mean_s: f64,
+}
+
+/// Percentile over unsorted samples (nearest-rank).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+impl ServeSummary {
+    pub fn from_metrics(metrics: &[RequestMetrics], wall: Duration) -> Self {
+        let wall_s = wall.as_secs_f64();
+        let total_tokens: usize = metrics.iter().map(|m| m.generated_tokens).sum();
+        let ttfts: Vec<f64> = metrics.iter().map(|m| m.ttft_s).collect();
+        let tpots: Vec<f64> = metrics.iter().map(|m| m.tpot_s).collect();
+        let e2es: Vec<f64> = metrics.iter().map(|m| m.e2e_s).collect();
+        Self {
+            requests: metrics.len(),
+            total_tokens,
+            wall_s,
+            tokens_per_s: if wall_s > 0.0 { total_tokens as f64 / wall_s } else { 0.0 },
+            requests_per_s: if wall_s > 0.0 { metrics.len() as f64 / wall_s } else { 0.0 },
+            ttft_p50_s: percentile(&ttfts, 50.0),
+            ttft_p99_s: percentile(&ttfts, 99.0),
+            tpot_p50_s: percentile(&tpots, 50.0),
+            tpot_p99_s: percentile(&tpots, 99.0),
+            e2e_mean_s: if e2es.is_empty() {
+                0.0
+            } else {
+                e2es.iter().sum::<f64>() / e2es.len() as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = vec![4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert_eq!(percentile(&v, 50.0), 3.0); // rank round(0.5*3)=2 -> 3.0
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let metrics = vec![
+            RequestMetrics {
+                request_id: 0,
+                prompt_tokens: 8,
+                generated_tokens: 10,
+                queue_s: 0.0,
+                ttft_s: 0.1,
+                tpot_s: 0.01,
+                e2e_s: 0.2,
+            },
+            RequestMetrics {
+                request_id: 1,
+                prompt_tokens: 8,
+                generated_tokens: 10,
+                queue_s: 0.05,
+                ttft_s: 0.3,
+                tpot_s: 0.02,
+                e2e_s: 0.5,
+            },
+        ];
+        let s = ServeSummary::from_metrics(&metrics, Duration::from_secs(1));
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.total_tokens, 20);
+        assert!((s.tokens_per_s - 20.0).abs() < 1e-9);
+        assert!((s.e2e_mean_s - 0.35).abs() < 1e-9);
+        assert!(s.ttft_p99_s >= s.ttft_p50_s);
+    }
+}

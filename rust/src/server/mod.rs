@@ -1,0 +1,131 @@
+//! Serving front-end: request router + scheduler + engine + SLO metrics.
+//!
+//! [`Server`] is the synchronous core (the engine's collectives block);
+//! async intake wraps it via a channel in `main.rs`/examples. Requests flow
+//! FCFS through KV admission, execute on the engine one at a time (the
+//! paper's single-request methodology), and produce [`RequestMetrics`].
+
+pub mod metrics;
+pub mod scheduler;
+
+pub use metrics::{percentile, RequestMetrics, ServeSummary};
+pub use scheduler::{Request, Scheduler, SchedulerConfig};
+
+use std::time::Instant;
+
+use crate::engine::Engine;
+use crate::Result;
+
+/// The serving loop: scheduler in front of an engine.
+pub struct Server {
+    engine: Engine,
+    scheduler: Scheduler,
+    completed: Vec<RequestMetrics>,
+}
+
+impl Server {
+    pub fn new(engine: Engine, cfg: SchedulerConfig) -> Self {
+        Self { engine, scheduler: Scheduler::new(cfg), completed: Vec::new() }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&mut self, request: Request) -> Result<()> {
+        self.scheduler.submit(request)
+    }
+
+    /// Drain the queue, serving every admissible request; returns metrics
+    /// in completion order.
+    pub fn run_to_completion(&mut self) -> Result<&[RequestMetrics]> {
+        let first = self.completed.len();
+        loop {
+            let Some(admitted) = self.scheduler.admit_next()? else {
+                if self.scheduler.queue_len() > 0 {
+                    anyhow::bail!("head-of-line request cannot fit the KV pool");
+                }
+                break;
+            };
+            let queue_s = admitted.enqueued_at.elapsed().as_secs_f64();
+            let req = admitted.request;
+            let start = Instant::now();
+            let result = self.engine.generate(&req.prompt, req.decode_len)?;
+            let e2e_s = start.elapsed().as_secs_f64() + queue_s;
+            self.scheduler.complete(req.id)?;
+            self.completed.push(RequestMetrics {
+                request_id: req.id,
+                prompt_tokens: req.prompt.len(),
+                generated_tokens: result.tokens.len(),
+                queue_s,
+                ttft_s: result.ttft.as_secs_f64(),
+                tpot_s: result.tpot.as_secs_f64(),
+                e2e_s,
+            });
+        }
+        Ok(&self.completed[first..])
+    }
+
+    /// Serve a batch and summarize (the end-to-end example's entry point).
+    pub fn serve_batch(&mut self, requests: Vec<Request>) -> Result<ServeSummary> {
+        let wall_start = Instant::now();
+        for r in requests {
+            self.submit(r)?;
+        }
+        let served = self.run_to_completion()?.to_vec();
+        Ok(ServeSummary::from_metrics(&served, wall_start.elapsed()))
+    }
+
+    pub fn completed(&self) -> &[RequestMetrics] {
+        &self.completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ParallelLayout;
+    use crate::engine::{EngineConfig, EngineMode};
+    use crate::model::ModelArch;
+
+    fn tiny_server(tp: usize, pp: usize) -> Server {
+        let cfg = EngineConfig {
+            arch: ModelArch::tiny(),
+            layout: ParallelLayout::new(tp, pp),
+            mode: EngineMode::Structural,
+            trace_dtype_bytes: 2,
+        };
+        Server::new(
+            Engine::new(cfg).unwrap(),
+            SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 64 },
+        )
+    }
+
+    #[test]
+    fn serves_batch_fcfs_and_releases_kv() {
+        let mut srv = tiny_server(2, 2);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request { id: i, prompt: vec![0; 16], decode_len: 8 })
+            .collect();
+        let summary = srv.serve_batch(reqs).unwrap();
+        assert_eq!(summary.requests, 4);
+        assert_eq!(summary.total_tokens, 32);
+        assert!(summary.tokens_per_s > 0.0);
+        assert_eq!(srv.completed().len(), 4);
+        // completion order is submission order (FCFS, single-engine)
+        let ids: Vec<u64> = srv.completed().iter().map(|m| m.request_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn later_requests_wait_in_queue() {
+        let mut srv = tiny_server(1, 2);
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request { id: i, prompt: vec![0; 8], decode_len: 4 })
+            .collect();
+        srv.serve_batch(reqs).unwrap();
+        let m = srv.completed();
+        assert!(m[2].queue_s >= m[0].queue_s, "FCFS queueing accumulates");
+    }
+}

@@ -1,0 +1,169 @@
+//! Test & bench utilities (std-only substitutes for tempfile / proptest /
+//! criterion, which the vendored environment does not provide —
+//! DESIGN.md §5).
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Self-cleaning temporary directory.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create a unique directory under the system temp dir.
+    pub fn new(prefix: &str) -> Self {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let path = std::env::temp_dir().join(format!(
+            "{prefix}-{}-{nanos}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        Self { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// SplitMix64 — deterministic PRNG for property-style tests (proptest
+/// substitute). Good statistical quality for test-case generation.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    pub fn f32_unit(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32 * 2.0 - 1.0
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_unit()).collect()
+    }
+}
+
+/// Timing statistics over repeated runs (criterion substitute for the
+/// `cargo bench` harness binaries).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>6} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Run `f` repeatedly (after `warmup` runs) and report distribution stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let p95_idx = ((iters * 95) / 100).min(iters - 1);
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[p95_idx],
+        min: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let d = TempDir::new("commsim-test");
+            p = d.path().to_path_buf();
+            assert!(p.exists());
+            std::fs::write(p.join("f"), b"x").unwrap();
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn rng_is_deterministic_and_in_range() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        for _ in 0..1000 {
+            let v = a.usize_in(3, 7);
+            assert!((3..=7).contains(&v));
+            let f = a.f32_unit();
+            assert!((-1.0..1.0).contains(&f));
+        }
+        // different seeds diverge
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop", 1, 16, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 16);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert!(s.report().contains("noop"));
+    }
+}

@@ -1,0 +1,144 @@
+//! End-to-end numeric integration: the Rust engine executing the AOT tiny
+//! model via PJRT must produce the *same greedy token sequence* under every
+//! parallel layout — and that sequence must match the JAX reference
+//! (`python/compile/model.py::full_step`, pinned below).
+//!
+//! This is the proof that the three layers compose: Pallas kernels (L1)
+//! lowered inside the JAX segments (L2), AOT'd to HLO, executed by PJRT
+//! from the Rust coordinator (L3) with *real* AllReduce/AllGather/Gather/
+//! Send/Recv between workers.
+//!
+//! Requires `make artifacts`.
+
+use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout};
+use commsim::comm::{CollectiveKind, Stage};
+use commsim::engine::{Engine, EngineConfig};
+use commsim::model::ModelArch;
+use commsim::runtime::ArtifactStore;
+
+/// Greedy continuation of the pinned prompt computed by the JAX reference
+/// (see python/tests/test_numeric_pin.py, same constants).
+const EXPECTED_TOKENS: [i32; 12] = [95, 497, 497, 497, 109, 379, 109, 291, 497, 497, 109, 269];
+
+fn pinned_prompt(len: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|i| ((7 * i) % vocab) as i32).collect()
+}
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts present (run `make artifacts`)")
+}
+
+fn generate(layout: ParallelLayout, decode_len: usize) -> (Vec<i32>, Engine) {
+    let store = store();
+    let prompt = pinned_prompt(store.meta.prefill_len, store.meta.vocab);
+    let mut engine = Engine::new(EngineConfig::numeric(store, layout)).expect("engine");
+    let result = engine.generate(&prompt, decode_len).expect("generate");
+    (result.tokens, engine)
+}
+
+#[test]
+fn tp1_matches_jax_reference() {
+    let (tokens, _) = generate(ParallelLayout::new(1, 1), EXPECTED_TOKENS.len());
+    assert_eq!(tokens, EXPECTED_TOKENS, "single-worker segment composition");
+}
+
+#[test]
+fn tp2_matches_jax_reference_with_real_allreduce() {
+    let (tokens, engine) = generate(ParallelLayout::new(2, 1), EXPECTED_TOKENS.len());
+    assert_eq!(tokens, EXPECTED_TOKENS, "TP=2 sharded inference");
+    // And the communication stream matches the analytical model exactly.
+    let summary = engine.trace().summary();
+    let model = OpCountModel::new(
+        ModelArch::tiny(),
+        ParallelLayout::new(2, 1),
+        InferenceShape::new(32, EXPECTED_TOKENS.len(), 4),
+    );
+    for stage in [Stage::Prefill, Stage::Decode] {
+        let predicted = model.predict_paper_view(stage);
+        for op in [CollectiveKind::AllReduce, CollectiveKind::Gather] {
+            assert_eq!(
+                summary.paper_view(op, stage).count,
+                predicted.count(op),
+                "{op:?} {stage:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tp4_matches_jax_reference() {
+    let (tokens, _) = generate(ParallelLayout::new(4, 1), EXPECTED_TOKENS.len());
+    assert_eq!(tokens, EXPECTED_TOKENS, "TP=4 sharded inference");
+}
+
+#[test]
+fn pp2_matches_jax_reference_with_real_p2p() {
+    let (tokens, engine) = generate(ParallelLayout::new(1, 2), EXPECTED_TOKENS.len());
+    assert_eq!(tokens, EXPECTED_TOKENS, "PP=2 staged inference");
+    let summary = engine.trace().summary();
+    // (p-1) * 2 tensors * steps: prefill 1 step, decode len-1 steps.
+    assert_eq!(summary.global_count(CollectiveKind::Send, Stage::Prefill), 2);
+    assert_eq!(
+        summary.global_count(CollectiveKind::Send, Stage::Decode),
+        2 * (EXPECTED_TOKENS.len() - 1)
+    );
+}
+
+#[test]
+fn pp4_matches_jax_reference() {
+    let (tokens, _) = generate(ParallelLayout::new(1, 4), EXPECTED_TOKENS.len());
+    assert_eq!(tokens, EXPECTED_TOKENS, "PP=4 staged inference");
+}
+
+#[test]
+fn hybrid_tp2_pp2_matches_jax_reference() {
+    let (tokens, engine) = generate(ParallelLayout::new(2, 2), EXPECTED_TOKENS.len());
+    assert_eq!(tokens, EXPECTED_TOKENS, "hybrid TP=2 PP=2 inference");
+    let summary = engine.trace().summary();
+    // Hybrid adds stage-entry AllGathers (2 per step on stage-1 ranks).
+    assert_eq!(summary.paper_view(CollectiveKind::AllGather, Stage::Prefill).count, 2);
+    assert_eq!(
+        summary.paper_view(CollectiveKind::AllGather, Stage::Decode).count,
+        2 * (EXPECTED_TOKENS.len() - 1)
+    );
+    // p2p carries the TP-local slice [S, h/2].
+    let shapes = summary.shapes(CollectiveKind::Send, Stage::Prefill);
+    assert_eq!(shapes, vec![vec![32, ModelArch::tiny().hidden / 2]]);
+}
+
+#[test]
+fn fused_engine_matches_segment_engine() {
+    // The fused whole-model graphs (one dispatch per step) must produce
+    // the same tokens as the segment-loop engine — the L2 §Perf fast path
+    // is semantics-preserving.
+    use commsim::engine::fused::FusedEngine;
+    let store = store();
+    let prompt = pinned_prompt(store.meta.prefill_len, store.meta.vocab);
+    let mut fused = FusedEngine::new(store).expect("fused engine");
+    let r = fused.generate(&prompt, EXPECTED_TOKENS.len()).expect("generate");
+    assert_eq!(r.tokens, EXPECTED_TOKENS);
+    // And again (KV reset path).
+    let r2 = fused.generate(&prompt, 6).expect("generate");
+    assert_eq!(r2.tokens, &EXPECTED_TOKENS[..6]);
+}
+
+#[test]
+fn repeated_requests_reset_kv_state() {
+    let store = store();
+    let prompt = pinned_prompt(store.meta.prefill_len, store.meta.vocab);
+    let mut engine =
+        Engine::new(EngineConfig::numeric(store, ParallelLayout::new(2, 1))).unwrap();
+    let a = engine.generate(&prompt, 6).unwrap();
+    let b = engine.generate(&prompt, 6).unwrap();
+    assert_eq!(a.tokens, b.tokens, "KV reset isolates requests");
+    assert_eq!(a.tokens, &EXPECTED_TOKENS[..6]);
+}
+
+#[test]
+fn numeric_mode_validates_prompt_length() {
+    let store = store();
+    let mut engine =
+        Engine::new(EngineConfig::numeric(store, ParallelLayout::new(1, 1))).unwrap();
+    assert!(engine.generate(&[1, 2, 3], 4).is_err(), "wrong prompt length");
+}
