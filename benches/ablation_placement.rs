@@ -4,21 +4,31 @@
 //! 2. serving dtype — BF16 vs F32 halves every message (Table I's `b`);
 //! 3. collective algorithm accounting — ring vs naive star AllReduce cost.
 
-use commsim::analysis::{InferenceShape, ParallelLayout, VolumeModel};
-use commsim::cluster::{NetModel, Placement, Topology};
+use commsim::cluster::{NetModel, Topology};
 use commsim::model::ModelArch;
-use commsim::perfmodel::{Calibration, SloSimulator};
+use commsim::perfmodel::Calibration;
+use commsim::plan::Deployment;
 use commsim::report::{fmt_bytes, render_table};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama32_3b();
-    let shape = InferenceShape::new(128, 128, 2);
 
     // --- 1. placement: TP=4 on one node vs straddling two --------------
-    let packed = Placement::new(Topology::new(1, 4), ParallelLayout::new(4, 1))?;
-    let straddled = Placement::new(Topology::new(2, 2), ParallelLayout::new(4, 1))?;
-    let r_packed = SloSimulator::new(arch.clone(), packed).simulate(shape);
-    let r_straddled = SloSimulator::new(arch.clone(), straddled).simulate(shape);
+    // Same model, same layout, same workload — only the topology differs.
+    let packed = Deployment::builder()
+        .arch(arch.clone())
+        .tp(4)
+        .topology(Topology::new(1, 4))
+        .workload(128, 128)
+        .build()?;
+    let straddled = Deployment::builder()
+        .arch(arch.clone())
+        .tp(4)
+        .topology(Topology::new(2, 2))
+        .workload(128, 128)
+        .build()?;
+    let r_packed = packed.simulate();
+    let r_straddled = straddled.simulate();
     print!(
         "{}",
         render_table(
@@ -52,9 +62,14 @@ fn main() -> anyhow::Result<()> {
     // --- 2. dtype: BF16 vs F32 -----------------------------------------
     let mut rows = Vec::new();
     for (name, b) in [("BF16", 2usize), ("F32", 4)] {
-        let v = VolumeModel::new(ModelArch::llama31_8b())
-            .volume(ParallelLayout::new(4, 1), InferenceShape::new(128, 128, b));
-        rows.push(vec![name.into(), fmt_bytes(v.total())]);
+        let v = Deployment::builder()
+            .arch(ModelArch::llama31_8b())
+            .tp(4)
+            .workload(128, 128)
+            .dtype_bytes(b)
+            .build()?
+            .analyze();
+        rows.push(vec![name.into(), fmt_bytes(v.total_bytes())]);
     }
     print!(
         "{}",

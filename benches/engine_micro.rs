@@ -5,9 +5,8 @@
 //! - numeric mode (if artifacts are built): the tiny real model through
 //!   PJRT — the serve_e2e hot path the §Perf pass optimizes.
 
-use commsim::analysis::ParallelLayout;
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::runtime::ArtifactStore;
 use commsim::testutil::bench;
 
@@ -18,10 +17,12 @@ fn main() -> anyhow::Result<()> {
     // prefill buffer churn ([128, 4096] AllReduces); decode-step cost is
     // reported from the engine's own per-step latencies.
     for (tp, pp) in [(2usize, 1usize), (4, 1), (1, 2), (2, 2)] {
-        let mut engine = Engine::new(EngineConfig::structural(
-            ModelArch::llama31_8b(),
-            ParallelLayout::new(tp, pp),
-        ))?;
+        let plan = Deployment::builder()
+            .arch(ModelArch::llama31_8b())
+            .tp(tp)
+            .pp(pp)
+            .build()?;
+        let mut engine = plan.engine()?;
         let mut last_tpot = std::time::Duration::ZERO;
         let stats = bench(
             &format!("structural 8B tp={tp} pp={pp} (Sp=128, Sd=16)"),
@@ -42,8 +43,12 @@ fn main() -> anyhow::Result<()> {
             let sp = store.meta.prefill_len;
             let prompt: Vec<i32> = (0..sp as i32).collect();
             for (tp, pp) in [(1usize, 1usize), (2, 1), (2, 2)] {
-                let mut engine =
-                    Engine::new(EngineConfig::numeric(store.clone(), ParallelLayout::new(tp, pp)))?;
+                let plan = Deployment::builder()
+                    .artifacts(store.clone())
+                    .tp(tp)
+                    .pp(pp)
+                    .build()?;
+                let mut engine = plan.engine()?;
                 engine.warmup()?;
                 let stats = bench(
                     &format!("numeric tiny tp={tp} pp={pp} (Sp={sp}, Sd=16)"),

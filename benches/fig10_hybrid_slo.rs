@@ -2,14 +2,13 @@
 //! parallelism strategies on 8 GPUs / 2 nodes: TP=8, TP=4×PP=2 (the
 //! paper's "catastrophic" unbalanced config), TP=2×PP=4, PP=8.
 
-use commsim::analysis::{InferenceShape, ParallelLayout};
+use commsim::analysis::ParallelLayout;
 use commsim::model::ModelArch;
-use commsim::perfmodel::SloSimulator;
+use commsim::plan::Deployment;
 use commsim::report::render_table;
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama2_13b();
-    let shape = InferenceShape::new(128, 128, 2);
     // Paper Fig. 10 (numbers quoted in §V.C; '-' = not stated precisely).
     let paper: &[(usize, usize, Option<f64>, Option<f64>, Option<f64>)] = &[
         // (tp, pp, e2e s, ttft ms, tpot ms)
@@ -22,8 +21,13 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut sims = Vec::new();
     for &(tp, pp, p_e2e, p_ttft, p_tpot) in paper {
-        let sim = SloSimulator::on_cardinal(arch.clone(), ParallelLayout::new(tp, pp))?;
-        let r = sim.simulate(shape);
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .tp(tp)
+            .pp(pp)
+            .workload(128, 128)
+            .build()?;
+        let r = plan.simulate();
         sims.push(((tp, pp), r));
         let fmt_opt = |v: Option<f64>, scale: f64, digits: usize| match v {
             Some(x) => format!("{:.*}", digits, x * scale),

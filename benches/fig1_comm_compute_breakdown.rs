@@ -2,39 +2,37 @@
 //! Llama-3.1-8B inference under various parallelism settings.
 //!
 //! The paper's motivating figure shows the fraction of execution time spent
-//! in communication per layout. Our SLO simulator decomposes every phase
-//! into {compute, comm, framework overhead} (perfmodel::slo); this bench
-//! prints the same series.
+//! in communication per layout. The plan facade's SLO simulator decomposes
+//! every phase into {compute, comm, framework overhead} (perfmodel::slo);
+//! this bench prints the same series.
 
-use commsim::analysis::{InferenceShape, ParallelLayout};
 use commsim::model::ModelArch;
-use commsim::perfmodel::SloSimulator;
+use commsim::plan::Deployment;
 use commsim::report::render_table;
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
-    let shape = InferenceShape::new(128, 128, 2);
-    let layouts = [
-        ParallelLayout::new(2, 1),
-        ParallelLayout::new(4, 1),
-        ParallelLayout::new(1, 2),
-        ParallelLayout::new(1, 4),
-        ParallelLayout::new(2, 2),
-    ];
+    let layouts = [(2usize, 1usize), (4, 1), (1, 2), (1, 4), (2, 2)];
 
     let mut rows = Vec::new();
     let mut fractions = Vec::new();
-    for layout in layouts {
-        let sim = SloSimulator::on_cardinal(arch.clone(), layout)?;
-        let r = sim.simulate(shape);
+    for (tp, pp) in layouts {
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .tp(tp)
+            .pp(pp)
+            .workload(128, 128)
+            .build()?;
+        let shape = plan.shape();
+        let r = plan.simulate();
         let f = r.comm_fraction(shape);
-        fractions.push((layout, f));
+        fractions.push(((tp, pp), f));
         let steps = (shape.decode_len - 1) as f64;
         let compute = r.prefill.compute_s + steps * r.decode_step.compute_s;
         let comm = r.prefill.comm_s + steps * r.decode_step.comm_s;
         let overhead = r.prefill.overhead_s + steps * r.decode_step.overhead_s;
         rows.push(vec![
-            layout.label(),
+            plan.layout().label(),
             format!("{:.1}%", f * 100.0),
             format!("{:.1} ms", compute * 1e3),
             format!("{:.1} ms", comm * 1e3),
@@ -56,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     let f = |tp: usize, pp: usize| {
         fractions
             .iter()
-            .find(|(l, _)| l.tp == tp && l.pp == pp)
+            .find(|((t, p), _)| *t == tp && *p == pp)
             .map(|(_, f)| *f)
             .unwrap()
     };

@@ -2,23 +2,24 @@
 //! against observed data (AllReduce count & total message size), TP=4,
 //! end-to-end (prefill + decode), across the three evaluation models.
 
-use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout};
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::report::{fmt_bytes, render_table};
 
 fn main() -> anyhow::Result<()> {
-    let layout = ParallelLayout::new(4, 1);
-    let shape = InferenceShape::new(128, 128, 2);
     let mut rows = Vec::new();
     let mut failures = 0;
 
     for arch in ModelArch::paper_models() {
-        let model = OpCountModel::new(arch.clone(), layout, shape);
-        let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
-        engine.generate(&vec![0i32; 128], 128)?;
-        let s = engine.trace().summary();
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .tp(4)
+            .workload(128, 128)
+            .build()?;
+        let predicted = plan.analyze();
+        let s = plan.trace()?;
+        let shape = plan.shape();
 
         // E2E = prefill + decode, per-worker paper view.
         let mut a_count = 0usize;
@@ -26,8 +27,12 @@ fn main() -> anyhow::Result<()> {
         let mut m_count = 0usize;
         let mut m_bytes = 0usize;
         for stage in [Stage::Prefill, Stage::Decode] {
-            let pred = model.predict_paper_view(stage);
-            for o in pred.ops.iter().filter(|o| o.op == CollectiveKind::AllReduce) {
+            for o in predicted
+                .ops(stage)
+                .ops
+                .iter()
+                .filter(|o| o.op == CollectiveKind::AllReduce)
+            {
                 let elems: usize = o.shape.iter().product();
                 a_count += o.count;
                 a_bytes += (o.count * elems * shape.dtype_bytes) as f64;

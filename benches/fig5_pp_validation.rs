@@ -2,32 +2,34 @@
 //! against observed data (E2E point-to-point count & total message size),
 //! Llama-3.1-8B, across PP degrees.
 
-use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout};
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::report::{fmt_bytes, render_table};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
-    let shape = InferenceShape::new(128, 128, 2);
     let mut rows = Vec::new();
     let mut failures = 0;
 
     for pp in [2usize, 4, 8] {
-        let layout = ParallelLayout::new(1, pp);
-        let model = OpCountModel::new(arch.clone(), layout, shape);
-        let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
-        engine.generate(&vec![0i32; 128], 128)?;
-        let s = engine.trace().summary();
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .pp(pp)
+            .workload(128, 128)
+            .build()?;
+        let shape = plan.shape();
+        // Fig. 5 uses the global view (each transfer counted once).
+        let predicted = plan.analyze();
+        let s = plan.trace()?;
 
         let mut a_count = 0usize;
         let mut a_bytes = 0f64;
         let mut m_count = 0usize;
         let mut m_bytes = 0usize;
         for stage in [Stage::Prefill, Stage::Decode] {
-            for o in model
-                .predict_global(stage)
+            for o in predicted
+                .global_ops(stage)
                 .ops
                 .iter()
                 .filter(|o| o.op == CollectiveKind::Send)

@@ -6,25 +6,32 @@
 //! volumes and asserts the paper's ordering: TP highest, PP lowest, hybrid
 //! between, monotone in model size.
 
-use commsim::analysis::{InferenceShape, ParallelLayout, VolumeModel};
-use commsim::comm::CollectiveKind;
-use commsim::engine::{Engine, EngineConfig};
+use commsim::comm::{CollectiveKind, Stage};
 use commsim::model::ModelArch;
+use commsim::plan::{Deployment, DeploymentPlan};
 use commsim::report::{fmt_bytes, render_table};
+
+fn plan_for(arch: &ModelArch, tp: usize, pp: usize) -> anyhow::Result<DeploymentPlan> {
+    Ok(Deployment::builder()
+        .arch(arch.clone())
+        .tp(tp)
+        .pp(pp)
+        .workload(128, 128)
+        .build()?)
+}
 
 /// Engine-traced volume under the paper's per-class accounting (one
 /// worker-stream for collectives, per-pair for p2p — see DESIGN.md §6).
-fn traced_volume(arch: &ModelArch, layout: ParallelLayout) -> anyhow::Result<f64> {
-    let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
-    engine.generate(&vec![0i32; 128], 128)?;
-    let s = engine.trace().summary();
+fn traced_volume(plan: &DeploymentPlan) -> anyhow::Result<f64> {
+    let s = plan.trace()?;
     let mut total = 0.0;
     for op in [CollectiveKind::AllReduce, CollectiveKind::AllGather, CollectiveKind::Gather] {
-        for stage in [commsim::comm::Stage::Prefill, commsim::comm::Stage::Decode] {
+        for stage in [Stage::Prefill, Stage::Decode] {
             total += s.paper_view(op, stage).corrected_volume_bytes;
         }
     }
     // p2p: one rank pair's stream (rank 0 sends; Eq. 7 accounting).
+    let layout = plan.layout();
     if layout.pp > 1 {
         total += s.per_rank[0]
             .iter()
@@ -37,25 +44,20 @@ fn traced_volume(arch: &ModelArch, layout: ParallelLayout) -> anyhow::Result<f64
 }
 
 fn main() -> anyhow::Result<()> {
-    let shape = InferenceShape::new(128, 128, 2);
-    let layouts = [
-        ParallelLayout::new(4, 1),
-        ParallelLayout::new(2, 2),
-        ParallelLayout::new(1, 4),
-    ];
+    let layouts = [(4usize, 1usize), (2, 2), (1, 4)];
 
     let mut rows = Vec::new();
     let mut analytic: Vec<Vec<f64>> = Vec::new();
     for arch in ModelArch::paper_models() {
-        let vm = VolumeModel::new(arch.clone());
         let mut per_layout = Vec::new();
-        for layout in layouts {
-            let a = vm.volume(layout, shape).total();
-            let t = traced_volume(&arch, layout)?;
+        for (tp, pp) in layouts {
+            let plan = plan_for(&arch, tp, pp)?;
+            let a = plan.analyze().total_bytes();
+            let t = traced_volume(&plan)?;
             per_layout.push(a);
             rows.push(vec![
                 arch.name.clone(),
-                layout.label(),
+                plan.layout().label(),
                 fmt_bytes(a),
                 fmt_bytes(t),
                 format!("{:+.2}%", (t - a) / a * 100.0),
@@ -77,11 +79,10 @@ fn main() -> anyhow::Result<()> {
         let (tp, hy, pp) = (analytic[i][0], analytic[i][1], analytic[i][2]);
         anyhow::ensure!(tp > hy && hy > pp, "{}: ordering TP > hybrid > PP", arch.name);
     }
-    for l in 0..layouts.len() {
+    for (l, &(tp, pp)) in layouts.iter().enumerate() {
         anyhow::ensure!(
             analytic[0][l] < analytic[1][l] && analytic[1][l] < analytic[2][l],
-            "volume grows with model size for {}",
-            layouts[l].label()
+            "volume grows with model size for TP={tp} PP={pp}"
         );
     }
     println!("\nFig. 6 reproduced: TP highest, PP lowest, hybrid between; monotone in model size.");

@@ -6,31 +6,38 @@
 //! ≈1.67× for 256→512 (the `(S_p + S_d − 1)` dilution), PP lowest volume,
 //! TP growing fastest in absolute terms.
 
-use commsim::analysis::{InferenceShape, ParallelLayout, VolumeModel};
+use commsim::analysis::ParallelLayout;
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::report::{fmt_bytes, render_table};
 
+fn volume(arch: &ModelArch, tp: usize, pp: usize, sd: usize) -> anyhow::Result<f64> {
+    let plan = Deployment::builder()
+        .arch(arch.clone())
+        .tp(tp)
+        .pp(pp)
+        .workload(128, sd)
+        .build()?;
+    Ok(plan.analyze().total_bytes())
+}
+
 fn main() -> anyhow::Result<()> {
-    let layouts = [
-        ParallelLayout::new(4, 1),
-        ParallelLayout::new(2, 2),
-        ParallelLayout::new(1, 4),
-    ];
+    let layouts = [(4usize, 1usize), (2, 2), (1, 4)];
     let sds = [128usize, 256, 512];
 
     let mut rows = Vec::new();
     for arch in ModelArch::paper_models() {
-        let vm = VolumeModel::new(arch.clone());
-        for layout in layouts {
+        for (tp, pp) in layouts {
             let vols: Vec<f64> = sds
                 .iter()
-                .map(|&sd| vm.volume(layout, InferenceShape::new(128, sd, 2)).total())
-                .collect();
+                .map(|&sd| volume(&arch, tp, pp, sd))
+                .collect::<anyhow::Result<_>>()?;
             let g1 = vols[1] / vols[0];
             let g2 = vols[2] / vols[1];
+            let label = ParallelLayout::new(tp, pp).label();
             rows.push(vec![
                 arch.name.clone(),
-                layout.label(),
+                label.clone(),
                 fmt_bytes(vols[0]),
                 fmt_bytes(vols[1]),
                 fmt_bytes(vols[2]),
@@ -40,12 +47,12 @@ fn main() -> anyhow::Result<()> {
             // PP and TP=4 track the quoted factors tightly; the hybrid
             // layout carries a larger Gather share (∝ Sd, v/t = 64128 at
             // t=2) so its growth sits slightly higher but stays sub-linear.
-            if layout.pp == 1 || layout.tp == 1 {
-                anyhow::ensure!((g1 - 1.50).abs() < 0.04, "{} {}: g1={g1}", arch.name, layout.label());
-                anyhow::ensure!((g2 - 1.67).abs() < 0.04, "{} {}: g2={g2}", arch.name, layout.label());
+            if pp == 1 || tp == 1 {
+                anyhow::ensure!((g1 - 1.50).abs() < 0.04, "{} {label}: g1={g1}", arch.name);
+                anyhow::ensure!((g2 - 1.67).abs() < 0.04, "{} {label}: g2={g2}", arch.name);
             } else {
-                anyhow::ensure!((1.45..1.75).contains(&g1), "{} {}: g1={g1}", arch.name, layout.label());
-                anyhow::ensure!((1.55..1.90).contains(&g2), "{} {}: g2={g2}", arch.name, layout.label());
+                anyhow::ensure!((1.45..1.75).contains(&g1), "{} {label}: g1={g1}", arch.name);
+                anyhow::ensure!((1.55..1.90).contains(&g2), "{} {label}: g2={g2}", arch.name);
             }
             anyhow::ensure!(g1 < 2.0 && g2 < 2.0, "sub-linear in the 2x length step");
         }
@@ -61,12 +68,10 @@ fn main() -> anyhow::Result<()> {
 
     // PP stays lowest at every Sd; TP grows fastest absolutely.
     for arch in ModelArch::paper_models() {
-        let vm = VolumeModel::new(arch.clone());
         for &sd in &sds {
-            let s = InferenceShape::new(128, sd, 2);
-            let tp = vm.volume(layouts[0], s).total();
-            let hy = vm.volume(layouts[1], s).total();
-            let pp = vm.volume(layouts[2], s).total();
+            let tp = volume(&arch, 4, 1, sd)?;
+            let hy = volume(&arch, 2, 2, sd)?;
+            let pp = volume(&arch, 1, 4, sd)?;
             anyhow::ensure!(pp < hy && hy < tp, "{} Sd={sd} ordering", arch.name);
         }
     }

@@ -7,14 +7,12 @@
 //! published numbers are printed alongside; the acceptance criteria are the
 //! orderings and ≤25-35% deviation.
 
-use commsim::analysis::{InferenceShape, ParallelLayout};
 use commsim::model::ModelArch;
-use commsim::perfmodel::SloSimulator;
+use commsim::plan::Deployment;
 use commsim::report::render_table;
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama32_3b();
-    let shape = InferenceShape::new(128, 128, 2);
     // Paper Fig. 8: (tp, e2e s, ttft ms, tpot ms).
     let paper = [
         (2usize, 0.310f64, 150.0f64, 1.17f64),
@@ -25,8 +23,12 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut sims = Vec::new();
     for (tp, p_e2e, p_ttft, p_tpot) in paper {
-        let sim = SloSimulator::on_cardinal(arch.clone(), ParallelLayout::new(tp, 1))?;
-        let r = sim.simulate(shape);
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .tp(tp)
+            .workload(128, 128)
+            .build()?;
+        let r = plan.simulate();
         sims.push((tp, r));
         rows.push(vec![
             format!("TP={tp}{}", if tp == 8 { " (2 nodes)" } else { "" }),

@@ -2,14 +2,12 @@
 //! parallelism degrees (PP=2, 4 intra-node; PP=8 across two nodes),
 //! Sp = Sd = 128.
 
-use commsim::analysis::{InferenceShape, ParallelLayout};
 use commsim::model::ModelArch;
-use commsim::perfmodel::SloSimulator;
+use commsim::plan::Deployment;
 use commsim::report::render_table;
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama32_3b();
-    let shape = InferenceShape::new(128, 128, 2);
     // Paper Fig. 9: (pp, e2e s, ttft ms, tpot ms ~).
     let paper = [
         (2usize, 0.69f64, 430.0f64, 2.0f64),
@@ -20,8 +18,12 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut sims = Vec::new();
     for (pp, p_e2e, p_ttft, p_tpot) in paper {
-        let sim = SloSimulator::on_cardinal(arch.clone(), ParallelLayout::new(1, pp))?;
-        let r = sim.simulate(shape);
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .pp(pp)
+            .workload(128, 128)
+            .build()?;
+        let r = plan.simulate();
         sims.push((pp, r));
         rows.push(vec![
             format!("PP={pp}{}", if pp == 8 { " (2 nodes)" } else { "" }),

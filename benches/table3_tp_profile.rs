@@ -1,19 +1,18 @@
 //! Table III reproduction: message size & frequency breakdown for
 //! intra-node TP, Llama-3.1-8B, Sp = Sd = 128, TP ∈ {2, 4}.
 //!
-//! Runs the structural engine (identical communication stream to the real
-//! one; compute stubbed — DESIGN.md §5) and prints measured counts/shapes
-//! next to the analytical model and the paper's published values.
+//! Runs the structural engine through the deployment-plan facade
+//! (identical communication stream to the real one; compute stubbed —
+//! DESIGN.md §5) and prints measured counts/shapes next to the analytical
+//! model and the paper's published values.
 
-use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout};
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::report::{fmt_shape, render_table};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
-    let shape = InferenceShape::new(128, 128, 2);
     // Paper Table III rows: (tp, stage, op, count, shape).
     let paper: &[(usize, Stage, CollectiveKind, usize, Vec<usize>)] = &[
         (2, Stage::Prefill, CollectiveKind::AllReduce, 65, vec![128, 4096]),
@@ -28,13 +27,19 @@ fn main() -> anyhow::Result<()> {
 
     let mut failures = 0;
     for tp in [2usize, 4] {
-        let layout = ParallelLayout::new(tp, 1);
-        let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .tp(tp)
+            .workload(128, 128)
+            .build()?;
+        // Time only the generate (comparable to pre-facade baselines),
+        // not the worker-group spawn inside engine().
+        let mut engine = plan.engine()?;
         let t0 = std::time::Instant::now();
         engine.generate(&vec![0i32; 128], 128)?;
         let elapsed = t0.elapsed();
         let summary = engine.trace().summary();
-        let model = OpCountModel::new(arch.clone(), layout, shape);
+        let predicted = plan.analyze();
 
         let mut rows = Vec::new();
         for (_ptp, stage, op, pcount, pshape) in paper.iter().filter(|r| r.0 == tp) {
@@ -44,7 +49,7 @@ fn main() -> anyhow::Result<()> {
                 .first()
                 .cloned()
                 .unwrap_or_default();
-            let acount = model.predict_paper_view(*stage).count(*op);
+            let acount = predicted.ops(*stage).count(*op);
             let ok = measured.count == *pcount && acount == *pcount && mshape == *pshape;
             if !ok {
                 failures += 1;

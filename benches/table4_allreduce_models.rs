@@ -2,10 +2,9 @@
 //! Llama-3.2-3B / Llama-3.1-8B / Llama-2-13B for end-to-end inference
 //! (Sp = Sd = 128, BF16, TP=4).
 
-use commsim::analysis::ParallelLayout;
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::report::render_table;
 
 fn main() -> anyhow::Result<()> {
@@ -20,10 +19,12 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut failures = 0;
     for (arch, p_pre_bytes, p_dec_bytes, p_pre_count, p_dec_count) in paper {
-        let mut engine =
-            Engine::new(EngineConfig::structural(arch.clone(), ParallelLayout::new(4, 1)))?;
-        engine.generate(&vec![0i32; 128], 128)?;
-        let s = engine.trace().summary();
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .tp(4)
+            .workload(128, 128)
+            .build()?;
+        let s = plan.trace()?;
         let pre = s.paper_view(CollectiveKind::AllReduce, Stage::Prefill);
         let dec = s.paper_view(CollectiveKind::AllReduce, Stage::Decode);
         let m_pre_bytes = pre.total_message_bytes / pre.count.max(1);

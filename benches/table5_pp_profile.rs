@@ -1,15 +1,13 @@
 //! Table V reproduction: Send/Recv message size & frequency for pipeline
 //! parallelism, Llama-3.1-8B, Sp = Sd = 128, PP ∈ {2, 4}.
 
-use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout};
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::report::{fmt_shape, render_table};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
-    let shape = InferenceShape::new(128, 128, 2);
     // Paper Table V: (pp, stage, op, count, shape) — counts are global
     // (summed across ranks), matching the paper's aggregate view.
     let paper: &[(usize, Stage, CollectiveKind, usize, Vec<usize>)] = &[
@@ -25,18 +23,25 @@ fn main() -> anyhow::Result<()> {
 
     let mut failures = 0;
     for pp in [2usize, 4] {
-        let layout = ParallelLayout::new(1, pp);
-        let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
+        let plan = Deployment::builder()
+            .arch(arch.clone())
+            .pp(pp)
+            .workload(128, 128)
+            .build()?;
+        // Time only the generate (comparable to pre-facade baselines),
+        // not the worker-group spawn inside engine().
+        let mut engine = plan.engine()?;
         let t0 = std::time::Instant::now();
         engine.generate(&vec![0i32; 128], 128)?;
         let elapsed = t0.elapsed();
         let summary = engine.trace().summary();
-        let model = OpCountModel::new(arch.clone(), layout, shape);
+        let predicted = plan.analyze();
 
         let mut rows = Vec::new();
         for (_ppp, stage, op, pcount, pshape) in paper.iter().filter(|r| r.0 == pp) {
+            // Table V is the paper's *global* view (each transfer once).
             let mcount = summary.global_count(*op, *stage);
-            let acount = model.predict_global(*stage).count(*op);
+            let acount = predicted.global_ops(*stage).count(*op);
             let mshape = summary
                 .shapes(*op, *stage)
                 .first()

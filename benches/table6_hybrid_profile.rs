@@ -1,16 +1,13 @@
 //! Table VI reproduction: message size & frequency for hybrid TP=2 × PP=2,
 //! Llama-3.1-8B, Sp = Sd = 128.
 
-use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout};
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::report::{fmt_shape, render_table};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
-    let layout = ParallelLayout::new(2, 2);
-    let shape = InferenceShape::new(128, 128, 2);
     // Paper Table VI (paper-view convention: the rank observing the most of
     // each op class — §IV.B excludes rank 0 and reads one worker profile).
     let paper: &[(Stage, CollectiveKind, usize, Vec<usize>)] = &[
@@ -24,18 +21,26 @@ fn main() -> anyhow::Result<()> {
         (Stage::Decode, CollectiveKind::Send, 254, vec![1, 2048]),
     ];
 
-    let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
+    let plan = Deployment::builder()
+        .arch(arch.clone())
+        .tp(2)
+        .pp(2)
+        .workload(128, 128)
+        .build()?;
+    // Time only the generate (comparable to pre-facade baselines), not
+    // the worker-group spawn inside engine().
+    let mut engine = plan.engine()?;
     let t0 = std::time::Instant::now();
     engine.generate(&vec![0i32; 128], 128)?;
     let elapsed = t0.elapsed();
     let summary = engine.trace().summary();
-    let model = OpCountModel::new(arch.clone(), layout, shape);
+    let predicted = plan.analyze();
 
     let mut rows = Vec::new();
     let mut failures = 0;
     for (stage, op, pcount, pshape) in paper {
         let measured = summary.paper_view(*op, *stage);
-        let acount = model.predict_paper_view(*stage).count(*op);
+        let acount = predicted.ops(*stage).count(*op);
         let mshape = summary.shapes(*op, *stage).first().cloned().unwrap_or_default();
         let ok = measured.count == *pcount && acount == *pcount && mshape == *pshape;
         if !ok {

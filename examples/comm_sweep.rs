@@ -1,38 +1,33 @@
 //! Communication sweep — regenerates the paper's full measurement campaign
 //! in one run: every (model × layout × decode length) cell, engine-traced
-//! and analytically cross-checked. The CSV on stdout is the input for
-//! re-plotting Figs. 4–7.
+//! and analytically cross-checked through the deployment-plan facade. The
+//! CSV on stdout is the input for re-plotting Figs. 4–7.
 //!
 //! Run: `cargo run --release --example comm_sweep [--fast]`
 
-use commsim::analysis::{InferenceShape, ParallelLayout, VolumeModel};
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
     let sds: &[usize] = if fast { &[32] } else { &[128, 256, 512] };
-    let layouts = [
-        ParallelLayout::new(2, 1),
-        ParallelLayout::new(4, 1),
-        ParallelLayout::new(1, 2),
-        ParallelLayout::new(1, 4),
-        ParallelLayout::new(2, 2),
-    ];
+    let layouts = [(2usize, 1usize), (4, 1), (1, 2), (1, 4), (2, 2)];
 
     println!("model,layout,sp,sd,op,stage,count,message_bytes,corrected_bytes,analytical_total");
     let mut cells = 0;
     for arch in ModelArch::paper_models() {
-        for layout in layouts {
+        for (tp, pp) in layouts {
             for &sd in sds {
                 let sp = 128;
-                let shape = InferenceShape::new(sp, sd, 2);
-                let analytical = VolumeModel::new(arch.clone()).volume(layout, shape).total();
-                let mut engine =
-                    Engine::new(EngineConfig::structural(arch.clone(), layout))?;
-                engine.generate(&vec![0i32; sp], sd)?;
-                let s = engine.trace().summary();
+                let plan = Deployment::builder()
+                    .arch(arch.clone())
+                    .tp(tp)
+                    .pp(pp)
+                    .workload(sp, sd)
+                    .build()?;
+                let analytical = plan.analyze().total_bytes();
+                let s = plan.trace()?;
                 for stage in [Stage::Prefill, Stage::Decode] {
                     for op in [
                         CollectiveKind::AllReduce,
@@ -47,7 +42,7 @@ fn main() -> anyhow::Result<()> {
                         println!(
                             "{},{},{sp},{sd},{},{},{},{},{:.0},{analytical:.0}",
                             arch.name,
-                            layout.label().replace(' ', "x"),
+                            plan.layout().label().replace(' ', "x"),
                             op.label(),
                             stage.label(),
                             v.count,

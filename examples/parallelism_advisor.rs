@@ -3,33 +3,18 @@
 //! configurations based on infrastructure characteristics and workload
 //! requirements".
 //!
-//! Enumerates every feasible (TP, PP) layout of a model on a given cluster,
-//! simulates TTFT/TPOT/E2E + communication volume for the workload, and
-//! recommends per objective (interactive latency / long-form generation /
-//! bandwidth-constrained).
+//! Built entirely on the library facade: `DeploymentPlan::sweep` yields
+//! every feasible (TP, PP) plan of a model on a GPU budget, and each plan
+//! is analyzed (`analyze()`) and simulated (`simulate()`) for the
+//! workload, then recommended per objective (interactive latency /
+//! long-form generation / bandwidth-constrained).
 //!
 //! Run: `cargo run --release --example parallelism_advisor [model] [gpus] [sp] [sd]`
 
-use commsim::analysis::{InferenceShape, ParallelLayout, VolumeModel};
-use commsim::cluster::{Placement, Topology};
+use commsim::analysis::ParallelLayout;
 use commsim::model::ModelArch;
-use commsim::perfmodel::SloSimulator;
+use commsim::plan::{DeploymentPlan, SloResult};
 use commsim::report::{fmt_bytes, render_table};
-
-fn feasible_layouts(arch: &ModelArch, gpus: usize) -> Vec<ParallelLayout> {
-    let mut out = Vec::new();
-    for tp in [1usize, 2, 4, 8, 16] {
-        if tp > gpus || !arch.supports_tp(tp) {
-            continue;
-        }
-        for pp in [1usize, 2, 4, 8] {
-            if tp * pp == gpus && arch.supports_pp(pp) {
-                out.push(ParallelLayout::new(tp, pp));
-            }
-        }
-    }
-    out
-}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -38,24 +23,30 @@ fn main() -> anyhow::Result<()> {
     let gpus: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
     let sp: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(128);
     let sd: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(128);
-    let shape = InferenceShape::new(sp, sd, 2);
-    let topology = Topology::cardinal(gpus.div_ceil(4).max(1));
 
     println!(
         "advisor: {} on {} GPUs ({} nodes x 4), Sp={sp} Sd={sd}\n",
-        arch.name, gpus, topology.nodes
+        arch.name,
+        gpus,
+        gpus.div_ceil(4).max(1)
     );
+
+    let plans: Vec<DeploymentPlan> = DeploymentPlan::sweep(&arch, gpus)
+        .map(|p| p.with_workload(sp, sd))
+        .collect::<Result<_, _>>()?;
+    if plans.is_empty() {
+        anyhow::bail!("no feasible (TP, PP) layout for {} on {gpus} GPUs", arch.name);
+    }
 
     let mut rows = Vec::new();
     let mut results = Vec::new();
-    for layout in feasible_layouts(&arch, gpus) {
-        let placement = Placement::new(topology, layout)?;
-        let sim = SloSimulator::new(arch.clone(), placement);
-        let r = sim.simulate(shape);
-        let vol = VolumeModel::new(arch.clone()).volume(layout, shape).total();
-        results.push((layout, r, vol));
+    for plan in &plans {
+        let r = plan.simulate();
+        let vol = plan.analyze().total_bytes();
+        let shape = plan.shape();
+        results.push((plan.layout(), r, vol));
         rows.push(vec![
-            layout.label(),
+            plan.layout().label(),
             format!("{:.1}", r.ttft_s * 1e3),
             format!("{:.2}", r.tpot_s * 1e3),
             format!("{:.2}", r.e2e_s),
@@ -72,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         )
     );
 
-    let best_by = |f: &dyn Fn(&(ParallelLayout, commsim::perfmodel::SloReport, f64)) -> f64| {
+    let best_by = |f: &dyn Fn(&(ParallelLayout, SloResult, f64)) -> f64| {
         results
             .iter()
             .min_by(|a, b| f(a).partial_cmp(&f(b)).unwrap())

@@ -1,59 +1,57 @@
-//! Quickstart: the three public surfaces in ~60 lines.
+//! Quickstart: the unified deployment-plan API in ~50 lines.
 //!
-//! 1. Predict communication analytically (Eq. 1–7).
-//! 2. Measure it by running the engine (structural mode — no artifacts
-//!    needed) and validating the trace against the prediction.
-//! 3. Simulate the SLO impact of a layout choice on the paper's testbed.
+//! One validated plan drives all three public surfaces:
+//! 1. `analyze()`  — predict communication analytically (Eq. 1–7).
+//! 2. `trace()`    — measure it by running the structural engine (no
+//!    artifacts needed) and validate the trace against the prediction.
+//! 3. `simulate()` — the SLO impact of a layout choice on the paper's
+//!    testbed.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
-use commsim::model::ModelArch;
-use commsim::perfmodel::SloSimulator;
+use commsim::plan::Deployment;
 use commsim::report::fmt_bytes;
 
 fn main() -> anyhow::Result<()> {
-    let arch = ModelArch::llama31_8b();
-    let layout = ParallelLayout::new(2, 1); // TP=2
-    let shape = InferenceShape::new(128, 128, 2); // Sp=Sd=128, BF16
+    // One entry point: model x layout x workload, validated up front.
+    let plan = Deployment::builder()
+        .model("8b") // Llama-3.1-8B
+        .tp(2)
+        .workload(128, 128) // Sp = Sd = 128, BF16
+        .build()?;
 
     // --- 1. analytical prediction -------------------------------------
-    let volume = VolumeModel::new(arch.clone()).volume(layout, shape);
+    let vr = plan.analyze();
     println!(
         "[predict] {} under {}: {} total communication",
-        arch.name,
-        layout.label(),
-        fmt_bytes(volume.total())
+        plan.arch().name,
+        plan.layout().label(),
+        fmt_bytes(vr.total_bytes())
     );
-    let ops = OpCountModel::new(arch.clone(), layout, shape);
-    let decode = ops.predict_paper_view(Stage::Decode);
+    let decode_allreduce = vr.decode_ops.count(CollectiveKind::AllReduce);
     println!(
         "[predict] decode stage: {} AllReduce + {} Gather calls",
-        decode.count(CollectiveKind::AllReduce),
-        decode.count(CollectiveKind::Gather),
+        decode_allreduce,
+        vr.decode_ops.count(CollectiveKind::Gather),
     );
 
     // --- 2. measure by running the engine -----------------------------
-    let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
-    engine.generate(&vec![0i32; 128], 128)?;
-    let summary = engine.trace().summary();
+    let summary = plan.trace()?;
     let measured = summary.paper_view(CollectiveKind::AllReduce, Stage::Decode);
     println!(
         "[measure] engine traced {} decode AllReduces (prediction: {})",
-        measured.count,
-        decode.count(CollectiveKind::AllReduce),
+        measured.count, decode_allreduce,
     );
-    assert_eq!(measured.count, decode.count(CollectiveKind::AllReduce));
+    assert_eq!(measured.count, decode_allreduce);
 
     // --- 3. simulate the SLO impact ------------------------------------
-    for l in [ParallelLayout::new(2, 1), ParallelLayout::new(1, 2)] {
-        let sim = SloSimulator::on_cardinal(arch.clone(), l)?;
-        let r = sim.simulate(shape);
+    for (tp, pp) in [(2usize, 1usize), (1, 2)] {
+        let plan = Deployment::builder().model("8b").tp(tp).pp(pp).workload(128, 128).build()?;
+        let r = plan.simulate();
         println!(
             "[simulate] {:<8} TTFT {:>7.1} ms   TPOT {:>6.2} ms   E2E {:>6.3} s",
-            l.label(),
+            plan.layout().label(),
             r.ttft_s * 1e3,
             r.tpot_s * 1e3,
             r.e2e_s

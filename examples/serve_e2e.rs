@@ -3,17 +3,17 @@
 //! in EXPERIMENTS.md).
 //!
 //! Loads the tiny real model (Pallas kernels → JAX segments → AOT HLO →
-//! PJRT), builds a TP=2 engine with real AllReduce/Gather between worker
-//! threads, serves a batch of requests through the router/scheduler, and
-//! reports latency/throughput. Also verifies the served tokens against the
-//! pinned JAX reference and cross-checks TP=2 vs PP=2 vs hybrid 2×2.
+//! PJRT), builds numeric deployment plans with real AllReduce/Gather
+//! between worker threads, serves a batch of requests through the
+//! router/scheduler, and reports latency/throughput. Also verifies the
+//! served tokens against the pinned JAX reference and cross-checks TP=2
+//! vs PP=2 vs hybrid 2×2.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_e2e`
 
-use commsim::analysis::ParallelLayout;
-use commsim::engine::{Engine, EngineConfig};
+use commsim::plan::Deployment;
 use commsim::runtime::ArtifactStore;
-use commsim::server::{Request, SchedulerConfig, Server};
+use commsim::server::{Request, SchedulerConfig};
 
 const EXPECTED_TOKENS: [i32; 12] = [95, 497, 497, 497, 109, 379, 109, 291, 497, 497, 109, 269];
 
@@ -31,30 +31,27 @@ fn main() -> anyhow::Result<()> {
     // --- correctness: every layout reproduces the JAX reference --------
     let pinned: Vec<i32> = (0..sp).map(|i| ((7 * i) as i32) % vocab).collect();
     for (tp, pp) in [(1usize, 1usize), (2, 1), (1, 2), (2, 2)] {
-        let layout = ParallelLayout::new(tp, pp);
-        let mut engine = Engine::new(EngineConfig::numeric(store.clone(), layout))?;
+        let plan = Deployment::builder().artifacts(store.clone()).tp(tp).pp(pp).build()?;
+        let mut engine = plan.engine()?;
         let r = engine.generate(&pinned, EXPECTED_TOKENS.len())?;
         anyhow::ensure!(
             r.tokens == EXPECTED_TOKENS,
             "{}: tokens diverge from JAX reference",
-            layout.label()
+            plan.layout().label()
         );
         println!(
             "[verify] {:<10} tokens == JAX reference  (TTFT {:>6.1} ms, TPOT {:>6.2} ms)",
-            layout.label(),
+            plan.layout().label(),
             r.ttft.as_secs_f64() * 1e3,
             r.tpot.as_secs_f64() * 1e3,
         );
     }
 
     // --- serving: batch of requests through router + scheduler ---------
-    let layout = ParallelLayout::new(2, 1);
-    let mut engine = Engine::new(EngineConfig::numeric(store.clone(), layout))?;
-    engine.warmup()?; // exclude one-time PJRT first-execution setup from SLOs
-    let mut server = Server::new(
-        engine,
-        SchedulerConfig { kv_blocks: 256, kv_block_size: 16, max_queue: 256 },
-    );
+    let plan = Deployment::builder().artifacts(store.clone()).tp(2).pp(1).build()?;
+    let mut server =
+        plan.server(SchedulerConfig { kv_blocks: 256, kv_block_size: 16, max_queue: 256 })?;
+    server.warmup()?; // exclude one-time PJRT first-execution setup from SLOs
     let n_requests = 16usize;
     let decode_len = 48usize;
     let requests: Vec<Request> = (0..n_requests as u64)
@@ -65,7 +62,12 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let summary = server.serve_batch(requests)?;
-    println!("\n[serve] layout {} — {} requests x {} tokens", layout.label(), n_requests, decode_len);
+    println!(
+        "\n[serve] layout {} — {} requests x {} tokens",
+        plan.layout().label(),
+        n_requests,
+        decode_len
+    );
     println!("  throughput : {:.1} tok/s ({:.2} req/s)", summary.tokens_per_s, summary.requests_per_s);
     println!("  TTFT p50/p99 : {:.1} / {:.1} ms", summary.ttft_p50_s * 1e3, summary.ttft_p99_s * 1e3);
     println!("  TPOT p50/p99 : {:.2} / {:.2} ms", summary.tpot_p50_s * 1e3, summary.tpot_p99_s * 1e3);

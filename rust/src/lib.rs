@@ -1,10 +1,43 @@
 //! # commsim — Communication Patterns in Distributed LLM Inference
 //!
 //! Full-system reproduction of *"Characterizing Communication Patterns in
-//! Distributed Large Language Model Inference"* (Xu et al., CS.DC 2025).
+//! Distributed Large Language Model Inference"* (Xu et al., CS.DC 2025):
+//! a vLLM-like serving stack whose every inter-worker communication is a
+//! first-class, traced operation.
 //!
-//! The crate is a vLLM-like serving stack whose every inter-worker
-//! communication is a first-class, traced operation:
+//! ## Entry point: the deployment-plan facade
+//!
+//! Everything starts at [`plan::Deployment`] — one validated builder for
+//! the (model, layout, topology, workload) tuple, with typed
+//! [`plan::PlanError`]s for every infeasible combination (TP not dividing
+//! the heads, PP exceeding the layers, layouts that overflow the cluster):
+//!
+//! ```
+//! use commsim::plan::Deployment;
+//!
+//! let plan = Deployment::builder()
+//!     .model("8b")          // Llama-3.1-8B from the registry
+//!     .tp(2)
+//!     .pp(2)
+//!     .workload(128, 128)   // Sp, Sd (paper Table I)
+//!     .build()?;
+//!
+//! let report = plan.analyze();          // Eq. 1-7 volumes + op predictions
+//! assert!(report.total_bytes() > 0.0);
+//! # Ok::<(), commsim::plan::PlanError>(())
+//! ```
+//!
+//! The validated [`plan::DeploymentPlan`] exposes the unified verbs —
+//! `analyze()` (analytical models), `trace()` (run the structural engine,
+//! measure the collective stream), `simulate()` (TTFT/TPOT/E2E on the
+//! calibrated testbed), `engine()`/`server()` (live serving, numeric when
+//! AOT artifacts are attached) — and
+//! [`plan::DeploymentPlan::sweep`] enumerates every feasible (TP, PP)
+//! plan of a model on a GPU budget. The CLI (`commsim
+//! analyze|trace|slo|serve|tables`), the examples and the figure/table
+//! benches are all thin layers over this facade.
+//!
+//! ## Layers underneath
 //!
 //! - [`model`] — transformer architecture registry (paper models + the tiny
 //!   real model served end-to-end).
@@ -34,10 +67,13 @@ pub mod comm;
 pub mod engine;
 pub mod model;
 pub mod perfmodel;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod server;
 pub mod testutil;
+
+pub use plan::{Deployment, DeploymentPlan, PlanError, SloResult, VolumeReport};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

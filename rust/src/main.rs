@@ -1,6 +1,7 @@
 //! `commsim` CLI — the leader entrypoint.
 //!
-//! Subcommands map onto the paper's workflow:
+//! Subcommands map onto the paper's workflow, and every one is a thin
+//! layer over the validated deployment-plan facade (`commsim::plan`):
 //! - `analyze` — analytical communication volume + op predictions (Eq. 1–7)
 //! - `trace`   — run the structural engine and validate trace vs analytics
 //! - `slo`     — simulate TTFT/TPOT/E2E for a layout (Figs. 8–10)
@@ -8,18 +9,19 @@
 //! - `tables`  — print all paper-table reproductions at once
 //!
 //! Flag parsing is hand-rolled (`--key value`); the vendored build
-//! environment provides no CLI crate (DESIGN.md §5).
+//! environment provides no CLI crate (DESIGN.md §5). Each subcommand
+//! declares its flag set and anything else is rejected with a
+//! did-you-mean suggestion — a silent typo (`--ppp 2`) must not silently
+//! produce numbers for the wrong layout.
 
 use std::collections::HashMap;
 
-use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
-use commsim::cluster::{Placement, Topology};
-use commsim::engine::{Engine, EngineConfig};
+use commsim::comm::Stage;
 use commsim::model::ModelArch;
-use commsim::perfmodel::SloSimulator;
+use commsim::plan::Deployment;
 use commsim::report;
 use commsim::runtime::ArtifactStore;
-use commsim::server::{Request, SchedulerConfig, Server};
+use commsim::server::{Request, SchedulerConfig};
 
 const USAGE: &str = "\
 commsim — communication patterns in distributed LLM inference (paper reproduction)
@@ -38,21 +40,44 @@ COMMANDS:
   tables    Print all paper-table reproductions (Tables III-VI)
 ";
 
-/// Minimal `--key value` flag parser.
+/// Flags accepted by `analyze` (normalized: dashes become underscores).
+const ANALYZE_FLAGS: &[&str] = &["model", "tp", "pp", "sp", "sd"];
+/// `trace` takes the same set as `analyze`.
+const TRACE_FLAGS: &[&str] = ANALYZE_FLAGS;
+const SLO_FLAGS: &[&str] = &["model", "tp", "pp", "sp", "sd", "gpus_per_node"];
+const SERVE_FLAGS: &[&str] = &["tp", "pp", "requests", "decode_len", "artifacts"];
+const TABLES_FLAGS: &[&str] = &[];
+
+/// Minimal `--key value` flag parser with a per-subcommand allow-list.
 struct Flags(HashMap<String, String>);
 
 impl Flags {
-    fn parse(args: &[String]) -> anyhow::Result<Self> {
+    fn parse(cmd: &str, args: &[String], allowed: &[&str]) -> anyhow::Result<Self> {
         let mut map = HashMap::new();
         let mut it = args.iter();
         while let Some(a) = it.next() {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow::anyhow!("expected --flag, got '{a}'"))?;
+            let norm = key.replace('-', "_");
+            if !allowed.contains(&norm.as_str()) {
+                let mut msg = format!("unknown flag --{key} for '{cmd}'");
+                if let Some(s) = closest_flag(&norm, allowed) {
+                    msg.push_str(&format!(" (did you mean --{}?)", s.replace('_', "-")));
+                }
+                let valid: Vec<String> =
+                    allowed.iter().map(|f| format!("--{}", f.replace('_', "-"))).collect();
+                if valid.is_empty() {
+                    anyhow::bail!("{msg}\n'{cmd}' takes no flags");
+                }
+                anyhow::bail!("{msg}\nvalid flags for '{cmd}': {}", valid.join(" "));
+            }
             let val = it
                 .next()
                 .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
-            map.insert(key.replace('-', "_"), val.clone());
+            if map.insert(norm, val.clone()).is_some() {
+                anyhow::bail!("flag --{key} given more than once");
+            }
         }
         Ok(Self(map))
     }
@@ -69,23 +94,51 @@ impl Flags {
     }
 }
 
-fn arch(name: &str) -> anyhow::Result<ModelArch> {
-    ModelArch::by_name(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (3b|8b|13b|tiny)"))
+/// Nearest allowed flag within edit distance 2, for typo suggestions.
+fn closest_flag<'a>(key: &str, allowed: &[&'a str]) -> Option<&'a str> {
+    allowed
+        .iter()
+        .map(|a| (edit_distance(key, a), *a))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, a)| a)
+}
+
+/// Classic Levenshtein distance (flags are short; O(n·m) is fine).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = Vec::with_capacity(b.len() + 1);
+        cur.push(i + 1);
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur.push((prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
 }
 
 fn cmd_analyze(f: &Flags) -> anyhow::Result<()> {
-    let arch = arch(&f.str("model", "8b"))?;
-    let layout = ParallelLayout::new(f.num("tp", 2)?, f.num("pp", 1)?);
     let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 128)?);
-    let shape = InferenceShape::new(sp, sd, 2);
-    let v = VolumeModel::new(arch.clone()).volume(layout, shape);
-    println!("model={} layout={} Sp={sp} Sd={sd} (BF16)", arch.name, layout.label());
-    println!("{}", report::volume_line(&arch, layout, shape));
-    let ops = OpCountModel::new(arch, layout, shape);
-    for stage in [commsim::comm::Stage::Prefill, commsim::comm::Stage::Decode] {
+    let plan = Deployment::builder()
+        .model(&f.str("model", "8b"))
+        .tp(f.num("tp", 2)?)
+        .pp(f.num("pp", 1)?)
+        .workload(sp, sd)
+        .build()?;
+    let vr = plan.analyze();
+    println!(
+        "model={} layout={} Sp={sp} Sd={sd} (BF16)",
+        plan.arch().name,
+        plan.layout().label()
+    );
+    println!("{}", report::volume_line(plan.arch(), plan.layout(), plan.shape()));
+    for stage in [Stage::Prefill, Stage::Decode] {
         println!("\n{} ops (paper-table view):", stage.label());
-        for o in ops.predict_paper_view(stage).ops {
+        for o in &vr.ops(stage).ops {
             println!(
                 "  {:<10} count={:<6} shape={}",
                 o.op.label(),
@@ -94,26 +147,27 @@ fn cmd_analyze(f: &Flags) -> anyhow::Result<()> {
             );
         }
     }
-    println!("\ntotal corrected volume: {}", report::fmt_bytes(v.total()));
+    println!("\ntotal corrected volume: {}", report::fmt_bytes(vr.total_bytes()));
     Ok(())
 }
 
 fn cmd_trace(f: &Flags) -> anyhow::Result<()> {
-    let arch = arch(&f.str("model", "8b"))?;
-    let layout = ParallelLayout::new(f.num("tp", 2)?, f.num("pp", 1)?);
     let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 128)?);
-    let shape = InferenceShape::new(sp, sd, 2);
-    let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
-    let r = engine.generate(&vec![0i32; sp], sd)?;
-    eprintln!("generated {} tokens (structural)", r.tokens.len());
-    let summary = engine.trace().summary();
+    let plan = Deployment::builder()
+        .model(&f.str("model", "8b"))
+        .tp(f.num("tp", 2)?)
+        .pp(f.num("pp", 1)?)
+        .workload(sp, sd)
+        .build()?;
+    let summary = plan.trace()?;
+    eprintln!("generated {sd} tokens (structural)");
     print!(
         "{}",
         report::comparison_table(
-            &format!("{} {} Sp={sp} Sd={sd}", arch.name, layout.label()),
-            &arch,
-            layout,
-            shape,
+            &format!("{} {} Sp={sp} Sd={sd}", plan.arch().name, plan.layout().label()),
+            plan.arch(),
+            plan.layout(),
+            plan.shape(),
             &summary,
         )
     );
@@ -121,20 +175,25 @@ fn cmd_trace(f: &Flags) -> anyhow::Result<()> {
 }
 
 fn cmd_slo(f: &Flags) -> anyhow::Result<()> {
-    let arch = arch(&f.str("model", "3b"))?;
-    let layout = ParallelLayout::new(f.num("tp", 2)?, f.num("pp", 1)?);
     let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 128)?);
-    let gpn = f.num("gpus_per_node", 4)?;
-    let nodes = layout.world_size().div_ceil(gpn).max(1);
-    let placement = Placement::new(Topology::new(nodes, gpn), layout)?;
-    let sim = SloSimulator::new(arch.clone(), placement);
-    let shape = InferenceShape::new(sp, sd, 2);
-    let r = sim.simulate(shape);
-    println!("model={} layout={} nodes={nodes}", arch.name, layout.label());
+    let plan = Deployment::builder()
+        .model(&f.str("model", "3b"))
+        .tp(f.num("tp", 2)?)
+        .pp(f.num("pp", 1)?)
+        .workload(sp, sd)
+        .gpus_per_node(f.num("gpus_per_node", 4)?)
+        .build()?;
+    let r = plan.simulate();
+    println!(
+        "model={} layout={} nodes={}",
+        plan.arch().name,
+        plan.layout().label(),
+        plan.topology().nodes
+    );
     println!("TTFT  {:>10.2} ms", r.ttft_s * 1e3);
     println!("TPOT  {:>10.2} ms", r.tpot_s * 1e3);
     println!("E2E   {:>10.2} s", r.e2e_s);
-    println!("comm fraction {:>6.1}%", r.comm_fraction(shape) * 100.0);
+    println!("comm fraction {:>6.1}%", r.comm_fraction(plan.shape()) * 100.0);
     Ok(())
 }
 
@@ -142,11 +201,17 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     let store = ArtifactStore::open(f.str("artifacts", "artifacts"))?;
     let sp = store.meta.prefill_len;
     let vocab = store.meta.vocab as i32;
-    let layout = ParallelLayout::new(f.num("tp", 2)?, f.num("pp", 1)?);
     let requests = f.num("requests", 4)?;
     let decode_len = f.num("decode_len", 16)?;
-    let engine = Engine::new(EngineConfig::numeric(store, layout))?;
-    let mut server = Server::new(engine, SchedulerConfig::default());
+    let plan = Deployment::builder()
+        .artifacts(store)
+        .tp(f.num("tp", 2)?)
+        .pp(f.num("pp", 1)?)
+        // Validate the workload we are about to serve (prompt length is
+        // fixed by the artifacts; --decode-len must fit max_seq).
+        .workload(sp, decode_len)
+        .build()?;
+    let mut server = plan.server(SchedulerConfig::default())?;
     let reqs: Vec<Request> = (0..requests as u64)
         .map(|id| Request {
             id,
@@ -170,32 +235,27 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
 }
 
 fn cmd_tables() -> anyhow::Result<()> {
-    let shape = InferenceShape::new(128, 128, 2);
-    let cases: Vec<(&str, ModelArch, Vec<ParallelLayout>)> = vec![
-        (
-            "Table III (TP)",
-            ModelArch::llama31_8b(),
-            vec![ParallelLayout::new(2, 1), ParallelLayout::new(4, 1)],
-        ),
-        (
-            "Table V (PP)",
-            ModelArch::llama31_8b(),
-            vec![ParallelLayout::new(1, 2), ParallelLayout::new(1, 4)],
-        ),
-        ("Table VI (hybrid)", ModelArch::llama31_8b(), vec![ParallelLayout::new(2, 2)]),
+    let cases: Vec<(&str, ModelArch, Vec<(usize, usize)>)> = vec![
+        ("Table III (TP)", ModelArch::llama31_8b(), vec![(2, 1), (4, 1)]),
+        ("Table V (PP)", ModelArch::llama31_8b(), vec![(1, 2), (1, 4)]),
+        ("Table VI (hybrid)", ModelArch::llama31_8b(), vec![(2, 2)]),
     ];
     for (label, arch, layouts) in cases {
-        for layout in layouts {
-            let mut engine = Engine::new(EngineConfig::structural(arch.clone(), layout))?;
-            engine.generate(&vec![0i32; 128], 128)?;
-            let summary = engine.trace().summary();
+        for (tp, pp) in layouts {
+            let plan = Deployment::builder()
+                .arch(arch.clone())
+                .tp(tp)
+                .pp(pp)
+                .workload(128, 128)
+                .build()?;
+            let summary = plan.trace()?;
             print!(
                 "{}",
                 report::comparison_table(
-                    &format!("{label} {}", layout.label()),
-                    &arch,
-                    layout,
-                    shape,
+                    &format!("{label} {}", plan.layout().label()),
+                    plan.arch(),
+                    plan.layout(),
+                    plan.shape(),
                     &summary,
                 )
             );
@@ -211,13 +271,16 @@ fn main() -> anyhow::Result<()> {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
-    let flags = Flags::parse(&args[1..])?;
+    let rest = &args[1..];
     match cmd.as_str() {
-        "analyze" => cmd_analyze(&flags),
-        "trace" => cmd_trace(&flags),
-        "slo" => cmd_slo(&flags),
-        "serve" => cmd_serve(&flags),
-        "tables" => cmd_tables(),
+        "analyze" => cmd_analyze(&Flags::parse("analyze", rest, ANALYZE_FLAGS)?),
+        "trace" => cmd_trace(&Flags::parse("trace", rest, TRACE_FLAGS)?),
+        "slo" => cmd_slo(&Flags::parse("slo", rest, SLO_FLAGS)?),
+        "serve" => cmd_serve(&Flags::parse("serve", rest, SERVE_FLAGS)?),
+        "tables" => {
+            Flags::parse("tables", rest, TABLES_FLAGS)?;
+            cmd_tables()
+        }
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -226,5 +289,67 @@ fn main() -> anyhow::Result<()> {
             eprint!("unknown command '{other}'\n\n{USAGE}");
             std::process::exit(2);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn accepts_known_flags_and_applies_defaults() {
+        let f = Flags::parse("slo", &args(&["--tp", "4", "--gpus-per-node", "8"]), SLO_FLAGS)
+            .unwrap();
+        assert_eq!(f.num("tp", 2).unwrap(), 4);
+        assert_eq!(f.num("gpus_per_node", 4).unwrap(), 8);
+        assert_eq!(f.num("pp", 1).unwrap(), 1);
+        assert_eq!(f.str("model", "3b"), "3b");
+    }
+
+    #[test]
+    fn rejects_unknown_flag_with_suggestion() {
+        let err = Flags::parse("slo", &args(&["--ppp", "2"]), SLO_FLAGS).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown flag --ppp"), "{msg}");
+        assert!(msg.contains("did you mean --pp?"), "{msg}");
+        assert!(msg.contains("--gpus-per-node"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_flags_foreign_to_the_subcommand() {
+        // --gpus-per-node belongs to `slo`, not `analyze`.
+        let err =
+            Flags::parse("analyze", &args(&["--gpus-per-node", "4"]), ANALYZE_FLAGS).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --gpus-per-node"), "{err}");
+        // `tables` takes nothing at all.
+        let err = Flags::parse("tables", &args(&["--model", "8b"]), TABLES_FLAGS).unwrap_err();
+        assert!(err.to_string().contains("takes no flags"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_values_and_bare_words() {
+        assert!(Flags::parse("trace", &args(&["--tp"]), TRACE_FLAGS).is_err());
+        assert!(Flags::parse("trace", &args(&["tp", "2"]), TRACE_FLAGS).is_err());
+    }
+
+    #[test]
+    fn rejects_repeated_flags() {
+        let err =
+            Flags::parse("slo", &args(&["--tp", "2", "--tp", "4"]), SLO_FLAGS).unwrap_err();
+        assert!(err.to_string().contains("more than once"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("pp", "pp"), 0);
+        assert_eq!(edit_distance("ppp", "pp"), 1);
+        assert_eq!(edit_distance("modle", "model"), 2);
+        assert_eq!(edit_distance("", "sd"), 2);
+        assert_eq!(closest_flag("ppp", SLO_FLAGS), Some("pp"));
+        assert_eq!(closest_flag("zzzzz", SLO_FLAGS), None);
     }
 }

@@ -1,0 +1,168 @@
+//! Typed construction-time errors for the deployment-plan facade.
+//!
+//! Every way a [`super::Deployment`] can be wired wrong is a named variant
+//! rather than an ad-hoc string: callers (CLI, sweeps, tests) can match on
+//! the failure class, and each message carries the numbers needed to fix
+//! the configuration.
+
+use std::fmt;
+
+use crate::analysis::ParallelLayout;
+
+/// Why a [`super::Deployment`] could not be validated into a
+/// [`super::DeploymentPlan`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// Neither `.arch(..)` / `.model(..)` was called nor artifacts attached.
+    MissingModel,
+    /// The model name did not resolve in the architecture registry.
+    UnknownModel { name: String },
+    /// Both `.arch(..)` and `.model(name)` were set and disagree.
+    ConflictingModel { arch: String, model: String },
+    /// The plan's architecture does not match the attached artifact
+    /// store's model (numeric serving always executes the artifacts).
+    ArtifactModelMismatch { arch: String, artifact_model: String },
+    /// A degree (or GPUs-per-node) of zero was requested for `axis`.
+    ZeroDegree { axis: &'static str },
+    /// Both `.topology(..)` and `.gpus_per_node(..)` were set — an explicit
+    /// topology already fixes the node shape.
+    ConflictingTopology,
+    /// The architecture does not divide evenly across the TP degree.
+    TpIndivisible {
+        model: String,
+        tp: usize,
+        heads: usize,
+        kv_heads: usize,
+        intermediate: usize,
+        vocab: usize,
+    },
+    /// More pipeline stages than the model has layers.
+    PpExceedsLayers { model: String, pp: usize, layers: usize },
+    /// The layout needs more GPUs than the topology provides.
+    TopologyTooSmall { layout: ParallelLayout, needed: usize, available: usize },
+    /// Zero-length prefill/decode or a zero-byte element width.
+    InvalidWorkload { prefill_len: usize, decode_len: usize, dtype_bytes: usize },
+    /// The attached artifact store was not built for this TP degree.
+    ArtifactsMissingTp { tp: usize, available: Vec<usize> },
+    /// The workload cannot be served by the attached artifacts (numeric
+    /// mode serves fixed-length prompts within `max_seq`).
+    ArtifactWorkloadMismatch {
+        prefill_len: usize,
+        decode_len: usize,
+        artifact_prefill_len: usize,
+        max_seq: usize,
+    },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::MissingModel => write!(
+                f,
+                "no model selected: call .arch(..) or .model(\"3b|8b|13b|tiny\"), \
+                 or attach artifacts for the tiny numeric model"
+            ),
+            PlanError::UnknownModel { name } => {
+                write!(f, "unknown model '{name}' (known: 3b|8b|13b|tiny)")
+            }
+            PlanError::ConflictingModel { arch, model } => write!(
+                f,
+                "conflicting model selection: .arch() gave '{arch}' but \
+                 .model(\"{model}\") resolves to a different architecture — \
+                 set only one, or make them agree"
+            ),
+            PlanError::ArtifactModelMismatch { arch, artifact_model } => write!(
+                f,
+                "numeric serving executes the artifact model \
+                 '{artifact_model}', but the plan's architecture is '{arch}' \
+                 — drop .arch()/.model() or select the artifact model"
+            ),
+            PlanError::ZeroDegree { axis } => write!(f, "{axis} must be >= 1"),
+            PlanError::ConflictingTopology => write!(
+                f,
+                "conflicting topology selection: .topology() already fixes \
+                 the node shape — drop .gpus_per_node()"
+            ),
+            PlanError::TpIndivisible { model, tp, heads, kv_heads, intermediate, vocab } => {
+                write!(
+                    f,
+                    "{model} does not divide across tp={tp}: heads={heads}, \
+                     kv_heads={kv_heads}, intermediate={intermediate} and \
+                     vocab={vocab} must all be divisible by the TP degree"
+                )
+            }
+            PlanError::PpExceedsLayers { model, pp, layers } => write!(
+                f,
+                "{model} cannot split into pp={pp} stages: only {layers} layers"
+            ),
+            PlanError::TopologyTooSmall { layout, needed, available } => write!(
+                f,
+                "layout {} needs {needed} GPUs but the topology has {available}",
+                layout.label()
+            ),
+            PlanError::InvalidWorkload { prefill_len, decode_len, dtype_bytes } => write!(
+                f,
+                "workload needs prefill >= 1, decode >= 1, dtype bytes >= 1 \
+                 (got Sp={prefill_len}, Sd={decode_len}, b={dtype_bytes})"
+            ),
+            PlanError::ArtifactsMissingTp { tp, available } => write!(
+                f,
+                "artifacts were not built for tp={tp} (available TP degrees: {available:?})"
+            ),
+            PlanError::ArtifactWorkloadMismatch {
+                prefill_len,
+                decode_len,
+                artifact_prefill_len,
+                max_seq,
+            } => write!(
+                f,
+                "artifacts serve fixed prompts of {artifact_prefill_len} \
+                 tokens within max_seq {max_seq}; workload Sp={prefill_len} \
+                 Sd={decode_len} cannot be served — drop .workload() to \
+                 derive it from the artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_carry_the_offending_numbers() {
+        let e = PlanError::TpIndivisible {
+            model: "Llama-3.1-8B".into(),
+            tp: 3,
+            heads: 32,
+            kv_heads: 8,
+            intermediate: 14336,
+            vocab: 128_256,
+        };
+        let s = e.to_string();
+        assert!(s.contains("tp=3") && s.contains("heads=32"), "{s}");
+
+        let e = PlanError::PpExceedsLayers { model: "Llama-3.2-3B".into(), pp: 64, layers: 28 };
+        assert!(e.to_string().contains("pp=64"));
+
+        let e = PlanError::TopologyTooSmall {
+            layout: ParallelLayout::new(4, 2),
+            needed: 8,
+            available: 4,
+        };
+        let s = e.to_string();
+        assert!(s.contains("TP=4 PP=2") && s.contains("8 GPUs") && s.contains("has 4"), "{s}");
+    }
+
+    #[test]
+    fn converts_into_crate_error_via_question_mark() {
+        fn f() -> crate::Result<()> {
+            let r: Result<(), PlanError> = Err(PlanError::MissingModel);
+            r?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("no model selected"));
+    }
+}

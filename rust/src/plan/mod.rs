@@ -1,0 +1,693 @@
+//! The unified deployment-plan facade — one validated entry point for
+//! everything the crate can do with a (model, layout, topology, workload)
+//! tuple.
+//!
+//! Historically every consumer hand-assembled `ParallelLayout` +
+//! `InferenceShape` + `Placement` + `EngineConfig` + `SloSimulator` with no
+//! cross-validation; an infeasible combination surfaced as a worker panic
+//! or a silent wrong answer. [`Deployment`] is the builder that validates
+//! the whole tuple up front (typed [`PlanError`]s), and [`DeploymentPlan`]
+//! is the resulting immutable plan exposing the unified verbs:
+//!
+//! - [`DeploymentPlan::analyze`] — the paper's analytical models (Eq. 1–7
+//!   volumes + Tables III–VI op predictions) as a [`VolumeReport`];
+//! - [`DeploymentPlan::trace`] — run the structural engine and return the
+//!   measured collective stream ([`TraceSummary`]);
+//! - [`DeploymentPlan::simulate`] — TTFT/TPOT/E2E on the calibrated
+//!   testbed model ([`SloResult`], Figs. 1 and 8–10);
+//! - [`DeploymentPlan::engine`] / [`DeploymentPlan::server`] — a live
+//!   engine (numeric when artifacts are attached, structural otherwise)
+//!   or a full serving stack;
+//! - [`DeploymentPlan::sweep`] — iterator over every feasible (TP, PP)
+//!   plan of a model on a GPU budget (the parallelism advisor's search
+//!   space as a library primitive).
+
+mod error;
+mod sweep;
+
+pub use error::PlanError;
+
+use crate::analysis::{
+    InferenceShape, OpCountModel, ParallelLayout, StageOps, VolumeBreakdown, VolumeModel,
+};
+use crate::cluster::{Placement, Topology};
+use crate::comm::{Stage, TraceSummary};
+use crate::engine::{Engine, EngineConfig};
+use crate::model::{ModelArch, DTYPE_BYTES_BF16, DTYPE_BYTES_F32};
+use crate::perfmodel::{Calibration, SloReport, SloSimulator};
+use crate::runtime::ArtifactStore;
+use crate::server::{SchedulerConfig, Server};
+
+/// Simulated SLO metrics returned by [`DeploymentPlan::simulate`].
+pub type SloResult = SloReport;
+
+/// The invariant numeric artifacts impose on a workload: prompts are
+/// fixed-length and the whole sequence must fit `max_seq`. Shared by
+/// `build()` (explicit and artifact-derived workloads alike) and
+/// [`DeploymentPlan::with_workload`].
+fn check_artifact_workload(
+    store: &ArtifactStore,
+    prefill_len: usize,
+    decode_len: usize,
+) -> Result<(), PlanError> {
+    if prefill_len != store.meta.prefill_len
+        || prefill_len + decode_len > store.meta.max_seq
+    {
+        return Err(PlanError::ArtifactWorkloadMismatch {
+            prefill_len,
+            decode_len,
+            artifact_prefill_len: store.meta.prefill_len,
+            max_seq: store.meta.max_seq,
+        });
+    }
+    Ok(())
+}
+
+/// Builder for a validated [`DeploymentPlan`].
+///
+/// Defaults mirror the paper's canonical setting: TP=1 × PP=1 on 4-GPU
+/// nodes, Sp = Sd = 128 at BF16. `build()` rejects infeasible
+/// combinations with a typed [`PlanError`].
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    arch: Option<ModelArch>,
+    model_name: Option<String>,
+    tp: usize,
+    pp: usize,
+    topology: Option<Topology>,
+    gpus_per_node: Option<usize>,
+    workload: Option<(usize, usize)>,
+    dtype_bytes: Option<usize>,
+    calibration: Option<Calibration>,
+    artifacts: Option<ArtifactStore>,
+}
+
+impl Default for Deployment {
+    fn default() -> Self {
+        Self {
+            arch: None,
+            model_name: None,
+            tp: 1,
+            pp: 1,
+            topology: None,
+            gpus_per_node: None,
+            workload: None,
+            dtype_bytes: None,
+            calibration: None,
+            artifacts: None,
+        }
+    }
+}
+
+impl Deployment {
+    /// Start a new builder with the paper-default settings.
+    pub fn builder() -> Self {
+        Self::default()
+    }
+
+    /// Target architecture (a registry value or a custom `ModelArch`).
+    pub fn arch(mut self, arch: ModelArch) -> Self {
+        self.arch = Some(arch);
+        self
+    }
+
+    /// Target architecture by registry short name (`3b|8b|13b|tiny`);
+    /// resolution happens in `build()` so typos surface as
+    /// [`PlanError::UnknownModel`].
+    pub fn model(mut self, name: &str) -> Self {
+        self.model_name = Some(name.to_string());
+        self
+    }
+
+    /// Tensor-parallel degree `t`.
+    pub fn tp(mut self, tp: usize) -> Self {
+        self.tp = tp;
+        self
+    }
+
+    /// Pipeline-parallel degree `p`.
+    pub fn pp(mut self, pp: usize) -> Self {
+        self.pp = pp;
+        self
+    }
+
+    /// Explicit cluster topology. Without this, the plan gets just enough
+    /// nodes of [`Self::gpus_per_node`] GPUs (the paper's testbed shape).
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
+        self
+    }
+
+    /// GPUs per node for the implicit topology (default 4, Table II).
+    /// Conflicts with [`Self::topology`], which fixes the node shape.
+    pub fn gpus_per_node(mut self, gpus_per_node: usize) -> Self {
+        self.gpus_per_node = Some(gpus_per_node);
+        self
+    }
+
+    /// Sequence shape of one request: `S_p` prefill and `S_d` decode
+    /// tokens (paper Table I). Defaults to Sp = Sd = 128; with artifacts
+    /// attached and no explicit workload, the shape derives from the
+    /// artifacts instead (their fixed prompt length).
+    pub fn workload(mut self, prefill_len: usize, decode_len: usize) -> Self {
+        self.workload = Some((prefill_len, decode_len));
+        self
+    }
+
+    /// Element width `b` in bytes. Defaults to 2 (BF16, like the paper's
+    /// runs) — or to the artifacts' dtype when attached, so analytics
+    /// describe the bytes numeric serving actually moves. An explicit
+    /// value always wins (e.g. a BF16 what-if on the f32 tiny model).
+    pub fn dtype_bytes(mut self, dtype_bytes: usize) -> Self {
+        self.dtype_bytes = Some(dtype_bytes);
+        self
+    }
+
+    /// Override the SLO simulator's calibrated constants.
+    pub fn calibration(mut self, calibration: Calibration) -> Self {
+        self.calibration = Some(calibration);
+        self
+    }
+
+    /// Attach built AOT artifacts: `engine()`/`server()` become numeric
+    /// (real PJRT compute on the tiny model). Also defaults the
+    /// architecture to `tiny` when no model was named.
+    pub fn artifacts(mut self, store: ArtifactStore) -> Self {
+        self.artifacts = Some(store);
+        self
+    }
+
+    /// Validate the configuration into an immutable [`DeploymentPlan`].
+    pub fn build(self) -> Result<DeploymentPlan, PlanError> {
+        let arch = match (self.arch, self.model_name) {
+            (Some(arch), Some(name)) => {
+                let named = ModelArch::by_name(&name)
+                    .ok_or_else(|| PlanError::UnknownModel { name: name.clone() })?;
+                if named != arch {
+                    return Err(PlanError::ConflictingModel {
+                        arch: arch.name.clone(),
+                        model: name,
+                    });
+                }
+                arch
+            }
+            (Some(arch), None) => arch,
+            (None, Some(name)) => {
+                ModelArch::by_name(&name).ok_or(PlanError::UnknownModel { name })?
+            }
+            (None, None) => {
+                if self.artifacts.is_some() {
+                    ModelArch::tiny()
+                } else {
+                    return Err(PlanError::MissingModel);
+                }
+            }
+        };
+        if self.tp == 0 {
+            return Err(PlanError::ZeroDegree { axis: "tensor-parallel degree" });
+        }
+        if self.pp == 0 {
+            return Err(PlanError::ZeroDegree { axis: "pipeline-parallel degree" });
+        }
+        if !arch.supports_tp(self.tp) {
+            return Err(PlanError::TpIndivisible {
+                model: arch.name.clone(),
+                tp: self.tp,
+                heads: arch.heads,
+                kv_heads: arch.kv_heads,
+                intermediate: arch.intermediate,
+                vocab: arch.vocab,
+            });
+        }
+        if !arch.supports_pp(self.pp) {
+            return Err(PlanError::PpExceedsLayers {
+                model: arch.name.clone(),
+                pp: self.pp,
+                layers: arch.layers,
+            });
+        }
+        let layout = ParallelLayout::new(self.tp, self.pp);
+        let (prefill_len, decode_len) = match self.workload {
+            Some(workload) => workload,
+            // No explicit workload: numeric plans derive it from the
+            // artifacts (fixed prompt length, decode within max_seq) so
+            // analyze/simulate describe something engine() can serve.
+            None => match &self.artifacts {
+                Some(store) => {
+                    let sp = store.meta.prefill_len;
+                    (sp, store.meta.max_seq.saturating_sub(sp).clamp(1, 128))
+                }
+                None => (128, 128),
+            },
+        };
+        let dtype_bytes = self.dtype_bytes.unwrap_or_else(|| match &self.artifacts {
+            Some(store) if store.meta.dtype == "f32" => DTYPE_BYTES_F32,
+            _ => DTYPE_BYTES_BF16,
+        });
+        if prefill_len == 0 || decode_len == 0 || dtype_bytes == 0 {
+            return Err(PlanError::InvalidWorkload {
+                prefill_len,
+                decode_len,
+                dtype_bytes,
+            });
+        }
+        // Applies to derived workloads too: a degenerate store (e.g.
+        // max_seq <= prefill_len) must fail here, not at the first
+        // decode step inside engine().
+        if let Some(store) = &self.artifacts {
+            check_artifact_workload(store, prefill_len, decode_len)?;
+        }
+        let shape = InferenceShape::new(prefill_len, decode_len, dtype_bytes);
+        if self.topology.is_some() && self.gpus_per_node.is_some() {
+            return Err(PlanError::ConflictingTopology);
+        }
+        let gpus_per_node = self.gpus_per_node.unwrap_or(4);
+        if self.topology.is_none() && gpus_per_node == 0 {
+            return Err(PlanError::ZeroDegree { axis: "GPUs per node" });
+        }
+        let topology = self.topology.unwrap_or_else(|| {
+            let nodes = layout.world_size().div_ceil(gpus_per_node).max(1);
+            Topology::new(nodes, gpus_per_node)
+        });
+        if layout.world_size() > topology.total_gpus() {
+            return Err(PlanError::TopologyTooSmall {
+                layout,
+                needed: layout.world_size(),
+                available: topology.total_gpus(),
+            });
+        }
+        if let Some(store) = &self.artifacts {
+            if !store.supports_tp(self.tp) {
+                return Err(PlanError::ArtifactsMissingTp {
+                    tp: self.tp,
+                    available: store.meta.tp_degrees.clone(),
+                });
+            }
+            // engine() executes the artifacts — the analytical side must
+            // describe the same model, or analyze/simulate silently lie.
+            if store.meta.model != arch.name {
+                return Err(PlanError::ArtifactModelMismatch {
+                    arch: arch.name.clone(),
+                    artifact_model: store.meta.model.clone(),
+                });
+            }
+        }
+        let placement =
+            Placement::new(topology, layout).expect("layout validated against topology");
+        Ok(DeploymentPlan {
+            arch,
+            placement,
+            shape,
+            calibration: self.calibration.unwrap_or_default(),
+            artifacts: self.artifacts,
+        })
+    }
+}
+
+/// Analytical communication prediction for one plan (Eq. 1–7 volumes plus
+/// the per-stage op counts/shapes of Tables III–VI).
+#[derive(Debug, Clone)]
+pub struct VolumeReport {
+    pub arch: ModelArch,
+    pub layout: ParallelLayout,
+    pub shape: InferenceShape,
+    /// Per-collective-class corrected volume (bytes).
+    pub volume: VolumeBreakdown,
+    /// Paper-table-view op predictions for the prefill stage.
+    pub prefill_ops: StageOps,
+    /// Paper-table-view op predictions for the decode stage.
+    pub decode_ops: StageOps,
+    /// Global-view predictions (all ranks, each transfer counted once —
+    /// the Table V / Fig. 5 convention) for the prefill stage.
+    pub prefill_global_ops: StageOps,
+    /// Global-view predictions for the decode stage.
+    pub decode_global_ops: StageOps,
+}
+
+impl VolumeReport {
+    /// Total corrected communication volume in bytes (the paper's headline
+    /// number per layout).
+    pub fn total_bytes(&self) -> f64 {
+        self.volume.total()
+    }
+
+    /// The predicted op stream of one stage (per-worker paper view).
+    pub fn ops(&self, stage: Stage) -> &StageOps {
+        match stage {
+            Stage::Prefill => &self.prefill_ops,
+            Stage::Decode => &self.decode_ops,
+        }
+    }
+
+    /// The predicted op stream of one stage in the global view (all
+    /// ranks, each transfer counted once).
+    pub fn global_ops(&self, stage: Stage) -> &StageOps {
+        match stage {
+            Stage::Prefill => &self.prefill_global_ops,
+            Stage::Decode => &self.decode_global_ops,
+        }
+    }
+}
+
+/// A validated deployment: model × layout × placement × workload (plus
+/// optional artifacts and calibration overrides). Cheap to clone; every
+/// verb can be called any number of times.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    arch: ModelArch,
+    placement: Placement,
+    shape: InferenceShape,
+    calibration: Calibration,
+    artifacts: Option<ArtifactStore>,
+}
+
+impl DeploymentPlan {
+    /// The plan's architecture.
+    pub fn arch(&self) -> &ModelArch {
+        &self.arch
+    }
+
+    /// The plan's parallel layout.
+    pub fn layout(&self) -> ParallelLayout {
+        self.placement.layout
+    }
+
+    /// The plan's placement onto the cluster topology.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// The plan's cluster topology.
+    pub fn topology(&self) -> Topology {
+        self.placement.topology
+    }
+
+    /// The plan's sequence shape.
+    pub fn shape(&self) -> InferenceShape {
+        self.shape
+    }
+
+    /// Whether `engine()`/`server()` will execute real numeric compute.
+    pub fn is_numeric(&self) -> bool {
+        self.artifacts.is_some()
+    }
+
+    /// Human-readable identity, e.g. `Llama-3.1-8B TP=2 PP=2`.
+    pub fn label(&self) -> String {
+        format!("{} {}", self.arch.name, self.layout().label())
+    }
+
+    /// Same plan, different sequence shape (re-validated, including
+    /// against attached artifacts).
+    pub fn with_workload(
+        mut self,
+        prefill_len: usize,
+        decode_len: usize,
+    ) -> Result<Self, PlanError> {
+        if prefill_len == 0 || decode_len == 0 {
+            return Err(PlanError::InvalidWorkload {
+                prefill_len,
+                decode_len,
+                dtype_bytes: self.shape.dtype_bytes,
+            });
+        }
+        if let Some(store) = &self.artifacts {
+            check_artifact_workload(store, prefill_len, decode_len)?;
+        }
+        self.shape = InferenceShape::new(prefill_len, decode_len, self.shape.dtype_bytes);
+        Ok(self)
+    }
+
+    /// Analytical communication prediction (Eq. 1–7 + Tables III–VI).
+    pub fn analyze(&self) -> VolumeReport {
+        let volume = VolumeModel::new(self.arch.clone()).volume(self.layout(), self.shape);
+        let ops = OpCountModel::new(self.arch.clone(), self.layout(), self.shape);
+        VolumeReport {
+            arch: self.arch.clone(),
+            layout: self.layout(),
+            shape: self.shape,
+            volume,
+            prefill_ops: ops.predict_paper_view(Stage::Prefill),
+            decode_ops: ops.predict_paper_view(Stage::Decode),
+            prefill_global_ops: ops.predict_global(Stage::Prefill),
+            decode_global_ops: ops.predict_global(Stage::Decode),
+        }
+    }
+
+    /// Run the structural engine over the plan's workload and return the
+    /// measured collective stream. Always structural (the paper's
+    /// measurement mode) regardless of attached artifacts.
+    pub fn trace(&self) -> crate::Result<TraceSummary> {
+        let mut engine =
+            Engine::new(EngineConfig::structural(self.arch.clone(), self.layout()))?;
+        engine.generate(&vec![0i32; self.shape.prefill_len], self.shape.decode_len)?;
+        Ok(engine.trace().summary())
+    }
+
+    /// Simulate TTFT / TPOT / E2E on the calibrated testbed model.
+    pub fn simulate(&self) -> SloResult {
+        SloSimulator::new(self.arch.clone(), self.placement.clone())
+            .with_calibration(self.calibration)
+            .simulate(self.shape)
+    }
+
+    /// Build a live engine: numeric (PJRT, tiny model) when artifacts are
+    /// attached, structural (paper-scale, no-op compute) otherwise.
+    pub fn engine(&self) -> crate::Result<Engine> {
+        let cfg = match &self.artifacts {
+            Some(store) => EngineConfig::numeric(store.clone(), self.layout()),
+            None => EngineConfig::structural(self.arch.clone(), self.layout()),
+        };
+        Engine::new(cfg)
+    }
+
+    /// Build a full serving stack (router + scheduler) over [`Self::engine`].
+    pub fn server(&self, cfg: SchedulerConfig) -> crate::Result<Server> {
+        Ok(Server::new(self.engine()?, cfg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CollectiveKind;
+    use crate::runtime::ArtifactMeta;
+
+    #[test]
+    fn rejects_indivisible_tp() {
+        let err = Deployment::builder().model("8b").tp(3).build().unwrap_err();
+        assert!(matches!(err, PlanError::TpIndivisible { tp: 3, .. }), "{err}");
+    }
+
+    #[test]
+    fn rejects_pp_exceeding_layers() {
+        let err = Deployment::builder().model("3b").pp(64).build().unwrap_err();
+        assert!(
+            matches!(err, PlanError::PpExceedsLayers { pp: 64, layers: 28, .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_layout_exceeding_topology() {
+        let err = Deployment::builder()
+            .model("8b")
+            .tp(4)
+            .pp(2)
+            .topology(Topology::new(1, 4))
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            PlanError::TopologyTooSmall {
+                layout: ParallelLayout::new(4, 2),
+                needed: 8,
+                available: 4,
+            }
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_models() {
+        let err = Deployment::builder().model("70b").build().unwrap_err();
+        assert_eq!(err, PlanError::UnknownModel { name: "70b".into() });
+        let err = Deployment::builder().tp(2).build().unwrap_err();
+        assert_eq!(err, PlanError::MissingModel);
+    }
+
+    #[test]
+    fn rejects_conflicting_topology_selection() {
+        let err = Deployment::builder()
+            .model("8b")
+            .tp(4)
+            .topology(Topology::new(2, 2))
+            .gpus_per_node(8)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, PlanError::ConflictingTopology);
+    }
+
+    #[test]
+    fn rejects_conflicting_model_selection() {
+        let err = Deployment::builder()
+            .arch(ModelArch::tiny())
+            .model("13b")
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, PlanError::ConflictingModel { .. }), "{err}");
+        // Agreeing selections coexist fine.
+        let both = Deployment::builder().arch(ModelArch::llama2_13b()).model("13b");
+        assert!(both.build().is_ok());
+    }
+
+    #[test]
+    fn rejects_zero_degrees_and_workloads() {
+        assert!(matches!(
+            Deployment::builder().model("8b").tp(0).build().unwrap_err(),
+            PlanError::ZeroDegree { .. }
+        ));
+        assert!(matches!(
+            Deployment::builder().model("8b").pp(0).build().unwrap_err(),
+            PlanError::ZeroDegree { .. }
+        ));
+        assert!(matches!(
+            Deployment::builder().model("8b").workload(0, 128).build().unwrap_err(),
+            PlanError::InvalidWorkload { .. }
+        ));
+        assert!(matches!(
+            Deployment::builder().model("8b").dtype_bytes(0).build().unwrap_err(),
+            PlanError::InvalidWorkload { .. }
+        ));
+        assert!(matches!(
+            Deployment::builder().model("8b").gpus_per_node(0).build().unwrap_err(),
+            PlanError::ZeroDegree { .. }
+        ));
+    }
+
+    #[test]
+    fn implicit_topology_uses_just_enough_cardinal_nodes() {
+        let plan = Deployment::builder().model("3b").tp(2).pp(4).build().unwrap();
+        assert_eq!(plan.topology(), Topology::new(2, 4));
+        assert_eq!(plan.layout(), ParallelLayout::new(2, 4));
+        assert_eq!(plan.label(), "Llama-3.2-3B TP=2 PP=4");
+        let single = Deployment::builder().model("3b").build().unwrap();
+        assert_eq!(single.topology(), Topology::new(1, 4));
+    }
+
+    #[test]
+    fn analyze_matches_direct_volume_model() {
+        let plan =
+            Deployment::builder().model("8b").tp(2).pp(2).workload(128, 128).build().unwrap();
+        let vr = plan.analyze();
+        let direct = VolumeModel::new(ModelArch::llama31_8b())
+            .volume(ParallelLayout::new(2, 2), InferenceShape::new(128, 128, 2));
+        assert_eq!(vr.volume, direct);
+        assert!(vr.total_bytes() > 0.0);
+        // Table VI's headline counts surface through the report.
+        assert_eq!(vr.ops(Stage::Prefill).count(CollectiveKind::AllReduce), 33);
+        assert_eq!(vr.decode_ops.count(CollectiveKind::AllReduce), 4191);
+    }
+
+    #[test]
+    fn simulate_matches_direct_simulator() {
+        let plan = Deployment::builder().model("3b").tp(4).build().unwrap();
+        let direct = SloSimulator::on_cardinal(ModelArch::llama32_3b(), ParallelLayout::new(4, 1))
+            .unwrap()
+            .simulate(InferenceShape::new(128, 128, 2));
+        assert_eq!(plan.simulate(), direct);
+    }
+
+    #[test]
+    fn trace_agrees_with_analyze_counts() {
+        let plan =
+            Deployment::builder().arch(ModelArch::tiny()).tp(2).workload(16, 8).build().unwrap();
+        let summary = plan.trace().unwrap();
+        let vr = plan.analyze();
+        for stage in [Stage::Prefill, Stage::Decode] {
+            for op in [CollectiveKind::AllReduce, CollectiveKind::Gather] {
+                assert_eq!(
+                    summary.paper_view(op, stage).count,
+                    vr.ops(stage).count(op),
+                    "{op:?} {stage:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn with_workload_revalidates() {
+        let plan = Deployment::builder().model("8b").build().unwrap();
+        let plan = plan.with_workload(64, 32).unwrap();
+        assert_eq!(plan.shape().prefill_len, 64);
+        assert_eq!(plan.shape().decode_len, 32);
+        let plan = Deployment::builder().model("8b").build().unwrap();
+        assert!(matches!(
+            plan.with_workload(0, 32).unwrap_err(),
+            PlanError::InvalidWorkload { .. }
+        ));
+    }
+
+    #[test]
+    fn artifacts_must_cover_the_tp_degree() {
+        const META: &str = "model=tiny-llama\nvocab=512\nhidden=256\nintermediate=768\n\
+            layers=4\nheads=8\nhead_dim=32\nmax_seq=128\nprefill_len=32\nseed=0\n\
+            dtype=f32\ntp_degrees=1,2,4\n";
+        let store = ArtifactStore {
+            dir: std::path::PathBuf::from("/nonexistent"),
+            meta: ArtifactMeta::parse(META).unwrap(),
+        };
+        // tiny supports tp=8 architecturally, but the store was not built
+        // for it — the plan must reject before any worker spawns.
+        let err =
+            Deployment::builder().artifacts(store.clone()).tp(8).build().unwrap_err();
+        assert_eq!(err, PlanError::ArtifactsMissingTp { tp: 8, available: vec![1, 2, 4] });
+        // The analytical arch must be the artifact model: a plan that
+        // analyzes 8B but serves tiny artifacts is rejected.
+        let err = Deployment::builder()
+            .model("8b")
+            .artifacts(store.clone())
+            .tp(2)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, PlanError::ArtifactModelMismatch { .. }), "{err}");
+        // A workload the artifacts cannot serve is rejected up front...
+        let err = Deployment::builder()
+            .artifacts(store.clone())
+            .tp(2)
+            .workload(128, 128)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, PlanError::ArtifactWorkloadMismatch { .. }), "{err}");
+        // ...as is reshaping an already-built numeric plan.
+        let plan = Deployment::builder().artifacts(store.clone()).tp(2).build().unwrap();
+        assert!(matches!(
+            plan.with_workload(128, 128).unwrap_err(),
+            PlanError::ArtifactWorkloadMismatch { .. }
+        ));
+        // A servable explicit workload is fine.
+        assert!(Deployment::builder()
+            .artifacts(store.clone())
+            .tp(2)
+            .workload(32, 16)
+            .build()
+            .is_ok());
+        // A degenerate store (no decode room at all: max_seq == prefill)
+        // cannot produce a "valid" plan via the derived workload either.
+        let degenerate = ArtifactStore {
+            dir: std::path::PathBuf::from("/nonexistent"),
+            meta: ArtifactMeta::parse(&META.replace("max_seq=128", "max_seq=32")).unwrap(),
+        };
+        let err = Deployment::builder().artifacts(degenerate).tp(2).build().unwrap_err();
+        assert!(matches!(err, PlanError::ArtifactWorkloadMismatch { .. }), "{err}");
+        // A covered degree builds (numeric), defaults the arch to tiny and
+        // derives the workload from the artifacts (Sp=32, Sd within max_seq).
+        let plan = Deployment::builder().artifacts(store).tp(2).build().unwrap();
+        assert!(plan.is_numeric());
+        assert_eq!(plan.arch().name, "tiny-llama");
+        assert_eq!(plan.shape().prefill_len, 32);
+        assert_eq!(plan.shape().decode_len, 96);
+        // ...including the dtype: the tiny model serves f32, so analytics
+        // must count 4 bytes per element, not the BF16 default.
+        assert_eq!(plan.shape().dtype_bytes, 4);
+    }
+}

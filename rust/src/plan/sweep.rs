@@ -1,0 +1,72 @@
+//! Feasible-layout enumeration — the parallelism advisor's search space as
+//! a library primitive (paper §VII: "automated parallelism selection tools
+//! that dynamically choose optimal configurations").
+
+use crate::model::ModelArch;
+
+use super::{Deployment, DeploymentPlan};
+
+impl DeploymentPlan {
+    /// Every feasible (TP, PP) plan of `arch` using exactly `gpus` GPUs,
+    /// in ascending-TP order.
+    ///
+    /// A pair is feasible when `tp * pp == gpus`, the architecture divides
+    /// across `tp` and splits into `pp` non-empty stages. Each yielded plan
+    /// carries the paper-default workload (Sp = Sd = 128, BF16) and a
+    /// just-big-enough 4-GPU-node topology; reshape with
+    /// [`DeploymentPlan::with_workload`].
+    pub fn sweep(arch: &ModelArch, gpus: usize) -> impl Iterator<Item = DeploymentPlan> {
+        let mut plans = Vec::new();
+        for tp in 1..=gpus {
+            if gpus % tp != 0 {
+                continue;
+            }
+            let pp = gpus / tp;
+            if let Ok(plan) = Deployment::builder().arch(arch.clone()).tp(tp).pp(pp).build() {
+                plans.push(plan);
+            }
+        }
+        plans.into_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn degrees(arch: &ModelArch, gpus: usize) -> Vec<(usize, usize)> {
+        DeploymentPlan::sweep(arch, gpus)
+            .map(|p| (p.layout().tp, p.layout().pp))
+            .collect()
+    }
+
+    #[test]
+    fn eight_gpus_covers_the_fig10_grid() {
+        assert_eq!(
+            degrees(&ModelArch::llama2_13b(), 8),
+            vec![(1, 8), (2, 4), (4, 2), (8, 1)]
+        );
+    }
+
+    #[test]
+    fn infeasible_degrees_are_filtered() {
+        // tiny: 8 heads, 4 layers. On 6 GPUs, tp=3 and tp=6 do not divide
+        // the heads, pp=6 exceeds the layers — only TP=2 × PP=3 survives.
+        assert_eq!(degrees(&ModelArch::tiny(), 6), vec![(2, 3)]);
+    }
+
+    #[test]
+    fn zero_gpus_yields_nothing() {
+        assert_eq!(degrees(&ModelArch::llama31_8b(), 0), vec![]);
+    }
+
+    #[test]
+    fn every_swept_plan_uses_exactly_the_gpu_budget() {
+        for gpus in [1usize, 2, 4, 8, 16] {
+            for plan in DeploymentPlan::sweep(&ModelArch::llama31_8b(), gpus) {
+                assert_eq!(plan.layout().world_size(), gpus);
+                assert!(plan.topology().total_gpus() >= gpus);
+            }
+        }
+    }
+}

@@ -102,6 +102,14 @@ impl ArtifactStore {
         Self::open("artifacts")
     }
 
+    /// Whether a built artifact store exists at `dir` (its metadata file
+    /// is present). The cheap probe for "artifacts were never built" —
+    /// callers that find `present()` true should treat an `open()` failure
+    /// as corruption, not absence.
+    pub fn present(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("meta.txt").exists()
+    }
+
     /// Path of a segment HLO, e.g. `("attn", Phase::Decode, 2)`.
     pub fn hlo_path(&self, segment: &str, phase: Phase, tp: usize) -> PathBuf {
         self.dir.join(format!("{segment}_{}_t{tp}.hlo.txt", phase.suffix()))

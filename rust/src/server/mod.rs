@@ -32,6 +32,12 @@ impl Server {
         &self.engine
     }
 
+    /// Run the engine's warmup request (excluded from traces) so the first
+    /// served request's TTFT is not inflated by lazy one-time setup.
+    pub fn warmup(&mut self) -> Result<()> {
+        self.engine.warmup()
+    }
+
     /// Enqueue a request.
     pub fn submit(&mut self, request: Request) -> Result<()> {
         self.scheduler.submit(request)

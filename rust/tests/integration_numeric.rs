@@ -6,14 +6,18 @@
 //! This is the proof that the three layers compose: Pallas kernels (L1)
 //! lowered inside the JAX segments (L2), AOT'd to HLO, executed by PJRT
 //! from the Rust coordinator (L3) with *real* AllReduce/AllGather/Gather/
-//! Send/Recv between workers.
+//! Send/Recv between workers — all assembled through the deployment-plan
+//! facade.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts`; every test self-skips (with a note on
+//! stderr) when the artifacts have not been built, so the suite stays
+//! green on machines without the JAX build path.
 
 use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout};
 use commsim::comm::{CollectiveKind, Stage};
-use commsim::engine::{Engine, EngineConfig};
+use commsim::engine::Engine;
 use commsim::model::ModelArch;
+use commsim::plan::Deployment;
 use commsim::runtime::ArtifactStore;
 
 /// Greedy continuation of the pinned prompt computed by the JAX reference
@@ -24,35 +28,55 @@ fn pinned_prompt(len: usize, vocab: usize) -> Vec<i32> {
     (0..len).map(|i| ((7 * i) % vocab) as i32).collect()
 }
 
-fn store() -> ArtifactStore {
-    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("artifacts present (run `make artifacts`)")
+/// The artifact store, or `None` (skip) when `make artifacts` has not run.
+/// Only a genuinely absent store skips — artifacts that exist but fail to
+/// load (truncated meta, interrupted build) still fail the test loudly.
+fn store() -> Option<ArtifactStore> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !ArtifactStore::present(dir) {
+        eprintln!("skipping numeric integration test: no artifacts at {dir} (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactStore::open(dir).expect("artifacts present but unreadable — rebuild them"))
 }
 
-fn generate(layout: ParallelLayout, decode_len: usize) -> (Vec<i32>, Engine) {
-    let store = store();
+fn numeric_engine(store: ArtifactStore, tp: usize, pp: usize) -> Engine {
+    Deployment::builder()
+        .artifacts(store)
+        .tp(tp)
+        .pp(pp)
+        .build()
+        .expect("numeric plan")
+        .engine()
+        .expect("engine")
+}
+
+fn generate(store: ArtifactStore, tp: usize, pp: usize, decode_len: usize) -> (Vec<i32>, Engine) {
     let prompt = pinned_prompt(store.meta.prefill_len, store.meta.vocab);
-    let mut engine = Engine::new(EngineConfig::numeric(store, layout)).expect("engine");
+    let mut engine = numeric_engine(store, tp, pp);
     let result = engine.generate(&prompt, decode_len).expect("generate");
     (result.tokens, engine)
 }
 
 #[test]
 fn tp1_matches_jax_reference() {
-    let (tokens, _) = generate(ParallelLayout::new(1, 1), EXPECTED_TOKENS.len());
+    let Some(store) = store() else { return };
+    let (tokens, _) = generate(store, 1, 1, EXPECTED_TOKENS.len());
     assert_eq!(tokens, EXPECTED_TOKENS, "single-worker segment composition");
 }
 
 #[test]
 fn tp2_matches_jax_reference_with_real_allreduce() {
-    let (tokens, engine) = generate(ParallelLayout::new(2, 1), EXPECTED_TOKENS.len());
+    let Some(store) = store() else { return };
+    let prefill_len = store.meta.prefill_len;
+    let (tokens, engine) = generate(store, 2, 1, EXPECTED_TOKENS.len());
     assert_eq!(tokens, EXPECTED_TOKENS, "TP=2 sharded inference");
     // And the communication stream matches the analytical model exactly.
     let summary = engine.trace().summary();
     let model = OpCountModel::new(
         ModelArch::tiny(),
         ParallelLayout::new(2, 1),
-        InferenceShape::new(32, EXPECTED_TOKENS.len(), 4),
+        InferenceShape::new(prefill_len, EXPECTED_TOKENS.len(), 4),
     );
     for stage in [Stage::Prefill, Stage::Decode] {
         let predicted = model.predict_paper_view(stage);
@@ -68,13 +92,15 @@ fn tp2_matches_jax_reference_with_real_allreduce() {
 
 #[test]
 fn tp4_matches_jax_reference() {
-    let (tokens, _) = generate(ParallelLayout::new(4, 1), EXPECTED_TOKENS.len());
+    let Some(store) = store() else { return };
+    let (tokens, _) = generate(store, 4, 1, EXPECTED_TOKENS.len());
     assert_eq!(tokens, EXPECTED_TOKENS, "TP=4 sharded inference");
 }
 
 #[test]
 fn pp2_matches_jax_reference_with_real_p2p() {
-    let (tokens, engine) = generate(ParallelLayout::new(1, 2), EXPECTED_TOKENS.len());
+    let Some(store) = store() else { return };
+    let (tokens, engine) = generate(store, 1, 2, EXPECTED_TOKENS.len());
     assert_eq!(tokens, EXPECTED_TOKENS, "PP=2 staged inference");
     let summary = engine.trace().summary();
     // (p-1) * 2 tensors * steps: prefill 1 step, decode len-1 steps.
@@ -87,13 +113,16 @@ fn pp2_matches_jax_reference_with_real_p2p() {
 
 #[test]
 fn pp4_matches_jax_reference() {
-    let (tokens, _) = generate(ParallelLayout::new(1, 4), EXPECTED_TOKENS.len());
+    let Some(store) = store() else { return };
+    let (tokens, _) = generate(store, 1, 4, EXPECTED_TOKENS.len());
     assert_eq!(tokens, EXPECTED_TOKENS, "PP=4 staged inference");
 }
 
 #[test]
 fn hybrid_tp2_pp2_matches_jax_reference() {
-    let (tokens, engine) = generate(ParallelLayout::new(2, 2), EXPECTED_TOKENS.len());
+    let Some(store) = store() else { return };
+    let prefill_len = store.meta.prefill_len;
+    let (tokens, engine) = generate(store, 2, 2, EXPECTED_TOKENS.len());
     assert_eq!(tokens, EXPECTED_TOKENS, "hybrid TP=2 PP=2 inference");
     let summary = engine.trace().summary();
     // Hybrid adds stage-entry AllGathers (2 per step on stage-1 ranks).
@@ -104,7 +133,7 @@ fn hybrid_tp2_pp2_matches_jax_reference() {
     );
     // p2p carries the TP-local slice [S, h/2].
     let shapes = summary.shapes(CollectiveKind::Send, Stage::Prefill);
-    assert_eq!(shapes, vec![vec![32, ModelArch::tiny().hidden / 2]]);
+    assert_eq!(shapes, vec![vec![prefill_len, ModelArch::tiny().hidden / 2]]);
 }
 
 #[test]
@@ -113,7 +142,7 @@ fn fused_engine_matches_segment_engine() {
     // the same tokens as the segment-loop engine — the L2 §Perf fast path
     // is semantics-preserving.
     use commsim::engine::fused::FusedEngine;
-    let store = store();
+    let Some(store) = store() else { return };
     let prompt = pinned_prompt(store.meta.prefill_len, store.meta.vocab);
     let mut fused = FusedEngine::new(store).expect("fused engine");
     let r = fused.generate(&prompt, EXPECTED_TOKENS.len()).expect("generate");
@@ -125,10 +154,9 @@ fn fused_engine_matches_segment_engine() {
 
 #[test]
 fn repeated_requests_reset_kv_state() {
-    let store = store();
+    let Some(store) = store() else { return };
     let prompt = pinned_prompt(store.meta.prefill_len, store.meta.vocab);
-    let mut engine =
-        Engine::new(EngineConfig::numeric(store, ParallelLayout::new(2, 1))).unwrap();
+    let mut engine = numeric_engine(store, 2, 1);
     let a = engine.generate(&prompt, 6).unwrap();
     let b = engine.generate(&prompt, 6).unwrap();
     assert_eq!(a.tokens, b.tokens, "KV reset isolates requests");
@@ -137,8 +165,7 @@ fn repeated_requests_reset_kv_state() {
 
 #[test]
 fn numeric_mode_validates_prompt_length() {
-    let store = store();
-    let mut engine =
-        Engine::new(EngineConfig::numeric(store, ParallelLayout::new(1, 1))).unwrap();
+    let Some(store) = store() else { return };
+    let mut engine = numeric_engine(store, 1, 1);
     assert!(engine.generate(&[1, 2, 3], 4).is_err(), "wrong prompt length");
 }

@@ -1,17 +1,23 @@
 //! Structural-mode integration: paper-scale architectures through the full
-//! engine; every traced count, shape, and corrected volume must equal both
-//! the analytical models (Eq. 1–7) and the paper's published table values.
+//! engine (via the deployment-plan facade); every traced count, shape, and
+//! corrected volume must equal both the analytical models (Eq. 1–7) and
+//! the paper's published table values.
 
 use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
 use commsim::comm::{CollectiveKind, Stage, TraceSummary};
-use commsim::engine::{Engine, EngineConfig};
 use commsim::model::{ModelArch, DTYPE_BYTES_BF16};
+use commsim::plan::Deployment;
 
 fn run(arch: ModelArch, tp: usize, pp: usize, sp: usize, sd: usize) -> TraceSummary {
-    let mut engine =
-        Engine::new(EngineConfig::structural(arch, ParallelLayout::new(tp, pp))).unwrap();
-    engine.generate(&vec![0i32; sp], sd).unwrap();
-    engine.trace().summary()
+    Deployment::builder()
+        .arch(arch)
+        .tp(tp)
+        .pp(pp)
+        .workload(sp, sd)
+        .build()
+        .expect("feasible plan")
+        .trace()
+        .expect("structural trace")
 }
 
 /// Paper Table III — Llama-3.1-8B, Sp=Sd=128, TP∈{2,4}: counts AND shapes.

@@ -290,23 +290,50 @@ fn prop_percentile_monotone_bounded() {
 }
 
 /// Structural engine conservation: every request completes with exactly the
-/// requested number of tokens, under randomized layouts.
+/// requested number of tokens, under randomized layouts (engines built
+/// through the deployment-plan facade).
 #[test]
 fn prop_engine_token_conservation() {
-    use commsim::engine::{Engine, EngineConfig};
+    use commsim::plan::Deployment;
     let mut rng = Rng::new(0x288);
     for _ in 0..6 {
         let (tp, pp) = *rng.choose(&[(1usize, 2usize), (2, 1), (2, 2), (4, 1), (1, 4)]);
         let sp = rng.usize_in(1, 64);
         let sd = rng.usize_in(1, 32);
-        let mut e = Engine::new(EngineConfig::structural(
-            ModelArch::tiny(),
-            ParallelLayout::new(tp, pp),
-        ))
-        .unwrap();
+        let mut e = Deployment::builder()
+            .arch(ModelArch::tiny())
+            .tp(tp)
+            .pp(pp)
+            .build()
+            .unwrap()
+            .engine()
+            .unwrap();
         let r = e.generate(&vec![0i32; sp], sd).unwrap();
         assert_eq!(r.tokens.len(), sd, "tp={tp} pp={pp} sp={sp} sd={sd}");
         assert_eq!(r.step_latencies.len(), sd - 1);
         assert!(r.e2e >= r.ttft);
     }
+}
+
+/// Every plan yielded by `DeploymentPlan::sweep` is actually constructible:
+/// the engine spawns its worker group and serves a request — the sweep's
+/// feasibility filter and the engine's own layout checks must agree.
+#[test]
+fn prop_sweep_plans_construct_engines() {
+    use commsim::plan::DeploymentPlan;
+    let arch = ModelArch::tiny();
+    let mut total = 0;
+    for gpus in [1usize, 2, 4, 8] {
+        let mut found = 0;
+        for plan in DeploymentPlan::sweep(&arch, gpus) {
+            assert_eq!(plan.layout().world_size(), gpus);
+            let mut engine = plan.engine().expect("sweep yielded an infeasible plan");
+            let r = engine.generate(&vec![0i32; 8], 4).unwrap();
+            assert_eq!(r.tokens.len(), 4, "{}", plan.label());
+            found += 1;
+        }
+        assert!(found >= 1, "no feasible layout found for {gpus} GPUs");
+        total += found;
+    }
+    assert!(total >= 8, "tiny should admit most small power-of-two grids");
 }

@@ -1,0 +1,124 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The vendored build environment has no network access, so this crate
+//! provides exactly the API subset `commsim` uses — [`Error`], [`Result`],
+//! [`anyhow!`], [`bail!`], [`ensure!`] — with the same semantics:
+//!
+//! - `Error` is an opaque, `Send + Sync` error value built from a message
+//!   or converted from any `std::error::Error`;
+//! - like real `anyhow`, `Error` deliberately does **not** implement
+//!   `std::error::Error` itself, which is what makes the blanket
+//!   `From<E: std::error::Error>` conversion (and therefore `?` on mixed
+//!   error types) coherent.
+//!
+//! Swapping in the real crates.io `anyhow` is a one-line `Cargo.toml`
+//! change; no source in `commsim` depends on anything beyond this subset.
+
+use std::fmt;
+
+/// An opaque error value carrying a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Self::msg(&e)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_debug_show_message() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        assert_eq!(format!("{e:?}"), "bad value 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn bail_and_ensure_return_errors() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x > 1, "too small: {x}");
+            ensure!(x < 10);
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(0).unwrap_err().to_string(), "too small: 0");
+        assert!(f(11).unwrap_err().to_string().contains("condition failed"));
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+    }
+}
