@@ -5,8 +5,16 @@
 //! Asserts the paper's sub-linear growth factors: ≈1.50× for 128→256 and
 //! ≈1.67× for 256→512 (the `(S_p + S_d − 1)` dilution), PP lowest volume,
 //! TP growing fastest in absolute terms.
+//!
+//! Batch-dimension variant (beyond the paper's single-request methodology,
+//! §IV.B): continuous batching puts B sequences into every decode
+//! iteration, so the per-iteration AllReduce payload is `[B, h]` — the
+//! measured, batch-tagged trace must scale *linearly* with the active
+//! batch size (the axis arXiv:2408.10197 / arXiv:2407.14645 model).
 
 use commsim::analysis::ParallelLayout;
+use commsim::comm::{CollectiveKind, Stage};
+use commsim::engine::SequenceInput;
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
 use commsim::report::{fmt_bytes, render_table};
@@ -76,5 +84,62 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("\nFig. 7 reproduced: sub-linear growth 1.50x/1.67x, PP lowest at every length.");
+
+    // --- batch dimension: decode AllReduce payload vs active batch size --
+    let batches = [1usize, 2, 4, 8];
+    let mut rows = Vec::new();
+    let mut per_record = Vec::new();
+    for &b in &batches {
+        let (count, bytes) = decode_allreduce_at_batch(b)?;
+        anyhow::ensure!(count > 0, "no batch-tagged decode AllReduce at B={b}");
+        anyhow::ensure!(bytes % count == 0, "uniform records at B={b}");
+        per_record.push(bytes / count);
+        rows.push(vec![
+            format!("B={b}"),
+            count.to_string(),
+            fmt_bytes((bytes / count) as f64),
+            fmt_bytes(bytes as f64),
+        ]);
+    }
+    print!(
+        "\n{}",
+        render_table(
+            "Fig. 7 batch variant — decode AllReduce vs active batch (8B, TP=2, structural)",
+            &["Batch", "Count", "Per-record", "Total"],
+            &rows,
+        )
+    );
+    for (i, &b) in batches.iter().enumerate() {
+        anyhow::ensure!(
+            per_record[i] == b * per_record[0],
+            "decode AllReduce payload must scale linearly with batch: B={b} \
+             per-record {} vs {}x{}",
+            per_record[i],
+            b,
+            per_record[0]
+        );
+    }
+    println!("\nBatch variant verified: per-iteration decode AllReduce payload is linear in B.");
     Ok(())
+}
+
+/// Serve `batch` equal-length sequences through one session and return the
+/// (count, total bytes) of decode AllReduce records tagged with that batch
+/// size. All sequences prefill first and then decode in lockstep, so every
+/// decode iteration carries the full batch.
+fn decode_allreduce_at_batch(batch: usize) -> anyhow::Result<(usize, usize)> {
+    let plan = Deployment::builder().model("8b").tp(2).workload(16, 8).build()?;
+    let mut engine = plan.engine()?;
+    {
+        let mut session = engine.session();
+        for id in 0..batch as u64 {
+            session.admit(SequenceInput { id, prompt: vec![0; 16], max_new_tokens: 8 })?;
+        }
+        while !session.is_idle() {
+            session.step()?;
+        }
+    }
+    let summary = engine.trace().summary();
+    let agg = summary.batch_view(batch, CollectiveKind::AllReduce, Stage::Decode);
+    Ok((agg.count, agg.total_message_bytes))
 }

@@ -2,25 +2,149 @@
 //! workload (the system-prompt-mandated E2E validation; results recorded
 //! in EXPERIMENTS.md).
 //!
-//! Loads the tiny real model (Pallas kernels → JAX segments → AOT HLO →
-//! PJRT), builds numeric deployment plans with real AllReduce/Gather
-//! between worker threads, serves a batch of requests through the
-//! router/scheduler, and reports latency/throughput. Also verifies the
-//! served tokens against the pinned JAX reference and cross-checks TP=2
-//! vs PP=2 vs hybrid 2×2.
+//! Two modes:
 //!
-//! Run: `make artifacts && cargo run --release --example serve_e2e`
+//! - **numeric** (default; needs `make artifacts`): loads the tiny real
+//!   model (Pallas kernels → JAX segments → AOT HLO → PJRT), verifies
+//!   every layout against the pinned JAX reference, then serves a batch
+//!   through the continuous-batching scheduler (numeric engines clamp to
+//!   batch 1 — their PJRT executables hold single-sequence KV state).
+//! - **structural** (`cargo run --release --example serve_e2e -- structural`):
+//!   paper-scale continuous batching with no artifacts — serves the same
+//!   request set at `max_batch` 4 and 1, demonstrates the throughput win,
+//!   streams a few `TokenEvent`s, and prints the batch-tagged decode
+//!   AllReduce accounting. This is the CI serving smoke test.
 
+use commsim::comm::{CollectiveKind, Stage};
+use commsim::engine::{SequenceInput, StepKind};
 use commsim::plan::Deployment;
 use commsim::runtime::ArtifactStore;
-use commsim::server::{Request, SchedulerConfig};
+use commsim::server::{Request, SchedulerConfig, ServeSummary};
 
 const EXPECTED_TOKENS: [i32; 12] = [95, 497, 497, 497, 109, 379, 109, 291, 497, 497, 109, 269];
 
+fn requests(n: u64, sp: usize, vocab: i32, decode_len: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| Request {
+            id,
+            prompt: (0..sp as i32).map(|i| (id as i32 * 131 + 7 * i) % vocab).collect(),
+            decode_len,
+        })
+        .collect()
+}
+
+fn print_summary(label: &str, s: &ServeSummary) {
+    println!(
+        "[{label}] {} requests ({} ok, {} failed) — {:.1} tok/s ({:.2} req/s)",
+        s.requests, s.completed, s.failed, s.tokens_per_s, s.requests_per_s
+    );
+    println!(
+        "  TTFT p50/p95/p99 : {:.2} / {:.2} / {:.2} ms",
+        s.ttft.p50_s * 1e3,
+        s.ttft.p95_s * 1e3,
+        s.ttft.p99_s * 1e3
+    );
+    println!(
+        "  TPOT p50/p95/p99 : {:.3} / {:.3} / {:.3} ms",
+        s.tpot.p50_s * 1e3,
+        s.tpot.p95_s * 1e3,
+        s.tpot.p99_s * 1e3
+    );
+    println!("  E2E  p50/p99     : {:.4} / {:.4} s (mean {:.4} s)", s.e2e.p50_s, s.e2e.p99_s, s.e2e_mean_s);
+}
+
+/// Paper-scale serving without artifacts: the continuous-batching path the
+/// structural engine supports end-to-end.
+fn structural_demo() -> anyhow::Result<()> {
+    let plan = Deployment::builder().model("8b").tp(2).workload(32, 16).build()?;
+    println!("structural serving: {} (no artifacts; no-op compute, real collectives)\n", plan.label());
+
+    // --- streaming: drive a session by hand for two sequences -----------
+    let mut engine = plan.engine()?;
+    {
+        let mut session = engine.session();
+        session.admit(SequenceInput { id: 0, prompt: vec![0; 32], max_new_tokens: 4 })?;
+        session.admit(SequenceInput { id: 1, prompt: vec![0; 32], max_new_tokens: 3 })?;
+        println!("[stream] iteration-level token events:");
+        while !session.is_idle() {
+            let out = session.step()?;
+            let kind = match out.kind {
+                StepKind::Prefill => "prefill",
+                StepKind::Decode => "decode ",
+                StepKind::Idle => break,
+            };
+            let events: Vec<String> = out
+                .events
+                .iter()
+                .map(|e| format!("seq{}#{}{}", e.seq, e.index, if e.is_last { "!" } else { "" }))
+                .collect();
+            println!(
+                "  step {:<2} {kind} batch={} -> {}",
+                out.step_index,
+                out.batch,
+                events.join(" ")
+            );
+        }
+    }
+
+    // --- throughput: continuous batching vs one-at-a-time ----------------
+    let n = 8u64;
+    let decode_len = 16usize;
+    let serve = |max_batch: usize| -> anyhow::Result<(ServeSummary, usize)> {
+        let cfg = SchedulerConfig { max_batch, ..SchedulerConfig::default() };
+        let mut server = plan.server(cfg)?;
+        let vocab = plan.arch().vocab as i32;
+        let summary = server.serve_batch(requests(n, 32, vocab, decode_len))?;
+        let trace = server.engine().trace().summary();
+        let tagged = trace
+            .batch_sizes()
+            .into_iter()
+            .filter(|&b| b > 1)
+            .map(|b| trace.batch_view(b, CollectiveKind::AllReduce, Stage::Decode).count)
+            .sum::<usize>();
+        if max_batch > 1 {
+            println!("\ndecode AllReduce by active batch size (max_batch={max_batch}):");
+            for b in trace.batch_sizes() {
+                let agg = trace.batch_view(b, CollectiveKind::AllReduce, Stage::Decode);
+                if agg.count > 0 {
+                    let per = agg.total_message_bytes / agg.count;
+                    println!("  batch={b}: count={:<5} per-record={per} B", agg.count);
+                }
+            }
+        }
+        Ok((summary, tagged))
+    };
+
+    let (batched, tagged) = serve(4)?;
+    let (fcfs, _) = serve(1)?;
+    println!();
+    print_summary("continuous batching, max_batch=4", &batched);
+    print_summary("one-at-a-time, max_batch=1", &fcfs);
+    anyhow::ensure!(
+        batched.completed == n as usize && fcfs.completed == n as usize,
+        "all requests must complete"
+    );
+    anyhow::ensure!(tagged > 0, "batched decode collectives must carry batch tags > 1");
+    anyhow::ensure!(
+        batched.tokens_per_s > fcfs.tokens_per_s,
+        "continuous batching must beat FCFS aggregate throughput ({:.1} vs {:.1} tok/s)",
+        batched.tokens_per_s,
+        fcfs.tokens_per_s
+    );
+    println!(
+        "\ncontinuous batching speedup: {:.2}x aggregate tokens/s",
+        batched.tokens_per_s / fcfs.tokens_per_s
+    );
+    println!("\nserve_e2e OK (structural)");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let store = ArtifactStore::open(
-        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
-    )?;
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    if arg == "structural" {
+        return structural_demo();
+    }
+    let store = ArtifactStore::open(arg)?;
     let sp = store.meta.prefill_len;
     let vocab = store.meta.vocab as i32;
     println!(
@@ -47,40 +171,31 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // --- serving: batch of requests through router + scheduler ---------
+    // --- serving: batch of requests through scheduler + session ---------
     let plan = Deployment::builder().artifacts(store.clone()).tp(2).pp(1).build()?;
-    let mut server =
-        plan.server(SchedulerConfig { kv_blocks: 256, kv_block_size: 16, max_queue: 256 })?;
+    let mut server = plan.server(SchedulerConfig {
+        kv_blocks: 256,
+        kv_block_size: 16,
+        max_queue: 256,
+        max_batch: 8, // numeric engines clamp to 1 (single-sequence KV)
+    })?;
     server.warmup()?; // exclude one-time PJRT first-execution setup from SLOs
-    let n_requests = 16usize;
+    let n_requests = 16u64;
     let decode_len = 48usize;
-    let requests: Vec<Request> = (0..n_requests as u64)
-        .map(|id| Request {
-            id,
-            prompt: (0..sp as i32).map(|i| (id as i32 * 131 + 7 * i) % vocab).collect(),
-            decode_len,
-        })
-        .collect();
-    let summary = server.serve_batch(requests)?;
+    let summary = server.serve_batch(requests(n_requests, sp, vocab, decode_len))?;
     println!(
         "\n[serve] layout {} — {} requests x {} tokens",
         plan.layout().label(),
         n_requests,
         decode_len
     );
-    println!("  throughput : {:.1} tok/s ({:.2} req/s)", summary.tokens_per_s, summary.requests_per_s);
-    println!("  TTFT p50/p99 : {:.1} / {:.1} ms", summary.ttft_p50_s * 1e3, summary.ttft_p99_s * 1e3);
-    println!("  TPOT p50/p99 : {:.2} / {:.2} ms", summary.tpot_p50_s * 1e3, summary.tpot_p99_s * 1e3);
-    println!("  E2E mean   : {:.3} s (includes queueing)", summary.e2e_mean_s);
+    print_summary("numeric serve", &summary);
 
     // --- the paper's object of study: the comm stream of that serving run
     let trace = server.engine().trace().summary();
     println!("\n[trace] collective stream of the serving run (per-worker view):");
-    for stage in [commsim::comm::Stage::Prefill, commsim::comm::Stage::Decode] {
-        for op in [
-            commsim::comm::CollectiveKind::AllReduce,
-            commsim::comm::CollectiveKind::Gather,
-        ] {
+    for stage in [Stage::Prefill, Stage::Decode] {
+        for op in [CollectiveKind::AllReduce, CollectiveKind::Gather] {
             let v = trace.paper_view(op, stage);
             if v.count > 0 {
                 println!(

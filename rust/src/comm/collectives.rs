@@ -167,6 +167,8 @@ impl GroupHandle {
             elems: shape.iter().product(),
             dtype_bytes: self.dtype_bytes,
             peer: None,
+            step: None,
+            batch: None,
         });
     }
 
@@ -320,6 +322,8 @@ impl P2pEndpoint {
             elems: data.len(),
             dtype_bytes: self.dtype_bytes,
             peer: Some(self.peer),
+            step: None,
+            batch: None,
         });
         self.tx
             .as_ref()
@@ -346,6 +350,8 @@ impl P2pEndpoint {
             elems: data.len(),
             dtype_bytes: self.dtype_bytes,
             peer: Some(self.peer),
+            step: None,
+            batch: None,
         });
         data
     }

@@ -44,6 +44,14 @@ pub struct CommRecord {
     pub dtype_bytes: usize,
     /// Peer rank for Send/Recv.
     pub peer: Option<usize>,
+    /// Iteration counter of the [`crate::engine::Session`] step that
+    /// issued this op; `None` for collectives outside session-driven
+    /// execution (raw library use, warmup).
+    pub step: Option<u64>,
+    /// Number of sequences in the forward pass that issued this op (the
+    /// active batch size of the iteration — 1 for prefill and for the
+    /// single-request `generate()` path); `None` outside sessions.
+    pub batch: Option<usize>,
 }
 
 impl CommRecord {
@@ -64,6 +72,13 @@ impl CommRecord {
 pub struct TraceSink {
     records: Mutex<Vec<CommRecord>>,
     enabled: std::sync::atomic::AtomicBool,
+    /// Iteration context stamped onto every record: the session step
+    /// counter and the active batch size (0 = no context). The coordinator
+    /// sets it before broadcasting a step command and all of the step's
+    /// records land before its logits return, so a plain atomic pair is
+    /// race-free.
+    step: std::sync::atomic::AtomicU64,
+    batch: std::sync::atomic::AtomicUsize,
 }
 
 impl TraceSink {
@@ -71,6 +86,8 @@ impl TraceSink {
         Arc::new(Self {
             records: Mutex::new(Vec::new()),
             enabled: std::sync::atomic::AtomicBool::new(true),
+            step: std::sync::atomic::AtomicU64::new(0),
+            batch: std::sync::atomic::AtomicUsize::new(0),
         })
     }
 
@@ -79,8 +96,26 @@ impl TraceSink {
         self.enabled.store(on, std::sync::atomic::Ordering::Relaxed);
     }
 
-    pub fn record(&self, rec: CommRecord) {
+    /// Declare the iteration every subsequent record belongs to: session
+    /// step counter and the batch that issued it (`batch >= 1`).
+    pub fn set_iteration(&self, step: u64, batch: usize) {
+        assert!(batch >= 1, "iteration batch must be >= 1");
+        self.step.store(step, std::sync::atomic::Ordering::Relaxed);
+        self.batch.store(batch, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Leave iteration context; subsequent records are untagged.
+    pub fn clear_iteration(&self) {
+        self.batch.store(0, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn record(&self, mut rec: CommRecord) {
         if self.enabled.load(std::sync::atomic::Ordering::Relaxed) {
+            let batch = self.batch.load(std::sync::atomic::Ordering::Relaxed);
+            if batch > 0 {
+                rec.step = Some(self.step.load(std::sync::atomic::Ordering::Relaxed));
+                rec.batch = Some(batch);
+            }
             self.records.lock().expect("sink poisoned").push(rec);
         }
     }
@@ -130,6 +165,10 @@ pub struct TraceSummary {
     pub global: BTreeMap<AggKey, OpAggregate>,
     /// Per-rank aggregates: `per_rank[rank][key]`.
     pub per_rank: Vec<BTreeMap<AggKey, OpAggregate>>,
+    /// Per-active-batch-size aggregates over the batch-tagged records
+    /// (global across ranks): `per_batch[batch][key]`. Untagged records
+    /// do not appear here.
+    pub per_batch: BTreeMap<usize, BTreeMap<AggKey, OpAggregate>>,
 }
 
 impl TraceSummary {
@@ -138,20 +177,26 @@ impl TraceSummary {
         let mut global: BTreeMap<AggKey, OpAggregate> = BTreeMap::new();
         let mut per_rank: Vec<BTreeMap<AggKey, OpAggregate>> =
             vec![BTreeMap::new(); n_ranks];
+        let mut per_batch: BTreeMap<usize, BTreeMap<AggKey, OpAggregate>> = BTreeMap::new();
         for rec in records {
             let key = AggKey {
                 op: rec.op,
                 stage: rec.stage,
                 shape: rec.shape.clone(),
             };
-            for map in [&mut global, &mut per_rank[rec.rank]] {
+            let add = |map: &mut BTreeMap<AggKey, OpAggregate>| {
                 let agg = map.entry(key.clone()).or_default();
                 agg.count += 1;
                 agg.total_message_bytes += rec.message_bytes();
                 agg.corrected_volume_bytes += rec.corrected_bytes();
+            };
+            add(&mut global);
+            add(&mut per_rank[rec.rank]);
+            if let Some(b) = rec.batch {
+                add(per_batch.entry(b).or_default());
             }
         }
-        Self { global, per_rank }
+        Self { global, per_rank, per_batch }
     }
 
     /// Count for (op, stage) summed over shapes, global across ranks.
@@ -197,6 +242,31 @@ impl TraceSummary {
         best
     }
 
+    /// Distinct active batch sizes observed in the trace (from
+    /// session-tagged records), ordered.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.per_batch.keys().copied().collect()
+    }
+
+    /// Aggregate for (op, stage) over records tagged with active batch
+    /// size `batch` (global across ranks, summed over shapes) — the
+    /// comm-volume-vs-batch-size axis of batched decode accounting.
+    pub fn batch_view(&self, batch: usize, op: CollectiveKind, stage: Stage) -> OpAggregate {
+        let mut agg = OpAggregate::default();
+        if let Some(m) = self.per_batch.get(&batch) {
+            for v in m
+                .iter()
+                .filter(|(k, _)| k.op == op && k.stage == stage)
+                .map(|(_, v)| v)
+            {
+                agg.count += v.count;
+                agg.total_message_bytes += v.total_message_bytes;
+                agg.corrected_volume_bytes += v.corrected_volume_bytes;
+            }
+        }
+        agg
+    }
+
     /// Distinct shapes recorded for (op, stage), ordered.
     pub fn shapes(&self, op: CollectiveKind, stage: Stage) -> Vec<Vec<usize>> {
         self.global
@@ -235,6 +305,8 @@ mod tests {
             elems: shape.iter().product(),
             dtype_bytes: 2,
             peer: None,
+            step: None,
+            batch: None,
         }
     }
 
@@ -276,6 +348,41 @@ mod tests {
         assert_eq!(s.paper_view(CollectiveKind::AllReduce, Stage::Decode).count, 3);
         let shapes = s.shapes(CollectiveKind::AllReduce, Stage::Decode);
         assert_eq!(shapes, vec![vec![1, 4096]]);
+    }
+
+    #[test]
+    fn iteration_context_tags_records_and_batch_view_aggregates() {
+        let sink = TraceSink::new();
+        sink.record(rec(CollectiveKind::AllReduce, Stage::Prefill, 0, &[16, 8]));
+        sink.set_iteration(3, 1);
+        sink.record(rec(CollectiveKind::AllReduce, Stage::Decode, 0, &[1, 8]));
+        sink.set_iteration(4, 4);
+        sink.record(rec(CollectiveKind::AllReduce, Stage::Decode, 0, &[4, 8]));
+        sink.record(rec(CollectiveKind::AllReduce, Stage::Decode, 1, &[4, 8]));
+        sink.clear_iteration();
+        sink.record(rec(CollectiveKind::AllReduce, Stage::Decode, 0, &[1, 8]));
+
+        let snap = sink.snapshot();
+        assert_eq!(snap[0].batch, None, "pre-context record untagged");
+        assert_eq!((snap[1].step, snap[1].batch), (Some(3), Some(1)));
+        assert_eq!((snap[2].step, snap[2].batch), (Some(4), Some(4)));
+        assert_eq!(snap[4].batch, None, "post-clear record untagged");
+
+        let s = sink.summary();
+        assert_eq!(s.batch_sizes(), vec![1, 4]);
+        let b4 = s.batch_view(4, CollectiveKind::AllReduce, Stage::Decode);
+        assert_eq!(b4.count, 2);
+        assert_eq!(b4.total_message_bytes, 2 * 4 * 8 * 2);
+        let b1 = s.batch_view(1, CollectiveKind::AllReduce, Stage::Decode);
+        assert_eq!(b1.count, 1);
+        // Per-record payload scales linearly with the batch tag.
+        assert_eq!(
+            b4.total_message_bytes / b4.count,
+            4 * (b1.total_message_bytes / b1.count)
+        );
+        // Untagged records still aggregate globally.
+        assert_eq!(s.global_count(CollectiveKind::AllReduce, Stage::Decode), 4);
+        assert_eq!(s.batch_view(2, CollectiveKind::AllReduce, Stage::Decode).count, 0);
     }
 
     #[test]

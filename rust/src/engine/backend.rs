@@ -31,6 +31,38 @@ pub trait ComputeBackend: Send {
     fn mlp(&mut self, layer: usize, x: &HostTensor) -> Result<HostTensor>;
     /// Final-norm + LM-head slice on the last token: `[S, h] -> [1, v/t]`.
     fn logits(&mut self, x: &HostTensor) -> Result<HostTensor>;
+    /// Batched decode attention: row `i` of `x` is an *independent*
+    /// sequence whose KV cache advances at `positions[i]`. The default
+    /// forwards a single-row batch to [`Self::attn`]; backends without
+    /// multi-sequence KV state (the fixed-shape PJRT executables) reject
+    /// larger batches — see [`Self::supports_batched_decode`].
+    fn attn_batch(
+        &mut self,
+        layer: usize,
+        x: &HostTensor,
+        positions: &[usize],
+    ) -> Result<HostTensor> {
+        if positions.len() != 1 {
+            anyhow::bail!(
+                "backend does not support batched decode (batch={})",
+                positions.len()
+            );
+        }
+        self.attn(layer, x, positions[0])
+    }
+    /// Per-row logits for a batched decode step: `[B, h] -> [B, v/t]`
+    /// (every row is some sequence's last token). Default forwards the
+    /// single-row batch to [`Self::logits`].
+    fn logits_batch(&mut self, x: &HostTensor) -> Result<HostTensor> {
+        if x.rows() != 1 {
+            anyhow::bail!("backend does not support batched decode (batch={})", x.rows());
+        }
+        self.logits(x)
+    }
+    /// Whether this backend can decode several sequences in one iteration.
+    fn supports_batched_decode(&self) -> bool {
+        false
+    }
     /// Clear KV state between requests.
     fn reset(&mut self) -> Result<()>;
 }
@@ -69,6 +101,24 @@ impl ComputeBackend for StructuralBackend {
 
     fn logits(&mut self, _x: &HostTensor) -> Result<HostTensor> {
         Ok(HostTensor::zeros(&[1, self.vocab_slice]))
+    }
+
+    fn attn_batch(
+        &mut self,
+        _layer: usize,
+        x: &HostTensor,
+        positions: &[usize],
+    ) -> Result<HostTensor> {
+        debug_assert_eq!(x.rows(), positions.len());
+        Ok(HostTensor::zeros(&x.shape))
+    }
+
+    fn logits_batch(&mut self, x: &HostTensor) -> Result<HostTensor> {
+        Ok(HostTensor::zeros(&[x.rows(), self.vocab_slice]))
+    }
+
+    fn supports_batched_decode(&self) -> bool {
+        true
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -296,5 +346,17 @@ mod tests {
         let l = b.logits(&e).unwrap();
         assert_eq!(l.shape, vec![1, 128_256 / 4]);
         b.reset().unwrap();
+    }
+
+    #[test]
+    fn structural_backend_batched_decode_shapes() {
+        let arch = ModelArch::llama31_8b();
+        let mut b = StructuralBackend::new(&arch, 4);
+        assert!(b.supports_batched_decode());
+        let x = b.embed(&[1, 2, 3]).unwrap(); // 3 independent sequences
+        let a = b.attn_batch(0, &x, &[5, 9, 17]).unwrap();
+        assert_eq!(a.shape, vec![3, 4096]);
+        let l = b.logits_batch(&x).unwrap();
+        assert_eq!(l.shape, vec![3, 128_256 / 4]);
     }
 }

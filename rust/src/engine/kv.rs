@@ -80,22 +80,25 @@ impl KvBlockManager {
     }
 
     /// Record one generated token; allocates a new block on crossing a
-    /// block boundary. Returns true if a block was consumed.
+    /// block boundary. Returns true if a block was consumed. A failed
+    /// append (pool exhausted) leaves the sequence's footprint untouched,
+    /// so `used_blocks == Σ ceil(tokens/block_size)` holds across bail-out
+    /// and retry paths.
     pub fn append_token(&mut self, seq: SeqId) -> Result<bool> {
         let alloc = self
             .allocated
             .get_mut(&seq)
             .ok_or_else(|| anyhow::anyhow!("seq {seq} not allocated"))?;
-        alloc.tokens += 1;
-        let need = alloc.tokens.div_ceil(self.block_size);
+        let need = (alloc.tokens + 1).div_ceil(self.block_size);
         if need > alloc.blocks.len() {
-            let block = self
-                .free
-                .pop()
-                .ok_or_else(|| anyhow::anyhow!("out of KV blocks appending to seq {seq}"))?;
+            let Some(block) = self.free.pop() else {
+                anyhow::bail!("out of KV blocks appending to seq {seq}");
+            };
             alloc.blocks.push(block);
+            alloc.tokens += 1;
             Ok(true)
         } else {
+            alloc.tokens += 1;
             Ok(false)
         }
     }
@@ -160,6 +163,26 @@ mod tests {
         assert!(m.append_token(1).is_err(), "no block left for growth");
         m.release(1).unwrap();
         m.allocate(2, 1).unwrap();
+    }
+
+    #[test]
+    fn failed_append_leaves_footprint_unchanged() {
+        let mut m = KvBlockManager::new(2, 4);
+        m.allocate(1, 7).unwrap(); // 2 blocks, 1 free slot in the second
+        m.allocate(2, 0).unwrap_err(); // pool full
+        assert!(m.append_token(1).is_ok(), "8th token fits the last block");
+        assert!(m.append_token(1).is_err(), "9th token needs a block the pool lacks");
+        assert_eq!(m.seq_tokens(1), Some(8), "failed append must not count the token");
+        assert_eq!(m.used_blocks(), 2);
+        // After the peer workload shrinks, the same append succeeds and
+        // accounting picks up exactly where it left off.
+        let mut m2 = KvBlockManager::new(3, 4);
+        m2.allocate(1, 8).unwrap();
+        m2.allocate(9, 1).unwrap();
+        assert!(m2.append_token(1).is_err(), "block held by seq 9");
+        m2.release(9).unwrap();
+        assert!(m2.append_token(1).unwrap(), "retry allocates the freed block");
+        assert_eq!(m2.seq_tokens(1), Some(9));
     }
 
     #[test]

@@ -2,17 +2,31 @@
 //! coordinator, with every inter-worker byte flowing through the traced
 //! collective library.
 //!
+//! Execution is iteration-level: [`Engine::session`] opens a [`Session`]
+//! whose [`Session::step`] runs one prefill-or-decode iteration over the
+//! active batch (continuous batching), streams per-sequence
+//! [`TokenEvent`]s, and tags every traced collective with the step and
+//! batch that issued it. [`Engine::generate`] is a thin single-sequence
+//! wrapper over the session (a batch of one — byte-identical to the
+//! paper's single-request methodology).
+//!
 //! Two modes share the identical control path (DESIGN.md §5):
 //! - **numeric** — the tiny AOT model, real PJRT compute on every worker;
-//!   used by the end-to-end example and the cross-layout equivalence tests;
+//!   used by the end-to-end example and the cross-layout equivalence
+//!   tests; its fixed-shape executables hold single-sequence KV state, so
+//!   sessions serve one sequence at a time;
 //! - **structural** — paper-scale architectures with no-op compute; the
-//!   communication stream (the paper's object of study) is unchanged, which
-//!   is what the table/figure benches trace.
+//!   communication stream (the paper's object of study) is unchanged,
+//!   which is what the table/figure benches trace — and the mode that
+//!   supports batched decode.
 
 pub mod backend;
 pub mod fused;
 pub mod kv;
+pub mod session;
 pub mod worker;
+
+pub use session::{SequenceInput, Session, StepKind, StepOutcome, TokenEvent};
 
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -22,7 +36,6 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use crate::analysis::ParallelLayout;
 use crate::comm::{CommWorld, TraceSink};
 use crate::model::ModelArch;
-use crate::runtime::tensor::argmax;
 use crate::runtime::ArtifactStore;
 use crate::Result;
 
@@ -229,44 +242,49 @@ impl Engine {
         result.map(|_| ())
     }
 
+    /// Whether this engine can decode several sequences in one iteration
+    /// (continuous batching). Structural backends batch; the numeric PJRT
+    /// executables are fixed-shape with single-sequence KV state.
+    pub fn supports_batched_decode(&self) -> bool {
+        matches!(self.cfg.mode, EngineMode::Structural)
+    }
+
+    /// Open an iteration-level [`Session`] over this engine: admit
+    /// sequences, then drive [`Session::step`] — one prefill-or-decode
+    /// iteration per call, streaming [`TokenEvent`]s.
+    pub fn session(&mut self) -> Session<'_> {
+        Session::new(self)
+    }
+
     /// Serve one request: prefill on `prompt`, then greedy-decode
     /// `decode_len` tokens total (first token comes out of prefill —
     /// paper's S_d counting).
+    ///
+    /// This is a thin single-sequence wrapper over [`Self::session`]; a
+    /// batch of one issues the identical command and collective stream the
+    /// pre-session engine did, so traces are unchanged.
     pub fn generate(&mut self, prompt: &[i32], decode_len: usize) -> Result<GenerationResult> {
         assert!(decode_len >= 1);
-        if let EngineMode::Numeric(store) = &self.cfg.mode {
-            if prompt.len() != store.meta.prefill_len {
-                anyhow::bail!(
-                    "numeric mode serves fixed prompts of {} tokens (got {})",
-                    store.meta.prefill_len,
-                    prompt.len()
-                );
-            }
-            if prompt.len() + decode_len > store.meta.max_seq {
-                anyhow::bail!(
-                    "prompt {} + decode {} exceeds max_seq {}",
-                    prompt.len(),
-                    decode_len,
-                    store.meta.max_seq
-                );
-            }
-        }
-
-        self.broadcast(WorkerCmd::Reset)?;
         let start = Instant::now();
-        self.broadcast(WorkerCmd::Prefill { tokens: prompt.to_vec() })?;
-        let logits = self.recv_logits()?;
-        let mut tokens = vec![argmax(&logits) as i32];
-        let ttft = start.elapsed();
-
+        let mut session = Session::new(self);
+        session.admit(SequenceInput {
+            id: 0,
+            prompt: prompt.to_vec(),
+            max_new_tokens: decode_len,
+        })?;
+        let mut tokens = Vec::with_capacity(decode_len);
+        let mut ttft = Duration::ZERO;
         let mut step_latencies = Vec::with_capacity(decode_len.saturating_sub(1));
-        for i in 1..decode_len {
-            let step_start = Instant::now();
-            let pos = prompt.len() + i - 1;
-            self.broadcast(WorkerCmd::Decode { token: tokens[i - 1], pos })?;
-            let logits = self.recv_logits()?;
-            tokens.push(argmax(&logits) as i32);
-            step_latencies.push(step_start.elapsed());
+        while !session.is_idle() {
+            let out = session.step()?;
+            match out.kind {
+                StepKind::Prefill => ttft = start.elapsed(),
+                StepKind::Decode => step_latencies.push(out.latency),
+                StepKind::Idle => break,
+            }
+            for e in out.events {
+                tokens.push(e.token);
+            }
         }
         let e2e = start.elapsed();
         let tpot = if step_latencies.is_empty() {

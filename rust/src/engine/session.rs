@@ -1,0 +1,421 @@
+//! Iteration-level session API — continuous batching over the engine.
+//!
+//! A [`Session`] owns the request lifecycle between the scheduler and the
+//! worker group: sequences are [`Session::admit`]ted, and every
+//! [`Session::step`] runs exactly one engine iteration — either the
+//! prefill of one admitted sequence or one decode iteration over the whole
+//! *active batch* (vLLM's iteration-level execution) — emitting one
+//! [`TokenEvent`] per participating sequence (streaming) and a
+//! [`StepOutcome`] describing the iteration.
+//!
+//! Every collective a step issues is tagged with the step counter and the
+//! active batch size ([`crate::comm::CommRecord::step`] /
+//! [`crate::comm::CommRecord::batch`]), so the trace records decode
+//! all-reduce volume *as a function of batch size* — the batch dimension
+//! the paper's single-request methodology (§IV.B) deliberately isolates
+//! away, and the axis batching-aware models (arXiv:2408.10197,
+//! arXiv:2407.14645) study.
+//!
+//! [`super::Engine::generate`] is a thin single-sequence wrapper over this
+//! API: a batch of one issues a byte-identical command/collective stream,
+//! so every trace/analyze/bench path is unchanged.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::engine::kv::SeqId;
+use crate::runtime::tensor::argmax;
+use crate::Result;
+
+use super::worker::WorkerCmd;
+use super::Engine;
+
+/// One sequence admitted into a [`Session`].
+#[derive(Debug, Clone)]
+pub struct SequenceInput {
+    pub id: SeqId,
+    pub prompt: Vec<i32>,
+    /// Total tokens to generate; the first comes out of prefill (the
+    /// paper's S_d counting).
+    pub max_new_tokens: usize,
+}
+
+/// One streamed token, emitted as soon as its iteration completes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub seq: SeqId,
+    pub token: i32,
+    /// 0-based index within the sequence's generated output.
+    pub index: usize,
+    /// True when this token completes the sequence.
+    pub is_last: bool,
+}
+
+/// What kind of iteration a [`Session::step`] call ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// Prefill of one admitted sequence (emits its first token).
+    Prefill,
+    /// One decode iteration over the whole active batch.
+    Decode,
+    /// Nothing to do — no admitted or active sequences.
+    Idle,
+}
+
+/// Outcome of one engine iteration.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    pub kind: StepKind,
+    /// Monotone iteration counter (shared across prefill and decode; this
+    /// is the `step` tag on the iteration's trace records).
+    pub step_index: u64,
+    /// Sequences in this iteration's forward pass (1 for prefill, 0 for
+    /// idle; this is the `batch` tag on the iteration's trace records).
+    pub batch: usize,
+    /// Tokens produced this iteration, one per participating sequence.
+    pub events: Vec<TokenEvent>,
+    /// Sequences that reached `max_new_tokens` this iteration.
+    pub finished: Vec<SeqId>,
+    /// Wall-clock latency of the iteration.
+    pub latency: Duration,
+}
+
+struct ActiveSeq {
+    id: SeqId,
+    prompt_len: usize,
+    max_new_tokens: usize,
+    last_token: i32,
+    generated: usize,
+}
+
+/// Iteration-level view of an [`Engine`]: admitted sequences share each
+/// decode iteration (continuous batching). Created by
+/// [`Engine::session`]; dropping the session leaves the engine reusable.
+pub struct Session<'e> {
+    engine: &'e mut Engine,
+    waiting_prefill: VecDeque<SequenceInput>,
+    active: Vec<ActiveSeq>,
+    step_index: u64,
+}
+
+impl<'e> Session<'e> {
+    pub fn new(engine: &'e mut Engine) -> Self {
+        Self { engine, waiting_prefill: VecDeque::new(), active: Vec::new(), step_index: 0 }
+    }
+
+    /// Sequences the session is working on (admitted + decoding).
+    pub fn live(&self) -> usize {
+        self.waiting_prefill.len() + self.active.len()
+    }
+
+    /// True when no sequence is admitted or decoding.
+    pub fn is_idle(&self) -> bool {
+        self.live() == 0
+    }
+
+    /// Admitted sequences that have not been prefilled yet.
+    pub fn pending_prefills(&self) -> usize {
+        self.waiting_prefill.len()
+    }
+
+    /// Ids currently in the decode batch, in batch order.
+    pub fn active_ids(&self) -> Vec<SeqId> {
+        self.active.iter().map(|s| s.id).collect()
+    }
+
+    /// Admit a sequence into the session. It prefills on a subsequent
+    /// [`Self::step`] and then joins the decode batch. KV *accounting*
+    /// (block admission/growth) is the scheduler's job — the session only
+    /// drives execution.
+    pub fn admit(&mut self, seq: SequenceInput) -> Result<()> {
+        if seq.prompt.is_empty() {
+            anyhow::bail!("empty prompt");
+        }
+        if seq.max_new_tokens == 0 {
+            anyhow::bail!("max_new_tokens must be >= 1");
+        }
+        if self.waiting_prefill.iter().any(|s| s.id == seq.id)
+            || self.active.iter().any(|s| s.id == seq.id)
+        {
+            anyhow::bail!("sequence {} already live in this session", seq.id);
+        }
+        if let super::EngineMode::Numeric(store) = &self.engine.cfg.mode {
+            if seq.prompt.len() != store.meta.prefill_len {
+                anyhow::bail!(
+                    "numeric mode serves fixed prompts of {} tokens (got {})",
+                    store.meta.prefill_len,
+                    seq.prompt.len()
+                );
+            }
+            if seq.prompt.len() + seq.max_new_tokens > store.meta.max_seq {
+                anyhow::bail!(
+                    "prompt {} + decode {} exceeds max_seq {}",
+                    seq.prompt.len(),
+                    seq.max_new_tokens,
+                    store.meta.max_seq
+                );
+            }
+            if self.live() > 0 {
+                anyhow::bail!(
+                    "numeric backends hold single-sequence KV state: the session \
+                     serves one sequence at a time (batched decode needs structural mode)"
+                );
+            }
+        }
+        self.waiting_prefill.push_back(seq);
+        Ok(())
+    }
+
+    /// Drop a live sequence (the scheduler's bail-out path when the KV
+    /// pool is exhausted mid-decode). Returns true if it was live.
+    pub fn cancel(&mut self, id: SeqId) -> bool {
+        if let Some(i) = self.waiting_prefill.iter().position(|s| s.id == id) {
+            self.waiting_prefill.remove(i);
+            return true;
+        }
+        if let Some(i) = self.active.iter().position(|s| s.id == id) {
+            self.active.remove(i);
+            return true;
+        }
+        false
+    }
+
+    /// Run one engine iteration: the prefill of the oldest admitted
+    /// sequence if any is waiting, else one decode iteration over the
+    /// active batch, else an idle no-op.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(seq) = self.waiting_prefill.pop_front() {
+            return self.prefill_step(seq);
+        }
+        if !self.active.is_empty() {
+            return self.decode_step();
+        }
+        Ok(StepOutcome {
+            kind: StepKind::Idle,
+            step_index: self.step_index,
+            batch: 0,
+            events: Vec::new(),
+            finished: Vec::new(),
+            latency: Duration::ZERO,
+        })
+    }
+
+    fn prefill_step(&mut self, seq: SequenceInput) -> Result<StepOutcome> {
+        let step_index = self.step_index;
+        self.step_index += 1;
+        self.engine.sink.set_iteration(step_index, 1);
+        let start = Instant::now();
+        // Reset clears the backend's whole KV state, so it is only safe
+        // when no other sequence is mid-decode: with an empty active set it
+        // evicts the previous request (numeric single-sequence serving, and
+        // the exact command stream `generate()` always issued — Reset,
+        // Prefill, Decode…); with live sequences batching, a prefill joins
+        // the batch without touching anyone's cache.
+        if self.active.is_empty() {
+            self.engine.broadcast(WorkerCmd::Reset)?;
+        }
+        self.engine.broadcast(WorkerCmd::Prefill { tokens: seq.prompt.clone() })?;
+        let logits = self.engine.recv_logits()?;
+        let latency = start.elapsed();
+        let token = argmax(&logits) as i32;
+        let is_last = seq.max_new_tokens == 1;
+        let events = vec![TokenEvent { seq: seq.id, token, index: 0, is_last }];
+        let mut finished = Vec::new();
+        if is_last {
+            finished.push(seq.id);
+        } else {
+            self.active.push(ActiveSeq {
+                id: seq.id,
+                prompt_len: seq.prompt.len(),
+                max_new_tokens: seq.max_new_tokens,
+                last_token: token,
+                generated: 1,
+            });
+        }
+        Ok(StepOutcome { kind: StepKind::Prefill, step_index, batch: 1, events, finished, latency })
+    }
+
+    fn decode_step(&mut self) -> Result<StepOutcome> {
+        let batch = self.active.len();
+        if batch > 1 && !self.engine.supports_batched_decode() {
+            anyhow::bail!("engine backend does not support batched decode (batch={batch})");
+        }
+        let step_index = self.step_index;
+        self.step_index += 1;
+        self.engine.sink.set_iteration(step_index, batch);
+        let tokens: Vec<i32> = self.active.iter().map(|s| s.last_token).collect();
+        let positions: Vec<usize> =
+            self.active.iter().map(|s| s.prompt_len + s.generated - 1).collect();
+        let start = Instant::now();
+        self.engine.broadcast(WorkerCmd::Decode { tokens, positions })?;
+        let logits = self.engine.recv_logits()?;
+        let latency = start.elapsed();
+        let next = batched_argmax(&logits, self.engine.cfg.layout.tp, batch);
+        let mut events = Vec::with_capacity(batch);
+        let mut finished = Vec::new();
+        for (seq, &token_id) in self.active.iter_mut().zip(next.iter()) {
+            let token = token_id as i32;
+            seq.last_token = token;
+            let index = seq.generated;
+            seq.generated += 1;
+            let is_last = seq.generated == seq.max_new_tokens;
+            events.push(TokenEvent { seq: seq.id, token, index, is_last });
+            if is_last {
+                finished.push(seq.id);
+            }
+        }
+        self.active.retain(|s| s.generated < s.max_new_tokens);
+        Ok(StepOutcome { kind: StepKind::Decode, step_index, batch, events, finished, latency })
+    }
+}
+
+impl Drop for Session<'_> {
+    fn drop(&mut self) {
+        // Records after the session (warmup, raw library use) are untagged.
+        self.engine.sink.clear_iteration();
+    }
+}
+
+/// De-interleave the gathered decode logits — rank-major `tp` blocks of
+/// flattened `[B, v/tp]` — and take each sequence's argmax over the full
+/// vocabulary. Scan order (rank-major, then row-major) matches the
+/// single-sequence [`argmax`] tie-breaking exactly for `B = 1`.
+fn batched_argmax(flat: &[f32], tp: usize, batch: usize) -> Vec<usize> {
+    assert!(tp >= 1 && batch >= 1);
+    assert_eq!(flat.len() % (tp * batch), 0, "logits not divisible across ranks/rows");
+    let v_local = flat.len() / (tp * batch);
+    (0..batch)
+        .map(|row| {
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for r in 0..tp {
+                let base = (r * batch + row) * v_local;
+                for (j, &v) in flat[base..base + v_local].iter().enumerate() {
+                    if v > best_v {
+                        best_v = v;
+                        best = r * v_local + j;
+                    }
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ParallelLayout;
+    use crate::engine::EngineConfig;
+    use crate::model::ModelArch;
+
+    fn structural_engine(tp: usize, pp: usize) -> Engine {
+        Engine::new(EngineConfig::structural(ModelArch::tiny(), ParallelLayout::new(tp, pp)))
+            .unwrap()
+    }
+
+    fn seq(id: SeqId, prompt: usize, max_new: usize) -> SequenceInput {
+        SequenceInput { id, prompt: vec![0; prompt], max_new_tokens: max_new }
+    }
+
+    #[test]
+    fn admit_validates_inputs() {
+        let mut engine = structural_engine(1, 1);
+        let mut s = engine.session();
+        assert!(s.admit(seq(1, 0, 4)).is_err(), "empty prompt");
+        assert!(s.admit(seq(1, 4, 0)).is_err(), "zero decode");
+        s.admit(seq(1, 4, 2)).unwrap();
+        assert!(s.admit(seq(1, 4, 2)).is_err(), "duplicate id");
+        assert_eq!(s.live(), 1);
+        assert!(s.cancel(1));
+        assert!(!s.cancel(1), "already gone");
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn streams_events_and_drains_batch() {
+        let mut engine = structural_engine(2, 1);
+        let mut s = engine.session();
+        s.admit(seq(7, 8, 3)).unwrap();
+        s.admit(seq(9, 8, 2)).unwrap();
+
+        let p1 = s.step().unwrap();
+        assert_eq!(p1.kind, StepKind::Prefill);
+        assert_eq!((p1.step_index, p1.batch), (0, 1));
+        assert_eq!(
+            p1.events,
+            vec![TokenEvent { seq: 7, token: 0, index: 0, is_last: false }]
+        );
+        let p2 = s.step().unwrap();
+        assert_eq!(p2.kind, StepKind::Prefill);
+        assert_eq!(p2.events[0].seq, 9);
+
+        // Both prefilled: one decode iteration advances both sequences.
+        let d1 = s.step().unwrap();
+        assert_eq!(d1.kind, StepKind::Decode);
+        assert_eq!(d1.batch, 2);
+        assert_eq!(
+            d1.events,
+            vec![
+                TokenEvent { seq: 7, token: 0, index: 1, is_last: false },
+                TokenEvent { seq: 9, token: 0, index: 1, is_last: true },
+            ]
+        );
+        assert_eq!(d1.finished, vec![9]);
+
+        // Batch shrinks to the remaining sequence.
+        let d2 = s.step().unwrap();
+        assert_eq!(d2.batch, 1);
+        assert_eq!(d2.finished, vec![7]);
+        assert!(s.is_idle());
+        let idle = s.step().unwrap();
+        assert_eq!(idle.kind, StepKind::Idle);
+        assert!(idle.events.is_empty());
+    }
+
+    #[test]
+    fn decode_collectives_are_tagged_with_batch_size() {
+        use crate::comm::{CollectiveKind, Stage};
+        let mut engine = structural_engine(2, 1);
+        {
+            let mut s = engine.session();
+            for id in 0..3u64 {
+                s.admit(seq(id, 8, 4)).unwrap();
+            }
+            while !s.is_idle() {
+                s.step().unwrap();
+            }
+        }
+        let summary = engine.trace().summary();
+        // All decode iterations ran the full batch of 3.
+        assert_eq!(summary.batch_sizes(), vec![1, 3]);
+        let b3 = summary.batch_view(3, CollectiveKind::AllReduce, Stage::Decode);
+        assert!(b3.count > 0);
+        // Payload per record is 3x the single-sequence decode AllReduce
+        // ([3, h] vs [1, h]).
+        let hidden = ModelArch::tiny().hidden;
+        assert_eq!(b3.total_message_bytes / b3.count, 3 * hidden * 2);
+        // Prefills are tagged batch=1 and stay [S, h].
+        let b1 = summary.batch_view(1, CollectiveKind::AllReduce, Stage::Prefill);
+        assert!(b1.count > 0);
+    }
+
+    #[test]
+    fn batched_argmax_deinterleaves_rank_major_blocks() {
+        // tp=2, batch=2, v_local=3: rank-major blocks of [B, v/t].
+        // Sequence 0 rows: rank0 [0,1,9], rank1 [2,0,0] -> argmax id 2 (9.0).
+        // Sequence 1 rows: rank0 [5,0,0], rank1 [0,0,7] -> argmax id 5 (7.0).
+        let flat = vec![
+            0.0, 1.0, 9.0, // r0, row0
+            5.0, 0.0, 0.0, // r0, row1
+            2.0, 0.0, 0.0, // r1, row0
+            0.0, 0.0, 7.0, // r1, row1
+        ];
+        assert_eq!(batched_argmax(&flat, 2, 2), vec![2, 5]);
+        // B=1 matches plain argmax over the concatenated vector.
+        let single = vec![0.5, 3.0, 1.0, 3.0];
+        assert_eq!(batched_argmax(&single, 2, 1), vec![argmax(&single)]);
+        // All-equal logits (structural zeros) pick token 0, like argmax.
+        assert_eq!(batched_argmax(&vec![0.0; 8], 2, 2), vec![0, 0]);
+    }
+}

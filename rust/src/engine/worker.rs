@@ -12,6 +12,12 @@
 //!   last stage  : logits slice → Gather [v/t] → coordinator samples
 //! ```
 //!
+//! `S` is the iteration window: the prompt length for prefill, the *active
+//! batch size* for decode (continuous batching — each decode row advances
+//! an independent sequence, so every collective's payload scales linearly
+//! with the batch; a batch of one is byte-identical to the paper's
+//! single-request methodology).
+//!
 //! The residual of the *last* layer of a stage is deliberately left
 //! un-added and shipped as the second boundary tensor ("deferred
 //! residual"), matching vLLM's IntermediateTensors {hidden_states,
@@ -31,8 +37,10 @@ use super::backend::ComputeBackend;
 pub enum WorkerCmd {
     /// Run prefill over the prompt; workers then hold KV state.
     Prefill { tokens: Vec<i32> },
-    /// Run one decode step for `token` at cache position `pos`.
-    Decode { token: i32, pos: usize },
+    /// Run one decode iteration over the active batch: row `i` advances an
+    /// independent sequence whose next input token is `tokens[i]`, cached
+    /// at `positions[i]`. A single-sequence decode is the length-1 batch.
+    Decode { tokens: Vec<i32>, positions: Vec<usize> },
     /// Clear KV state for the next request.
     Reset,
     /// Exit the worker loop.
@@ -82,11 +90,10 @@ impl WorkerCtx {
             };
             let result = match cmd {
                 WorkerCmd::Prefill { tokens } => {
-                    let stage = Stage::Prefill;
-                    self.step(&mut *backend, &tokens, 0, stage)
+                    self.step(&mut *backend, &tokens, &[0], Stage::Prefill)
                 }
-                WorkerCmd::Decode { token, pos } => {
-                    self.step(&mut *backend, &[token], pos, Stage::Decode)
+                WorkerCmd::Decode { tokens, positions } => {
+                    self.step(&mut *backend, &tokens, &positions, Stage::Decode)
                 }
                 WorkerCmd::Reset => backend.reset().map(|_| ()),
                 WorkerCmd::Shutdown => return,
@@ -104,12 +111,13 @@ impl WorkerCtx {
         }
     }
 
-    /// One forward step (prefill: window = prompt len; decode: window = 1).
+    /// One forward step (prefill: window = prompt len, one sequence;
+    /// decode: window = active batch size, one row per sequence).
     fn step(
         &mut self,
         backend: &mut dyn ComputeBackend,
         tokens: &[i32],
-        pos: usize,
+        positions: &[usize],
         stage: Stage,
     ) -> Result<()> {
         let window = tokens.len();
@@ -136,7 +144,10 @@ impl WorkerCtx {
             if let Some(p) = pending.take() {
                 x.add_assign(&p); // residual deferred across the boundary/layer
             }
-            let mut pa = backend.attn(layer, &x, pos)?;
+            let mut pa = match stage {
+                Stage::Prefill => backend.attn(layer, &x, positions[0])?,
+                Stage::Decode => backend.attn_batch(layer, &x, positions)?,
+            };
             self.tp_group.all_reduce(&mut pa.data, &full_shape, stage);
             x.add_assign(&pa);
             let mut pm = backend.mlp(layer, &x)?;
@@ -149,7 +160,10 @@ impl WorkerCtx {
             if let Some(p) = pending.take() {
                 x.add_assign(&p);
             }
-            let logits_slice = backend.logits(&x)?;
+            let logits_slice = match stage {
+                Stage::Prefill => backend.logits(&x)?,
+                Stage::Decode => backend.logits_batch(&x)?,
+            };
             let v_local = logits_slice.elems();
             let gathered =
                 self.tp_group

@@ -52,9 +52,15 @@
 //! - [`runtime`] — PJRT artifact loading and execution (`xla` crate); the
 //!   AOT bridge from the JAX/Pallas build path.
 //! - [`engine`] — the distributed inference engine: TP/PP/hybrid worker
-//!   groups, paged KV cache, prefill/decode loop.
-//! - [`server`] — request router, continuous-batching scheduler, SLO
-//!   metrics.
+//!   groups, paged KV cache, and the iteration-level session API
+//!   ([`engine::Session`]): `step()` runs one prefill-or-decode iteration
+//!   over the active batch, streams per-sequence [`engine::TokenEvent`]s,
+//!   and tags every traced collective with its step and batch size
+//!   (`Engine::generate` is a single-sequence wrapper over it).
+//! - [`server`] — request router, iteration-level continuous-batching
+//!   scheduler (prompt-footprint admission, on-demand KV growth,
+//!   `max_batch` concurrency, Poisson arrivals), SLO metrics with
+//!   p50/p95/p99 TTFT/TPOT/E2E.
 //! - [`report`] — renders paper tables/figures side-by-side with our
 //!   measured + analytical values.
 //!

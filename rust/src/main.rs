@@ -35,8 +35,11 @@ COMMANDS:
             --model ...  --tp N  --pp N  --sp N  --sd N
   slo       Simulate TTFT/TPOT/E2E on the paper's testbed model
             --model ...  --tp N  --pp N  --sp N  --sd N  --gpus-per-node N
-  serve     Serve the tiny real model via PJRT (requires `make artifacts`)
-            --tp N  --pp N  --requests N  --decode-len N  --artifacts DIR
+  serve     Serve requests through the continuous-batching scheduler
+            numeric (default): --tp N  --pp N  --requests N  --decode-len N  --artifacts DIR
+            structural (no artifacts needed): --model 3b|8b|13b|tiny  --sp N
+            workload: --concurrency N (sequences per decode iteration)
+                      --arrival-rate R (Poisson req/s; omit for all-at-once)
   tables    Print all paper-table reproductions (Tables III-VI)
 ";
 
@@ -45,7 +48,17 @@ const ANALYZE_FLAGS: &[&str] = &["model", "tp", "pp", "sp", "sd"];
 /// `trace` takes the same set as `analyze`.
 const TRACE_FLAGS: &[&str] = ANALYZE_FLAGS;
 const SLO_FLAGS: &[&str] = &["model", "tp", "pp", "sp", "sd", "gpus_per_node"];
-const SERVE_FLAGS: &[&str] = &["tp", "pp", "requests", "decode_len", "artifacts"];
+const SERVE_FLAGS: &[&str] = &[
+    "tp",
+    "pp",
+    "requests",
+    "decode_len",
+    "artifacts",
+    "model",
+    "sp",
+    "concurrency",
+    "arrival_rate",
+];
 const TABLES_FLAGS: &[&str] = &[];
 
 /// Minimal `--key value` flag parser with a per-subcommand allow-list.
@@ -86,7 +99,18 @@ impl Flags {
         self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    fn opt(&self, key: &str) -> Option<&String> {
+        self.0.get(key)
+    }
+
     fn num(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.0.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn float(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.0.get(key) {
             Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
             None => Ok(default),
@@ -198,20 +222,64 @@ fn cmd_slo(f: &Flags) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
-    let store = ArtifactStore::open(f.str("artifacts", "artifacts"))?;
-    let sp = store.meta.prefill_len;
-    let vocab = store.meta.vocab as i32;
     let requests = f.num("requests", 4)?;
     let decode_len = f.num("decode_len", 16)?;
-    let plan = Deployment::builder()
-        .artifacts(store)
-        .tp(f.num("tp", 2)?)
-        .pp(f.num("pp", 1)?)
-        // Validate the workload we are about to serve (prompt length is
-        // fixed by the artifacts; --decode-len must fit max_seq).
-        .workload(sp, decode_len)
-        .build()?;
-    let mut server = plan.server(SchedulerConfig::default())?;
+    let concurrency = f.num("concurrency", SchedulerConfig::default().max_batch)?;
+    let arrival_rate = f.float("arrival_rate", 0.0)?;
+
+    // --model selects structural serving at paper scale (continuous
+    // batching with no artifacts); the default path serves the tiny real
+    // model via PJRT over built artifacts. Flags foreign to the chosen
+    // mode are rejected — a flag must never be silently ignored while
+    // numbers come out (same rule as the per-subcommand allow-lists).
+    let structural = f.opt("model").is_some();
+    if structural && f.opt("artifacts").is_some() {
+        anyhow::bail!(
+            "--artifacts conflicts with --model: structural serving (--model) \
+             uses no artifacts; drop one of the two flags"
+        );
+    }
+    if !structural && f.opt("sp").is_some() {
+        anyhow::bail!(
+            "--sp applies to structural serving (--model ...); numeric prompts \
+             are fixed by the artifacts' prefill length"
+        );
+    }
+    if !structural && f.opt("concurrency").is_some() && concurrency > 1 {
+        anyhow::bail!(
+            "--concurrency > 1 needs structural serving (--model ...): numeric \
+             PJRT backends hold single-sequence KV state and serve one request \
+             at a time"
+        );
+    }
+    let (plan, sp) = match f.opt("model") {
+        Some(model) => {
+            let sp = f.num("sp", 32)?;
+            let plan = Deployment::builder()
+                .model(model)
+                .tp(f.num("tp", 2)?)
+                .pp(f.num("pp", 1)?)
+                .workload(sp, decode_len)
+                .build()?;
+            (plan, sp)
+        }
+        None => {
+            let store = ArtifactStore::open(f.str("artifacts", "artifacts"))?;
+            let sp = store.meta.prefill_len;
+            let plan = Deployment::builder()
+                .artifacts(store)
+                .tp(f.num("tp", 2)?)
+                .pp(f.num("pp", 1)?)
+                // Validate the workload we are about to serve (prompt length
+                // is fixed by the artifacts; --decode-len must fit max_seq).
+                .workload(sp, decode_len)
+                .build()?;
+            (plan, sp)
+        }
+    };
+    let vocab = plan.arch().vocab as i32;
+    let cfg = SchedulerConfig { max_batch: concurrency.max(1), ..SchedulerConfig::default() };
+    let mut server = plan.server(cfg)?;
     let reqs: Vec<Request> = (0..requests as u64)
         .map(|id| Request {
             id,
@@ -219,18 +287,52 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
             decode_len,
         })
         .collect();
-    let summary = server.serve_batch(reqs)?;
-    println!("served {} requests, {} tokens", summary.requests, summary.total_tokens);
+    let summary = if arrival_rate > 0.0 {
+        server.serve_poisson(reqs, arrival_rate, 0xC0FFEE)?
+    } else {
+        server.serve_batch(reqs)?
+    };
+    println!(
+        "served {} requests ({} completed, {} failed), {} tokens",
+        summary.requests, summary.completed, summary.failed, summary.total_tokens
+    );
     println!(
         "throughput {:.1} tok/s, {:.2} req/s",
         summary.tokens_per_s, summary.requests_per_s
     );
     println!(
-        "TTFT p50 {:.1} ms, TPOT p50 {:.2} ms, E2E mean {:.2} s",
-        summary.ttft_p50_s * 1e3,
-        summary.tpot_p50_s * 1e3,
-        summary.e2e_mean_s
+        "TTFT p50/p95/p99 {:.1}/{:.1}/{:.1} ms",
+        summary.ttft.p50_s * 1e3,
+        summary.ttft.p95_s * 1e3,
+        summary.ttft.p99_s * 1e3
     );
+    println!(
+        "TPOT p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+        summary.tpot.p50_s * 1e3,
+        summary.tpot.p95_s * 1e3,
+        summary.tpot.p99_s * 1e3
+    );
+    println!(
+        "E2E  p50/p99 {:.3}/{:.3} s (mean {:.3} s, includes queueing)",
+        summary.e2e.p50_s, summary.e2e.p99_s, summary.e2e_mean_s
+    );
+    // Batched-decode comm accounting: AllReduce volume per active batch
+    // size, straight off the step/batch-tagged trace.
+    let trace = server.engine().trace().summary();
+    let batches = trace.batch_sizes();
+    if !batches.is_empty() {
+        println!("\ndecode AllReduce by active batch size:");
+        for b in batches {
+            let agg = trace.batch_view(b, commsim::comm::CollectiveKind::AllReduce, Stage::Decode);
+            if agg.count > 0 {
+                println!(
+                    "  batch={b}: count={:<6} total={}",
+                    agg.count,
+                    report::fmt_bytes(agg.total_message_bytes as f64)
+                );
+            }
+        }
+    }
     Ok(())
 }
 

@@ -461,7 +461,16 @@ impl DeploymentPlan {
         Engine::new(cfg)
     }
 
-    /// Build a full serving stack (router + scheduler) over [`Self::engine`].
+    /// Build a full serving stack — iteration-level continuous-batching
+    /// scheduler + engine session — over [`Self::engine`].
+    ///
+    /// `cfg.max_batch` is the serving concurrency knob (how many sequences
+    /// share each decode iteration); it is clamped to 1 on numeric plans,
+    /// whose PJRT backends hold single-sequence KV state. Arrival-process
+    /// knobs live on the server itself: `serve_batch` is open-loop
+    /// all-at-once, `serve_poisson` replays Poisson arrivals at a
+    /// configurable rate (the `serve` CLI exposes both as
+    /// `--concurrency` / `--arrival-rate`).
     pub fn server(&self, cfg: SchedulerConfig) -> crate::Result<Server> {
         Ok(Server::new(self.engine()?, cfg))
     }

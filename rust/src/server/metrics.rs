@@ -3,14 +3,13 @@
 
 use std::time::Duration;
 
-
 /// SLO record of one served request.
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
     pub request_id: u64,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
-    /// Queue wait before the engine started prefill.
+    /// Queue wait before admission into the engine's batch.
     pub queue_s: f64,
     /// Time to first token, excluding queueing.
     pub ttft_s: f64,
@@ -18,52 +17,98 @@ pub struct RequestMetrics {
     pub tpot_s: f64,
     /// End-to-end latency including queueing.
     pub e2e_s: f64,
+    /// Set when the request did not complete its decode span — e.g. the
+    /// KV pool was exhausted mid-decode and the sequence was bailed out
+    /// (`generated_tokens` counts what it produced before that).
+    pub error: Option<String>,
+}
+
+/// p50 / p95 / p99 of one latency metric, in seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyPercentiles {
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl LatencyPercentiles {
+    /// One NaN-filter + sort, three nearest-rank lookups.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        let mut v: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+        if v.is_empty() {
+            return Self::default();
+        }
+        v.sort_by(|a, b| a.total_cmp(b));
+        let rank = |p: f64| v[nearest_rank(p, v.len())];
+        Self { p50_s: rank(50.0), p95_s: rank(95.0), p99_s: rank(99.0) }
+    }
+}
+
+/// Nearest-rank index for percentile `p` over `len` sorted samples.
+fn nearest_rank(p: f64, len: usize) -> usize {
+    let rank = ((p / 100.0) * (len as f64 - 1.0)).round() as usize;
+    rank.min(len - 1)
 }
 
 /// Aggregate over a batch of served requests.
 #[derive(Debug, Clone, Default)]
 pub struct ServeSummary {
     pub requests: usize,
+    /// Requests that completed their full decode span.
+    pub completed: usize,
+    /// Requests bailed out with an error in their metrics.
+    pub failed: usize,
     pub total_tokens: usize,
     pub wall_s: f64,
     pub tokens_per_s: f64,
     pub requests_per_s: f64,
-    pub ttft_p50_s: f64,
-    pub ttft_p99_s: f64,
-    pub tpot_p50_s: f64,
-    pub tpot_p99_s: f64,
+    pub ttft: LatencyPercentiles,
+    pub tpot: LatencyPercentiles,
+    pub e2e: LatencyPercentiles,
     pub e2e_mean_s: f64,
 }
 
-/// Percentile over unsorted samples (nearest-rank).
+/// Percentile over unsorted samples (nearest-rank). NaN-safe: NaN samples
+/// are ignored, and an empty (or all-NaN) input yields `0.0`.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p));
-    if samples.is_empty() {
+    let mut v: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[nearest_rank(p, v.len())]
 }
 
 impl ServeSummary {
     pub fn from_metrics(metrics: &[RequestMetrics], wall: Duration) -> Self {
         let wall_s = wall.as_secs_f64();
         let total_tokens: usize = metrics.iter().map(|m| m.generated_tokens).sum();
-        let ttfts: Vec<f64> = metrics.iter().map(|m| m.ttft_s).collect();
-        let tpots: Vec<f64> = metrics.iter().map(|m| m.tpot_s).collect();
-        let e2es: Vec<f64> = metrics.iter().map(|m| m.e2e_s).collect();
+        let failed = metrics.iter().filter(|m| m.error.is_some()).count();
+        // Latency bands come from requests that actually produced the
+        // measured quantity — a request rejected before any token has
+        // placeholder 0.0 samples that would drag p50 toward a fictitious
+        // perfect SLO. E2E covers every token-producing request (a
+        // mid-decode bail consumed real wall time); requests_per_s counts
+        // completed requests only, never rejected ones.
+        let ttfts: Vec<f64> =
+            metrics.iter().filter(|m| m.generated_tokens >= 1).map(|m| m.ttft_s).collect();
+        let tpots: Vec<f64> =
+            metrics.iter().filter(|m| m.generated_tokens >= 2).map(|m| m.tpot_s).collect();
+        let e2es: Vec<f64> =
+            metrics.iter().filter(|m| m.generated_tokens >= 1).map(|m| m.e2e_s).collect();
+        let completed = metrics.len() - failed;
         Self {
             requests: metrics.len(),
+            completed,
+            failed,
             total_tokens,
             wall_s,
             tokens_per_s: if wall_s > 0.0 { total_tokens as f64 / wall_s } else { 0.0 },
-            requests_per_s: if wall_s > 0.0 { metrics.len() as f64 / wall_s } else { 0.0 },
-            ttft_p50_s: percentile(&ttfts, 50.0),
-            ttft_p99_s: percentile(&ttfts, 99.0),
-            tpot_p50_s: percentile(&tpots, 50.0),
-            tpot_p99_s: percentile(&tpots, 99.0),
+            requests_per_s: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+            ttft: LatencyPercentiles::from_samples(&ttfts),
+            tpot: LatencyPercentiles::from_samples(&tpots),
+            e2e: LatencyPercentiles::from_samples(&e2es),
             e2e_mean_s: if e2es.is_empty() {
                 0.0
             } else {
@@ -77,43 +122,77 @@ impl ServeSummary {
 mod tests {
     use super::*;
 
+    fn m(id: u64, ttft_s: f64, tpot_s: f64, e2e_s: f64, error: Option<String>) -> RequestMetrics {
+        RequestMetrics {
+            request_id: id,
+            prompt_tokens: 8,
+            generated_tokens: 10,
+            queue_s: 0.0,
+            ttft_s,
+            tpot_s,
+            e2e_s,
+            error,
+        }
+    }
+
     #[test]
     fn percentile_nearest_rank() {
         let v = vec![4.0, 1.0, 3.0, 2.0];
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 100.0), 4.0);
         assert_eq!(percentile(&v, 50.0), 3.0); // rank round(0.5*3)=2 -> 3.0
-        assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
     }
 
     #[test]
-    fn summary_aggregates() {
+    fn percentile_empty_and_nan_are_safe() {
+        assert_eq!(percentile(&[], 50.0), 0.0, "empty input is a defined 0.0");
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        // NaN samples are dropped rather than poisoning the sort...
+        assert_eq!(percentile(&[f64::NAN, 2.0, 1.0], 100.0), 2.0);
+        // ...and an all-NaN input degrades to the empty case.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+    }
+
+    #[test]
+    fn summary_aggregates_with_percentile_bands() {
+        let metrics: Vec<RequestMetrics> = (0..10)
+            .map(|i| m(i, 0.1 * (i + 1) as f64, 0.01, 0.2 * (i + 1) as f64, None))
+            .collect();
+        let s = ServeSummary::from_metrics(&metrics, Duration::from_secs(1));
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.failed, 0);
+        assert_eq!(s.total_tokens, 100);
+        assert!((s.tokens_per_s - 100.0).abs() < 1e-9);
+        assert!((s.e2e_mean_s - 1.1).abs() < 1e-9);
+        // Bands are ordered and hit the nearest-rank values.
+        assert!(s.ttft.p50_s <= s.ttft.p95_s && s.ttft.p95_s <= s.ttft.p99_s);
+        assert!((s.ttft.p50_s - 0.6).abs() < 1e-9); // rank round(0.5*9)=5 -> 6th
+        assert!((s.ttft.p99_s - 1.0).abs() < 1e-9);
+        assert!(s.e2e.p50_s <= s.e2e.p99_s);
+    }
+
+    #[test]
+    fn summary_counts_failures_without_skewing_latency_bands() {
+        let mut failed = m(1, 0.0, 0.0, 0.05, Some("queue full".into()));
+        failed.generated_tokens = 0; // rejected before any token
         let metrics = vec![
-            RequestMetrics {
-                request_id: 0,
-                prompt_tokens: 8,
-                generated_tokens: 10,
-                queue_s: 0.0,
-                ttft_s: 0.1,
-                tpot_s: 0.01,
-                e2e_s: 0.2,
-            },
-            RequestMetrics {
-                request_id: 1,
-                prompt_tokens: 8,
-                generated_tokens: 10,
-                queue_s: 0.05,
-                ttft_s: 0.3,
-                tpot_s: 0.02,
-                e2e_s: 0.5,
-            },
+            m(0, 0.1, 0.01, 0.2, None),
+            m(2, 0.3, 0.02, 0.4, None),
+            failed,
         ];
         let s = ServeSummary::from_metrics(&metrics, Duration::from_secs(1));
-        assert_eq!(s.requests, 2);
-        assert_eq!(s.total_tokens, 20);
-        assert!((s.tokens_per_s - 20.0).abs() < 1e-9);
-        assert!((s.e2e_mean_s - 0.35).abs() < 1e-9);
-        assert!(s.ttft_p99_s >= s.ttft_p50_s);
+        assert_eq!((s.requests, s.completed, s.failed), (3, 2, 1));
+        // The zero-token failure's placeholder 0.0 samples stay out of the
+        // TTFT/TPOT bands; E2E still covers every request.
+        // Two samples [0.1, 0.3]: nearest rank round(0.5*1)=1 -> 0.3; with
+        // the failure's 0.0 included it would be 0.1.
+        assert!((s.ttft.p50_s - 0.3).abs() < 1e-9, "p50 over token-producing requests");
+        assert!(s.tpot.p50_s > 0.0);
+        assert!((s.e2e.p50_s - 0.4).abs() < 1e-9, "rejected request's 0.05s stays out");
+        // Throughput counts completed requests, not rejected ones.
+        assert!((s.requests_per_s - 2.0).abs() < 1e-9);
     }
 }

@@ -1,22 +1,45 @@
-//! Serving front-end: request router + scheduler + engine + SLO metrics.
+//! Serving front-end: request router + continuous-batching scheduler +
+//! engine session + SLO metrics.
 //!
 //! [`Server`] is the synchronous core (the engine's collectives block);
-//! async intake wraps it via a channel in `main.rs`/examples. Requests flow
-//! FCFS through KV admission, execute on the engine one at a time (the
-//! paper's single-request methodology), and produce [`RequestMetrics`].
+//! async intake wraps it via a channel in `main.rs`/examples. The serving
+//! loop is iteration-level: every pass admits whatever the scheduler's
+//! batch slots and prompt-footprint KV check allow, grows each active
+//! sequence's KV by the token the iteration is about to write (bailing a
+//! sequence out cleanly when the pool is exhausted), then runs exactly one
+//! [`crate::engine::Session::step`] — so requests join and leave the
+//! decode batch between iterations, vLLM-style, and per-request
+//! [`RequestMetrics`] come from the streamed token events.
+//!
+//! Workload knobs: [`SchedulerConfig::max_batch`] is the concurrency
+//! limit (clamped to 1 on numeric engines, whose PJRT backends hold
+//! single-sequence KV state), and [`Server::serve_poisson`] replays an
+//! open-loop Poisson arrival process at a configurable rate.
 
 pub mod metrics;
 pub mod scheduler;
 
-pub use metrics::{percentile, RequestMetrics, ServeSummary};
+pub use metrics::{percentile, LatencyPercentiles, RequestMetrics, ServeSummary};
 pub use scheduler::{Request, Scheduler, SchedulerConfig};
 
-use std::time::Instant;
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
 
-use crate::engine::Engine;
+use crate::engine::kv::SeqId;
+use crate::engine::{Engine, SequenceInput};
 use crate::Result;
 
-/// The serving loop: scheduler in front of an engine.
+/// Per-request bookkeeping while a sequence is in the engine.
+struct InFlight {
+    prompt_tokens: usize,
+    enqueued_at: Instant,
+    admitted_at: Instant,
+    first_token_at: Option<Instant>,
+    last_token_at: Instant,
+    generated: usize,
+}
+
+/// The serving loop: continuous-batching scheduler in front of an engine.
 pub struct Server {
     engine: Engine,
     scheduler: Scheduler,
@@ -24,12 +47,22 @@ pub struct Server {
 }
 
 impl Server {
-    pub fn new(engine: Engine, cfg: SchedulerConfig) -> Self {
+    /// Build the serving stack. `cfg.max_batch` is clamped to 1 when the
+    /// engine cannot decode batches (numeric mode's fixed-shape PJRT
+    /// executables hold single-sequence KV state).
+    pub fn new(engine: Engine, mut cfg: SchedulerConfig) -> Self {
+        if !engine.supports_batched_decode() {
+            cfg.max_batch = 1;
+        }
         Self { engine, scheduler: Scheduler::new(cfg), completed: Vec::new() }
     }
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
     }
 
     /// Run the engine's warmup request (excluded from traces) so the first
@@ -43,48 +76,208 @@ impl Server {
         self.scheduler.submit(request)
     }
 
-    /// Drain the queue, serving every admissible request; returns metrics
-    /// in completion order.
+    /// Drain the queue through the iteration loop; returns the metrics of
+    /// everything served by this call, in completion order.
     pub fn run_to_completion(&mut self) -> Result<&[RequestMetrics]> {
         let first = self.completed.len();
-        loop {
-            let Some(admitted) = self.scheduler.admit_next()? else {
-                if self.scheduler.queue_len() > 0 {
-                    anyhow::bail!("head-of-line request cannot fit the KV pool");
-                }
-                break;
-            };
-            let queue_s = admitted.enqueued_at.elapsed().as_secs_f64();
-            let req = admitted.request;
-            let start = Instant::now();
-            let result = self.engine.generate(&req.prompt, req.decode_len)?;
-            let e2e_s = start.elapsed().as_secs_f64() + queue_s;
-            self.scheduler.complete(req.id)?;
-            self.completed.push(RequestMetrics {
-                request_id: req.id,
-                prompt_tokens: req.prompt.len(),
-                generated_tokens: result.tokens.len(),
-                queue_s,
-                ttft_s: result.ttft.as_secs_f64(),
-                tpot_s: result.tpot.as_secs_f64(),
-                e2e_s,
-            });
-        }
+        self.drive(VecDeque::new())?;
         Ok(&self.completed[first..])
     }
 
-    /// Serve a batch and summarize (the end-to-end example's entry point).
+    /// Serve a batch of requests arriving all at once and summarize.
     pub fn serve_batch(&mut self, requests: Vec<Request>) -> Result<ServeSummary> {
         let wall_start = Instant::now();
+        let first = self.completed.len();
         for r in requests {
             self.submit(r)?;
         }
-        let served = self.run_to_completion()?.to_vec();
-        Ok(ServeSummary::from_metrics(&served, wall_start.elapsed()))
+        self.drive(VecDeque::new())?;
+        Ok(ServeSummary::from_metrics(&self.completed[first..], wall_start.elapsed()))
+    }
+
+    /// Serve with open-loop Poisson arrivals at `rate_per_s`: request `i`
+    /// arrives after the i-th exponential inter-arrival gap (deterministic
+    /// for a given `seed`). Queueing shows up in `queue_s`/`e2e_s`.
+    pub fn serve_poisson(
+        &mut self,
+        requests: Vec<Request>,
+        rate_per_s: f64,
+        seed: u64,
+    ) -> Result<ServeSummary> {
+        anyhow::ensure!(rate_per_s > 0.0, "arrival rate must be positive (req/s)");
+        let wall_start = Instant::now();
+        let first = self.completed.len();
+        let mut state = seed | 1; // xorshift64* must not start at 0
+        let mut at = Duration::ZERO;
+        let mut arrivals = VecDeque::with_capacity(requests.len());
+        for r in requests {
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            let bits = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            let u = (bits >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+            at += Duration::from_secs_f64(-(1.0 - u).ln() / rate_per_s);
+            arrivals.push_back((at, r));
+        }
+        self.drive(arrivals)?;
+        Ok(ServeSummary::from_metrics(&self.completed[first..], wall_start.elapsed()))
     }
 
     pub fn completed(&self) -> &[RequestMetrics] {
         &self.completed
+    }
+
+    /// The iteration loop. `arrivals` are (offset-from-now, request) pairs
+    /// submitted once their time comes; an empty deque serves whatever is
+    /// already queued.
+    fn drive(&mut self, mut arrivals: VecDeque<(Duration, Request)>) -> Result<()> {
+        let t0 = Instant::now();
+        let mut in_flight: HashMap<SeqId, InFlight> = HashMap::new();
+        let mut session = self.engine.session();
+        loop {
+            // 1. Feed arrivals whose time has come. A rejected submission
+            //    (queue full under open-loop load, oversized request) fails
+            //    that request, not the serving loop — everything already
+            //    in flight keeps its KV and completes normally.
+            while arrivals.front().is_some_and(|(at, _)| t0.elapsed() >= *at) {
+                let (_, req) = arrivals.pop_front().expect("non-empty");
+                let (id, prompt_tokens) = (req.id, req.prompt.len());
+                if let Err(e) = self.scheduler.submit(req) {
+                    self.completed.push(RequestMetrics {
+                        request_id: id,
+                        prompt_tokens,
+                        generated_tokens: 0,
+                        queue_s: 0.0,
+                        ttft_s: 0.0,
+                        tpot_s: 0.0,
+                        e2e_s: 0.0,
+                        error: Some(e.to_string()),
+                    });
+                }
+            }
+
+            // 2. Admit while batch slots and prompt KV allow.
+            while let Some(admitted) = self.scheduler.admit_next()? {
+                let now = Instant::now();
+                let req = admitted.request;
+                let id = req.id;
+                let prompt_tokens = req.prompt.len();
+                let input =
+                    SequenceInput { id, prompt: req.prompt, max_new_tokens: req.decode_len };
+                if let Err(e) = session.admit(input) {
+                    // The scheduler admitted something the session rejects
+                    // (e.g. a wrong-length prompt for numeric artifacts):
+                    // fail the request, not the serving loop.
+                    self.scheduler.finish(id)?;
+                    let queue_s = (now - admitted.enqueued_at).as_secs_f64();
+                    self.completed.push(RequestMetrics {
+                        request_id: id,
+                        prompt_tokens,
+                        generated_tokens: 0,
+                        queue_s,
+                        ttft_s: 0.0,
+                        tpot_s: 0.0,
+                        e2e_s: queue_s,
+                        error: Some(e.to_string()),
+                    });
+                    continue;
+                }
+                in_flight.insert(
+                    id,
+                    InFlight {
+                        prompt_tokens,
+                        enqueued_at: admitted.enqueued_at,
+                        admitted_at: now,
+                        first_token_at: None,
+                        last_token_at: now,
+                        generated: 0,
+                    },
+                );
+            }
+
+            // 3. Nothing running: either done, blocked, or between arrivals.
+            if session.is_idle() {
+                if self.scheduler.queue_len() > 0 {
+                    // Safety net: with an idle session every block is free,
+                    // and submit() already rejected never-fitting requests.
+                    anyhow::bail!("head-of-line request cannot fit the KV pool");
+                }
+                match arrivals.front() {
+                    Some((at, _)) => {
+                        let now = t0.elapsed();
+                        if *at > now {
+                            std::thread::sleep(*at - now);
+                        }
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+
+            // 4. Before a decode iteration, reserve KV for the token each
+            //    active sequence is about to write; bail out the ones the
+            //    pool cannot hold (blocks released, error in the metrics).
+            if session.pending_prefills() == 0 {
+                for id in session.active_ids() {
+                    if self.scheduler.grow(id).is_ok() {
+                        continue;
+                    }
+                    session.cancel(id);
+                    let info = in_flight.remove(&id).expect("active seq tracked");
+                    self.scheduler.finish(id)?;
+                    self.completed.push(Self::request_metrics(
+                        id,
+                        &info,
+                        Some("KV pool exhausted mid-decode; sequence bailed out".to_string()),
+                    ));
+                }
+                if session.is_idle() {
+                    continue; // every active sequence bailed; re-admit
+                }
+            }
+
+            // 5. One engine iteration (prefill or batched decode).
+            let outcome = session.step()?;
+            let now = Instant::now();
+            for e in &outcome.events {
+                if let Some(info) = in_flight.get_mut(&e.seq) {
+                    info.generated += 1;
+                    if info.first_token_at.is_none() {
+                        info.first_token_at = Some(now);
+                    }
+                    info.last_token_at = now;
+                }
+            }
+            for id in &outcome.finished {
+                let info = in_flight.remove(id).expect("finished seq tracked");
+                self.scheduler.finish(*id)?;
+                self.completed.push(Self::request_metrics(*id, &info, None));
+            }
+        }
+        Ok(())
+    }
+
+    fn request_metrics(id: SeqId, info: &InFlight, error: Option<String>) -> RequestMetrics {
+        let first = info.first_token_at.unwrap_or(info.admitted_at);
+        let tpot_s = if info.generated > 1 {
+            (info.last_token_at - first).as_secs_f64() / (info.generated - 1) as f64
+        } else {
+            0.0
+        };
+        RequestMetrics {
+            request_id: id,
+            prompt_tokens: info.prompt_tokens,
+            generated_tokens: info.generated,
+            queue_s: (info.admitted_at - info.enqueued_at).as_secs_f64(),
+            ttft_s: if info.first_token_at.is_some() {
+                (first - info.admitted_at).as_secs_f64()
+            } else {
+                0.0
+            },
+            tpot_s,
+            e2e_s: (info.last_token_at - info.enqueued_at).as_secs_f64(),
+            error,
+        }
     }
 }
 
@@ -95,7 +288,7 @@ mod tests {
     use crate::engine::{EngineConfig, EngineMode};
     use crate::model::ModelArch;
 
-    fn tiny_server(tp: usize, pp: usize) -> Server {
+    fn tiny_server(tp: usize, pp: usize, max_batch: usize) -> Server {
         let cfg = EngineConfig {
             arch: ModelArch::tiny(),
             layout: ParallelLayout::new(tp, pp),
@@ -104,34 +297,100 @@ mod tests {
         };
         Server::new(
             Engine::new(cfg).unwrap(),
-            SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 64 },
+            SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 64, max_batch },
         )
     }
 
-    #[test]
-    fn serves_batch_fcfs_and_releases_kv() {
-        let mut srv = tiny_server(2, 2);
-        let reqs: Vec<Request> = (0..4)
-            .map(|i| Request { id: i, prompt: vec![0; 16], decode_len: 8 })
-            .collect();
-        let summary = srv.serve_batch(reqs).unwrap();
-        assert_eq!(summary.requests, 4);
-        assert_eq!(summary.total_tokens, 32);
-        assert!(summary.tokens_per_s > 0.0);
-        assert_eq!(srv.completed().len(), 4);
-        // completion order is submission order (FCFS, single-engine)
-        let ids: Vec<u64> = srv.completed().iter().map(|m| m.request_id).collect();
-        assert_eq!(ids, vec![0, 1, 2, 3]);
+    fn reqs(n: u64, prompt: usize, decode: usize) -> Vec<Request> {
+        (0..n).map(|id| Request { id, prompt: vec![0; prompt], decode_len: decode }).collect()
     }
 
     #[test]
-    fn later_requests_wait_in_queue() {
-        let mut srv = tiny_server(1, 2);
-        let reqs: Vec<Request> = (0..3)
-            .map(|i| Request { id: i, prompt: vec![0; 8], decode_len: 4 })
-            .collect();
-        srv.serve_batch(reqs).unwrap();
+    fn serves_batch_and_releases_kv() {
+        let mut srv = tiny_server(2, 2, 4);
+        let summary = srv.serve_batch(reqs(4, 16, 8)).unwrap();
+        assert_eq!(summary.requests, 4);
+        assert_eq!(summary.completed, 4);
+        assert_eq!(summary.failed, 0);
+        assert_eq!(summary.total_tokens, 32);
+        assert!(summary.tokens_per_s > 0.0);
+        assert_eq!(srv.completed().len(), 4);
+        assert_eq!(srv.scheduler().kv().used_blocks(), 0, "all KV released");
+        assert_eq!(srv.scheduler().running_len(), 0);
+        for m in srv.completed() {
+            assert_eq!(m.generated_tokens, 8);
+            assert!(m.error.is_none());
+        }
+    }
+
+    #[test]
+    fn fcfs_when_batch_is_one() {
+        let mut srv = tiny_server(1, 2, 1);
+        srv.serve_batch(reqs(3, 8, 4)).unwrap();
+        let ids: Vec<u64> = srv.completed().iter().map(|m| m.request_id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "one-at-a-time completes in submission order");
         let m = srv.completed();
         assert!(m[2].queue_s >= m[0].queue_s, "FCFS queueing accumulates");
+    }
+
+    #[test]
+    fn batched_requests_interleave_completions() {
+        let mut srv = tiny_server(2, 1, 4);
+        // Equal-length requests decode in lockstep and finish on the same
+        // iteration; completion order is batch order, all with small queue
+        // delay (no one waits for a predecessor's full decode).
+        let summary = srv.serve_batch(reqs(4, 8, 6)).unwrap();
+        assert_eq!(summary.completed, 4);
+        let max_queue = srv.completed().iter().map(|m| m.queue_s).fold(0.0, f64::max);
+        let max_e2e = srv.completed().iter().map(|m| m.e2e_s).fold(0.0, f64::max);
+        assert!(
+            max_queue < max_e2e,
+            "admission happens up front under continuous batching"
+        );
+    }
+
+    #[test]
+    fn kv_exhaustion_bails_one_sequence_and_completes_the_rest() {
+        // Pool: 8 blocks x 4 tokens = 32. Two requests of prompt 12 (3
+        // blocks each) + decode 12 peak at 6 blocks each = 12 > 8: the
+        // old full-span admission would have serialized them; here both
+        // run, the pool runs dry mid-decode, one bails with an error and
+        // the survivor finishes into the freed blocks.
+        let plan_cfg = EngineConfig {
+            arch: ModelArch::tiny(),
+            layout: ParallelLayout::new(2, 1),
+            mode: EngineMode::Structural,
+            trace_dtype_bytes: 2,
+        };
+        let mut srv = Server::new(
+            Engine::new(plan_cfg).unwrap(),
+            SchedulerConfig { kv_blocks: 8, kv_block_size: 4, max_queue: 8, max_batch: 4 },
+        );
+        let summary = srv.serve_batch(reqs(2, 12, 12)).unwrap();
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.failed, 1, "exactly one sequence bails");
+        assert_eq!(summary.completed, 1);
+        let failed: Vec<&RequestMetrics> =
+            srv.completed().iter().filter(|m| m.error.is_some()).collect();
+        assert_eq!(failed.len(), 1);
+        assert!(failed[0].error.as_ref().unwrap().contains("KV pool exhausted"));
+        assert!(failed[0].generated_tokens >= 1, "partial progress is reported");
+        let ok: Vec<&RequestMetrics> =
+            srv.completed().iter().filter(|m| m.error.is_none()).collect();
+        assert_eq!(ok[0].generated_tokens, 12, "survivor completes its span");
+        assert_eq!(srv.scheduler().kv().used_blocks(), 0, "bail-out released KV");
+    }
+
+    #[test]
+    fn poisson_arrivals_serve_everything() {
+        let mut srv = tiny_server(2, 1, 4);
+        let summary = srv.serve_poisson(reqs(6, 8, 4), 500.0, 0xC0FFEE).unwrap();
+        assert_eq!(summary.requests, 6);
+        assert_eq!(summary.completed, 6);
+        assert_eq!(summary.total_tokens, 24);
+        assert!(summary.wall_s > 0.0);
+        for m in srv.completed() {
+            assert!(m.queue_s >= 0.0 && m.e2e_s >= m.ttft_s);
+        }
     }
 }

@@ -1,10 +1,15 @@
-//! Request scheduler: FCFS admission with paged-KV backpressure.
+//! Iteration-level continuous-batching scheduler (vLLM-style).
 //!
-//! vLLM's continuous-batching scheduler admits requests while KV blocks are
-//! available and returns them to the pool on completion. Our engine serves
-//! one request at a time (the paper's single-request methodology isolates
-//! communication from batching, §IV.B), so the scheduler's role is the
-//! admission/queueing discipline in front of the engine plus KV lifecycle.
+//! Requests move waiting → running → finished. Admission charges only the
+//! *prompt* KV footprint ([`Scheduler::admit_next`]); decode growth is
+//! allocated one token at a time ([`Scheduler::grow`]) exactly when an
+//! iteration is about to write it — vLLM's on-demand block allocation.
+//! The old scheduler reserved a request's entire decode span eagerly, so a
+//! pool that could interleave requests rejected feasible concurrency; now
+//! up to [`SchedulerConfig::max_batch`] sequences share every decode
+//! iteration and a sequence whose growth exhausts the pool is bailed out
+//! cleanly by the serving loop (blocks released, error surfaced in its
+//! `RequestMetrics`).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -33,38 +38,59 @@ pub struct SchedulerConfig {
     pub kv_blocks: usize,
     pub kv_block_size: usize,
     pub max_queue: usize,
+    /// Maximum sequences decoding concurrently in one engine iteration
+    /// (vLLM's `max_num_seqs`) — the serving concurrency knob.
+    pub max_batch: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { kv_blocks: 512, kv_block_size: 16, max_queue: 1024 }
+        Self { kv_blocks: 512, kv_block_size: 16, max_queue: 1024, max_batch: 8 }
     }
 }
 
-/// FCFS scheduler with KV admission control.
+/// FCFS continuous-batching scheduler with prompt-footprint KV admission.
 pub struct Scheduler {
     cfg: SchedulerConfig,
     kv: KvBlockManager,
-    queue: VecDeque<(Request, Instant)>,
+    waiting: VecDeque<(Request, Instant)>,
+    running: Vec<SeqId>,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
-        Self { cfg, kv: KvBlockManager::new(cfg.kv_blocks, cfg.kv_block_size), queue: VecDeque::new() }
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        Self {
+            cfg,
+            kv: KvBlockManager::new(cfg.kv_blocks, cfg.kv_block_size),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+        }
     }
 
     pub fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.waiting.len()
+    }
+
+    /// Sequences currently admitted and holding KV blocks.
+    pub fn running_len(&self) -> usize {
+        self.running.len()
     }
 
     pub fn kv(&self) -> &KvBlockManager {
         &self.kv
     }
 
+    pub fn config(&self) -> SchedulerConfig {
+        self.cfg
+    }
+
     /// Enqueue a request (rejects when the queue is full — backpressure to
-    /// the router).
+    /// the router). A request whose full span can never fit the pool even
+    /// alone is rejected up front; pool *contention* is handled later by
+    /// the mid-decode bail-out path instead.
     pub fn submit(&mut self, request: Request) -> Result<()> {
-        if self.queue.len() >= self.cfg.max_queue {
+        if self.waiting.len() >= self.cfg.max_queue {
             anyhow::bail!("queue full ({} requests)", self.cfg.max_queue);
         }
         if request.prompt.is_empty() {
@@ -74,31 +100,41 @@ impl Scheduler {
         if total > self.cfg.kv_blocks * self.cfg.kv_block_size {
             anyhow::bail!("request of {total} tokens can never fit the KV pool");
         }
-        self.queue.push_back((request, Instant::now()));
+        self.waiting.push_back((request, Instant::now()));
         Ok(())
     }
 
-    /// Pop the next request iff its *full* KV footprint fits now (FCFS:
-    /// head-of-line blocks — vLLM V0 default behaviour).
+    /// Pop the queue head iff a batch slot is free and its *prompt* blocks
+    /// fit now (FCFS: head-of-line blocks — vLLM V0 default behaviour).
+    /// Decode growth is not reserved here; see [`Self::grow`].
     pub fn admit_next(&mut self) -> Result<Option<Admitted>> {
-        let Some((front, _)) = self.queue.front() else {
+        if self.running.len() >= self.cfg.max_batch {
+            return Ok(None);
+        }
+        let Some((front, _)) = self.waiting.front() else {
             return Ok(None);
         };
-        let tokens = front.prompt.len() + front.decode_len;
-        if !self.kv.can_allocate(tokens) {
+        if !self.kv.can_allocate(front.prompt.len()) {
             return Ok(None);
         }
-        let (request, enqueued_at) = self.queue.pop_front().expect("non-empty");
+        let (request, enqueued_at) = self.waiting.pop_front().expect("non-empty");
         self.kv.allocate(request.id, request.prompt.len())?;
-        // Reserve decode growth eagerly (admission checked the full span).
-        for _ in 0..request.decode_len {
-            self.kv.append_token(request.id)?;
-        }
+        self.running.push(request.id);
         Ok(Some(Admitted { request, enqueued_at }))
     }
 
-    /// Release a finished request's KV blocks.
-    pub fn complete(&mut self, id: SeqId) -> Result<()> {
+    /// Reserve KV for one more decoded token of a running sequence, on the
+    /// iteration that writes it. `Err` means the pool is exhausted: the
+    /// caller bails the sequence out (cancel + [`Self::finish`]); the
+    /// failed call leaves its footprint untouched.
+    pub fn grow(&mut self, id: SeqId) -> Result<bool> {
+        self.kv.append_token(id)
+    }
+
+    /// Retire a running sequence — completed or bailed out — releasing
+    /// all of its KV blocks.
+    pub fn finish(&mut self, id: SeqId) -> Result<()> {
+        self.running.retain(|&r| r != id);
         self.kv.release(id)
     }
 }
@@ -111,50 +147,93 @@ mod tests {
         Request { id, prompt: vec![0; prompt], decode_len: decode }
     }
 
+    fn cfg(kv_blocks: usize, kv_block_size: usize, max_batch: usize) -> SchedulerConfig {
+        SchedulerConfig { kv_blocks, kv_block_size, max_queue: 8, max_batch }
+    }
+
     #[test]
-    fn fcfs_order_and_completion() {
-        let mut s = Scheduler::new(SchedulerConfig {
-            kv_blocks: 16,
-            kv_block_size: 16,
-            max_queue: 8,
-        });
+    fn fcfs_order_and_finish_releases_kv() {
+        let mut s = Scheduler::new(cfg(16, 16, 4));
         s.submit(req(1, 16, 16)).unwrap();
         s.submit(req(2, 16, 16)).unwrap();
         let a = s.admit_next().unwrap().unwrap();
         assert_eq!(a.request.id, 1);
         let b = s.admit_next().unwrap().unwrap();
         assert_eq!(b.request.id, 2);
-        assert!(s.admit_next().unwrap().is_none());
-        s.complete(1).unwrap();
-        s.complete(2).unwrap();
+        assert_eq!(s.running_len(), 2);
+        assert!(s.admit_next().unwrap().is_none(), "queue drained");
+        s.finish(1).unwrap();
+        s.finish(2).unwrap();
+        assert_eq!(s.running_len(), 0);
         assert_eq!(s.kv().used_blocks(), 0);
     }
 
     #[test]
-    fn kv_backpressure_blocks_admission() {
-        let mut s = Scheduler::new(SchedulerConfig {
-            kv_blocks: 4,
-            kv_block_size: 16,
-            max_queue: 8,
-        });
-        s.submit(req(1, 32, 32)).unwrap(); // 4 blocks
+    fn prompt_only_admission_raises_concurrency() {
+        // Pool: 4 blocks x 16 tokens. The old full-span reservation charged
+        // req 1 all 4 blocks (16 + 48 tokens) at admission, so req 2 could
+        // only run after it finished. Prompt-footprint admission runs both
+        // concurrently: prompts take 1 block each, growth is on demand.
+        let mut s = Scheduler::new(cfg(4, 16, 4));
+        s.submit(req(1, 16, 48)).unwrap();
         s.submit(req(2, 16, 16)).unwrap();
         assert!(s.admit_next().unwrap().is_some());
-        assert!(s.admit_next().unwrap().is_none(), "no blocks left");
-        s.complete(1).unwrap();
-        assert_eq!(s.admit_next().unwrap().unwrap().request.id, 2, "FCFS after release");
+        assert!(
+            s.admit_next().unwrap().is_some(),
+            "feasible concurrency must not be rejected"
+        );
+        assert_eq!(s.running_len(), 2);
+        assert_eq!(s.kv().used_blocks(), 2, "prompt blocks only");
+    }
+
+    #[test]
+    fn max_batch_caps_admission() {
+        let mut s = Scheduler::new(cfg(64, 16, 2));
+        for id in 0..4 {
+            s.submit(req(id, 16, 8)).unwrap();
+        }
+        assert!(s.admit_next().unwrap().is_some());
+        assert!(s.admit_next().unwrap().is_some());
+        assert!(s.admit_next().unwrap().is_none(), "batch full");
+        s.finish(0).unwrap();
+        assert_eq!(s.admit_next().unwrap().unwrap().request.id, 2, "FCFS after a slot frees");
+    }
+
+    #[test]
+    fn kv_backpressure_blocks_admission_on_prompt() {
+        let mut s = Scheduler::new(cfg(4, 16, 8));
+        s.submit(req(1, 64, 1)).unwrap(); // prompt takes the whole pool
+        s.submit(req(2, 16, 16)).unwrap();
+        assert!(s.admit_next().unwrap().is_some());
+        assert!(s.admit_next().unwrap().is_none(), "no blocks for the next prompt");
+        s.finish(1).unwrap();
+        assert_eq!(s.admit_next().unwrap().unwrap().request.id, 2);
+        s.finish(2).unwrap();
+    }
+
+    #[test]
+    fn grow_exhaustion_surfaces_and_finish_recovers() {
+        let mut s = Scheduler::new(cfg(2, 4, 8));
+        s.submit(req(1, 4, 4)).unwrap();
+        s.submit(req(2, 4, 4)).unwrap();
+        assert!(s.admit_next().unwrap().is_some());
+        assert!(s.admit_next().unwrap().is_some());
+        // Both prompts fill the pool; the first boundary crossing fails.
+        assert!(s.grow(1).is_err(), "pool exhausted mid-decode");
+        s.finish(1).unwrap(); // bail-out releases the blocks
+        assert!(s.grow(2).is_ok(), "survivor grows into the freed blocks");
+        s.finish(2).unwrap();
+        assert_eq!(s.kv().used_blocks(), 0);
     }
 
     #[test]
     fn rejects_oversized_and_overflow() {
-        let mut s = Scheduler::new(SchedulerConfig {
-            kv_blocks: 2,
-            kv_block_size: 4,
-            max_queue: 1,
-        });
+        let mut s = Scheduler::new(cfg(2, 4, 8));
         assert!(s.submit(req(1, 64, 64)).is_err(), "can never fit");
         assert!(s.submit(req(2, 0, 4)).is_err(), "empty prompt");
-        s.submit(req(3, 4, 2)).unwrap();
-        assert!(s.submit(req(4, 4, 2)).is_err(), "queue full");
+        for id in 3..11 {
+            s.submit(req(id, 4, 2)).unwrap();
+        }
+        assert!(s.submit(req(11, 4, 2)).is_err(), "queue full");
     }
 }

@@ -233,17 +233,20 @@ fn prop_kv_manager_conservation() {
 }
 
 /// Scheduler: FCFS order is preserved, every submitted request is admitted
-/// exactly once (given capacity), and KV drains to empty.
+/// exactly once (given capacity), running never exceeds `max_batch`, and
+/// KV drains to empty.
 #[test]
 fn prop_scheduler_fcfs_conservation() {
     let mut rng = Rng::new(0xF66);
     for _case in 0..30 {
         let blocks = rng.usize_in(8, 64);
         let bs = 16;
+        let max_batch = rng.usize_in(1, 6);
         let mut s = Scheduler::new(SchedulerConfig {
             kv_blocks: blocks,
             kv_block_size: bs,
             max_queue: 1024,
+            max_batch,
         });
         let n = rng.usize_in(1, 20);
         let mut submitted = Vec::new();
@@ -256,17 +259,97 @@ fn prop_scheduler_fcfs_conservation() {
             }
         }
         let mut admitted = Vec::new();
+        let mut running: Vec<u64> = Vec::new();
         loop {
             match s.admit_next().unwrap() {
                 Some(a) => {
                     admitted.push(a.request.id);
-                    s.complete(a.request.id).unwrap(); // serve immediately
+                    running.push(a.request.id);
+                    assert!(s.running_len() <= max_batch, "batch cap respected");
+                    // Occasionally hold a few sequences in the batch before
+                    // finishing, to exercise slot reuse.
+                    if running.len() == max_batch {
+                        let id = running.remove(0);
+                        s.finish(id).unwrap();
+                    }
                 }
-                None => break,
+                None => {
+                    let Some(id) = running.pop() else { break };
+                    s.finish(id).unwrap();
+                }
             }
         }
         assert_eq!(admitted, submitted, "FCFS, all admitted exactly once");
+        assert_eq!(s.running_len(), 0);
         assert_eq!(s.kv().used_blocks(), 0, "KV drained");
+    }
+}
+
+/// KvBlockManager under interleaved multi-sequence workloads: for any
+/// alloc/append/release interleaving across >= 3 live sequences,
+/// `used_blocks` equals the sum of live footprints exactly (no leaked and
+/// no phantom blocks, even across failed appends), and `can_allocate`
+/// agrees with `allocate`.
+#[test]
+fn prop_kv_interleaved_footprint_exact() {
+    let mut rng = Rng::new(0x5EAF00D);
+    for _case in 0..40 {
+        let total = rng.usize_in(6, 48);
+        let bs = rng.usize_in(1, 16);
+        let mut m = KvBlockManager::new(total, bs);
+        // Mirror of the manager's expected state: (id, tokens) per live seq.
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        let mut next_id = 0u64;
+        // Keep >= 3 sequences live from the start (1 token = 1 block each).
+        for _ in 0..3 {
+            assert!(m.can_allocate(1));
+            m.allocate(next_id, 1).unwrap();
+            live.push((next_id, 1));
+            next_id += 1;
+        }
+        for _op in 0..300 {
+            let expected: usize = live.iter().map(|&(_, t)| t.div_ceil(bs)).sum();
+            assert_eq!(m.used_blocks(), expected, "used == sum of live footprints");
+            assert_eq!(m.live_seqs(), live.len());
+            match rng.usize_in(0, 3) {
+                0 => {
+                    let tokens = rng.usize_in(1, bs * 3);
+                    let fits = m.can_allocate(tokens);
+                    let res = m.allocate(next_id, tokens);
+                    assert_eq!(
+                        res.is_ok(),
+                        fits,
+                        "can_allocate({tokens}) must agree with allocate"
+                    );
+                    if res.is_ok() {
+                        live.push((next_id, tokens));
+                    }
+                    next_id += 1;
+                }
+                3 => {
+                    // Release, but never drop below 3 live sequences.
+                    if live.len() > 3 {
+                        let idx = rng.usize_in(0, live.len() - 1);
+                        let (id, _) = live.swap_remove(idx);
+                        m.release(id).unwrap();
+                    }
+                }
+                _ => {
+                    let idx = rng.usize_in(0, live.len() - 1);
+                    let entry = &mut live[idx];
+                    // A failed append (pool exhausted) must leave the
+                    // footprint untouched; a successful one counts.
+                    if m.append_token(entry.0).is_ok() {
+                        entry.1 += 1;
+                    }
+                }
+            }
+        }
+        for (id, _) in live {
+            m.release(id).unwrap();
+        }
+        assert_eq!(m.free_blocks(), total, "all blocks returned");
+        assert_eq!(m.live_seqs(), 0);
     }
 }
 
