@@ -62,7 +62,10 @@ fn main() -> anyhow::Result<()> {
         )
     );
     println!("=> SP is communication-neutral (ring AR ≡ RS+AG); its win is activation memory.");
-    println!("   At decode the token window (1) cannot shard across t sequence ranks — why serving engines keep SP off the decode path.\n");
+    println!(
+        "   At decode the token window (1) cannot shard across t sequence ranks — why \
+         serving engines keep SP off the decode path.\n"
+    );
 
     // --- Expert parallelism: dispatch/combine vs dense AllReduce -------
     let mut rows = Vec::new();
@@ -85,7 +88,10 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
-    println!("=> top-1 routing undercuts dense TP volume; top-2 on every layer exceeds it — capacity factor is the communication knob.\n");
+    println!(
+        "=> top-1 routing undercuts dense TP volume; top-2 on every layer exceeds it — \
+         capacity factor is the communication knob.\n"
+    );
 
     // --- Prefill/decode disaggregation (DistServe) ----------------------
     use commsim::analysis::DisaggregationModel;
@@ -112,13 +118,23 @@ fn main() -> anyhow::Result<()> {
         "{}",
         render_table(
             "Ablation — disaggregated prefill(TP4)/decode(PP4) vs colocated TP4 (8B)",
-            &["Decode len", "Prefill pool", "KV migration", "Decode pool", "Disagg total", "Colocated TP4"],
+            &[
+                "Decode len",
+                "Prefill pool",
+                "KV migration",
+                "Decode pool",
+                "Disagg total",
+                "Colocated TP4",
+            ],
             &rows,
         )
     );
     let be = m
         .break_even_decode_len(commsim::analysis::ParallelLayout::new(4, 1), 128, 2, 4096)
         .unwrap();
-    println!("=> KV migration (16 MiB @ Sp=128) amortizes after Sd >= {be}; past that, stage-specialized pools dominate colocated TP on volume.");
+    println!(
+        "=> KV migration (16 MiB @ Sp=128) amortizes after Sd >= {be}; past that, \
+         stage-specialized pools dominate colocated TP on volume."
+    );
     Ok(())
 }

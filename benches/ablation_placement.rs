@@ -75,7 +75,9 @@ fn main() -> anyhow::Result<()> {
         "{}",
         render_table("Ablation — serving dtype (8B, TP=4)", &["dtype", "volume"], &rows)
     );
-    println!("=> F32 serving doubles every table in the paper; `b` separates structure from width.\n");
+    println!(
+        "=> F32 serving doubles every table in the paper; `b` separates structure from width.\n"
+    );
 
     // --- 3. ring vs naive star cost model --------------------------------
     let net: NetModel = Calibration::default().net;
@@ -103,6 +105,9 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
-    println!("=> the 2(d−1)/d ring factor is what keeps TP's per-GPU bytes flat as d grows (Table III).");
+    println!(
+        "=> the 2(d−1)/d ring factor is what keeps TP's per-GPU bytes flat as d grows \
+         (Table III)."
+    );
     Ok(())
 }

@@ -58,7 +58,14 @@ fn main() -> anyhow::Result<()> {
         "{}",
         render_table(
             "Fig. 4 — TP=4 validation: E2E AllReduce count & total message size",
-            &["Model", "Count (model)", "Count (observed)", "Bytes (model)", "Bytes (observed)", ""],
+            &[
+                "Model",
+                "Count (model)",
+                "Count (observed)",
+                "Bytes (model)",
+                "Bytes (observed)",
+                "",
+            ],
             &rows,
         )
     );

@@ -64,7 +64,14 @@ fn main() -> anyhow::Result<()> {
         "{}",
         render_table(
             "Fig. 5 — PP validation: E2E p2p count & total message size (Llama-3.1-8B)",
-            &["Degree", "Count (model)", "Count (observed)", "Bytes (model)", "Bytes (observed)", ""],
+            &[
+                "Degree",
+                "Count (model)",
+                "Count (observed)",
+                "Bytes (model)",
+                "Bytes (observed)",
+                "",
+            ],
             &rows,
         )
     );

@@ -56,6 +56,9 @@ fn main() -> anyhow::Result<()> {
             "PP={pp} TTFT within 30%"
         );
     }
-    println!("\nFig. 9 reproduced: deep pipelines trade latency for comm volume; cross-node TPOT spike.");
+    println!(
+        "\nFig. 9 reproduced: deep pipelines trade latency for comm volume; cross-node \
+         TPOT spike."
+    );
     Ok(())
 }

@@ -68,7 +68,15 @@ fn main() -> anyhow::Result<()> {
             "{}",
             render_table(
                 &format!("Table III — {} TP={tp} (engine run {elapsed:.2?})", arch.name),
-                &["Collective", "Paper count", "Paper shape", "Analytical", "Measured", "Measured shape", ""],
+                &[
+                    "Collective",
+                    "Paper count",
+                    "Paper shape",
+                    "Analytical",
+                    "Measured",
+                    "Measured shape",
+                    "",
+                ],
                 &rows,
             )
         );

@@ -65,7 +65,15 @@ fn main() -> anyhow::Result<()> {
             "{}",
             render_table(
                 &format!("Table V — {} PP={pp} (engine run {elapsed:.2?})", arch.name),
-                &["Operation", "Paper count", "Paper shape", "Analytical", "Measured", "Measured shape", ""],
+                &[
+                    "Operation",
+                    "Paper count",
+                    "Paper shape",
+                    "Analytical",
+                    "Measured",
+                    "Measured shape",
+                    "",
+                ],
                 &rows,
             )
         );

@@ -60,7 +60,15 @@ fn main() -> anyhow::Result<()> {
         "{}",
         render_table(
             &format!("Table VI — {} TP=2 PP=2 (engine run {elapsed:.2?})", arch.name),
-            &["Operation", "Paper count", "Paper shape", "Analytical", "Measured", "Measured shape", ""],
+            &[
+                "Operation",
+                "Paper count",
+                "Paper shape",
+                "Analytical",
+                "Measured",
+                "Measured shape",
+                "",
+            ],
             &rows,
         )
     );

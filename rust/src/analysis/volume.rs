@@ -86,14 +86,15 @@ impl VolumeModel {
         Self { arch }
     }
 
-    /// AllReduce correction factor `2(d−1)/d` (ring algorithm bytes/GPU).
+    /// AllReduce correction factor `2(d−1)/d` (ring algorithm bytes/GPU)
+    /// — one source of truth in [`crate::simtime::algebra`].
     pub fn allreduce_factor(d: usize) -> f64 {
-        if d <= 1 { 0.0 } else { 2.0 * (d as f64 - 1.0) / d as f64 }
+        crate::simtime::algebra::allreduce_factor(d)
     }
 
-    /// AllGather correction factor `(d−1)/d`.
+    /// AllGather correction factor `(d−1)/d` — shared collective algebra.
     pub fn allgather_factor(d: usize) -> f64 {
-        if d <= 1 { 0.0 } else { (d as f64 - 1.0) / d as f64 }
+        crate::simtime::algebra::allgather_factor(d)
     }
 
     /// Eq. 1 — pure tensor parallelism:
@@ -308,5 +309,33 @@ mod tests {
         assert!((VolumeModel::allreduce_factor(2) - 1.0).abs() < 1e-12);
         assert!((VolumeModel::allreduce_factor(4) - 1.5).abs() < 1e-12);
         assert!((VolumeModel::allgather_factor(4) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correction_factors_pin_the_shared_algebra() {
+        // One source of truth: the volume model's factors, the trace
+        // accounting's correction_factor, and the algebra module must be
+        // bitwise-identical for every group size.
+        use crate::comm::CollectiveKind;
+        for d in 1..=64usize {
+            assert_eq!(
+                VolumeModel::allreduce_factor(d),
+                CollectiveKind::AllReduce.correction_factor(d),
+                "allreduce d={d}"
+            );
+            assert_eq!(
+                VolumeModel::allreduce_factor(d),
+                crate::simtime::algebra::allreduce_factor(d),
+            );
+            assert_eq!(
+                VolumeModel::allgather_factor(d),
+                CollectiveKind::AllGather.correction_factor(d),
+                "allgather d={d}"
+            );
+            assert_eq!(
+                VolumeModel::allgather_factor(d),
+                crate::simtime::algebra::allgather_factor(d),
+            );
+        }
     }
 }

@@ -3,14 +3,30 @@
 //! We cannot measure NVLink/InfiniBand on this testbed, so collective costs
 //! are modeled with the standard latency–bandwidth (α–β) form the NCCL
 //! performance guide uses ([16] in the paper): a ring AllReduce over `d`
-//! workers moves `2(d−1)/d · n` bytes per GPU in `2(d−1)` steps, etc.
-//! Constants are calibrated in [`crate::perfmodel::calibration`]; the
-//! *ratios* (NVLink ≫ IB in bandwidth, IB ≫ NVLink in latency) are what the
-//! paper's SLO shapes depend on.
-
+//! workers moves `2(d−1)/d · n` bytes per GPU in `2(d−1)` steps, etc. Byte
+//! factors and step counts come from the shared collective algebra
+//! ([`crate::simtime::algebra`]) so they can never drift from the volume
+//! accounting. Constants are calibrated in
+//! [`crate::perfmodel::calibration`]; the *ratios* (NVLink ≫ IB in
+//! bandwidth, IB ≫ NVLink in latency) are what the paper's SLO shapes
+//! depend on.
+//!
+//! Two algorithms are modeled for node-spanning AllReduce:
+//! - **flat ring** at the slowest member link ([`NetModel::allreduce`]
+//!   with `crosses_nodes`) — what the paper's measured stack runs (vLLM
+//!   0.8.5, custom-allreduce disabled), and what the SLO calibration was
+//!   fitted against;
+//! - **two-level hierarchical** ([`NetModel::allreduce_two_level`]) —
+//!   intra-node ReduceScatter, inter-node AllReduce over one leader per
+//!   node, intra-node AllGather: the NCCL-tree-style what-if, exposed
+//!   placement-aware through
+//!   [`crate::simtime::CostModel::tp_allreduce_two_level`] to bound how
+//!   much a topology-aware algorithm could save over the measured flat
+//!   ring.
 
 use super::topology::Placement;
 use crate::comm::CollectiveKind;
+use crate::simtime::algebra;
 
 /// Link class between two workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -77,8 +93,49 @@ impl NetModel {
         }
         let p = self.group_params(crosses_nodes);
         CollectiveCost {
-            latency_s: 2.0 * (d as f64 - 1.0) * p.alpha_s,
+            latency_s: algebra::allreduce_steps(d) * p.alpha_s,
             transfer_s: CollectiveKind::AllReduce.correction_factor(d) * n_bytes / p.bus_bw,
+        }
+    }
+
+    /// Two-level hierarchical AllReduce over `nodes × gpus_per_node`
+    /// workers: intra-node ReduceScatter over NVLink, inter-node AllReduce
+    /// of the per-node shard (`n / g` bytes) over IB between one leader
+    /// per node, intra-node AllGather over NVLink.
+    ///
+    /// The formula is floored at the flat all-NVLink ring of the same
+    /// group: a node-spanning collective can never beat the same group on
+    /// pure NVLink, and the raw two-phase sum ignores the cross-phase
+    /// synchronization that makes tiny hierarchical messages pay at least
+    /// the single-fabric launch train. A single-node group degenerates to
+    /// the flat NVLink ring.
+    pub fn allreduce_two_level(
+        &self,
+        n_bytes: f64,
+        gpus_per_node: usize,
+        nodes: usize,
+    ) -> CollectiveCost {
+        let g = gpus_per_node.max(1);
+        let d = g * nodes.max(1);
+        if d <= 1 {
+            return CollectiveCost { latency_s: 0.0, transfer_s: 0.0 };
+        }
+        let flat_nv = self.allreduce(n_bytes, d, false);
+        if nodes <= 1 {
+            return flat_nv;
+        }
+        // Intra-node ReduceScatter + AllGather: 2(g−1) NVLink steps moving
+        // 2(g−1)/g · n bytes; inter-node ring AllReduce of the n/g shard.
+        let two_level = CollectiveCost {
+            latency_s: 2.0 * algebra::allgather_steps(g) * self.nvlink.alpha_s
+                + algebra::allreduce_steps(nodes) * self.ib.alpha_s,
+            transfer_s: 2.0 * algebra::allgather_factor(g) * n_bytes / self.nvlink.bus_bw
+                + algebra::allreduce_factor(nodes) * (n_bytes / g as f64) / self.ib.bus_bw,
+        };
+        if two_level.total() < flat_nv.total() {
+            flat_nv
+        } else {
+            two_level
         }
     }
 
@@ -90,7 +147,7 @@ impl NetModel {
         }
         let p = self.group_params(crosses_nodes);
         CollectiveCost {
-            latency_s: (d as f64 - 1.0) * p.alpha_s,
+            latency_s: algebra::allgather_steps(d) * p.alpha_s,
             transfer_s: CollectiveKind::AllGather.correction_factor(d) * n_out_bytes / p.bus_bw,
         }
     }
@@ -112,6 +169,30 @@ impl NetModel {
     pub fn p2p(&self, n_bytes: f64, crosses_nodes: bool) -> CollectiveCost {
         let p = self.group_params(crosses_nodes);
         CollectiveCost { latency_s: p.alpha_s, transfer_s: n_bytes / p.bus_bw }
+    }
+
+    /// Price any collective class with one entry point (the record-pricing
+    /// dispatch). `n_bytes` follows each op's trace convention: message
+    /// bytes for AllReduce/ReduceScatter/AllToAll, *gathered* bytes for
+    /// AllGather, *slice* bytes for Gather, wire bytes for Send/Recv.
+    pub fn collective(
+        &self,
+        op: CollectiveKind,
+        n_bytes: f64,
+        d: usize,
+        crosses_nodes: bool,
+    ) -> CollectiveCost {
+        match op {
+            CollectiveKind::AllReduce => self.allreduce(n_bytes, d, crosses_nodes),
+            CollectiveKind::AllGather => self.allgather(n_bytes, d, crosses_nodes),
+            // ReduceScatter and AllToAll share AllGather's ring shape:
+            // (d−1) steps, (d−1)/d corrected bytes.
+            CollectiveKind::ReduceScatter | CollectiveKind::AllToAll => {
+                self.allgather(n_bytes, d, crosses_nodes)
+            }
+            CollectiveKind::Gather => self.gather(n_bytes, d, crosses_nodes),
+            CollectiveKind::Send | CollectiveKind::Recv => self.p2p(n_bytes, crosses_nodes),
+        }
     }
 
     /// AllReduce cost for a TP group of a placement's stage.
@@ -169,6 +250,63 @@ mod tests {
         let nm = NetModel::default();
         assert!(nm.p2p(2.0e6, true).total() > nm.p2p(1.0e6, true).total());
         assert!(nm.gather(1.0e6, 4, false).total() > nm.gather(1.0e5, 4, false).total());
+    }
+
+    #[test]
+    fn two_level_allreduce_sits_between_the_pure_fabrics() {
+        let nm = NetModel::default();
+        for bytes in [1.0, 8.0e3, 1.0e6, 1.0e9] {
+            for (g, nodes) in [(2usize, 2usize), (4, 2), (4, 4), (8, 2)] {
+                let d = g * nodes;
+                let nv = nm.allreduce(bytes, d, false).total();
+                let ib = nm.allreduce(bytes, d, true).total();
+                let two = nm.allreduce_two_level(bytes, g, nodes).total();
+                assert!(two >= nv, "bytes={bytes} g={g} n={nodes}: {two} < nvlink {nv}");
+                assert!(two <= ib, "bytes={bytes} g={g} n={nodes}: {two} > ib {ib}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_allreduce_degenerates_cleanly() {
+        let nm = NetModel::default();
+        // Single node: exactly the flat NVLink ring.
+        assert_eq!(nm.allreduce_two_level(1.0e6, 4, 1), nm.allreduce(1.0e6, 4, false));
+        // Single worker: free.
+        assert_eq!(nm.allreduce_two_level(1.0e6, 1, 1).total(), 0.0);
+        // Large messages beat the flat IB ring by a wide margin (the
+        // intra-node phases run at NVLink bandwidth).
+        let two = nm.allreduce_two_level(1.0e9, 4, 2).total();
+        let ib = nm.allreduce(1.0e9, 8, true).total();
+        assert!(two < 0.5 * ib, "two-level {two} vs flat IB {ib}");
+    }
+
+    #[test]
+    fn collective_dispatch_matches_direct_formulas() {
+        let nm = NetModel::default();
+        for crosses in [false, true] {
+            assert_eq!(
+                nm.collective(CollectiveKind::AllReduce, 1.0e6, 4, crosses),
+                nm.allreduce(1.0e6, 4, crosses)
+            );
+            assert_eq!(
+                nm.collective(CollectiveKind::AllGather, 1.0e6, 4, crosses),
+                nm.allgather(1.0e6, 4, crosses)
+            );
+            assert_eq!(
+                nm.collective(CollectiveKind::Gather, 1.0e6, 4, crosses),
+                nm.gather(1.0e6, 4, crosses)
+            );
+            assert_eq!(
+                nm.collective(CollectiveKind::Send, 1.0e6, 2, crosses),
+                nm.p2p(1.0e6, crosses)
+            );
+            // ReduceScatter: (d−1) launches, (d−1)/d bytes.
+            let rs = nm.collective(CollectiveKind::ReduceScatter, 1.0e6, 4, crosses);
+            let p = nm.group_params(crosses);
+            assert!((rs.latency_s - 3.0 * p.alpha_s).abs() < 1e-15);
+            assert!((rs.transfer_s - 0.75 * 1.0e6 / p.bus_bw).abs() < 1e-18);
+        }
     }
 
     #[test]

@@ -169,6 +169,7 @@ impl GroupHandle {
             peer: None,
             step: None,
             batch: None,
+            modeled_s: 0.0,
         });
     }
 
@@ -324,6 +325,7 @@ impl P2pEndpoint {
             peer: Some(self.peer),
             step: None,
             batch: None,
+            modeled_s: 0.0,
         });
         self.tx
             .as_ref()
@@ -352,6 +354,7 @@ impl P2pEndpoint {
             peer: Some(self.peer),
             step: None,
             batch: None,
+            modeled_s: 0.0,
         });
         data
     }

@@ -42,17 +42,16 @@ impl CollectiveKind {
         }
     }
 
-    /// NCCL volume correction factor for `d` participants (paper §V.B).
+    /// NCCL volume correction factor for `d` participants (paper §V.B) —
+    /// delegates to the shared collective algebra so trace accounting,
+    /// the Eq. 1–7 closed forms and the α–β transfer terms agree by
+    /// construction.
     pub fn correction_factor(&self, d: usize) -> f64 {
         match self {
-            CollectiveKind::AllReduce => {
-                if d <= 1 { 0.0 } else { 2.0 * (d as f64 - 1.0) / d as f64 }
-            }
+            CollectiveKind::AllReduce => crate::simtime::algebra::allreduce_factor(d),
             CollectiveKind::AllGather
             | CollectiveKind::ReduceScatter
-            | CollectiveKind::AllToAll => {
-                if d <= 1 { 0.0 } else { (d as f64 - 1.0) / d as f64 }
-            }
+            | CollectiveKind::AllToAll => crate::simtime::algebra::allgather_factor(d),
             CollectiveKind::Gather | CollectiveKind::Send | CollectiveKind::Recv => 1.0,
         }
     }

@@ -3,9 +3,17 @@
 //! [`CommRecord`] into a shared [`TraceSink`]; aggregation reproduces the
 //! paper's table rows (per-op counts, shapes, total message sizes and
 //! corrected volumes), with the paper's rank-selection conventions.
+//!
+//! When a [`crate::simtime::CostModel`] pricer is attached
+//! ([`TraceSink::set_pricer`]), every record is priced *at record time*
+//! ([`CommRecord::modeled_s`]): the trace then carries modeled α–β seconds
+//! alongside bytes, aggregated per (op, stage, shape) row, per active
+//! batch size, and per session step ([`TraceSummary::step_comm_s`]).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+
+use crate::simtime::CostModel;
 
 use super::CollectiveKind;
 
@@ -52,6 +60,10 @@ pub struct CommRecord {
     /// active batch size of the iteration — 1 for prefill and for the
     /// single-request `generate()` path); `None` outside sessions.
     pub batch: Option<usize>,
+    /// Modeled α–β seconds of this operation, priced at record time by the
+    /// sink's [`CostModel`] pricer; `0.0` when no pricer is attached.
+    /// `Recv` records price to zero (the wire time lives on the `Send`).
+    pub modeled_s: f64,
 }
 
 impl CommRecord {
@@ -79,6 +91,10 @@ pub struct TraceSink {
     /// race-free.
     step: std::sync::atomic::AtomicU64,
     batch: std::sync::atomic::AtomicUsize,
+    /// Prices every record at record time when attached. Set once by the
+    /// engine before workers spawn — a `OnceLock` so the hot record path
+    /// reads it without locking.
+    pricer: std::sync::OnceLock<CostModel>,
 }
 
 impl TraceSink {
@@ -88,12 +104,20 @@ impl TraceSink {
             enabled: std::sync::atomic::AtomicBool::new(true),
             step: std::sync::atomic::AtomicU64::new(0),
             batch: std::sync::atomic::AtomicUsize::new(0),
+            pricer: std::sync::OnceLock::new(),
         })
     }
 
     /// Disable recording (perf runs measure the engine without tracing).
     pub fn set_enabled(&self, on: bool) {
         self.enabled.store(on, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Attach the cost model that prices every subsequent record
+    /// ([`CommRecord::modeled_s`]). First attachment wins; later calls
+    /// are ignored (the sink is priced once, before workers spawn).
+    pub fn set_pricer(&self, pricer: CostModel) {
+        let _ = self.pricer.set(pricer);
     }
 
     /// Declare the iteration every subsequent record belongs to: session
@@ -115,6 +139,9 @@ impl TraceSink {
             if batch > 0 {
                 rec.step = Some(self.step.load(std::sync::atomic::Ordering::Relaxed));
                 rec.batch = Some(batch);
+            }
+            if let Some(pricer) = self.pricer.get() {
+                rec.modeled_s = pricer.price_record(&rec);
             }
             self.records.lock().expect("sink poisoned").push(rec);
         }
@@ -156,6 +183,10 @@ pub struct OpAggregate {
     pub count: usize,
     pub total_message_bytes: usize,
     pub corrected_volume_bytes: f64,
+    /// Sum of the rows' modeled α–β seconds ([`CommRecord::modeled_s`]).
+    /// Per-rank views give a rank's modeled communication time; the global
+    /// view is an accounting sum (a d-member collective appears d times).
+    pub modeled_time_s: f64,
 }
 
 /// Full aggregation of a trace, with the paper's viewing conventions.
@@ -169,6 +200,15 @@ pub struct TraceSummary {
     /// (global across ranks): `per_batch[batch][key]`. Untagged records
     /// do not appear here.
     pub per_batch: BTreeMap<usize, BTreeMap<AggKey, OpAggregate>>,
+    /// Modeled communication seconds per session step, with each
+    /// operation counted once: a d-member collective's d records share
+    /// its price, and a transfer's price lives on its `Send` record. For
+    /// single-stage layouts (pp = 1) this equals the cost model's
+    /// per-iteration comm term; with pipeline stages it sums every
+    /// boundary link once (parallel TP links included) — an aggregate of
+    /// serialized op time, not a critical path. Only step-tagged, priced
+    /// records contribute.
+    pub step_comm_s: BTreeMap<u64, f64>,
 }
 
 impl TraceSummary {
@@ -178,6 +218,7 @@ impl TraceSummary {
         let mut per_rank: Vec<BTreeMap<AggKey, OpAggregate>> =
             vec![BTreeMap::new(); n_ranks];
         let mut per_batch: BTreeMap<usize, BTreeMap<AggKey, OpAggregate>> = BTreeMap::new();
+        let mut step_comm_s: BTreeMap<u64, f64> = BTreeMap::new();
         for rec in records {
             let key = AggKey {
                 op: rec.op,
@@ -189,14 +230,28 @@ impl TraceSummary {
                 agg.count += 1;
                 agg.total_message_bytes += rec.message_bytes();
                 agg.corrected_volume_bytes += rec.corrected_bytes();
+                agg.modeled_time_s += rec.modeled_s;
             };
             add(&mut global);
             add(&mut per_rank[rec.rank]);
             if let Some(b) = rec.batch {
                 add(per_batch.entry(b).or_default());
             }
+            if let Some(step) = rec.step {
+                if rec.modeled_s > 0.0 {
+                    // Count each op once: every member of a collective
+                    // records it at the same price, so the d records
+                    // share it; a Send is the transfer's single priced
+                    // record (Recv prices to zero).
+                    let share = match rec.op {
+                        CollectiveKind::Send | CollectiveKind::Recv => rec.modeled_s,
+                        _ => rec.modeled_s / rec.group_size.max(1) as f64,
+                    };
+                    *step_comm_s.entry(step).or_insert(0.0) += share;
+                }
+            }
         }
-        Self { global, per_rank, per_batch }
+        Self { global, per_rank, per_batch, step_comm_s }
     }
 
     /// Count for (op, stage) summed over shapes, global across ranks.
@@ -234,6 +289,7 @@ impl TraceSummary {
                 agg.count += v.count;
                 agg.total_message_bytes += v.total_message_bytes;
                 agg.corrected_volume_bytes += v.corrected_volume_bytes;
+                agg.modeled_time_s += v.modeled_time_s;
             }
             if agg.count > best.count {
                 best = agg;
@@ -262,6 +318,7 @@ impl TraceSummary {
                 agg.count += v.count;
                 agg.total_message_bytes += v.total_message_bytes;
                 agg.corrected_volume_bytes += v.corrected_volume_bytes;
+                agg.modeled_time_s += v.modeled_time_s;
             }
         }
         agg
@@ -279,6 +336,19 @@ impl TraceSummary {
     /// Total corrected communication volume (paper Figs. 6–7 y-axis).
     pub fn corrected_volume_total(&self) -> f64 {
         self.global.values().map(|v| v.corrected_volume_bytes).sum()
+    }
+
+    /// Modeled communication seconds of one session step, each op counted
+    /// once (see [`Self::step_comm_s`]); `0.0` for unpriced or untagged
+    /// traces.
+    pub fn step_modeled_comm_s(&self, step: u64) -> f64 {
+        self.step_comm_s.get(&step).copied().unwrap_or(0.0)
+    }
+
+    /// Sum of the per-step op-deduplicated modeled comm times over the
+    /// whole traced run (iterations are serial).
+    pub fn modeled_comm_total_s(&self) -> f64 {
+        self.step_comm_s.values().sum()
     }
 
     /// Corrected volume for one op class.
@@ -307,6 +377,7 @@ mod tests {
             peer: None,
             step: None,
             batch: None,
+            modeled_s: 0.0,
         }
     }
 
@@ -383,6 +454,50 @@ mod tests {
         // Untagged records still aggregate globally.
         assert_eq!(s.global_count(CollectiveKind::AllReduce, Stage::Decode), 4);
         assert_eq!(s.batch_view(2, CollectiveKind::AllReduce, Stage::Decode).count, 0);
+    }
+
+    #[test]
+    fn pricer_stamps_modeled_time_and_summary_aggregates_it() {
+        use crate::analysis::ParallelLayout;
+        use crate::model::ModelArch;
+        use crate::simtime::CostModel;
+
+        let sink = TraceSink::new();
+        let pricer = CostModel::on_cardinal(ModelArch::tiny(), ParallelLayout::new(2, 1));
+        let expected = pricer
+            .cal
+            .net
+            .allreduce((16usize * 8 * 2) as f64, 2, false)
+            .total();
+        sink.set_pricer(pricer);
+        sink.set_iteration(0, 1);
+        for rank in 0..2 {
+            sink.record(rec(CollectiveKind::AllReduce, Stage::Prefill, rank, &[16, 8]));
+        }
+        sink.set_iteration(1, 1);
+        sink.record(rec(CollectiveKind::AllReduce, Stage::Decode, 0, &[1, 8]));
+
+        let snap = sink.snapshot();
+        assert!((snap[0].modeled_s - expected).abs() < 1e-15, "priced at record time");
+        let s = sink.summary();
+        // Per-rank and paper views carry one record's price each; the
+        // global view sums both members of the collective.
+        let pv = s.paper_view(CollectiveKind::AllReduce, Stage::Prefill);
+        assert!((pv.modeled_time_s - expected).abs() < 1e-15);
+        // Step 0's op-deduplicated comm time is one AllReduce, not two:
+        // both members' records share the op's price.
+        assert!((s.step_modeled_comm_s(0) - expected).abs() < 1e-15);
+        assert!(s.step_modeled_comm_s(1) > 0.0);
+        assert_eq!(s.step_modeled_comm_s(7), 0.0, "unknown step prices to zero");
+        assert!(
+            (s.modeled_comm_total_s() - (s.step_modeled_comm_s(0) + s.step_modeled_comm_s(1)))
+                .abs()
+                < 1e-15
+        );
+        // Unpriced sinks keep modeled time at zero.
+        let bare = TraceSink::new();
+        bare.record(rec(CollectiveKind::AllReduce, Stage::Prefill, 0, &[16, 8]));
+        assert_eq!(bare.snapshot()[0].modeled_s, 0.0);
     }
 
     #[test]

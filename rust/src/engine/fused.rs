@@ -87,7 +87,11 @@ impl FusedEngine {
     }
 
     /// Greedy generation with the same semantics as `Engine::generate`.
-    pub fn generate(&mut self, prompt: &[i32], decode_len: usize) -> Result<super::GenerationResult> {
+    pub fn generate(
+        &mut self,
+        prompt: &[i32],
+        decode_len: usize,
+    ) -> Result<super::GenerationResult> {
         assert!(decode_len >= 1);
         if prompt.len() != self.store.meta.prefill_len {
             anyhow::bail!(

@@ -37,6 +37,7 @@ use crate::analysis::ParallelLayout;
 use crate::comm::{CommWorld, TraceSink};
 use crate::model::ModelArch;
 use crate::runtime::ArtifactStore;
+use crate::simtime::CostModel;
 use crate::Result;
 
 use backend::{ComputeBackend, PjrtBackend, StructuralBackend};
@@ -60,22 +61,37 @@ pub struct EngineConfig {
     /// Element width recorded in traces (2 = BF16 like the paper's runs;
     /// numeric mode serves f32 and records 4).
     pub trace_dtype_bytes: usize,
+    /// Prices traced collectives at record time and (on structural
+    /// engines) drives the session's model-time clock. `None` disables
+    /// pricing entirely.
+    pub pricing: Option<CostModel>,
 }
 
 impl EngineConfig {
-    /// Structural engine at paper scale (BF16 trace accounting).
+    /// Structural engine at paper scale (BF16 trace accounting), priced
+    /// against the paper's 4-GPU-node topology with just enough nodes.
     pub fn structural(arch: ModelArch, layout: ParallelLayout) -> Self {
-        Self { arch, layout, mode: EngineMode::Structural, trace_dtype_bytes: 2 }
+        let pricing = Some(CostModel::on_cardinal(arch.clone(), layout));
+        Self { arch, layout, mode: EngineMode::Structural, trace_dtype_bytes: 2, pricing }
     }
 
-    /// Numeric engine over built artifacts (f32 tiny model).
+    /// Numeric engine over built artifacts (f32 tiny model). Wall clocks
+    /// are the real latency here; no pricing is attached by default.
     pub fn numeric(store: ArtifactStore, layout: ParallelLayout) -> Self {
         Self {
             arch: ModelArch::tiny(),
             layout,
             mode: EngineMode::Numeric(store),
             trace_dtype_bytes: 4,
+            pricing: None,
         }
+    }
+
+    /// Replace the pricing cost model (e.g. a plan's custom topology or
+    /// calibration).
+    pub fn with_pricing(mut self, pricing: CostModel) -> Self {
+        self.pricing = Some(pricing);
+        self
     }
 }
 
@@ -101,6 +117,11 @@ pub struct Engine {
     out_rx: Receiver<Result<StepOutput>>,
     sink: std::sync::Arc<TraceSink>,
     joins: Vec<JoinHandle<()>>,
+    /// Iterations issued over this engine's lifetime — the step-tag
+    /// counter continues across sessions so per-step trace aggregation
+    /// (`TraceSummary::step_comm_s`) never conflates two sessions'
+    /// iterations into one bucket.
+    steps_issued: u64,
 }
 
 impl Engine {
@@ -122,6 +143,27 @@ impl Engine {
 
         let world = layout.world_size();
         let sink = TraceSink::new();
+        if let Some(pricing) = &cfg.pricing {
+            // A pricer for a different layout or architecture would
+            // silently misprice every record and model-time clock (wrong
+            // group stages, wrong weight/KV streams) — reject the
+            // mismatch here instead.
+            if pricing.placement.layout != layout {
+                anyhow::bail!(
+                    "pricing cost model is for layout {} but the engine runs {}",
+                    pricing.placement.layout.label(),
+                    layout.label()
+                );
+            }
+            if pricing.arch != cfg.arch {
+                anyhow::bail!(
+                    "pricing cost model is for {} but the engine serves {}",
+                    pricing.arch.name,
+                    cfg.arch.name
+                );
+            }
+            sink.set_pricer(pricing.clone());
+        }
         let comm = CommWorld::new(world, cfg.trace_dtype_bytes, sink.clone());
         let (out_tx, out_rx) = channel();
 
@@ -188,7 +230,7 @@ impl Engine {
             }
         }
 
-        Ok(Self { cfg, cmd_txs, out_rx, sink, joins })
+        Ok(Self { cfg, cmd_txs, out_rx, sink, joins, steps_issued: 0 })
     }
 
     /// The shared communication trace.
@@ -247,6 +289,12 @@ impl Engine {
     /// executables are fixed-shape with single-sequence KV state.
     pub fn supports_batched_decode(&self) -> bool {
         matches!(self.cfg.mode, EngineMode::Structural)
+    }
+
+    /// The cost model pricing this engine's traces (and, on structural
+    /// engines, its sessions' model-time clock), if any.
+    pub fn cost_model(&self) -> Option<&CostModel> {
+        self.cfg.pricing.as_ref()
     }
 
     /// Open an iteration-level [`Session`] over this engine: admit
@@ -381,6 +429,20 @@ mod tests {
         assert!(Engine::new(EngineConfig::structural(arch.clone(), ParallelLayout::new(3, 1)))
             .is_err());
         assert!(Engine::new(EngineConfig::structural(arch, ParallelLayout::new(1, 8))).is_err());
+    }
+
+    #[test]
+    fn engine_rejects_pricing_for_a_different_layout_or_arch() {
+        let arch = ModelArch::tiny();
+        let cfg = EngineConfig::structural(arch.clone(), ParallelLayout::new(2, 1))
+            .with_pricing(CostModel::on_cardinal(arch.clone(), ParallelLayout::new(4, 1)));
+        let err = Engine::new(cfg).unwrap_err();
+        assert!(err.to_string().contains("pricing cost model"), "{err}");
+        let cfg = EngineConfig::structural(arch, ParallelLayout::new(2, 1)).with_pricing(
+            CostModel::on_cardinal(ModelArch::llama32_3b(), ParallelLayout::new(2, 1)),
+        );
+        let err = Engine::new(cfg).unwrap_err();
+        assert!(err.to_string().contains("engine serves"), "{err}");
     }
 
     #[test]

@@ -19,12 +19,23 @@
 //! [`super::Engine::generate`] is a thin single-sequence wrapper over this
 //! API: a batch of one issues a byte-identical command/collective stream,
 //! so every trace/analyze/bench path is unchanged.
+//!
+//! **Model time.** On structural engines with a pricing
+//! [`CostModel`] attached, the session also advances a virtual-clock
+//! [`Timeline`]: every step posts its priced events (per-stage compute,
+//! TP collectives, boundary handoffs, coordinator round-trip) and reports
+//! the iteration's modeled duration in
+//! [`StepOutcome::model_latency_s`] — what the calibrated H100 testbed
+//! *would* take, deterministic for a given workload, next to the host
+//! wall-clock `latency` (which, for no-op structural compute, measures
+//! only thread scheduling).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::engine::kv::SeqId;
 use crate::runtime::tensor::argmax;
+use crate::simtime::{CostModel, Timeline};
 use crate::Result;
 
 use super::worker::WorkerCmd;
@@ -67,7 +78,9 @@ pub enum StepKind {
 pub struct StepOutcome {
     pub kind: StepKind,
     /// Monotone iteration counter (shared across prefill and decode; this
-    /// is the `step` tag on the iteration's trace records).
+    /// is the `step` tag on the iteration's trace records). Continues
+    /// across sessions on one engine, so per-step trace aggregation never
+    /// merges two sessions' iterations.
     pub step_index: u64,
     /// Sequences in this iteration's forward pass (1 for prefill, 0 for
     /// idle; this is the `batch` tag on the iteration's trace records).
@@ -76,8 +89,13 @@ pub struct StepOutcome {
     pub events: Vec<TokenEvent>,
     /// Sequences that reached `max_new_tokens` this iteration.
     pub finished: Vec<SeqId>,
-    /// Wall-clock latency of the iteration.
+    /// Wall-clock latency of the iteration (host time; for structural
+    /// no-op compute this measures thread scheduling, not serving).
     pub latency: Duration,
+    /// Modeled duration of the iteration on the priced timeline — present
+    /// on structural engines with a pricing cost model, `None` otherwise
+    /// (numeric engines report real wall time instead).
+    pub model_latency_s: Option<f64>,
 }
 
 struct ActiveSeq {
@@ -88,6 +106,13 @@ struct ActiveSeq {
     generated: usize,
 }
 
+/// The session's virtual clock: a pricing cost model plus the per-rank
+/// timeline it posts each iteration onto.
+struct ModelClock {
+    cost: CostModel,
+    timeline: Timeline,
+}
+
 /// Iteration-level view of an [`Engine`]: admitted sequences share each
 /// decode iteration (continuous batching). Created by
 /// [`Engine::session`]; dropping the session leaves the engine reusable.
@@ -96,11 +121,46 @@ pub struct Session<'e> {
     waiting_prefill: VecDeque<SequenceInput>,
     active: Vec<ActiveSeq>,
     step_index: u64,
+    model: Option<ModelClock>,
 }
 
 impl<'e> Session<'e> {
     pub fn new(engine: &'e mut Engine) -> Self {
-        Self { engine, waiting_prefill: VecDeque::new(), active: Vec::new(), step_index: 0 }
+        // Model time is a structural-engine feature: numeric engines do
+        // real compute, so their wall clocks are the meaningful latency.
+        let model = match (&engine.cfg.mode, &engine.cfg.pricing) {
+            (super::EngineMode::Structural, Some(cost)) => Some(ModelClock {
+                cost: cost.clone(),
+                timeline: Timeline::new(engine.cfg.layout.world_size()),
+            }),
+            _ => None,
+        };
+        // Step tags continue from where the engine's previous session
+        // left off, so per-step trace aggregation stays unambiguous
+        // across sessions on one engine.
+        let step_index = engine.steps_issued;
+        Self {
+            engine,
+            waiting_prefill: VecDeque::new(),
+            active: Vec::new(),
+            step_index,
+            model,
+        }
+    }
+
+    /// The model-time clock (seconds since the session opened), when this
+    /// session runs on a priced structural engine.
+    pub fn model_now(&self) -> Option<f64> {
+        self.model.as_ref().map(|m| m.timeline.max_time())
+    }
+
+    /// Advance the model clock to at least `t` (idle time — a serving
+    /// loop waiting for the next open-loop arrival). No-op without a
+    /// model clock or when the clock is already past `t`.
+    pub fn advance_model_time_to(&mut self, t: f64) {
+        if let Some(m) = &mut self.model {
+            m.timeline.advance_all_to(t);
+        }
     }
 
     /// Sequences the session is working on (admitted + decoding).
@@ -197,13 +257,16 @@ impl<'e> Session<'e> {
             events: Vec::new(),
             finished: Vec::new(),
             latency: Duration::ZERO,
+            model_latency_s: None,
         })
     }
 
     fn prefill_step(&mut self, seq: SequenceInput) -> Result<StepOutcome> {
         let step_index = self.step_index;
         self.step_index += 1;
+        self.engine.steps_issued = self.step_index;
         self.engine.sink.set_iteration(step_index, 1);
+        let prompt_len = seq.prompt.len();
         let start = Instant::now();
         // Reset clears the backend's whole KV state, so it is only safe
         // when no other sequence is mid-decode: with an empty active set it
@@ -217,6 +280,10 @@ impl<'e> Session<'e> {
         self.engine.broadcast(WorkerCmd::Prefill { tokens: seq.prompt.clone() })?;
         let logits = self.engine.recv_logits()?;
         let latency = start.elapsed();
+        let model_latency_s = self
+            .model
+            .as_mut()
+            .map(|m| m.cost.post_prefill(&mut m.timeline, prompt_len));
         let token = argmax(&logits) as i32;
         let is_last = seq.max_new_tokens == 1;
         let events = vec![TokenEvent { seq: seq.id, token, index: 0, is_last }];
@@ -232,7 +299,15 @@ impl<'e> Session<'e> {
                 generated: 1,
             });
         }
-        Ok(StepOutcome { kind: StepKind::Prefill, step_index, batch: 1, events, finished, latency })
+        Ok(StepOutcome {
+            kind: StepKind::Prefill,
+            step_index,
+            batch: 1,
+            events,
+            finished,
+            latency,
+            model_latency_s,
+        })
     }
 
     fn decode_step(&mut self) -> Result<StepOutcome> {
@@ -242,14 +317,22 @@ impl<'e> Session<'e> {
         }
         let step_index = self.step_index;
         self.step_index += 1;
+        self.engine.steps_issued = self.step_index;
         self.engine.sink.set_iteration(step_index, batch);
         let tokens: Vec<i32> = self.active.iter().map(|s| s.last_token).collect();
         let positions: Vec<usize> =
             self.active.iter().map(|s| s.prompt_len + s.generated - 1).collect();
+        // Context length each sequence decodes against this iteration
+        // (its cached tokens plus the one being written).
+        let kv_lens: Vec<usize> = positions.iter().map(|&p| p + 1).collect();
         let start = Instant::now();
         self.engine.broadcast(WorkerCmd::Decode { tokens, positions })?;
         let logits = self.engine.recv_logits()?;
         let latency = start.elapsed();
+        let model_latency_s = self
+            .model
+            .as_mut()
+            .map(|m| m.cost.post_decode(&mut m.timeline, &kv_lens));
         let next = batched_argmax(&logits, self.engine.cfg.layout.tp, batch);
         let mut events = Vec::with_capacity(batch);
         let mut finished = Vec::new();
@@ -265,7 +348,15 @@ impl<'e> Session<'e> {
             }
         }
         self.active.retain(|s| s.generated < s.max_new_tokens);
-        Ok(StepOutcome { kind: StepKind::Decode, step_index, batch, events, finished, latency })
+        Ok(StepOutcome {
+            kind: StepKind::Decode,
+            step_index,
+            batch,
+            events,
+            finished,
+            latency,
+            model_latency_s,
+        })
     }
 }
 
@@ -398,6 +489,75 @@ mod tests {
         // Prefills are tagged batch=1 and stay [S, h].
         let b1 = summary.batch_view(1, CollectiveKind::AllReduce, Stage::Prefill);
         assert!(b1.count > 0);
+    }
+
+    #[test]
+    fn step_tags_continue_across_sessions_on_one_engine() {
+        let mut engine = structural_engine(2, 1);
+        {
+            let mut s = engine.session();
+            s.admit(seq(0, 8, 2)).unwrap();
+            while !s.is_idle() {
+                s.step().unwrap();
+            }
+        }
+        let mut s = engine.session();
+        s.admit(seq(1, 8, 1)).unwrap();
+        let out = s.step().unwrap();
+        assert_eq!(out.step_index, 2, "second session continues the engine counter");
+        drop(s);
+        // Per-step trace buckets stay distinct across the two sessions.
+        let summary = engine.trace().summary();
+        assert_eq!(summary.step_comm_s.len(), 3);
+        for step in 0..3u64 {
+            assert!(summary.step_modeled_comm_s(step) > 0.0, "step {step} priced");
+        }
+    }
+
+    #[test]
+    fn structural_steps_advance_the_model_clock_deterministically() {
+        let run = || {
+            let mut engine = structural_engine(2, 1);
+            let mut s = engine.session();
+            s.admit(seq(0, 8, 3)).unwrap();
+            s.admit(seq(1, 8, 3)).unwrap();
+            let mut clocks = Vec::new();
+            while !s.is_idle() {
+                let out = s.step().unwrap();
+                let dt = out.model_latency_s.expect("structural engines have model time");
+                assert!(dt > 0.0);
+                clocks.push(s.model_now().unwrap());
+            }
+            clocks
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "model time is a pure function of the workload");
+        assert!(a.windows(2).all(|w| w[1] > w[0]), "clock is monotone");
+
+        // The prefill iteration's modeled duration is the SLO simulator's
+        // prefill total for the same prompt (one pricing core).
+        let mut engine = structural_engine(2, 1);
+        let mut s = engine.session();
+        s.admit(seq(7, 8, 2)).unwrap();
+        let out = s.step().unwrap();
+        let cm = crate::simtime::CostModel::on_cardinal(
+            ModelArch::tiny(),
+            ParallelLayout::new(2, 1),
+        );
+        let closed = cm
+            .prefill_breakdown(crate::analysis::InferenceShape::new(8, 2, 2))
+            .total();
+        let dt = out.model_latency_s.unwrap();
+        assert!((dt - closed).abs() <= 1e-9 * closed, "{dt} vs {closed}");
+
+        // Idle advance never rewinds.
+        drop(s);
+        let mut s = engine.session();
+        s.advance_model_time_to(5.0);
+        assert_eq!(s.model_now(), Some(5.0));
+        s.advance_model_time_to(1.0);
+        assert_eq!(s.model_now(), Some(5.0));
     }
 
     #[test]

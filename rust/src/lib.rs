@@ -46,9 +46,17 @@
 //! - [`comm`] — an in-process NCCL-like collective library (AllReduce,
 //!   AllGather, Gather, Send/Recv) with built-in tracing.
 //! - [`cluster`] — node/GPU topology and the α–β link model (NVLink vs
-//!   InfiniBand NDR400).
-//! - [`perfmodel`] — H100 roofline compute model + SLO simulator that
-//!   regenerates the paper's latency figures (TTFT / TPOT / E2E).
+//!   InfiniBand NDR400), including a two-level hierarchical AllReduce for
+//!   node-spanning groups.
+//! - [`simtime`] — the virtual-clock cost engine: one shared collective
+//!   algebra ([`simtime::algebra`]), the [`simtime::CostModel`] pricing
+//!   core (closed-form phase breakdowns, per-record trace pricing,
+//!   per-iteration timeline posting) and per-rank [`simtime::Timeline`]
+//!   clocks. The SLO simulator, the priced trace, and model-time serving
+//!   are all views over this one core.
+//! - [`perfmodel`] — H100 roofline compute model + SLO simulator (a thin
+//!   closed-form view over `simtime`) that regenerates the paper's
+//!   latency figures (TTFT / TPOT / E2E).
 //! - [`runtime`] — PJRT artifact loading and execution (`xla` crate); the
 //!   AOT bridge from the JAX/Pallas build path.
 //! - [`engine`] — the distributed inference engine: TP/PP/hybrid worker
@@ -60,7 +68,10 @@
 //! - [`server`] — request router, iteration-level continuous-batching
 //!   scheduler (prompt-footprint admission, on-demand KV growth,
 //!   `max_batch` concurrency, Poisson arrivals), SLO metrics with
-//!   p50/p95/p99 TTFT/TPOT/E2E.
+//!   p50/p95/p99 TTFT/TPOT/E2E — in *wall time* (host clocks; the real
+//!   latency of numeric PJRT serving) and, on priced structural engines,
+//!   *model time* (the virtual-clock seconds the calibrated testbed would
+//!   take — deterministic for a fixed workload and arrival seed).
 //! - [`report`] — renders paper tables/figures side-by-side with our
 //!   measured + analytical values.
 //!
@@ -77,6 +88,7 @@ pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod server;
+pub mod simtime;
 pub mod testutil;
 
 pub use plan::{Deployment, DeploymentPlan, PlanError, SloResult, VolumeReport};

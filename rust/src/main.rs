@@ -40,6 +40,8 @@ COMMANDS:
             structural (no artifacts needed): --model 3b|8b|13b|tiny  --sp N
             workload: --concurrency N (sequences per decode iteration)
                       --arrival-rate R (Poisson req/s; omit for all-at-once)
+                      --seed N (arrival PRNG seed; --arrival-rate only)
+            structural runs also report model-time SLOs (priced timeline)
   tables    Print all paper-table reproductions (Tables III-VI)
 ";
 
@@ -58,6 +60,7 @@ const SERVE_FLAGS: &[&str] = &[
     "sp",
     "concurrency",
     "arrival_rate",
+    "seed",
 ];
 const TABLES_FLAGS: &[&str] = &[];
 
@@ -218,6 +221,22 @@ fn cmd_slo(f: &Flags) -> anyhow::Result<()> {
     println!("TPOT  {:>10.2} ms", r.tpot_s * 1e3);
     println!("E2E   {:>10.2} s", r.e2e_s);
     println!("comm fraction {:>6.1}%", r.comm_fraction(plan.shape()) * 100.0);
+    // When the TP group spans nodes, quantify how much of the decode
+    // AllReduce cost is the flat-ring algorithm (what the paper's stack
+    // runs) vs the two-level hierarchical what-if.
+    if plan.layout().tp > 1 && plan.placement().tp_group_crosses_nodes(0) {
+        let cm = plan.cost_model();
+        let msg = plan.arch().hidden as f64 * plan.shape().dtype_bytes as f64;
+        let flat = cm.cal.net.allreduce(msg, plan.layout().tp, true).total();
+        let two = cm.tp_allreduce_two_level(0, msg).total();
+        println!(
+            "cross-node TP decode AllReduce: {:.1} us flat ring vs {:.1} us two-level \
+             what-if ({:.1}x headroom for a topology-aware algorithm)",
+            flat * 1e6,
+            two * 1e6,
+            flat / two
+        );
+    }
     Ok(())
 }
 
@@ -226,6 +245,13 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     let decode_len = f.num("decode_len", 16)?;
     let concurrency = f.num("concurrency", SchedulerConfig::default().max_batch)?;
     let arrival_rate = f.float("arrival_rate", 0.0)?;
+    let seed = f.num("seed", 0xC0FFEE)? as u64;
+    if f.opt("seed").is_some() && arrival_rate <= 0.0 {
+        anyhow::bail!(
+            "--seed seeds the Poisson arrival process; it needs --arrival-rate \
+             (all-at-once serving has no randomness to seed)"
+        );
+    }
 
     // --model selects structural serving at paper scale (continuous
     // batching with no artifacts); the default path serves the tiny real
@@ -288,8 +314,10 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         })
         .collect();
     let summary = if arrival_rate > 0.0 {
-        server.serve_poisson(reqs, arrival_rate, 0xC0FFEE)?
+        println!("arrivals: Poisson rate={arrival_rate} req/s seed={seed:#x} ({seed})");
+        server.serve_poisson(reqs, arrival_rate, seed)?
     } else {
+        println!("arrivals: all-at-once");
         server.serve_batch(reqs)?
     };
     println!(
@@ -297,7 +325,7 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         summary.requests, summary.completed, summary.failed, summary.total_tokens
     );
     println!(
-        "throughput {:.1} tok/s, {:.2} req/s",
+        "throughput {:.1} tok/s, {:.2} req/s (wall clock)",
         summary.tokens_per_s, summary.requests_per_s
     );
     println!(
@@ -316,6 +344,31 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         "E2E  p50/p99 {:.3}/{:.3} s (mean {:.3} s, includes queueing)",
         summary.e2e.p50_s, summary.e2e.p99_s, summary.e2e_mean_s
     );
+    if let Some(mt) = &summary.model {
+        println!(
+            "\nmodel time (priced timeline — what the calibrated H100 testbed would take):"
+        );
+        println!(
+            "  throughput {:.1} tok/s over {:.3} s makespan",
+            mt.tokens_per_s, mt.makespan_s
+        );
+        println!(
+            "  TTFT p50/p95/p99 {:.1}/{:.1}/{:.1} ms",
+            mt.ttft.p50_s * 1e3,
+            mt.ttft.p95_s * 1e3,
+            mt.ttft.p99_s * 1e3
+        );
+        println!(
+            "  TPOT p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+            mt.tpot.p50_s * 1e3,
+            mt.tpot.p95_s * 1e3,
+            mt.tpot.p99_s * 1e3
+        );
+        println!(
+            "  E2E  p50/p99 {:.3}/{:.3} s (mean {:.3} s, includes queueing)",
+            mt.e2e.p50_s, mt.e2e.p99_s, mt.e2e_mean_s
+        );
+    }
     // Batched-decode comm accounting: AllReduce volume per active batch
     // size, straight off the step/batch-tagged trace.
     let trace = server.engine().trace().summary();
@@ -326,9 +379,10 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
             let agg = trace.batch_view(b, commsim::comm::CollectiveKind::AllReduce, Stage::Decode);
             if agg.count > 0 {
                 println!(
-                    "  batch={b}: count={:<6} total={}",
+                    "  batch={b}: count={:<6} total={} modeled={:.3} ms",
                     agg.count,
-                    report::fmt_bytes(agg.total_message_bytes as f64)
+                    report::fmt_bytes(agg.total_message_bytes as f64),
+                    agg.modeled_time_s * 1e3
                 );
             }
         }
@@ -436,6 +490,21 @@ mod tests {
     fn rejects_missing_values_and_bare_words() {
         assert!(Flags::parse("trace", &args(&["--tp"]), TRACE_FLAGS).is_err());
         assert!(Flags::parse("trace", &args(&["tp", "2"]), TRACE_FLAGS).is_err());
+    }
+
+    #[test]
+    fn serve_accepts_seed_flag() {
+        let f = Flags::parse(
+            "serve",
+            &args(&["--arrival-rate", "50", "--seed", "7"]),
+            SERVE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(f.num("seed", 0xC0FFEE).unwrap(), 7);
+        assert_eq!(f.float("arrival_rate", 0.0).unwrap(), 50.0);
+        // Default when omitted: the historical constant.
+        let f = Flags::parse("serve", &args(&["--arrival-rate", "50"]), SERVE_FLAGS).unwrap();
+        assert_eq!(f.num("seed", 0xC0FFEE).unwrap(), 0xC0FFEE);
     }
 
     #[test]

@@ -79,6 +79,25 @@ impl ComputeModel {
     pub fn full_decode_time(&self, arch: &ModelArch, kv_len: usize, t: usize) -> f64 {
         self.decode_time(arch, arch.layers, kv_len, t)
     }
+
+    /// One *batched* decode iteration of `layers` layers sharded over `t`
+    /// GPUs: the weight shard streams from HBM once (shared by every
+    /// sequence in the batch), each sequence's KV cache streams at its own
+    /// context length. A singleton batch `[k]` is exactly
+    /// [`Self::decode_time`] at `kv_len = k`.
+    pub fn decode_batch_time(
+        &self,
+        arch: &ModelArch,
+        layers: usize,
+        kv_lens: &[usize],
+        t: usize,
+    ) -> f64 {
+        let weight_bytes = Self::layer_params(arch) * layers as f64 * self.dtype_bytes;
+        let per_token = (arch.kv_bytes_per_token(self.dtype_bytes as usize) as f64)
+            * (layers as f64 / arch.layers as f64);
+        let kv_bytes: f64 = kv_lens.iter().map(|&k| per_token * k as f64).sum();
+        (weight_bytes + kv_bytes) / (t as f64 * self.hbm_bw * self.eff_decode)
+    }
 }
 
 #[cfg(test)]
@@ -130,5 +149,21 @@ mod tests {
         let cm = ComputeModel::default();
         let arch = ModelArch::llama31_8b();
         assert!(cm.full_decode_time(&arch, 4096, 1) > cm.full_decode_time(&arch, 1, 1));
+    }
+
+    #[test]
+    fn batched_decode_time_shares_the_weight_stream() {
+        let cm = ComputeModel::default();
+        let arch = ModelArch::llama31_8b();
+        // Singleton batch is bitwise the single-sequence decode time.
+        assert_eq!(
+            cm.decode_batch_time(&arch, arch.layers, &[300], 2),
+            cm.decode_time(&arch, arch.layers, 300, 2)
+        );
+        // Four sequences cost more than one but far less than four
+        // independent steps (weights stream once).
+        let one = cm.decode_batch_time(&arch, arch.layers, &[256], 2);
+        let four = cm.decode_batch_time(&arch, arch.layers, &[256; 4], 2);
+        assert!(four > one && four < 4.0 * one);
     }
 }

@@ -13,7 +13,9 @@
 //!    anomalously large PP latencies are made of.
 //!
 //! [`slo`] composes the three into per-request TTFT/TPOT/E2E and the
-//! comm/compute fraction breakdown of Fig. 1.
+//! comm/compute fraction breakdown of Fig. 1 — as a thin closed-form view
+//! over the shared pricing core in [`crate::simtime`], the same
+//! `CostModel` that prices traced records and drives model-time serving.
 
 pub mod calibration;
 pub mod compute;

@@ -5,34 +5,20 @@
 //! the pipeline processes one microbatch, so stages execute strictly
 //! serially; a decode step flows through all stages then returns the
 //! sampled token to the first stage.
-
+//!
+//! The simulator is a thin closed-form view over the shared pricing core
+//! ([`crate::simtime::CostModel`]) — the same α–β/compute arithmetic that
+//! prices traced records and drives model-time serving, so the figures
+//! here and the serving SLOs can never diverge.
 
 use crate::analysis::{InferenceShape, ParallelLayout};
-use crate::cluster::{Placement, Topology};
-use crate::comm::Stage;
+use crate::cluster::Placement;
 use crate::model::ModelArch;
+use crate::simtime::CostModel;
 
 use super::calibration::Calibration;
 
-/// Time decomposition of one phase (seconds).
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct PhaseBreakdown {
-    pub compute_s: f64,
-    pub comm_s: f64,
-    pub overhead_s: f64,
-}
-
-impl PhaseBreakdown {
-    pub fn total(&self) -> f64 {
-        self.compute_s + self.comm_s + self.overhead_s
-    }
-
-    /// Communication fraction of total phase time (Fig. 1 y-axis).
-    pub fn comm_fraction(&self) -> f64 {
-        let t = self.total();
-        if t == 0.0 { 0.0 } else { self.comm_s / t }
-    }
-}
+pub use crate::simtime::PhaseBreakdown;
 
 /// Simulated SLO metrics for one request.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -57,128 +43,49 @@ impl SloReport {
 }
 
 /// The simulator: composes roofline compute, α–β collectives and calibrated
-/// framework overheads over a placement.
+/// framework overheads over a placement — stored as the one shared
+/// [`CostModel`] its closed forms read from.
 #[derive(Debug, Clone)]
 pub struct SloSimulator {
-    pub arch: ModelArch,
-    pub placement: Placement,
-    pub cal: Calibration,
+    cost: CostModel,
 }
 
 impl SloSimulator {
     pub fn new(arch: ModelArch, placement: Placement) -> Self {
-        Self { arch, placement, cal: Calibration::default() }
+        Self { cost: CostModel::new(arch, placement, Calibration::default()) }
     }
 
     pub fn with_calibration(mut self, cal: Calibration) -> Self {
-        self.cal = cal;
+        self.cost.cal = cal;
         self
     }
 
     /// Convenience: place a layout on the paper's 4-GPU-node topology with
-    /// just enough nodes.
+    /// just enough nodes — the same placement rule every structural
+    /// engine's default pricer uses ([`CostModel::on_cardinal`]).
     pub fn on_cardinal(arch: ModelArch, layout: ParallelLayout) -> crate::Result<Self> {
-        let nodes = layout.world_size().div_ceil(4).max(1);
-        let placement = Placement::new(Topology::cardinal(nodes), layout)?;
-        Ok(Self::new(arch, placement))
+        Ok(Self { cost: CostModel::on_cardinal(arch, layout) })
     }
 
-    fn layout(&self) -> ParallelLayout {
-        self.placement.layout
-    }
-
-    /// Per-step communication time of stage `s` over a `window`-token
-    /// message (TP collectives + boundary p2p wire time).
-    fn stage_comm(&self, s: usize, window: usize, stage: Stage) -> f64 {
-        let (t, p) = (self.layout().tp, self.layout().pp);
-        let b = self.cal.compute.dtype_bytes;
-        let h = self.arch.hidden as f64;
-        let msg = window as f64 * h * b;
-        let crosses = self.placement.tp_group_crosses_nodes(s);
-        let net = &self.cal.net;
-        let mut time = 0.0;
-
-        if t > 1 {
-            let mut ars = 2 * self.arch.stage_layers(p, s);
-            if s == 0 {
-                ars += 1; // vocab-parallel embedding
-            }
-            time += ars as f64 * net.allreduce(msg, t, crosses).total();
-            if p > 1 && s > 0 {
-                time += 2.0 * net.allgather(msg, t, crosses).total();
-            }
-            if s == p - 1 {
-                // Logits gather of v/t slices, once per sampled token; the
-                // prefill step samples exactly one token too.
-                let slice = (self.arch.vocab / t) as f64 * b;
-                let _ = stage;
-                time += net.gather(slice, t, crosses).total();
-            }
-        }
-        if p > 1 && s < p - 1 {
-            let cross = self.placement.pp_boundary_crosses_nodes(s);
-            let slice = msg / t as f64;
-            time += 2.0 * net.p2p(slice, cross).total();
-        }
-        time
-    }
-
-    /// Framework handoff overhead (per step) for pipeline boundaries,
-    /// including the sampled-token return hop to stage 0.
-    fn decode_handoff_overhead(&self) -> f64 {
-        let p = self.layout().pp;
-        if p <= 1 {
-            return 0.0;
-        }
-        let t = self.layout().tp;
-        let mut crossings = self.placement.internode_boundaries();
-        // Return hop: last stage -> first stage.
-        let last = self.placement.global_rank(p - 1, 0);
-        let first = self.placement.global_rank(0, 0);
-        if !self.placement.topology.same_node(last, first) {
-            crossings += 1;
-        }
-        crossings as f64 * self.cal.internode_handoff(t)
+    /// The shared pricing core this simulator is a view over.
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
     }
 
     /// Prefill phase breakdown → TTFT.
     pub fn prefill(&self, shape: InferenceShape) -> PhaseBreakdown {
-        let (t, p) = (self.layout().tp, self.layout().pp);
-        let sp = shape.prefill_len;
-        let mut compute = 0.0;
-        let mut comm = 0.0;
-        for s in 0..p {
-            let layers = self.arch.stage_layers(p, s);
-            compute += self.cal.compute.prefill_time(&self.arch, layers, sp, t);
-            comm += self.stage_comm(s, sp, Stage::Prefill);
-        }
-        let mut overhead = self.cal.ttft_framework_overhead(self.layout().world_size());
-        overhead += (p - 1) as f64 * self.cal.pp_boundary_prefill_s * (t as f64).powf(
-            if p > 1 { self.cal.handoff_tp_exp } else { 0.0 },
-        );
-        PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
+        self.cost.prefill_breakdown(shape)
     }
 
     /// One decode step breakdown → TPOT.
     pub fn decode_step(&self, shape: InferenceShape) -> PhaseBreakdown {
-        let (t, p) = (self.layout().tp, self.layout().pp);
-        // Mid-generation context length for KV streaming cost.
-        let kv_len = shape.prefill_len + shape.decode_len / 2;
-        let mut compute = 0.0;
-        let mut comm = 0.0;
-        for s in 0..p {
-            let layers = self.arch.stage_layers(p, s);
-            compute += self.cal.compute.decode_time(&self.arch, layers, kv_len, t);
-            comm += self.stage_comm(s, 1, Stage::Decode);
-        }
-        let overhead = self.cal.step_overhead_s + self.decode_handoff_overhead();
-        PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
+        self.cost.decode_step_breakdown(shape)
     }
 
     /// Full-request SLO metrics.
     pub fn simulate(&self, shape: InferenceShape) -> SloReport {
-        let prefill = self.prefill(shape);
-        let decode_step = self.decode_step(shape);
+        let prefill = self.cost.prefill_breakdown(shape);
+        let decode_step = self.cost.decode_step_breakdown(shape);
         let steps = (shape.decode_len - 1) as f64;
         let ttft = prefill.total();
         let tpot = decode_step.total();

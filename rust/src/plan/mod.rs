@@ -32,11 +32,12 @@ use crate::analysis::{
 };
 use crate::cluster::{Placement, Topology};
 use crate::comm::{Stage, TraceSummary};
-use crate::engine::{Engine, EngineConfig};
+use crate::engine::{Engine, EngineConfig, EngineMode};
 use crate::model::{ModelArch, DTYPE_BYTES_BF16, DTYPE_BYTES_F32};
 use crate::perfmodel::{Calibration, SloReport, SloSimulator};
 use crate::runtime::ArtifactStore;
 use crate::server::{SchedulerConfig, Server};
+use crate::simtime::CostModel;
 
 /// Simulated SLO metrics returned by [`DeploymentPlan::simulate`].
 pub type SloResult = SloReport;
@@ -434,12 +435,20 @@ impl DeploymentPlan {
         }
     }
 
+    /// The plan's pricing core: the α–β/compute cost model over this
+    /// placement and calibration — what `simulate()` reads closed forms
+    /// from and what `trace()`/`engine()`/`server()` price records and
+    /// model-time clocks with.
+    pub fn cost_model(&self) -> CostModel {
+        CostModel::new(self.arch.clone(), self.placement.clone(), self.calibration)
+    }
+
     /// Run the structural engine over the plan's workload and return the
-    /// measured collective stream. Always structural (the paper's
-    /// measurement mode) regardless of attached artifacts.
+    /// measured collective stream (priced: every record carries modeled
+    /// α–β seconds). Always structural (the paper's measurement mode)
+    /// regardless of attached artifacts.
     pub fn trace(&self) -> crate::Result<TraceSummary> {
-        let mut engine =
-            Engine::new(EngineConfig::structural(self.arch.clone(), self.layout()))?;
+        let mut engine = Engine::new(self.structural_config())?;
         engine.generate(&vec![0i32; self.shape.prefill_len], self.shape.decode_len)?;
         Ok(engine.trace().summary())
     }
@@ -452,13 +461,30 @@ impl DeploymentPlan {
     }
 
     /// Build a live engine: numeric (PJRT, tiny model) when artifacts are
-    /// attached, structural (paper-scale, no-op compute) otherwise.
+    /// attached, structural (paper-scale, no-op compute) otherwise. Both
+    /// carry the plan's cost model, pricing every traced collective;
+    /// structural engines additionally drive a model-time session clock
+    /// (numeric serving keeps wall clocks as its primary latency).
     pub fn engine(&self) -> crate::Result<Engine> {
         let cfg = match &self.artifacts {
-            Some(store) => EngineConfig::numeric(store.clone(), self.layout()),
-            None => EngineConfig::structural(self.arch.clone(), self.layout()),
+            Some(store) => EngineConfig::numeric(store.clone(), self.layout())
+                .with_pricing(self.cost_model()),
+            None => self.structural_config(),
         };
         Engine::new(cfg)
+    }
+
+    /// Structural engine config priced with this plan's own cost model
+    /// (not the on-cardinal default `EngineConfig::structural` would
+    /// build and immediately discard).
+    fn structural_config(&self) -> EngineConfig {
+        EngineConfig {
+            arch: self.arch.clone(),
+            layout: self.layout(),
+            mode: EngineMode::Structural,
+            trace_dtype_bytes: DTYPE_BYTES_BF16,
+            pricing: Some(self.cost_model()),
+        }
     }
 
     /// Build a full serving stack — iteration-level continuous-batching

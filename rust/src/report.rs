@@ -112,7 +112,14 @@ pub fn comparison_table(
     }
     render_table(
         title,
-        &["Operation", "Count (analytical)", "Shape (analytical)", "Count (measured)", "Shape (measured)", "Status"],
+        &[
+            "Operation",
+            "Count (analytical)",
+            "Shape (analytical)",
+            "Count (measured)",
+            "Shape (measured)",
+            "Status",
+        ],
         &rows,
     )
 }

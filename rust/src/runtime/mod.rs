@@ -91,8 +91,9 @@ impl ArtifactStore {
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let meta_path = dir.join("meta.txt");
-        let text = std::fs::read_to_string(&meta_path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", meta_path.display()))?;
+        let text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", meta_path.display())
+        })?;
         let meta = ArtifactMeta::parse(&text)?;
         Ok(Self { dir, meta })
     }
@@ -250,7 +251,10 @@ mod tests {
             store.hlo_path("attn", Phase::Decode, 2),
             PathBuf::from("/tmp/a/attn_decode_t2.hlo.txt")
         );
-        assert_eq!(store.full_path(Phase::Prefill), PathBuf::from("/tmp/a/full_prefill_t1.hlo.txt"));
+        assert_eq!(
+            store.full_path(Phase::Prefill),
+            PathBuf::from("/tmp/a/full_prefill_t1.hlo.txt")
+        );
         let (bin, manifest) = store.shard_paths(4, 3);
         assert!(bin.ends_with("weights_t4_rank3.bin"));
         assert!(manifest.ends_with("weights_t4_rank3.manifest"));

@@ -1,7 +1,31 @@
 //! Per-request SLO metrics and aggregation (paper §II.A: TTFT, TPOT,
 //! throughput; §V.C evaluates these across parallelism layouts).
+//!
+//! Every latency appears in up to two clocks: **wall time** (what the host
+//! actually took — the meaningful number for numeric PJRT serving) and
+//! **model time** (the priced-timeline seconds the calibrated testbed
+//! would take — the meaningful number for structural serving, where
+//! wall clocks only measure thread scheduling). Model-time fields are
+//! `Option`s populated when the engine carries a pricing cost model.
 
 use std::time::Duration;
+
+/// Model-time (priced virtual clock) latencies of one served request —
+/// present when the serving engine runs with a pricing cost model
+/// (structural plans). Deterministic for a fixed workload and seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelRequestTimes {
+    /// Model-time queue wait before admission.
+    pub queue_s: f64,
+    /// Model-time to first token, excluding queueing.
+    pub ttft_s: f64,
+    /// Mean model time per output token after the first.
+    pub tpot_s: f64,
+    /// Model-time end-to-end latency including queueing.
+    pub e2e_s: f64,
+    /// Model clock at the request's last token (for makespan accounting).
+    pub finished_at_s: f64,
+}
 
 /// SLO record of one served request.
 #[derive(Debug, Clone)]
@@ -17,6 +41,10 @@ pub struct RequestMetrics {
     pub tpot_s: f64,
     /// End-to-end latency including queueing.
     pub e2e_s: f64,
+    /// Model-time latencies from the priced timeline (structural serving);
+    /// `None` on unpriced engines and on requests rejected before
+    /// admission.
+    pub model: Option<ModelRequestTimes>,
     /// Set when the request did not complete its decode span — e.g. the
     /// KV pool was exhausted mid-decode and the sequence was bailed out
     /// (`generated_tokens` counts what it produced before that).
@@ -24,7 +52,7 @@ pub struct RequestMetrics {
 }
 
 /// p50 / p95 / p99 of one latency metric, in seconds.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LatencyPercentiles {
     pub p50_s: f64,
     pub p95_s: f64,
@@ -50,6 +78,23 @@ fn nearest_rank(p: f64, len: usize) -> usize {
     rank.min(len - 1)
 }
 
+/// Model-time aggregate of a serving run (the structural analogue of the
+/// wall-clock fields of [`ServeSummary`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelServeSummary {
+    /// Model-clock span of the run: session epoch (t = 0) to the last
+    /// token's clock. Open-loop arrival offsets are inside the span —
+    /// matching the wall-clock side — so low-rate Poisson runs include
+    /// their pre-arrival idle time here and in `tokens_per_s`.
+    pub makespan_s: f64,
+    /// Generated tokens per model-time second.
+    pub tokens_per_s: f64,
+    pub ttft: LatencyPercentiles,
+    pub tpot: LatencyPercentiles,
+    pub e2e: LatencyPercentiles,
+    pub e2e_mean_s: f64,
+}
+
 /// Aggregate over a batch of served requests.
 #[derive(Debug, Clone, Default)]
 pub struct ServeSummary {
@@ -66,6 +111,36 @@ pub struct ServeSummary {
     pub tpot: LatencyPercentiles,
     pub e2e: LatencyPercentiles,
     pub e2e_mean_s: f64,
+    /// Model-time percentiles from the priced timeline — present when the
+    /// run served through a pricing engine (structural plans), absent on
+    /// wall-clock-only (numeric) serving.
+    pub model: Option<ModelServeSummary>,
+}
+
+/// Band filtering shared by the wall- and model-clock summaries: samples
+/// of one latency metric over requests that generated at least
+/// `min_tokens` tokens (so a request rejected before any token cannot
+/// drag p50 toward a fictitious perfect SLO). The accessor returns `None`
+/// for requests without the clock in question.
+fn banded_samples(
+    metrics: &[RequestMetrics],
+    min_tokens: usize,
+    value: impl Fn(&RequestMetrics) -> Option<f64>,
+) -> Vec<f64> {
+    metrics
+        .iter()
+        .filter(|m| m.generated_tokens >= min_tokens)
+        .filter_map(value)
+        .collect()
+}
+
+/// Mean with the empty-input convention the summaries share.
+fn mean_or_zero(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<f64>() / samples.len() as f64
+    }
 }
 
 /// Percentile over unsorted samples (nearest-rank). NaN-safe: NaN samples
@@ -86,17 +161,13 @@ impl ServeSummary {
         let total_tokens: usize = metrics.iter().map(|m| m.generated_tokens).sum();
         let failed = metrics.iter().filter(|m| m.error.is_some()).count();
         // Latency bands come from requests that actually produced the
-        // measured quantity — a request rejected before any token has
-        // placeholder 0.0 samples that would drag p50 toward a fictitious
-        // perfect SLO. E2E covers every token-producing request (a
-        // mid-decode bail consumed real wall time); requests_per_s counts
-        // completed requests only, never rejected ones.
-        let ttfts: Vec<f64> =
-            metrics.iter().filter(|m| m.generated_tokens >= 1).map(|m| m.ttft_s).collect();
-        let tpots: Vec<f64> =
-            metrics.iter().filter(|m| m.generated_tokens >= 2).map(|m| m.tpot_s).collect();
-        let e2es: Vec<f64> =
-            metrics.iter().filter(|m| m.generated_tokens >= 1).map(|m| m.e2e_s).collect();
+        // measured quantity (see `banded_samples`). E2E covers every
+        // token-producing request (a mid-decode bail consumed real wall
+        // time); requests_per_s counts completed requests only, never
+        // rejected ones.
+        let ttfts = banded_samples(metrics, 1, |m| Some(m.ttft_s));
+        let tpots = banded_samples(metrics, 2, |m| Some(m.tpot_s));
+        let e2es = banded_samples(metrics, 1, |m| Some(m.e2e_s));
         let completed = metrics.len() - failed;
         Self {
             requests: metrics.len(),
@@ -109,12 +180,38 @@ impl ServeSummary {
             ttft: LatencyPercentiles::from_samples(&ttfts),
             tpot: LatencyPercentiles::from_samples(&tpots),
             e2e: LatencyPercentiles::from_samples(&e2es),
-            e2e_mean_s: if e2es.is_empty() {
-                0.0
-            } else {
-                e2es.iter().sum::<f64>() / e2es.len() as f64
-            },
+            e2e_mean_s: mean_or_zero(&e2es),
+            model: Self::model_summary(metrics, total_tokens),
         }
+    }
+
+    /// Model-time aggregate over the requests that carry priced-timeline
+    /// latencies (same band-filtering rules as the wall-clock side).
+    fn model_summary(metrics: &[RequestMetrics], total_tokens: usize) -> Option<ModelServeSummary> {
+        if !metrics.iter().any(|m| m.model.is_some()) {
+            return None;
+        }
+        let model = |f: fn(&ModelRequestTimes) -> f64| {
+            move |m: &RequestMetrics| m.model.as_ref().map(f)
+        };
+        let ttfts = banded_samples(metrics, 1, model(|t| t.ttft_s));
+        let tpots = banded_samples(metrics, 2, model(|t| t.tpot_s));
+        let e2es = banded_samples(metrics, 1, model(|t| t.e2e_s));
+        let makespan_s = banded_samples(metrics, 1, model(|t| t.finished_at_s))
+            .into_iter()
+            .fold(0.0, f64::max);
+        Some(ModelServeSummary {
+            makespan_s,
+            tokens_per_s: if makespan_s > 0.0 {
+                total_tokens as f64 / makespan_s
+            } else {
+                0.0
+            },
+            ttft: LatencyPercentiles::from_samples(&ttfts),
+            tpot: LatencyPercentiles::from_samples(&tpots),
+            e2e: LatencyPercentiles::from_samples(&e2es),
+            e2e_mean_s: mean_or_zero(&e2es),
+        })
     }
 }
 
@@ -131,6 +228,7 @@ mod tests {
             ttft_s,
             tpot_s,
             e2e_s,
+            model: None,
             error,
         }
     }
@@ -172,6 +270,44 @@ mod tests {
         assert!((s.ttft.p50_s - 0.6).abs() < 1e-9); // rank round(0.5*9)=5 -> 6th
         assert!((s.ttft.p99_s - 1.0).abs() < 1e-9);
         assert!(s.e2e.p50_s <= s.e2e.p99_s);
+    }
+
+    #[test]
+    fn model_time_summary_aggregates_when_present() {
+        // Wall-only metrics: no model summary at all.
+        let wall_only = vec![m(0, 0.1, 0.01, 0.2, None)];
+        assert!(ServeSummary::from_metrics(&wall_only, Duration::from_secs(1)).model.is_none());
+
+        // Mixed: model percentiles come from the model clocks, wall
+        // percentiles stay on the wall clocks.
+        let metrics: Vec<RequestMetrics> = (0..4)
+            .map(|i| {
+                let mut r = m(i, 0.001, 0.0001, 0.002, None);
+                let e2e = 0.25 * (i + 1) as f64;
+                r.model = Some(ModelRequestTimes {
+                    queue_s: 0.0,
+                    ttft_s: 0.1 * (i + 1) as f64,
+                    tpot_s: 0.01,
+                    e2e_s: e2e,
+                    finished_at_s: e2e,
+                });
+                r
+            })
+            .collect();
+        let s = ServeSummary::from_metrics(&metrics, Duration::from_secs(1));
+        let mt = s.model.expect("model summary present");
+        assert!((mt.makespan_s - 1.0).abs() < 1e-12, "makespan is the last finish");
+        assert!((mt.tokens_per_s - 40.0).abs() < 1e-9, "40 tokens over 1.0 model-seconds");
+        assert!((mt.ttft.p99_s - 0.4).abs() < 1e-12);
+        assert!(mt.e2e.p50_s > s.e2e.p50_s, "model clocks dominate these wall clocks");
+        // A request with no model times (rejected at submit) does not
+        // poison the aggregation.
+        let mut metrics = metrics;
+        let mut rejected = m(9, 0.0, 0.0, 0.0, Some("queue full".into()));
+        rejected.generated_tokens = 0;
+        metrics.push(rejected);
+        let s = ServeSummary::from_metrics(&metrics, Duration::from_secs(1));
+        assert!((s.model.unwrap().ttft.p99_s - 0.4).abs() < 1e-12);
     }
 
     #[test]

@@ -19,7 +19,10 @@
 pub mod metrics;
 pub mod scheduler;
 
-pub use metrics::{percentile, LatencyPercentiles, RequestMetrics, ServeSummary};
+pub use metrics::{
+    percentile, LatencyPercentiles, ModelRequestTimes, ModelServeSummary, RequestMetrics,
+    ServeSummary,
+};
 pub use scheduler::{Request, Scheduler, SchedulerConfig};
 
 use std::collections::{HashMap, VecDeque};
@@ -29,6 +32,14 @@ use crate::engine::kv::SeqId;
 use crate::engine::{Engine, SequenceInput};
 use crate::Result;
 
+/// Model-clock bookkeeping of one in-flight request (priced engines).
+struct ModelFlight {
+    arrival_s: f64,
+    admitted_s: f64,
+    first_token_s: Option<f64>,
+    last_token_s: f64,
+}
+
 /// Per-request bookkeeping while a sequence is in the engine.
 struct InFlight {
     prompt_tokens: usize,
@@ -37,6 +48,7 @@ struct InFlight {
     first_token_at: Option<Instant>,
     last_token_at: Instant,
     generated: usize,
+    model: Option<ModelFlight>,
 }
 
 /// The serving loop: continuous-batching scheduler in front of an engine.
@@ -107,7 +119,14 @@ impl Server {
         anyhow::ensure!(rate_per_s > 0.0, "arrival rate must be positive (req/s)");
         let wall_start = Instant::now();
         let first = self.completed.len();
-        let mut state = seed | 1; // xorshift64* must not start at 0
+        // One-shot splitmix64 scramble: every seed (including 0) lands on
+        // a well-mixed xorshift64* state, and distinct seeds stay
+        // distinct (splitmix64 is a bijection). The single seed whose
+        // scrambled state would be xorshift's absorbing 0 is nudged.
+        let mut state = Self::splitmix64(seed);
+        if state == 0 {
+            state = 0x9E37_79B9_7F4A_7C15;
+        }
         let mut at = Duration::ZERO;
         let mut arrivals = VecDeque::with_capacity(requests.len());
         for r in requests {
@@ -127,20 +146,46 @@ impl Server {
         &self.completed
     }
 
+    fn splitmix64(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
     /// The iteration loop. `arrivals` are (offset-from-now, request) pairs
     /// submitted once their time comes; an empty deque serves whatever is
     /// already queued.
+    ///
+    /// On a priced structural engine the loop is a discrete-event
+    /// simulation: arrivals gate on the session's *model* clock (idle gaps
+    /// jump the clock instead of sleeping), so the model-time metrics are
+    /// a pure function of the workload — deterministic for a fixed
+    /// arrival seed, independent of host scheduling. Unpriced (numeric)
+    /// engines keep the wall-clock behaviour: arrivals gate on host time
+    /// and idle gaps really sleep.
     fn drive(&mut self, mut arrivals: VecDeque<(Duration, Request)>) -> Result<()> {
         let t0 = Instant::now();
         let mut in_flight: HashMap<SeqId, InFlight> = HashMap::new();
         let mut session = self.engine.session();
+        // Model-time arrival offsets of open-loop requests (everything
+        // submitted before drive() arrived at model t = 0).
+        let mut model_arrivals: HashMap<SeqId, f64> = HashMap::new();
+        let model_mode = session.model_now().is_some();
         loop {
             // 1. Feed arrivals whose time has come. A rejected submission
             //    (queue full under open-loop load, oversized request) fails
             //    that request, not the serving loop — everything already
             //    in flight keeps its KV and completes normally.
-            while arrivals.front().is_some_and(|(at, _)| t0.elapsed() >= *at) {
-                let (_, req) = arrivals.pop_front().expect("non-empty");
+            let arrived = |at: &Duration| {
+                if model_mode {
+                    session.model_now().expect("model mode") >= at.as_secs_f64()
+                } else {
+                    t0.elapsed() >= *at
+                }
+            };
+            while arrivals.front().is_some_and(|(at, _)| arrived(at)) {
+                let (at, req) = arrivals.pop_front().expect("non-empty");
                 let (id, prompt_tokens) = (req.id, req.prompt.len());
                 if let Err(e) = self.scheduler.submit(req) {
                     self.completed.push(RequestMetrics {
@@ -151,8 +196,11 @@ impl Server {
                         ttft_s: 0.0,
                         tpot_s: 0.0,
                         e2e_s: 0.0,
+                        model: None,
                         error: Some(e.to_string()),
                     });
+                } else if model_mode {
+                    model_arrivals.insert(id, at.as_secs_f64());
                 }
             }
 
@@ -178,10 +226,21 @@ impl Server {
                         ttft_s: 0.0,
                         tpot_s: 0.0,
                         e2e_s: queue_s,
+                        model: None,
                         error: Some(e.to_string()),
                     });
                     continue;
                 }
+                let model = session.model_now().map(|now_m| {
+                    let arrival_s = model_arrivals.remove(&id).unwrap_or(0.0);
+                    let admitted_s = now_m.max(arrival_s);
+                    ModelFlight {
+                        arrival_s,
+                        admitted_s,
+                        first_token_s: None,
+                        last_token_s: admitted_s,
+                    }
+                });
                 in_flight.insert(
                     id,
                     InFlight {
@@ -191,6 +250,7 @@ impl Server {
                         first_token_at: None,
                         last_token_at: now,
                         generated: 0,
+                        model,
                     },
                 );
             }
@@ -204,9 +264,14 @@ impl Server {
                 }
                 match arrivals.front() {
                     Some((at, _)) => {
-                        let now = t0.elapsed();
-                        if *at > now {
-                            std::thread::sleep(*at - now);
+                        if model_mode {
+                            // Discrete-event jump to the next arrival.
+                            session.advance_model_time_to(at.as_secs_f64());
+                        } else {
+                            let now = t0.elapsed();
+                            if *at > now {
+                                std::thread::sleep(*at - now);
+                            }
                         }
                         continue;
                     }
@@ -239,6 +304,7 @@ impl Server {
             // 5. One engine iteration (prefill or batched decode).
             let outcome = session.step()?;
             let now = Instant::now();
+            let now_model = session.model_now();
             for e in &outcome.events {
                 if let Some(info) = in_flight.get_mut(&e.seq) {
                     info.generated += 1;
@@ -246,6 +312,12 @@ impl Server {
                         info.first_token_at = Some(now);
                     }
                     info.last_token_at = now;
+                    if let (Some(mf), Some(tm)) = (info.model.as_mut(), now_model) {
+                        if mf.first_token_s.is_none() {
+                            mf.first_token_s = Some(tm);
+                        }
+                        mf.last_token_s = tm;
+                    }
                 }
             }
             for id in &outcome.finished {
@@ -264,6 +336,24 @@ impl Server {
         } else {
             0.0
         };
+        let model = info.model.as_ref().map(|mf| {
+            let first_s = mf.first_token_s.unwrap_or(mf.admitted_s);
+            ModelRequestTimes {
+                queue_s: mf.admitted_s - mf.arrival_s,
+                ttft_s: if mf.first_token_s.is_some() {
+                    first_s - mf.admitted_s
+                } else {
+                    0.0
+                },
+                tpot_s: if info.generated > 1 {
+                    (mf.last_token_s - first_s) / (info.generated - 1) as f64
+                } else {
+                    0.0
+                },
+                e2e_s: mf.last_token_s - mf.arrival_s,
+                finished_at_s: mf.last_token_s,
+            }
+        });
         RequestMetrics {
             request_id: id,
             prompt_tokens: info.prompt_tokens,
@@ -276,6 +366,7 @@ impl Server {
             },
             tpot_s,
             e2e_s: (info.last_token_at - info.enqueued_at).as_secs_f64(),
+            model,
             error,
         }
     }
@@ -285,16 +376,11 @@ impl Server {
 mod tests {
     use super::*;
     use crate::analysis::ParallelLayout;
-    use crate::engine::{EngineConfig, EngineMode};
+    use crate::engine::EngineConfig;
     use crate::model::ModelArch;
 
     fn tiny_server(tp: usize, pp: usize, max_batch: usize) -> Server {
-        let cfg = EngineConfig {
-            arch: ModelArch::tiny(),
-            layout: ParallelLayout::new(tp, pp),
-            mode: EngineMode::Structural,
-            trace_dtype_bytes: 2,
-        };
+        let cfg = EngineConfig::structural(ModelArch::tiny(), ParallelLayout::new(tp, pp));
         Server::new(
             Engine::new(cfg).unwrap(),
             SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 64, max_batch },
@@ -356,12 +442,7 @@ mod tests {
         // old full-span admission would have serialized them; here both
         // run, the pool runs dry mid-decode, one bails with an error and
         // the survivor finishes into the freed blocks.
-        let plan_cfg = EngineConfig {
-            arch: ModelArch::tiny(),
-            layout: ParallelLayout::new(2, 1),
-            mode: EngineMode::Structural,
-            trace_dtype_bytes: 2,
-        };
+        let plan_cfg = EngineConfig::structural(ModelArch::tiny(), ParallelLayout::new(2, 1));
         let mut srv = Server::new(
             Engine::new(plan_cfg).unwrap(),
             SchedulerConfig { kv_blocks: 8, kv_block_size: 4, max_queue: 8, max_batch: 4 },
@@ -392,5 +473,67 @@ mod tests {
         for m in srv.completed() {
             assert!(m.queue_s >= 0.0 && m.e2e_s >= m.ttft_s);
         }
+    }
+
+    #[test]
+    fn structural_serving_reports_model_time_next_to_wall_time() {
+        let mut srv = tiny_server(2, 1, 4);
+        let summary = srv.serve_batch(reqs(4, 16, 8)).unwrap();
+        let mt = summary.model.as_ref().expect("priced structural serving");
+        assert!(mt.makespan_s > 0.0);
+        assert!(mt.tokens_per_s > 0.0);
+        assert!(mt.ttft.p50_s > 0.0 && mt.tpot.p50_s > 0.0);
+        for m in srv.completed() {
+            let t = m.model.as_ref().expect("every served request carries model times");
+            assert!(t.ttft_s > 0.0, "prefill is never free in model time");
+            assert!(t.e2e_s >= t.ttft_s + t.queue_s);
+            assert!(t.finished_at_s <= mt.makespan_s + 1e-12);
+        }
+        // Single-request model TTFT with an idle server is the SLO
+        // simulator's prefill total — one pricing core end to end.
+        let mut srv = tiny_server(2, 1, 1);
+        let summary = srv.serve_batch(reqs(1, 16, 4)).unwrap();
+        let sim = crate::perfmodel::SloSimulator::on_cardinal(
+            ModelArch::tiny(),
+            ParallelLayout::new(2, 1),
+        )
+        .unwrap();
+        let ttft = sim.prefill(crate::analysis::InferenceShape::new(16, 4, 2)).total();
+        let got = summary.model.unwrap().ttft.p50_s;
+        assert!(
+            (got - ttft).abs() <= 1e-9 * ttft,
+            "served model TTFT {got} vs simulated {ttft}"
+        );
+    }
+
+    #[test]
+    fn model_time_poisson_serving_is_deterministic_for_a_seed() {
+        let run = |seed: u64| {
+            let mut srv = tiny_server(2, 1, 2);
+            let summary = srv.serve_poisson(reqs(8, 8, 6), 2000.0, seed).unwrap();
+            assert_eq!(summary.completed, 8);
+            let mt = summary.model.expect("structural poisson serving is priced");
+            let per_req: Vec<(f64, f64, f64)> = srv
+                .completed()
+                .iter()
+                .map(|m| {
+                    let t = m.model.as_ref().unwrap();
+                    (t.queue_s, t.ttft_s, t.e2e_s)
+                })
+                .collect();
+            (mt, per_req)
+        };
+        let (s1, r1) = run(42);
+        let (s2, r2) = run(42);
+        assert_eq!(s1, s2, "same seed -> bitwise-identical model summary");
+        assert_eq!(r1, r2, "same seed -> bitwise-identical per-request model times");
+        let (s3, _) = run(43);
+        assert_ne!(s1, s3, "a different seed shifts the arrival process");
+        // Seed 0 is a valid seed like any other (the scramble keeps the
+        // PRNG off its absorbing state) and serves deterministically.
+        let (z1, _) = run(0);
+        let (z2, _) = run(0);
+        assert_eq!(z1, z2);
+        assert_ne!(s1, z1, "0 and 42 are distinct arrival streams");
     }
 }

@@ -1,0 +1,80 @@
+//! Shared collective algebra — the one source of truth for ring-algorithm
+//! byte factors and step counts.
+//!
+//! Every layer that prices or accounts a collective derives from these
+//! functions: [`crate::comm::CollectiveKind::correction_factor`] (trace
+//! volume accounting), [`crate::analysis::VolumeModel`] (Eq. 1–7 closed
+//! forms) and [`crate::cluster::NetModel`] (α–β time costs) all delegate
+//! here, so the `2(d−1)/d` of a traced AllReduce, of the analytical volume
+//! model, and of the priced α–β transfer term can never drift apart.
+//!
+//! Conventions (NCCL ring algorithms, paper §V.B / [16]):
+//! - AllReduce over `d` workers: `2(d−1)` steps, `2(d−1)/d · n` bytes/GPU.
+//! - AllGather / ReduceScatter / AllToAll: `(d−1)` steps, `(d−1)/d · n`.
+//! - Gather / Send / Recv: one launch, bytes uncorrected.
+
+/// AllReduce byte factor `2(d−1)/d` (ring algorithm bytes per GPU).
+pub fn allreduce_factor(d: usize) -> f64 {
+    if d <= 1 {
+        0.0
+    } else {
+        2.0 * (d as f64 - 1.0) / d as f64
+    }
+}
+
+/// AllGather / ReduceScatter / AllToAll byte factor `(d−1)/d`.
+pub fn allgather_factor(d: usize) -> f64 {
+    if d <= 1 {
+        0.0
+    } else {
+        (d as f64 - 1.0) / d as f64
+    }
+}
+
+/// AllReduce ring step count `2(d−1)` — the α (launch latency) multiplier.
+pub fn allreduce_steps(d: usize) -> f64 {
+    if d <= 1 {
+        0.0
+    } else {
+        2.0 * (d as f64 - 1.0)
+    }
+}
+
+/// AllGather / ReduceScatter / AllToAll ring step count `(d−1)`.
+pub fn allgather_steps(d: usize) -> f64 {
+    if d <= 1 {
+        0.0
+    } else {
+        d as f64 - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_factors() {
+        assert_eq!(allreduce_factor(1), 0.0);
+        assert!((allreduce_factor(2) - 1.0).abs() < 1e-12);
+        assert!((allreduce_factor(4) - 1.5).abs() < 1e-12);
+        assert_eq!(allgather_factor(1), 0.0);
+        assert!((allgather_factor(4) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_steps() {
+        assert_eq!(allreduce_steps(1), 0.0);
+        assert_eq!(allreduce_steps(4), 6.0);
+        assert_eq!(allgather_steps(4), 3.0);
+    }
+
+    #[test]
+    fn factors_are_monotone_in_group_size() {
+        for d in 2..32usize {
+            assert!(allreduce_factor(d + 1) > allreduce_factor(d));
+            assert!(allgather_factor(d + 1) > allgather_factor(d));
+            assert!(allreduce_steps(d + 1) > allreduce_steps(d));
+        }
+    }
+}

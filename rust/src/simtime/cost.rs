@@ -1,0 +1,474 @@
+//! The cost model — one α–β/compute pricing core.
+//!
+//! [`CostModel`] bundles the three calibrated components (H100 roofline
+//! [`crate::perfmodel::ComputeModel`], α–β [`crate::cluster::NetModel`],
+//! fitted framework overheads [`Calibration`]) over a concrete
+//! [`Placement`], and prices everything the stack wants timed:
+//!
+//! - **closed forms** — [`CostModel::prefill_breakdown`] /
+//!   [`CostModel::decode_step_breakdown`] are the per-phase decompositions
+//!   the SLO simulator reports (Figs. 1, 8–10); the simulator is a thin
+//!   view over them.
+//! - **timeline posting** — [`CostModel::post_prefill`] /
+//!   [`CostModel::post_decode`] replay one engine iteration onto a
+//!   [`Timeline`]: per-stage compute, TP collectives, boundary P2P and the
+//!   coordinator round-trip, advancing per-rank virtual clocks. This is
+//!   how structural serving gets model-time SLOs under continuous
+//!   batching (the decode forms take the *actual* per-sequence KV lengths
+//!   of the batch, not the single-request midpoint).
+//! - **record pricing** — [`CostModel::price_record`] prices one traced
+//!   [`CommRecord`] (the per-op modeled seconds the trace summary
+//!   aggregates per step and batch).
+
+use crate::analysis::{InferenceShape, ParallelLayout};
+use crate::cluster::{CollectiveCost, Placement, Topology};
+use crate::comm::{CollectiveKind, CommRecord};
+use crate::model::ModelArch;
+use crate::perfmodel::Calibration;
+
+use super::timeline::Timeline;
+
+/// Time decomposition of one phase (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub overhead_s: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_s + self.overhead_s
+    }
+
+    /// Communication fraction of total phase time (Fig. 1 y-axis).
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 { 0.0 } else { self.comm_s / t }
+    }
+}
+
+/// The shared pricing core: (architecture, placement, calibration).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub arch: ModelArch,
+    pub placement: Placement,
+    pub cal: Calibration,
+    /// Per-stage node-spanning flags, derived from `placement` at
+    /// construction — the record-pricing hot path asks once per traced
+    /// collective, so this is cached instead of rebuilding the TP group.
+    stage_crosses: Vec<bool>,
+}
+
+impl CostModel {
+    pub fn new(arch: ModelArch, placement: Placement, cal: Calibration) -> Self {
+        let stage_crosses = (0..placement.layout.pp)
+            .map(|s| placement.tp_group_crosses_nodes(s))
+            .collect();
+        Self { arch, placement, cal, stage_crosses }
+    }
+
+    /// Place a layout on the paper's 4-GPU-node topology with just enough
+    /// nodes (the default every structural engine prices against).
+    pub fn on_cardinal(arch: ModelArch, layout: ParallelLayout) -> Self {
+        let nodes = layout.world_size().div_ceil(4).max(1);
+        let placement = Placement::new(Topology::cardinal(nodes), layout)
+            .expect("just-enough cardinal topology always fits");
+        Self::new(arch, placement, Calibration::default())
+    }
+
+    fn layout(&self) -> ParallelLayout {
+        self.placement.layout
+    }
+
+    /// Per-step communication time of stage `s`: `window`-token TP
+    /// collectives, `sampled`-token logits gather on the last stage, and
+    /// boundary p2p wire time (attributed to the sending stage).
+    fn stage_comm(&self, s: usize, window: usize, sampled: usize) -> f64 {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        let b = self.cal.compute.dtype_bytes;
+        let h = self.arch.hidden as f64;
+        let msg = window as f64 * h * b;
+        let crosses = self.stage_crosses[s];
+        let net = &self.cal.net;
+        let mut time = 0.0;
+
+        if t > 1 {
+            let mut ars = 2 * self.arch.stage_layers(p, s);
+            if s == 0 {
+                ars += 1; // vocab-parallel embedding
+            }
+            time += ars as f64 * net.allreduce(msg, t, crosses).total();
+            if p > 1 && s > 0 {
+                time += 2.0 * net.allgather(msg, t, crosses).total();
+            }
+            if s == p - 1 {
+                // Logits gather of v/t slices, once per sampled token (one
+                // for prefill, the active batch for a decode iteration).
+                let slice = sampled as f64 * (self.arch.vocab / t) as f64 * b;
+                time += net.gather(slice, t, crosses).total();
+            }
+        }
+        if p > 1 && s < p - 1 {
+            let cross = self.placement.pp_boundary_crosses_nodes(s);
+            let slice = msg / t as f64;
+            time += 2.0 * net.p2p(slice, cross).total();
+        }
+        time
+    }
+
+    /// Framework overhead of one prefill iteration (vLLM intake fit +
+    /// serialized pipeline-stage spin-up).
+    fn prefill_overhead(&self) -> f64 {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        let mut overhead = self.cal.ttft_framework_overhead(self.layout().world_size());
+        overhead += (p - 1) as f64 * self.cal.pp_boundary_prefill_s * (t as f64).powf(
+            if p > 1 { self.cal.handoff_tp_exp } else { 0.0 },
+        );
+        overhead
+    }
+
+    /// Framework handoff overhead (per step) for pipeline boundaries,
+    /// including the sampled-token return hop to stage 0.
+    fn decode_handoff_overhead(&self) -> f64 {
+        let p = self.layout().pp;
+        if p <= 1 {
+            return 0.0;
+        }
+        let t = self.layout().tp;
+        let mut crossings = self.placement.internode_boundaries();
+        // Return hop: last stage -> first stage.
+        let last = self.placement.global_rank(p - 1, 0);
+        let first = self.placement.global_rank(0, 0);
+        if !self.placement.topology.same_node(last, first) {
+            crossings += 1;
+        }
+        crossings as f64 * self.cal.internode_handoff(t)
+    }
+
+    /// Roofline compute and serialized comm of pipeline stage `s` during a
+    /// prefill of `prompt_len` tokens — the one per-stage formula both the
+    /// closed-form breakdown and the timeline posting consume.
+    fn prefill_stage_cost(&self, s: usize, prompt_len: usize) -> (f64, f64) {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        let layers = self.arch.stage_layers(p, s);
+        let compute = self.cal.compute.prefill_time(&self.arch, layers, prompt_len, t);
+        (compute, self.stage_comm(s, prompt_len, 1))
+    }
+
+    /// Per-stage costs of one decode iteration over `kv_lens` (weights
+    /// stream once, KV per sequence, `[B, h]` collective payloads).
+    fn decode_stage_cost(&self, s: usize, kv_lens: &[usize]) -> (f64, f64) {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        let batch = kv_lens.len();
+        let layers = self.arch.stage_layers(p, s);
+        let compute = self.cal.compute.decode_batch_time(&self.arch, layers, kv_lens, t);
+        (compute, self.stage_comm(s, batch, batch))
+    }
+
+    /// Prefill phase breakdown → TTFT (closed form; only
+    /// `shape.prefill_len` matters).
+    pub fn prefill_breakdown(&self, shape: InferenceShape) -> PhaseBreakdown {
+        let sp = shape.prefill_len;
+        let mut compute = 0.0;
+        let mut comm = 0.0;
+        for s in 0..self.layout().pp {
+            let (c, m) = self.prefill_stage_cost(s, sp);
+            compute += c;
+            comm += m;
+        }
+        let overhead = self.prefill_overhead();
+        PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
+    }
+
+    /// One single-request decode step breakdown → TPOT (closed form, at
+    /// the paper's mid-generation context length).
+    pub fn decode_step_breakdown(&self, shape: InferenceShape) -> PhaseBreakdown {
+        // Mid-generation context length for KV streaming cost.
+        let kv_len = shape.prefill_len + shape.decode_len / 2;
+        self.decode_iteration(&[kv_len])
+    }
+
+    /// One decode iteration over an active batch: `kv_lens[i]` is sequence
+    /// `i`'s current context length. Weights stream once per iteration
+    /// (shared by the batch); KV streams per sequence; collective payloads
+    /// are `[B, h]`; the logits gather carries `B` sampled tokens; the
+    /// per-step engine overhead is paid once. A batch of one at the
+    /// mid-generation context is exactly [`Self::decode_step_breakdown`].
+    pub fn decode_iteration(&self, kv_lens: &[usize]) -> PhaseBreakdown {
+        assert!(!kv_lens.is_empty(), "decode iteration needs >= 1 sequence");
+        let mut compute = 0.0;
+        let mut comm = 0.0;
+        for s in 0..self.layout().pp {
+            let (c, m) = self.decode_stage_cost(s, kv_lens);
+            compute += c;
+            comm += m;
+        }
+        let overhead = self.cal.step_overhead_s + self.decode_handoff_overhead();
+        PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
+    }
+
+    /// Replay one prefill iteration onto the timeline (per-stage compute,
+    /// TP collectives, boundary handoffs, coordinator round-trip).
+    /// Returns the iteration's model-time duration.
+    pub fn post_prefill(&self, tl: &mut Timeline, prompt_len: usize) -> f64 {
+        self.post_iteration(
+            tl,
+            |s, cm| cm.prefill_stage_cost(s, prompt_len),
+            self.prefill_overhead(),
+        )
+    }
+
+    /// Replay one decode iteration over `kv_lens` onto the timeline.
+    /// Returns the iteration's model-time duration.
+    pub fn post_decode(&self, tl: &mut Timeline, kv_lens: &[usize]) -> f64 {
+        assert!(!kv_lens.is_empty(), "decode iteration needs >= 1 sequence");
+        self.post_iteration(
+            tl,
+            |s, cm| cm.decode_stage_cost(s, kv_lens),
+            self.cal.step_overhead_s + self.decode_handoff_overhead(),
+        )
+    }
+
+    /// Walk the pipeline stages in order (one microbatch — stages are
+    /// strictly serial), posting each stage's compute and collective time
+    /// on its TP group's ranks and coupling boundaries with P2P events
+    /// (wire time is inside the sending stage's comm term). Ends with a
+    /// coordinator barrier carrying the framework overhead.
+    fn post_iteration(
+        &self,
+        tl: &mut Timeline,
+        stage_cost: impl Fn(usize, &Self) -> (f64, f64),
+        overhead_s: f64,
+    ) -> f64 {
+        let p = self.layout().pp;
+        let start = tl.max_time();
+        for s in 0..p {
+            let ranks = self.placement.tp_group(s);
+            if s > 0 {
+                let prev = self.placement.tp_group(s - 1);
+                for (&a, &b) in prev.iter().zip(ranks.iter()) {
+                    tl.post_p2p(a, b, 0.0);
+                }
+            }
+            let (compute, comm) = stage_cost(s, self);
+            for &r in &ranks {
+                tl.post_compute(r, compute);
+            }
+            tl.post_collective(&ranks, comm);
+        }
+        tl.sync_all(overhead_s);
+        tl.max_time() - start
+    }
+
+    /// What-if: price stage `s`'s TP AllReduce under the two-level
+    /// hierarchical algorithm (intra-node ReduceScatter, inter-node
+    /// AllReduce between node leaders, intra-node AllGather) on this
+    /// placement's actual node shape — the bound on what a
+    /// topology-aware algorithm could save over the measured flat ring
+    /// ([`crate::cluster::NetModel::allreduce_two_level`]). Falls back to
+    /// the flat slowest-link ring when the group does not split evenly
+    /// across its nodes; degenerates to the flat NVLink ring for
+    /// non-spanning groups.
+    pub fn tp_allreduce_two_level(&self, pp_stage: usize, n_bytes: f64) -> CollectiveCost {
+        let t = self.layout().tp;
+        let ranks = self.placement.tp_group(pp_stage);
+        // Ranks fill nodes in order, so distinct node ids are contiguous.
+        let mut nodes: Vec<usize> =
+            ranks.iter().map(|&r| self.placement.topology.node_of(r)).collect();
+        nodes.dedup();
+        let n_nodes = nodes.len();
+        if n_nodes > 1 && t % n_nodes == 0 {
+            // The hierarchical shape only exists if every node hosts
+            // exactly t / n_nodes of the group's (contiguous) ranks — a
+            // 3+1 split on 3-GPU nodes must fall back to the flat ring.
+            let g = t / n_nodes;
+            let even = ranks.chunks(g).all(|chunk| {
+                let node = self.placement.topology.node_of(chunk[0]);
+                chunk.iter().all(|&r| self.placement.topology.node_of(r) == node)
+            });
+            if even {
+                return self.cal.net.allreduce_two_level(n_bytes, g, n_nodes);
+            }
+        }
+        self.cal.net.allreduce(n_bytes, t, self.stage_crosses[pp_stage])
+    }
+
+    /// Whether the TP group owning `rank` spans nodes (cached).
+    fn group_crosses(&self, rank: usize) -> bool {
+        let tp = self.layout().tp;
+        let stage = (rank / tp).min(self.layout().pp.saturating_sub(1));
+        self.stage_crosses[stage]
+    }
+
+    /// Price one traced communication record (seconds of modeled link
+    /// time). P2P wire time is attributed to the `Send` record once —
+    /// `Recv` prices to zero so per-stream sums do not double-count the
+    /// same transfer.
+    pub fn price_record(&self, rec: &CommRecord) -> f64 {
+        if rec.op == CollectiveKind::Recv {
+            return 0.0;
+        }
+        let bytes = rec.message_bytes() as f64;
+        let total = self.placement.topology.total_gpus();
+        let crosses = match rec.op {
+            CollectiveKind::Send => match rec.peer {
+                Some(peer) if rec.rank < total && peer < total => {
+                    !self.placement.topology.same_node(rec.rank, peer)
+                }
+                _ => false,
+            },
+            _ => self.group_crosses(rec.rank.min(total.saturating_sub(1))),
+        };
+        self.cal.net.collective(rec.op, bytes, rec.group_size, crosses).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Stage;
+    use crate::model::DTYPE_BYTES_BF16;
+
+    fn shape128() -> InferenceShape {
+        InferenceShape::new(128, 128, DTYPE_BYTES_BF16)
+    }
+
+    fn cost(tp: usize, pp: usize) -> CostModel {
+        CostModel::on_cardinal(ModelArch::llama32_3b(), ParallelLayout::new(tp, pp))
+    }
+
+    #[test]
+    fn decode_step_is_the_singleton_iteration() {
+        let cm = cost(4, 1);
+        let s = shape128();
+        let kv = s.prefill_len + s.decode_len / 2;
+        assert_eq!(cm.decode_step_breakdown(s), cm.decode_iteration(&[kv]));
+    }
+
+    #[test]
+    fn batched_decode_shares_weights_but_not_kv_or_wire() {
+        let cm = cost(4, 1);
+        let one = cm.decode_iteration(&[192]);
+        let four = cm.decode_iteration(&[192, 192, 192, 192]);
+        // Compute grows (KV per sequence) but far less than 4x (weights
+        // stream once); comm grows with the [B, h] payload but keeps one
+        // launch per collective.
+        assert!(four.compute_s > one.compute_s);
+        assert!(four.compute_s < 4.0 * one.compute_s);
+        assert!(four.comm_s > one.comm_s);
+        assert!(four.comm_s < 4.0 * one.comm_s);
+        assert_eq!(four.overhead_s, one.overhead_s, "engine overhead is per iteration");
+    }
+
+    #[test]
+    fn posted_prefill_matches_closed_form() {
+        for (tp, pp) in [(2usize, 1usize), (4, 1), (1, 4), (2, 2), (8, 1), (2, 4)] {
+            let cm = cost(tp, pp);
+            let mut tl = Timeline::new(cm.placement.layout.world_size());
+            let dur = cm.post_prefill(&mut tl, 128);
+            let closed = cm.prefill_breakdown(shape128()).total();
+            assert!(
+                (dur - closed).abs() <= 1e-9 * closed.abs().max(1.0),
+                "tp={tp} pp={pp}: posted {dur} vs closed {closed}"
+            );
+            assert_eq!(tl.max_time(), dur, "first iteration starts at t=0");
+        }
+    }
+
+    #[test]
+    fn posted_decode_matches_closed_form_and_accumulates() {
+        for (tp, pp) in [(2usize, 1usize), (1, 4), (2, 2), (8, 1)] {
+            let cm = cost(tp, pp);
+            let s = shape128();
+            let kv = s.prefill_len + s.decode_len / 2;
+            let mut tl = Timeline::new(cm.placement.layout.world_size());
+            let d1 = cm.post_decode(&mut tl, &[kv]);
+            let closed = cm.decode_step_breakdown(s).total();
+            assert!(
+                (d1 - closed).abs() <= 1e-9 * closed.abs().max(1.0),
+                "tp={tp} pp={pp}: posted {d1} vs closed {closed}"
+            );
+            let before = tl.max_time();
+            let d2 = cm.post_decode(&mut tl, &[kv + 1]);
+            assert!((tl.max_time() - (before + d2)).abs() < 1e-15, "clock accumulates");
+        }
+    }
+
+    #[test]
+    fn price_record_matches_netmodel_costs() {
+        let cm = cost(4, 1); // one node: intra-node TP group
+        let rec = |op: CollectiveKind, elems: usize, peer: Option<usize>| CommRecord {
+            op,
+            stage: Stage::Decode,
+            rank: 0,
+            group_size: 4,
+            shape: vec![elems],
+            elems,
+            dtype_bytes: 2,
+            peer,
+            step: None,
+            batch: None,
+            modeled_s: 0.0,
+        };
+        let ar = cm.price_record(&rec(CollectiveKind::AllReduce, 4096, None));
+        let direct = cm.cal.net.allreduce(8192.0, 4, false).total();
+        assert!((ar - direct).abs() < 1e-15);
+        assert_eq!(cm.price_record(&rec(CollectiveKind::Recv, 4096, Some(1))), 0.0);
+        let send = cm.price_record(&rec(CollectiveKind::Send, 4096, Some(1)));
+        assert!((send - cm.cal.net.p2p(8192.0, false).total()).abs() < 1e-15);
+        assert!(cm.price_record(&rec(CollectiveKind::Gather, 1024, None)) > 0.0);
+    }
+
+    #[test]
+    fn two_level_what_if_undercuts_the_flat_spanning_ring() {
+        // TP=8 over two cardinal nodes: the hierarchical algorithm beats
+        // the flat slowest-link ring the calibration measures, but never
+        // the same group on pure NVLink.
+        let cm = cost(8, 1);
+        for bytes in [8192.0, 1.0e6, 1.0e9] {
+            let flat_ib = cm.cal.net.allreduce(bytes, 8, true).total();
+            let flat_nv = cm.cal.net.allreduce(bytes, 8, false).total();
+            let what_if = cm.tp_allreduce_two_level(0, bytes).total();
+            assert!(what_if < flat_ib, "bytes={bytes}: {what_if} vs flat IB {flat_ib}");
+            assert!(what_if >= flat_nv, "bytes={bytes}");
+        }
+        // Non-spanning groups degenerate to the flat NVLink ring.
+        let intra = cost(4, 1);
+        assert_eq!(
+            intra.tp_allreduce_two_level(0, 1.0e6),
+            intra.cal.net.allreduce(1.0e6, 4, false)
+        );
+        // An uneven split (3+1 ranks across 3-GPU nodes) has no two-level
+        // shape: fall back to the flat slowest-link ring.
+        let uneven = CostModel::new(
+            ModelArch::llama32_3b(),
+            Placement::new(Topology::new(2, 3), ParallelLayout::new(4, 1)).unwrap(),
+            crate::perfmodel::Calibration::default(),
+        );
+        assert_eq!(
+            uneven.tp_allreduce_two_level(0, 1.0e6),
+            uneven.cal.net.allreduce(1.0e6, 4, true)
+        );
+    }
+
+    #[test]
+    fn cross_node_groups_price_higher() {
+        let intra = cost(4, 1);
+        let cross = cost(8, 1); // spans two cardinal nodes
+        let rec = CommRecord {
+            op: CollectiveKind::AllReduce,
+            stage: Stage::Decode,
+            rank: 0,
+            group_size: 4,
+            shape: vec![4096],
+            elems: 4096,
+            dtype_bytes: 2,
+            peer: None,
+            step: None,
+            batch: None,
+            modeled_s: 0.0,
+        };
+        assert!(cross.price_record(&rec) > intra.price_record(&rec));
+    }
+}

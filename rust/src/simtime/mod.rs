@@ -1,0 +1,36 @@
+//! Virtual-clock discrete-cost engine — one α–β/compute pricing core.
+//!
+//! The paper's deliverable is a *predictive analytical model*: every
+//! collective and compute phase is priced, and the prices explain the
+//! TP/PP/hybrid latency trade-offs. This module is that model as a
+//! subsystem the whole stack shares:
+//!
+//! - [`algebra`] — the ring/hierarchical collective formula set (byte
+//!   factors, step counts). Trace accounting
+//!   ([`crate::comm::CollectiveKind::correction_factor`]), the Eq. 1–7
+//!   volume closed forms ([`crate::analysis::VolumeModel`]) and the α–β
+//!   time model ([`crate::cluster::NetModel`]) all delegate here.
+//! - [`CostModel`] — (architecture, placement, calibration) pricing:
+//!   closed-form phase breakdowns (what [`crate::perfmodel::SloSimulator`]
+//!   reports), per-iteration timeline posting (what structural serving
+//!   reports SLOs in), and per-record pricing (the modeled seconds on
+//!   every traced [`crate::comm::CommRecord`]).
+//! - [`Timeline`] — per-rank virtual clocks advanced by posted events
+//!   (compute, collective, P2P, barrier; plus an overlap-window
+//!   primitive for overlap-aware models — the eager-mode serving path
+//!   does not post it).
+//!
+//! **Model time vs wall time.** Structural engines execute no real GPU
+//! work, so host timestamps measure thread scheduling, not serving. Every
+//! layer that reports latency therefore carries both: wall-clock (what the
+//! host actually took — the meaningful number for numeric PJRT serving)
+//! and model time (what the calibrated H100/NVLink/IB testbed *would*
+//! take — the meaningful number for structural serving, and deterministic
+//! for a fixed workload and seed).
+
+pub mod algebra;
+mod cost;
+mod timeline;
+
+pub use cost::{CostModel, PhaseBreakdown};
+pub use timeline::Timeline;

@@ -1,0 +1,145 @@
+//! Per-rank virtual clocks — the discrete-cost engine's notion of time.
+//!
+//! A [`Timeline`] holds one monotone clock per global rank. Priced events
+//! are *posted* onto it: local compute advances one rank, a collective
+//! synchronizes its group to the latest member before advancing everyone
+//! by the op's cost (collectives are rendezvous operations in our engine —
+//! no member leaves before the slowest arrives), a P2P transfer couples a
+//! sender/receiver pair, and an overlap window advances by
+//! `max(compute, comm)` (a primitive for overlap-aware cost models; the
+//! serving path currently posts compute, collective, P2P and barrier
+//! events only — vLLM V0 eager mode does not overlap). `max_time()` is
+//! the makespan — the model-time "now" the serving layer reports SLOs in.
+
+/// Per-rank virtual clocks (seconds since the timeline's epoch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timeline {
+    clocks: Vec<f64>,
+}
+
+impl Timeline {
+    /// A timeline over `world_size` ranks, all at t = 0.
+    pub fn new(world_size: usize) -> Self {
+        assert!(world_size >= 1, "timeline needs at least one rank");
+        Self { clocks: vec![0.0; world_size] }
+    }
+
+    /// Number of ranks.
+    pub fn world_size(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// Current clock of one rank.
+    pub fn now(&self, rank: usize) -> f64 {
+        self.clocks[rank]
+    }
+
+    /// The latest rank clock — the makespan of everything posted so far.
+    pub fn max_time(&self) -> f64 {
+        self.clocks.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Local compute on one rank.
+    pub fn post_compute(&mut self, rank: usize, cost_s: f64) {
+        debug_assert!(cost_s >= 0.0);
+        self.clocks[rank] += cost_s;
+    }
+
+    /// A collective over `ranks`: every member blocks until the slowest
+    /// arrives, then all advance together by `cost_s`.
+    pub fn post_collective(&mut self, ranks: &[usize], cost_s: f64) {
+        debug_assert!(cost_s >= 0.0);
+        let sync = ranks.iter().map(|&r| self.clocks[r]).fold(0.0, f64::max);
+        for &r in ranks {
+            self.clocks[r] = sync + cost_s;
+        }
+    }
+
+    /// A point-to-point transfer: sender and receiver rendezvous (our
+    /// engine's sends block until the wire drains), then both advance by
+    /// the wire cost.
+    pub fn post_p2p(&mut self, src: usize, dst: usize, cost_s: f64) {
+        debug_assert!(cost_s >= 0.0);
+        let sync = self.clocks[src].max(self.clocks[dst]);
+        self.clocks[src] = sync + cost_s;
+        self.clocks[dst] = sync + cost_s;
+    }
+
+    /// An overlap window on one rank: compute and communication proceed
+    /// concurrently, the clock advances by the longer of the two.
+    pub fn post_overlap(&mut self, rank: usize, compute_s: f64, comm_s: f64) {
+        debug_assert!(compute_s >= 0.0 && comm_s >= 0.0);
+        self.clocks[rank] += compute_s.max(comm_s);
+    }
+
+    /// Global barrier plus `extra_s` of synchronized time: every rank
+    /// advances to the current makespan, then by `extra_s` (the
+    /// coordinator round-trip at the end of an engine iteration).
+    pub fn sync_all(&mut self, extra_s: f64) {
+        debug_assert!(extra_s >= 0.0);
+        let t = self.max_time() + extra_s;
+        for c in &mut self.clocks {
+            *c = t;
+        }
+    }
+
+    /// Advance every rank at least to `t` (idle time — e.g. a serving loop
+    /// waiting for the next open-loop arrival). Clocks already past `t`
+    /// are untouched.
+    pub fn advance_all_to(&mut self, t: f64) {
+        for c in &mut self.clocks {
+            if *c < t {
+                *c = t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_and_collective_advance_clocks() {
+        let mut tl = Timeline::new(4);
+        tl.post_compute(0, 1.0);
+        tl.post_compute(1, 3.0);
+        assert_eq!(tl.now(0), 1.0);
+        assert_eq!(tl.max_time(), 3.0);
+        // Collective syncs members 0..2 to the slowest (3.0) then adds cost.
+        tl.post_collective(&[0, 1], 0.5);
+        assert_eq!(tl.now(0), 3.5);
+        assert_eq!(tl.now(1), 3.5);
+        assert_eq!(tl.now(2), 0.0, "non-members untouched");
+    }
+
+    #[test]
+    fn p2p_couples_the_pair() {
+        let mut tl = Timeline::new(2);
+        tl.post_compute(0, 2.0);
+        tl.post_p2p(0, 1, 0.25);
+        assert_eq!(tl.now(0), 2.25);
+        assert_eq!(tl.now(1), 2.25, "receiver waits for the sender");
+    }
+
+    #[test]
+    fn overlap_takes_the_max() {
+        let mut tl = Timeline::new(1);
+        tl.post_overlap(0, 2.0, 3.0);
+        assert_eq!(tl.now(0), 3.0);
+        tl.post_overlap(0, 5.0, 1.0);
+        assert_eq!(tl.now(0), 8.0);
+    }
+
+    #[test]
+    fn sync_and_advance() {
+        let mut tl = Timeline::new(3);
+        tl.post_compute(2, 4.0);
+        tl.sync_all(1.0);
+        assert_eq!((tl.now(0), tl.now(1), tl.now(2)), (5.0, 5.0, 5.0));
+        tl.advance_all_to(4.0);
+        assert_eq!(tl.now(0), 5.0, "advance_all_to never rewinds");
+        tl.advance_all_to(6.0);
+        assert_eq!(tl.max_time(), 6.0);
+    }
+}

@@ -34,7 +34,9 @@ fn pinned_prompt(len: usize, vocab: usize) -> Vec<i32> {
 fn store() -> Option<ArtifactStore> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if !ArtifactStore::present(dir) {
-        eprintln!("skipping numeric integration test: no artifacts at {dir} (run `make artifacts`)");
+        eprintln!(
+            "skipping numeric integration test: no artifacts at {dir} (run `make artifacts`)"
+        );
         return None;
     }
     Some(ArtifactStore::open(dir).expect("artifacts present but unreadable — rebuild them"))

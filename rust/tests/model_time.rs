@@ -1,0 +1,127 @@
+//! Virtual-clock cost engine integration — the simtime redesign's
+//! acceptance suite: one pricing core drives the SLO simulator's closed
+//! forms, the priced trace, and structural model-time serving; model-time
+//! serving percentiles are a pure function of (workload, seed).
+
+use commsim::analysis::ParallelLayout;
+use commsim::comm::{CollectiveKind, Stage};
+use commsim::model::ModelArch;
+use commsim::plan::Deployment;
+use commsim::server::{Request, SchedulerConfig};
+use commsim::simtime::{CostModel, Timeline};
+
+fn plan(model: &str, tp: usize, pp: usize) -> commsim::plan::DeploymentPlan {
+    Deployment::builder().model(model).tp(tp).pp(pp).workload(128, 128).build().unwrap()
+}
+
+/// The SLO simulator and the plan's cost model are the same arithmetic:
+/// simulate() totals equal the closed-form breakdowns bit for bit, for
+/// every paper layout.
+#[test]
+fn simulator_is_a_view_over_the_cost_model() {
+    for (tp, pp) in [(2usize, 1usize), (4, 1), (8, 1), (1, 2), (1, 4), (1, 8), (2, 2), (4, 2)] {
+        let plan = plan("8b", tp, pp);
+        let cm = plan.cost_model();
+        let shape = plan.shape();
+        let r = plan.simulate();
+        assert_eq!(r.prefill, cm.prefill_breakdown(shape), "tp={tp} pp={pp}");
+        assert_eq!(r.decode_step, cm.decode_step_breakdown(shape), "tp={tp} pp={pp}");
+        assert_eq!(r.ttft_s, r.prefill.total());
+    }
+}
+
+/// A traced structural run carries modeled time on every collective
+/// record, and the per-step modeled comm time of a decode iteration
+/// matches the cost model's closed-form comm term.
+#[test]
+fn traced_records_are_priced_per_step_and_batch() {
+    let plan = plan("3b", 4, 1);
+    let summary = plan.trace().unwrap();
+    // Every AllReduce row carries modeled seconds.
+    let dec = summary.paper_view(CollectiveKind::AllReduce, Stage::Decode);
+    assert!(dec.count > 0 && dec.modeled_time_s > 0.0);
+    let pre = summary.paper_view(CollectiveKind::AllReduce, Stage::Prefill);
+    assert!(pre.modeled_time_s > dec.modeled_time_s / dec.count as f64,
+        "a prefill AllReduce outweighs one decode AllReduce");
+
+    // Step 0 is the prefill iteration; its op-deduplicated modeled comm
+    // time is the closed-form prefill comm term (single stage: every op
+    // counted once is exactly the stage's serialized comm) within float
+    // tolerance.
+    let cm = plan.cost_model();
+    let closed = cm.prefill_breakdown(plan.shape()).comm_s;
+    let step0 = summary.step_modeled_comm_s(0);
+    assert!(
+        (step0 - closed).abs() <= 1e-9 * closed,
+        "step 0 modeled comm {step0} vs closed form {closed}"
+    );
+    // Decode steps exist and are cheaper than the prefill step.
+    let step1 = summary.step_modeled_comm_s(1);
+    assert!(step1 > 0.0 && step1 < step0);
+    assert!(summary.modeled_comm_total_s() > closed);
+}
+
+/// Structural serving reports model-time SLOs through the plan facade,
+/// and a fixed Poisson seed reproduces them bitwise — on a fresh server
+/// each time (host scheduling must not leak into model time).
+#[test]
+fn structural_poisson_serving_model_time_is_seed_deterministic() {
+    let serve = |seed: u64| {
+        let plan = plan("3b", 2, 1);
+        let mut server = plan
+            .server(SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() })
+            .unwrap();
+        let reqs: Vec<Request> = (0..10u64)
+            .map(|id| Request { id, prompt: vec![0; 64], decode_len: 12 })
+            .collect();
+        let summary = server.serve_poisson(reqs, 20.0, seed).unwrap();
+        assert_eq!(summary.completed, 10);
+        summary.model.expect("structural serving is priced")
+    };
+    let a = serve(0xF00D);
+    let b = serve(0xF00D);
+    assert_eq!(a, b, "same seed, fresh server -> identical model-time summary");
+    assert!(a.ttft.p50_s > 0.0 && a.tpot.p50_s > 0.0 && a.e2e.p99_s >= a.e2e.p50_s);
+    let c = serve(0xBEEF);
+    assert_ne!(a, c, "different arrival process -> different model time");
+}
+
+/// Numeric-style wall-clock metrics stay primary when no pricing exists:
+/// an engine built without a cost model serves with `model: None`.
+#[test]
+fn unpriced_engines_serve_wall_clock_only() {
+    use commsim::engine::{Engine, EngineConfig};
+    use commsim::server::Server;
+    let mut cfg = EngineConfig::structural(ModelArch::tiny(), ParallelLayout::new(2, 1));
+    cfg.pricing = None;
+    let mut server = Server::new(
+        Engine::new(cfg).unwrap(),
+        SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 16, max_batch: 2 },
+    );
+    let summary = server
+        .serve_batch(vec![Request { id: 0, prompt: vec![0; 8], decode_len: 4 }])
+        .unwrap();
+    assert_eq!(summary.completed, 1);
+    assert!(summary.model.is_none(), "no pricing -> no model-time summary");
+    assert!(server.completed()[0].model.is_none());
+}
+
+/// The timeline's event algebra composes as the serving path relies on:
+/// iterations accumulate, idle jumps never rewind, and posting the same
+/// workload twice doubles the clock.
+#[test]
+fn timeline_composes_iterations() {
+    let cm = CostModel::on_cardinal(ModelArch::llama31_8b(), ParallelLayout::new(2, 2));
+    let mut tl = Timeline::new(4);
+    let prefill = cm.post_prefill(&mut tl, 128);
+    let d1 = cm.post_decode(&mut tl, &[129]);
+    let d2 = cm.post_decode(&mut tl, &[130]);
+    assert!(prefill > d1, "prefill dominates a decode step");
+    assert!(d1 > 0.0 && d2 >= d1, "KV growth never makes a step cheaper");
+    let end = tl.max_time();
+    assert!((end - (prefill + d1 + d2)).abs() <= 1e-9 * end);
+    // Idle jump to a later arrival, then keep serving.
+    tl.advance_all_to(end + 1.0);
+    let d3 = cm.post_decode(&mut tl, &[131]);
+    assert!((tl.max_time() - (end + 1.0 + d3)).abs() <= 1e-9 * tl.max_time());
+}

@@ -5,10 +5,12 @@
 use std::thread;
 
 use commsim::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
+use commsim::cluster::NetModel;
 use commsim::comm::{CollectiveKind, Stage, TraceSink};
 use commsim::comm::collectives::CommWorld;
 use commsim::engine::kv::KvBlockManager;
 use commsim::model::ModelArch;
+use commsim::perfmodel::Calibration;
 use commsim::runtime::tensor::HostTensor;
 use commsim::server::{percentile, Request, Scheduler, SchedulerConfig};
 use commsim::testutil::Rng;
@@ -350,6 +352,84 @@ fn prop_kv_interleaved_footprint_exact() {
         }
         assert_eq!(m.free_blocks(), total, "all blocks returned");
         assert_eq!(m.live_seqs(), 0);
+    }
+}
+
+/// Collective time costs are monotone in message size and in group size,
+/// for every op class, on both fabrics and on the calibrated constants —
+/// a bigger message or a wider group can never get cheaper.
+#[test]
+fn prop_collective_costs_monotone_in_size_and_group() {
+    let mut rng = Rng::new(0x51);
+    let models = [NetModel::default(), Calibration::default().net];
+    let ops = [
+        CollectiveKind::AllReduce,
+        CollectiveKind::AllGather,
+        CollectiveKind::Gather,
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::AllToAll,
+        CollectiveKind::Send,
+    ];
+    for _case in 0..200 {
+        let nm = models[rng.usize_in(0, 1)];
+        let op = ops[rng.usize_in(0, ops.len() - 1)];
+        let crosses = rng.usize_in(0, 1) == 1;
+        let d = rng.usize_in(2, 16);
+        let bytes = (rng.usize_in(1, 1 << 24)) as f64;
+        let bigger = bytes * (1.0 + rng.f32_unit().abs() as f64 * 8.0) + 1.0;
+        let base = nm.collective(op, bytes, d, crosses).total();
+        // Monotone in message size.
+        let grown = nm.collective(op, bigger, d, crosses).total();
+        assert!(grown >= base, "{op:?} d={d}: {bytes}B -> {bigger}B shrank {base} -> {grown}");
+        // Monotone in group size (p2p has no group dimension).
+        if op != CollectiveKind::Send {
+            let wider = nm.collective(op, bytes, d + rng.usize_in(1, 8), crosses).total();
+            assert!(wider >= base, "{op:?}: wider group got cheaper");
+        }
+        // Degenerate group is free for collectives.
+        if op != CollectiveKind::Send {
+            assert_eq!(nm.collective(op, bytes, 1, crosses).total(), 0.0);
+        }
+    }
+    // Two-level hierarchical: monotone in message size too.
+    for _case in 0..100 {
+        let nm = models[rng.usize_in(0, 1)];
+        let g = [2usize, 4, 8][rng.usize_in(0, 2)];
+        let nodes = rng.usize_in(2, 6);
+        let bytes = (rng.usize_in(1, 1 << 24)) as f64;
+        let bigger = bytes * 2.0 + 1.0;
+        assert!(
+            nm.allreduce_two_level(bigger, g, nodes).total()
+                >= nm.allreduce_two_level(bytes, g, nodes).total()
+        );
+    }
+}
+
+/// The two-level hierarchical AllReduce is sandwiched by the pure
+/// fabrics: it never beats the same group on pure NVLink and never loses
+/// to the flat ring on pure IB — for any message size and node shape, on
+/// both the default and the calibrated constants.
+#[test]
+fn prop_two_level_allreduce_between_nvlink_and_ib() {
+    let mut rng = Rng::new(0x2FAB);
+    let models = [NetModel::default(), Calibration::default().net];
+    for _case in 0..300 {
+        let nm = models[rng.usize_in(0, 1)];
+        let g = [2usize, 4, 8][rng.usize_in(0, 2)];
+        let nodes = rng.usize_in(2, 8);
+        let d = g * nodes;
+        let bytes = (rng.usize_in(1, 1 << 26)) as f64;
+        let nv = nm.allreduce(bytes, d, false).total();
+        let ib = nm.allreduce(bytes, d, true).total();
+        let two = nm.allreduce_two_level(bytes, g, nodes).total();
+        assert!(
+            two >= nv,
+            "g={g} nodes={nodes} bytes={bytes}: two-level {two} beat pure NVLink {nv}"
+        );
+        assert!(
+            two <= ib,
+            "g={g} nodes={nodes} bytes={bytes}: two-level {two} lost to pure IB {ib}"
+        );
     }
 }
 
