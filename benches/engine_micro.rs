@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
             1,
             5,
             || {
-                let r = engine.generate(&vec![0i32; 128], 16).unwrap();
+                let r = engine.generate(&[0i32; 128], 16).unwrap();
                 last_tpot = r.tpot;
             },
         );

@@ -5,7 +5,7 @@
 use commsim::analysis::ParallelLayout;
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::render_table;
+use commsim::report::{bench_json_path, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama2_13b();
@@ -48,6 +48,22 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fig10_hybrid_slo");
+        j.param("model", arch.name.as_str()).param("sp", 128usize).param("sd", 128usize);
+        for ((tp, pp), r) in &sims {
+            j.row(&[
+                ("tp", JsonValue::from(*tp)),
+                ("pp", JsonValue::from(*pp)),
+                ("ttft_s", JsonValue::from(r.ttft_s)),
+                ("tpot_s", JsonValue::from(r.tpot_s)),
+                ("e2e_s", JsonValue::from(r.e2e_s)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
 
     let r = |tp: usize, pp: usize| {
         sims.iter().find(|((t, p), _)| *t == tp && *p == pp).unwrap().1

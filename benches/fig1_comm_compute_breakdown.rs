@@ -8,7 +8,7 @@
 
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::render_table;
+use commsim::report::{bench_json_path, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
@@ -16,6 +16,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     let mut fractions = Vec::new();
+    let mut series = Vec::new();
     for (tp, pp) in layouts {
         let plan = Deployment::builder()
             .arch(arch.clone())
@@ -31,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         let compute = r.prefill.compute_s + steps * r.decode_step.compute_s;
         let comm = r.prefill.comm_s + steps * r.decode_step.comm_s;
         let overhead = r.prefill.overhead_s + steps * r.decode_step.overhead_s;
+        series.push((tp, pp, f, compute, comm, overhead, r.e2e_s));
         rows.push(vec![
             plan.layout().label(),
             format!("{:.1}%", f * 100.0),
@@ -48,6 +50,24 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fig1_comm_compute_breakdown");
+        j.param("model", arch.name.as_str()).param("sp", 128usize).param("sd", 128usize);
+        for (tp, pp, f, compute, comm, overhead, e2e) in &series {
+            j.row(&[
+                ("tp", JsonValue::from(*tp)),
+                ("pp", JsonValue::from(*pp)),
+                ("comm_fraction", JsonValue::from(*f)),
+                ("compute_s", JsonValue::from(*compute)),
+                ("comm_s", JsonValue::from(*comm)),
+                ("overhead_s", JsonValue::from(*overhead)),
+                ("e2e_s", JsonValue::from(*e2e)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
 
     // Paper's qualitative claims: TP is the most communication-bound;
     // decode-stage comm dominates; PP comm fraction is the smallest.

@@ -5,10 +5,11 @@
 use commsim::comm::{CollectiveKind, Stage};
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::{fmt_bytes, render_table};
+use commsim::report::{bench_json_path, fmt_bytes, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
+    let mut series = Vec::new();
     let mut failures = 0;
 
     for arch in ModelArch::paper_models() {
@@ -45,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         if !ok {
             failures += 1;
         }
+        series.push((arch.name.clone(), a_count, m_count, a_bytes, m_bytes));
         rows.push(vec![
             arch.name.clone(),
             a_count.to_string(),
@@ -69,6 +71,21 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fig4_tp_validation");
+        j.param("tp", 4usize).param("sp", 128usize).param("sd", 128usize);
+        for (model, a_count, m_count, a_bytes, m_bytes) in &series {
+            j.row(&[
+                ("model", JsonValue::from(model.as_str())),
+                ("analytic_count", JsonValue::from(*a_count)),
+                ("measured_count", JsonValue::from(*m_count)),
+                ("analytic_bytes", JsonValue::from(*a_bytes)),
+                ("measured_bytes", JsonValue::from(*m_bytes)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
     if failures > 0 {
         anyhow::bail!("{failures} models diverged");
     }

@@ -5,11 +5,12 @@
 use commsim::comm::{CollectiveKind, Stage};
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::{fmt_bytes, render_table};
+use commsim::report::{bench_json_path, fmt_bytes, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
     let mut rows = Vec::new();
+    let mut series = Vec::new();
     let mut failures = 0;
 
     for pp in [2usize, 4, 8] {
@@ -51,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         if !ok {
             failures += 1;
         }
+        series.push((pp, a_count, m_count, a_bytes, m_bytes));
         rows.push(vec![
             format!("PP={pp}"),
             a_count.to_string(),
@@ -75,6 +77,21 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fig5_pp_validation");
+        j.param("model", arch.name.as_str()).param("sp", 128usize).param("sd", 128usize);
+        for (pp, a_count, m_count, a_bytes, m_bytes) in &series {
+            j.row(&[
+                ("pp", JsonValue::from(*pp)),
+                ("analytic_count", JsonValue::from(*a_count)),
+                ("measured_count", JsonValue::from(*m_count)),
+                ("analytic_bytes", JsonValue::from(*a_bytes)),
+                ("measured_bytes", JsonValue::from(*m_bytes)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
     if failures > 0 {
         anyhow::bail!("{failures} degrees diverged");
     }

@@ -9,7 +9,7 @@
 use commsim::comm::{CollectiveKind, Stage};
 use commsim::model::ModelArch;
 use commsim::plan::{Deployment, DeploymentPlan};
-use commsim::report::{fmt_bytes, render_table};
+use commsim::report::{bench_json_path, fmt_bytes, render_table, BenchJson, JsonValue};
 
 fn plan_for(arch: &ModelArch, tp: usize, pp: usize) -> anyhow::Result<DeploymentPlan> {
     Ok(Deployment::builder()
@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     let mut analytic: Vec<Vec<f64>> = Vec::new();
+    let mut series = Vec::new();
     for arch in ModelArch::paper_models() {
         let mut per_layout = Vec::new();
         for (tp, pp) in layouts {
@@ -55,6 +56,7 @@ fn main() -> anyhow::Result<()> {
             let a = plan.analyze().total_bytes();
             let t = traced_volume(&plan)?;
             per_layout.push(a);
+            series.push((arch.name.clone(), tp, pp, a, t));
             rows.push(vec![
                 arch.name.clone(),
                 plan.layout().label(),
@@ -73,6 +75,22 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fig6_volume_comparison");
+        j.param("sp", 128usize).param("sd", 128usize).param("dtype_bytes", 2usize);
+        for (model, tp, pp, a, t) in &series {
+            j.row(&[
+                ("model", JsonValue::from(model.as_str())),
+                ("tp", JsonValue::from(*tp)),
+                ("pp", JsonValue::from(*pp)),
+                ("analytic_bytes", JsonValue::from(*a)),
+                ("traced_bytes", JsonValue::from(*t)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
 
     // Paper orderings.
     for (i, arch) in ModelArch::paper_models().iter().enumerate() {

@@ -17,7 +17,7 @@ use commsim::comm::{CollectiveKind, Stage};
 use commsim::engine::SequenceInput;
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::{fmt_bytes, render_table};
+use commsim::report::{bench_json_path, fmt_bytes, render_table, BenchJson, JsonValue};
 
 fn volume(arch: &ModelArch, tp: usize, pp: usize, sd: usize) -> anyhow::Result<f64> {
     let plan = Deployment::builder()
@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
     let sds = [128usize, 256, 512];
 
     let mut rows = Vec::new();
+    let mut series = Vec::new();
     for arch in ModelArch::paper_models() {
         for (tp, pp) in layouts {
             let vols: Vec<f64> = sds
@@ -42,6 +43,7 @@ fn main() -> anyhow::Result<()> {
                 .collect::<anyhow::Result<_>>()?;
             let g1 = vols[1] / vols[0];
             let g2 = vols[2] / vols[1];
+            series.push((arch.name.clone(), tp, pp, vols.clone()));
             let label = ParallelLayout::new(tp, pp).label();
             rows.push(vec![
                 arch.name.clone(),
@@ -120,6 +122,34 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\nBatch variant verified: per-iteration decode AllReduce payload is linear in B.");
+
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fig7_decode_scaling");
+        j.param("sp", 128usize).param("dtype_bytes", 2usize);
+        // Two row kinds share the file; `series` keys them so a generic
+        // per-key differ can group before comparing.
+        for (model, tp, pp, vols) in &series {
+            for (&sd, &v) in sds.iter().zip(vols.iter()) {
+                j.row(&[
+                    ("series", JsonValue::from("volume_vs_sd")),
+                    ("model", JsonValue::from(model.as_str())),
+                    ("tp", JsonValue::from(*tp)),
+                    ("pp", JsonValue::from(*pp)),
+                    ("sd", JsonValue::from(sd)),
+                    ("volume_bytes", JsonValue::from(v)),
+                ]);
+            }
+        }
+        for (&b, &per) in batches.iter().zip(per_record.iter()) {
+            j.row(&[
+                ("series", JsonValue::from("batch_allreduce")),
+                ("batch", JsonValue::from(b)),
+                ("decode_allreduce_record_bytes", JsonValue::from(per)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -9,7 +9,7 @@
 
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::render_table;
+use commsim::report::{bench_json_path, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama32_3b();
@@ -45,6 +45,21 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fig8_tp_slo");
+        j.param("model", arch.name.as_str()).param("sp", 128usize).param("sd", 128usize);
+        for (tp, r) in &sims {
+            j.row(&[
+                ("tp", JsonValue::from(*tp)),
+                ("ttft_s", JsonValue::from(r.ttft_s)),
+                ("tpot_s", JsonValue::from(r.tpot_s)),
+                ("e2e_s", JsonValue::from(r.e2e_s)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
 
     let r = |tp: usize| sims.iter().find(|(t, _)| *t == tp).unwrap().1;
     // Paper's qualitative findings.

@@ -4,7 +4,7 @@
 
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::render_table;
+use commsim::report::{bench_json_path, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama32_3b();
@@ -40,6 +40,21 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fig9_pp_slo");
+        j.param("model", arch.name.as_str()).param("sp", 128usize).param("sd", 128usize);
+        for (pp, r) in &sims {
+            j.row(&[
+                ("pp", JsonValue::from(*pp)),
+                ("ttft_s", JsonValue::from(r.ttft_s)),
+                ("tpot_s", JsonValue::from(r.tpot_s)),
+                ("e2e_s", JsonValue::from(r.e2e_s)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
 
     let r = |pp: usize| sims.iter().find(|(p, _)| *p == pp).unwrap().1;
     // Paper's qualitative findings: latency grows with pipeline depth;

@@ -9,7 +9,7 @@
 use commsim::comm::{CollectiveKind, Stage};
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::{fmt_shape, render_table};
+use commsim::report::{bench_json_path, fmt_shape, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
     ];
 
     let mut failures = 0;
+    let mut series = Vec::new();
     for tp in [2usize, 4] {
         let plan = Deployment::builder()
             .arch(arch.clone())
@@ -36,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         // not the worker-group spawn inside engine().
         let mut engine = plan.engine()?;
         let t0 = std::time::Instant::now();
-        engine.generate(&vec![0i32; 128], 128)?;
+        engine.generate(&[0i32; 128], 128)?;
         let elapsed = t0.elapsed();
         let summary = engine.trace().summary();
         let predicted = plan.analyze();
@@ -54,6 +55,14 @@ fn main() -> anyhow::Result<()> {
             if !ok {
                 failures += 1;
             }
+            series.push((
+                tp,
+                op.label(),
+                stage.label(),
+                measured.count,
+                measured.total_message_bytes,
+                elapsed.as_secs_f64(),
+            ));
             rows.push(vec![
                 format!("{} ({})", op.label(), stage.label()),
                 pcount.to_string(),
@@ -81,6 +90,22 @@ fn main() -> anyhow::Result<()> {
             )
         );
         println!();
+    }
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("table3_tp_profile");
+        j.param("model", arch.name.as_str()).param("sp", 128usize).param("sd", 128usize);
+        for (tp, op, stage, count, bytes, run_s) in &series {
+            j.row(&[
+                ("tp", JsonValue::from(*tp)),
+                ("op", JsonValue::from(*op)),
+                ("stage", JsonValue::from(*stage)),
+                ("count", JsonValue::from(*count)),
+                ("message_bytes", JsonValue::from(*bytes)),
+                ("engine_run_s", JsonValue::from(*run_s)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
     }
     if failures > 0 {
         anyhow::bail!("{failures} rows mismatched the paper");

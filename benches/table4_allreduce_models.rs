@@ -5,7 +5,7 @@
 use commsim::comm::{CollectiveKind, Stage};
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::render_table;
+use commsim::report::{bench_json_path, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     // Paper Table IV: (model, prefill msg bytes, decode msg bytes,
@@ -17,6 +17,7 @@ fn main() -> anyhow::Result<()> {
     ];
 
     let mut rows = Vec::new();
+    let mut series = Vec::new();
     let mut failures = 0;
     for (arch, p_pre_bytes, p_dec_bytes, p_pre_count, p_dec_count) in paper {
         let plan = Deployment::builder()
@@ -36,6 +37,15 @@ fn main() -> anyhow::Result<()> {
         if !ok {
             failures += 1;
         }
+        series.push((
+            arch.name.clone(),
+            m_pre_bytes,
+            m_dec_bytes,
+            pre.count,
+            dec.count,
+            pre.modeled_time_s,
+            dec.modeled_time_s,
+        ));
         rows.push(vec![
             arch.name.clone(),
             format!("{p_pre_bytes} / {p_dec_bytes}"),
@@ -53,6 +63,23 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("table4_allreduce_models");
+        j.param("tp", 4usize).param("sp", 128usize).param("sd", 128usize);
+        for (model, pre_b, dec_b, pre_c, dec_c, pre_s, dec_s) in &series {
+            j.row(&[
+                ("model", JsonValue::from(model.as_str())),
+                ("prefill_msg_bytes", JsonValue::from(*pre_b)),
+                ("decode_msg_bytes", JsonValue::from(*dec_b)),
+                ("prefill_count", JsonValue::from(*pre_c)),
+                ("decode_count", JsonValue::from(*dec_c)),
+                ("prefill_modeled_s", JsonValue::from(*pre_s)),
+                ("decode_modeled_s", JsonValue::from(*dec_s)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
     if failures > 0 {
         anyhow::bail!("{failures} models mismatched the paper");
     }

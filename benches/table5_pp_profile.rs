@@ -4,7 +4,7 @@
 use commsim::comm::{CollectiveKind, Stage};
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::{fmt_shape, render_table};
+use commsim::report::{bench_json_path, fmt_shape, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
     ];
 
     let mut failures = 0;
+    let mut series = Vec::new();
     for pp in [2usize, 4] {
         let plan = Deployment::builder()
             .arch(arch.clone())
@@ -32,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         // not the worker-group spawn inside engine().
         let mut engine = plan.engine()?;
         let t0 = std::time::Instant::now();
-        engine.generate(&vec![0i32; 128], 128)?;
+        engine.generate(&[0i32; 128], 128)?;
         let elapsed = t0.elapsed();
         let summary = engine.trace().summary();
         let predicted = plan.analyze();
@@ -51,6 +52,7 @@ fn main() -> anyhow::Result<()> {
             if !ok {
                 failures += 1;
             }
+            series.push((pp, op.label(), stage.label(), mcount, elapsed.as_secs_f64()));
             rows.push(vec![
                 format!("{} ({})", op.label(), stage.label()),
                 pcount.to_string(),
@@ -78,6 +80,21 @@ fn main() -> anyhow::Result<()> {
             )
         );
         println!();
+    }
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("table5_pp_profile");
+        j.param("model", arch.name.as_str()).param("sp", 128usize).param("sd", 128usize);
+        for (pp, op, stage, count, run_s) in &series {
+            j.row(&[
+                ("pp", JsonValue::from(*pp)),
+                ("op", JsonValue::from(*op)),
+                ("stage", JsonValue::from(*stage)),
+                ("count", JsonValue::from(*count)),
+                ("engine_run_s", JsonValue::from(*run_s)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
     }
     if failures > 0 {
         anyhow::bail!("{failures} rows mismatched the paper");

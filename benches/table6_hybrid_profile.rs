@@ -4,7 +4,7 @@
 use commsim::comm::{CollectiveKind, Stage};
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
-use commsim::report::{fmt_shape, render_table};
+use commsim::report::{bench_json_path, fmt_shape, render_table, BenchJson, JsonValue};
 
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     // the worker-group spawn inside engine().
     let mut engine = plan.engine()?;
     let t0 = std::time::Instant::now();
-    engine.generate(&vec![0i32; 128], 128)?;
+    engine.generate(&[0i32; 128], 128)?;
     let elapsed = t0.elapsed();
     let summary = engine.trace().summary();
     let predicted = plan.analyze();
@@ -72,6 +72,27 @@ fn main() -> anyhow::Result<()> {
             &rows,
         )
     );
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("table6_hybrid_profile");
+        j.param("model", arch.name.as_str())
+            .param("tp", 2usize)
+            .param("pp", 2usize)
+            .param("sp", 128usize)
+            .param("sd", 128usize)
+            .param("engine_run_s", elapsed.as_secs_f64());
+        for (stage, op, _pcount, _pshape) in paper {
+            let measured = summary.paper_view(*op, *stage);
+            j.row(&[
+                ("op", JsonValue::from(op.label())),
+                ("stage", JsonValue::from(stage.label())),
+                ("count", JsonValue::from(measured.count)),
+                ("message_bytes", JsonValue::from(measured.total_message_bytes)),
+                ("modeled_s", JsonValue::from(measured.modeled_time_s)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
     if failures > 0 {
         anyhow::bail!("{failures} rows mismatched the paper");
     }

@@ -1,0 +1,143 @@
+//! End-to-end fleet-serving driver (the fleet analogue of
+//! `serve_e2e -- structural`, and the CI fleet smoke test).
+//!
+//! Three checks on the model clock, all structural (no artifacts):
+//!
+//! 1. **Horizontal scaling** — at a fixed Poisson arrival rate, a
+//!    2-replica fleet must beat a single replica on model-time p95 E2E
+//!    (queueing and decode-batch depth both halve).
+//! 2. **Determinism** — re-running the same spec, workload, and seed
+//!    reproduces the model-time summary bitwise.
+//! 3. **Disaggregation** — a prefill-TP4 / decode-PP4 split serves the
+//!    same workload; every request ships exactly the KV bytes
+//!    `analysis::disagg::DisaggregationModel` predicts, priced through
+//!    the α–β link model (the handoff wire time is on the request's
+//!    timeline).
+
+use commsim::analysis::{DisaggregationModel, InferenceShape, ParallelLayout};
+use commsim::fleet::{FleetSpec, FleetSummary, RouterPolicy};
+use commsim::plan::Deployment;
+use commsim::report::fmt_bytes;
+use commsim::workload::{ArrivalProcess, LengthDist, WorkloadSpec};
+
+fn print_summary(label: &str, s: &FleetSummary) {
+    println!(
+        "[{label}] {} requests ({} ok, {} failed) — {:.1} tok/s over {:.3} s makespan",
+        s.requests, s.completed, s.failed, s.model.tokens_per_s, s.model.makespan_s
+    );
+    println!(
+        "  TTFT p50/p95 : {:.2} / {:.2} ms   TPOT p50/p95 : {:.3} / {:.3} ms",
+        s.model.ttft.p50_s * 1e3,
+        s.model.ttft.p95_s * 1e3,
+        s.model.tpot.p50_s * 1e3,
+        s.model.tpot.p95_s * 1e3
+    );
+    println!(
+        "  E2E  p50/p95 : {:.4} / {:.4} s (mean {:.4} s, includes queueing)",
+        s.model.e2e.p50_s, s.model.e2e.p95_s, s.model.e2e_mean_s
+    );
+    for r in &s.replicas {
+        println!(
+            "  {:<28} assigned={:<3} peak depth={:<3} tokens={}",
+            r.label, r.assigned, r.max_depth, r.tokens
+        );
+    }
+    if s.kv_transfer_bytes > 0.0 {
+        println!(
+            "  KV handoff   : {} total, {:.3} ms wire time",
+            fmt_bytes(s.kv_transfer_bytes),
+            s.kv_transfer_s * 1e3
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let (sp, sd) = (32usize, 16usize);
+    let requests = 32usize;
+    let rate = 150.0;
+    let seed = 0xF1EE7u64;
+    let plan = Deployment::builder().model("8b").tp(2).workload(sp, sd).build()?;
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(rate),
+        prompt: LengthDist::Fixed(sp),
+        decode: LengthDist::Fixed(sd),
+        requests,
+    };
+    println!(
+        "fleet e2e: {} — {requests} requests, Poisson {rate}/s, seed {seed:#x}\n",
+        plan.label()
+    );
+
+    // --- 1. horizontal scaling: 2 replicas vs 1 at fixed load ----------
+    let one = plan.fleet(1)?.simulate(&workload, seed)?;
+    let two = plan
+        .fleet(2)?
+        .with_router(RouterPolicy::LeastOutstandingTokens)
+        .simulate(&workload, seed)?;
+    print_summary("1 replica ", &one);
+    print_summary("2 replicas", &two);
+    anyhow::ensure!(
+        one.completed == requests && two.completed == requests,
+        "all requests must complete"
+    );
+    anyhow::ensure!(
+        two.model.e2e.p95_s < one.model.e2e.p95_s,
+        "2 replicas must beat 1 on model-time p95 E2E at fixed arrival rate \
+         ({:.4} vs {:.4} s)",
+        two.model.e2e.p95_s,
+        one.model.e2e.p95_s
+    );
+    println!(
+        "\nscaling OK: p95 E2E {:.4} s -> {:.4} s ({:.2}x)",
+        one.model.e2e.p95_s,
+        two.model.e2e.p95_s,
+        one.model.e2e.p95_s / two.model.e2e.p95_s
+    );
+
+    // --- 2. determinism ------------------------------------------------
+    let again = plan
+        .fleet(2)?
+        .with_router(RouterPolicy::LeastOutstandingTokens)
+        .simulate(&workload, seed)?;
+    anyhow::ensure!(
+        again.model == two.model,
+        "same spec + workload + seed must reproduce the model summary bitwise"
+    );
+    println!("determinism OK: identical model-time summary on re-run");
+
+    // --- 3. disaggregated prefill/decode pools -------------------------
+    let prefill = Deployment::builder().model("8b").tp(4).workload(sp, sd).build()?;
+    let decode = Deployment::builder().model("8b").pp(4).workload(sp, sd).build()?;
+    let disagg = FleetSpec::disaggregated(&prefill, 1, &decode, 1)?
+        .simulate(&workload, seed)?;
+    println!();
+    print_summary("disaggregated", &disagg);
+    anyhow::ensure!(disagg.completed == requests, "disagg serves everything");
+    let model = DisaggregationModel::new(
+        plan.arch().clone(),
+        ParallelLayout::new(4, 1),
+        ParallelLayout::new(1, 4),
+    );
+    let expect = model.volume(InferenceShape::new(sp, sd, 2)).kv_transfer;
+    for m in &disagg.per_request {
+        anyhow::ensure!(
+            m.kv_transfer_bytes == expect,
+            "request {} shipped {} KV bytes, DisaggregationModel predicts {expect}",
+            m.request_id,
+            m.kv_transfer_bytes
+        );
+        anyhow::ensure!(m.kv_transfer_s > 0.0, "KV handoff wire time is priced");
+    }
+    anyhow::ensure!(
+        disagg.total_tokens == requests * sd,
+        "disaggregation serves the same token budget"
+    );
+    println!(
+        "\ndisaggregation OK: {} KV bytes/request (= Sp x kv_bytes_per_token), \
+         priced on the alpha-beta link model",
+        fmt_bytes(expect)
+    );
+
+    println!("\nfleet_e2e OK");
+    Ok(())
+}

@@ -152,7 +152,7 @@ impl TraceSink {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.records.lock().expect("sink poisoned").is_empty()
     }
 
     pub fn clear(&self) {

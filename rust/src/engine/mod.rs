@@ -393,7 +393,7 @@ mod tests {
     fn structural_pp_trace_matches_table5_pattern() {
         let arch = ModelArch::tiny(); // 4 layers
         let mut e = structural_engine(arch.clone(), 1, 2);
-        let r = e.generate(&vec![0i32; 16], 8).unwrap();
+        let r = e.generate(&[0i32; 16], 8).unwrap();
         assert_eq!(r.tokens.len(), 8);
         let s = e.trace().summary();
         // (p-1) * 2 tensors per step; prefill 1 step, decode 7 steps.
@@ -409,7 +409,7 @@ mod tests {
     fn structural_hybrid_trace_matches_table6_pattern() {
         let arch = ModelArch::tiny(); // L=4 -> per stage 2L/p = 4, +1 embed
         let mut e = structural_engine(arch.clone(), 2, 2);
-        e.generate(&vec![0i32; 16], 8).unwrap();
+        e.generate(&[0i32; 16], 8).unwrap();
         let s = e.trace().summary();
         // Stage-0 ranks: 2*2+1 = 5 AllReduce prefill.
         assert_eq!(s.paper_view(CollectiveKind::AllReduce, Stage::Prefill).count, 5);
@@ -448,10 +448,10 @@ mod tests {
     #[test]
     fn consecutive_requests_are_isolated() {
         let mut e = structural_engine(ModelArch::tiny(), 2, 1);
-        e.generate(&vec![0i32; 8], 4).unwrap();
+        e.generate(&[0i32; 8], 4).unwrap();
         let first = e.trace().len();
         e.trace().clear();
-        e.generate(&vec![0i32; 8], 4).unwrap();
+        e.generate(&[0i32; 8], 4).unwrap();
         assert_eq!(e.trace().len(), first, "same request -> same trace size");
     }
 }

@@ -101,6 +101,10 @@ pub struct StepOutcome {
 struct ActiveSeq {
     id: SeqId,
     prompt_len: usize,
+    /// Tokens already cached for the sequence before its prompt (a
+    /// disaggregated decode pool receives the prefill pool's KV): decode
+    /// positions — and therefore priced context lengths — start past it.
+    context: usize,
     max_new_tokens: usize,
     last_token: i32,
     generated: usize,
@@ -118,7 +122,9 @@ struct ModelClock {
 /// [`Engine::session`]; dropping the session leaves the engine reusable.
 pub struct Session<'e> {
     engine: &'e mut Engine,
-    waiting_prefill: VecDeque<SequenceInput>,
+    /// Admitted-but-not-prefilled sequences, each with its cached-context
+    /// token count (0 for ordinary admissions).
+    waiting_prefill: VecDeque<(SequenceInput, usize)>,
     active: Vec<ActiveSeq>,
     step_index: u64,
     model: Option<ModelClock>,
@@ -188,18 +194,35 @@ impl<'e> Session<'e> {
     /// (block admission/growth) is the scheduler's job — the session only
     /// drives execution.
     pub fn admit(&mut self, seq: SequenceInput) -> Result<()> {
+        self.admit_with_context(seq, 0)
+    }
+
+    /// Admit a sequence whose first `cached_tokens` tokens are already in
+    /// the KV cache — the disaggregated decode pool's intake, where the
+    /// prompt is just the handed-off first token but every decode
+    /// iteration must be priced against the shipped prefill context.
+    /// Decode positions (and the model clock's per-sequence KV lengths)
+    /// start past the cached span. Structural engines only: numeric
+    /// backends hold real KV state and cannot fake a warm cache.
+    pub fn admit_with_context(&mut self, seq: SequenceInput, cached_tokens: usize) -> Result<()> {
         if seq.prompt.is_empty() {
             anyhow::bail!("empty prompt");
         }
         if seq.max_new_tokens == 0 {
             anyhow::bail!("max_new_tokens must be >= 1");
         }
-        if self.waiting_prefill.iter().any(|s| s.id == seq.id)
+        if self.waiting_prefill.iter().any(|(s, _)| s.id == seq.id)
             || self.active.iter().any(|s| s.id == seq.id)
         {
             anyhow::bail!("sequence {} already live in this session", seq.id);
         }
         if let super::EngineMode::Numeric(store) = &self.engine.cfg.mode {
+            if cached_tokens > 0 {
+                anyhow::bail!(
+                    "cached-context admission needs a structural engine: numeric \
+                     backends hold real KV state and cannot fake a warm cache"
+                );
+            }
             if seq.prompt.len() != store.meta.prefill_len {
                 anyhow::bail!(
                     "numeric mode serves fixed prompts of {} tokens (got {})",
@@ -222,14 +245,14 @@ impl<'e> Session<'e> {
                 );
             }
         }
-        self.waiting_prefill.push_back(seq);
+        self.waiting_prefill.push_back((seq, cached_tokens));
         Ok(())
     }
 
     /// Drop a live sequence (the scheduler's bail-out path when the KV
     /// pool is exhausted mid-decode). Returns true if it was live.
     pub fn cancel(&mut self, id: SeqId) -> bool {
-        if let Some(i) = self.waiting_prefill.iter().position(|s| s.id == id) {
+        if let Some(i) = self.waiting_prefill.iter().position(|(s, _)| s.id == id) {
             self.waiting_prefill.remove(i);
             return true;
         }
@@ -244,8 +267,8 @@ impl<'e> Session<'e> {
     /// sequence if any is waiting, else one decode iteration over the
     /// active batch, else an idle no-op.
     pub fn step(&mut self) -> Result<StepOutcome> {
-        if let Some(seq) = self.waiting_prefill.pop_front() {
-            return self.prefill_step(seq);
+        if let Some((seq, context)) = self.waiting_prefill.pop_front() {
+            return self.prefill_step(seq, context);
         }
         if !self.active.is_empty() {
             return self.decode_step();
@@ -261,7 +284,7 @@ impl<'e> Session<'e> {
         })
     }
 
-    fn prefill_step(&mut self, seq: SequenceInput) -> Result<StepOutcome> {
+    fn prefill_step(&mut self, seq: SequenceInput, context: usize) -> Result<StepOutcome> {
         let step_index = self.step_index;
         self.step_index += 1;
         self.engine.steps_issued = self.step_index;
@@ -294,6 +317,7 @@ impl<'e> Session<'e> {
             self.active.push(ActiveSeq {
                 id: seq.id,
                 prompt_len: seq.prompt.len(),
+                context,
                 max_new_tokens: seq.max_new_tokens,
                 last_token: token,
                 generated: 1,
@@ -321,7 +345,7 @@ impl<'e> Session<'e> {
         self.engine.sink.set_iteration(step_index, batch);
         let tokens: Vec<i32> = self.active.iter().map(|s| s.last_token).collect();
         let positions: Vec<usize> =
-            self.active.iter().map(|s| s.prompt_len + s.generated - 1).collect();
+            self.active.iter().map(|s| s.context + s.prompt_len + s.generated - 1).collect();
         // Context length each sequence decodes against this iteration
         // (its cached tokens plus the one being written).
         let kv_lens: Vec<usize> = positions.iter().map(|&p| p + 1).collect();
@@ -561,6 +585,46 @@ mod tests {
     }
 
     #[test]
+    fn cached_context_prices_decode_against_the_shipped_kv() {
+        // A decode-pool intake (1-token prompt, 64 cached tokens) must
+        // price its decode iterations like a colocated sequence at the
+        // same total context — not like a fresh 1-token sequence.
+        let decode_step_cost = |context: usize| {
+            let mut engine = structural_engine(2, 1);
+            let mut s = engine.session();
+            s.admit_with_context(seq(0, 1, 3), context).unwrap();
+            s.step().unwrap(); // prefill (intake)
+            let d = s.step().unwrap(); // first decode iteration
+            assert_eq!(d.kind, StepKind::Decode);
+            d.model_latency_s.unwrap()
+        };
+        let cold = decode_step_cost(0);
+        let warm = decode_step_cost(64);
+        assert!(
+            warm > cold,
+            "decode against 64 cached tokens ({warm}) must outprice a cold \
+             1-token context ({cold})"
+        );
+        // And it matches the colocated equivalent: a 65-token prompt at
+        // the same decode position streams the same KV.
+        let mut engine = structural_engine(2, 1);
+        let mut s = engine.session();
+        s.admit(seq(1, 65, 3)).unwrap();
+        s.step().unwrap();
+        let colocated = s.step().unwrap().model_latency_s.unwrap();
+        assert!(
+            (warm - colocated).abs() <= 1e-12 * colocated.max(1.0),
+            "warm intake {warm} vs colocated {colocated}"
+        );
+        // Numeric-style admission rules: cached context is rejected on
+        // engines that hold real KV state (checked structurally via the
+        // duplicate-id and empty-prompt guards still applying).
+        let mut engine = structural_engine(1, 1);
+        let mut s = engine.session();
+        assert!(s.admit_with_context(seq(2, 0, 1), 8).is_err(), "empty prompt");
+    }
+
+    #[test]
     fn batched_argmax_deinterleaves_rank_major_blocks() {
         // tp=2, batch=2, v_local=3: rank-major blocks of [B, v/t].
         // Sequence 0 rows: rank0 [0,1,9], rank1 [2,0,0] -> argmax id 2 (9.0).
@@ -576,6 +640,6 @@ mod tests {
         let single = vec![0.5, 3.0, 1.0, 3.0];
         assert_eq!(batched_argmax(&single, 2, 1), vec![argmax(&single)]);
         // All-equal logits (structural zeros) pick token 0, like argmax.
-        assert_eq!(batched_argmax(&vec![0.0; 8], 2, 2), vec![0, 0]);
+        assert_eq!(batched_argmax(&[0.0; 8], 2, 2), vec![0, 0]);
     }
 }

@@ -1,0 +1,938 @@
+//! Fleet-scale serving simulator — N priced engine replicas behind a
+//! router, on one deterministic model clock.
+//!
+//! The paper's recommendations (TP for short sequences, PP for volume,
+//! hybrid needs tuning) are per-replica; a production service asks the
+//! *fleet-level* question: how many replicas, in which layouts, behind
+//! which router, serve a traffic mix within SLO. [`FleetSpec`] composes
+//! validated [`DeploymentPlan`]s into a fleet — homogeneous or
+//! heterogeneous colocated replicas ([`FleetSpec::colocated`] /
+//! [`FleetSpec::add_replicas`]), or disaggregated prefill/decode pools
+//! ([`FleetSpec::disaggregated`], the DistServe-style split
+//! `analysis::disagg` prices statically) — and
+//! [`FleetSpec::simulate`] runs a discrete-event simulation of an
+//! open-loop [`WorkloadSpec`] against it:
+//!
+//! - every replica is a priced structural engine ([`crate::simtime`]
+//!   model clock), advanced one engine iteration at a time; the fleet
+//!   loop interleaves replicas in global model-time order, so metrics are
+//!   bitwise-deterministic per workload seed;
+//! - a single-replica colocated fleet reproduces
+//!   [`crate::server::Server::serve_poisson`]'s model-time metrics
+//!   bitwise (same arrival stream, same iteration loop, same formulas);
+//! - under disaggregation, each request prefills in the prefill pool,
+//!   ships its KV cache once (`Sp · kv_bytes_per_token`, priced through
+//!   [`NetModel::p2p`] over NVLink or InfiniBand depending on whether the
+//!   pools share a node on the fleet's node grid), then decodes in the
+//!   decode pool with every decode iteration priced against the shipped
+//!   `Sp`-token context (cached-context admission,
+//!   [`crate::engine::Session::admit_with_context`]) — so disaggregated
+//!   vs colocated TTFT/TPOT/E2E percentiles come from the same
+//!   simulation. (The decode pool's KV *block* accounting still charges
+//!   only the 1-token handoff prompt plus growth — modeling shipped
+//!   blocks in the scheduler is the "KV migration under load" roadmap
+//!   item.);
+//! - [`capacity_sweep`] runs a list of candidate fleets over one workload
+//!   and [`cheapest`] picks the fewest-GPU fleet meeting an [`SloTarget`]
+//!   — the capacity-planning loop as a library primitive.
+
+mod replica;
+mod router;
+
+pub use router::{ReplicaLoad, Router, RouterPolicy};
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, HashMap};
+use std::time::Duration;
+
+use crate::cluster::NetModel;
+use crate::comm::{CollectiveKind, Stage, TraceSummary};
+use crate::engine::Engine;
+use crate::model::ModelArch;
+use crate::plan::{DeploymentPlan, PlanError};
+use crate::server::{
+    ModelRequestTimes, ModelServeSummary, Request, RequestMetrics, SchedulerConfig,
+    ServeSummary,
+};
+use crate::workload::WorkloadSpec;
+
+use replica::{Replica, ReplicaDone};
+
+/// What a replica does in the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaRole {
+    /// Colocated serving: prefill and decode on the same replica.
+    Serve,
+    /// Disaggregated prefill pool member (produces the first token, then
+    /// hands the KV cache off).
+    Prefill,
+    /// Disaggregated decode pool member (receives the KV cache, produces
+    /// the remaining tokens).
+    Decode,
+}
+
+impl ReplicaRole {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Serve => "serve",
+            Self::Prefill => "prefill",
+            Self::Decode => "decode",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ReplicaSpec {
+    plan: DeploymentPlan,
+    role: ReplicaRole,
+}
+
+/// A validated fleet: replicas (each its own [`DeploymentPlan`] layout)
+/// plus router policy, per-replica scheduler config, and the node grid
+/// replicas pack onto (for KV-handoff link classification).
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    replicas: Vec<ReplicaSpec>,
+    router: RouterPolicy,
+    scheduler: SchedulerConfig,
+    gpus_per_node: usize,
+}
+
+/// Fleet members must serve the same model structurally; numeric plans
+/// hold real single-sequence PJRT state and cannot be replicated.
+fn check_member(base: Option<&ModelArch>, plan: &DeploymentPlan) -> Result<(), PlanError> {
+    if plan.is_numeric() {
+        return Err(PlanError::FleetNumericUnsupported);
+    }
+    if let Some(b) = base {
+        if b.name != plan.arch().name {
+            return Err(PlanError::FleetArchMismatch {
+                base: b.name.clone(),
+                other: plan.arch().name.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+impl FleetSpec {
+    /// A colocated fleet of `n` identical replicas of `plan`
+    /// (the [`DeploymentPlan::fleet`] verb).
+    pub fn colocated(plan: &DeploymentPlan, n: usize) -> Result<Self, PlanError> {
+        if n == 0 {
+            return Err(PlanError::ZeroDegree { axis: "fleet replica count" });
+        }
+        check_member(None, plan)?;
+        Ok(Self {
+            replicas: (0..n)
+                .map(|_| ReplicaSpec { plan: plan.clone(), role: ReplicaRole::Serve })
+                .collect(),
+            router: RouterPolicy::RoundRobin,
+            scheduler: SchedulerConfig::default(),
+            gpus_per_node: 4,
+        })
+    }
+
+    /// A disaggregated fleet: `n_prefill` replicas of `prefill` feeding
+    /// `n_decode` replicas of `decode` through per-request KV-cache
+    /// handoffs.
+    pub fn disaggregated(
+        prefill: &DeploymentPlan,
+        n_prefill: usize,
+        decode: &DeploymentPlan,
+        n_decode: usize,
+    ) -> Result<Self, PlanError> {
+        if n_prefill == 0 {
+            return Err(PlanError::DisaggPoolMissing { pool: "prefill" });
+        }
+        if n_decode == 0 {
+            return Err(PlanError::DisaggPoolMissing { pool: "decode" });
+        }
+        check_member(None, prefill)?;
+        check_member(Some(prefill.arch()), decode)?;
+        let mut replicas = Vec::with_capacity(n_prefill + n_decode);
+        replicas.extend((0..n_prefill).map(|_| ReplicaSpec {
+            plan: prefill.clone(),
+            role: ReplicaRole::Prefill,
+        }));
+        replicas.extend(
+            (0..n_decode)
+                .map(|_| ReplicaSpec { plan: decode.clone(), role: ReplicaRole::Decode }),
+        );
+        Ok(Self {
+            replicas,
+            router: RouterPolicy::RoundRobin,
+            scheduler: SchedulerConfig::default(),
+            gpus_per_node: 4,
+        })
+    }
+
+    /// Grow a colocated fleet with `n` replicas of another (same-model)
+    /// layout — heterogeneous fleets.
+    pub fn add_replicas(mut self, plan: &DeploymentPlan, n: usize) -> Result<Self, PlanError> {
+        if self.is_disaggregated() {
+            return Err(PlanError::FleetMixedRoles);
+        }
+        if n == 0 {
+            return Err(PlanError::ZeroDegree { axis: "fleet replica count" });
+        }
+        check_member(Some(self.arch()), plan)?;
+        self.replicas.extend(
+            (0..n).map(|_| ReplicaSpec { plan: plan.clone(), role: ReplicaRole::Serve }),
+        );
+        Ok(self)
+    }
+
+    /// Select the router policy (default round-robin).
+    pub fn with_router(mut self, policy: RouterPolicy) -> Self {
+        self.router = policy;
+        self
+    }
+
+    /// Per-replica scheduler configuration (KV pool, queue, batch).
+    pub fn with_scheduler(mut self, cfg: SchedulerConfig) -> Self {
+        self.scheduler = cfg;
+        self
+    }
+
+    /// Node grid the replicas pack onto, in spec order (default 4 GPUs
+    /// per node, the paper's testbed shape). Determines whether a
+    /// prefill→decode KV handoff rides NVLink or InfiniBand.
+    pub fn with_gpus_per_node(mut self, gpus_per_node: usize) -> Result<Self, PlanError> {
+        if gpus_per_node == 0 {
+            return Err(PlanError::ZeroDegree { axis: "GPUs per node" });
+        }
+        self.gpus_per_node = gpus_per_node;
+        Ok(self)
+    }
+
+    pub fn router(&self) -> RouterPolicy {
+        self.router
+    }
+
+    pub fn scheduler(&self) -> SchedulerConfig {
+        self.scheduler
+    }
+
+    pub fn gpus_per_node(&self) -> usize {
+        self.gpus_per_node
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_disaggregated(&self) -> bool {
+        self.replicas.iter().any(|r| r.role != ReplicaRole::Serve)
+    }
+
+    /// The fleet's model (all members agree by construction).
+    pub fn arch(&self) -> &ModelArch {
+        self.replicas[0].plan.arch()
+    }
+
+    /// Total GPUs across every replica.
+    pub fn total_gpus(&self) -> usize {
+        self.replicas.iter().map(|r| r.plan.layout().world_size()).sum()
+    }
+
+    /// Human-readable identity, e.g.
+    /// `2x Llama-3.1-8B TP=2 PP=1 [round-robin]` or
+    /// `prefill 1x ... TP=4 PP=1 + decode 1x ... TP=1 PP=4 [least-tokens]`.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < self.replicas.len() {
+            let cur = &self.replicas[i];
+            let mut j = i;
+            while j < self.replicas.len()
+                && self.replicas[j].role == cur.role
+                && self.replicas[j].plan.label() == cur.plan.label()
+            {
+                j += 1;
+            }
+            let prefix = match cur.role {
+                ReplicaRole::Serve => String::new(),
+                ReplicaRole::Prefill => "prefill ".to_string(),
+                ReplicaRole::Decode => "decode ".to_string(),
+            };
+            parts.push(format!("{prefix}{}x {}", j - i, cur.plan.label()));
+            i = j;
+        }
+        format!("{} [{}]", parts.join(" + "), self.router.label())
+    }
+
+    /// Run the fleet against an open-loop workload. Deterministic per
+    /// `seed`: the same spec, workload, and seed reproduce every metric
+    /// bitwise.
+    pub fn simulate(&self, workload: &WorkloadSpec, seed: u64) -> crate::Result<FleetSummary> {
+        let timed = workload.generate(seed)?;
+        let n = self.replicas.len();
+        let roles: Vec<ReplicaRole> = self.replicas.iter().map(|r| r.role).collect();
+        let serve_pool: Vec<usize> =
+            (0..n).filter(|&i| roles[i] != ReplicaRole::Decode).collect();
+        let decode_pool: Vec<usize> =
+            (0..n).filter(|&i| roles[i] == ReplicaRole::Decode).collect();
+        let disagg = !decode_pool.is_empty();
+
+        // Replicas pack onto the fleet node grid in spec order; a KV
+        // handoff crosses nodes when the pools' lead GPUs land on
+        // different nodes.
+        let mut offsets = Vec::with_capacity(n);
+        let mut off = 0usize;
+        for r in &self.replicas {
+            offsets.push(off);
+            off += r.plan.layout().world_size();
+        }
+        let nodes: Vec<usize> = offsets.iter().map(|&o| o / self.gpus_per_node).collect();
+        let nets: Vec<NetModel> =
+            self.replicas.iter().map(|r| r.plan.cost_model().cal.net).collect();
+        let kv_per_token: Vec<usize> = self
+            .replicas
+            .iter()
+            .map(|r| r.plan.arch().kv_bytes_per_token(r.plan.shape().dtype_bytes))
+            .collect();
+
+        let mut engines: Vec<Engine> = self
+            .replicas
+            .iter()
+            .map(|r| r.plan.engine())
+            .collect::<crate::Result<Vec<_>>>()?;
+
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::with_capacity(timed.len());
+        let mut next_seq = 0u64;
+        for t in timed {
+            heap.push(Reverse(Event {
+                at: t.at_s,
+                seq: next_seq,
+                kind: EventKind::Arrival(t.request),
+            }));
+            next_seq += 1;
+        }
+
+        let mut pending: HashMap<u64, Pending> = HashMap::new();
+        let mut completed: Vec<FleetRequestMetrics> = Vec::new();
+        let mut stats: Vec<ReplicaStats> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReplicaStats {
+                label: format!("{}#{i} {}", r.role.label(), r.plan.label()),
+                role: r.role,
+                gpus: r.plan.layout().world_size(),
+                assigned: 0,
+                max_depth: 0,
+                tokens: 0,
+            })
+            .collect();
+        let mut kv_total_bytes = 0.0f64;
+        let mut kv_total_s = 0.0f64;
+
+        {
+            let mut replicas: Vec<Replica<'_>> = engines
+                .iter_mut()
+                .enumerate()
+                .map(|(i, e)| Replica::new(stats[i].label.clone(), e.session(), self.scheduler))
+                .collect();
+            let mut arrival_router = Router::new(self.router);
+            let mut handoff_router = Router::new(self.router);
+
+            loop {
+                // Earliest replica with work, by (model clock, index).
+                let busy: Option<(usize, f64)> = replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.runnable())
+                    .map(|(i, r)| (i, r.now()))
+                    .min_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+                // Deliver the next event iff it precedes every pending
+                // iteration; otherwise run the earliest iteration (events
+                // are delivered at iteration boundaries, exactly like the
+                // single-replica serving loop's arrival feed).
+                let deliver = match (heap.peek(), busy) {
+                    (Some(Reverse(ev)), Some((_, now))) => ev.at <= now,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (None, None) => break,
+                };
+                if deliver {
+                    let Reverse(ev) = heap.pop().expect("deliver branch peeked an event");
+                    match ev.kind {
+                        EventKind::Arrival(req) => {
+                            let loads: Vec<ReplicaLoad> =
+                                serve_pool.iter().map(|&i| replicas[i].load()).collect();
+                            let pick = serve_pool[arrival_router.route(&loads)];
+                            let id = req.id;
+                            pending.insert(
+                                id,
+                                Pending {
+                                    prompt_tokens: req.prompt.len(),
+                                    decode_len: req.decode_len,
+                                    replica: pick,
+                                    decode_replica: None,
+                                    prefill: None,
+                                    kv_bytes: 0.0,
+                                    kv_s: 0.0,
+                                },
+                            );
+                            // Under disaggregation the prefill pool only
+                            // produces the first token.
+                            let sub = if disagg {
+                                Request { id, prompt: req.prompt, decode_len: 1 }
+                            } else {
+                                req
+                            };
+                            if let Err(e) = replicas[pick].submit(sub, ev.at, 0) {
+                                let p = pending.remove(&id).expect("just inserted");
+                                completed.push(FleetRequestMetrics {
+                                    request_id: id,
+                                    replica: pick,
+                                    decode_replica: None,
+                                    prompt_tokens: p.prompt_tokens,
+                                    generated_tokens: 0,
+                                    kv_transfer_bytes: 0.0,
+                                    kv_transfer_s: 0.0,
+                                    model: None,
+                                    error: Some(e.to_string()),
+                                });
+                            } else {
+                                stats[pick].assigned += 1;
+                                stats[pick].max_depth =
+                                    stats[pick].max_depth.max(replicas[pick].queue_depth());
+                            }
+                        }
+                        EventKind::Handoff { id, token, remaining, context, replica } => {
+                            let req =
+                                Request { id, prompt: vec![token], decode_len: remaining };
+                            if let Err(e) = replicas[replica].submit(req, ev.at, context) {
+                                let p = pending.remove(&id).expect("handoff tracked");
+                                let pf = p.prefill.as_ref().expect("prefill preceded handoff");
+                                completed.push(FleetRequestMetrics {
+                                    request_id: id,
+                                    replica: p.replica,
+                                    decode_replica: p.decode_replica,
+                                    prompt_tokens: p.prompt_tokens,
+                                    generated_tokens: pf.generated,
+                                    kv_transfer_bytes: p.kv_bytes,
+                                    kv_transfer_s: p.kv_s,
+                                    model: Some(times_from(pf)),
+                                    error: Some(e.to_string()),
+                                });
+                            } else {
+                                stats[replica].assigned += 1;
+                                stats[replica].max_depth = stats[replica]
+                                    .max_depth
+                                    .max(replicas[replica].queue_depth());
+                            }
+                        }
+                    }
+                    continue;
+                }
+
+                let (bi, _) = busy.expect("non-deliver branch has a runnable replica");
+                for d in replicas[bi].advance()? {
+                    match roles[bi] {
+                        ReplicaRole::Serve => {
+                            let p = pending.remove(&d.id).expect("routed request tracked");
+                            completed.push(FleetRequestMetrics {
+                                request_id: d.id,
+                                replica: p.replica,
+                                decode_replica: None,
+                                prompt_tokens: d.prompt_tokens,
+                                generated_tokens: d.generated,
+                                kv_transfer_bytes: 0.0,
+                                kv_transfer_s: 0.0,
+                                model: if d.rejected {
+                                    None
+                                } else {
+                                    Some(times_from(&d))
+                                },
+                                error: d.error.clone(),
+                            });
+                        }
+                        ReplicaRole::Prefill => {
+                            if d.rejected || d.error.is_some() {
+                                let p = pending.remove(&d.id).expect("routed request tracked");
+                                completed.push(FleetRequestMetrics {
+                                    request_id: d.id,
+                                    replica: p.replica,
+                                    decode_replica: None,
+                                    prompt_tokens: d.prompt_tokens,
+                                    generated_tokens: d.generated,
+                                    kv_transfer_bytes: 0.0,
+                                    kv_transfer_s: 0.0,
+                                    model: if d.rejected {
+                                        None
+                                    } else {
+                                        Some(times_from(&d))
+                                    },
+                                    error: d.error.clone(),
+                                });
+                                continue;
+                            }
+                            let p = pending.get_mut(&d.id).expect("routed request tracked");
+                            let remaining = p.decode_len.saturating_sub(d.generated);
+                            if remaining == 0 {
+                                // Single-token request: prefill is the
+                                // whole generation; no handoff.
+                                let done = FleetRequestMetrics {
+                                    request_id: d.id,
+                                    replica: p.replica,
+                                    decode_replica: None,
+                                    prompt_tokens: d.prompt_tokens,
+                                    generated_tokens: d.generated,
+                                    kv_transfer_bytes: 0.0,
+                                    kv_transfer_s: 0.0,
+                                    model: Some(times_from(&d)),
+                                    error: None,
+                                };
+                                pending.remove(&d.id);
+                                completed.push(done);
+                                continue;
+                            }
+                            // Route the decode replica now, price the KV
+                            // migration, and deliver the request to the
+                            // decode pool once the wire drains.
+                            let loads: Vec<ReplicaLoad> =
+                                decode_pool.iter().map(|&i| replicas[i].load()).collect();
+                            let pick = decode_pool[handoff_router.route(&loads)];
+                            let bytes = (d.prompt_tokens * kv_per_token[bi]) as f64;
+                            let crosses = nodes[bi] != nodes[pick];
+                            let cost = nets[bi].p2p(bytes, crosses).total();
+                            kv_total_bytes += bytes;
+                            kv_total_s += cost;
+                            p.decode_replica = Some(pick);
+                            p.kv_bytes = bytes;
+                            p.kv_s = cost;
+                            heap.push(Reverse(Event {
+                                at: d.last_token_s + cost,
+                                seq: next_seq,
+                                kind: EventKind::Handoff {
+                                    id: d.id,
+                                    token: d.last_token,
+                                    remaining,
+                                    // The decode pool prices its decode
+                                    // iterations against the shipped
+                                    // Sp-token prefill KV (its own 1-token
+                                    // prompt — the handed-off first token —
+                                    // sits on top of it, matching the
+                                    // colocated position sequence exactly).
+                                    context: d.prompt_tokens,
+                                    replica: pick,
+                                },
+                            }));
+                            next_seq += 1;
+                            p.prefill = Some(d);
+                        }
+                        ReplicaRole::Decode => {
+                            let p = pending.remove(&d.id).expect("handoff tracked");
+                            let pf = p.prefill.as_ref().expect("prefill preceded decode");
+                            let (model, generated) = if d.rejected {
+                                // The decode pool refused the session: the
+                                // request keeps its prefill-phase times.
+                                (Some(times_from(pf)), pf.generated)
+                            } else {
+                                (Some(merge_times(pf, &d)), pf.generated + d.generated)
+                            };
+                            completed.push(FleetRequestMetrics {
+                                request_id: d.id,
+                                replica: p.replica,
+                                decode_replica: p.decode_replica,
+                                prompt_tokens: p.prompt_tokens,
+                                generated_tokens: generated,
+                                kv_transfer_bytes: p.kv_bytes,
+                                kv_transfer_s: p.kv_s,
+                                model,
+                                error: d.error.clone(),
+                            });
+                        }
+                    }
+                }
+            }
+
+            for (i, r) in replicas.iter().enumerate() {
+                stats[i].tokens = r.tokens_served();
+            }
+        }
+
+        // Aggregate through the serving stack's own summary path so the
+        // model-time percentiles share one implementation (and a
+        // 1-replica fleet matches `serve_poisson` bitwise).
+        let wall: Vec<RequestMetrics> = completed
+            .iter()
+            .map(|m| RequestMetrics {
+                request_id: m.request_id,
+                prompt_tokens: m.prompt_tokens,
+                generated_tokens: m.generated_tokens,
+                queue_s: 0.0,
+                ttft_s: 0.0,
+                tpot_s: 0.0,
+                e2e_s: 0.0,
+                model: m.model,
+                error: m.error.clone(),
+            })
+            .collect();
+        let agg = ServeSummary::from_metrics(&wall, Duration::ZERO);
+
+        let mut comm_bytes = kv_total_bytes;
+        for (i, e) in engines.iter().enumerate() {
+            comm_bytes +=
+                traced_comm_bytes(&e.trace().summary(), self.replicas[i].plan.layout().pp);
+        }
+
+        Ok(FleetSummary {
+            requests: agg.requests,
+            completed: agg.completed,
+            failed: agg.failed,
+            total_tokens: agg.total_tokens,
+            model: agg.model.unwrap_or_default(),
+            per_request: completed,
+            replicas: stats,
+            kv_transfer_bytes: kv_total_bytes,
+            kv_transfer_s: kv_total_s,
+            comm_bytes,
+        })
+    }
+}
+
+/// Model-clock latencies of one replica pass (the serving loop's
+/// `request_metrics` formulas, verbatim).
+fn times_from(d: &ReplicaDone) -> ModelRequestTimes {
+    let first = d.first_token_s.unwrap_or(d.admitted_s);
+    ModelRequestTimes {
+        queue_s: d.admitted_s - d.arrival_s,
+        ttft_s: if d.first_token_s.is_some() {
+            first - d.admitted_s
+        } else {
+            0.0
+        },
+        tpot_s: if d.generated > 1 {
+            (d.last_token_s - first) / (d.generated - 1) as f64
+        } else {
+            0.0
+        },
+        e2e_s: d.last_token_s - d.arrival_s,
+        finished_at_s: d.last_token_s,
+    }
+}
+
+/// Merge a disaggregated request's prefill-pool and decode-pool passes:
+/// TTFT comes from the prefill pool, the token train (and E2E tail) from
+/// the decode pool, with the KV-handoff gap inside the inter-token time.
+fn merge_times(prefill: &ReplicaDone, decode: &ReplicaDone) -> ModelRequestTimes {
+    let total = prefill.generated + decode.generated;
+    let first = prefill.first_token_s.unwrap_or(prefill.admitted_s);
+    ModelRequestTimes {
+        queue_s: prefill.admitted_s - prefill.arrival_s,
+        ttft_s: if prefill.first_token_s.is_some() {
+            first - prefill.admitted_s
+        } else {
+            0.0
+        },
+        tpot_s: if total > 1 {
+            (decode.last_token_s - first) / (total - 1) as f64
+        } else {
+            0.0
+        },
+        e2e_s: decode.last_token_s - prefill.arrival_s,
+        finished_at_s: decode.last_token_s,
+    }
+}
+
+/// Traced corrected collective volume of one replica's run, under the
+/// paper's accounting (one worker stream for collectives; each pipeline
+/// boundary transfer counted once via rank 0's Send stream × (p−1) links
+/// — the Fig. 6 convention).
+fn traced_comm_bytes(summary: &TraceSummary, pp: usize) -> f64 {
+    let mut total = 0.0;
+    for op in [CollectiveKind::AllReduce, CollectiveKind::AllGather, CollectiveKind::Gather] {
+        for stage in [Stage::Prefill, Stage::Decode] {
+            total += summary.paper_view(op, stage).corrected_volume_bytes;
+        }
+    }
+    if pp > 1 && !summary.per_rank.is_empty() {
+        total += summary.per_rank[0]
+            .iter()
+            .filter(|(k, _)| k.op == CollectiveKind::Send)
+            .map(|(_, v)| v.corrected_volume_bytes)
+            .sum::<f64>()
+            * (pp - 1) as f64;
+    }
+    total
+}
+
+/// Fleet-level bookkeeping of one in-flight request.
+struct Pending {
+    prompt_tokens: usize,
+    decode_len: usize,
+    replica: usize,
+    decode_replica: Option<usize>,
+    prefill: Option<ReplicaDone>,
+    kv_bytes: f64,
+    kv_s: f64,
+}
+
+#[derive(Debug)]
+struct Event {
+    at: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Arrival(Request),
+    Handoff { id: u64, token: i32, remaining: usize, context: usize, replica: usize },
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at.total_cmp(&other.at).then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// SLO record of one fleet-served request (model time).
+#[derive(Debug, Clone)]
+pub struct FleetRequestMetrics {
+    pub request_id: u64,
+    /// Serving replica (the prefill-pool member under disaggregation).
+    pub replica: usize,
+    /// Decode-pool replica the request was handed off to, if any.
+    pub decode_replica: Option<usize>,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    /// KV-cache bytes shipped prefill → decode (0 when colocated).
+    pub kv_transfer_bytes: f64,
+    /// Modeled wire time of the KV handoff (stamped into the request's
+    /// timeline: the decode pool sees the request only after it).
+    pub kv_transfer_s: f64,
+    /// Model-clock latencies; `None` when the request never entered an
+    /// engine (queue overflow / admission rejection).
+    pub model: Option<ModelRequestTimes>,
+    pub error: Option<String>,
+}
+
+/// Per-replica dispatch statistics of one simulation.
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub label: String,
+    pub role: ReplicaRole,
+    pub gpus: usize,
+    /// Requests routed to this replica.
+    pub assigned: usize,
+    /// Peak queued + in-flight requests observed at assignment time.
+    pub max_depth: usize,
+    /// Tokens the replica generated.
+    pub tokens: usize,
+}
+
+/// Aggregate of one fleet simulation.
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub requests: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub total_tokens: usize,
+    /// Model-time makespan/throughput/percentiles (same aggregation as
+    /// [`crate::server::ServeSummary`]'s model side).
+    pub model: ModelServeSummary,
+    /// Per-request metrics in completion order.
+    pub per_request: Vec<FleetRequestMetrics>,
+    pub replicas: Vec<ReplicaStats>,
+    /// Total KV-cache bytes shipped prefill → decode.
+    pub kv_transfer_bytes: f64,
+    /// Total modeled KV-handoff wire seconds.
+    pub kv_transfer_s: f64,
+    /// Traced corrected collective volume across all replicas plus KV
+    /// handoffs (the fleet-level analogue of Eq. 1–7 totals).
+    pub comm_bytes: f64,
+}
+
+/// SLO targets for capacity planning (each axis optional; p95s).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SloTarget {
+    pub ttft_p95_s: Option<f64>,
+    pub tpot_p95_s: Option<f64>,
+    pub e2e_p95_s: Option<f64>,
+}
+
+fn within(target: Option<f64>, got: f64) -> bool {
+    match target {
+        Some(t) => got <= t,
+        None => true,
+    }
+}
+
+impl SloTarget {
+    /// Whether a run's model-time percentiles meet every set target.
+    pub fn met_by(&self, m: &ModelServeSummary) -> bool {
+        within(self.ttft_p95_s, m.ttft.p95_s)
+            && within(self.tpot_p95_s, m.tpot.p95_s)
+            && within(self.e2e_p95_s, m.e2e.p95_s)
+    }
+}
+
+/// One candidate of a capacity sweep.
+#[derive(Debug, Clone)]
+pub struct FleetCandidate {
+    pub spec: FleetSpec,
+    pub summary: FleetSummary,
+    /// Every request completed and every set SLO target is met.
+    pub meets_slo: bool,
+}
+
+/// Simulate every candidate fleet against one workload (same seed — the
+/// comparisons are paired).
+pub fn capacity_sweep(
+    specs: Vec<FleetSpec>,
+    workload: &WorkloadSpec,
+    seed: u64,
+    target: SloTarget,
+) -> crate::Result<Vec<FleetCandidate>> {
+    specs
+        .into_iter()
+        .map(|spec| {
+            let summary = spec.simulate(workload, seed)?;
+            let meets_slo = summary.failed == 0
+                && summary.completed == summary.requests
+                && target.met_by(&summary.model);
+            Ok(FleetCandidate { spec, summary, meets_slo })
+        })
+        .collect()
+}
+
+/// The cheapest (fewest GPUs) candidate meeting its SLO, if any; ties
+/// resolve to the earliest candidate.
+pub fn cheapest(candidates: &[FleetCandidate]) -> Option<&FleetCandidate> {
+    candidates.iter().filter(|c| c.meets_slo).min_by_key(|c| c.spec.total_gpus())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Deployment;
+    use crate::workload::{ArrivalProcess, LengthDist};
+
+    fn tiny_plan(tp: usize, pp: usize) -> DeploymentPlan {
+        Deployment::builder().model("tiny").tp(tp).pp(pp).workload(8, 4).build().unwrap()
+    }
+
+    fn workload(requests: usize, rate: f64) -> WorkloadSpec {
+        WorkloadSpec {
+            arrivals: ArrivalProcess::poisson(rate),
+            prompt: LengthDist::Fixed(8),
+            decode: LengthDist::Fixed(4),
+            requests,
+        }
+    }
+
+    #[test]
+    fn spec_validation() {
+        let plan = tiny_plan(2, 1);
+        assert!(matches!(
+            FleetSpec::colocated(&plan, 0).unwrap_err(),
+            PlanError::ZeroDegree { .. }
+        ));
+        assert!(matches!(
+            FleetSpec::disaggregated(&plan, 0, &plan, 1).unwrap_err(),
+            PlanError::DisaggPoolMissing { pool: "prefill" }
+        ));
+        assert!(matches!(
+            FleetSpec::disaggregated(&plan, 1, &plan, 0).unwrap_err(),
+            PlanError::DisaggPoolMissing { pool: "decode" }
+        ));
+        // Heterogeneous layouts of one model compose; different models
+        // do not.
+        let spec = FleetSpec::colocated(&plan, 2).unwrap();
+        let spec = spec.add_replicas(&tiny_plan(1, 2), 1).unwrap();
+        assert_eq!(spec.replica_count(), 3);
+        assert_eq!(spec.total_gpus(), 2 + 2 + 2);
+        let other = Deployment::builder().model("8b").tp(2).build().unwrap();
+        assert!(matches!(
+            FleetSpec::colocated(&plan, 1).unwrap().add_replicas(&other, 1).unwrap_err(),
+            PlanError::FleetArchMismatch { .. }
+        ));
+        // Disaggregated specs cannot also take colocated replicas.
+        let d = FleetSpec::disaggregated(&plan, 1, &tiny_plan(1, 2), 1).unwrap();
+        assert!(d.is_disaggregated());
+        assert!(matches!(
+            d.add_replicas(&plan, 1).unwrap_err(),
+            PlanError::FleetMixedRoles
+        ));
+        assert!(matches!(
+            FleetSpec::colocated(&plan, 1).unwrap().with_gpus_per_node(0).unwrap_err(),
+            PlanError::ZeroDegree { .. }
+        ));
+    }
+
+    #[test]
+    fn labels_group_replicas() {
+        let spec = FleetSpec::colocated(&tiny_plan(2, 1), 2).unwrap();
+        assert_eq!(spec.label(), "2x tiny-llama TP=2 PP=1 [round-robin]");
+        let spec = FleetSpec::disaggregated(&tiny_plan(2, 1), 1, &tiny_plan(1, 2), 2)
+            .unwrap()
+            .with_router(RouterPolicy::LeastOutstandingTokens);
+        assert_eq!(
+            spec.label(),
+            "prefill 1x tiny-llama TP=2 PP=1 + decode 2x tiny-llama TP=1 PP=2 [least-tokens]"
+        );
+    }
+
+    #[test]
+    fn colocated_fleet_serves_everything_deterministically() {
+        let spec = FleetSpec::colocated(&tiny_plan(2, 1), 2)
+            .unwrap()
+            .with_router(RouterPolicy::RoundRobin);
+        let wl = workload(12, 2000.0);
+        let a = spec.simulate(&wl, 7).unwrap();
+        assert_eq!(a.requests, 12);
+        assert_eq!(a.completed, 12);
+        assert_eq!(a.failed, 0);
+        assert_eq!(a.total_tokens, 12 * 4);
+        assert!(a.model.makespan_s > 0.0 && a.model.tokens_per_s > 0.0);
+        assert_eq!(a.kv_transfer_bytes, 0.0, "colocated fleets ship no KV");
+        assert!(a.comm_bytes > 0.0);
+        // Round-robin splits 12 arrivals 6/6.
+        assert_eq!(a.replicas[0].assigned, 6);
+        assert_eq!(a.replicas[1].assigned, 6);
+        assert_eq!(a.replicas.iter().map(|r| r.tokens).sum::<usize>(), 48);
+        let b = spec.simulate(&wl, 7).unwrap();
+        assert_eq!(a.model, b.model, "same seed -> bitwise-identical model summary");
+        let c = spec.simulate(&wl, 8).unwrap();
+        assert_ne!(a.model, c.model, "different seed shifts the arrival process");
+    }
+
+    #[test]
+    fn disaggregated_fleet_prices_kv_handoffs() {
+        let spec = FleetSpec::disaggregated(&tiny_plan(2, 1), 1, &tiny_plan(1, 2), 1).unwrap();
+        let wl = workload(6, 1000.0);
+        let s = spec.simulate(&wl, 3).unwrap();
+        assert_eq!(s.completed, 6);
+        assert_eq!(s.total_tokens, 6 * 4, "disagg serves the same token budget");
+        assert!(s.kv_transfer_bytes > 0.0);
+        assert!(s.kv_transfer_s > 0.0);
+        for m in &s.per_request {
+            assert!(m.kv_transfer_bytes > 0.0, "every request ships its KV once");
+            assert_eq!(m.decode_replica, Some(1));
+            let t = m.model.as_ref().unwrap();
+            assert!(t.ttft_s > 0.0 && t.e2e_s >= t.ttft_s);
+        }
+        // Prefill pool generated exactly one token per request.
+        assert_eq!(s.replicas[0].tokens, 6);
+        assert_eq!(s.replicas[1].tokens, 6 * 3);
+    }
+}

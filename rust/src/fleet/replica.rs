@@ -1,0 +1,258 @@
+//! One fleet replica: a priced structural engine session plus its own
+//! continuous-batching scheduler, advanced one engine iteration at a time
+//! by the fleet's discrete-event loop.
+//!
+//! The per-iteration logic (admission, per-token KV growth with mid-decode
+//! bail-out, one `Session::step`, model-clock bookkeeping) mirrors
+//! [`crate::server::Server`]'s serving loop exactly — a single-replica
+//! colocated fleet reproduces `serve_poisson`'s model-time metrics
+//! bitwise — but is factored so the fleet can interleave many replicas on
+//! one global model clock and inject handoff arrivals mid-simulation.
+
+use std::collections::HashMap;
+
+use crate::engine::kv::SeqId;
+use crate::engine::{Session, SequenceInput};
+use crate::server::{Request, Scheduler, SchedulerConfig};
+use crate::Result;
+
+use super::router::ReplicaLoad;
+
+/// Model-clock record of one request's pass through a replica. For a
+/// colocated fleet this is the whole request; under disaggregation a
+/// request produces one of these per pool (prefill, then decode).
+#[derive(Debug, Clone)]
+pub(crate) struct ReplicaDone {
+    pub id: SeqId,
+    pub prompt_tokens: usize,
+    /// Tokens this replica generated for the sequence.
+    pub generated: usize,
+    /// Last sampled token (the decode pool's 1-token prompt under
+    /// disaggregation).
+    pub last_token: i32,
+    pub arrival_s: f64,
+    pub admitted_s: f64,
+    pub first_token_s: Option<f64>,
+    pub last_token_s: f64,
+    /// True when the request never entered the engine (queue overflow or
+    /// session admission rejection) — such requests carry no model times,
+    /// matching the serving loop's convention.
+    pub rejected: bool,
+    pub error: Option<String>,
+}
+
+/// In-flight model-clock bookkeeping (mirror of the serving loop's
+/// `ModelFlight`).
+struct Flight {
+    arrival_s: f64,
+    admitted_s: f64,
+    prompt_tokens: usize,
+    /// Tokens this replica was asked to generate (outstanding-token
+    /// accounting on bail-out).
+    decode_budget: usize,
+    first_token_s: Option<f64>,
+    last_token_s: f64,
+    last_token: i32,
+    generated: usize,
+}
+
+pub(crate) struct Replica<'e> {
+    label: String,
+    session: Session<'e>,
+    scheduler: Scheduler,
+    /// Model-time arrival offset and cached-context token count of
+    /// submitted-but-not-admitted requests.
+    arrivals: HashMap<SeqId, (f64, usize)>,
+    flights: HashMap<SeqId, Flight>,
+    outstanding_tokens: usize,
+    tokens_served: usize,
+}
+
+impl<'e> Replica<'e> {
+    pub fn new(label: String, session: Session<'e>, cfg: SchedulerConfig) -> Self {
+        Self {
+            label,
+            session,
+            scheduler: Scheduler::new(cfg),
+            arrivals: HashMap::new(),
+            flights: HashMap::new(),
+            outstanding_tokens: 0,
+            tokens_served: 0,
+        }
+    }
+
+    /// The replica's model clock.
+    pub fn now(&self) -> f64 {
+        self.session.model_now().expect("fleet replicas run priced structural engines")
+    }
+
+    /// Whether [`Self::advance`] has work to do.
+    pub fn runnable(&self) -> bool {
+        !self.session.is_idle() || self.scheduler.queue_len() > 0
+    }
+
+    /// Queued + admitted requests (the router's queue-depth signal).
+    pub fn queue_depth(&self) -> usize {
+        self.scheduler.queue_len() + self.session.live()
+    }
+
+    pub fn load(&self) -> ReplicaLoad {
+        ReplicaLoad {
+            queue_depth: self.queue_depth(),
+            outstanding_tokens: self.outstanding_tokens,
+        }
+    }
+
+    pub fn tokens_served(&self) -> usize {
+        self.tokens_served
+    }
+
+    /// Route a request to this replica at model time `at_s`. An idle
+    /// replica's clock jumps to the arrival (the discrete-event idle
+    /// skip); a busy one will pick the request up at its next iteration
+    /// boundary. `context` is the cached-KV token count shipped with the
+    /// request (a disaggregated decode-pool handoff; 0 otherwise) —
+    /// decode iterations are priced against it. `Err` means the
+    /// scheduler rejected the submission (queue full / oversized
+    /// request) — the caller fails that request, not the simulation.
+    pub fn submit(&mut self, req: Request, at_s: f64, context: usize) -> Result<()> {
+        if self.session.is_idle() && self.scheduler.queue_len() == 0 {
+            self.session.advance_model_time_to(at_s);
+        }
+        let id = req.id;
+        // Outstanding work is prompt tokens still to prefill plus decode
+        // tokens still to generate — so a prefill-pool request (decode
+        // budget 1) still weighs its whole prompt with the
+        // least-outstanding-tokens router.
+        let tokens = req.prompt.len() + req.decode_len;
+        self.scheduler.submit(req)?;
+        self.arrivals.insert(id, (at_s, context));
+        self.outstanding_tokens += tokens;
+        Ok(())
+    }
+
+    /// One scheduling-loop pass: admit whatever fits, grow/bail KV before
+    /// a decode iteration, then run exactly one engine iteration. Returns
+    /// every request that left the replica during the pass.
+    pub fn advance(&mut self) -> Result<Vec<ReplicaDone>> {
+        let mut done = Vec::new();
+        // Admission (mirror of the serving loop's step 2).
+        while let Some(admitted) = self.scheduler.admit_next()? {
+            let req = admitted.request;
+            let id = req.id;
+            let prompt_tokens = req.prompt.len();
+            let decode_len = req.decode_len;
+            let (arrival_s, context) = self.arrivals.remove(&id).unwrap_or((0.0, 0));
+            let input = SequenceInput { id, prompt: req.prompt, max_new_tokens: decode_len };
+            if let Err(e) = self.session.admit_with_context(input, context) {
+                self.scheduler.finish(id)?;
+                self.outstanding_tokens =
+                    self.outstanding_tokens.saturating_sub(prompt_tokens + decode_len);
+                done.push(ReplicaDone {
+                    id,
+                    prompt_tokens,
+                    generated: 0,
+                    last_token: 0,
+                    arrival_s,
+                    admitted_s: arrival_s,
+                    first_token_s: None,
+                    last_token_s: arrival_s,
+                    rejected: true,
+                    error: Some(e.to_string()),
+                });
+                continue;
+            }
+            let admitted_s = self.now().max(arrival_s);
+            self.flights.insert(
+                id,
+                Flight {
+                    arrival_s,
+                    admitted_s,
+                    prompt_tokens,
+                    decode_budget: decode_len,
+                    first_token_s: None,
+                    last_token_s: admitted_s,
+                    last_token: 0,
+                    generated: 0,
+                },
+            );
+        }
+
+        if self.session.is_idle() {
+            if self.scheduler.queue_len() > 0 {
+                // Same invariant as the serving loop: submit() already
+                // rejected never-fitting requests, so an idle session with
+                // a blocked head of line is a sizing bug, not load.
+                anyhow::bail!(
+                    "head-of-line request cannot fit replica '{}'s KV pool",
+                    self.label
+                );
+            }
+            return Ok(done);
+        }
+
+        // Pre-decode KV growth with mid-decode bail-out (step 4).
+        if self.session.pending_prefills() == 0 {
+            for id in self.session.active_ids() {
+                if self.scheduler.grow(id).is_ok() {
+                    continue;
+                }
+                self.session.cancel(id);
+                self.scheduler.finish(id)?;
+                let f = self.flights.remove(&id).expect("active seq tracked");
+                self.outstanding_tokens = self
+                    .outstanding_tokens
+                    .saturating_sub(f.decode_budget.saturating_sub(f.generated));
+                done.push(Self::finish_flight(
+                    id,
+                    &f,
+                    Some("KV pool exhausted mid-decode; sequence bailed out".to_string()),
+                ));
+            }
+            if self.session.is_idle() {
+                return Ok(done); // every active sequence bailed; re-admit
+            }
+        }
+
+        // One engine iteration (prefill or batched decode; step 5).
+        let outcome = self.session.step()?;
+        let now = self.now();
+        for e in &outcome.events {
+            if let Some(f) = self.flights.get_mut(&e.seq) {
+                f.generated += 1;
+                f.last_token = e.token;
+                if f.first_token_s.is_none() {
+                    f.first_token_s = Some(now);
+                    // First token = prefill done: the prompt's share of
+                    // the outstanding work retires with it.
+                    self.outstanding_tokens =
+                        self.outstanding_tokens.saturating_sub(f.prompt_tokens);
+                }
+                f.last_token_s = now;
+                self.tokens_served += 1;
+                self.outstanding_tokens = self.outstanding_tokens.saturating_sub(1);
+            }
+        }
+        for id in &outcome.finished {
+            self.scheduler.finish(*id)?;
+            let f = self.flights.remove(id).expect("finished seq tracked");
+            done.push(Self::finish_flight(*id, &f, None));
+        }
+        Ok(done)
+    }
+
+    fn finish_flight(id: SeqId, f: &Flight, error: Option<String>) -> ReplicaDone {
+        ReplicaDone {
+            id,
+            prompt_tokens: f.prompt_tokens,
+            generated: f.generated,
+            last_token: f.last_token,
+            arrival_s: f.arrival_s,
+            admitted_s: f.admitted_s,
+            first_token_s: f.first_token_s,
+            last_token_s: f.last_token_s,
+            rejected: false,
+            error,
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Request routing across fleet replicas.
+//!
+//! The router is the fleet's only stateful dispatch decision, so every
+//! policy is deliberately deterministic: ties break toward the lowest
+//! replica index, and round-robin keeps a single cursor. Given the same
+//! replica-load snapshots, the same policy always produces the same
+//! assignment sequence — a precondition for the fleet simulator's
+//! bitwise per-seed reproducibility.
+
+/// Dispatch policy over a pool of replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cycle through replicas regardless of their load.
+    RoundRobin,
+    /// Pick the replica with the fewest outstanding tokens (un-prefilled
+    /// prompt + still-to-generate decode) — a work-aware least-loaded
+    /// policy.
+    LeastOutstandingTokens,
+    /// Pick the replica with the fewest queued + in-flight requests.
+    ShortestQueue,
+}
+
+impl RouterPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round-robin",
+            Self::LeastOutstandingTokens => "least-tokens",
+            Self::ShortestQueue => "shortest-queue",
+        }
+    }
+
+    /// Parse a CLI spelling (`rr`, `least-tokens`, `sq`, ...).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" | "roundrobin" => Some(Self::RoundRobin),
+            "lot" | "least-tokens" | "least-outstanding-tokens" => {
+                Some(Self::LeastOutstandingTokens)
+            }
+            "sq" | "shortest-queue" => Some(Self::ShortestQueue),
+            _ => None,
+        }
+    }
+}
+
+/// Load snapshot of one replica at routing time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplicaLoad {
+    /// Queued + admitted requests on the replica.
+    pub queue_depth: usize,
+    /// Tokens accepted but not yet processed: un-prefilled prompt tokens
+    /// plus still-to-generate decode tokens.
+    pub outstanding_tokens: usize,
+}
+
+/// A policy plus its dispatch state (the round-robin cursor).
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RouterPolicy,
+    next_rr: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy) -> Self {
+        Self { policy, next_rr: 0 }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Pick a replica index within `loads`. Ties break toward the lowest
+    /// index; round-robin ignores the loads entirely.
+    pub fn route(&mut self, loads: &[ReplicaLoad]) -> usize {
+        assert!(!loads.is_empty(), "router needs at least one replica");
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let i = self.next_rr % loads.len();
+                self.next_rr = self.next_rr.wrapping_add(1);
+                i
+            }
+            RouterPolicy::LeastOutstandingTokens => argmin_by(loads, |l| l.outstanding_tokens),
+            RouterPolicy::ShortestQueue => argmin_by(loads, |l| l.queue_depth),
+        }
+    }
+}
+
+/// Index of the smallest key; ties resolve to the lowest index.
+fn argmin_by(loads: &[ReplicaLoad], key: impl Fn(&ReplicaLoad) -> usize) -> usize {
+    loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, l)| (key(l), *i))
+        .map(|(i, _)| i)
+        .expect("non-empty pool")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(queue_depth: usize, outstanding_tokens: usize) -> ReplicaLoad {
+        ReplicaLoad { queue_depth, outstanding_tokens }
+    }
+
+    #[test]
+    fn round_robin_cycles_independent_of_load() {
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        let loads = [load(9, 900), load(0, 0), load(5, 50)];
+        let picks: Vec<usize> = (0..7).map(|_| r.route(&loads)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_tokens_and_shortest_queue_pick_minima_with_low_index_ties() {
+        let mut lot = Router::new(RouterPolicy::LeastOutstandingTokens);
+        assert_eq!(lot.route(&[load(0, 30), load(9, 10), load(0, 20)]), 1);
+        assert_eq!(lot.route(&[load(0, 10), load(0, 10)]), 0, "tie -> lowest index");
+        let mut sq = Router::new(RouterPolicy::ShortestQueue);
+        assert_eq!(sq.route(&[load(3, 0), load(1, 999), load(2, 0)]), 1);
+        assert_eq!(sq.route(&[load(2, 0), load(2, 0), load(2, 0)]), 0);
+    }
+
+    #[test]
+    fn parse_accepts_cli_spellings() {
+        assert_eq!(RouterPolicy::parse("rr"), Some(RouterPolicy::RoundRobin));
+        assert_eq!(
+            RouterPolicy::parse("least-tokens"),
+            Some(RouterPolicy::LeastOutstandingTokens)
+        );
+        assert_eq!(RouterPolicy::parse("shortest-queue"), Some(RouterPolicy::ShortestQueue));
+        assert_eq!(RouterPolicy::parse("sq"), Some(RouterPolicy::ShortestQueue));
+        assert_eq!(RouterPolicy::parse("bogus"), None);
+    }
+}

@@ -72,6 +72,16 @@
 //!   latency of numeric PJRT serving) and, on priced structural engines,
 //!   *model time* (the virtual-clock seconds the calibrated testbed would
 //!   take — deterministic for a fixed workload and arrival seed).
+//! - [`workload`] — seeded open-loop workload generation: Poisson/bursty
+//!   arrival processes × fixed/uniform/long-tail request-length
+//!   distributions, all drawing from one deterministic PRNG.
+//! - [`fleet`] — the fleet-scale simulator: N priced replicas (each its
+//!   own plan — heterogeneous fleets allowed) behind a pluggable router
+//!   (round-robin, least-outstanding-tokens, shortest-queue), colocated
+//!   or split into disaggregated prefill/decode pools with per-request
+//!   KV-cache handoffs priced through the α–β link model; plus the
+//!   capacity sweep that finds the cheapest fleet meeting an SLO target
+//!   (`commsim fleet` on the CLI).
 //! - [`report`] — renders paper tables/figures side-by-side with our
 //!   measured + analytical values.
 //!
@@ -82,6 +92,7 @@ pub mod analysis;
 pub mod cluster;
 pub mod comm;
 pub mod engine;
+pub mod fleet;
 pub mod model;
 pub mod perfmodel;
 pub mod plan;
@@ -90,6 +101,7 @@ pub mod runtime;
 pub mod server;
 pub mod simtime;
 pub mod testutil;
+pub mod workload;
 
 pub use plan::{Deployment, DeploymentPlan, PlanError, SloResult, VolumeReport};
 

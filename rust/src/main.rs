@@ -6,6 +6,8 @@
 //! - `trace`   — run the structural engine and validate trace vs analytics
 //! - `slo`     — simulate TTFT/TPOT/E2E for a layout (Figs. 8–10)
 //! - `serve`   — serve the tiny real model end-to-end via PJRT (numeric)
+//! - `fleet`   — capacity-sweep a multi-replica fleet (colocated sizes +
+//!   a disaggregated prefill/decode split) on the model clock
 //! - `tables`  — print all paper-table reproductions at once
 //!
 //! Flag parsing is hand-rolled (`--key value`); the vendored build
@@ -17,11 +19,13 @@
 use std::collections::HashMap;
 
 use commsim::comm::Stage;
+use commsim::fleet::{self, FleetSpec, RouterPolicy, SloTarget};
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
 use commsim::report;
 use commsim::runtime::ArtifactStore;
 use commsim::server::{Request, SchedulerConfig};
+use commsim::workload::{ArrivalProcess, LengthDist, WorkloadSpec};
 
 const USAGE: &str = "\
 commsim — communication patterns in distributed LLM inference (paper reproduction)
@@ -42,6 +46,16 @@ COMMANDS:
                       --arrival-rate R (Poisson req/s; omit for all-at-once)
                       --seed N (arrival PRNG seed; --arrival-rate only)
             structural runs also report model-time SLOs (priced timeline)
+  fleet     Capacity-sweep a multi-replica fleet on the model clock
+            --model 3b|8b|13b|tiny  --tp N  --pp N  --sp N  --sd N
+            --replicas-max N (colocated fleet sizes 1..=N; a disaggregated
+                              prefill/decode configuration is always added)
+            --router rr|least-tokens|shortest-queue
+            --requests N  --arrival-rate R (Poisson req/s)  --seed N
+            --burst N (group arrivals into bursts of N; default 1)
+            --slo-e2e-p95 S (report the cheapest fleet meeting E2E p95 <= S)
+            --gpus-per-node N (fleet node grid; prices KV handoffs)
+            deterministic: the same --seed reproduces every number bitwise
   tables    Print all paper-table reproductions (Tables III-VI)
 ";
 
@@ -63,6 +77,21 @@ const SERVE_FLAGS: &[&str] = &[
     "seed",
 ];
 const TABLES_FLAGS: &[&str] = &[];
+const FLEET_FLAGS: &[&str] = &[
+    "model",
+    "tp",
+    "pp",
+    "sp",
+    "sd",
+    "replicas_max",
+    "router",
+    "requests",
+    "arrival_rate",
+    "seed",
+    "burst",
+    "slo_e2e_p95",
+    "gpus_per_node",
+];
 
 /// Minimal `--key value` flag parser with a per-subcommand allow-list.
 struct Flags(HashMap<String, String>);
@@ -390,6 +419,150 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
+    let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 16)?);
+    let requests = f.num("requests", 24)?;
+    let rate = f.float("arrival_rate", 8.0)?;
+    anyhow::ensure!(rate > 0.0, "--arrival-rate must be positive (req/s)");
+    let seed = f.num("seed", 0xC0FFEE)? as u64;
+    let burst = f.num("burst", 1)?;
+    anyhow::ensure!(burst >= 1, "--burst must be >= 1");
+    let router_name = f.str("router", "least-tokens");
+    let router = RouterPolicy::parse(&router_name).ok_or_else(|| {
+        anyhow::anyhow!("--router '{router_name}' unknown (rr|least-tokens|shortest-queue)")
+    })?;
+    let max_replicas = f.num("replicas_max", 3)?;
+    anyhow::ensure!(max_replicas >= 1, "--replicas-max must be >= 1");
+    // The SLO target is opt-in: without the flag the sweep reports
+    // percentiles only, judging nothing the user never asked about.
+    let slo_e2e = match f.opt("slo_e2e_p95") {
+        Some(_) => Some(f.float("slo_e2e_p95", 1.0)?),
+        None => None,
+    };
+    let gpn = f.num("gpus_per_node", 4)?;
+
+    let base = Deployment::builder()
+        .model(&f.str("model", "8b"))
+        .tp(f.num("tp", 2)?)
+        .pp(f.num("pp", 1)?)
+        .workload(sp, sd)
+        .build()?;
+    let arch = base.arch().clone();
+    let workload = WorkloadSpec {
+        arrivals: if burst > 1 {
+            ArrivalProcess::bursty(rate, burst)
+        } else {
+            ArrivalProcess::poisson(rate)
+        },
+        prompt: LengthDist::Fixed(sp),
+        decode: LengthDist::Fixed(sd),
+        requests,
+    };
+
+    // Candidates: colocated fleets of the base layout at every size, plus
+    // one disaggregated configuration following the paper's per-stage
+    // recommendation — a TP-heavy prefill pool (TTFT-optimal) feeding a
+    // PP-heavy decode pool (volume-optimal), KV handoff priced on the α–β
+    // link model.
+    let mut specs = Vec::with_capacity(max_replicas + 1);
+    for n in 1..=max_replicas {
+        specs.push(base.fleet(n)?.with_router(router).with_gpus_per_node(gpn)?);
+    }
+    let prefill_plan = if arch.supports_tp(4) {
+        Deployment::builder().arch(arch.clone()).tp(4).pp(1).workload(sp, sd).build()?
+    } else {
+        base.clone()
+    };
+    let decode_plan = if arch.supports_pp(4) {
+        Deployment::builder().arch(arch.clone()).tp(1).pp(4).workload(sp, sd).build()?
+    } else {
+        base.clone()
+    };
+    specs.push(
+        FleetSpec::disaggregated(&prefill_plan, 1, &decode_plan, 1)?
+            .with_router(router)
+            .with_gpus_per_node(gpn)?,
+    );
+
+    println!(
+        "fleet capacity sweep: model={} workload={requests}x(Sp={sp}, Sd={sd}) \
+         arrivals={} rate={rate}/s seed={seed:#x} router={}",
+        arch.name,
+        if burst > 1 {
+            format!("bursty({burst})")
+        } else {
+            "Poisson".to_string()
+        },
+        router.label()
+    );
+    let target = SloTarget { e2e_p95_s: slo_e2e, ..SloTarget::default() };
+    let candidates = fleet::capacity_sweep(specs, &workload, seed, target)?;
+
+    let mut rows = Vec::new();
+    for c in &candidates {
+        let m = &c.summary.model;
+        rows.push(vec![
+            c.spec.label(),
+            c.spec.total_gpus().to_string(),
+            format!("{:.1}", m.tokens_per_s),
+            format!("{:.1} / {:.1}", m.ttft.p50_s * 1e3, m.ttft.p95_s * 1e3),
+            format!("{:.2} / {:.2}", m.tpot.p50_s * 1e3, m.tpot.p95_s * 1e3),
+            format!("{:.3} / {:.3}", m.e2e.p50_s, m.e2e.p95_s),
+            if c.summary.kv_transfer_bytes > 0.0 {
+                format!(
+                    "{} ({:.2} ms)",
+                    report::fmt_bytes(c.summary.kv_transfer_bytes),
+                    c.summary.kv_transfer_s * 1e3
+                )
+            } else {
+                "-".to_string()
+            },
+            match slo_e2e {
+                Some(_) if c.meets_slo => "yes".to_string(),
+                Some(_) => "no".to_string(),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    print!(
+        "{}",
+        report::render_table(
+            "fleet sweep — model-time SLOs per fleet configuration",
+            &[
+                "Fleet",
+                "GPUs",
+                "tok/s",
+                "TTFT p50/p95 (ms)",
+                "TPOT p50/p95 (ms)",
+                "E2E p50/p95 (s)",
+                "KV handoff",
+                "SLO",
+            ],
+            &rows,
+        )
+    );
+    match slo_e2e {
+        Some(slo) => match fleet::cheapest(&candidates) {
+            Some(c) => println!(
+                "\ncheapest fleet meeting E2E p95 <= {slo:.2} s: {} ({} GPUs, \
+                 E2E p95 {:.3} s)",
+                c.spec.label(),
+                c.spec.total_gpus(),
+                c.summary.model.e2e.p95_s
+            ),
+            None => println!(
+                "\nno candidate meets E2E p95 <= {slo:.2} s — raise --replicas-max \
+                 or relax the target"
+            ),
+        },
+        None => println!(
+            "\nset --slo-e2e-p95 <seconds> to report the cheapest fleet meeting \
+             the target"
+        ),
+    }
+    Ok(())
+}
+
 fn cmd_tables() -> anyhow::Result<()> {
     let cases: Vec<(&str, ModelArch, Vec<(usize, usize)>)> = vec![
         ("Table III (TP)", ModelArch::llama31_8b(), vec![(2, 1), (4, 1)]),
@@ -433,6 +606,7 @@ fn main() -> anyhow::Result<()> {
         "trace" => cmd_trace(&Flags::parse("trace", rest, TRACE_FLAGS)?),
         "slo" => cmd_slo(&Flags::parse("slo", rest, SLO_FLAGS)?),
         "serve" => cmd_serve(&Flags::parse("serve", rest, SERVE_FLAGS)?),
+        "fleet" => cmd_fleet(&Flags::parse("fleet", rest, FLEET_FLAGS)?),
         "tables" => {
             Flags::parse("tables", rest, TABLES_FLAGS)?;
             cmd_tables()
@@ -505,6 +679,24 @@ mod tests {
         // Default when omitted: the historical constant.
         let f = Flags::parse("serve", &args(&["--arrival-rate", "50"]), SERVE_FLAGS).unwrap();
         assert_eq!(f.num("seed", 0xC0FFEE).unwrap(), 0xC0FFEE);
+    }
+
+    #[test]
+    fn fleet_flags_parse_with_defaults() {
+        let f = Flags::parse(
+            "fleet",
+            &args(&["--replicas-max", "2", "--router", "rr", "--slo-e2e-p95", "0.5"]),
+            FLEET_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(f.num("replicas_max", 3).unwrap(), 2);
+        assert_eq!(f.str("router", "least-tokens"), "rr");
+        assert_eq!(f.float("slo_e2e_p95", 1.0).unwrap(), 0.5);
+        assert_eq!(f.num("burst", 1).unwrap(), 1);
+        // Foreign flags are rejected with a suggestion, like every other
+        // subcommand.
+        let err = Flags::parse("fleet", &args(&["--concurrency", "4"]), FLEET_FLAGS).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --concurrency"), "{err}");
     }
 
     #[test]

@@ -52,6 +52,16 @@ pub enum PlanError {
         artifact_prefill_len: usize,
         max_seq: usize,
     },
+    /// A fleet member plan carries artifacts: numeric engines hold real
+    /// single-sequence PJRT state and cannot be replicated into a fleet.
+    FleetNumericUnsupported,
+    /// Fleet members must serve one model; two plans disagree.
+    FleetArchMismatch { base: String, other: String },
+    /// Colocated replicas cannot be added to a disaggregated fleet (and
+    /// vice versa): a fleet is either all-serve or prefill+decode pools.
+    FleetMixedRoles,
+    /// A disaggregated fleet needs at least one replica in each pool.
+    DisaggPoolMissing { pool: &'static str },
 }
 
 impl fmt::Display for PlanError {
@@ -120,6 +130,27 @@ impl fmt::Display for PlanError {
                  tokens within max_seq {max_seq}; workload Sp={prefill_len} \
                  Sd={decode_len} cannot be served — drop .workload() to \
                  derive it from the artifacts"
+            ),
+            PlanError::FleetNumericUnsupported => write!(
+                f,
+                "fleet members must be structural plans: numeric engines \
+                 hold real single-sequence PJRT state and cannot be \
+                 replicated — drop .artifacts() from the member plan"
+            ),
+            PlanError::FleetArchMismatch { base, other } => write!(
+                f,
+                "fleet members must serve one model: fleet is '{base}' but \
+                 the added replica plan is '{other}'"
+            ),
+            PlanError::FleetMixedRoles => write!(
+                f,
+                "a fleet is either all colocated replicas or disaggregated \
+                 prefill+decode pools — colocated replicas cannot join a \
+                 disaggregated fleet"
+            ),
+            PlanError::DisaggPoolMissing { pool } => write!(
+                f,
+                "a disaggregated fleet needs at least one {pool} replica"
             ),
         }
     }

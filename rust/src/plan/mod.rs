@@ -487,6 +487,20 @@ impl DeploymentPlan {
         }
     }
 
+    /// A colocated fleet of `replicas` copies of this plan — the entry
+    /// point to the fleet simulator ([`crate::fleet`]). The returned
+    /// [`crate::fleet::FleetSpec`] composes further: heterogeneous
+    /// replicas via [`crate::fleet::FleetSpec::add_replicas`],
+    /// disaggregated prefill/decode pools via
+    /// [`crate::fleet::FleetSpec::disaggregated`], router/scheduler/node
+    /// knobs via its `with_*` methods, then
+    /// [`crate::fleet::FleetSpec::simulate`] runs a workload on the model
+    /// clock. Requires a structural plan (numeric engines cannot be
+    /// replicated).
+    pub fn fleet(&self, replicas: usize) -> Result<crate::fleet::FleetSpec, PlanError> {
+        crate::fleet::FleetSpec::colocated(self, replicas)
+    }
+
     /// Build a full serving stack — iteration-level continuous-batching
     /// scheduler + engine session — over [`Self::engine`].
     ///

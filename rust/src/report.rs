@@ -1,5 +1,12 @@
 //! Report rendering: paper tables/figures side-by-side with analytical
 //! predictions and engine-measured values. Used by the benches and the CLI.
+//!
+//! Also home to the benches' machine-readable output: every fig/table
+//! bench accepts `--json <path>` and writes one `BENCH_<name>.json` file
+//! ([`BenchJson`]) with its scenario parameters and modeled
+//! seconds/bytes, so CI can accumulate a perf trajectory as workflow
+//! artifacts. The writer is hand-rolled (the vendored build environment
+//! has no serde): flat string/number fields only.
 
 use crate::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
 use crate::comm::{CollectiveKind, Stage, TraceSummary};
@@ -138,6 +145,146 @@ pub fn volume_line(arch: &ModelArch, layout: ParallelLayout, shape: InferenceSha
     )
 }
 
+/// One JSON scalar a bench result row can carry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl From<f64> for JsonValue {
+    fn from(v: f64) -> Self {
+        Self::Num(v)
+    }
+}
+
+impl From<usize> for JsonValue {
+    fn from(v: usize) -> Self {
+        Self::Int(v as i64)
+    }
+}
+
+impl From<i64> for JsonValue {
+    fn from(v: i64) -> Self {
+        Self::Int(v)
+    }
+}
+
+impl From<bool> for JsonValue {
+    fn from(v: bool) -> Self {
+        Self::Bool(v)
+    }
+}
+
+impl From<&str> for JsonValue {
+    fn from(v: &str) -> Self {
+        Self::Str(v.to_string())
+    }
+}
+
+impl From<String> for JsonValue {
+    fn from(v: String) -> Self {
+        Self::Str(v)
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_value(v: &JsonValue) -> String {
+    match v {
+        // Non-finite floats have no JSON spelling; degrade to null.
+        JsonValue::Num(x) if !x.is_finite() => "null".to_string(),
+        JsonValue::Num(x) => format!("{x}"),
+        JsonValue::Int(x) => format!("{x}"),
+        JsonValue::Str(s) => format!("\"{}\"", json_escape(s)),
+        JsonValue::Bool(b) => format!("{b}"),
+    }
+}
+
+fn json_object(fields: &[(String, JsonValue)]) -> String {
+    let inner: Vec<String> = fields
+        .iter()
+        .map(|(k, v)| format!("\"{}\": {}", json_escape(k), json_value(v)))
+        .collect();
+    format!("{{{}}}", inner.join(", "))
+}
+
+/// Machine-readable bench result: scenario parameters plus one flat
+/// object per result row, rendered as stable, diffable JSON.
+#[derive(Debug, Clone, Default)]
+pub struct BenchJson {
+    name: String,
+    params: Vec<(String, JsonValue)>,
+    rows: Vec<Vec<(String, JsonValue)>>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), params: Vec::new(), rows: Vec::new() }
+    }
+
+    /// Record one scenario parameter (model, Sp, Sd, ...).
+    pub fn param(&mut self, key: &str, value: impl Into<JsonValue>) -> &mut Self {
+        self.params.push((key.to_string(), value.into()));
+        self
+    }
+
+    /// Record one result row (a series point: layout, modeled seconds,
+    /// bytes, ...).
+    pub fn row(&mut self, fields: &[(&str, JsonValue)]) -> &mut Self {
+        self.rows
+            .push(fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect());
+        self
+    }
+
+    /// Render the document.
+    pub fn render(&self) -> String {
+        let rows: Vec<String> =
+            self.rows.iter().map(|r| format!("    {}", json_object(r))).collect();
+        format!(
+            "{{\n  \"bench\": \"{}\",\n  \"params\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            json_escape(&self.name),
+            json_object(&self.params),
+            rows.join(",\n")
+        )
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: &str) -> crate::Result<()> {
+        std::fs::write(path, self.render())
+            .map_err(|e| anyhow::anyhow!("writing bench JSON '{path}': {e}"))
+    }
+}
+
+/// Parse the shared `--json <path>` flag from a bench binary's argument
+/// list (other arguments — e.g. cargo's own bench flags — are ignored).
+pub fn bench_json_path() -> crate::Result<Option<String>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.iter().position(|a| a == "--json") {
+        Some(i) => match args.get(i + 1) {
+            Some(p) => Ok(Some(p.clone())),
+            None => anyhow::bail!("--json needs a file path"),
+        },
+        None => Ok(None),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +313,27 @@ mod tests {
     fn shape_formatting() {
         assert_eq!(fmt_shape(&[128, 4096]), "[128,4096]");
         assert_eq!(fmt_shape(&[64128]), "[64128]");
+    }
+
+    #[test]
+    fn bench_json_renders_valid_flat_documents() {
+        let mut j = BenchJson::new("fig8_tp_slo");
+        j.param("model", "Llama-3.2-3B").param("sp", 128usize);
+        j.row(&[("tp", JsonValue::from(2usize)), ("e2e_s", JsonValue::from(0.31))]);
+        j.row(&[("tp", JsonValue::from(8usize)), ("note", JsonValue::from("2 \"nodes\""))]);
+        let s = j.render();
+        assert!(s.contains("\"bench\": \"fig8_tp_slo\""), "{s}");
+        assert!(s.contains("\"model\": \"Llama-3.2-3B\""), "{s}");
+        assert!(s.contains("\"sp\": 128"), "{s}");
+        assert!(s.contains("\"e2e_s\": 0.31"), "{s}");
+        assert!(s.contains("\"note\": \"2 \\\"nodes\\\"\""), "{s}");
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        // Non-finite floats degrade to null instead of invalid JSON.
+        let mut j = BenchJson::new("x");
+        j.row(&[("v", JsonValue::from(f64::NAN))]);
+        assert!(j.render().contains("\"v\": null"));
     }
 
     #[test]

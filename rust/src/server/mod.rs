@@ -109,7 +109,10 @@ impl Server {
 
     /// Serve with open-loop Poisson arrivals at `rate_per_s`: request `i`
     /// arrives after the i-th exponential inter-arrival gap (deterministic
-    /// for a given `seed`). Queueing shows up in `queue_s`/`e2e_s`.
+    /// for a given `seed` — the arrival stream is
+    /// [`crate::workload::ArrivalProcess::Poisson`], so a single-replica
+    /// fleet simulation replays the exact same offsets). Queueing shows up
+    /// in `queue_s`/`e2e_s`.
     pub fn serve_poisson(
         &mut self,
         requests: Vec<Request>,
@@ -119,25 +122,9 @@ impl Server {
         anyhow::ensure!(rate_per_s > 0.0, "arrival rate must be positive (req/s)");
         let wall_start = Instant::now();
         let first = self.completed.len();
-        // One-shot splitmix64 scramble: every seed (including 0) lands on
-        // a well-mixed xorshift64* state, and distinct seeds stay
-        // distinct (splitmix64 is a bijection). The single seed whose
-        // scrambled state would be xorshift's absorbing 0 is nudged.
-        let mut state = Self::splitmix64(seed);
-        if state == 0 {
-            state = 0x9E37_79B9_7F4A_7C15;
-        }
-        let mut at = Duration::ZERO;
-        let mut arrivals = VecDeque::with_capacity(requests.len());
-        for r in requests {
-            state ^= state >> 12;
-            state ^= state << 25;
-            state ^= state >> 27;
-            let bits = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
-            let u = (bits >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
-            at += Duration::from_secs_f64(-(1.0 - u).ln() / rate_per_s);
-            arrivals.push_back((at, r));
-        }
+        let offsets =
+            crate::workload::ArrivalProcess::poisson(rate_per_s).offsets(requests.len(), seed);
+        let arrivals: VecDeque<(f64, Request)> = offsets.into_iter().zip(requests).collect();
         self.drive(arrivals)?;
         Ok(ServeSummary::from_metrics(&self.completed[first..], wall_start.elapsed()))
     }
@@ -146,16 +133,9 @@ impl Server {
         &self.completed
     }
 
-    fn splitmix64(mut z: u64) -> u64 {
-        z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
-    }
-
-    /// The iteration loop. `arrivals` are (offset-from-now, request) pairs
-    /// submitted once their time comes; an empty deque serves whatever is
-    /// already queued.
+    /// The iteration loop. `arrivals` are (offset-from-now seconds,
+    /// request) pairs submitted once their time comes; an empty deque
+    /// serves whatever is already queued.
     ///
     /// On a priced structural engine the loop is a discrete-event
     /// simulation: arrivals gate on the session's *model* clock (idle gaps
@@ -164,7 +144,7 @@ impl Server {
     /// arrival seed, independent of host scheduling. Unpriced (numeric)
     /// engines keep the wall-clock behaviour: arrivals gate on host time
     /// and idle gaps really sleep.
-    fn drive(&mut self, mut arrivals: VecDeque<(Duration, Request)>) -> Result<()> {
+    fn drive(&mut self, mut arrivals: VecDeque<(f64, Request)>) -> Result<()> {
         let t0 = Instant::now();
         let mut in_flight: HashMap<SeqId, InFlight> = HashMap::new();
         let mut session = self.engine.session();
@@ -177,14 +157,14 @@ impl Server {
             //    (queue full under open-loop load, oversized request) fails
             //    that request, not the serving loop — everything already
             //    in flight keeps its KV and completes normally.
-            let arrived = |at: &Duration| {
+            let arrived = |at: f64| {
                 if model_mode {
-                    session.model_now().expect("model mode") >= at.as_secs_f64()
+                    session.model_now().expect("model mode") >= at
                 } else {
-                    t0.elapsed() >= *at
+                    t0.elapsed().as_secs_f64() >= at
                 }
             };
-            while arrivals.front().is_some_and(|(at, _)| arrived(at)) {
+            while arrivals.front().is_some_and(|(at, _)| arrived(*at)) {
                 let (at, req) = arrivals.pop_front().expect("non-empty");
                 let (id, prompt_tokens) = (req.id, req.prompt.len());
                 if let Err(e) = self.scheduler.submit(req) {
@@ -200,7 +180,7 @@ impl Server {
                         error: Some(e.to_string()),
                     });
                 } else if model_mode {
-                    model_arrivals.insert(id, at.as_secs_f64());
+                    model_arrivals.insert(id, at);
                 }
             }
 
@@ -263,14 +243,14 @@ impl Server {
                     anyhow::bail!("head-of-line request cannot fit the KV pool");
                 }
                 match arrivals.front() {
-                    Some((at, _)) => {
+                    Some(&(at, _)) => {
                         if model_mode {
                             // Discrete-event jump to the next arrival.
-                            session.advance_model_time_to(at.as_secs_f64());
+                            session.advance_model_time_to(at);
                         } else {
-                            let now = t0.elapsed();
-                            if *at > now {
-                                std::thread::sleep(*at - now);
+                            let now = t0.elapsed().as_secs_f64();
+                            if at > now {
+                                std::thread::sleep(Duration::from_secs_f64(at - now));
                             }
                         }
                         continue;

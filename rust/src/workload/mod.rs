@@ -1,0 +1,378 @@
+//! Workload generation — seeded arrival processes × request-length
+//! distributions.
+//!
+//! Serving experiments are only comparable when the request stream is a
+//! pure function of a seed, so this module owns the one PRNG every
+//! arrival/length draw in the crate goes through ([`Rng64`]: a
+//! splitmix64-scrambled xorshift64* — the exact generator
+//! `server::serve_poisson` has always used, moved here so the fleet
+//! simulator and the single-replica serving path replay *bitwise
+//! identical* arrival streams for a given seed).
+//!
+//! Three axes compose into a [`WorkloadSpec`]:
+//!
+//! - [`ArrivalProcess`] — open-loop request arrivals: memoryless
+//!   [`ArrivalProcess::Poisson`] (the classic serving assumption) or
+//!   [`ArrivalProcess::Bursty`] (arrivals land in bursts of `burst`
+//!   back-to-back requests — the pattern an upstream batching gateway or
+//!   a retry storm produces — at the same long-run rate).
+//! - [`LengthDist`] ×2 — prompt and decode lengths per request: `Fixed`
+//!   (the paper's Sp/Sd methodology), `Uniform`, or the long-tail
+//!   ShareGPT-like `LongTail` mixture (mostly short chat turns, a heavy
+//!   minority of long documents) that stresses continuous batching and
+//!   KV admission.
+//! - request count.
+//!
+//! Arrival times and lengths draw from two *independent* seeded streams,
+//! so switching a length distribution never perturbs the arrival process
+//! (and vice versa) — A/B comparisons stay paired.
+
+use crate::server::Request;
+
+/// SplitMix64 — the one-shot seed scramble (a bijection, so distinct
+/// seeds stay distinct and every seed lands on a well-mixed state).
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The crate's deterministic workload PRNG: xorshift64* seeded through
+/// [`splitmix64`]. The single seed whose scrambled state would be
+/// xorshift's absorbing 0 is nudged, so seed 0 is as valid as any other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rng64 {
+    state: u64,
+}
+
+impl Rng64 {
+    pub fn new(seed: u64) -> Self {
+        let mut state = splitmix64(seed);
+        if state == 0 {
+            state = 0x9E37_79B9_7F4A_7C15;
+        }
+        Self { state }
+    }
+
+    /// Next 64 uniform bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state ^= self.state >> 12;
+        self.state ^= self.state << 25;
+        self.state ^= self.state >> 27;
+        self.state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform `f64` in `[0, 1)` (53 mantissa bits).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Open-loop request arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival gaps at
+    /// `rate_per_s` requests/second.
+    Poisson { rate_per_s: f64 },
+    /// Bursty arrivals: requests land in back-to-back groups of `burst`
+    /// (all at the same instant), with exponential gaps between groups
+    /// sized so the *long-run* rate is still `rate_per_s`. `burst = 1`
+    /// degenerates to Poisson.
+    Bursty { rate_per_s: f64, burst: usize },
+}
+
+impl ArrivalProcess {
+    pub fn poisson(rate_per_s: f64) -> Self {
+        Self::Poisson { rate_per_s }
+    }
+
+    pub fn bursty(rate_per_s: f64, burst: usize) -> Self {
+        Self::Bursty { rate_per_s, burst }
+    }
+
+    /// Long-run request rate (req/s).
+    pub fn rate_per_s(&self) -> f64 {
+        match *self {
+            Self::Poisson { rate_per_s } | Self::Bursty { rate_per_s, .. } => rate_per_s,
+        }
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.rate_per_s() > 0.0,
+            "arrival rate must be positive (req/s)"
+        );
+        if let Self::Bursty { burst, .. } = self {
+            anyhow::ensure!(*burst >= 1, "burst size must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Arrival offsets (seconds from the stream's epoch) of `n` requests,
+    /// deterministic per `seed`. The Poisson stream is bit-for-bit the
+    /// sequence `server::serve_poisson` replays for the same seed.
+    pub fn offsets(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng64::new(seed);
+        let mut at = 0.0f64;
+        match *self {
+            Self::Poisson { rate_per_s } => (0..n)
+                .map(|_| {
+                    let u = rng.next_f64();
+                    at += -(1.0 - u).ln() / rate_per_s;
+                    at
+                })
+                .collect(),
+            Self::Bursty { rate_per_s, burst } => {
+                let burst = burst.max(1);
+                // Gaps between bursts keep the long-run request rate.
+                let burst_rate = rate_per_s / burst as f64;
+                (0..n)
+                    .map(|i| {
+                        if i % burst == 0 {
+                            let u = rng.next_f64();
+                            at += -(1.0 - u).ln() / burst_rate;
+                        }
+                        at
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Per-request length distribution (prompt or decode tokens).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthDist {
+    /// Every request has exactly this length (the paper's methodology).
+    Fixed(usize),
+    /// Uniform over `lo..=hi`.
+    Uniform { lo: usize, hi: usize },
+    /// ShareGPT-like long-tail mixture: `short` tokens with probability
+    /// `1 - long_weight`, `long` tokens with probability `long_weight`.
+    LongTail { short: usize, long: usize, long_weight: f64 },
+}
+
+impl LengthDist {
+    pub fn validate(&self) -> crate::Result<()> {
+        match *self {
+            Self::Fixed(n) => anyhow::ensure!(n >= 1, "fixed length must be >= 1"),
+            Self::Uniform { lo, hi } => {
+                anyhow::ensure!(lo >= 1 && lo <= hi, "uniform needs 1 <= lo <= hi");
+            }
+            Self::LongTail { short, long, long_weight } => {
+                anyhow::ensure!(short >= 1 && long >= short, "long tail needs long >= short >= 1");
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&long_weight),
+                    "long_weight must be in [0, 1]"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw one length. `Fixed` consumes no randomness, so swapping it in
+    /// never perturbs the other distribution's stream.
+    pub fn sample(&self, rng: &mut Rng64) -> usize {
+        match *self {
+            Self::Fixed(n) => n,
+            Self::Uniform { lo, hi } => {
+                let span = (hi - lo + 1) as u64;
+                lo + (rng.next_u64() % span) as usize
+            }
+            Self::LongTail { short, long, long_weight } => {
+                if rng.next_f64() < long_weight {
+                    long
+                } else {
+                    short
+                }
+            }
+        }
+    }
+
+    /// Largest length the distribution can produce (KV sizing).
+    pub fn max_len(&self) -> usize {
+        match *self {
+            Self::Fixed(n) => n,
+            Self::Uniform { hi, .. } => hi,
+            Self::LongTail { long, .. } => long,
+        }
+    }
+}
+
+/// One generated request with its model-time arrival offset.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    /// Seconds from the workload epoch at which the request arrives.
+    pub at_s: f64,
+    pub request: Request,
+}
+
+/// A complete open-loop workload: arrival process × prompt/decode length
+/// distributions × request count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadSpec {
+    pub arrivals: ArrivalProcess,
+    pub prompt: LengthDist,
+    pub decode: LengthDist,
+    pub requests: usize,
+}
+
+impl WorkloadSpec {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.requests >= 1, "workload needs at least one request");
+        self.arrivals.validate()?;
+        self.prompt.validate()?;
+        self.decode.validate()
+    }
+
+    /// Generate the request stream: ids `0..requests` in arrival order,
+    /// deterministic per `seed`. Arrival times come from the seed's
+    /// arrival stream; lengths from an independent stream derived from
+    /// the same seed, so the two axes never alias.
+    pub fn generate(&self, seed: u64) -> crate::Result<Vec<TimedRequest>> {
+        self.validate()?;
+        let offsets = self.arrivals.offsets(self.requests, seed);
+        let mut lengths = Rng64::new(seed ^ 0x5EED_FACE_CAFE_F00D);
+        Ok(offsets
+            .into_iter()
+            .enumerate()
+            .map(|(i, at_s)| TimedRequest {
+                at_s,
+                request: Request {
+                    id: i as u64,
+                    prompt: vec![0; self.prompt.sample(&mut lengths)],
+                    decode_len: self.decode.sample(&mut lengths),
+                },
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_seed_deterministic_and_seed_sensitive() {
+        let mut a = Rng64::new(42);
+        let mut b = Rng64::new(42);
+        let mut c = Rng64::new(43);
+        let sa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let sb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let sc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(sa, sb);
+        assert_ne!(sa, sc);
+        // Seed 0 is valid (the scramble keeps xorshift off its absorbing
+        // state) and uniform draws stay in [0, 1).
+        let mut z = Rng64::new(0);
+        for _ in 0..1000 {
+            let u = z.next_f64();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn poisson_offsets_are_monotone_at_the_requested_rate() {
+        let offsets = ArrivalProcess::poisson(100.0).offsets(2000, 7);
+        assert!(offsets.windows(2).all(|w| w[1] > w[0]), "strictly increasing");
+        // Mean inter-arrival gap ~ 1/rate (law of large numbers).
+        let mean = offsets.last().unwrap() / 2000.0;
+        assert!((mean - 0.01).abs() < 0.002, "mean gap {mean} vs 0.01");
+    }
+
+    #[test]
+    fn bursty_offsets_group_and_keep_the_long_run_rate() {
+        let offsets = ArrivalProcess::bursty(100.0, 4).offsets(2000, 7);
+        // Within a burst, arrivals share one instant.
+        for chunk in offsets.chunks(4) {
+            assert!(chunk.iter().all(|&t| t == chunk[0]));
+        }
+        assert!(offsets.windows(2).all(|w| w[1] >= w[0]));
+        let mean = offsets.last().unwrap() / 2000.0;
+        assert!((mean - 0.01).abs() < 0.003, "long-run gap {mean} vs 0.01");
+        // burst = 1 is exactly the Poisson stream.
+        assert_eq!(
+            ArrivalProcess::bursty(50.0, 1).offsets(64, 3),
+            ArrivalProcess::poisson(50.0).offsets(64, 3)
+        );
+    }
+
+    #[test]
+    fn length_dists_respect_their_support() {
+        let mut rng = Rng64::new(9);
+        let uni = LengthDist::Uniform { lo: 8, hi: 32 };
+        let mut seen_lo = false;
+        for _ in 0..2000 {
+            let l = uni.sample(&mut rng);
+            assert!((8..=32).contains(&l));
+            seen_lo |= l < 12;
+        }
+        assert!(seen_lo, "uniform covers its low end");
+        let lt = LengthDist::LongTail { short: 32, long: 2048, long_weight: 0.1 };
+        let mut longs = 0usize;
+        for _ in 0..2000 {
+            let l = lt.sample(&mut rng);
+            assert!(l == 32 || l == 2048);
+            longs += usize::from(l == 2048);
+        }
+        let frac = longs as f64 / 2000.0;
+        assert!((frac - 0.1).abs() < 0.04, "long fraction {frac} vs 0.1");
+        assert_eq!(LengthDist::Fixed(16).sample(&mut rng), 16);
+        assert_eq!(lt.max_len(), 2048);
+        assert_eq!(uni.max_len(), 32);
+    }
+
+    #[test]
+    fn workload_generation_is_deterministic_and_streams_are_independent() {
+        let spec = WorkloadSpec {
+            arrivals: ArrivalProcess::poisson(200.0),
+            prompt: LengthDist::Uniform { lo: 8, hi: 64 },
+            decode: LengthDist::LongTail { short: 8, long: 128, long_weight: 0.2 },
+            requests: 32,
+        };
+        let a = spec.generate(11).unwrap();
+        let b = spec.generate(11).unwrap();
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.request.prompt.len(), y.request.prompt.len());
+            assert_eq!(x.request.decode_len, y.request.decode_len);
+        }
+        assert_eq!(a[0].request.id, 0);
+        assert_eq!(a[31].request.id, 31);
+        // Swapping length distributions must not move a single arrival.
+        let fixed = WorkloadSpec { prompt: LengthDist::Fixed(16), ..spec };
+        let c = fixed.generate(11).unwrap();
+        for (x, y) in a.iter().zip(c.iter()) {
+            assert_eq!(x.at_s, y.at_s, "length dist must not perturb arrivals");
+        }
+        // And the arrival stream is the ArrivalProcess's own.
+        let offsets = spec.arrivals.offsets(32, 11);
+        for (x, &t) in a.iter().zip(offsets.iter()) {
+            assert_eq!(x.at_s, t);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_specs() {
+        assert!(ArrivalProcess::poisson(0.0).validate().is_err());
+        assert!(ArrivalProcess::bursty(10.0, 0).validate().is_err());
+        assert!(LengthDist::Fixed(0).validate().is_err());
+        assert!(LengthDist::Uniform { lo: 4, hi: 2 }.validate().is_err());
+        assert!(LengthDist::Uniform { lo: 0, hi: 2 }.validate().is_err());
+        assert!(
+            LengthDist::LongTail { short: 8, long: 4, long_weight: 0.1 }.validate().is_err()
+        );
+        assert!(
+            LengthDist::LongTail { short: 8, long: 64, long_weight: 1.5 }.validate().is_err()
+        );
+        let bad = WorkloadSpec {
+            arrivals: ArrivalProcess::poisson(10.0),
+            prompt: LengthDist::Fixed(8),
+            decode: LengthDist::Fixed(8),
+            requests: 0,
+        };
+        assert!(bad.generate(0).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Fleet-simulator integration: router-policy properties, bitwise
+//! equivalence of a 1-replica fleet with the serving loop, and
+//! disaggregated KV-handoff accounting against `analysis::disagg`.
+
+use commsim::analysis::{DisaggregationModel, InferenceShape, ParallelLayout};
+use commsim::fleet::{FleetSpec, FleetSummary, RouterPolicy};
+use commsim::plan::{Deployment, DeploymentPlan};
+use commsim::server::{Request, SchedulerConfig};
+use commsim::workload::{ArrivalProcess, LengthDist, WorkloadSpec};
+
+fn tiny(tp: usize, pp: usize) -> DeploymentPlan {
+    Deployment::builder().model("tiny").tp(tp).pp(pp).workload(8, 4).build().unwrap()
+}
+
+fn fixed_workload(requests: usize, rate: f64, prompt: usize, decode: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(rate),
+        prompt: LengthDist::Fixed(prompt),
+        decode: LengthDist::Fixed(decode),
+        requests,
+    }
+}
+
+/// (a) Every router policy is a pure function of (spec, workload, seed):
+/// two runs agree bitwise per request, and a different seed diverges.
+#[test]
+fn every_policy_is_deterministic_per_seed() {
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::bursty(500.0, 4),
+        prompt: LengthDist::LongTail { short: 8, long: 32, long_weight: 0.3 },
+        decode: LengthDist::Uniform { lo: 2, hi: 6 },
+        requests: 24,
+    };
+    for policy in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastOutstandingTokens,
+        RouterPolicy::ShortestQueue,
+    ] {
+        let run = |seed: u64| -> FleetSummary {
+            tiny(2, 1)
+                .fleet(2)
+                .unwrap()
+                .with_router(policy)
+                .simulate(&workload, seed)
+                .unwrap()
+        };
+        let a = run(11);
+        let b = run(11);
+        assert_eq!(a.model, b.model, "{policy:?}: same seed, same model summary");
+        assert_eq!(a.per_request.len(), b.per_request.len());
+        for (x, y) in a.per_request.iter().zip(b.per_request.iter()) {
+            assert_eq!(x.request_id, y.request_id, "{policy:?}: completion order");
+            assert_eq!(x.replica, y.replica, "{policy:?}: routing decisions");
+            assert_eq!(x.model, y.model, "{policy:?}: per-request model times");
+        }
+        assert_eq!(a.completed, 24, "{policy:?} serves everything");
+        let c = run(12);
+        assert_ne!(a.model, c.model, "{policy:?}: different seed, different arrivals");
+    }
+}
+
+/// (b) For uniform traffic on identical replicas, least-outstanding-tokens
+/// never exceeds round-robin on the worst per-replica queue depth: the
+/// load-aware policy can only balance better than the oblivious one.
+#[test]
+fn least_tokens_never_exceeds_round_robin_max_depth_on_uniform_traffic() {
+    let workload = fixed_workload(48, 200.0, 8, 4);
+    for seed in [1u64, 2, 3, 0xC0FFEE] {
+        let max_depth = |policy: RouterPolicy| -> usize {
+            let s = tiny(1, 1)
+                .fleet(3)
+                .unwrap()
+                .with_router(policy)
+                .simulate(&workload, seed)
+                .unwrap();
+            assert_eq!(s.completed, 48, "{policy:?} seed={seed}");
+            s.replicas.iter().map(|r| r.max_depth).max().unwrap()
+        };
+        let rr = max_depth(RouterPolicy::RoundRobin);
+        let lot = max_depth(RouterPolicy::LeastOutstandingTokens);
+        assert!(
+            lot <= rr,
+            "seed={seed}: least-tokens max depth {lot} > round-robin {rr}"
+        );
+    }
+}
+
+/// (c) A colocated 1-replica fleet is the serving loop: it reproduces
+/// `serve_poisson`'s model-time metrics bitwise — per request and in
+/// aggregate — for the same scheduler config, arrival rate, and seed.
+#[test]
+fn single_replica_fleet_reproduces_serve_poisson_bitwise() {
+    let plan = Deployment::builder().model("tiny").tp(2).workload(8, 6).build().unwrap();
+    let cfg = SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 64, max_batch: 2 };
+    let (rate, seed, n) = (2000.0, 42u64, 8usize);
+
+    let mut server = plan.server(cfg).unwrap();
+    let reqs: Vec<Request> = (0..n as u64)
+        .map(|id| Request { id, prompt: vec![0; 8], decode_len: 6 })
+        .collect();
+    let served = server.serve_poisson(reqs, rate, seed).unwrap();
+    assert_eq!(served.completed, n);
+
+    let fleet = plan
+        .fleet(1)
+        .unwrap()
+        .with_scheduler(cfg)
+        .simulate(&fixed_workload(n, rate, 8, 6), seed)
+        .unwrap();
+    assert_eq!(fleet.completed, n);
+
+    // Aggregate: the model-time summary is bitwise identical.
+    assert_eq!(fleet.model, served.model.expect("structural serving is priced"));
+
+    // Per request: same completion order, same model clocks, bit for bit.
+    let server_order: Vec<u64> = server.completed().iter().map(|m| m.request_id).collect();
+    let fleet_order: Vec<u64> = fleet.per_request.iter().map(|m| m.request_id).collect();
+    assert_eq!(server_order, fleet_order, "completion order matches");
+    for (s, f) in server.completed().iter().zip(fleet.per_request.iter()) {
+        assert_eq!(s.generated_tokens, f.generated_tokens);
+        assert_eq!(s.model, f.model, "request {}", s.request_id);
+    }
+}
+
+/// KV-handoff accounting: every disaggregated request ships exactly the
+/// bytes `DisaggregationModel::volume` predicts, and the wire pricing
+/// follows the fleet's node grid (same node -> NVLink, across -> IB).
+#[test]
+fn disagg_kv_handoff_matches_disaggregation_model_and_link_class() {
+    let prefill = tiny(2, 1);
+    let decode = tiny(1, 2);
+    let expect = DisaggregationModel::new(
+        prefill.arch().clone(),
+        ParallelLayout::new(2, 1),
+        ParallelLayout::new(1, 2),
+    )
+    .volume(InferenceShape::new(8, 4, 2))
+    .kv_transfer;
+
+    let workload = fixed_workload(6, 1000.0, 8, 4);
+    // Both 2-GPU pools fit one 4-GPU node: NVLink handoff.
+    let nvlink = FleetSpec::disaggregated(&prefill, 1, &decode, 1)
+        .unwrap()
+        .simulate(&workload, 5)
+        .unwrap();
+    assert_eq!(nvlink.completed, 6);
+    for m in &nvlink.per_request {
+        assert_eq!(m.kv_transfer_bytes, expect, "request {}", m.request_id);
+        assert!(m.kv_transfer_s > 0.0);
+    }
+    assert_eq!(nvlink.kv_transfer_bytes, expect * 6.0);
+
+    // On 2-GPU nodes the pools land on different nodes: the same bytes
+    // ride InfiniBand and the handoff gets strictly slower.
+    let ib = FleetSpec::disaggregated(&prefill, 1, &decode, 1)
+        .unwrap()
+        .with_gpus_per_node(2)
+        .unwrap()
+        .simulate(&workload, 5)
+        .unwrap();
+    assert_eq!(ib.kv_transfer_bytes, nvlink.kv_transfer_bytes, "same bytes either way");
+    assert!(
+        ib.kv_transfer_s > nvlink.kv_transfer_s,
+        "cross-node handoff ({}s) must outprice intra-node ({}s)",
+        ib.kv_transfer_s,
+        nvlink.kv_transfer_s
+    );
+}
+
+/// The simulated disaggregation break-even (smallest decode length at
+/// which the disaggregated fleet's total comm undercuts the colocated
+/// one) agrees with the analytical `break_even_decode_len` within one
+/// decode step. (The sim's decode pool generates Sd-1 tokens — the first
+/// comes out of the prefill pool — so the crossing may land one step
+/// early; never more.)
+#[test]
+fn simulated_break_even_matches_analytic_within_one_decode_step() {
+    let sp = 128usize;
+    let colo_plan = |sd: usize| {
+        Deployment::builder().model("8b").tp(4).workload(sp, sd).build().unwrap()
+    };
+    let model = DisaggregationModel::new(
+        colo_plan(1).arch().clone(),
+        ParallelLayout::new(4, 1),
+        ParallelLayout::new(1, 4),
+    );
+    let be = model
+        .break_even_decode_len(ParallelLayout::new(4, 1), sp, 2, 4096)
+        .expect("break-even exists for colocated TP");
+
+    let comm = |sd: usize, disagg: bool| -> f64 {
+        let workload = fixed_workload(1, 1000.0, sp, sd);
+        let summary = if disagg {
+            let prefill =
+                Deployment::builder().model("8b").tp(4).workload(sp, sd).build().unwrap();
+            let decode =
+                Deployment::builder().model("8b").pp(4).workload(sp, sd).build().unwrap();
+            FleetSpec::disaggregated(&prefill, 1, &decode, 1)
+                .unwrap()
+                .simulate(&workload, 9)
+                .unwrap()
+        } else {
+            colo_plan(sd).fleet(1).unwrap().simulate(&workload, 9).unwrap()
+        };
+        assert_eq!(summary.completed, 1);
+        summary.comm_bytes
+    };
+
+    let lo = be.saturating_sub(2).max(1);
+    let hi = be + 2;
+    let mut crossing = None;
+    for sd in lo..=hi {
+        if comm(sd, true) < comm(sd, false) {
+            crossing = Some(sd);
+            break;
+        }
+    }
+    let crossing = crossing.unwrap_or_else(|| {
+        panic!("no simulated break-even in {lo}..={hi} (analytic {be})")
+    });
+    assert!(
+        crossing.abs_diff(be) <= 1,
+        "simulated break-even {crossing} vs analytic {be}"
+    );
+}

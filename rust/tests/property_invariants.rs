@@ -491,7 +491,7 @@ fn prop_sweep_plans_construct_engines() {
         for plan in DeploymentPlan::sweep(&arch, gpus) {
             assert_eq!(plan.layout().world_size(), gpus);
             let mut engine = plan.engine().expect("sweep yielded an infeasible plan");
-            let r = engine.generate(&vec![0i32; 8], 4).unwrap();
+            let r = engine.generate(&[0i32; 8], 4).unwrap();
             assert_eq!(r.tokens.len(), 4, "{}", plan.label());
             found += 1;
         }

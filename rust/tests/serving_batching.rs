@@ -104,7 +104,7 @@ fn single_request_serving_is_byte_identical_to_generate() {
 
     let plan = structural_plan(2, 2);
     let mut e1 = plan.engine().unwrap();
-    let r = e1.generate(&vec![0i32; 16], 8).unwrap();
+    let r = e1.generate(&[0i32; 16], 8).unwrap();
     assert_eq!(r.tokens.len(), 8);
     let direct = canonical(e1.trace().snapshot());
 
