@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
         arrivals: ArrivalProcess::poisson(rate),
         prompt: LengthDist::Fixed(sp),
         decode: LengthDist::Fixed(sd),
+        prefix: None,
         requests,
     };
     println!(

@@ -1,0 +1,217 @@
+//! End-to-end prefix-aware routing driver (the prefix analogue of
+//! `fleet_e2e`, and the CI prefix-routing smoke test).
+//!
+//! Four checks on the model clock, all structural (no artifacts):
+//!
+//! 1. **Affinity win** — on shared-prefix traffic (multi-turn
+//!    conversations) with per-replica prefix caches sized below the full
+//!    conversation working set, the cache-affinity router strictly
+//!    reduces modeled p95 TTFT vs round-robin: affinity pins each
+//!    conversation to a warm replica, round-robin spreads every
+//!    conversation across all replicas and thrashes their LRU caches.
+//!    (Replicas run `max_batch = 1`, so a request's model TTFT is
+//!    exactly its suffix's prefill price — the comparison isolates
+//!    routing × caching, with no batching noise.)
+//! 2. **Determinism** — re-running the affinity fleet with the same
+//!    spec, workload, and seed reproduces the model summary and every
+//!    per-request record bitwise.
+//! 3. **Saved-prefill accounting** — the fleet's total saved prefill
+//!    seconds equals the sum of per-request cached-token prefill prices,
+//!    recomputed independently from `CostModel::prefill_price` (and the
+//!    completion-order fold of the per-request records, bitwise).
+//! 4. **Prefix-free equivalence** — on a prefix-free workload the
+//!    affinity router produces the same assignment sequence (and the
+//!    bitwise-identical summary) as least-outstanding-tokens, and the
+//!    same TTFT percentiles as round-robin: the policy costs nothing
+//!    when there is nothing to share.
+
+use commsim::fleet::{FleetSpec, FleetSummary, RouterPolicy};
+use commsim::plan::Deployment;
+use commsim::report::fmt_bytes;
+use commsim::server::{PrefixCacheConfig, SchedulerConfig};
+use commsim::workload::{ArrivalProcess, LengthDist, PrefixProfile, WorkloadSpec};
+
+fn print_summary(label: &str, s: &FleetSummary) {
+    println!(
+        "[{label}] {} requests ({} ok, {} failed) — TTFT p50/p95 {:.2}/{:.2} ms, \
+         E2E p95 {:.3} s",
+        s.requests,
+        s.completed,
+        s.failed,
+        s.model.ttft.p50_s * 1e3,
+        s.model.ttft.p95_s * 1e3,
+        s.model.e2e.p95_s
+    );
+    println!(
+        "  prefix hits: {} cached tokens, saved {:.1} ms prefill / {} comm",
+        s.cached_prompt_tokens,
+        s.saved_prefill_s * 1e3,
+        fmt_bytes(s.saved_prefill_bytes)
+    );
+    for r in &s.replicas {
+        println!(
+            "  {:<24} assigned={:<3} tokens={:<5} cached={}",
+            r.label, r.assigned, r.tokens, r.cached_tokens
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // 6 long-lived conversations sharing 112-token histories; prompts are
+    // 127 tokens (7 full 16-token cache blocks — all shared — plus a
+    // 15-token unique turn). Bursty arrivals keep both replicas busy
+    // inside a burst, so cold conversations spread deterministically.
+    let (sp, sd, requests) = (127usize, 4usize, 240usize);
+    let (conversations, shared) = (6usize, 112usize);
+    let seed = 0xF1EE7u64;
+    let plan = Deployment::builder().model("3b").tp(2).workload(sp, sd).build()?;
+
+    // Per-replica cache: 16-token blocks, budgeted at exactly 28 blocks
+    // = 4 conversation prefixes (7 blocks each). Each replica can stay
+    // warm for its share of the 6 conversations, but not for all of
+    // them — round-robin's interleaved stream must thrash its LRU.
+    let block_tokens = 16usize;
+    let capacity_bytes = 28 * block_tokens * plan.arch().kv_bytes_per_token(2);
+    let cache = PrefixCacheConfig { block_tokens, capacity_bytes };
+    let scheduler = SchedulerConfig { max_batch: 1, ..SchedulerConfig::default() };
+    let fleet = |router: RouterPolicy| -> anyhow::Result<FleetSpec> {
+        Ok(plan
+            .fleet(2)?
+            .with_router(router)
+            .with_scheduler(scheduler)
+            .with_prefix_cache(cache)?)
+    };
+
+    let shared_wl = WorkloadSpec {
+        arrivals: ArrivalProcess::bursty(1.0, 4),
+        prompt: LengthDist::Fixed(sp),
+        decode: LengthDist::Fixed(sd),
+        prefix: Some(PrefixProfile::MultiTurn { conversations, shared }),
+        requests,
+    };
+    println!(
+        "prefix routing e2e: {} — {requests} requests, {conversations} conversations \
+         sharing {shared}/{sp} tokens, seed {seed:#x}\n",
+        plan.label()
+    );
+
+    // --- 1. affinity beats round-robin on shared-prefix traffic --------
+    let rr = fleet(RouterPolicy::RoundRobin)?.simulate(&shared_wl, seed)?;
+    let affinity = fleet(RouterPolicy::CacheAffinity)?.simulate(&shared_wl, seed)?;
+    print_summary("round-robin", &rr);
+    print_summary("affinity   ", &affinity);
+    anyhow::ensure!(
+        rr.completed == requests && affinity.completed == requests,
+        "all requests must complete"
+    );
+    anyhow::ensure!(
+        affinity.model.ttft.p95_s < rr.model.ttft.p95_s,
+        "cache affinity must strictly reduce modeled p95 TTFT on shared-prefix \
+         traffic ({:.3} vs {:.3} ms)",
+        affinity.model.ttft.p95_s * 1e3,
+        rr.model.ttft.p95_s * 1e3
+    );
+    anyhow::ensure!(
+        affinity.cached_prompt_tokens > rr.cached_prompt_tokens,
+        "affinity must hit more cached tokens than round-robin"
+    );
+    println!(
+        "\naffinity win OK: p95 TTFT {:.2} ms -> {:.2} ms ({:.2}x)",
+        rr.model.ttft.p95_s * 1e3,
+        affinity.model.ttft.p95_s * 1e3,
+        rr.model.ttft.p95_s / affinity.model.ttft.p95_s
+    );
+
+    // --- 2. bitwise determinism per seed -------------------------------
+    let again = fleet(RouterPolicy::CacheAffinity)?.simulate(&shared_wl, seed)?;
+    anyhow::ensure!(
+        again.model == affinity.model,
+        "same spec + workload + seed must reproduce the model summary bitwise"
+    );
+    anyhow::ensure!(again.per_request.len() == affinity.per_request.len());
+    for (a, b) in affinity.per_request.iter().zip(again.per_request.iter()) {
+        anyhow::ensure!(
+            a.request_id == b.request_id
+                && a.replica == b.replica
+                && a.cached_prompt_tokens == b.cached_prompt_tokens
+                && a.saved_prefill_s == b.saved_prefill_s
+                && a.model == b.model,
+            "per-request records must reproduce bitwise (request {})",
+            a.request_id
+        );
+    }
+    println!("determinism OK: identical summary and per-request records on re-run");
+
+    // --- 3. saved prefill = sum of cached-token prefill prices ---------
+    let cm = plan.cost_model();
+    let mut recomputed = 0.0f64;
+    let mut folded = 0.0f64;
+    for m in &affinity.per_request {
+        if m.cached_prompt_tokens > 0 {
+            recomputed += cm.prefill_price(m.prompt_tokens)
+                - cm.prefill_price(m.prompt_tokens - m.cached_prompt_tokens);
+        }
+        folded += m.saved_prefill_s;
+    }
+    anyhow::ensure!(
+        affinity.saved_prefill_s == folded,
+        "summary total must be the completion-order fold of per-request savings"
+    );
+    anyhow::ensure!(
+        (affinity.saved_prefill_s - recomputed).abs()
+            <= 1e-9 * recomputed.abs().max(f64::MIN_POSITIVE),
+        "total saved prefill seconds {} must equal the sum of per-request \
+         cached-token prefill prices {}",
+        affinity.saved_prefill_s,
+        recomputed
+    );
+    anyhow::ensure!(affinity.saved_prefill_s > 0.0 && affinity.saved_prefill_bytes > 0.0);
+    println!(
+        "saved-prefill accounting OK: {:.1} ms total = sum of per-request \
+         cached-token prefill prices ({} saved comm)",
+        affinity.saved_prefill_s * 1e3,
+        fmt_bytes(affinity.saved_prefill_bytes)
+    );
+
+    // --- 4. prefix-free traffic: affinity costs nothing ----------------
+    // (The equivalences are structural, so a shorter run suffices.)
+    let free_wl = WorkloadSpec { prefix: None, requests: 60, ..shared_wl };
+    let free_affinity = fleet(RouterPolicy::CacheAffinity)?.simulate(&free_wl, seed)?;
+    let free_lot = fleet(RouterPolicy::LeastOutstandingTokens)?.simulate(&free_wl, seed)?;
+    let free_rr = fleet(RouterPolicy::RoundRobin)?.simulate(&free_wl, seed)?;
+    anyhow::ensure!(
+        free_affinity.cached_prompt_tokens == 0 && free_lot.cached_prompt_tokens == 0,
+        "unique-tokened prompts must never hit a prefix cache"
+    );
+    anyhow::ensure!(
+        free_affinity.model == free_lot.model,
+        "with zero hits, affinity must reproduce least-outstanding-tokens bitwise"
+    );
+    for (a, l) in free_affinity.per_request.iter().zip(free_lot.per_request.iter()) {
+        anyhow::ensure!(
+            a.request_id == l.request_id && a.replica == l.replica,
+            "assignment sequences must match (request {})",
+            a.request_id
+        );
+    }
+    // With max_batch = 1, a request's model TTFT is its own prefill
+    // price, so every policy reports the same TTFT percentiles on
+    // prefix-free fixed-length traffic — up to last-ulp drift from each
+    // replica's timeline accumulation (`(T + d) - T`), hence the 1e-9
+    // band rather than bitwise equality across *different* schedules.
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * b.abs().max(f64::MIN_POSITIVE);
+    anyhow::ensure!(
+        close(free_affinity.model.ttft.p50_s, free_rr.model.ttft.p50_s)
+            && close(free_affinity.model.ttft.p95_s, free_rr.model.ttft.p95_s),
+        "prefix-free TTFT percentiles must match round-robin's ({:?} vs {:?})",
+        free_affinity.model.ttft,
+        free_rr.model.ttft
+    );
+    println!(
+        "prefix-free equivalence OK: affinity == least-tokens bitwise, TTFT \
+         percentiles match round-robin"
+    );
+
+    println!("\nprefix_routing_e2e OK");
+    Ok(())
+}

@@ -39,7 +39,7 @@
 mod replica;
 mod router;
 
-pub use router::{ReplicaLoad, Router, RouterPolicy};
+pub use router::{ReplicaLoad, Router, RouterPolicy, CACHE_AFFINITY_HIT_WEIGHT};
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashMap};
@@ -50,9 +50,10 @@ use crate::comm::{CollectiveKind, Stage, TraceSummary};
 use crate::engine::Engine;
 use crate::model::ModelArch;
 use crate::plan::{DeploymentPlan, PlanError};
+use crate::server::prefix_cache::chain_hashes;
 use crate::server::{
-    ModelRequestTimes, ModelServeSummary, Request, RequestMetrics, SchedulerConfig,
-    ServeSummary,
+    ModelRequestTimes, ModelServeSummary, PrefixCache, PrefixCacheConfig, Request,
+    RequestMetrics, SchedulerConfig, ServeSummary,
 };
 use crate::workload::WorkloadSpec;
 
@@ -96,6 +97,10 @@ pub struct FleetSpec {
     router: RouterPolicy,
     scheduler: SchedulerConfig,
     gpus_per_node: usize,
+    /// Per-replica prefix-cache model (None: no caching, every prompt
+    /// prefills in full and [`RouterPolicy::CacheAffinity`] degenerates
+    /// to least-outstanding-tokens).
+    prefix_cache: Option<PrefixCacheConfig>,
 }
 
 /// Fleet members must serve the same model structurally; numeric plans
@@ -130,6 +135,7 @@ impl FleetSpec {
             router: RouterPolicy::RoundRobin,
             scheduler: SchedulerConfig::default(),
             gpus_per_node: 4,
+            prefix_cache: None,
         })
     }
 
@@ -164,6 +170,7 @@ impl FleetSpec {
             router: RouterPolicy::RoundRobin,
             scheduler: SchedulerConfig::default(),
             gpus_per_node: 4,
+            prefix_cache: None,
         })
     }
 
@@ -204,6 +211,26 @@ impl FleetSpec {
         }
         self.gpus_per_node = gpus_per_node;
         Ok(self)
+    }
+
+    /// Attach a prefix-cache model to every replica (block-granular LRU
+    /// with a byte budget — see [`crate::server::PrefixCache`]). Requests
+    /// whose leading tokens are resident on their replica prefill only
+    /// the uncached suffix; pair with [`RouterPolicy::CacheAffinity`] to
+    /// steer same-prefix traffic back to warm replicas.
+    pub fn with_prefix_cache(mut self, cfg: PrefixCacheConfig) -> Result<Self, PlanError> {
+        if cfg.block_tokens == 0 {
+            return Err(PlanError::ZeroDegree { axis: "prefix-cache block tokens" });
+        }
+        if cfg.capacity_bytes == 0 {
+            return Err(PlanError::ZeroDegree { axis: "prefix-cache capacity bytes" });
+        }
+        self.prefix_cache = Some(cfg);
+        Ok(self)
+    }
+
+    pub fn prefix_cache(&self) -> Option<PrefixCacheConfig> {
+        self.prefix_cache
     }
 
     pub fn router(&self) -> RouterPolicy {
@@ -259,7 +286,8 @@ impl FleetSpec {
             parts.push(format!("{prefix}{}x {}", j - i, cur.plan.label()));
             i = j;
         }
-        format!("{} [{}]", parts.join(" + "), self.router.label())
+        let pfx = if self.prefix_cache.is_some() { " +pfx" } else { "" };
+        format!("{} [{}{pfx}]", parts.join(" + "), self.router.label())
     }
 
     /// Run the fleet against an open-loop workload. Deterministic per
@@ -323,6 +351,7 @@ impl FleetSpec {
                 assigned: 0,
                 max_depth: 0,
                 tokens: 0,
+                cached_tokens: 0,
             })
             .collect();
         let mut kv_total_bytes = 0.0f64;
@@ -332,10 +361,21 @@ impl FleetSpec {
             let mut replicas: Vec<Replica<'_>> = engines
                 .iter_mut()
                 .enumerate()
-                .map(|(i, e)| Replica::new(stats[i].label.clone(), e.session(), self.scheduler))
+                .map(|(i, e)| {
+                    Replica::new(
+                        stats[i].label.clone(),
+                        e.session(),
+                        self.scheduler,
+                        self.prefix_cache.map(|cfg| PrefixCache::new(cfg, kv_per_token[i])),
+                        self.replicas[i].plan.cost_model(),
+                    )
+                })
                 .collect();
             let mut arrival_router = Router::new(self.router);
             let mut handoff_router = Router::new(self.router);
+            // Cache-affinity needs a per-(replica, request) hit estimate;
+            // the other policies route on the plain load snapshot.
+            let estimate_hits = self.router.wants_prefix_estimates();
 
             loop {
                 // Earliest replica with work, by (model clock, index).
@@ -359,8 +399,19 @@ impl FleetSpec {
                     let Reverse(ev) = heap.pop().expect("deliver branch peeked an event");
                     match ev.kind {
                         EventKind::Arrival(req) => {
-                            let loads: Vec<ReplicaLoad> =
-                                serve_pool.iter().map(|&i| replicas[i].load()).collect();
+                            // Hash the prompt's block chain once per
+                            // arrival; every replica probe reuses it.
+                            let chain = match (estimate_hits, self.prefix_cache) {
+                                (true, Some(c)) => Some(chain_hashes(c.block_tokens, &req.prompt)),
+                                _ => None,
+                            };
+                            let loads: Vec<ReplicaLoad> = serve_pool
+                                .iter()
+                                .map(|&i| match &chain {
+                                    Some(c) => replicas[i].load_for_chain(c, req.prompt.len()),
+                                    None => replicas[i].load(),
+                                })
+                                .collect();
                             let pick = serve_pool[arrival_router.route(&loads)];
                             let id = req.id;
                             pending.insert(
@@ -390,6 +441,9 @@ impl FleetSpec {
                                     decode_replica: None,
                                     prompt_tokens: p.prompt_tokens,
                                     generated_tokens: 0,
+                                    cached_prompt_tokens: 0,
+                                    saved_prefill_s: 0.0,
+                                    saved_prefill_bytes: 0.0,
                                     kv_transfer_bytes: 0.0,
                                     kv_transfer_s: 0.0,
                                     model: None,
@@ -413,6 +467,9 @@ impl FleetSpec {
                                     decode_replica: p.decode_replica,
                                     prompt_tokens: p.prompt_tokens,
                                     generated_tokens: pf.generated,
+                                    cached_prompt_tokens: pf.cached_tokens,
+                                    saved_prefill_s: pf.saved_prefill_s,
+                                    saved_prefill_bytes: pf.saved_prefill_bytes,
                                     kv_transfer_bytes: p.kv_bytes,
                                     kv_transfer_s: p.kv_s,
                                     model: Some(times_from(pf)),
@@ -440,6 +497,9 @@ impl FleetSpec {
                                 decode_replica: None,
                                 prompt_tokens: d.prompt_tokens,
                                 generated_tokens: d.generated,
+                                cached_prompt_tokens: d.cached_tokens,
+                                saved_prefill_s: d.saved_prefill_s,
+                                saved_prefill_bytes: d.saved_prefill_bytes,
                                 kv_transfer_bytes: 0.0,
                                 kv_transfer_s: 0.0,
                                 model: if d.rejected {
@@ -459,6 +519,9 @@ impl FleetSpec {
                                     decode_replica: None,
                                     prompt_tokens: d.prompt_tokens,
                                     generated_tokens: d.generated,
+                                    cached_prompt_tokens: d.cached_tokens,
+                                    saved_prefill_s: d.saved_prefill_s,
+                                    saved_prefill_bytes: d.saved_prefill_bytes,
                                     kv_transfer_bytes: 0.0,
                                     kv_transfer_s: 0.0,
                                     model: if d.rejected {
@@ -481,6 +544,9 @@ impl FleetSpec {
                                     decode_replica: None,
                                     prompt_tokens: d.prompt_tokens,
                                     generated_tokens: d.generated,
+                                    cached_prompt_tokens: d.cached_tokens,
+                                    saved_prefill_s: d.saved_prefill_s,
+                                    saved_prefill_bytes: d.saved_prefill_bytes,
                                     kv_transfer_bytes: 0.0,
                                     kv_transfer_s: 0.0,
                                     model: Some(times_from(&d)),
@@ -540,6 +606,12 @@ impl FleetSpec {
                                 decode_replica: p.decode_replica,
                                 prompt_tokens: p.prompt_tokens,
                                 generated_tokens: generated,
+                                // Prefix-cache savings happen in the
+                                // prefill pool; the decode pool's 1-token
+                                // intake never hits.
+                                cached_prompt_tokens: pf.cached_tokens,
+                                saved_prefill_s: pf.saved_prefill_s,
+                                saved_prefill_bytes: pf.saved_prefill_bytes,
                                 kv_transfer_bytes: p.kv_bytes,
                                 kv_transfer_s: p.kv_s,
                                 model,
@@ -552,6 +624,7 @@ impl FleetSpec {
 
             for (i, r) in replicas.iter().enumerate() {
                 stats[i].tokens = r.tokens_served();
+                stats[i].cached_tokens = r.cached_tokens_total();
             }
         }
 
@@ -564,6 +637,9 @@ impl FleetSpec {
                 request_id: m.request_id,
                 prompt_tokens: m.prompt_tokens,
                 generated_tokens: m.generated_tokens,
+                cached_prompt_tokens: m.cached_prompt_tokens,
+                saved_prefill_s: m.saved_prefill_s,
+                saved_prefill_bytes: m.saved_prefill_bytes,
                 queue_s: 0.0,
                 ttft_s: 0.0,
                 tpot_s: 0.0,
@@ -588,6 +664,9 @@ impl FleetSpec {
             model: agg.model.unwrap_or_default(),
             per_request: completed,
             replicas: stats,
+            cached_prompt_tokens: agg.cached_prompt_tokens,
+            saved_prefill_s: agg.saved_prefill_s,
+            saved_prefill_bytes: agg.saved_prefill_bytes,
             kv_transfer_bytes: kv_total_bytes,
             kv_transfer_s: kv_total_s,
             comm_bytes,
@@ -715,6 +794,14 @@ pub struct FleetRequestMetrics {
     pub decode_replica: Option<usize>,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
+    /// Leading prompt tokens served from the replica's prefix cache
+    /// (0 without caches or on a miss).
+    pub cached_prompt_tokens: usize,
+    /// Model-time prefill seconds the cached prefix saved this request
+    /// (`CostModel::prefill_price(full) - prefill_price(suffix)`).
+    pub saved_prefill_s: f64,
+    /// Corrected prefill communication bytes the cached prefix saved.
+    pub saved_prefill_bytes: f64,
     /// KV-cache bytes shipped prefill → decode (0 when colocated).
     pub kv_transfer_bytes: f64,
     /// Modeled wire time of the KV handoff (stamped into the request's
@@ -738,6 +825,8 @@ pub struct ReplicaStats {
     pub max_depth: usize,
     /// Tokens the replica generated.
     pub tokens: usize,
+    /// Prompt tokens the replica served out of its prefix cache.
+    pub cached_tokens: usize,
 }
 
 /// Aggregate of one fleet simulation.
@@ -753,6 +842,14 @@ pub struct FleetSummary {
     /// Per-request metrics in completion order.
     pub per_request: Vec<FleetRequestMetrics>,
     pub replicas: Vec<ReplicaStats>,
+    /// Total prompt tokens served out of prefix caches.
+    pub cached_prompt_tokens: usize,
+    /// Total model-time prefill seconds saved by prefix-cache hits
+    /// (summed over `per_request` in completion order).
+    pub saved_prefill_s: f64,
+    /// Total corrected prefill communication bytes saved by prefix-cache
+    /// hits.
+    pub saved_prefill_bytes: f64,
     /// Total KV-cache bytes shipped prefill → decode.
     pub kv_transfer_bytes: f64,
     /// Total modeled KV-handoff wire seconds.
@@ -836,6 +933,7 @@ mod tests {
             arrivals: ArrivalProcess::poisson(rate),
             prompt: LengthDist::Fixed(8),
             decode: LengthDist::Fixed(4),
+            prefix: None,
             requests,
         }
     }
@@ -877,6 +975,68 @@ mod tests {
             FleetSpec::colocated(&plan, 1).unwrap().with_gpus_per_node(0).unwrap_err(),
             PlanError::ZeroDegree { .. }
         ));
+        // Degenerate prefix-cache configs are rejected.
+        let cache0 = PrefixCacheConfig { block_tokens: 0, capacity_bytes: 1 << 20 };
+        assert!(matches!(
+            FleetSpec::colocated(&plan, 1).unwrap().with_prefix_cache(cache0).unwrap_err(),
+            PlanError::ZeroDegree { .. }
+        ));
+        let cap0 = PrefixCacheConfig { block_tokens: 16, capacity_bytes: 0 };
+        assert!(matches!(
+            FleetSpec::colocated(&plan, 1).unwrap().with_prefix_cache(cap0).unwrap_err(),
+            PlanError::ZeroDegree { .. }
+        ));
+    }
+
+    #[test]
+    fn shared_prefix_workload_hits_caches_and_saves_priced_prefill() {
+        use crate::workload::PrefixProfile;
+        let wl = WorkloadSpec {
+            arrivals: ArrivalProcess::poisson(2000.0),
+            prompt: LengthDist::Fixed(24),
+            decode: LengthDist::Fixed(4),
+            prefix: Some(PrefixProfile::SystemPrompt { shared: 16 }),
+            requests: 8,
+        };
+        let cache = PrefixCacheConfig { block_tokens: 8, capacity_bytes: 64 << 20 };
+        let spec = FleetSpec::colocated(&tiny_plan(2, 1), 1)
+            .unwrap()
+            .with_prefix_cache(cache)
+            .unwrap()
+            .with_router(RouterPolicy::CacheAffinity);
+        assert!(spec.label().ends_with("[affinity +pfx]"), "{}", spec.label());
+        let s = spec.simulate(&wl, 3).unwrap();
+        assert_eq!(s.completed, 8);
+        // First request is cold; every later one hits the 16-token system
+        // prompt (both full blocks of it).
+        let misses = s.per_request.iter().filter(|m| m.cached_prompt_tokens == 0).count();
+        assert_eq!(misses, 1, "only the first request prefills the system prompt");
+        let cm = tiny_plan(2, 1).cost_model();
+        for m in &s.per_request {
+            if m.cached_prompt_tokens > 0 {
+                assert_eq!(m.cached_prompt_tokens, 16);
+                assert_eq!(
+                    m.saved_prefill_s,
+                    cm.prefill_price(24) - cm.prefill_price(8),
+                    "request {}",
+                    m.request_id
+                );
+                assert!(m.saved_prefill_bytes > 0.0);
+            }
+        }
+        assert_eq!(s.cached_prompt_tokens, 7 * 16);
+        assert_eq!(s.replicas[0].cached_tokens, 7 * 16);
+        let per_request_sum: f64 = s.per_request.iter().map(|m| m.saved_prefill_s).sum();
+        assert_eq!(s.saved_prefill_s, per_request_sum, "summary = completion-order sum");
+        // Without caches the same workload saves nothing and runs
+        // strictly slower on makespan (the prefills are all paid).
+        let cold = FleetSpec::colocated(&tiny_plan(2, 1), 1)
+            .unwrap()
+            .simulate(&wl, 3)
+            .unwrap();
+        assert_eq!(cold.cached_prompt_tokens, 0);
+        assert_eq!(cold.saved_prefill_s, 0.0);
+        assert!(s.model.makespan_s < cold.model.makespan_s, "hits shorten the run");
     }
 
     #[test]

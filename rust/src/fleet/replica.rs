@@ -1,6 +1,7 @@
 //! One fleet replica: a priced structural engine session plus its own
-//! continuous-batching scheduler, advanced one engine iteration at a time
-//! by the fleet's discrete-event loop.
+//! continuous-batching scheduler (and, optionally, a prefix-cache
+//! model), advanced one engine iteration at a time by the fleet's
+//! discrete-event loop.
 //!
 //! The per-iteration logic (admission, per-token KV growth with mid-decode
 //! bail-out, one `Session::step`, model-clock bookkeeping) mirrors
@@ -8,12 +9,21 @@
 //! colocated fleet reproduces `serve_poisson`'s model-time metrics
 //! bitwise — but is factored so the fleet can interleave many replicas on
 //! one global model clock and inject handoff arrivals mid-simulation.
+//!
+//! With a [`PrefixCache`] attached, admission consumes the cached-prefix
+//! hint: the session prefills (and the cost model prices) only the
+//! uncached suffix, the KV pool is charged only the suffix's blocks, and
+//! the replica records the saved prefill seconds/bytes per request. The
+//! router reads [`Replica::load_for_chain`] (a hit estimate over a
+//! once-hashed prompt chain) to steer same-prefix requests back to warm
+//! replicas.
 
 use std::collections::HashMap;
 
 use crate::engine::kv::SeqId;
 use crate::engine::{Session, SequenceInput};
-use crate::server::{Request, Scheduler, SchedulerConfig};
+use crate::server::{PrefixCache, Request, Scheduler, SchedulerConfig};
+use crate::simtime::CostModel;
 use crate::Result;
 
 use super::router::ReplicaLoad;
@@ -25,6 +35,13 @@ use super::router::ReplicaLoad;
 pub(crate) struct ReplicaDone {
     pub id: SeqId,
     pub prompt_tokens: usize,
+    /// Leading prompt tokens served from the replica's prefix cache at
+    /// admission (0 without a cache or on a miss).
+    pub cached_tokens: usize,
+    /// Model-time prefill seconds the cached prefix saved this pass.
+    pub saved_prefill_s: f64,
+    /// Corrected prefill communication bytes the cached prefix saved.
+    pub saved_prefill_bytes: f64,
     /// Tokens this replica generated for the sequence.
     pub generated: usize,
     /// Last sampled token (the decode pool's 1-token prompt under
@@ -47,6 +64,9 @@ struct Flight {
     arrival_s: f64,
     admitted_s: f64,
     prompt_tokens: usize,
+    cached_tokens: usize,
+    saved_prefill_s: f64,
+    saved_prefill_bytes: f64,
     /// Tokens this replica was asked to generate (outstanding-token
     /// accounting on bail-out).
     decode_budget: usize,
@@ -60,24 +80,38 @@ pub(crate) struct Replica<'e> {
     label: String,
     session: Session<'e>,
     scheduler: Scheduler,
+    /// Prefix-cache model (shared-prefix serving) and the pricing core
+    /// that values its hits.
+    prefix: Option<PrefixCache>,
+    cost: CostModel,
     /// Model-time arrival offset and cached-context token count of
     /// submitted-but-not-admitted requests.
     arrivals: HashMap<SeqId, (f64, usize)>,
     flights: HashMap<SeqId, Flight>,
     outstanding_tokens: usize,
     tokens_served: usize,
+    cached_tokens_total: usize,
 }
 
 impl<'e> Replica<'e> {
-    pub fn new(label: String, session: Session<'e>, cfg: SchedulerConfig) -> Self {
+    pub fn new(
+        label: String,
+        session: Session<'e>,
+        cfg: SchedulerConfig,
+        prefix: Option<PrefixCache>,
+        cost: CostModel,
+    ) -> Self {
         Self {
             label,
             session,
             scheduler: Scheduler::new(cfg),
+            prefix,
+            cost,
             arrivals: HashMap::new(),
             flights: HashMap::new(),
             outstanding_tokens: 0,
             tokens_served: 0,
+            cached_tokens_total: 0,
         }
     }
 
@@ -100,11 +134,32 @@ impl<'e> Replica<'e> {
         ReplicaLoad {
             queue_depth: self.queue_depth(),
             outstanding_tokens: self.outstanding_tokens,
+            prefix_hit_tokens: 0,
         }
+    }
+
+    /// Load snapshot for routing one specific request: [`Self::load`]
+    /// plus the prefix cache's hit estimate for its prompt — the
+    /// cache-affinity router's signal. Takes the prompt's precomputed
+    /// [`crate::server::prefix_cache::chain_hashes`] chain so the router
+    /// hashes each prompt once, not once per replica; the estimate is
+    /// clamped like admission (never the whole prompt — one token always
+    /// prefills). Read-only: routing must not mutate.
+    pub fn load_for_chain(&self, chain: &[u64], prompt_len: usize) -> ReplicaLoad {
+        let hit = match &self.prefix {
+            Some(cache) => cache.lookup_chain(chain).min(prompt_len.saturating_sub(1)),
+            None => 0,
+        };
+        ReplicaLoad { prefix_hit_tokens: hit, ..self.load() }
     }
 
     pub fn tokens_served(&self) -> usize {
         self.tokens_served
+    }
+
+    /// Total prompt tokens this replica served out of its prefix cache.
+    pub fn cached_tokens_total(&self) -> usize {
+        self.cached_tokens_total
     }
 
     /// Route a request to this replica at model time `at_s`. An idle
@@ -136,21 +191,40 @@ impl<'e> Replica<'e> {
     /// every request that left the replica during the pass.
     pub fn advance(&mut self) -> Result<Vec<ReplicaDone>> {
         let mut done = Vec::new();
-        // Admission (mirror of the serving loop's step 2).
-        while let Some(admitted) = self.scheduler.admit_next()? {
+        // Admission (mirror of the serving loop's step 2, with the
+        // prefix-cache hint shrinking the KV charge and the prefill).
+        loop {
+            // Raw lookup: `admit_next_with_cached` owns the clamp that
+            // keeps at least one token prefilling.
+            let cached_hint = match (&self.prefix, self.scheduler.peek()) {
+                (Some(cache), Some(head)) => cache.lookup(&head.prompt),
+                _ => 0,
+            };
+            let Some(admitted) = self.scheduler.admit_next_with_cached(cached_hint)? else {
+                break;
+            };
             let req = admitted.request;
+            let cached = admitted.cached_tokens;
             let id = req.id;
             let prompt_tokens = req.prompt.len();
             let decode_len = req.decode_len;
             let (arrival_s, context) = self.arrivals.remove(&id).unwrap_or((0.0, 0));
-            let input = SequenceInput { id, prompt: req.prompt, max_new_tokens: decode_len };
-            if let Err(e) = self.session.admit_with_context(input, context) {
+            let suffix = req.prompt[cached..].to_vec();
+            let input = SequenceInput { id, prompt: suffix, max_new_tokens: decode_len };
+            // The cached prefix sits below the request's own context (a
+            // disaggregated decode-pool handoff ships `context` tokens;
+            // colocated serving has context 0): decode positions start
+            // past both.
+            if let Err(e) = self.session.admit_with_context(input, context + cached) {
                 self.scheduler.finish(id)?;
                 self.outstanding_tokens =
                     self.outstanding_tokens.saturating_sub(prompt_tokens + decode_len);
                 done.push(ReplicaDone {
                     id,
                     prompt_tokens,
+                    cached_tokens: 0,
+                    saved_prefill_s: 0.0,
+                    saved_prefill_bytes: 0.0,
                     generated: 0,
                     last_token: 0,
                     arrival_s,
@@ -162,6 +236,23 @@ impl<'e> Replica<'e> {
                 });
                 continue;
             }
+            if let Some(cache) = &mut self.prefix {
+                // Only admitted prompts enter the cache — a rejected
+                // admission computes no KV.
+                let now_s = self.session.model_now().unwrap_or(0.0);
+                cache.observe(&req.prompt, now_s);
+            }
+            let (saved_prefill_s, saved_prefill_bytes) = if cached > 0 {
+                (
+                    self.cost.prefill_price(prompt_tokens)
+                        - self.cost.prefill_price(prompt_tokens - cached),
+                    self.cost.prefill_comm_bytes(prompt_tokens)
+                        - self.cost.prefill_comm_bytes(prompt_tokens - cached),
+                )
+            } else {
+                (0.0, 0.0)
+            };
+            self.cached_tokens_total += cached;
             let admitted_s = self.now().max(arrival_s);
             self.flights.insert(
                 id,
@@ -169,6 +260,9 @@ impl<'e> Replica<'e> {
                     arrival_s,
                     admitted_s,
                     prompt_tokens,
+                    cached_tokens: cached,
+                    saved_prefill_s,
+                    saved_prefill_bytes,
                     decode_budget: decode_len,
                     first_token_s: None,
                     last_token_s: admitted_s,
@@ -245,6 +339,9 @@ impl<'e> Replica<'e> {
         ReplicaDone {
             id,
             prompt_tokens: f.prompt_tokens,
+            cached_tokens: f.cached_tokens,
+            saved_prefill_s: f.saved_prefill_s,
+            saved_prefill_bytes: f.saved_prefill_bytes,
             generated: f.generated,
             last_token: f.last_token,
             arrival_s: f.arrival_s,

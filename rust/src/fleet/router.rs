@@ -7,6 +7,17 @@
 //! assignment sequence — a precondition for the fleet simulator's
 //! bitwise per-seed reproducibility.
 
+/// How many outstanding tokens of load one estimated prefix-hit token
+/// offsets under [`RouterPolicy::CacheAffinity`]. A hit token saves the
+/// whole prefill work of that token *plus* its TP AllReduce share, while
+/// an outstanding token is mostly cheap decode work — so cache affinity
+/// is worth trading several queued tokens for, but not a collapsed
+/// replica: past this ratio the policy falls back to load balancing.
+/// (At 8, a typical shared prefix outweighs a handful of queued
+/// requests, which keeps conversation→replica pinning stable through
+/// transient imbalance without ever overriding real overload.)
+pub const CACHE_AFFINITY_HIT_WEIGHT: i64 = 8;
+
 /// Dispatch policy over a pool of replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RouterPolicy {
@@ -18,6 +29,14 @@ pub enum RouterPolicy {
     LeastOutstandingTokens,
     /// Pick the replica with the fewest queued + in-flight requests.
     ShortestQueue,
+    /// Cache-affinity: blend the replica's estimated prefix-hit tokens
+    /// for *this* request ([`ReplicaLoad::prefix_hit_tokens`]) with its
+    /// outstanding-token load — minimize
+    /// `outstanding − HIT_WEIGHT · hit`. With no hits anywhere (a
+    /// prefix-free workload, or no prefix caches configured) this is
+    /// exactly [`RouterPolicy::LeastOutstandingTokens`], assignment for
+    /// assignment.
+    CacheAffinity,
 }
 
 impl RouterPolicy {
@@ -26,10 +45,11 @@ impl RouterPolicy {
             Self::RoundRobin => "round-robin",
             Self::LeastOutstandingTokens => "least-tokens",
             Self::ShortestQueue => "shortest-queue",
+            Self::CacheAffinity => "affinity",
         }
     }
 
-    /// Parse a CLI spelling (`rr`, `least-tokens`, `sq`, ...).
+    /// Parse a CLI spelling (`rr`, `least-tokens`, `sq`, `affinity`, ...).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "rr" | "round-robin" | "roundrobin" => Some(Self::RoundRobin),
@@ -37,8 +57,15 @@ impl RouterPolicy {
                 Some(Self::LeastOutstandingTokens)
             }
             "sq" | "shortest-queue" => Some(Self::ShortestQueue),
+            "ca" | "affinity" | "cache-affinity" => Some(Self::CacheAffinity),
             _ => None,
         }
+    }
+
+    /// Whether the policy reads [`ReplicaLoad::prefix_hit_tokens`] — the
+    /// fleet loop only computes per-request hit estimates when asked.
+    pub fn wants_prefix_estimates(&self) -> bool {
+        matches!(self, Self::CacheAffinity)
     }
 }
 
@@ -50,6 +77,10 @@ pub struct ReplicaLoad {
     /// Tokens accepted but not yet processed: un-prefilled prompt tokens
     /// plus still-to-generate decode tokens.
     pub outstanding_tokens: usize,
+    /// Estimated prompt tokens of the request *being routed* that this
+    /// replica's prefix cache already holds (0 without a cache). Unlike
+    /// the other fields this is per-(replica, request), not per-replica.
+    pub prefix_hit_tokens: usize,
 }
 
 /// A policy plus its dispatch state (the round-robin cursor).
@@ -78,14 +109,20 @@ impl Router {
                 self.next_rr = self.next_rr.wrapping_add(1);
                 i
             }
-            RouterPolicy::LeastOutstandingTokens => argmin_by(loads, |l| l.outstanding_tokens),
-            RouterPolicy::ShortestQueue => argmin_by(loads, |l| l.queue_depth),
+            RouterPolicy::LeastOutstandingTokens => {
+                argmin_by(loads, |l| l.outstanding_tokens as i64)
+            }
+            RouterPolicy::ShortestQueue => argmin_by(loads, |l| l.queue_depth as i64),
+            RouterPolicy::CacheAffinity => argmin_by(loads, |l| {
+                l.outstanding_tokens as i64
+                    - CACHE_AFFINITY_HIT_WEIGHT * l.prefix_hit_tokens as i64
+            }),
         }
     }
 }
 
 /// Index of the smallest key; ties resolve to the lowest index.
-fn argmin_by(loads: &[ReplicaLoad], key: impl Fn(&ReplicaLoad) -> usize) -> usize {
+fn argmin_by(loads: &[ReplicaLoad], key: impl Fn(&ReplicaLoad) -> i64) -> usize {
     loads
         .iter()
         .enumerate()
@@ -99,7 +136,11 @@ mod tests {
     use super::*;
 
     fn load(queue_depth: usize, outstanding_tokens: usize) -> ReplicaLoad {
-        ReplicaLoad { queue_depth, outstanding_tokens }
+        ReplicaLoad { queue_depth, outstanding_tokens, prefix_hit_tokens: 0 }
+    }
+
+    fn hit(outstanding_tokens: usize, prefix_hit_tokens: usize) -> ReplicaLoad {
+        ReplicaLoad { queue_depth: 0, outstanding_tokens, prefix_hit_tokens }
     }
 
     #[test]
@@ -121,6 +162,24 @@ mod tests {
     }
 
     #[test]
+    fn cache_affinity_blends_hits_with_load() {
+        let mut ca = Router::new(RouterPolicy::CacheAffinity);
+        // Zero hits everywhere: exactly least-outstanding-tokens,
+        // including the low-index tie-break.
+        assert_eq!(ca.route(&[load(0, 30), load(9, 10), load(0, 20)]), 1);
+        assert_eq!(ca.route(&[load(0, 10), load(0, 10)]), 0);
+        // A warm replica wins despite a moderately deeper queue: 64 hit
+        // tokens offset up to 8*64 = 512 outstanding tokens.
+        assert_eq!(ca.route(&[hit(0, 0), hit(400, 64)]), 1);
+        // ...but not a collapsed one.
+        assert_eq!(ca.route(&[hit(0, 0), hit(600, 64)]), 0);
+        // Among equally-loaded replicas the biggest hit wins.
+        assert_eq!(ca.route(&[hit(50, 16), hit(50, 48), hit(50, 32)]), 1);
+        // Hit ties break toward the lowest index.
+        assert_eq!(ca.route(&[hit(50, 32), hit(50, 32)]), 0);
+    }
+
+    #[test]
     fn parse_accepts_cli_spellings() {
         assert_eq!(RouterPolicy::parse("rr"), Some(RouterPolicy::RoundRobin));
         assert_eq!(
@@ -129,6 +188,11 @@ mod tests {
         );
         assert_eq!(RouterPolicy::parse("shortest-queue"), Some(RouterPolicy::ShortestQueue));
         assert_eq!(RouterPolicy::parse("sq"), Some(RouterPolicy::ShortestQueue));
+        assert_eq!(RouterPolicy::parse("affinity"), Some(RouterPolicy::CacheAffinity));
+        assert_eq!(RouterPolicy::parse("cache-affinity"), Some(RouterPolicy::CacheAffinity));
+        assert_eq!(RouterPolicy::parse("ca"), Some(RouterPolicy::CacheAffinity));
         assert_eq!(RouterPolicy::parse("bogus"), None);
+        assert!(RouterPolicy::CacheAffinity.wants_prefix_estimates());
+        assert!(!RouterPolicy::RoundRobin.wants_prefix_estimates());
     }
 }

@@ -67,17 +67,23 @@
 //!   (`Engine::generate` is a single-sequence wrapper over it).
 //! - [`server`] — request router, iteration-level continuous-batching
 //!   scheduler (prompt-footprint admission, on-demand KV growth,
-//!   `max_batch` concurrency, Poisson arrivals), SLO metrics with
-//!   p50/p95/p99 TTFT/TPOT/E2E — in *wall time* (host clocks; the real
-//!   latency of numeric PJRT serving) and, on priced structural engines,
-//!   *model time* (the virtual-clock seconds the calibrated testbed would
-//!   take — deterministic for a fixed workload and arrival seed).
+//!   `max_batch` concurrency, Poisson arrivals), a per-replica
+//!   block-granular [`server::PrefixCache`] (admissions prefill only the
+//!   uncached suffix and record saved prefill seconds/bytes), and SLO
+//!   metrics with p50/p95/p99 TTFT/TPOT/E2E — in *wall time* (host
+//!   clocks; the real latency of numeric PJRT serving) and, on priced
+//!   structural engines, *model time* (the virtual-clock seconds the
+//!   calibrated testbed would take — deterministic for a fixed workload
+//!   and arrival seed).
 //! - [`workload`] — seeded open-loop workload generation: Poisson/bursty
 //!   arrival processes × fixed/uniform/long-tail request-length
-//!   distributions, all drawing from one deterministic PRNG.
+//!   distributions × shared-prefix profiles
+//!   ([`workload::PrefixProfile`]: system-prompt, multi-turn, few-shot),
+//!   all drawing from independent streams of one deterministic PRNG.
 //! - [`fleet`] — the fleet-scale simulator: N priced replicas (each its
 //!   own plan — heterogeneous fleets allowed) behind a pluggable router
-//!   (round-robin, least-outstanding-tokens, shortest-queue), colocated
+//!   (round-robin, least-outstanding-tokens, shortest-queue, and
+//!   prefix-cache-aware cache-affinity), colocated
 //!   or split into disaggregated prefill/decode pools with per-request
 //!   KV-cache handoffs priced through the α–β link model; plus the
 //!   capacity sweep that finds the cheapest fleet meeting an SLO target

@@ -24,8 +24,8 @@ use commsim::model::ModelArch;
 use commsim::plan::Deployment;
 use commsim::report;
 use commsim::runtime::ArtifactStore;
-use commsim::server::{Request, SchedulerConfig};
-use commsim::workload::{ArrivalProcess, LengthDist, WorkloadSpec};
+use commsim::server::{PrefixCacheConfig, Request, SchedulerConfig};
+use commsim::workload::{ArrivalProcess, LengthDist, PrefixProfile, WorkloadSpec};
 
 const USAGE: &str = "\
 commsim — communication patterns in distributed LLM inference (paper reproduction)
@@ -50,9 +50,14 @@ COMMANDS:
             --model 3b|8b|13b|tiny  --tp N  --pp N  --sp N  --sd N
             --replicas-max N (colocated fleet sizes 1..=N; a disaggregated
                               prefill/decode configuration is always added)
-            --router rr|least-tokens|shortest-queue
+            --router rr|least-tokens|shortest-queue|affinity
             --requests N  --arrival-rate R (Poisson req/s)  --seed N
             --burst N (group arrivals into bursts of N; default 1)
+            --prefix-profile none|system|multi-turn|few-shot (shared-prefix
+                              traffic; enables per-replica prefix caches)
+            --prefix-shared N (shared prefix tokens; default Sp/2)
+            --prefix-groups N (conversations/templates; default 8)
+            --prefix-cache-mb N (per-replica prefix-cache budget; default 64)
             --slo-e2e-p95 S (report the cheapest fleet meeting E2E p95 <= S)
             --gpus-per-node N (fleet node grid; prices KV handoffs)
             deterministic: the same --seed reproduces every number bitwise
@@ -89,6 +94,10 @@ const FLEET_FLAGS: &[&str] = &[
     "arrival_rate",
     "seed",
     "burst",
+    "prefix_profile",
+    "prefix_shared",
+    "prefix_groups",
+    "prefix_cache_mb",
     "slo_e2e_p95",
     "gpus_per_node",
 ];
@@ -441,6 +450,43 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     };
     let gpn = f.num("gpus_per_node", 4)?;
 
+    // Shared-prefix traffic: the profile shapes the workload's prompts
+    // (and enables per-replica prefix caches on every candidate fleet).
+    let shared = f.num("prefix_shared", sp / 2)?;
+    let groups = f.num("prefix_groups", 8)?;
+    let profile = match f.str("prefix_profile", "none").as_str() {
+        "none" => None,
+        "system" | "system-prompt" => Some(PrefixProfile::SystemPrompt { shared }),
+        "multi-turn" | "multiturn" => {
+            Some(PrefixProfile::MultiTurn { conversations: groups, shared })
+        }
+        "few-shot" | "fewshot" => Some(PrefixProfile::FewShot {
+            templates: groups,
+            shared,
+            zero_shot_weight: 0.25,
+        }),
+        other => anyhow::bail!(
+            "--prefix-profile '{other}' unknown (none|system|multi-turn|few-shot)"
+        ),
+    };
+    // A flag must never be silently ignored while numbers come out (same
+    // rule as the per-subcommand allow-lists): the prefix-shape knobs
+    // only mean something under a profile.
+    if profile.is_none() {
+        for flag in ["prefix_shared", "prefix_groups"] {
+            anyhow::ensure!(
+                f.opt(flag).is_none(),
+                "--{} needs --prefix-profile system|multi-turn|few-shot \
+                 (prefix-free traffic has no shared prefix to shape)",
+                flag.replace('_', "-")
+            );
+        }
+    }
+    let cache_mb = f.num("prefix_cache_mb", 64)?;
+    anyhow::ensure!(cache_mb >= 1, "--prefix-cache-mb must be >= 1");
+    let prefix_cache = (profile.is_some() || f.opt("prefix_cache_mb").is_some())
+        .then_some(PrefixCacheConfig { block_tokens: 16, capacity_bytes: cache_mb << 20 });
+
     let base = Deployment::builder()
         .model(&f.str("model", "8b"))
         .tp(f.num("tp", 2)?)
@@ -456,8 +502,10 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
         },
         prompt: LengthDist::Fixed(sp),
         decode: LengthDist::Fixed(sd),
+        prefix: profile,
         requests,
     };
+    workload.validate()?;
 
     // Candidates: colocated fleets of the base layout at every size, plus
     // one disaggregated configuration following the paper's per-stage
@@ -465,8 +513,15 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     // PP-heavy decode pool (volume-optimal), KV handoff priced on the α–β
     // link model.
     let mut specs = Vec::with_capacity(max_replicas + 1);
+    let finish = |mut s: FleetSpec| -> anyhow::Result<FleetSpec> {
+        s = s.with_router(router).with_gpus_per_node(gpn)?;
+        if let Some(cache) = prefix_cache {
+            s = s.with_prefix_cache(cache)?;
+        }
+        Ok(s)
+    };
     for n in 1..=max_replicas {
-        specs.push(base.fleet(n)?.with_router(router).with_gpus_per_node(gpn)?);
+        specs.push(finish(base.fleet(n)?)?);
     }
     let prefill_plan = if arch.supports_tp(4) {
         Deployment::builder().arch(arch.clone()).tp(4).pp(1).workload(sp, sd).build()?
@@ -478,22 +533,25 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     } else {
         base.clone()
     };
-    specs.push(
-        FleetSpec::disaggregated(&prefill_plan, 1, &decode_plan, 1)?
-            .with_router(router)
-            .with_gpus_per_node(gpn)?,
-    );
+    specs.push(finish(FleetSpec::disaggregated(&prefill_plan, 1, &decode_plan, 1)?)?);
 
     println!(
         "fleet capacity sweep: model={} workload={requests}x(Sp={sp}, Sd={sd}) \
-         arrivals={} rate={rate}/s seed={seed:#x} router={}",
+         arrivals={} rate={rate}/s seed={seed:#x} router={}{}",
         arch.name,
         if burst > 1 {
             format!("bursty({burst})")
         } else {
             "Poisson".to_string()
         },
-        router.label()
+        router.label(),
+        match &workload.prefix {
+            Some(p) => format!(
+                " prefix={}(shared={shared}, groups={groups}, cache={cache_mb}MiB)",
+                p.label()
+            ),
+            None => String::new(),
+        }
     );
     let target = SloTarget { e2e_p95_s: slo_e2e, ..SloTarget::default() };
     let candidates = fleet::capacity_sweep(specs, &workload, seed, target)?;
@@ -517,6 +575,15 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
             } else {
                 "-".to_string()
             },
+            if c.summary.cached_prompt_tokens > 0 {
+                format!(
+                    "{} tok ({:.1} ms)",
+                    c.summary.cached_prompt_tokens,
+                    c.summary.saved_prefill_s * 1e3
+                )
+            } else {
+                "-".to_string()
+            },
             match slo_e2e {
                 Some(_) if c.meets_slo => "yes".to_string(),
                 Some(_) => "no".to_string(),
@@ -536,6 +603,7 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
                 "TPOT p50/p95 (ms)",
                 "E2E p50/p95 (s)",
                 "KV handoff",
+                "Prefix hits (saved)",
                 "SLO",
             ],
             &rows,
@@ -697,6 +765,29 @@ mod tests {
         // subcommand.
         let err = Flags::parse("fleet", &args(&["--concurrency", "4"]), FLEET_FLAGS).unwrap_err();
         assert!(err.to_string().contains("unknown flag --concurrency"), "{err}");
+        // Prefix-routing flags parse (dashes normalize to underscores).
+        let f = Flags::parse(
+            "fleet",
+            &args(&[
+                "--router",
+                "affinity",
+                "--prefix-profile",
+                "multi-turn",
+                "--prefix-shared",
+                "96",
+                "--prefix-groups",
+                "6",
+                "--prefix-cache-mb",
+                "32",
+            ]),
+            FLEET_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(f.str("router", "least-tokens"), "affinity");
+        assert_eq!(f.str("prefix_profile", "none"), "multi-turn");
+        assert_eq!(f.num("prefix_shared", 64).unwrap(), 96);
+        assert_eq!(f.num("prefix_groups", 8).unwrap(), 6);
+        assert_eq!(f.num("prefix_cache_mb", 64).unwrap(), 32);
     }
 
     #[test]

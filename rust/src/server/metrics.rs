@@ -33,6 +33,17 @@ pub struct RequestMetrics {
     pub request_id: u64,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
+    /// Leading prompt tokens served out of the replica's prefix cache at
+    /// admission (0 without a cache or on a miss). Prefill ran — and was
+    /// priced — only for the remaining suffix.
+    pub cached_prompt_tokens: usize,
+    /// Model-time prefill seconds the cached prefix saved this request:
+    /// `CostModel::prefill_price(full) - prefill_price(suffix)`. 0 on a
+    /// miss or without a pricing cost model.
+    pub saved_prefill_s: f64,
+    /// Corrected prefill communication bytes (TP AllReduce et al.) the
+    /// cached prefix saved this request.
+    pub saved_prefill_bytes: f64,
     /// Queue wait before admission into the engine's batch.
     pub queue_s: f64,
     /// Time to first token, excluding queueing.
@@ -111,6 +122,15 @@ pub struct ServeSummary {
     pub tpot: LatencyPercentiles,
     pub e2e: LatencyPercentiles,
     pub e2e_mean_s: f64,
+    /// Total prompt tokens served out of prefix caches across the run
+    /// (0 when no cache is configured).
+    pub cached_prompt_tokens: usize,
+    /// Total model-time prefill seconds saved by prefix-cache hits,
+    /// summed over requests in completion order.
+    pub saved_prefill_s: f64,
+    /// Total corrected prefill communication bytes saved by prefix-cache
+    /// hits.
+    pub saved_prefill_bytes: f64,
     /// Model-time percentiles from the priced timeline — present when the
     /// run served through a pricing engine (structural plans), absent on
     /// wall-clock-only (numeric) serving.
@@ -181,6 +201,9 @@ impl ServeSummary {
             tpot: LatencyPercentiles::from_samples(&tpots),
             e2e: LatencyPercentiles::from_samples(&e2es),
             e2e_mean_s: mean_or_zero(&e2es),
+            cached_prompt_tokens: metrics.iter().map(|m| m.cached_prompt_tokens).sum(),
+            saved_prefill_s: metrics.iter().map(|m| m.saved_prefill_s).sum(),
+            saved_prefill_bytes: metrics.iter().map(|m| m.saved_prefill_bytes).sum(),
             model: Self::model_summary(metrics, total_tokens),
         }
     }
@@ -224,6 +247,9 @@ mod tests {
             request_id: id,
             prompt_tokens: 8,
             generated_tokens: 10,
+            cached_prompt_tokens: 0,
+            saved_prefill_s: 0.0,
+            saved_prefill_bytes: 0.0,
             queue_s: 0.0,
             ttft_s,
             tpot_s,
@@ -270,6 +296,22 @@ mod tests {
         assert!((s.ttft.p50_s - 0.6).abs() < 1e-9); // rank round(0.5*9)=5 -> 6th
         assert!((s.ttft.p99_s - 1.0).abs() < 1e-9);
         assert!(s.e2e.p50_s <= s.e2e.p99_s);
+    }
+
+    #[test]
+    fn prefix_savings_sum_across_requests() {
+        let mut a = m(0, 0.1, 0.01, 0.2, None);
+        a.cached_prompt_tokens = 24;
+        a.saved_prefill_s = 0.5;
+        a.saved_prefill_bytes = 1024.0;
+        let mut b = m(1, 0.1, 0.01, 0.2, None);
+        b.cached_prompt_tokens = 8;
+        b.saved_prefill_s = 0.25;
+        b.saved_prefill_bytes = 512.0;
+        let s = ServeSummary::from_metrics(&[a, b], Duration::from_secs(1));
+        assert_eq!(s.cached_prompt_tokens, 32);
+        assert_eq!(s.saved_prefill_s, 0.5 + 0.25);
+        assert_eq!(s.saved_prefill_bytes, 1536.0);
     }
 
     #[test]

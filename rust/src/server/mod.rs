@@ -17,12 +17,14 @@
 //! open-loop Poisson arrival process at a configurable rate.
 
 pub mod metrics;
+pub mod prefix_cache;
 pub mod scheduler;
 
 pub use metrics::{
     percentile, LatencyPercentiles, ModelRequestTimes, ModelServeSummary, RequestMetrics,
     ServeSummary,
 };
+pub use prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheStats};
 pub use scheduler::{Request, Scheduler, SchedulerConfig};
 
 use std::collections::{HashMap, VecDeque};
@@ -43,6 +45,9 @@ struct ModelFlight {
 /// Per-request bookkeeping while a sequence is in the engine.
 struct InFlight {
     prompt_tokens: usize,
+    cached_tokens: usize,
+    saved_prefill_s: f64,
+    saved_prefill_bytes: f64,
     enqueued_at: Instant,
     admitted_at: Instant,
     first_token_at: Option<Instant>,
@@ -55,6 +60,10 @@ struct InFlight {
 pub struct Server {
     engine: Engine,
     scheduler: Scheduler,
+    /// Prefix-cache model ([`Self::with_prefix_cache`]): admissions
+    /// consume a cached-prefix hint, prefill only the uncached suffix,
+    /// and record saved prefill seconds/bytes.
+    prefix: Option<PrefixCache>,
     completed: Vec<RequestMetrics>,
 }
 
@@ -66,7 +75,24 @@ impl Server {
         if !engine.supports_batched_decode() {
             cfg.max_batch = 1;
         }
-        Self { engine, scheduler: Scheduler::new(cfg), completed: Vec::new() }
+        Self { engine, scheduler: Scheduler::new(cfg), prefix: None, completed: Vec::new() }
+    }
+
+    /// Attach a prefix-cache model: requests whose leading tokens are
+    /// resident prefill only their uncached suffix (priced accordingly —
+    /// structural engines only; numeric backends hold real KV state and
+    /// cannot fake a warm cache, so the cache is rejected there).
+    pub fn with_prefix_cache(mut self, cfg: PrefixCacheConfig) -> crate::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            self.engine.supports_batched_decode(),
+            "prefix caching needs a structural engine: numeric backends hold \
+             real KV state and cannot fake a warm cache"
+        );
+        let ecfg = self.engine.config();
+        let kv = ecfg.arch.kv_bytes_per_token(ecfg.trace_dtype_bytes);
+        self.prefix = Some(PrefixCache::new(cfg, kv));
+        Ok(self)
     }
 
     pub fn engine(&self) -> &Engine {
@@ -75,6 +101,11 @@ impl Server {
 
     pub fn scheduler(&self) -> &Scheduler {
         &self.scheduler
+    }
+
+    /// The prefix cache, when one is attached.
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix.as_ref()
     }
 
     /// Run the engine's warmup request (excluded from traces) so the first
@@ -147,6 +178,9 @@ impl Server {
     fn drive(&mut self, mut arrivals: VecDeque<(f64, Request)>) -> Result<()> {
         let t0 = Instant::now();
         let mut in_flight: HashMap<SeqId, InFlight> = HashMap::new();
+        // Saved-prefill pricing for prefix-cache hits (cloned up front:
+        // the session mutably borrows the engine for the whole loop).
+        let pricer = self.engine.cost_model().cloned();
         let mut session = self.engine.session();
         // Model-time arrival offsets of open-loop requests (everything
         // submitted before drive() arrived at model t = 0).
@@ -172,6 +206,9 @@ impl Server {
                         request_id: id,
                         prompt_tokens,
                         generated_tokens: 0,
+                        cached_prompt_tokens: 0,
+                        saved_prefill_s: 0.0,
+                        saved_prefill_bytes: 0.0,
                         queue_s: 0.0,
                         ttft_s: 0.0,
                         tpot_s: 0.0,
@@ -184,15 +221,29 @@ impl Server {
                 }
             }
 
-            // 2. Admit while batch slots and prompt KV allow.
-            while let Some(admitted) = self.scheduler.admit_next()? {
+            // 2. Admit while batch slots and prompt KV allow. With a
+            //    prefix cache, the head-of-line request's cached-prefix
+            //    hint shrinks both its KV charge and the prefill the
+            //    session will run (suffix-only, priced accordingly).
+            loop {
+                // Raw lookup: `admit_next_with_cached` owns the clamp
+                // that keeps at least one token prefilling.
+                let cached_hint = match (&self.prefix, self.scheduler.peek()) {
+                    (Some(cache), Some(head)) => cache.lookup(&head.prompt),
+                    _ => 0,
+                };
+                let Some(admitted) = self.scheduler.admit_next_with_cached(cached_hint)? else {
+                    break;
+                };
                 let now = Instant::now();
                 let req = admitted.request;
+                let cached = admitted.cached_tokens;
                 let id = req.id;
                 let prompt_tokens = req.prompt.len();
+                let suffix = req.prompt[cached..].to_vec();
                 let input =
-                    SequenceInput { id, prompt: req.prompt, max_new_tokens: req.decode_len };
-                if let Err(e) = session.admit(input) {
+                    SequenceInput { id, prompt: suffix, max_new_tokens: req.decode_len };
+                if let Err(e) = session.admit_with_context(input, cached) {
                     // The scheduler admitted something the session rejects
                     // (e.g. a wrong-length prompt for numeric artifacts):
                     // fail the request, not the serving loop.
@@ -202,6 +253,9 @@ impl Server {
                         request_id: id,
                         prompt_tokens,
                         generated_tokens: 0,
+                        cached_prompt_tokens: 0,
+                        saved_prefill_s: 0.0,
+                        saved_prefill_bytes: 0.0,
                         queue_s,
                         ttft_s: 0.0,
                         tpot_s: 0.0,
@@ -211,6 +265,24 @@ impl Server {
                     });
                     continue;
                 }
+                if let Some(cache) = &mut self.prefix {
+                    // Record the admitted prompt: touch its hit blocks,
+                    // insert the rest (LRU on the model clock). Only
+                    // prompts the session accepted enter the cache — a
+                    // rejected admission computes no KV.
+                    let now_s = session
+                        .model_now()
+                        .unwrap_or_else(|| t0.elapsed().as_secs_f64());
+                    cache.observe(&req.prompt, now_s);
+                }
+                let (saved_prefill_s, saved_prefill_bytes) = match (&pricer, cached) {
+                    (Some(cm), c) if c > 0 => (
+                        cm.prefill_price(prompt_tokens) - cm.prefill_price(prompt_tokens - c),
+                        cm.prefill_comm_bytes(prompt_tokens)
+                            - cm.prefill_comm_bytes(prompt_tokens - c),
+                    ),
+                    _ => (0.0, 0.0),
+                };
                 let model = session.model_now().map(|now_m| {
                     let arrival_s = model_arrivals.remove(&id).unwrap_or(0.0);
                     let admitted_s = now_m.max(arrival_s);
@@ -225,6 +297,9 @@ impl Server {
                     id,
                     InFlight {
                         prompt_tokens,
+                        cached_tokens: cached,
+                        saved_prefill_s,
+                        saved_prefill_bytes,
                         enqueued_at: admitted.enqueued_at,
                         admitted_at: now,
                         first_token_at: None,
@@ -338,6 +413,9 @@ impl Server {
             request_id: id,
             prompt_tokens: info.prompt_tokens,
             generated_tokens: info.generated,
+            cached_prompt_tokens: info.cached_tokens,
+            saved_prefill_s: info.saved_prefill_s,
+            saved_prefill_bytes: info.saved_prefill_bytes,
             queue_s: (info.admitted_at - info.enqueued_at).as_secs_f64(),
             ttft_s: if info.first_token_at.is_some() {
                 (first - info.admitted_at).as_secs_f64()
@@ -484,6 +562,58 @@ mod tests {
             (got - ttft).abs() <= 1e-9 * ttft,
             "served model TTFT {got} vs simulated {ttft}"
         );
+    }
+
+    #[test]
+    fn prefix_cache_prices_only_the_uncached_suffix() {
+        let plan_cfg = EngineConfig::structural(ModelArch::tiny(), ParallelLayout::new(2, 1));
+        let mut srv = Server::new(
+            Engine::new(plan_cfg).unwrap(),
+            SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 64, max_batch: 1 },
+        )
+        .with_prefix_cache(PrefixCacheConfig { block_tokens: 4, capacity_bytes: 1 << 20 })
+        .unwrap();
+        // Two requests with an identical 16-token prompt, served one at a
+        // time: the second hits the whole prompt (clamped to 15 so one
+        // token still prefills).
+        let prompt: Vec<i32> = (0..16).collect();
+        let reqs = vec![
+            Request { id: 0, prompt: prompt.clone(), decode_len: 4 },
+            Request { id: 1, prompt: prompt.clone(), decode_len: 4 },
+        ];
+        let summary = srv.serve_batch(reqs).unwrap();
+        assert_eq!(summary.completed, 2);
+        let m0 = &srv.completed()[0];
+        let m1 = &srv.completed()[1];
+        assert_eq!(m0.cached_prompt_tokens, 0, "cold cache");
+        assert_eq!(m0.saved_prefill_s, 0.0);
+        assert_eq!(m1.cached_prompt_tokens, 15, "full hit, one token prefills");
+        assert_eq!(m1.prompt_tokens, 16, "metrics keep the full prompt length");
+        // The hit's model TTFT is the suffix's prefill price; the saved
+        // seconds are the full-vs-suffix closed-form difference.
+        let cm = crate::simtime::CostModel::on_cardinal(
+            ModelArch::tiny(),
+            ParallelLayout::new(2, 1),
+        );
+        let t1 = m1.model.as_ref().unwrap();
+        let suffix_ttft = cm.prefill_price(1);
+        assert!(
+            (t1.ttft_s - suffix_ttft).abs() <= 1e-9 * suffix_ttft,
+            "hit TTFT {} vs suffix prefill {}",
+            t1.ttft_s,
+            suffix_ttft
+        );
+        assert_eq!(m1.saved_prefill_s, cm.prefill_price(16) - cm.prefill_price(1));
+        assert!(m1.saved_prefill_bytes > 0.0);
+        let t0m = m0.model.as_ref().unwrap();
+        assert!(t1.ttft_s < t0m.ttft_s, "the hit beats the cold prefill");
+        // Aggregates carry the totals.
+        assert_eq!(summary.cached_prompt_tokens, 15);
+        assert_eq!(summary.saved_prefill_s, m1.saved_prefill_s);
+        // The cache is observable and bounded.
+        let cache = srv.prefix_cache().unwrap();
+        assert_eq!(cache.stats().observed, 2);
+        assert!(cache.resident_bytes() <= cache.config().capacity_bytes);
     }
 
     #[test]

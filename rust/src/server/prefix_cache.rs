@@ -1,0 +1,362 @@
+//! Per-replica prefix-cache model — vLLM-style automatic prefix caching
+//! on the model clock.
+//!
+//! Production prompts share long prefixes (system prompts, multi-turn
+//! chat history, few-shot templates), and a replica that already holds a
+//! prefix's KV cache skips that prefix's prefill — compute *and* its TP
+//! AllReduce volume. This module models that cache so the serving loop
+//! can price prefill only for the uncached suffix and the fleet router
+//! can steer same-prefix requests back to the replica that is warm for
+//! them ([`crate::fleet::RouterPolicy::CacheAffinity`]).
+//!
+//! The model follows vLLM's hash-chain design at token-*block*
+//! granularity: block `i` of a prompt is identified by
+//! `hash(parent_chain_hash, tokens[i*B .. (i+1)*B])`, so a lookup walks
+//! the prompt's chain from the root and a hit is always a *leading*
+//! block-aligned span — two prompts share cache entries exactly as far
+//! as their token content agrees. Only full blocks are cached (a partial
+//! tail block is never hit-able), and an admission never treats the
+//! whole prompt as cached: at least one token is always prefilled, like
+//! vLLM, so every request still produces its first token through the
+//! engine.
+//!
+//! Residency is bounded by a byte budget (`capacity_bytes`, charged at
+//! `kv_bytes_per_token` per token) with LRU eviction on the replica's
+//! *model* clock. Eviction order is deepest-least-recent first: when a
+//! prompt is observed, its blocks are touched leaf→root so the root —
+//! the part shared by the most requests — is always the youngest and
+//! dies last. Everything is deterministic: hashes come from the
+//! splitmix64 chain, LRU order is a strictly monotone touch counter, and
+//! no operation ever iterates a `HashMap`, so two runs with the same
+//! inputs produce bitwise-identical hit traces.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::workload::splitmix64;
+
+/// Configuration of one replica's prefix cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheConfig {
+    /// Tokens per cached block (the hash granularity; vLLM default 16).
+    pub block_tokens: usize,
+    /// Byte budget for resident prefix KV on this replica.
+    pub capacity_bytes: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        Self { block_tokens: 16, capacity_bytes: 64 << 20 }
+    }
+}
+
+impl PrefixCacheConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.block_tokens >= 1, "prefix-cache block must hold >= 1 token");
+        anyhow::ensure!(self.capacity_bytes >= 1, "prefix-cache capacity must be >= 1 byte");
+        Ok(())
+    }
+}
+
+/// Lifetime counters of one cache (all token counts are prompt tokens).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Prompts observed (admissions).
+    pub observed: u64,
+    /// Total cached-prefix tokens served across observations.
+    pub hit_tokens: u64,
+    /// Blocks inserted.
+    pub inserted_blocks: u64,
+    /// Blocks evicted by the capacity budget.
+    pub evicted_blocks: u64,
+}
+
+/// One resident block: its LRU touch tick and the model time it was last
+/// used (the tick orders eviction; the time is reporting).
+#[derive(Debug, Clone, Copy)]
+struct Block {
+    tick: u64,
+    last_used_s: f64,
+}
+
+/// Deterministic block-granular prefix cache with a byte budget and
+/// model-time LRU eviction.
+#[derive(Debug, Clone)]
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    kv_bytes_per_token: usize,
+    /// chain-hash → resident block.
+    blocks: HashMap<u64, Block>,
+    /// LRU index: touch tick → chain-hash (ticks are unique).
+    lru: BTreeMap<u64, u64>,
+    tick: u64,
+    stats: PrefixCacheStats,
+}
+
+/// Chain hash of one block given its parent's chain hash (splitmix64
+/// sponge over the block's tokens; the root parent is a fixed tag).
+fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = splitmix64(parent ^ 0x9E3A_11CE_5EED_B10C);
+    for &t in tokens {
+        h = splitmix64(h ^ (t as u32 as u64));
+    }
+    h
+}
+
+/// Chain hashes of the prompt's *full* `block_tokens`-sized blocks, root
+/// first. Free-standing so a router can hash a prompt once and probe
+/// many replicas' caches with [`PrefixCache::lookup_chain`].
+pub fn chain_hashes(block_tokens: usize, prompt: &[i32]) -> Vec<u64> {
+    assert!(block_tokens >= 1);
+    let mut parent = 0u64;
+    prompt
+        .chunks_exact(block_tokens)
+        .map(|chunk| {
+            parent = chain_hash(parent, chunk);
+            parent
+        })
+        .collect()
+}
+
+impl PrefixCache {
+    /// `kv_bytes_per_token` is the replica's KV footprint per cached
+    /// token ([`crate::model::ModelArch::kv_bytes_per_token`]).
+    pub fn new(cfg: PrefixCacheConfig, kv_bytes_per_token: usize) -> Self {
+        assert!(cfg.block_tokens >= 1, "prefix-cache block must hold >= 1 token");
+        assert!(kv_bytes_per_token >= 1, "kv_bytes_per_token must be >= 1");
+        Self {
+            cfg,
+            kv_bytes_per_token,
+            blocks: HashMap::new(),
+            lru: BTreeMap::new(),
+            tick: 0,
+            stats: PrefixCacheStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> PrefixCacheConfig {
+        self.cfg
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        self.stats
+    }
+
+    /// Bytes one resident block accounts for.
+    fn block_bytes(&self) -> usize {
+        self.cfg.block_tokens * self.kv_bytes_per_token
+    }
+
+    /// Bytes currently resident. Never exceeds the capacity budget after
+    /// an observation returns.
+    pub fn resident_bytes(&self) -> usize {
+        self.blocks.len() * self.block_bytes()
+    }
+
+    pub fn resident_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Chain hashes of the prompt's *full* blocks, root first.
+    fn chain(&self, prompt: &[i32]) -> Vec<u64> {
+        chain_hashes(self.cfg.block_tokens, prompt)
+    }
+
+    /// Cached-prefix length of `prompt` in tokens, without touching the
+    /// cache (the router's estimate). Always a multiple of the block
+    /// size and ≤ the prompt length; the *admission* clamp (never the
+    /// whole prompt) is the caller's, because only the caller knows it
+    /// is about to prefill.
+    pub fn lookup(&self, prompt: &[i32]) -> usize {
+        self.lookup_chain(&self.chain(prompt))
+    }
+
+    /// [`Self::lookup`] over a precomputed [`chain_hashes`] chain (must
+    /// have been built with this cache's block size).
+    pub fn lookup_chain(&self, chain: &[u64]) -> usize {
+        let mut hit = 0usize;
+        for h in chain {
+            if !self.blocks.contains_key(h) {
+                break;
+            }
+            hit += self.cfg.block_tokens;
+        }
+        hit
+    }
+
+    /// Observe an admitted prompt at model time `now_s`: returns the
+    /// cached-prefix token count (as [`Self::lookup`] would have),
+    /// touches the hit blocks, inserts the missing full blocks, and
+    /// evicts least-recently-used blocks until the byte budget holds.
+    ///
+    /// Blocks are ticked leaf→root so within one prompt the root is the
+    /// youngest — eviction removes deep, request-specific blocks before
+    /// the shared prefix roots.
+    pub fn observe(&mut self, prompt: &[i32], now_s: f64) -> usize {
+        let chain = self.chain(prompt);
+        let mut hit_blocks = 0usize;
+        for h in &chain {
+            if !self.blocks.contains_key(h) {
+                break;
+            }
+            hit_blocks += 1;
+        }
+        // Touch + insert leaf-first: the root ends with the largest tick.
+        for &h in chain.iter().rev() {
+            self.tick += 1;
+            match self.blocks.get_mut(&h) {
+                Some(block) => {
+                    self.lru.remove(&block.tick);
+                    block.tick = self.tick;
+                    block.last_used_s = now_s;
+                }
+                None => {
+                    self.blocks.insert(h, Block { tick: self.tick, last_used_s: now_s });
+                    self.stats.inserted_blocks += 1;
+                }
+            }
+            self.lru.insert(self.tick, h);
+        }
+        // Enforce the byte budget (LRU; ticks are unique so the order is
+        // total and deterministic).
+        let block_bytes = self.block_bytes();
+        while self.blocks.len() * block_bytes > self.cfg.capacity_bytes {
+            let (_, h) = self.lru.pop_first().expect("resident blocks are LRU-indexed");
+            self.blocks.remove(&h);
+            self.stats.evicted_blocks += 1;
+        }
+        let hit = hit_blocks * self.cfg.block_tokens;
+        self.stats.observed += 1;
+        self.stats.hit_tokens += hit as u64;
+        hit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(group: u64, shared: usize, id: u64, unique: usize) -> Vec<i32> {
+        let mut p: Vec<i32> =
+            (0..shared).map(|i| (splitmix64(group ^ (i as u64) << 17) & 0xFFFF) as i32).collect();
+        p.extend(
+            (0..unique).map(|i| (splitmix64(!id ^ (i as u64) << 23) & 0xFFFF) as i32 + 0x1_0000),
+        );
+        p
+    }
+
+    #[test]
+    fn hits_are_leading_block_aligned_spans() {
+        let mut c = PrefixCache::new(
+            PrefixCacheConfig { block_tokens: 4, capacity_bytes: 1 << 20 },
+            16,
+        );
+        let a = prompt(1, 16, 100, 6);
+        assert_eq!(c.lookup(&a), 0, "cold cache");
+        assert_eq!(c.observe(&a, 0.0), 0);
+        // 22 tokens = 5 full blocks of 4 (the 2-token tail is not cached).
+        assert_eq!(c.resident_blocks(), 5);
+        // The same prompt now hits every full block.
+        assert_eq!(c.lookup(&a), 20);
+        // A same-group prompt with a different tail hits the shared 16
+        // tokens (4 blocks) and stops at the first diverging block.
+        let b = prompt(1, 16, 101, 6);
+        assert_eq!(c.lookup(&b), 16);
+        // A different group shares nothing.
+        let d = prompt(2, 16, 102, 6);
+        assert_eq!(c.lookup(&d), 0);
+        // Hits never exceed the prompt and are block multiples.
+        let short = &a[..10];
+        assert_eq!(c.lookup(short), 8);
+    }
+
+    #[test]
+    fn capacity_budget_evicts_lru_and_keeps_roots() {
+        // 16 B/token, 4-token blocks = 64 B/block; budget = 4 blocks.
+        let mut c = PrefixCache::new(
+            PrefixCacheConfig { block_tokens: 4, capacity_bytes: 256 },
+            16,
+        );
+        let a = prompt(1, 8, 1, 0); // 2 blocks
+        let b = prompt(2, 8, 2, 0); // 2 blocks
+        c.observe(&a, 0.0);
+        c.observe(&b, 1.0);
+        assert_eq!(c.resident_blocks(), 4);
+        assert!(c.resident_bytes() <= 256);
+        // A third 2-block prompt evicts prompt `a` (least recent),
+        // deepest block first.
+        let d = prompt(3, 8, 3, 0);
+        c.observe(&d, 2.0);
+        assert_eq!(c.resident_blocks(), 4);
+        assert!(c.resident_bytes() <= 256);
+        assert_eq!(c.lookup(&a), 0, "oldest chain evicted");
+        assert_eq!(c.lookup(&b), 8, "recent chain survives");
+        assert_eq!(c.lookup(&d), 8);
+        assert_eq!(c.stats().evicted_blocks, 2);
+        // Re-touching `b` keeps it alive through the next insertion.
+        c.observe(&b, 3.0);
+        c.observe(&prompt(4, 8, 4, 0), 4.0);
+        assert_eq!(c.lookup(&b), 8);
+        assert_eq!(c.lookup(&d), 0, "LRU chain rotated out");
+    }
+
+    #[test]
+    fn within_one_chain_eviction_is_leaf_first() {
+        // Budget of 3 blocks, one 4-block prompt: after observation the
+        // *leaf* (deepest) block is gone and the root 3 survive, so the
+        // shared head of the prefix stays hit-able.
+        let mut c = PrefixCache::new(
+            PrefixCacheConfig { block_tokens: 4, capacity_bytes: 192 },
+            16,
+        );
+        let a = prompt(7, 16, 1, 0);
+        c.observe(&a, 0.0);
+        assert_eq!(c.resident_blocks(), 3);
+        assert_eq!(c.lookup(&a), 12, "root-side blocks survive the budget");
+    }
+
+    #[test]
+    fn observation_is_deterministic() {
+        let run = || {
+            let mut c = PrefixCache::new(
+                PrefixCacheConfig { block_tokens: 4, capacity_bytes: 512 },
+                16,
+            );
+            let mut trace = Vec::new();
+            for i in 0..40u64 {
+                let p = prompt(i % 3, 12, i, (i % 5) as usize);
+                trace.push(c.observe(&p, i as f64));
+            }
+            (trace, c.stats())
+        };
+        let (t1, s1) = run();
+        let (t2, s2) = run();
+        assert_eq!(t1, t2, "hit traces are bitwise-identical");
+        assert_eq!(s1, s2);
+        assert!(s1.hit_tokens > 0, "repeating groups produce hits");
+    }
+
+    #[test]
+    fn degenerate_budgets_cache_nothing_but_stay_sane() {
+        // Budget below one block: every observation inserts then evicts
+        // straight back to empty — lookups never hit, bytes never exceed
+        // the budget.
+        let mut c = PrefixCache::new(
+            PrefixCacheConfig { block_tokens: 8, capacity_bytes: 1 },
+            16,
+        );
+        let p = prompt(1, 16, 1, 0);
+        assert_eq!(c.observe(&p, 0.0), 0);
+        assert_eq!(c.observe(&p, 1.0), 0, "nothing ever sticks");
+        assert_eq!(c.resident_bytes(), 0);
+        // A prompt shorter than one block has no cacheable span.
+        let mut c = PrefixCache::new(PrefixCacheConfig::default(), 16);
+        assert_eq!(c.observe(&p[..7], 0.0), 0);
+        assert_eq!(c.resident_blocks(), 0);
+        assert!(PrefixCacheConfig { block_tokens: 0, capacity_bytes: 1 }
+            .validate()
+            .is_err());
+        assert!(PrefixCacheConfig { block_tokens: 1, capacity_bytes: 0 }
+            .validate()
+            .is_err());
+    }
+}

@@ -30,6 +30,11 @@ pub struct Request {
 pub struct Admitted {
     pub request: Request,
     pub enqueued_at: Instant,
+    /// Prefix-cache hint consumed at admission: leading prompt tokens
+    /// whose KV is already resident on this replica. The serving loop
+    /// prefills (and prices) only the remaining suffix; KV-pool
+    /// admission charged only the suffix's blocks. 0 without a cache.
+    pub cached_tokens: usize,
 }
 
 /// Scheduler configuration.
@@ -104,23 +109,41 @@ impl Scheduler {
         Ok(())
     }
 
+    /// The queue head, if any — so a prefix-cache owner can compute the
+    /// cached-prefix hint for exactly the request [`Self::admit_next_with_cached`]
+    /// would pop.
+    pub fn peek(&self) -> Option<&Request> {
+        self.waiting.front().map(|(r, _)| r)
+    }
+
     /// Pop the queue head iff a batch slot is free and its *prompt* blocks
     /// fit now (FCFS: head-of-line blocks — vLLM V0 default behaviour).
     /// Decode growth is not reserved here; see [`Self::grow`].
     pub fn admit_next(&mut self) -> Result<Option<Admitted>> {
+        self.admit_next_with_cached(0)
+    }
+
+    /// [`Self::admit_next`] with a prefix-cache hint: the head request's
+    /// leading `cached` tokens are already resident, so KV admission
+    /// charges only the uncached suffix (the cached blocks live in the
+    /// prefix cache's own byte budget, shared across requests, not in
+    /// this pool). The hint is clamped so at least one token is always
+    /// prefilled — an admission never treats the whole prompt as cached.
+    pub fn admit_next_with_cached(&mut self, cached: usize) -> Result<Option<Admitted>> {
         if self.running.len() >= self.cfg.max_batch {
             return Ok(None);
         }
         let Some((front, _)) = self.waiting.front() else {
             return Ok(None);
         };
-        if !self.kv.can_allocate(front.prompt.len()) {
+        let cached = cached.min(front.prompt.len().saturating_sub(1));
+        if !self.kv.can_allocate(front.prompt.len() - cached) {
             return Ok(None);
         }
         let (request, enqueued_at) = self.waiting.pop_front().expect("non-empty");
-        self.kv.allocate(request.id, request.prompt.len())?;
+        self.kv.allocate(request.id, request.prompt.len() - cached)?;
         self.running.push(request.id);
-        Ok(Some(Admitted { request, enqueued_at }))
+        Ok(Some(Admitted { request, enqueued_at, cached_tokens: cached }))
     }
 
     /// Reserve KV for one more decoded token of a running sequence, on the
@@ -224,6 +247,40 @@ mod tests {
         assert!(s.grow(2).is_ok(), "survivor grows into the freed blocks");
         s.finish(2).unwrap();
         assert_eq!(s.kv().used_blocks(), 0);
+    }
+
+    #[test]
+    fn cached_hint_charges_only_the_suffix() {
+        // Pool: 2 blocks x 16 tokens. A 32-token prompt fills it alone —
+        // but with 16 tokens cached, admission charges one block, so a
+        // second hinted request still fits.
+        let mut s = Scheduler::new(cfg(2, 16, 4));
+        s.submit(req(1, 32, 0)).unwrap();
+        s.submit(req(2, 32, 0)).unwrap();
+        assert_eq!(s.peek().unwrap().id, 1);
+        let a = s.admit_next_with_cached(16).unwrap().unwrap();
+        assert_eq!((a.request.id, a.cached_tokens), (1, 16));
+        assert_eq!(s.kv().used_blocks(), 1, "suffix block only");
+        assert_eq!(s.peek().unwrap().id, 2);
+        let b = s.admit_next_with_cached(16).unwrap().unwrap();
+        assert_eq!(b.cached_tokens, 16);
+        assert_eq!(s.kv().used_blocks(), 2);
+        s.finish(1).unwrap();
+        s.finish(2).unwrap();
+        // The hint is clamped: a fully-cached prompt still prefills (and
+        // charges) at least one token.
+        s.submit(req(3, 16, 0)).unwrap();
+        let c = s.admit_next_with_cached(999).unwrap().unwrap();
+        assert_eq!(c.cached_tokens, 15, "at least one token stays uncached");
+        assert_eq!(s.kv().used_blocks(), 1);
+        s.finish(3).unwrap();
+        // admit_next is exactly the zero-hint path.
+        s.submit(req(4, 16, 0)).unwrap();
+        let d = s.admit_next().unwrap().unwrap();
+        assert_eq!(d.cached_tokens, 0);
+        assert_eq!(s.kv().used_blocks(), 1, "full prompt charged");
+        s.finish(4).unwrap();
+        assert!(s.peek().is_none());
     }
 
     #[test]

@@ -181,6 +181,29 @@ impl CostModel {
         PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
     }
 
+    /// Closed-form price (seconds) of a `prompt_len`-token prefill — the
+    /// standalone TTFT that prompt would pay on this plan. The
+    /// prefix-cache accounting hook: a request admitted with a
+    /// `cached`-token prefix hint prefills only its suffix, and
+    /// `prefill_price(full) - prefill_price(full - cached)` is the saved
+    /// prefill seconds it is credited with (framework overhead cancels in
+    /// the difference — the engine still runs one prefill iteration).
+    pub fn prefill_price(&self, prompt_len: usize) -> f64 {
+        let b = self.cal.compute.dtype_bytes as usize;
+        self.prefill_breakdown(InferenceShape::new(prompt_len, 1, b)).total()
+    }
+
+    /// Corrected communication volume (bytes) of a `prompt_len`-token
+    /// prefill phase on this layout — the Eq. 1–7 prefill-side terms plus
+    /// its single logits gather (which cancels in saved-bytes
+    /// differences, since a cached prefix never skips the gather).
+    pub fn prefill_comm_bytes(&self, prompt_len: usize) -> f64 {
+        let b = self.cal.compute.dtype_bytes as usize;
+        crate::analysis::VolumeModel::new(self.arch.clone())
+            .volume(self.layout(), InferenceShape::new(prompt_len, 1, b))
+            .total()
+    }
+
     /// One single-request decode step breakdown → TPOT (closed form, at
     /// the paper's mid-generation context length).
     pub fn decode_step_breakdown(&self, shape: InferenceShape) -> PhaseBreakdown {
@@ -392,6 +415,38 @@ mod tests {
             let before = tl.max_time();
             let d2 = cm.post_decode(&mut tl, &[kv + 1]);
             assert!((tl.max_time() - (before + d2)).abs() < 1e-15, "clock accumulates");
+        }
+    }
+
+    #[test]
+    fn prefill_price_and_comm_bytes_follow_the_closed_forms() {
+        for (tp, pp) in [(2usize, 1usize), (4, 1), (2, 2), (1, 4)] {
+            let cm = cost(tp, pp);
+            // prefill_price is exactly the breakdown total at sd=1 (only
+            // prefill_len matters to the breakdown).
+            let direct = cm.prefill_breakdown(InferenceShape::new(96, 1, 2)).total();
+            assert_eq!(cm.prefill_price(96), direct, "tp={tp} pp={pp}");
+            // Strictly monotone in prompt length, and a cached-prefix
+            // saving (full minus suffix) is positive and below the full
+            // price.
+            assert!(cm.prefill_price(128) > cm.prefill_price(96));
+            let saved = cm.prefill_price(128) - cm.prefill_price(32);
+            assert!(saved > 0.0 && saved < cm.prefill_price(128));
+            // Comm bytes match the volume model at sd=1 and the
+            // saved-bytes difference cancels the logits gather.
+            let vm = crate::analysis::VolumeModel::new(cm.arch.clone());
+            let vol = vm.volume(cm.placement.layout, InferenceShape::new(96, 1, 2));
+            assert_eq!(cm.prefill_comm_bytes(96), vol.total());
+            let saved_bytes = cm.prefill_comm_bytes(128) - cm.prefill_comm_bytes(32);
+            let no_gather = |n: usize| {
+                let v = vm.volume(cm.placement.layout, InferenceShape::new(n, 1, 2));
+                v.total() - v.gather
+            };
+            assert!(
+                (saved_bytes - (no_gather(128) - no_gather(32))).abs()
+                    <= 1e-9 * saved_bytes.abs().max(1.0),
+                "tp={tp} pp={pp}: gather term must cancel in the difference"
+            );
         }
     }
 

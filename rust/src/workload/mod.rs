@@ -21,11 +21,20 @@
 //!   ShareGPT-like `LongTail` mixture (mostly short chat turns, a heavy
 //!   minority of long documents) that stresses continuous batching and
 //!   KV admission.
+//! - [`PrefixProfile`] (optional) — shared-prefix structure: a global
+//!   system prompt, multi-turn conversations, or few-shot templates.
+//!   Each generated request carries its prefix-group id and shared/unique
+//!   token split, and its prompt *tokens* realize that structure (same
+//!   group → identical leading tokens), so a content-addressed prefix
+//!   cache ([`crate::server::PrefixCache`]) sees exactly the sharing the
+//!   profile describes. Without a profile every prompt is unique-tokened
+//!   — zero accidental sharing.
 //! - request count.
 //!
-//! Arrival times and lengths draw from two *independent* seeded streams,
-//! so switching a length distribution never perturbs the arrival process
-//! (and vice versa) — A/B comparisons stay paired.
+//! Arrival times, lengths, and prefix-group assignments draw from three
+//! *independent* seeded streams, so switching a length distribution (or
+//! adding a prefix profile) never perturbs the arrival process (and vice
+//! versa) — A/B comparisons stay paired.
 
 use crate::server::Request;
 
@@ -124,7 +133,10 @@ impl ArrivalProcess {
                 })
                 .collect(),
             Self::Bursty { rate_per_s, burst } => {
-                let burst = burst.max(1);
+                // A silent `.max(1)` here used to paper over burst = 0;
+                // degenerate bursts must be rejected by `validate()` (and
+                // loudly here), never quietly reshaped.
+                assert!(burst >= 1, "burst size must be >= 1 (validate() rejects 0)");
                 // Gaps between bursts keep the long-run request rate.
                 let burst_rate = rate_per_s / burst as f64;
                 (0..n)
@@ -198,23 +210,137 @@ impl LengthDist {
             Self::LongTail { long, .. } => long,
         }
     }
+
+    /// Smallest length the distribution can produce (shared-prefix
+    /// feasibility: a prompt must always be longer than its prefix).
+    pub fn min_len(&self) -> usize {
+        match *self {
+            Self::Fixed(n) => n,
+            Self::Uniform { lo, .. } => lo,
+            Self::LongTail { short, .. } => short,
+        }
+    }
 }
 
-/// One generated request with its model-time arrival offset.
+/// Shared-prefix structure of a workload — which requests share a
+/// leading span of prompt tokens, and how long that span is.
+///
+/// A request's prefix group determines its leading `shared` tokens
+/// (a pure function of the group id); the rest of the prompt is unique
+/// to the request. Group assignment draws from its own seeded stream,
+/// independent of arrivals and lengths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrefixProfile {
+    /// One global system prompt: every request shares the same leading
+    /// `shared` tokens (group 0).
+    SystemPrompt { shared: usize },
+    /// Multi-turn chat: each request belongs to one of `conversations`
+    /// long-lived conversations (uniform assignment) and shares that
+    /// conversation's `shared`-token history.
+    MultiTurn { conversations: usize, shared: usize },
+    /// Few-shot templates: with probability `zero_shot_weight` a request
+    /// carries no template (prefix-free); otherwise it uses one of
+    /// `templates` shared `shared`-token templates (uniform).
+    FewShot { templates: usize, shared: usize, zero_shot_weight: f64 },
+}
+
+impl PrefixProfile {
+    /// Shared-prefix length of a grouped request, in tokens.
+    pub fn shared_tokens(&self) -> usize {
+        match *self {
+            Self::SystemPrompt { shared }
+            | Self::MultiTurn { shared, .. }
+            | Self::FewShot { shared, .. } => shared,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::SystemPrompt { .. } => "system-prompt",
+            Self::MultiTurn { .. } => "multi-turn",
+            Self::FewShot { .. } => "few-shot",
+        }
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.shared_tokens() >= 1, "shared prefix must be >= 1 token");
+        match *self {
+            Self::SystemPrompt { .. } => {}
+            Self::MultiTurn { conversations, .. } => {
+                anyhow::ensure!(conversations >= 1, "multi-turn needs >= 1 conversation");
+            }
+            Self::FewShot { templates, zero_shot_weight, .. } => {
+                anyhow::ensure!(templates >= 1, "few-shot needs >= 1 template");
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&zero_shot_weight),
+                    "zero_shot_weight must be in [0, 1]"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw one request's prefix group. `None` means prefix-free (only
+    /// `FewShot` produces it). Consumes randomness from the profile's
+    /// own stream.
+    fn assign(&self, rng: &mut Rng64) -> Option<u64> {
+        match *self {
+            Self::SystemPrompt { .. } => Some(0),
+            Self::MultiTurn { conversations, .. } => {
+                Some(rng.next_u64() % conversations as u64)
+            }
+            Self::FewShot { templates, zero_shot_weight, .. } => {
+                if rng.next_f64() < zero_shot_weight {
+                    None
+                } else {
+                    Some(rng.next_u64() % templates as u64)
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic prompt-token synthesis. Shared tokens are a pure
+/// function of (group, position) — so every member of a group carries
+/// bitwise-identical leading tokens — and unique tokens are a pure
+/// function of (request id, position), so no two requests ever share
+/// content past their group prefix (nor any content at all when
+/// prefix-free).
+fn shared_token(group: u64, pos: usize) -> i32 {
+    (splitmix64(group.wrapping_mul(0x9E37_79B9).wrapping_add(pos as u64)) & 0x7FFF_FFFF) as i32
+}
+
+fn unique_token(id: u64, pos: usize) -> i32 {
+    (splitmix64(!id.wrapping_mul(0xC2B2_AE35).wrapping_add(pos as u64)) & 0x7FFF_FFFF) as i32
+}
+
+/// One generated request with its model-time arrival offset and its
+/// shared-prefix identity.
 #[derive(Debug, Clone)]
 pub struct TimedRequest {
     /// Seconds from the workload epoch at which the request arrives.
     pub at_s: f64,
+    /// Prefix group this request belongs to (`None` when prefix-free).
+    /// Every member of a group shares the same leading
+    /// [`Self::shared_tokens`] prompt tokens, bit for bit.
+    pub prefix_group: Option<u64>,
+    /// Length of the shared leading span inside `request.prompt`
+    /// (0 when prefix-free). The remainder of the prompt is unique to
+    /// this request.
+    pub shared_tokens: usize,
     pub request: Request,
 }
 
 /// A complete open-loop workload: arrival process × prompt/decode length
-/// distributions × request count.
+/// distributions × optional shared-prefix profile × request count.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WorkloadSpec {
     pub arrivals: ArrivalProcess,
     pub prompt: LengthDist,
     pub decode: LengthDist,
+    /// Shared-prefix structure; `None` generates unique-tokened prompts
+    /// (zero sharing).
+    pub prefix: Option<PrefixProfile>,
     pub requests: usize,
 }
 
@@ -223,27 +349,54 @@ impl WorkloadSpec {
         anyhow::ensure!(self.requests >= 1, "workload needs at least one request");
         self.arrivals.validate()?;
         self.prompt.validate()?;
-        self.decode.validate()
+        self.decode.validate()?;
+        if let Some(profile) = &self.prefix {
+            profile.validate()?;
+            anyhow::ensure!(
+                self.prompt.min_len() > profile.shared_tokens(),
+                "every prompt must be longer than the {}-token shared prefix \
+                 (shortest prompt: {})",
+                profile.shared_tokens(),
+                self.prompt.min_len()
+            );
+        }
+        Ok(())
     }
 
     /// Generate the request stream: ids `0..requests` in arrival order,
     /// deterministic per `seed`. Arrival times come from the seed's
-    /// arrival stream; lengths from an independent stream derived from
-    /// the same seed, so the two axes never alias.
+    /// arrival stream; lengths and prefix-group assignments from two
+    /// further independent streams derived from the same seed, so no
+    /// axis ever aliases another (changing the prefix profile moves no
+    /// arrival and resizes no prompt).
     pub fn generate(&self, seed: u64) -> crate::Result<Vec<TimedRequest>> {
         self.validate()?;
         let offsets = self.arrivals.offsets(self.requests, seed);
         let mut lengths = Rng64::new(seed ^ 0x5EED_FACE_CAFE_F00D);
+        let mut groups = Rng64::new(seed ^ 0x00DE_FACE_0F_C0FFEE);
         Ok(offsets
             .into_iter()
             .enumerate()
-            .map(|(i, at_s)| TimedRequest {
-                at_s,
-                request: Request {
-                    id: i as u64,
-                    prompt: vec![0; self.prompt.sample(&mut lengths)],
-                    decode_len: self.decode.sample(&mut lengths),
-                },
+            .map(|(i, at_s)| {
+                let id = i as u64;
+                let prompt_len = self.prompt.sample(&mut lengths);
+                let decode_len = self.decode.sample(&mut lengths);
+                let group = self.prefix.as_ref().and_then(|p| p.assign(&mut groups));
+                let shared = match (&group, &self.prefix) {
+                    (Some(_), Some(p)) => p.shared_tokens(),
+                    _ => 0,
+                };
+                let mut prompt = Vec::with_capacity(prompt_len);
+                if let Some(g) = group {
+                    prompt.extend((0..shared).map(|pos| shared_token(g, pos)));
+                }
+                prompt.extend((shared..prompt_len).map(|pos| unique_token(id, pos)));
+                TimedRequest {
+                    at_s,
+                    prefix_group: group,
+                    shared_tokens: shared,
+                    request: Request { id, prompt, decode_len },
+                }
             })
             .collect())
     }
@@ -291,11 +444,23 @@ mod tests {
         assert!(offsets.windows(2).all(|w| w[1] >= w[0]));
         let mean = offsets.last().unwrap() / 2000.0;
         assert!((mean - 0.01).abs() < 0.003, "long-run gap {mean} vs 0.01");
-        // burst = 1 is exactly the Poisson stream.
-        assert_eq!(
-            ArrivalProcess::bursty(50.0, 1).offsets(64, 3),
-            ArrivalProcess::poisson(50.0).offsets(64, 3)
-        );
+    }
+
+    /// Regression: `burst = 1` must degenerate to plain Poisson *bitwise*
+    /// — same PRNG draws, same gap per request — across seeds and rates,
+    /// and `burst = 0` is rejected loudly instead of silently clamped.
+    #[test]
+    fn bursty_burst_one_reproduces_poisson_offsets_bitwise() {
+        for (rate, seed, n) in [(50.0, 3u64, 64usize), (7.5, 0, 128), (2000.0, 0xC0FFEE, 17)] {
+            let bursty = ArrivalProcess::bursty(rate, 1).offsets(n, seed);
+            let poisson = ArrivalProcess::poisson(rate).offsets(n, seed);
+            assert_eq!(bursty, poisson, "rate={rate} seed={seed}");
+        }
+        assert!(ArrivalProcess::bursty(10.0, 0).validate().is_err());
+        let panics = std::panic::catch_unwind(|| {
+            ArrivalProcess::bursty(10.0, 0).offsets(4, 1);
+        });
+        assert!(panics.is_err(), "burst=0 offsets must panic, not clamp");
     }
 
     #[test]
@@ -329,6 +494,7 @@ mod tests {
             arrivals: ArrivalProcess::poisson(200.0),
             prompt: LengthDist::Uniform { lo: 8, hi: 64 },
             decode: LengthDist::LongTail { short: 8, long: 128, long_weight: 0.2 },
+            prefix: None,
             requests: 32,
         };
         let a = spec.generate(11).unwrap();
@@ -352,6 +518,90 @@ mod tests {
         for (x, &t) in a.iter().zip(offsets.iter()) {
             assert_eq!(x.at_s, t);
         }
+        // Prefix-free prompts never share content: no two requests agree
+        // on even their first token (so a content-addressed prefix cache
+        // sees zero accidental sharing).
+        for (i, x) in a.iter().enumerate() {
+            assert_eq!(x.prefix_group, None);
+            assert_eq!(x.shared_tokens, 0);
+            for y in &a[i + 1..] {
+                assert_ne!(x.request.prompt[0], y.request.prompt[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_profiles_share_group_tokens_without_perturbing_other_streams() {
+        let base = WorkloadSpec {
+            arrivals: ArrivalProcess::poisson(100.0),
+            prompt: LengthDist::Fixed(48),
+            decode: LengthDist::Fixed(4),
+            prefix: None,
+            requests: 40,
+        };
+        let multi = WorkloadSpec {
+            prefix: Some(PrefixProfile::MultiTurn { conversations: 4, shared: 32 }),
+            ..base
+        };
+        let a = base.generate(5).unwrap();
+        let b = multi.generate(5).unwrap();
+        // The prefix profile moves no arrival and resizes nothing.
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at_s, y.at_s, "prefix profile must not perturb arrivals");
+            assert_eq!(x.request.prompt.len(), y.request.prompt.len());
+            assert_eq!(x.request.decode_len, y.request.decode_len);
+        }
+        // Same group -> identical shared span; different group -> split at
+        // the first token; the unique tail differs even within a group.
+        let mut seen_groups = std::collections::HashSet::new();
+        for x in &b {
+            let g = x.prefix_group.expect("multi-turn always assigns a conversation");
+            assert!(g < 4);
+            assert_eq!(x.shared_tokens, 32);
+            seen_groups.insert(g);
+        }
+        assert!(seen_groups.len() > 1, "40 requests spread over conversations");
+        for (i, x) in b.iter().enumerate() {
+            for y in &b[i + 1..] {
+                if x.prefix_group == y.prefix_group {
+                    assert_eq!(x.request.prompt[..32], y.request.prompt[..32]);
+                    assert_ne!(x.request.prompt[32..], y.request.prompt[32..]);
+                } else {
+                    assert_ne!(x.request.prompt[0], y.request.prompt[0]);
+                }
+            }
+        }
+        // System prompt: one global group.
+        let sys = WorkloadSpec {
+            prefix: Some(PrefixProfile::SystemPrompt { shared: 16 }),
+            ..base
+        };
+        for x in sys.generate(5).unwrap() {
+            assert_eq!(x.prefix_group, Some(0));
+            assert_eq!(x.shared_tokens, 16);
+        }
+        // Few-shot: the zero-shot fraction is prefix-free.
+        let fs = WorkloadSpec {
+            prefix: Some(PrefixProfile::FewShot {
+                templates: 3,
+                shared: 16,
+                zero_shot_weight: 0.4,
+            }),
+            requests: 200,
+            ..base
+        };
+        let reqs = fs.generate(5).unwrap();
+        let free = reqs.iter().filter(|r| r.prefix_group.is_none()).count();
+        assert!((40..=120).contains(&free), "zero-shot fraction ~0.4 ({free}/200)");
+        for r in &reqs {
+            assert_eq!(r.shared_tokens, if r.prefix_group.is_some() { 16 } else { 0 });
+        }
+        // Determinism: same seed, same groups and tokens, bit for bit.
+        let c = multi.generate(5).unwrap();
+        for (x, y) in b.iter().zip(c.iter()) {
+            assert_eq!(x.prefix_group, y.prefix_group);
+            assert_eq!(x.request.prompt, y.request.prompt);
+        }
     }
 
     #[test]
@@ -371,8 +621,28 @@ mod tests {
             arrivals: ArrivalProcess::poisson(10.0),
             prompt: LengthDist::Fixed(8),
             decode: LengthDist::Fixed(8),
+            prefix: None,
             requests: 0,
         };
         assert!(bad.generate(0).is_err());
+        // Prefix profiles: degenerate shapes are rejected...
+        assert!(PrefixProfile::SystemPrompt { shared: 0 }.validate().is_err());
+        assert!(PrefixProfile::MultiTurn { conversations: 0, shared: 8 }
+            .validate()
+            .is_err());
+        assert!(PrefixProfile::FewShot { templates: 0, shared: 8, zero_shot_weight: 0.1 }
+            .validate()
+            .is_err());
+        assert!(PrefixProfile::FewShot { templates: 2, shared: 8, zero_shot_weight: 1.5 }
+            .validate()
+            .is_err());
+        // ...and a shared prefix must leave room for a unique suffix in
+        // every possible prompt.
+        let too_long = WorkloadSpec {
+            prefix: Some(PrefixProfile::SystemPrompt { shared: 8 }),
+            requests: 1,
+            ..bad
+        };
+        assert!(too_long.generate(0).is_err(), "prefix == shortest prompt");
     }
 }

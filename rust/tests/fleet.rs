@@ -17,6 +17,7 @@ fn fixed_workload(requests: usize, rate: f64, prompt: usize, decode: usize) -> W
         arrivals: ArrivalProcess::poisson(rate),
         prompt: LengthDist::Fixed(prompt),
         decode: LengthDist::Fixed(decode),
+        prefix: None,
         requests,
     }
 }
@@ -29,12 +30,14 @@ fn every_policy_is_deterministic_per_seed() {
         arrivals: ArrivalProcess::bursty(500.0, 4),
         prompt: LengthDist::LongTail { short: 8, long: 32, long_weight: 0.3 },
         decode: LengthDist::Uniform { lo: 2, hi: 6 },
+        prefix: None,
         requests: 24,
     };
     for policy in [
         RouterPolicy::RoundRobin,
         RouterPolicy::LeastOutstandingTokens,
         RouterPolicy::ShortestQueue,
+        RouterPolicy::CacheAffinity,
     ] {
         let run = |seed: u64| -> FleetSummary {
             tiny(2, 1)

@@ -1,0 +1,183 @@
+//! Prefix-aware routing integration: cache-affinity router equivalence
+//! on prefix-free traffic, and saved-prefill accounting against the
+//! `simtime::CostModel` closed forms.
+
+use commsim::fleet::RouterPolicy;
+use commsim::plan::{Deployment, DeploymentPlan};
+use commsim::server::{PrefixCacheConfig, Request, SchedulerConfig, Server};
+use commsim::workload::{ArrivalProcess, LengthDist, PrefixProfile, WorkloadSpec};
+
+fn tiny(tp: usize, pp: usize) -> DeploymentPlan {
+    Deployment::builder().model("tiny").tp(tp).pp(pp).workload(8, 4).build().unwrap()
+}
+
+fn cache() -> PrefixCacheConfig {
+    PrefixCacheConfig { block_tokens: 4, capacity_bytes: 16 << 20 }
+}
+
+/// On a zero-shared-prefix workload (every prompt unique-tokened, so no
+/// content-addressed cache can ever hit), `CacheAffinity` produces the
+/// same assignment sequence — and the bitwise-identical simulation — as
+/// `LeastOutstandingTokens`, with prefix caches attached to both runs.
+#[test]
+fn cache_affinity_matches_least_tokens_on_prefix_free_traffic() {
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(400.0),
+        prompt: LengthDist::Uniform { lo: 8, hi: 24 },
+        decode: LengthDist::Uniform { lo: 2, hi: 6 },
+        prefix: None,
+        requests: 32,
+    };
+    let run = |policy: RouterPolicy, seed: u64| {
+        tiny(2, 1)
+            .fleet(3)
+            .unwrap()
+            .with_router(policy)
+            .with_prefix_cache(cache())
+            .unwrap()
+            .simulate(&workload, seed)
+            .unwrap()
+    };
+    for seed in [5u64, 6, 0xC0FFEE] {
+        let affinity = run(RouterPolicy::CacheAffinity, seed);
+        let lot = run(RouterPolicy::LeastOutstandingTokens, seed);
+        assert_eq!(affinity.completed, 32, "seed={seed}");
+        assert_eq!(affinity.cached_prompt_tokens, 0, "unique prompts never hit");
+        assert_eq!(affinity.saved_prefill_s, 0.0);
+        assert_eq!(affinity.model, lot.model, "seed={seed}: bitwise-identical summary");
+        assert_eq!(affinity.per_request.len(), lot.per_request.len());
+        for (a, l) in affinity.per_request.iter().zip(lot.per_request.iter()) {
+            assert_eq!(a.request_id, l.request_id, "seed={seed}: completion order");
+            assert_eq!(
+                a.replica, l.replica,
+                "seed={seed} request {}: assignment sequence",
+                a.request_id
+            );
+            assert_eq!(a.model, l.model);
+        }
+        // Per-replica dispatch statistics agree too.
+        for (a, l) in affinity.replicas.iter().zip(lot.replicas.iter()) {
+            assert_eq!((a.assigned, a.tokens), (l.assigned, l.tokens), "seed={seed}");
+        }
+    }
+}
+
+/// On shared-prefix traffic the affinity router concentrates each
+/// group's requests on its warm replica, and every saved-prefill figure
+/// matches `CostModel::prefill_breakdown` on the cached/suffix split.
+#[test]
+fn affinity_routes_groups_to_warm_replicas_and_prices_savings() {
+    let plan = Deployment::builder().model("tiny").tp(2).workload(33, 4).build().unwrap();
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::bursty(50.0, 3),
+        prompt: LengthDist::Fixed(33),
+        decode: LengthDist::Fixed(4),
+        prefix: Some(PrefixProfile::MultiTurn { conversations: 4, shared: 32 }),
+        requests: 48,
+    };
+    let s = plan
+        .fleet(2)
+        .unwrap()
+        .with_router(RouterPolicy::CacheAffinity)
+        .with_prefix_cache(cache())
+        .unwrap()
+        .simulate(&workload, 0xF1EE7)
+        .unwrap();
+    assert_eq!(s.completed, 48);
+    assert!(s.cached_prompt_tokens > 0, "groups repeat, so the cache must hit");
+    // 4 conversations, generous capacity: at most one cold miss per
+    // (conversation, replica) pair — affinity keeps that near one per
+    // conversation.
+    let misses = s.per_request.iter().filter(|m| m.cached_prompt_tokens == 0).count();
+    assert!(misses <= 8, "at most |groups| x |replicas| cold misses, got {misses}");
+    let cm = plan.cost_model();
+    for m in &s.per_request {
+        if m.cached_prompt_tokens == 0 {
+            assert_eq!(m.saved_prefill_s, 0.0);
+            assert_eq!(m.saved_prefill_bytes, 0.0);
+            continue;
+        }
+        // Hits are block-aligned spans of the 32-token shared prefix.
+        assert_eq!(m.cached_prompt_tokens % 4, 0);
+        assert!(m.cached_prompt_tokens <= 32);
+        // Saved seconds/bytes are exactly the closed-form full-vs-suffix
+        // differences (prefill_breakdown under the hood).
+        let suffix = m.prompt_tokens - m.cached_prompt_tokens;
+        assert_eq!(
+            m.saved_prefill_s,
+            cm.prefill_price(m.prompt_tokens) - cm.prefill_price(suffix),
+            "request {}",
+            m.request_id
+        );
+        assert_eq!(
+            m.saved_prefill_bytes,
+            cm.prefill_comm_bytes(m.prompt_tokens) - cm.prefill_comm_bytes(suffix),
+            "request {}",
+            m.request_id
+        );
+    }
+    let folded: f64 = s.per_request.iter().map(|m| m.saved_prefill_s).sum();
+    assert_eq!(s.saved_prefill_s, folded, "summary = completion-order fold");
+    assert_eq!(
+        s.replicas.iter().map(|r| r.cached_tokens).sum::<usize>(),
+        s.cached_prompt_tokens
+    );
+}
+
+/// Single-replica serving stack: a full-prompt repeat's model TTFT is
+/// the *suffix* prefill price — `CostModel::prefill_breakdown` on the
+/// uncached tokens — and the engine's traced prefill shrinks to the
+/// suffix too (the saved AllReduce volume never hits the wire).
+#[test]
+fn served_hit_ttft_is_the_suffix_prefill_breakdown() {
+    use commsim::analysis::InferenceShape;
+    use commsim::comm::{CollectiveKind, Stage};
+    let plan = Deployment::builder().model("tiny").tp(2).workload(16, 2).build().unwrap();
+    let mut srv = Server::new(
+        plan.engine().unwrap(),
+        SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 16, max_batch: 1 },
+    )
+    .with_prefix_cache(PrefixCacheConfig { block_tokens: 4, capacity_bytes: 1 << 20 })
+    .unwrap();
+    let prompt: Vec<i32> = (100..116).collect();
+    let summary = srv
+        .serve_batch(vec![
+            Request { id: 0, prompt: prompt.clone(), decode_len: 2 },
+            Request { id: 1, prompt: prompt.clone(), decode_len: 2 },
+        ])
+        .unwrap();
+    assert_eq!(summary.completed, 2);
+    let hit = &srv.completed()[1];
+    assert_eq!(hit.cached_prompt_tokens, 15, "full-block hit, clamped to leave 1");
+    let cm = plan.cost_model();
+    let suffix_ttft =
+        cm.prefill_breakdown(InferenceShape::new(1, 1, plan.shape().dtype_bytes)).total();
+    let got = hit.model.as_ref().unwrap().ttft_s;
+    assert!(
+        (got - suffix_ttft).abs() <= 1e-9 * suffix_ttft,
+        "hit TTFT {got} vs suffix prefill breakdown {suffix_ttft}"
+    );
+    assert_eq!(hit.saved_prefill_s, cm.prefill_price(16) - cm.prefill_price(1));
+    // The trace saw one 16-token prefill and one 1-token prefill, so the
+    // prefill AllReduce stream must carry fewer bytes than two cold
+    // 16-token prefills: the saved volume never hit the wire.
+    let trace = srv.engine().trace().summary();
+    let ar = trace.paper_view(CollectiveKind::AllReduce, Stage::Prefill);
+    let mut cold = Server::new(
+        plan.engine().unwrap(),
+        SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 16, max_batch: 1 },
+    );
+    cold.serve_batch(vec![
+        Request { id: 0, prompt: prompt.clone(), decode_len: 2 },
+        Request { id: 1, prompt, decode_len: 2 },
+    ])
+    .unwrap();
+    let cold_ar =
+        cold.engine().trace().summary().paper_view(CollectiveKind::AllReduce, Stage::Prefill);
+    assert!(
+        ar.total_message_bytes < cold_ar.total_message_bytes,
+        "cached suffix prefill must move fewer AllReduce bytes ({} vs {})",
+        ar.total_message_bytes,
+        cold_ar.total_message_bytes
+    );
+}

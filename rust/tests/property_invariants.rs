@@ -12,7 +12,9 @@ use commsim::engine::kv::KvBlockManager;
 use commsim::model::ModelArch;
 use commsim::perfmodel::Calibration;
 use commsim::runtime::tensor::HostTensor;
-use commsim::server::{percentile, Request, Scheduler, SchedulerConfig};
+use commsim::server::{
+    percentile, PrefixCache, PrefixCacheConfig, Request, Scheduler, SchedulerConfig,
+};
 use commsim::testutil::Rng;
 
 /// AllReduce == elementwise sum of all contributions, for any group size,
@@ -352,6 +354,63 @@ fn prop_kv_interleaved_footprint_exact() {
         }
         assert_eq!(m.free_blocks(), total, "all blocks returned");
         assert_eq!(m.live_seqs(), 0);
+    }
+}
+
+/// Prefix-cache invariants under random observe/lookup workloads: a hit
+/// never exceeds the prompt length (and is always block-aligned), the
+/// resident bytes never exceed the capacity budget after any operation,
+/// and identical seeds replay identical hit traces.
+#[test]
+fn prop_prefix_cache_hits_bounded_and_capacity_respected() {
+    let mut rng = Rng::new(0x9F1E);
+    for case in 0..40 {
+        let block_tokens = rng.usize_in(1, 8);
+        let kv_bytes_per_token = rng.usize_in(1, 64);
+        // Small budgets (a handful of blocks) force constant eviction.
+        let capacity_bytes = rng.usize_in(1, 24) * block_tokens * kv_bytes_per_token;
+        let cfg = PrefixCacheConfig { block_tokens, capacity_bytes };
+        let groups = rng.usize_in(1, 5) as u64;
+        let run_seed = rng.next_u64();
+
+        let run = |ops: usize| -> (Vec<usize>, usize) {
+            let mut c = PrefixCache::new(cfg, kv_bytes_per_token);
+            let mut g = Rng::new(run_seed);
+            let mut trace = Vec::with_capacity(ops);
+            for step in 0..ops {
+                let group = g.next_u64() % groups;
+                let shared = g.usize_in(0, 24);
+                let unique = g.usize_in(1, 12);
+                // Same-group prompts share their leading tokens; the tail
+                // is unique to the (case, step) pair.
+                let mut prompt: Vec<i32> =
+                    (0..shared).map(|i| (group as i32) * 1000 + i as i32).collect();
+                prompt.extend((0..unique).map(|i| {
+                    0x40_0000 + (case as i32) * 10_000 + (step as i32) * 16 + i as i32
+                }));
+                let hit = if step % 3 == 0 {
+                    let peek = c.lookup(&prompt);
+                    let observed = c.observe(&prompt, step as f64);
+                    assert_eq!(peek, observed, "lookup must predict observe");
+                    observed
+                } else {
+                    c.observe(&prompt, step as f64)
+                };
+                assert!(hit <= prompt.len(), "hit {} > prompt {}", hit, prompt.len());
+                assert_eq!(hit % block_tokens, 0, "hits are block-aligned");
+                assert!(
+                    c.resident_bytes() <= capacity_bytes,
+                    "resident {} > capacity {capacity_bytes}",
+                    c.resident_bytes()
+                );
+                trace.push(hit);
+            }
+            (trace, c.resident_blocks())
+        };
+        let (t1, r1) = run(120);
+        let (t2, r2) = run(120);
+        assert_eq!(t1, t2, "case {case}: identical seeds -> identical hit traces");
+        assert_eq!(r1, r2);
     }
 }
 
