@@ -1,0 +1,207 @@
+//! End-to-end serving-under-failure driver (the fault-injection
+//! analogue of `fleet_e2e`, and the CI churn smoke test).
+//!
+//! Four checks on the model clock, all structural (no artifacts):
+//!
+//! 1. **Zero-fault identity** — attaching `FaultSpec::none()` reproduces
+//!    the healthy fleet bitwise: same model summary, same per-request
+//!    records, zero retries, zero wasted prefill. Fault injection costs
+//!    nothing when it injects nothing.
+//! 2. **Goodput under churn** — against an SLO the healthy fleet meets
+//!    on every request, a mid-run blackout (both replicas down, scripted
+//!    [`Outage`]s) strictly cuts goodput: stranded requests carry the
+//!    downtime in their E2E.
+//! 3. **Determinism** — re-running the faulty spec with the same seed
+//!    reproduces the model summary and per-request retries bitwise.
+//! 4. **Policy reordering** — there exists a seed (found by a small
+//!    grid search and asserted) where the best router policy *under
+//!    churn* differs from the best policy on the healthy fleet: failures
+//!    change which router you should deploy, which is the point of
+//!    modeling them.
+
+use commsim::faults::FaultSpec;
+use commsim::fleet::{FleetSpec, FleetSummary, RouterPolicy, SloTarget};
+use commsim::plan::Deployment;
+use commsim::workload::{ArrivalProcess, LengthDist, PrefixProfile, WorkloadSpec};
+
+const POLICIES: [RouterPolicy; 4] = [
+    RouterPolicy::RoundRobin,
+    RouterPolicy::LeastOutstandingTokens,
+    RouterPolicy::ShortestQueue,
+    RouterPolicy::CacheAffinity,
+];
+
+/// Worst per-request model-time E2E of a run (the tightest SLO the run
+/// meets on every request).
+fn worst_e2e(s: &FleetSummary) -> f64 {
+    s.per_request
+        .iter()
+        .filter_map(|m| m.model.as_ref().map(|t| t.e2e_s))
+        .fold(0.0f64, f64::max)
+}
+
+/// Mid-decode instant of the run's last-finishing request: strictly
+/// after its first token, with decode steps still to run — a blackout
+/// here is guaranteed to kill it in flight.
+fn mid_decode_of_last(s: &FleetSummary) -> f64 {
+    let last = s
+        .per_request
+        .iter()
+        .filter_map(|m| m.model.as_ref())
+        .max_by(|a, b| a.finished_at_s.total_cmp(&b.finished_at_s))
+        .expect("at least one priced request");
+    let arrival = last.finished_at_s - last.e2e_s;
+    let first_token = arrival + last.queue_s + last.ttft_s;
+    0.5 * (first_token + last.finished_at_s)
+}
+
+/// Index of the best policy: highest goodput, ties to lower p99 E2E,
+/// then to the earlier policy.
+fn best(runs: &[(f64, f64)]) -> usize {
+    let mut best = 0;
+    for (i, &(gp, p99)) in runs.iter().enumerate().skip(1) {
+        let (bgp, bp99) = runs[best];
+        if gp > bgp || (gp == bgp && p99 < bp99) {
+            best = i;
+        }
+    }
+    best
+}
+
+fn main() -> anyhow::Result<()> {
+    let (sp, sd) = (32usize, 16usize);
+    let requests = 24usize;
+    let seed = 0xF1EE7u64;
+    let plan = Deployment::builder().model("8b").tp(2).workload(sp, sd).build()?;
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(150.0),
+        prompt: LengthDist::Fixed(sp),
+        decode: LengthDist::Fixed(sd),
+        prefix: None,
+        requests,
+    };
+    let fleet = || -> anyhow::Result<FleetSpec> {
+        Ok(plan.fleet(2)?.with_router(RouterPolicy::LeastOutstandingTokens))
+    };
+    println!("churn e2e: {} x2 — {requests} requests, seed {seed:#x}\n", plan.label());
+
+    // --- 1. zero-fault identity ----------------------------------------
+    let healthy = fleet()?.simulate(&workload, seed)?;
+    let nofault = fleet()?.with_faults(FaultSpec::none())?.simulate(&workload, seed)?;
+    anyhow::ensure!(
+        nofault.model == healthy.model,
+        "FaultSpec::none() must reproduce the healthy model summary bitwise"
+    );
+    anyhow::ensure!(nofault.retries == 0 && nofault.wasted_prefill_s == 0.0);
+    anyhow::ensure!(nofault.comm_bytes == healthy.comm_bytes);
+    anyhow::ensure!(nofault.per_request.len() == healthy.per_request.len());
+    for (a, b) in nofault.per_request.iter().zip(healthy.per_request.iter()) {
+        anyhow::ensure!(
+            a.request_id == b.request_id
+                && a.replica == b.replica
+                && a.model == b.model
+                && a.retries == 0,
+            "per-request records must match the healthy run"
+        );
+    }
+    println!("zero-fault OK: FaultSpec::none() is the healthy fleet, bitwise");
+
+    // --- 2. goodput strictly drops under churn -------------------------
+    // SLO the healthy fleet meets on every request, by construction.
+    let slo = SloTarget { e2e_p95_s: Some(worst_e2e(&healthy)), ..Default::default() };
+    anyhow::ensure!(healthy.goodput(&slo) == 1.0, "healthy fleet meets its own worst E2E");
+    // Blackout: both replicas down mid-run, for two healthy makespans.
+    let t_fail = mid_decode_of_last(&healthy);
+    let down_s = 2.0 * healthy.model.makespan_s;
+    let blackout = FaultSpec::none()
+        .with_outage(0, t_fail, down_s)
+        .with_outage(1, t_fail, down_s);
+    let churned = fleet()?.with_faults(blackout.clone())?.simulate(&workload, seed)?;
+    anyhow::ensure!(churned.completed == requests, "the fleet recovers and serves everything");
+    anyhow::ensure!(churned.retries > 0, "the blackout must kill in-flight requests");
+    anyhow::ensure!(churned.wasted_prefill_s >= 0.0);
+    let (gh, gc) = (healthy.goodput(&slo), churned.goodput(&slo));
+    anyhow::ensure!(
+        gc < gh,
+        "goodput under churn must be strictly below healthy ({gc} vs {gh})"
+    );
+    println!(
+        "goodput OK: blackout at {:.4}s for {:.4}s -> goodput {:.3} (healthy {:.3}), \
+         {} retries, {:.4}s prefill wasted",
+        t_fail, down_s, gc, gh, churned.retries, churned.wasted_prefill_s
+    );
+
+    // --- 3. faulty runs are bitwise-deterministic ----------------------
+    let again = fleet()?.with_faults(blackout)?.simulate(&workload, seed)?;
+    anyhow::ensure!(
+        again.model == churned.model && again.retries == churned.retries,
+        "same faults + seed must reproduce the run bitwise"
+    );
+    for (a, b) in again.per_request.iter().zip(churned.per_request.iter()) {
+        anyhow::ensure!(a.model == b.model && a.retries == b.retries && a.replica == b.replica);
+    }
+    println!("determinism OK: identical faulty run on re-seed");
+
+    // --- 4. churn reorders the router-policy ranking -------------------
+    // A shared-prefix, mixed-length workload over 3 replicas separates
+    // the policies; an outage then knocks one replica (and its cache
+    // warmth) out mid-run. Search a small seed x outage grid for a case
+    // where the churn-best policy differs from the healthy-best one.
+    let tiny = Deployment::builder().model("tiny").tp(2).workload(48, 12).build()?;
+    let wl = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(600.0),
+        prompt: LengthDist::Uniform { lo: 32, hi: 48 },
+        decode: LengthDist::Uniform { lo: 4, hi: 12 },
+        prefix: Some(PrefixProfile::MultiTurn { conversations: 6, shared: 24 }),
+        requests: 32,
+    };
+    let mut reorder = None;
+    'grid: for s in 0..16u64 {
+        let seed = 0x5EED0 + s;
+        // Healthy ranking, against the tightest healthy p95 across
+        // policies (so the ranking has room to move).
+        let mut runs = Vec::new();
+        for p in POLICIES {
+            runs.push(tiny.fleet(3)?.with_router(p).simulate(&wl, seed)?);
+        }
+        let slo = SloTarget {
+            e2e_p95_s: Some(runs.iter().map(|r| r.model.e2e.p95_s).fold(f64::INFINITY, f64::min)),
+            ..Default::default()
+        };
+        let scored: Vec<(f64, f64)> =
+            runs.iter().map(|r| (r.goodput(&slo), r.model.e2e.p99_s)).collect();
+        let healthy_best = best(&scored);
+        let makespan = runs[healthy_best].model.makespan_s;
+        for frac in [0.25, 0.45, 0.65] {
+            for replica in 0..3usize {
+                let faults =
+                    FaultSpec::none().with_outage(replica, frac * makespan, 0.5 * makespan);
+                let mut scored = Vec::new();
+                for p in POLICIES {
+                    let r = tiny
+                        .fleet(3)?
+                        .with_router(p)
+                        .with_faults(faults.clone())?
+                        .simulate(&wl, seed)?;
+                    scored.push((r.goodput(&slo), r.model.e2e.p99_s));
+                }
+                let churn_best = best(&scored);
+                if churn_best != healthy_best {
+                    reorder = Some((seed, replica, frac, healthy_best, churn_best));
+                    break 'grid;
+                }
+            }
+        }
+    }
+    let (seed, replica, frac, hb, cb) =
+        reorder.ok_or_else(|| anyhow::anyhow!("no seed reordered the policy ranking"))?;
+    println!(
+        "policy reordering OK: seed {seed:#x}, replica {replica} down at {frac} of the \
+         makespan -> best policy shifts {} -> {}",
+        POLICIES[hb].label(),
+        POLICIES[cb].label()
+    );
+
+    println!("\nchurn_e2e OK");
+    Ok(())
+}

@@ -79,10 +79,30 @@ impl Default for NetModel {
     }
 }
 
+impl LinkParams {
+    /// This link degraded by `factor >= 1.0`: launch latency inflates by
+    /// the factor and effective bandwidth shrinks by it — the α–β form of
+    /// a slow rank or a throttled link ([`crate::faults`]). `x * 1.0` and
+    /// `x / 1.0` are bitwise f64 identities, so `degraded(1.0)` is
+    /// bit-for-bit the healthy link with no branch.
+    pub fn degraded(&self, factor: f64) -> LinkParams {
+        LinkParams { alpha_s: self.alpha_s * factor, bus_bw: self.bus_bw / factor }
+    }
+}
+
 impl NetModel {
     /// Link parameters governing a group: the slowest member link.
     pub fn group_params(&self, crosses_nodes: bool) -> LinkParams {
         if crosses_nodes { self.ib } else { self.nvlink }
+    }
+
+    /// Both fabrics degraded by `factor >= 1.0` (straggler rank: every
+    /// collective touching the replica runs at the slowest member's
+    /// speed, so one slow rank degrades the whole group — the α–β analog
+    /// of the paper's slowest-participant observation). `degraded(1.0)`
+    /// is bitwise the healthy model.
+    pub fn degraded(&self, factor: f64) -> NetModel {
+        NetModel { nvlink: self.nvlink.degraded(factor), ib: self.ib.degraded(factor) }
     }
 
     /// Ring AllReduce over `d` workers, message `n` bytes:
@@ -306,6 +326,70 @@ mod tests {
             let p = nm.group_params(crosses);
             assert!((rs.latency_s - 3.0 * p.alpha_s).abs() < 1e-15);
             assert!((rs.transfer_s - 0.75 * 1.0e6 / p.bus_bw).abs() < 1e-18);
+        }
+    }
+
+    #[test]
+    fn degraded_collectives_never_undercut_healthy_for_any_kind() {
+        // Fault-injection invariant: a degraded fabric is monotonically
+        // slower (>=) than the healthy one for every collective class, on
+        // both link fabrics, for small and large messages.
+        let nm = NetModel::default();
+        let ops = [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllToAll,
+            CollectiveKind::Gather,
+            CollectiveKind::Send,
+            CollectiveKind::Recv,
+        ];
+        for factor in [1.5, 2.0, 8.0] {
+            let slow = nm.degraded(factor);
+            for op in ops {
+                for crosses in [false, true] {
+                    for bytes in [1.0, 8192.0, 1.0e6, 1.0e9] {
+                        for d in [2usize, 4, 8] {
+                            let h = nm.collective(op, bytes, d, crosses);
+                            let s = slow.collective(op, bytes, d, crosses);
+                            assert!(
+                                s.latency_s >= h.latency_s && s.transfer_s >= h.transfer_s,
+                                "{op:?} x{factor} crosses={crosses} bytes={bytes} d={d}: \
+                                 degraded {s:?} < healthy {h:?}"
+                            );
+                            assert!(
+                                s.total() >= h.total(),
+                                "{op:?} x{factor}: total went down under degradation"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degradation_factor_one_is_bitwise_identity() {
+        // FaultSpec::none() must not perturb a single bit: factor 1.0 maps
+        // every α and β through exact f64 identities.
+        let nm = NetModel::default();
+        assert_eq!(nm.degraded(1.0), nm);
+        assert_eq!(nm.nvlink.degraded(1.0), nm.nvlink);
+        let ops = [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::Gather,
+            CollectiveKind::Send,
+        ];
+        let unit = nm.degraded(1.0);
+        for op in ops {
+            for crosses in [false, true] {
+                assert_eq!(
+                    unit.collective(op, 8192.0, 4, crosses),
+                    nm.collective(op, 8192.0, 4, crosses),
+                    "{op:?} crosses={crosses}: factor 1.0 perturbed the cost"
+                );
+            }
         }
     }
 

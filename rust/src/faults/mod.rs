@@ -1,0 +1,346 @@
+//! Seeded fault injection for the fleet simulator — replica churn,
+//! straggler ranks, and link-degradation windows on the model clock.
+//!
+//! The paper characterizes communication on a *healthy* fabric; its
+//! headline trade-off (TP buys latency with acute bandwidth sensitivity)
+//! only sharpens when the fabric misbehaves: collectives run at the
+//! slowest participant, so one slow rank taxes a whole replica, and a
+//! failed replica costs every in-flight request its KV and prefix-cache
+//! warmth. [`FaultSpec`] describes three injector families the fleet DES
+//! ([`crate::fleet::FleetSpec::with_faults`]) executes deterministically:
+//!
+//! - **replica churn** — per-replica MTBF/MTTR exponential processes
+//!   ([`ChurnSpec`], drawn from [`ChurnProcess`]) plus scripted
+//!   [`Outage`]s for tests. On failure the replica drops its queue and
+//!   every admitted request (retried through the router, warmth lost);
+//!   recovery pays a model-time cold start — the weights ride
+//!   [`NetModel::p2p`] ([`cold_start_s`]) and the prefix cache restarts
+//!   cold.
+//! - **straggler ranks** — a per-replica slowdown factor threaded through
+//!   [`NetModel::degraded`]: every collective the replica prices inflates
+//!   by the factor (α up, β bandwidth down), the slowest-member rule.
+//! - **link-degradation windows** — time-boxed bandwidth cuts
+//!   ([`DegradeWindow`]) on the fleet wire (KV handoffs, recovery
+//!   reloads): [`FaultSpec::wire_factor`] maps a model time to the
+//!   active factor.
+//!
+//! Fault randomness draws from its own seeded stream
+//! ([`crate::workload::FAULT_STREAM_SALT`], one sub-stream per replica),
+//! independent of the arrival/length/prefix streams — enabling churn
+//! never moves an arrival, so healthy-vs-faulty comparisons stay paired.
+//! [`FaultSpec::none`] is the exact healthy fleet: factor-1.0 degradation
+//! is a bitwise f64 identity and no churn process is ever constructed.
+
+use crate::cluster::NetModel;
+use crate::model::ModelArch;
+use crate::plan::PlanError;
+use crate::workload::{splitmix64, Rng64, FAULT_STREAM_SALT};
+
+/// Fleet-wide replica churn: every replica fails after an exponential
+/// `mtbf_s` up-time and repairs after an exponential `mttr_s` down-time
+/// (plus the deterministic cold start the fleet prices at recovery).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnSpec {
+    /// Mean time between failures (seconds, model clock).
+    pub mtbf_s: f64,
+    /// Mean time to repair (seconds, model clock).
+    pub mttr_s: f64,
+}
+
+/// One scripted outage: replica `replica` fails at `at_s` and repairs
+/// `down_s` later. Deterministic by construction — the regression-test
+/// (and incident-replay) counterpart of the stochastic [`ChurnSpec`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outage {
+    pub replica: usize,
+    pub at_s: f64,
+    pub down_s: f64,
+}
+
+/// One time-boxed degradation of the fleet wire: within `[t0_s, t1_s)`
+/// inter-replica transfers (KV handoffs, recovery weight reloads) run on
+/// links degraded by `factor` (α × factor, bandwidth ÷ factor).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeWindow {
+    pub t0_s: f64,
+    pub t1_s: f64,
+    pub factor: f64,
+}
+
+/// A validated-on-attach fault plan for one fleet simulation. The
+/// default ([`FaultSpec::none`]) injects nothing and reproduces the
+/// healthy fleet bitwise.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Stochastic churn applied to every replica (None: no churn).
+    pub churn: Option<ChurnSpec>,
+    /// Scripted outages (composable with `churn`).
+    pub outages: Vec<Outage>,
+    /// Per-replica straggler slowdowns `(replica, factor >= 1.0)`;
+    /// repeated entries for one replica compound multiplicatively.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Fleet-wire degradation windows; overlapping windows apply the
+    /// worst (largest) factor.
+    pub degrade: Vec<DegradeWindow>,
+}
+
+fn positive_finite(what: &'static str, v: f64) -> Result<(), PlanError> {
+    if !(v.is_finite() && v > 0.0) {
+        return Err(PlanError::FaultValueInvalid { what, value: format!("{v}; must be > 0") });
+    }
+    Ok(())
+}
+
+fn factor_at_least_one(what: &'static str, v: f64) -> Result<(), PlanError> {
+    if !(v.is_finite() && v >= 1.0) {
+        return Err(PlanError::FaultValueInvalid {
+            what,
+            value: format!("{v}; must be a finite factor >= 1.0"),
+        });
+    }
+    Ok(())
+}
+
+fn replica_in_range(replica: usize, replicas: usize) -> Result<(), PlanError> {
+    if replica >= replicas {
+        return Err(PlanError::FaultReplicaOutOfRange { replica, replicas });
+    }
+    Ok(())
+}
+
+impl FaultSpec {
+    /// The empty fault plan — injects nothing, healthy fleet bitwise.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Whether this plan injects nothing at all.
+    pub fn is_none(&self) -> bool {
+        self.churn.is_none()
+            && self.outages.is_empty()
+            && self.stragglers.is_empty()
+            && self.degrade.is_empty()
+    }
+
+    /// Fleet-wide exponential churn (builder form).
+    pub fn with_churn(mut self, mtbf_s: f64, mttr_s: f64) -> Self {
+        self.churn = Some(ChurnSpec { mtbf_s, mttr_s });
+        self
+    }
+
+    /// One scripted outage (builder form).
+    pub fn with_outage(mut self, replica: usize, at_s: f64, down_s: f64) -> Self {
+        self.outages.push(Outage { replica, at_s, down_s });
+        self
+    }
+
+    /// One straggler replica (builder form).
+    pub fn with_straggler(mut self, replica: usize, factor: f64) -> Self {
+        self.stragglers.push((replica, factor));
+        self
+    }
+
+    /// One fleet-wire degradation window (builder form).
+    pub fn with_degrade_window(mut self, t0_s: f64, t1_s: f64, factor: f64) -> Self {
+        self.degrade.push(DegradeWindow { t0_s, t1_s, factor });
+        self
+    }
+
+    /// Validate against a fleet of `replicas` members. Every numeric knob
+    /// must be finite and in-domain; every named replica must exist.
+    pub fn validate(&self, replicas: usize) -> Result<(), PlanError> {
+        if let Some(c) = &self.churn {
+            positive_finite("churn MTBF seconds", c.mtbf_s)?;
+            positive_finite("churn MTTR seconds", c.mttr_s)?;
+        }
+        for o in &self.outages {
+            replica_in_range(o.replica, replicas)?;
+            if !(o.at_s.is_finite() && o.at_s >= 0.0) {
+                return Err(PlanError::FaultValueInvalid {
+                    what: "outage start time",
+                    value: format!("{}; must be >= 0", o.at_s),
+                });
+            }
+            positive_finite("outage down time", o.down_s)?;
+        }
+        for &(replica, factor) in &self.stragglers {
+            replica_in_range(replica, replicas)?;
+            factor_at_least_one("straggler factor", factor)?;
+        }
+        for w in &self.degrade {
+            if !(w.t0_s.is_finite() && w.t0_s >= 0.0 && w.t1_s.is_finite() && w.t1_s > w.t0_s) {
+                return Err(PlanError::FaultValueInvalid {
+                    what: "degradation window",
+                    value: format!("[{}, {}); needs 0 <= t0 < t1", w.t0_s, w.t1_s),
+                });
+            }
+            factor_at_least_one("degradation factor", w.factor)?;
+        }
+        Ok(())
+    }
+
+    /// The straggler slowdown of one replica: the product of its entries
+    /// (exactly 1.0 — the bitwise-identity factor — when it has none).
+    pub fn straggler_factor(&self, replica: usize) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|(r, _)| *r == replica)
+            .map(|(_, f)| *f)
+            .product()
+    }
+
+    /// The fleet-wire degradation factor at model time `t_s`: the worst
+    /// factor among windows containing `t_s` (1.0 outside every window).
+    pub fn wire_factor(&self, t_s: f64) -> f64 {
+        self.degrade
+            .iter()
+            .filter(|w| w.t0_s <= t_s && t_s < w.t1_s)
+            .map(|w| w.factor)
+            .fold(1.0, f64::max)
+    }
+}
+
+/// One replica's seeded failure/repair draw stream: exponential holding
+/// times at the spec's MTBF/MTTR, on the replica's own sub-stream of the
+/// fault stream — independent of every workload stream and of the other
+/// replicas' churn.
+#[derive(Debug, Clone)]
+pub struct ChurnProcess {
+    rng: Rng64,
+    spec: ChurnSpec,
+}
+
+fn exp_draw(rng: &mut Rng64, mean_s: f64) -> f64 {
+    // Inverse-CDF on [0, 1): ln(1 - u) is finite because u < 1.
+    -(1.0 - rng.next_f64()).ln() * mean_s
+}
+
+impl ChurnProcess {
+    pub fn new(seed: u64, replica: usize, spec: ChurnSpec) -> Self {
+        // splitmix64 is a bijection: replica sub-streams never collide.
+        let rng = Rng64::new(seed ^ FAULT_STREAM_SALT ^ splitmix64(replica as u64));
+        Self { rng, spec }
+    }
+
+    /// Next up-time: seconds until the replica's next failure.
+    pub fn time_to_failure(&mut self) -> f64 {
+        exp_draw(&mut self.rng, self.spec.mtbf_s)
+    }
+
+    /// Next down-time: seconds until repair completes (the fleet adds
+    /// the deterministic cold start on top).
+    pub fn time_to_repair(&mut self) -> f64 {
+        exp_draw(&mut self.rng, self.spec.mttr_s)
+    }
+}
+
+/// Model-time cost of a recovered replica's cold start: the full weight
+/// set (`param_count × dtype_bytes`) rides one inter-node [`NetModel::p2p`]
+/// transfer (checkpoint storage is off-fabric, so the reload always
+/// crosses nodes), on the possibly-degraded wire the caller passes in.
+pub fn cold_start_s(arch: &ModelArch, dtype_bytes: usize, net: &NetModel) -> f64 {
+    net.p2p((arch.param_count() * dtype_bytes) as f64, true).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_injects_nothing_and_validates_everywhere() {
+        let f = FaultSpec::none();
+        assert!(f.is_none());
+        f.validate(0).unwrap();
+        f.validate(8).unwrap();
+        assert_eq!(f.straggler_factor(0), 1.0);
+        assert_eq!(f.wire_factor(123.0), 1.0);
+    }
+
+    #[test]
+    fn validation_rejects_out_of_domain_knobs() {
+        let err = |f: FaultSpec| f.validate(2).unwrap_err();
+        assert!(matches!(
+            err(FaultSpec::none().with_churn(0.0, 1.0)),
+            PlanError::FaultValueInvalid { what: "churn MTBF seconds", .. }
+        ));
+        assert!(matches!(
+            err(FaultSpec::none().with_churn(1.0, f64::NAN)),
+            PlanError::FaultValueInvalid { what: "churn MTTR seconds", .. }
+        ));
+        assert!(matches!(
+            err(FaultSpec::none().with_straggler(2, 2.0)),
+            PlanError::FaultReplicaOutOfRange { replica: 2, replicas: 2 }
+        ));
+        assert!(matches!(
+            err(FaultSpec::none().with_straggler(0, 0.5)),
+            PlanError::FaultValueInvalid { what: "straggler factor", .. }
+        ));
+        assert!(matches!(
+            err(FaultSpec::none().with_outage(1, -1.0, 1.0)),
+            PlanError::FaultValueInvalid { what: "outage start time", .. }
+        ));
+        assert!(matches!(
+            err(FaultSpec::none().with_degrade_window(2.0, 1.0, 2.0)),
+            PlanError::FaultValueInvalid { what: "degradation window", .. }
+        ));
+        assert!(matches!(
+            err(FaultSpec::none().with_degrade_window(0.0, 1.0, 0.9)),
+            PlanError::FaultValueInvalid { what: "degradation factor", .. }
+        ));
+        // Everything in-domain validates.
+        FaultSpec::none()
+            .with_churn(10.0, 1.0)
+            .with_outage(0, 0.5, 0.25)
+            .with_straggler(1, 4.0)
+            .with_degrade_window(0.0, 2.0, 8.0)
+            .validate(2)
+            .unwrap();
+    }
+
+    #[test]
+    fn straggler_factors_compound_and_windows_take_the_worst() {
+        let f = FaultSpec::none()
+            .with_straggler(1, 2.0)
+            .with_straggler(1, 3.0)
+            .with_degrade_window(0.0, 2.0, 2.0)
+            .with_degrade_window(1.0, 3.0, 5.0);
+        assert_eq!(f.straggler_factor(0), 1.0);
+        assert_eq!(f.straggler_factor(1), 6.0);
+        assert_eq!(f.wire_factor(0.5), 2.0);
+        assert_eq!(f.wire_factor(1.5), 5.0, "overlap applies the worst factor");
+        assert_eq!(f.wire_factor(2.5), 5.0);
+        assert_eq!(f.wire_factor(3.0), 1.0, "windows are half-open");
+    }
+
+    #[test]
+    fn churn_draws_are_seeded_per_replica_and_deterministic() {
+        let spec = ChurnSpec { mtbf_s: 10.0, mttr_s: 1.0 };
+        let draw = |seed: u64, replica: usize| -> Vec<f64> {
+            let mut p = ChurnProcess::new(seed, replica, spec);
+            (0..4).flat_map(|_| [p.time_to_failure(), p.time_to_repair()]).collect()
+        };
+        assert_eq!(draw(7, 0), draw(7, 0), "same seed+replica -> bitwise draws");
+        assert_ne!(draw(7, 0), draw(7, 1), "replicas get independent sub-streams");
+        assert_ne!(draw(7, 0), draw(8, 0), "seed moves the stream");
+        for d in draw(7, 0) {
+            assert!(d.is_finite() && d > 0.0);
+        }
+        // Exponential means land near the spec over many draws.
+        let mut p = ChurnProcess::new(42, 3, spec);
+        let n = 4000;
+        let mean: f64 = (0..n).map(|_| p.time_to_failure()).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 1.0, "empirical MTBF {mean} vs 10.0");
+    }
+
+    #[test]
+    fn cold_start_prices_the_weights_over_the_wire() {
+        let arch = ModelArch::tiny();
+        let net = NetModel::default();
+        let healthy = cold_start_s(&arch, 2, &net);
+        let expect = net.p2p((arch.param_count() * 2) as f64, true).total();
+        assert_eq!(healthy, expect);
+        assert!(healthy > 0.0);
+        // A degraded wire makes recovery strictly slower.
+        assert!(cold_start_s(&arch, 2, &net.degraded(4.0)) > healthy);
+    }
+}

@@ -34,7 +34,17 @@
 //!   item.);
 //! - [`capacity_sweep`] runs a list of candidate fleets over one workload
 //!   and [`cheapest`] picks the fewest-GPU fleet meeting an [`SloTarget`]
-//!   — the capacity-planning loop as a library primitive.
+//!   — the capacity-planning loop as a library primitive;
+//! - [`FleetSpec::with_faults`] attaches a seeded [`crate::faults`]
+//!   injection spec — replica churn (failed replicas drop their queues
+//!   and in-flight requests, which retry through the router with their
+//!   cache warmth lost; recovery pays a weight-reload cold start),
+//!   scripted outages, straggler replicas (a degraded per-replica α–β
+//!   calibration), and time-boxed link-degradation windows on the fleet
+//!   wire — and [`FleetSummary::goodput`] scores the result as
+//!   completed-within-SLO ÷ offered. [`crate::faults::FaultSpec::none`]
+//!   (the default) leaves every output bitwise-identical to a fault-free
+//!   fleet.
 
 mod replica;
 mod router;
@@ -48,7 +58,9 @@ use std::time::Duration;
 use crate::cluster::NetModel;
 use crate::comm::{CollectiveKind, Stage, TraceSummary};
 use crate::engine::Engine;
+use crate::faults::{cold_start_s, ChurnProcess, FaultSpec};
 use crate::model::ModelArch;
+use crate::perfmodel::Calibration;
 use crate::plan::{DeploymentPlan, PlanError};
 use crate::server::prefix_cache::chain_hashes;
 use crate::server::{
@@ -101,6 +113,9 @@ pub struct FleetSpec {
     /// prefills in full and [`RouterPolicy::CacheAffinity`] degenerates
     /// to least-outstanding-tokens).
     prefix_cache: Option<PrefixCacheConfig>,
+    /// Fault-injection spec ([`FaultSpec::none`] by default — a healthy
+    /// fleet, bitwise-identical to a spec without the field).
+    faults: FaultSpec,
 }
 
 /// Fleet members must serve the same model structurally; numeric plans
@@ -136,6 +151,7 @@ impl FleetSpec {
             scheduler: SchedulerConfig::default(),
             gpus_per_node: 4,
             prefix_cache: None,
+            faults: FaultSpec::none(),
         })
     }
 
@@ -171,6 +187,7 @@ impl FleetSpec {
             scheduler: SchedulerConfig::default(),
             gpus_per_node: 4,
             prefix_cache: None,
+            faults: FaultSpec::none(),
         })
     }
 
@@ -227,6 +244,21 @@ impl FleetSpec {
         }
         self.prefix_cache = Some(cfg);
         Ok(self)
+    }
+
+    /// Attach a fault-injection spec — replica churn (MTBF/MTTR),
+    /// scripted outages, straggler replicas, and link-degradation
+    /// windows (see [`crate::faults::FaultSpec`]). Validated against the
+    /// current replica count; [`FaultSpec::none`] (the default) leaves
+    /// every simulation output bitwise-identical to a fault-free fleet.
+    pub fn with_faults(mut self, faults: FaultSpec) -> Result<Self, PlanError> {
+        faults.validate(self.replicas.len())?;
+        self.faults = faults;
+        Ok(self)
+    }
+
+    pub fn faults(&self) -> &FaultSpec {
+        &self.faults
     }
 
     pub fn prefix_cache(&self) -> Option<PrefixCacheConfig> {
@@ -287,14 +319,17 @@ impl FleetSpec {
             i = j;
         }
         let pfx = if self.prefix_cache.is_some() { " +pfx" } else { "" };
-        format!("{} [{}{pfx}]", parts.join(" + "), self.router.label())
+        let flt = if self.faults.is_none() { "" } else { " +faults" };
+        format!("{} [{}{pfx}{flt}]", parts.join(" + "), self.router.label())
     }
 
     /// Run the fleet against an open-loop workload. Deterministic per
     /// `seed`: the same spec, workload, and seed reproduce every metric
     /// bitwise.
     pub fn simulate(&self, workload: &WorkloadSpec, seed: u64) -> crate::Result<FleetSummary> {
+        self.faults.validate(self.replicas.len())?;
         let timed = workload.generate(seed)?;
+        let total_requests = timed.len();
         let n = self.replicas.len();
         let roles: Vec<ReplicaRole> = self.replicas.iter().map(|r| r.role).collect();
         let serve_pool: Vec<usize> =
@@ -313,19 +348,35 @@ impl FleetSpec {
             off += r.plan.layout().world_size();
         }
         let nodes: Vec<usize> = offsets.iter().map(|&o| o / self.gpus_per_node).collect();
-        let nets: Vec<NetModel> =
-            self.replicas.iter().map(|r| r.plan.cost_model().cal.net).collect();
-        let kv_per_token: Vec<usize> = self
+        // A straggler replica serves through a degraded calibration — its
+        // plan rebuilt with `NetModel::degraded(factor)` — so engine
+        // pricing, the replica's cost model, and its KV-handoff wire all
+        // slow down together. Factor 1.0 (the default) keeps the
+        // original plan, bitwise.
+        let plans: Vec<DeploymentPlan> = self
             .replicas
             .iter()
-            .map(|r| r.plan.arch().kv_bytes_per_token(r.plan.shape().dtype_bytes))
+            .enumerate()
+            .map(|(i, r)| {
+                let f = self.faults.straggler_factor(i);
+                if f == 1.0 {
+                    r.plan.clone()
+                } else {
+                    let cal = r.plan.cost_model().cal;
+                    r.plan
+                        .clone()
+                        .with_calibration(Calibration { net: cal.net.degraded(f), ..cal })
+                }
+            })
+            .collect();
+        let nets: Vec<NetModel> = plans.iter().map(|p| p.cost_model().cal.net).collect();
+        let kv_per_token: Vec<usize> = plans
+            .iter()
+            .map(|p| p.arch().kv_bytes_per_token(p.shape().dtype_bytes))
             .collect();
 
-        let mut engines: Vec<Engine> = self
-            .replicas
-            .iter()
-            .map(|r| r.plan.engine())
-            .collect::<crate::Result<Vec<_>>>()?;
+        let mut engines: Vec<Engine> =
+            plans.iter().map(|p| p.engine()).collect::<crate::Result<Vec<_>>>()?;
 
         let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::with_capacity(timed.len());
         let mut next_seq = 0u64;
@@ -334,6 +385,47 @@ impl FleetSpec {
                 at: t.at_s,
                 seq: next_seq,
                 kind: EventKind::Arrival(t.request),
+            }));
+            next_seq += 1;
+        }
+
+        // Fault machinery. Churn draws come from a per-replica stream of
+        // the fault RNG (salted off the workload seed), consumed in event
+        // order — deterministic per seed, and independent of the
+        // arrival/length/prefix streams. Scripted outages pre-schedule
+        // their Fail/Recover pairs; recovery always pays the weight
+        // cold-start over the (possibly degraded) fleet wire.
+        let mut alive = vec![true; n];
+        let mut down_until = vec![0.0f64; n];
+        let mut stranded: Vec<u64> = Vec::new();
+        let mut churn_procs: Vec<Option<ChurnProcess>> =
+            (0..n).map(|i| self.faults.churn.map(|c| ChurnProcess::new(seed, i, c))).collect();
+        for (i, proc) in churn_procs.iter_mut().enumerate() {
+            if let Some(p) = proc {
+                heap.push(Reverse(Event {
+                    at: p.time_to_failure(),
+                    seq: next_seq,
+                    kind: EventKind::Fail { replica: i, churned: true },
+                }));
+                next_seq += 1;
+            }
+        }
+        for o in &self.faults.outages {
+            heap.push(Reverse(Event {
+                at: o.at_s,
+                seq: next_seq,
+                kind: EventKind::Fail { replica: o.replica, churned: false },
+            }));
+            next_seq += 1;
+            let repair_at = o.at_s + o.down_s;
+            let wire = nets[o.replica].degraded(self.faults.wire_factor(repair_at));
+            let recover_at = repair_at
+                + cold_start_s(self.arch(), plans[o.replica].shape().dtype_bytes, &wire);
+            down_until[o.replica] = down_until[o.replica].max(recover_at);
+            heap.push(Reverse(Event {
+                at: recover_at,
+                seq: next_seq,
+                kind: EventKind::Recover { replica: o.replica, churned: false },
             }));
             next_seq += 1;
         }
@@ -367,7 +459,7 @@ impl FleetSpec {
                         e.session(),
                         self.scheduler,
                         self.prefix_cache.map(|cfg| PrefixCache::new(cfg, kv_per_token[i])),
-                        self.replicas[i].plan.cost_model(),
+                        plans[i].cost_model(),
                     )
                 })
                 .collect();
@@ -412,20 +504,36 @@ impl FleetSpec {
                                     None => replicas[i].load(),
                                 })
                                 .collect();
-                            let pick = serve_pool[arrival_router.route(&loads)];
+                            let live: Vec<bool> =
+                                serve_pool.iter().map(|&i| alive[i]).collect();
+                            let pick = arrival_router
+                                .route_masked(&loads, &live)
+                                .map(|slot| serve_pool[slot]);
                             let id = req.id;
                             pending.insert(
                                 id,
                                 Pending {
+                                    request: req.clone(),
+                                    arrival_s: ev.at,
+                                    chain,
+                                    attempt: 0,
+                                    retries: 0,
+                                    wasted_prefill_s: 0.0,
                                     prompt_tokens: req.prompt.len(),
                                     decode_len: req.decode_len,
-                                    replica: pick,
+                                    replica: pick.unwrap_or(0),
                                     decode_replica: None,
                                     prefill: None,
                                     kv_bytes: 0.0,
                                     kv_s: 0.0,
                                 },
                             );
+                            let Some(pick) = pick else {
+                                // Every serve replica is down: park the
+                                // request until a recovery re-routes it.
+                                stranded.push(id);
+                                continue;
+                            };
                             // Under disaggregation the prefill pool only
                             // produces the first token.
                             let sub = if disagg {
@@ -446,6 +554,8 @@ impl FleetSpec {
                                     saved_prefill_bytes: 0.0,
                                     kv_transfer_bytes: 0.0,
                                     kv_transfer_s: 0.0,
+                                    retries: p.retries,
+                                    wasted_prefill_s: p.wasted_prefill_s,
                                     model: None,
                                     error: Some(e.to_string()),
                                 });
@@ -455,7 +565,40 @@ impl FleetSpec {
                                     stats[pick].max_depth.max(replicas[pick].queue_depth());
                             }
                         }
-                        EventKind::Handoff { id, token, remaining, context, replica } => {
+                        EventKind::Handoff { id, token, remaining, context, replica, attempt } => {
+                            // A retry bumped the attempt epoch: this KV
+                            // shipment belongs to a dead attempt — drop it.
+                            if pending.get(&id).map(|p| p.attempt) != Some(attempt) {
+                                continue;
+                            }
+                            if !alive[replica] {
+                                // The decode target died while the KV was
+                                // on the wire: the shipped blocks are gone
+                                // with it. Retry the request from scratch.
+                                let p = pending.get_mut(&id).expect("attempt matched");
+                                p.attempt += 1;
+                                p.retries += 1;
+                                if let Some(pf) = p.prefill.take() {
+                                    p.wasted_prefill_s += plans[p.replica]
+                                        .cost_model()
+                                        .prefill_price(pf.prompt_tokens - pf.cached_tokens);
+                                }
+                                p.decode_replica = None;
+                                route_retry(
+                                    id,
+                                    ev.at,
+                                    &mut replicas,
+                                    &serve_pool,
+                                    &alive,
+                                    &mut arrival_router,
+                                    &mut pending,
+                                    &mut stats,
+                                    &mut completed,
+                                    &mut stranded,
+                                    disagg,
+                                );
+                                continue;
+                            }
                             let req =
                                 Request { id, prompt: vec![token], decode_len: remaining };
                             if let Err(e) = replicas[replica].submit(req, ev.at, context) {
@@ -472,7 +615,9 @@ impl FleetSpec {
                                     saved_prefill_bytes: pf.saved_prefill_bytes,
                                     kv_transfer_bytes: p.kv_bytes,
                                     kv_transfer_s: p.kv_s,
-                                    model: Some(times_from(pf)),
+                                    retries: p.retries,
+                                    wasted_prefill_s: p.wasted_prefill_s,
+                                    model: Some(anchored(&p, pf)),
                                     error: Some(e.to_string()),
                                 });
                             } else {
@@ -480,6 +625,108 @@ impl FleetSpec {
                                 stats[replica].max_depth = stats[replica]
                                     .max_depth
                                     .max(replicas[replica].queue_depth());
+                            }
+                        }
+                        EventKind::Fail { replica, churned } => {
+                            // Draw this failure's repair first (churn
+                            // draws are consumed in event order, keeping
+                            // the stream deterministic). Recovery pays
+                            // the weight-reload cold start over the fleet
+                            // wire — degraded if a link window covers the
+                            // repair time — before taking traffic again.
+                            if churned {
+                                if let Some(proc) = churn_procs[replica].as_mut() {
+                                    let repair_at = ev.at + proc.time_to_repair();
+                                    let wire = nets[replica]
+                                        .degraded(self.faults.wire_factor(repair_at));
+                                    let recover_at = repair_at
+                                        + cold_start_s(
+                                            self.arch(),
+                                            plans[replica].shape().dtype_bytes,
+                                            &wire,
+                                        );
+                                    down_until[replica] = down_until[replica].max(recover_at);
+                                    heap.push(Reverse(Event {
+                                        at: recover_at,
+                                        seq: next_seq,
+                                        kind: EventKind::Recover { replica, churned: true },
+                                    }));
+                                    next_seq += 1;
+                                }
+                            }
+                            if alive[replica] {
+                                alive[replica] = false;
+                                let lost = replicas[replica].fail(kv_per_token[replica])?;
+                                for l in &lost {
+                                    let p = pending
+                                        .get_mut(&l.id)
+                                        .expect("lost request tracked");
+                                    p.attempt += 1;
+                                    p.retries += 1;
+                                    p.wasted_prefill_s += l.wasted_prefill_s;
+                                    if let Some(pf) = p.prefill.take() {
+                                        // A decode-pool loss wastes the
+                                        // first attempt's prefill-pool
+                                        // work as well.
+                                        p.wasted_prefill_s += plans[p.replica]
+                                            .cost_model()
+                                            .prefill_price(
+                                                pf.prompt_tokens - pf.cached_tokens,
+                                            );
+                                    }
+                                    p.decode_replica = None;
+                                }
+                                for l in lost {
+                                    route_retry(
+                                        l.id,
+                                        ev.at,
+                                        &mut replicas,
+                                        &serve_pool,
+                                        &alive,
+                                        &mut arrival_router,
+                                        &mut pending,
+                                        &mut stats,
+                                        &mut completed,
+                                        &mut stranded,
+                                        disagg,
+                                    );
+                                }
+                            }
+                        }
+                        EventKind::Recover { replica, churned } => {
+                            // Schedule the next churn failure only while
+                            // the run still has work left — otherwise the
+                            // event heap would never drain.
+                            if churned && completed.len() < total_requests {
+                                if let Some(proc) = churn_procs[replica].as_mut() {
+                                    heap.push(Reverse(Event {
+                                        at: ev.at + proc.time_to_failure(),
+                                        seq: next_seq,
+                                        kind: EventKind::Fail { replica, churned: true },
+                                    }));
+                                    next_seq += 1;
+                                }
+                            }
+                            // Overlapping outages extend the downtime:
+                            // only the recovery that clears `down_until`
+                            // revives the replica.
+                            if !alive[replica] && ev.at >= down_until[replica] {
+                                alive[replica] = true;
+                                for id in std::mem::take(&mut stranded) {
+                                    route_retry(
+                                        id,
+                                        ev.at,
+                                        &mut replicas,
+                                        &serve_pool,
+                                        &alive,
+                                        &mut arrival_router,
+                                        &mut pending,
+                                        &mut stats,
+                                        &mut completed,
+                                        &mut stranded,
+                                        disagg,
+                                    );
+                                }
                             }
                         }
                     }
@@ -502,10 +749,12 @@ impl FleetSpec {
                                 saved_prefill_bytes: d.saved_prefill_bytes,
                                 kv_transfer_bytes: 0.0,
                                 kv_transfer_s: 0.0,
+                                retries: p.retries,
+                                wasted_prefill_s: p.wasted_prefill_s,
                                 model: if d.rejected {
                                     None
                                 } else {
-                                    Some(times_from(&d))
+                                    Some(anchored(&p, &d))
                                 },
                                 error: d.error.clone(),
                             });
@@ -524,10 +773,12 @@ impl FleetSpec {
                                     saved_prefill_bytes: d.saved_prefill_bytes,
                                     kv_transfer_bytes: 0.0,
                                     kv_transfer_s: 0.0,
+                                    retries: p.retries,
+                                    wasted_prefill_s: p.wasted_prefill_s,
                                     model: if d.rejected {
                                         None
                                     } else {
-                                        Some(times_from(&d))
+                                        Some(anchored(&p, &d))
                                     },
                                     error: d.error.clone(),
                                 });
@@ -549,7 +800,9 @@ impl FleetSpec {
                                     saved_prefill_bytes: d.saved_prefill_bytes,
                                     kv_transfer_bytes: 0.0,
                                     kv_transfer_s: 0.0,
-                                    model: Some(times_from(&d)),
+                                    retries: p.retries,
+                                    wasted_prefill_s: p.wasted_prefill_s,
+                                    model: Some(anchored(p, &d)),
                                     error: None,
                                 };
                                 pending.remove(&d.id);
@@ -561,15 +814,43 @@ impl FleetSpec {
                             // decode pool once the wire drains.
                             let loads: Vec<ReplicaLoad> =
                                 decode_pool.iter().map(|&i| replicas[i].load()).collect();
-                            let pick = decode_pool[handoff_router.route(&loads)];
+                            let live: Vec<bool> =
+                                decode_pool.iter().map(|&i| alive[i]).collect();
+                            let Some(slot) = handoff_router.route_masked(&loads, &live)
+                            else {
+                                // The whole decode pool is down: the
+                                // prefill work is wasted; the request
+                                // retries from scratch once a replica
+                                // recovers.
+                                let wasted = plans[bi]
+                                    .cost_model()
+                                    .prefill_price(d.prompt_tokens - d.cached_tokens);
+                                let p =
+                                    pending.get_mut(&d.id).expect("routed request tracked");
+                                p.attempt += 1;
+                                p.retries += 1;
+                                p.wasted_prefill_s += wasted;
+                                p.decode_replica = None;
+                                stranded.push(d.id);
+                                continue;
+                            };
+                            let pick = decode_pool[slot];
                             let bytes = (d.prompt_tokens * kv_per_token[bi]) as f64;
                             let crosses = nodes[bi] != nodes[pick];
-                            let cost = nets[bi].p2p(bytes, crosses).total();
+                            // Link-degradation windows slow the handoff
+                            // wire (factor 1.0 outside any window — a
+                            // bitwise no-op).
+                            let wire =
+                                nets[bi].degraded(self.faults.wire_factor(d.last_token_s));
+                            let cost = wire.p2p(bytes, crosses).total();
                             kv_total_bytes += bytes;
                             kv_total_s += cost;
                             p.decode_replica = Some(pick);
-                            p.kv_bytes = bytes;
-                            p.kv_s = cost;
+                            // Accumulated, not assigned: a retried
+                            // request ships (and pays for) its KV once
+                            // per attempt.
+                            p.kv_bytes += bytes;
+                            p.kv_s += cost;
                             heap.push(Reverse(Event {
                                 at: d.last_token_s + cost,
                                 seq: next_seq,
@@ -585,6 +866,7 @@ impl FleetSpec {
                                     // colocated position sequence exactly).
                                     context: d.prompt_tokens,
                                     replica: pick,
+                                    attempt: p.attempt,
                                 },
                             }));
                             next_seq += 1;
@@ -596,9 +878,17 @@ impl FleetSpec {
                             let (model, generated) = if d.rejected {
                                 // The decode pool refused the session: the
                                 // request keeps its prefill-phase times.
-                                (Some(times_from(pf)), pf.generated)
+                                (Some(anchored(&p, pf)), pf.generated)
                             } else {
-                                (Some(merge_times(pf, &d)), pf.generated + d.generated)
+                                // Anchor queue/E2E at the *first* arrival so
+                                // failed attempts and stranded-while-down
+                                // waits stay inside the span (bitwise no-op
+                                // on a healthy fleet, where the serving
+                                // attempt's arrival is the first arrival).
+                                let mut t = merge_times(pf, &d);
+                                t.queue_s = pf.admitted_s - p.arrival_s;
+                                t.e2e_s = d.last_token_s - p.arrival_s;
+                                (Some(t), pf.generated + d.generated)
                             };
                             completed.push(FleetRequestMetrics {
                                 request_id: d.id,
@@ -614,6 +904,8 @@ impl FleetSpec {
                                 saved_prefill_bytes: pf.saved_prefill_bytes,
                                 kv_transfer_bytes: p.kv_bytes,
                                 kv_transfer_s: p.kv_s,
+                                retries: p.retries,
+                                wasted_prefill_s: p.wasted_prefill_s,
                                 model,
                                 error: d.error.clone(),
                             });
@@ -644,6 +936,8 @@ impl FleetSpec {
                 ttft_s: 0.0,
                 tpot_s: 0.0,
                 e2e_s: 0.0,
+                retries: m.retries,
+                wasted_prefill_s: m.wasted_prefill_s,
                 model: m.model,
                 error: m.error.clone(),
             })
@@ -667,6 +961,8 @@ impl FleetSpec {
             cached_prompt_tokens: agg.cached_prompt_tokens,
             saved_prefill_s: agg.saved_prefill_s,
             saved_prefill_bytes: agg.saved_prefill_bytes,
+            retries: agg.retries,
+            wasted_prefill_s: agg.wasted_prefill_s,
             kv_transfer_bytes: kv_total_bytes,
             kv_transfer_s: kv_total_s,
             comm_bytes,
@@ -692,6 +988,86 @@ fn times_from(d: &ReplicaDone) -> ModelRequestTimes {
         },
         e2e_s: d.last_token_s - d.arrival_s,
         finished_at_s: d.last_token_s,
+    }
+}
+
+/// [`times_from`] anchored at the request's *first* arrival: queue time
+/// and E2E span failed attempts and stranded-while-down waits too (the
+/// wasted first-attempt prefill is inside that span), while TTFT/TPOT
+/// describe the attempt that actually served. On a healthy fleet the
+/// serving attempt's arrival *is* the first arrival, so this is exactly
+/// [`times_from`], bitwise.
+fn anchored(p: &Pending, d: &ReplicaDone) -> ModelRequestTimes {
+    let mut t = times_from(d);
+    t.queue_s = d.admitted_s - p.arrival_s;
+    t.e2e_s = d.last_token_s - p.arrival_s;
+    t
+}
+
+/// Re-route one request after a fault (its replica failed, its handoff
+/// target died, or a recovery revived a fully-down pool). The request
+/// re-enters the arrival router over the live serve pool; with no live
+/// replica it parks on `stranded` until a recovery event. A rejected
+/// resubmission fails the request, exactly as on first arrival.
+#[allow(clippy::too_many_arguments)]
+fn route_retry(
+    id: u64,
+    at: f64,
+    replicas: &mut [Replica<'_>],
+    serve_pool: &[usize],
+    alive: &[bool],
+    router: &mut Router,
+    pending: &mut HashMap<u64, Pending>,
+    stats: &mut [ReplicaStats],
+    completed: &mut Vec<FleetRequestMetrics>,
+    stranded: &mut Vec<u64>,
+    disagg: bool,
+) {
+    let Some(p) = pending.get(&id) else { return };
+    let loads: Vec<ReplicaLoad> = serve_pool
+        .iter()
+        .map(|&i| match &p.chain {
+            Some(c) => replicas[i].load_for_chain(c, p.request.prompt.len()),
+            None => replicas[i].load(),
+        })
+        .collect();
+    let live: Vec<bool> = serve_pool.iter().map(|&i| alive[i]).collect();
+    let Some(slot) = router.route_masked(&loads, &live) else {
+        stranded.push(id);
+        return;
+    };
+    let pick = serve_pool[slot];
+    let sub = if disagg {
+        Request { id, prompt: p.request.prompt.clone(), decode_len: 1 }
+    } else {
+        p.request.clone()
+    };
+    let pm = pending.get_mut(&id).expect("present above");
+    pm.replica = pick;
+    match replicas[pick].submit(sub, at, 0) {
+        Ok(()) => {
+            stats[pick].assigned += 1;
+            stats[pick].max_depth = stats[pick].max_depth.max(replicas[pick].queue_depth());
+        }
+        Err(e) => {
+            let p = pending.remove(&id).expect("present above");
+            completed.push(FleetRequestMetrics {
+                request_id: id,
+                replica: pick,
+                decode_replica: None,
+                prompt_tokens: p.prompt_tokens,
+                generated_tokens: 0,
+                cached_prompt_tokens: 0,
+                saved_prefill_s: 0.0,
+                saved_prefill_bytes: 0.0,
+                kv_transfer_bytes: p.kv_bytes,
+                kv_transfer_s: p.kv_s,
+                retries: p.retries,
+                wasted_prefill_s: p.wasted_prefill_s,
+                model: None,
+                error: Some(e.to_string()),
+            });
+        }
     }
 }
 
@@ -742,6 +1118,20 @@ fn traced_comm_bytes(summary: &TraceSummary, pp: usize) -> f64 {
 
 /// Fleet-level bookkeeping of one in-flight request.
 struct Pending {
+    /// The original request, kept so a fault-injection retry can
+    /// resubmit it verbatim.
+    request: Request,
+    /// First arrival time — a retried request anchors queue/E2E here,
+    /// not at its resubmission.
+    arrival_s: f64,
+    /// Precomputed prompt block-hash chain (cache-affinity routing),
+    /// reused when a retry re-routes the request.
+    chain: Option<Vec<u64>>,
+    /// Attempt epoch, bumped on every retry: a KV-handoff event carrying
+    /// a stale epoch belongs to a dead attempt and is dropped.
+    attempt: u32,
+    retries: usize,
+    wasted_prefill_s: f64,
     prompt_tokens: usize,
     decode_len: usize,
     replica: usize,
@@ -761,7 +1151,22 @@ struct Event {
 #[derive(Debug)]
 enum EventKind {
     Arrival(Request),
-    Handoff { id: u64, token: i32, remaining: usize, context: usize, replica: usize },
+    Handoff {
+        id: u64,
+        token: i32,
+        remaining: usize,
+        context: usize,
+        replica: usize,
+        /// [`Pending::attempt`] at shipment time (stale handoffs from a
+        /// retried attempt are dropped on delivery).
+        attempt: u32,
+    },
+    /// A replica goes down (churn draw or scripted outage): it loses its
+    /// queue, flights, KV, and prefix-cache warmth.
+    Fail { replica: usize, churned: bool },
+    /// A replica comes back (MTTR draw or outage end, plus the weight
+    /// cold-start) and takes traffic again.
+    Recover { replica: usize, churned: bool },
 }
 
 impl PartialEq for Event {
@@ -807,6 +1212,13 @@ pub struct FleetRequestMetrics {
     /// Modeled wire time of the KV handoff (stamped into the request's
     /// timeline: the decode pool sees the request only after it).
     pub kv_transfer_s: f64,
+    /// Times the request was re-routed after losing its replica to a
+    /// fault (0 on a healthy fleet).
+    pub retries: usize,
+    /// Model-time prefill seconds sunk into attempts that died with
+    /// their replica — work done, paid for in the request's E2E span,
+    /// and thrown away.
+    pub wasted_prefill_s: f64,
     /// Model-clock latencies; `None` when the request never entered an
     /// engine (queue overflow / admission rejection).
     pub model: Option<ModelRequestTimes>,
@@ -850,6 +1262,11 @@ pub struct FleetSummary {
     /// Total corrected prefill communication bytes saved by prefix-cache
     /// hits.
     pub saved_prefill_bytes: f64,
+    /// Total fault-injection retries across every request (0 on a
+    /// healthy fleet).
+    pub retries: usize,
+    /// Total model-time prefill seconds lost to replica failures.
+    pub wasted_prefill_s: f64,
     /// Total KV-cache bytes shipped prefill → decode.
     pub kv_transfer_bytes: f64,
     /// Total modeled KV-handoff wire seconds.
@@ -857,6 +1274,30 @@ pub struct FleetSummary {
     /// Traced corrected collective volume across all replicas plus KV
     /// handoffs (the fleet-level analogue of Eq. 1–7 totals).
     pub comm_bytes: f64,
+}
+
+impl FleetSummary {
+    /// Goodput under `slo`: the fraction of *offered* requests that
+    /// completed without error with per-request model-time latencies
+    /// inside every set target (the p95 targets double as per-request
+    /// bounds). Failed, rejected, and SLO-busting requests all count
+    /// against it — the serving-under-churn headline number: a fleet
+    /// that technically completes everything but blows its latency
+    /// budget on every retried request gets the score it deserves.
+    pub fn goodput(&self, slo: &SloTarget) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        let good = self
+            .per_request
+            .iter()
+            .filter(|m| {
+                m.error.is_none()
+                    && m.model.as_ref().is_some_and(|t| slo.met_by_request(t))
+            })
+            .count();
+        good as f64 / self.requests as f64
+    }
 }
 
 /// SLO targets for capacity planning (each axis optional; p95s).
@@ -880,6 +1321,14 @@ impl SloTarget {
         within(self.ttft_p95_s, m.ttft.p95_s)
             && within(self.tpot_p95_s, m.tpot.p95_s)
             && within(self.e2e_p95_s, m.e2e.p95_s)
+    }
+
+    /// Whether one request's model-time latencies meet every set target
+    /// — the per-request criterion behind [`FleetSummary::goodput`].
+    pub fn met_by_request(&self, t: &ModelRequestTimes) -> bool {
+        within(self.ttft_p95_s, t.ttft_s)
+            && within(self.tpot_p95_s, t.tpot_s)
+            && within(self.e2e_p95_s, t.e2e_s)
     }
 }
 
@@ -986,6 +1435,44 @@ mod tests {
             FleetSpec::colocated(&plan, 1).unwrap().with_prefix_cache(cap0).unwrap_err(),
             PlanError::ZeroDegree { .. }
         ));
+    }
+
+    #[test]
+    fn fault_spec_validates_against_replica_count_and_marks_the_label() {
+        let plan = tiny_plan(2, 1);
+        let spec = FleetSpec::colocated(&plan, 2).unwrap();
+        assert!(matches!(
+            spec.clone().with_faults(FaultSpec::none().with_straggler(5, 2.0)).unwrap_err(),
+            PlanError::FaultReplicaOutOfRange { replica: 5, replicas: 2 }
+        ));
+        let spec = spec.with_faults(FaultSpec::none().with_straggler(1, 2.0)).unwrap();
+        assert!(spec.label().ends_with("[round-robin +faults]"), "{}", spec.label());
+    }
+
+    #[test]
+    fn zero_fault_spec_is_bitwise_identical_and_stragglers_slow_the_fleet() {
+        let spec = FleetSpec::colocated(&tiny_plan(2, 1), 2).unwrap();
+        let wl = workload(12, 2000.0);
+        let healthy = spec.clone().simulate(&wl, 7).unwrap();
+        // An explicit all-healthy FaultSpec is a bitwise no-op.
+        let none =
+            spec.clone().with_faults(FaultSpec::none()).unwrap().simulate(&wl, 7).unwrap();
+        assert_eq!(healthy.model, none.model);
+        assert_eq!(none.retries, 0);
+        assert_eq!(none.wasted_prefill_s, 0.0);
+        // Slowing every replica's fabric 4x strictly lengthens the run
+        // (tiny TP=2 pays AllReduces every layer).
+        let slow = spec
+            .with_faults(FaultSpec::none().with_straggler(0, 4.0).with_straggler(1, 4.0))
+            .unwrap()
+            .simulate(&wl, 7)
+            .unwrap();
+        assert!(
+            slow.model.makespan_s > healthy.model.makespan_s,
+            "straggler fleet must be slower: {} vs {}",
+            slow.model.makespan_s,
+            healthy.model.makespan_s
+        );
     }
 
     #[test]

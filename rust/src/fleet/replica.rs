@@ -58,6 +58,18 @@ pub(crate) struct ReplicaDone {
     pub error: Option<String>,
 }
 
+/// One request lost to a replica failure ([`Replica::fail`]): the fleet
+/// retries it through the router, charging the first attempt's sunk
+/// prefill as waste.
+#[derive(Debug, Clone)]
+pub(crate) struct LostRequest {
+    pub id: SeqId,
+    /// Model-time prefill seconds the dead replica had sunk into the
+    /// request — the priced uncached suffix for admitted flights, 0 for
+    /// requests that were still queued.
+    pub wasted_prefill_s: f64,
+}
+
 /// In-flight model-clock bookkeeping (mirror of the serving loop's
 /// `ModelFlight`).
 struct Flight {
@@ -333,6 +345,43 @@ impl<'e> Replica<'e> {
             done.push(Self::finish_flight(*id, &f, None));
         }
         Ok(done)
+    }
+
+    /// Kill the replica: cancel every admitted sequence, drop the whole
+    /// queue, and restart the prefix cache cold (a recovered replica has
+    /// lost its KV pool's contents along with its weights). Returns the
+    /// lost requests — admitted flights first (by id, for determinism:
+    /// the flight map's iteration order is not), then the queue in FCFS
+    /// order — for the fleet to retry through the router. The session
+    /// itself survives with its model clock intact; the fleet gates
+    /// re-use on the recovery event.
+    pub fn fail(&mut self, kv_bytes_per_token: usize) -> Result<Vec<LostRequest>> {
+        let mut lost = Vec::new();
+        let mut ids: Vec<SeqId> = self.flights.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let f = self.flights.remove(&id).expect("listed flight exists");
+            self.session.cancel(id);
+            self.scheduler.finish(id)?;
+            // The sunk cost is the suffix this replica actually
+            // prefilled (the cached prefix cost nothing to skip); a
+            // flight still waiting on its prefill step has sunk nothing.
+            let wasted = if f.first_token_s.is_some() {
+                self.cost.prefill_price(f.prompt_tokens - f.cached_tokens)
+            } else {
+                0.0
+            };
+            lost.push(LostRequest { id, wasted_prefill_s: wasted });
+        }
+        for req in self.scheduler.drain_waiting() {
+            lost.push(LostRequest { id: req.id, wasted_prefill_s: 0.0 });
+        }
+        self.arrivals.clear();
+        self.outstanding_tokens = 0;
+        if let Some(cache) = self.prefix.take() {
+            self.prefix = Some(PrefixCache::new(cache.config(), kv_bytes_per_token));
+        }
+        Ok(lost)
     }
 
     fn finish_flight(id: SeqId, f: &Flight, error: Option<String>) -> ReplicaDone {

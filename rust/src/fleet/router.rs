@@ -119,6 +119,24 @@ impl Router {
             }),
         }
     }
+
+    /// [`Self::route`] with down replicas masked out: `alive[i]` gates
+    /// `loads[i]`, and the pick is an index into `loads` (never a dead
+    /// replica). Returns `None` when every replica is down — the fleet
+    /// strands the request until a recovery event. With all replicas
+    /// alive this is exactly [`Self::route`], pick for pick, cursor for
+    /// cursor — the fault-free path stays bitwise identical. Round-robin
+    /// cycles over the *live* pool, so a down replica's turns fall to its
+    /// successors instead of queueing behind a dead socket.
+    pub fn route_masked(&mut self, loads: &[ReplicaLoad], alive: &[bool]) -> Option<usize> {
+        assert_eq!(loads.len(), alive.len(), "one alive flag per replica load");
+        let live: Vec<usize> = (0..loads.len()).filter(|&i| alive[i]).collect();
+        if live.is_empty() {
+            return None;
+        }
+        let masked: Vec<ReplicaLoad> = live.iter().map(|&i| loads[i]).collect();
+        Some(live[self.route(&masked)])
+    }
 }
 
 /// Index of the smallest key; ties resolve to the lowest index.
@@ -177,6 +195,38 @@ mod tests {
         assert_eq!(ca.route(&[hit(50, 16), hit(50, 48), hit(50, 32)]), 1);
         // Hit ties break toward the lowest index.
         assert_eq!(ca.route(&[hit(50, 32), hit(50, 32)]), 0);
+    }
+
+    #[test]
+    fn masked_routing_skips_down_replicas_and_matches_unmasked_when_healthy() {
+        let loads = [load(0, 30), load(9, 10), load(0, 20)];
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstandingTokens,
+            RouterPolicy::ShortestQueue,
+            RouterPolicy::CacheAffinity,
+        ] {
+            // All-alive masking is the identity — same picks, same cursor.
+            let mut plain = Router::new(policy);
+            let mut masked = Router::new(policy);
+            for _ in 0..5 {
+                assert_eq!(
+                    masked.route_masked(&loads, &[true, true, true]),
+                    Some(plain.route(&loads)),
+                    "{policy:?} diverged under an all-alive mask"
+                );
+            }
+            // Everything down: the request has nowhere to go.
+            assert_eq!(masked.route_masked(&loads, &[false, false, false]), None);
+        }
+        // The load minimum is down: the pick skips to the live runner-up.
+        let mut lot = Router::new(RouterPolicy::LeastOutstandingTokens);
+        assert_eq!(lot.route_masked(&loads, &[true, false, true]), Some(2));
+        // Round-robin cycles over the live pool only.
+        let mut rr = Router::new(RouterPolicy::RoundRobin);
+        let picks: Vec<_> =
+            (0..4).map(|_| rr.route_masked(&loads, &[true, false, true]).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
     }
 
     #[test]

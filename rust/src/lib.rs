@@ -88,6 +88,13 @@
 //!   KV-cache handoffs priced through the α–β link model; plus the
 //!   capacity sweep that finds the cheapest fleet meeting an SLO target
 //!   (`commsim fleet` on the CLI).
+//! - [`faults`] — seeded fault injection over the fleet: replica churn
+//!   (MTBF/MTTR exponential processes and scripted outages; failed
+//!   replicas drop their queues, retried requests lose cache warmth,
+//!   recovery pays a weight-reload cold start), straggler replicas
+//!   (per-replica α–β degradation of every collective), and time-boxed
+//!   link-degradation windows on the fleet wire — reporting goodput,
+//!   retries, and wasted prefill per router policy.
 //! - [`report`] — renders paper tables/figures side-by-side with our
 //!   measured + analytical values.
 //!
@@ -98,6 +105,7 @@ pub mod analysis;
 pub mod cluster;
 pub mod comm;
 pub mod engine;
+pub mod faults;
 pub mod fleet;
 pub mod model;
 pub mod perfmodel;

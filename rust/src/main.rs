@@ -19,6 +19,7 @@
 use std::collections::HashMap;
 
 use commsim::comm::Stage;
+use commsim::faults::FaultSpec;
 use commsim::fleet::{self, FleetSpec, RouterPolicy, SloTarget};
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
@@ -60,7 +61,17 @@ COMMANDS:
             --prefix-cache-mb N (per-replica prefix-cache budget; default 64)
             --slo-e2e-p95 S (report the cheapest fleet meeting E2E p95 <= S)
             --gpus-per-node N (fleet node grid; prices KV handoffs)
+            fault injection (any of these switches to a per-policy churn
+            table over a fixed fleet of --replicas-max replicas):
+            --mtbf S (mean model-seconds between failures, per replica)
+            --mttr S (mean repair seconds; needs --mtbf; default MTBF/10)
+            --straggler R:F[,R:F...] (replica R prices collectives F x slower)
+            --degrade T0:T1:F[,...] (fleet wire F x slower in [T0, T1) s)
             deterministic: the same --seed reproduces every number bitwise
+  bench-diff Compare two directories of BENCH_*.json perf artifacts
+            --old DIR  --new DIR  --tolerance F (relative, default 0.05)
+            exits non-zero when any modeled seconds/bytes grew past the
+            tolerance (structural changes are reported, not failed on)
   tables    Print all paper-table reproductions (Tables III-VI)
 ";
 
@@ -100,7 +111,12 @@ const FLEET_FLAGS: &[&str] = &[
     "prefix_cache_mb",
     "slo_e2e_p95",
     "gpus_per_node",
+    "mtbf",
+    "mttr",
+    "straggler",
+    "degrade",
 ];
+const BENCH_DIFF_FLAGS: &[&str] = &["old", "new", "tolerance"];
 
 /// Minimal `--key value` flag parser with a per-subcommand allow-list.
 struct Flags(HashMap<String, String>);
@@ -428,6 +444,151 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `R:F[,R:F...]` straggler specs (`0:4.0,2:1.5`).
+fn parse_stragglers(s: &str) -> anyhow::Result<Vec<(usize, f64)>> {
+    s.split(',')
+        .map(|part| {
+            let (r, factor) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--straggler wants replica:factor, got '{part}'"))?;
+            Ok((
+                r.trim().parse().map_err(|e| anyhow::anyhow!("--straggler replica '{r}': {e}"))?,
+                factor
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--straggler factor '{factor}': {e}"))?,
+            ))
+        })
+        .collect()
+}
+
+/// Parse `T0:T1:F[,...]` degradation windows (`0.5:1.5:4`).
+fn parse_degrade(s: &str) -> anyhow::Result<Vec<(f64, f64, f64)>> {
+    s.split(',')
+        .map(|part| {
+            let fields: Vec<&str> = part.split(':').collect();
+            anyhow::ensure!(
+                fields.len() == 3,
+                "--degrade wants t0:t1:factor, got '{part}'"
+            );
+            let num = |what: &str, v: &str| -> anyhow::Result<f64> {
+                v.trim().parse().map_err(|e| anyhow::anyhow!("--degrade {what} '{v}': {e}"))
+            };
+            Ok((num("t0", fields[0])?, num("t1", fields[1])?, num("factor", fields[2])?))
+        })
+        .collect()
+}
+
+/// Assemble the fleet's fault plan from the CLI flags (empty when no
+/// fault flag was given).
+fn fleet_faults(f: &Flags) -> anyhow::Result<FaultSpec> {
+    let mut faults = FaultSpec::none();
+    match f.opt("mtbf") {
+        Some(_) => {
+            let mtbf = f.float("mtbf", 0.0)?;
+            // MTTR defaults to a 91%-uptime replica (repair an order of
+            // magnitude faster than failure).
+            let mttr = f.float("mttr", mtbf / 10.0)?;
+            faults = faults.with_churn(mtbf, mttr);
+        }
+        None => anyhow::ensure!(
+            f.opt("mttr").is_none(),
+            "--mttr sets the repair time of --mtbf churn; it needs --mtbf \
+             (there is no failure process to repair from)"
+        ),
+    }
+    if let Some(s) = f.opt("straggler") {
+        for (replica, factor) in parse_stragglers(s)? {
+            faults = faults.with_straggler(replica, factor);
+        }
+    }
+    if let Some(s) = f.opt("degrade") {
+        for (t0, t1, factor) in parse_degrade(s)? {
+            faults = faults.with_degrade_window(t0, t1, factor);
+        }
+    }
+    Ok(faults)
+}
+
+/// The serving-under-failure mode of `fleet`: a fixed fleet, every
+/// router policy simulated healthy and faulty on the same seed, goodput
+/// and tail latency side by side.
+#[allow(clippy::too_many_arguments)]
+fn fleet_churn_table(
+    base: &commsim::plan::DeploymentPlan,
+    replicas: usize,
+    policies: &[RouterPolicy],
+    faults: &FaultSpec,
+    workload: &WorkloadSpec,
+    seed: u64,
+    target: SloTarget,
+    gpn: usize,
+    prefix_cache: Option<PrefixCacheConfig>,
+) -> anyhow::Result<()> {
+    let build = |policy: RouterPolicy, faulty: bool| -> anyhow::Result<FleetSpec> {
+        let mut s = base.fleet(replicas)?.with_router(policy).with_gpus_per_node(gpn)?;
+        if let Some(cache) = prefix_cache {
+            s = s.with_prefix_cache(cache)?;
+        }
+        if faulty {
+            s = s.with_faults(faults.clone())?;
+        }
+        Ok(s)
+    };
+    let fault_desc = {
+        let mut parts = Vec::new();
+        if let Some(c) = &faults.churn {
+            parts.push(format!("churn MTBF={}s MTTR={}s", c.mtbf_s, c.mttr_s));
+        }
+        for &(r, x) in &faults.stragglers {
+            parts.push(format!("straggler r{r} x{x}"));
+        }
+        for w in &faults.degrade {
+            parts.push(format!("wire x{} in [{}, {})s", w.factor, w.t0_s, w.t1_s));
+        }
+        parts.join(", ")
+    };
+    println!(
+        "fleet under failure: {} x{replicas}, seed {seed:#x} — {fault_desc}\n\
+         goodput = error-free requests inside every set SLO target / offered \
+         (no SLO flag: completion rate)\n",
+        base.label()
+    );
+    let mut rows = Vec::new();
+    for &policy in policies {
+        let healthy = build(policy, false)?.simulate(workload, seed)?;
+        let faulty = build(policy, true)?.simulate(workload, seed)?;
+        rows.push(vec![
+            policy.label().to_string(),
+            format!("{:.3}", healthy.goodput(&target)),
+            format!("{:.3}", faulty.goodput(&target)),
+            format!("{:.4}", healthy.model.e2e.p99_s),
+            format!("{:.4}", faulty.model.e2e.p99_s),
+            faulty.retries.to_string(),
+            format!("{:.4}", faulty.wasted_prefill_s),
+            format!("{}/{}", faulty.completed, faulty.requests),
+        ]);
+    }
+    print!(
+        "{}",
+        report::render_table(
+            "router policies, healthy vs under faults (same seed: paired runs)",
+            &[
+                "Router",
+                "goodput",
+                "goodput (faults)",
+                "E2E p99 (s)",
+                "E2E p99 (faults)",
+                "retries",
+                "wasted prefill (s)",
+                "served",
+            ],
+            &rows,
+        )
+    );
+    Ok(())
+}
+
 fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 16)?);
     let requests = f.num("requests", 24)?;
@@ -506,6 +667,35 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
         requests,
     };
     workload.validate()?;
+
+    // Fault flags switch `fleet` into serving-under-failure mode: the
+    // capacity sweep compares fleet shapes, the churn table compares
+    // router policies on one fixed fleet, healthy vs faulty, same seed.
+    let faults = fleet_faults(f)?;
+    if !faults.is_none() {
+        let policies = match f.opt("router") {
+            // An explicit --router narrows the table to that policy.
+            Some(_) => vec![router],
+            None => vec![
+                RouterPolicy::RoundRobin,
+                RouterPolicy::LeastOutstandingTokens,
+                RouterPolicy::ShortestQueue,
+                RouterPolicy::CacheAffinity,
+            ],
+        };
+        let target = SloTarget { e2e_p95_s: slo_e2e, ..SloTarget::default() };
+        return fleet_churn_table(
+            &base,
+            max_replicas,
+            &policies,
+            &faults,
+            &workload,
+            seed,
+            target,
+            gpn,
+            prefix_cache,
+        );
+    }
 
     // Candidates: colocated fleets of the base layout at every size, plus
     // one disaggregated configuration following the paper's per-stage
@@ -631,6 +821,105 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Compare two directories of `BENCH_*.json` artifacts (the bench-json
+/// CI job's output from two runs) and fail on perf regressions.
+fn cmd_bench_diff(f: &Flags) -> anyhow::Result<()> {
+    let old_dir = f
+        .opt("old")
+        .ok_or_else(|| anyhow::anyhow!("bench-diff needs --old DIR (the baseline artifacts)"))?;
+    let new_dir = f
+        .opt("new")
+        .ok_or_else(|| anyhow::anyhow!("bench-diff needs --new DIR (the current artifacts)"))?;
+    let tolerance = f.float("tolerance", 0.05)?;
+    let list = |dir: &str| -> anyhow::Result<Vec<String>> {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("reading bench dir '{dir}': {e}"))?;
+        let mut names = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| anyhow::anyhow!("reading bench dir '{dir}': {e}"))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                names.push(name);
+            }
+        }
+        names.sort();
+        Ok(names)
+    };
+    let old_names = list(old_dir)?;
+    let new_names = list(new_dir)?;
+    anyhow::ensure!(
+        !new_names.is_empty(),
+        "no BENCH_*.json artifacts in '{new_dir}' — nothing to gate on"
+    );
+    println!(
+        "bench-diff: {} baseline vs {} current artifacts, tolerance {:.1}%",
+        old_names.len(),
+        new_names.len(),
+        tolerance * 100.0
+    );
+    for name in &old_names {
+        if !new_names.contains(name) {
+            println!("  {name}: only in baseline (bench removed?)");
+        }
+    }
+    let mut regressions = 0usize;
+    for name in &new_names {
+        if !old_names.contains(name) {
+            println!("  {name}: new bench, no baseline to diff against");
+            continue;
+        }
+        let read = |dir: &str| -> anyhow::Result<report::BenchJson> {
+            let path = format!("{dir}/{name}");
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading '{path}': {e}"))?;
+            report::parse_bench_json(&text)
+                .map_err(|e| anyhow::anyhow!("parsing '{path}': {e}"))
+        };
+        let diff = report::bench_diff(&read(old_dir)?, &read(new_dir)?, tolerance)?;
+        if diff.is_clean() {
+            println!("  {name}: OK");
+            continue;
+        }
+        println!(
+            "  {name}: {} regressions, {} improvements, {} notes",
+            diff.regressions.len(),
+            diff.improvements.len(),
+            diff.notes.len()
+        );
+        for d in &diff.regressions {
+            println!(
+                "    REGRESSION row {} '{}': {} -> {} (+{:.1}%)",
+                d.row.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+                d.field,
+                d.old,
+                d.new,
+                d.ratio() * 100.0
+            );
+        }
+        for d in &diff.improvements {
+            println!(
+                "    improvement row {} '{}': {} -> {} ({:.1}%)",
+                d.row.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+                d.field,
+                d.old,
+                d.new,
+                d.ratio() * 100.0
+            );
+        }
+        for n in &diff.notes {
+            println!("    note: {n}");
+        }
+        regressions += diff.regressions.len();
+    }
+    anyhow::ensure!(
+        regressions == 0,
+        "{regressions} perf regression(s) past the {:.1}% tolerance",
+        tolerance * 100.0
+    );
+    println!("bench-diff OK: no regression past the tolerance");
+    Ok(())
+}
+
 fn cmd_tables() -> anyhow::Result<()> {
     let cases: Vec<(&str, ModelArch, Vec<(usize, usize)>)> = vec![
         ("Table III (TP)", ModelArch::llama31_8b(), vec![(2, 1), (4, 1)]),
@@ -675,6 +964,7 @@ fn main() -> anyhow::Result<()> {
         "slo" => cmd_slo(&Flags::parse("slo", rest, SLO_FLAGS)?),
         "serve" => cmd_serve(&Flags::parse("serve", rest, SERVE_FLAGS)?),
         "fleet" => cmd_fleet(&Flags::parse("fleet", rest, FLEET_FLAGS)?),
+        "bench-diff" => cmd_bench_diff(&Flags::parse("bench-diff", rest, BENCH_DIFF_FLAGS)?),
         "tables" => {
             Flags::parse("tables", rest, TABLES_FLAGS)?;
             cmd_tables()
@@ -788,6 +1078,74 @@ mod tests {
         assert_eq!(f.num("prefix_shared", 64).unwrap(), 96);
         assert_eq!(f.num("prefix_groups", 8).unwrap(), 6);
         assert_eq!(f.num("prefix_cache_mb", 64).unwrap(), 32);
+    }
+
+    #[test]
+    fn fleet_fault_flags_parse_and_build_a_fault_spec() {
+        let f = Flags::parse(
+            "fleet",
+            &args(&[
+                "--mtbf",
+                "2.5",
+                "--mttr",
+                "0.5",
+                "--straggler",
+                "0:4.0,2:1.5",
+                "--degrade",
+                "0.5:1.5:4",
+                "--seed",
+                "7",
+            ]),
+            FLEET_FLAGS,
+        )
+        .unwrap();
+        let faults = fleet_faults(&f).unwrap();
+        assert!(!faults.is_none());
+        let churn = faults.churn.unwrap();
+        assert_eq!(churn.mtbf_s, 2.5);
+        assert_eq!(churn.mttr_s, 0.5);
+        assert_eq!(faults.stragglers, vec![(0, 4.0), (2, 1.5)]);
+        assert_eq!(faults.degrade.len(), 1);
+        assert_eq!(faults.wire_factor(1.0), 4.0);
+        // MTTR defaults to MTBF/10.
+        let f = Flags::parse("fleet", &args(&["--mtbf", "10"]), FLEET_FLAGS).unwrap();
+        assert_eq!(fleet_faults(&f).unwrap().churn.unwrap().mttr_s, 1.0);
+        // No fault flags: the empty spec (sweep mode).
+        let f = Flags::parse("fleet", &args(&[]), FLEET_FLAGS).unwrap();
+        assert!(fleet_faults(&f).unwrap().is_none());
+        // --mttr without --mtbf is never silently ignored.
+        let f = Flags::parse("fleet", &args(&["--mttr", "0.5"]), FLEET_FLAGS).unwrap();
+        let err = fleet_faults(&f).unwrap_err();
+        assert!(err.to_string().contains("--mtbf"), "{err}");
+    }
+
+    #[test]
+    fn fault_spec_value_parsers_reject_malformed_input() {
+        assert_eq!(parse_stragglers("1:2.0").unwrap(), vec![(1, 2.0)]);
+        assert!(parse_stragglers("1").is_err(), "missing factor");
+        assert!(parse_stragglers("a:2").is_err(), "non-numeric replica");
+        assert!(parse_stragglers("1:x").is_err(), "non-numeric factor");
+        assert_eq!(parse_degrade("0:2:8").unwrap(), vec![(0.0, 2.0, 8.0)]);
+        assert_eq!(parse_degrade("0:1:2,3:4:5").unwrap().len(), 2);
+        assert!(parse_degrade("0:2").is_err(), "missing factor");
+        assert!(parse_degrade("0:2:8:9").is_err(), "too many fields");
+        assert!(parse_degrade("x:2:8").is_err(), "non-numeric bound");
+    }
+
+    #[test]
+    fn bench_diff_flags_parse() {
+        let f = Flags::parse(
+            "bench-diff",
+            &args(&["--old", "a", "--new", "b", "--tolerance", "0.1"]),
+            BENCH_DIFF_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(f.opt("old").unwrap(), "a");
+        assert_eq!(f.opt("new").unwrap(), "b");
+        assert_eq!(f.float("tolerance", 0.05).unwrap(), 0.1);
+        let err =
+            Flags::parse("bench-diff", &args(&["--model", "8b"]), BENCH_DIFF_FLAGS).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --model"), "{err}");
     }
 
     #[test]

@@ -62,6 +62,12 @@ pub enum PlanError {
     FleetMixedRoles,
     /// A disaggregated fleet needs at least one replica in each pool.
     DisaggPoolMissing { pool: &'static str },
+    /// A fault-injection knob names a replica the fleet does not have.
+    FaultReplicaOutOfRange { replica: usize, replicas: usize },
+    /// A fault-injection value is out of its domain (`what` names the
+    /// knob; `value` is the offending value, pre-formatted so the variant
+    /// stays `Eq`).
+    FaultValueInvalid { what: &'static str, value: String },
 }
 
 impl fmt::Display for PlanError {
@@ -152,6 +158,14 @@ impl fmt::Display for PlanError {
                 f,
                 "a disaggregated fleet needs at least one {pool} replica"
             ),
+            PlanError::FaultReplicaOutOfRange { replica, replicas } => write!(
+                f,
+                "fault injection names replica {replica}, but the fleet has \
+                 only {replicas} replicas (indices 0..{replicas})"
+            ),
+            PlanError::FaultValueInvalid { what, value } => {
+                write!(f, "fault injection: {what} is invalid ({value})")
+            }
         }
     }
 }

@@ -419,6 +419,17 @@ impl DeploymentPlan {
         Ok(self)
     }
 
+    /// Same plan, different calibration — the fault-injection hook: a
+    /// straggler replica is this plan with
+    /// [`crate::cluster::NetModel::degraded`] applied to its calibration's
+    /// network, so its engine pricing, cost model, and wire all slow down
+    /// together. `Calibration` is unconstrained (any finite constants
+    /// describe *some* testbed), so no re-validation is needed.
+    pub fn with_calibration(mut self, calibration: Calibration) -> Self {
+        self.calibration = calibration;
+        self
+    }
+
     /// Analytical communication prediction (Eq. 1–7 + Tables III–VI).
     pub fn analyze(&self) -> VolumeReport {
         let volume = VolumeModel::new(self.arch.clone()).volume(self.layout(), self.shape);

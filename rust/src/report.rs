@@ -6,7 +6,10 @@
 //! ([`BenchJson`]) with its scenario parameters and modeled
 //! seconds/bytes, so CI can accumulate a perf trajectory as workflow
 //! artifacts. The writer is hand-rolled (the vendored build environment
-//! has no serde): flat string/number fields only.
+//! has no serde): flat string/number fields only. [`parse_bench_json`]
+//! reads those documents back and [`bench_diff`] compares two runs of
+//! one bench, flagging numeric fields that grew past a tolerance — the
+//! CI perf-trajectory gate (`commsim bench-diff`).
 
 use crate::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
 use crate::comm::{CollectiveKind, Stage, TraceSummary};
@@ -152,6 +155,8 @@ pub enum JsonValue {
     Int(i64),
     Str(String),
     Bool(bool),
+    /// What a non-finite float renders as; read back by the parser.
+    Null,
 }
 
 impl From<f64> for JsonValue {
@@ -214,6 +219,7 @@ fn json_value(v: &JsonValue) -> String {
         JsonValue::Int(x) => format!("{x}"),
         JsonValue::Str(s) => format!("\"{}\"", json_escape(s)),
         JsonValue::Bool(b) => format!("{b}"),
+        JsonValue::Null => "null".to_string(),
     }
 }
 
@@ -270,6 +276,389 @@ impl BenchJson {
         std::fs::write(path, self.render())
             .map_err(|e| anyhow::anyhow!("writing bench JSON '{path}': {e}"))
     }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn params(&self) -> &[(String, JsonValue)] {
+        &self.params
+    }
+
+    pub fn rows(&self) -> &[Vec<(String, JsonValue)>] {
+        &self.rows
+    }
+}
+
+/// Parse a `BENCH_*.json` document produced by [`BenchJson::render`]
+/// back into a [`BenchJson`] — the reader half of the perf-trajectory
+/// pipeline, hand-rolled like the writer (no serde in the vendored
+/// build environment). Strict to the writer's shape: a top-level object
+/// with `bench` (string), `params` (flat object), and `results` (array
+/// of flat objects); scalar values only.
+pub fn parse_bench_json(text: &str) -> crate::Result<BenchJson> {
+    let mut p = Parser { s: text.as_bytes(), i: 0 };
+    let doc = p.document()?;
+    p.skip_ws();
+    anyhow::ensure!(p.i == p.s.len(), "trailing content at byte {} in bench JSON", p.i);
+    Ok(doc)
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> crate::Result<u8> {
+        self.skip_ws();
+        self.s
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of bench JSON"))
+    }
+
+    fn expect(&mut self, c: u8) -> crate::Result<()> {
+        let got = self.peek()?;
+        anyhow::ensure!(
+            got == c,
+            "expected '{}' at byte {}, found '{}'",
+            c as char,
+            self.i,
+            got as char
+        );
+        self.i += 1;
+        Ok(())
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self
+                .s
+                .get(self.i)
+                .ok_or_else(|| anyhow::anyhow!("unterminated string in bench JSON"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self
+                        .s
+                        .get(self.i)
+                        .ok_or_else(|| anyhow::anyhow!("unterminated escape in bench JSON"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            anyhow::ensure!(
+                                self.i + 4 <= self.s.len(),
+                                "truncated \\u escape in bench JSON"
+                            );
+                            let hex = std::str::from_utf8(&self.s[self.i..self.i + 4])
+                                .map_err(|_| anyhow::anyhow!("non-UTF8 \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| anyhow::anyhow!("bad \\u escape '{hex}'"))?;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| anyhow::anyhow!("bad codepoint {code}"))?,
+                            );
+                            self.i += 4;
+                        }
+                        _ => anyhow::bail!("unknown escape '\\{}' in bench JSON", e as char),
+                    }
+                }
+                // The writer only emits ASCII control codes escaped, but
+                // plain multi-byte UTF-8 passes through byte-for-byte.
+                c => {
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    anyhow::ensure!(start + len <= self.s.len(), "truncated UTF-8 sequence");
+                    out.push_str(
+                        std::str::from_utf8(&self.s[start..start + len])
+                            .map_err(|_| anyhow::anyhow!("invalid UTF-8 in bench JSON"))?,
+                    );
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    fn scalar(&mut self) -> crate::Result<JsonValue> {
+        match self.peek()? {
+            b'"' => Ok(JsonValue::Str(self.string()?)),
+            b't' => self.literal("true", JsonValue::Bool(true)),
+            b'f' => self.literal("false", JsonValue::Bool(false)),
+            b'n' => self.literal("null", JsonValue::Null),
+            b'{' | b'[' => anyhow::bail!(
+                "nested containers are not valid bench-JSON scalars (byte {})",
+                self.i
+            ),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> crate::Result<JsonValue> {
+        anyhow::ensure!(
+            self.s[self.i..].starts_with(word.as_bytes()),
+            "expected '{word}' at byte {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn number(&mut self) -> crate::Result<JsonValue> {
+        let start = self.i;
+        while self
+            .s
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let lit = std::str::from_utf8(&self.s[start..self.i]).expect("ASCII number literal");
+        anyhow::ensure!(!lit.is_empty(), "expected a JSON value at byte {start}");
+        if !lit.contains(['.', 'e', 'E']) {
+            if let Ok(v) = lit.parse::<i64>() {
+                return Ok(JsonValue::Int(v));
+            }
+        }
+        lit.parse::<f64>()
+            .map(JsonValue::Num)
+            .map_err(|_| anyhow::anyhow!("bad number '{lit}' at byte {start}"))
+    }
+
+    /// `{ "k": scalar, ... }`
+    fn flat_object(&mut self) -> crate::Result<Vec<(String, JsonValue)>> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(fields);
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            fields.push((key, self.scalar()?));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(fields);
+                }
+                c => anyhow::bail!("expected ',' or '}}', found '{}'", c as char),
+            }
+        }
+    }
+
+    fn document(&mut self) -> crate::Result<BenchJson> {
+        self.expect(b'{')?;
+        let mut doc = BenchJson::default();
+        let mut seen_bench = false;
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            match key.as_str() {
+                "bench" => {
+                    doc.name = self.string()?;
+                    seen_bench = true;
+                }
+                "params" => doc.params = self.flat_object()?,
+                "results" => {
+                    self.expect(b'[')?;
+                    if self.peek()? == b']' {
+                        self.i += 1;
+                    } else {
+                        loop {
+                            doc.rows.push(self.flat_object()?);
+                            match self.peek()? {
+                                b',' => self.i += 1,
+                                b']' => {
+                                    self.i += 1;
+                                    break;
+                                }
+                                c => anyhow::bail!("expected ',' or ']', found '{}'", c as char),
+                            }
+                        }
+                    }
+                }
+                k => anyhow::bail!("unknown top-level bench-JSON key '{k}'"),
+            }
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    anyhow::ensure!(seen_bench, "bench JSON is missing its \"bench\" name");
+                    return Ok(doc);
+                }
+                c => anyhow::bail!("expected ',' or '}}', found '{}'", c as char),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// One numeric field that moved between two runs of the same bench.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    /// Result-row index (position in `results`), or `None` for a param.
+    pub row: Option<usize>,
+    pub field: String,
+    pub old: f64,
+    pub new: f64,
+}
+
+impl BenchDelta {
+    /// Relative change, `new/old - 1` (positive = grew).
+    pub fn ratio(&self) -> f64 {
+        self.new / self.old - 1.0
+    }
+}
+
+/// Outcome of diffing one bench's JSON between two runs.
+#[derive(Debug, Clone, Default)]
+pub struct BenchDiff {
+    pub bench: String,
+    /// Numeric fields that grew by more than the tolerance — modeled
+    /// seconds/bytes going up is a perf regression.
+    pub regressions: Vec<BenchDelta>,
+    /// Numeric fields that shrank by more than the tolerance (reported,
+    /// never failed on).
+    pub improvements: Vec<BenchDelta>,
+    /// Structural differences (row counts, renamed/retyped fields,
+    /// changed labels): the trajectory broke, so the numeric diff is
+    /// not meaningful for the affected rows. Reported, not failed on —
+    /// benches legitimately evolve.
+    pub notes: Vec<String>,
+}
+
+impl BenchDiff {
+    pub fn is_clean(&self) -> bool {
+        self.regressions.is_empty() && self.improvements.is_empty() && self.notes.is_empty()
+    }
+}
+
+fn numeric(v: &JsonValue) -> Option<f64> {
+    match v {
+        JsonValue::Num(x) => Some(*x),
+        JsonValue::Int(x) => Some(*x as f64),
+        _ => None,
+    }
+}
+
+fn diff_fields(
+    at: &str,
+    row: Option<usize>,
+    old: &[(String, JsonValue)],
+    new: &[(String, JsonValue)],
+    tolerance: f64,
+    out: &mut BenchDiff,
+) {
+    for (key, ov) in old {
+        let Some((_, nv)) = new.iter().find(|(k, _)| k == key) else {
+            out.notes.push(format!("{at}: field '{key}' disappeared"));
+            continue;
+        };
+        match (numeric(ov), numeric(nv)) {
+            (Some(o), Some(n)) => {
+                if !(o.is_finite() && n.is_finite()) || o == n {
+                    continue;
+                }
+                if o == 0.0 {
+                    out.notes.push(format!("{at}: '{key}' moved off zero to {n}"));
+                } else if n > o * (1.0 + tolerance) {
+                    out.regressions.push(BenchDelta {
+                        row,
+                        field: key.clone(),
+                        old: o,
+                        new: n,
+                    });
+                } else if n < o * (1.0 - tolerance) {
+                    out.improvements.push(BenchDelta {
+                        row,
+                        field: key.clone(),
+                        old: o,
+                        new: n,
+                    });
+                }
+            }
+            _ => {
+                if ov != nv {
+                    out.notes.push(format!(
+                        "{at}: '{key}' changed from {} to {}",
+                        json_value(ov),
+                        json_value(nv)
+                    ));
+                }
+            }
+        }
+    }
+    for (key, _) in new {
+        if !old.iter().any(|(k, _)| k == key) {
+            out.notes.push(format!("{at}: new field '{key}'"));
+        }
+    }
+}
+
+/// Diff two runs of the same bench: rows match by position (the benches
+/// emit a deterministic row order), numeric fields that grew past
+/// `tolerance` (relative, e.g. `0.05` = 5%) are regressions. Changed
+/// params or reshaped results are structural notes, not regressions.
+pub fn bench_diff(old: &BenchJson, new: &BenchJson, tolerance: f64) -> crate::Result<BenchDiff> {
+    anyhow::ensure!(
+        old.name == new.name,
+        "diffing different benches: '{}' vs '{}'",
+        old.name,
+        new.name
+    );
+    anyhow::ensure!(
+        tolerance.is_finite() && tolerance >= 0.0,
+        "tolerance must be a finite fraction >= 0"
+    );
+    let mut out = BenchDiff { bench: old.name.clone(), ..Default::default() };
+    // Changed params mean the scenarios differ — numbers aren't
+    // comparable, so everything param-side is a note.
+    for (key, ov) in &old.params {
+        match new.params.iter().find(|(k, _)| k == key) {
+            Some((_, nv)) if nv == ov => {}
+            Some((_, nv)) => out.notes.push(format!(
+                "param '{key}' changed from {} to {}",
+                json_value(ov),
+                json_value(nv)
+            )),
+            None => out.notes.push(format!("param '{key}' disappeared")),
+        }
+    }
+    if old.rows.len() != new.rows.len() {
+        out.notes.push(format!(
+            "result rows changed: {} -> {}",
+            old.rows.len(),
+            new.rows.len()
+        ));
+    }
+    for (i, (o, n)) in old.rows.iter().zip(new.rows.iter()).enumerate() {
+        diff_fields(&format!("row {i}"), Some(i), o, n, tolerance, &mut out);
+    }
+    Ok(out)
 }
 
 /// Parse the shared `--json <path>` flag from a bench binary's argument
@@ -334,6 +723,84 @@ mod tests {
         let mut j = BenchJson::new("x");
         j.row(&[("v", JsonValue::from(f64::NAN))]);
         assert!(j.render().contains("\"v\": null"));
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_parser() {
+        let mut j = BenchJson::new("fig7_decode_scaling");
+        j.param("model", "Llama-3.1-8B").param("sd", 256usize).param("numeric", false);
+        j.row(&[
+            ("layout", JsonValue::from("TP=4")),
+            ("modeled_s", JsonValue::from(0.125)),
+            ("bytes", JsonValue::from(3221225472.5)),
+            ("ranks", JsonValue::from(4usize)),
+        ]);
+        j.row(&[("layout", JsonValue::from("PP=4")), ("nan", JsonValue::from(f64::NAN))]);
+        let text = j.render();
+        let parsed = parse_bench_json(&text).unwrap();
+        assert_eq!(parsed.name(), "fig7_decode_scaling");
+        assert_eq!(parsed.params(), j.params());
+        assert_eq!(parsed.rows().len(), 2);
+        assert_eq!(parsed.rows()[0], j.rows()[0]);
+        // NaN rendered as null and reads back as Null.
+        assert_eq!(parsed.rows()[1][1], ("nan".to_string(), JsonValue::Null));
+        // The re-render is byte-identical: parse is a true inverse on
+        // everything the writer emits (modulo the one NaN -> null hop).
+        assert_eq!(parse_bench_json(&parsed.render()).unwrap().render(), parsed.render());
+        // Escapes survive the round trip.
+        let mut esc = BenchJson::new("x");
+        esc.row(&[("s", JsonValue::from("a\"b\\c\nd\te"))]);
+        let back = parse_bench_json(&esc.render()).unwrap();
+        assert_eq!(back.rows()[0][0].1, JsonValue::Str("a\"b\\c\nd\te".to_string()));
+        // Garbage is rejected, not misread.
+        assert!(parse_bench_json("{\"bench\": [1]}").is_err());
+        assert!(parse_bench_json("{\"params\": {}}").is_err(), "missing bench name");
+        assert!(parse_bench_json("not json").is_err());
+    }
+
+    #[test]
+    fn bench_diff_flags_regressions_past_tolerance_only() {
+        let doc = |s: f64, b: f64| {
+            let mut j = BenchJson::new("fig8_tp_slo");
+            j.param("model", "8b");
+            j.row(&[
+                ("layout", JsonValue::from("TP=2")),
+                ("modeled_s", JsonValue::from(s)),
+                ("bytes", JsonValue::from(b)),
+            ]);
+            j
+        };
+        let old = doc(1.0, 1.0e9);
+        // Inside the 5% band: clean.
+        let d = bench_diff(&old, &doc(1.04, 1.0e9), 0.05).unwrap();
+        assert!(d.is_clean(), "{d:?}");
+        // 6% slower: one regression, attributed to its row and field.
+        let d = bench_diff(&old, &doc(1.06, 1.0e9), 0.05).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].field, "modeled_s");
+        assert_eq!(d.regressions[0].row, Some(0));
+        assert!(d.regressions[0].ratio() > 0.05);
+        assert!(d.improvements.is_empty());
+        // 50% faster: an improvement, never a failure.
+        let d = bench_diff(&old, &doc(0.5, 1.0e9), 0.05).unwrap();
+        assert_eq!(d.improvements.len(), 1);
+        assert!(d.regressions.is_empty());
+        // Changed label or row count: structural notes, no regression.
+        let mut reshaped = doc(1.0, 1.0e9);
+        reshaped.row(&[("layout", JsonValue::from("TP=4"))]);
+        let d = bench_diff(&old, &reshaped, 0.05).unwrap();
+        assert!(d.regressions.is_empty());
+        assert!(!d.notes.is_empty());
+        // Different benches refuse to diff.
+        assert!(bench_diff(&old, &BenchJson::new("other"), 0.05).is_err());
+        // Params moving is a note (scenario changed), not a regression.
+        let mut p = doc(1.0, 1.0e9);
+        p.param("sd", 64usize);
+        let mut q = doc(1.0, 1.0e9);
+        q.param("sd", 128usize);
+        let d = bench_diff(&p, &q, 0.05).unwrap();
+        assert!(d.regressions.is_empty());
+        assert_eq!(d.notes.len(), 1);
     }
 
     #[test]

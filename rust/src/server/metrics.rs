@@ -52,6 +52,15 @@ pub struct RequestMetrics {
     pub tpot_s: f64,
     /// End-to-end latency including queueing.
     pub e2e_s: f64,
+    /// Times the request was re-routed after a replica failure
+    /// ([`crate::faults`]; 0 on a fault-free path). Each retry restarts
+    /// the request from scratch on another replica.
+    pub retries: usize,
+    /// Model-time prefill seconds burned on failed attempts (prefill ran
+    /// on a replica that died before the request finished; priced at
+    /// `CostModel::prefill_price` of the prefilled suffix). 0 on a
+    /// fault-free path.
+    pub wasted_prefill_s: f64,
     /// Model-time latencies from the priced timeline (structural serving);
     /// `None` on unpriced engines and on requests rejected before
     /// admission.
@@ -131,6 +140,11 @@ pub struct ServeSummary {
     /// Total corrected prefill communication bytes saved by prefix-cache
     /// hits.
     pub saved_prefill_bytes: f64,
+    /// Total replica-failure retries across the run (0 without fault
+    /// injection).
+    pub retries: usize,
+    /// Total model-time prefill seconds burned on failed attempts.
+    pub wasted_prefill_s: f64,
     /// Model-time percentiles from the priced timeline — present when the
     /// run served through a pricing engine (structural plans), absent on
     /// wall-clock-only (numeric) serving.
@@ -204,6 +218,8 @@ impl ServeSummary {
             cached_prompt_tokens: metrics.iter().map(|m| m.cached_prompt_tokens).sum(),
             saved_prefill_s: metrics.iter().map(|m| m.saved_prefill_s).sum(),
             saved_prefill_bytes: metrics.iter().map(|m| m.saved_prefill_bytes).sum(),
+            retries: metrics.iter().map(|m| m.retries).sum(),
+            wasted_prefill_s: metrics.iter().map(|m| m.wasted_prefill_s).sum(),
             model: Self::model_summary(metrics, total_tokens),
         }
     }
@@ -254,6 +270,8 @@ mod tests {
             ttft_s,
             tpot_s,
             e2e_s,
+            retries: 0,
+            wasted_prefill_s: 0.0,
             model: None,
             error,
         }
@@ -350,6 +368,23 @@ mod tests {
         metrics.push(rejected);
         let s = ServeSummary::from_metrics(&metrics, Duration::from_secs(1));
         assert!((s.model.unwrap().ttft.p99_s - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retries_and_wasted_prefill_sum_across_requests() {
+        let mut a = m(0, 0.1, 0.01, 0.2, None);
+        a.retries = 2;
+        a.wasted_prefill_s = 0.03;
+        let mut b = m(1, 0.1, 0.01, 0.2, None);
+        b.retries = 1;
+        b.wasted_prefill_s = 0.01;
+        let s = ServeSummary::from_metrics(&[a, b], Duration::from_secs(1));
+        assert_eq!(s.retries, 3);
+        assert!((s.wasted_prefill_s - 0.04).abs() < 1e-12);
+        // The fault-free path stays all-zero.
+        let s = ServeSummary::from_metrics(&[m(0, 0.1, 0.01, 0.2, None)], Duration::ZERO);
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.wasted_prefill_s, 0.0);
     }
 
     #[test]

@@ -213,6 +213,8 @@ impl Server {
                         ttft_s: 0.0,
                         tpot_s: 0.0,
                         e2e_s: 0.0,
+                        retries: 0,
+                        wasted_prefill_s: 0.0,
                         model: None,
                         error: Some(e.to_string()),
                     });
@@ -260,6 +262,8 @@ impl Server {
                         ttft_s: 0.0,
                         tpot_s: 0.0,
                         e2e_s: queue_s,
+                        retries: 0,
+                        wasted_prefill_s: 0.0,
                         model: None,
                         error: Some(e.to_string()),
                     });
@@ -424,6 +428,10 @@ impl Server {
             },
             tpot_s,
             e2e_s: (info.last_token_at - info.enqueued_at).as_secs_f64(),
+            // Single-replica serving has no router to retry through; the
+            // fleet's fault-injection path stamps these.
+            retries: 0,
+            wasted_prefill_s: 0.0,
             model,
             error,
         }

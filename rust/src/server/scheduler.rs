@@ -160,6 +160,14 @@ impl Scheduler {
         self.running.retain(|&r| r != id);
         self.kv.release(id)
     }
+
+    /// Empty the waiting queue and return the still-unadmitted requests,
+    /// in FCFS order — the replica-failure path ([`crate::faults`]): a
+    /// dead replica's queue is handed back to the router. Queued requests
+    /// hold no KV, so there is nothing else to release.
+    pub fn drain_waiting(&mut self) -> Vec<Request> {
+        self.waiting.drain(..).map(|(r, _)| r).collect()
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +215,20 @@ mod tests {
         );
         assert_eq!(s.running_len(), 2);
         assert_eq!(s.kv().used_blocks(), 2, "prompt blocks only");
+    }
+
+    #[test]
+    fn drain_waiting_returns_fcfs_and_leaves_running_alone() {
+        let mut s = Scheduler::new(cfg(16, 16, 1));
+        s.submit(req(1, 16, 4)).unwrap();
+        s.submit(req(2, 16, 4)).unwrap();
+        s.submit(req(3, 16, 4)).unwrap();
+        assert_eq!(s.admit_next().unwrap().unwrap().request.id, 1);
+        let drained = s.drain_waiting();
+        assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(s.queue_len(), 0);
+        assert_eq!(s.running_len(), 1, "admitted sequences are the caller's to cancel");
+        assert!(s.drain_waiting().is_empty());
     }
 
     #[test]

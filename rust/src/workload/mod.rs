@@ -38,6 +38,14 @@
 
 use crate::server::Request;
 
+/// Seed salt of the fault-injection stream ([`crate::faults`]): churn
+/// failure/repair draws run on `Rng64::new(seed ^ FAULT_STREAM_SALT ^
+/// mix(replica))`, a fourth independent stream next to the arrival,
+/// length, and prefix-group streams below — so enabling faults never
+/// perturbs when requests arrive, how long they are, or which prefix
+/// group they join (fault A/B comparisons stay paired).
+pub const FAULT_STREAM_SALT: u64 = 0xFA17_FA17_DEAD_BEEF;
+
 /// SplitMix64 — the one-shot seed scramble (a bijection, so distinct
 /// seeds stay distinct and every seed lands on a well-mixed state).
 pub fn splitmix64(mut z: u64) -> u64 {

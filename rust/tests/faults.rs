@@ -1,0 +1,252 @@
+//! Fault-injection integration: scripted outages drive the retry path
+//! end-to-end (re-route through the router, cache-warmth loss, wasted
+//! first-attempt prefill priced against the cost model), degradation
+//! windows slow the fleet wire, and churn stays bitwise-deterministic
+//! per seed.
+//!
+//! Outage instants are *self-calibrated*: each test first runs the same
+//! fleet healthy, reads the model-clock times of the requests it wants
+//! to disturb, and places the outage relative to them. The simulation is
+//! bitwise-deterministic and identical to the healthy run up to the
+//! first fault event, so the calibrated instant lands exactly where the
+//! healthy run says it will.
+
+use commsim::faults::FaultSpec;
+use commsim::fleet::{FleetSpec, SloTarget};
+use commsim::plan::{Deployment, DeploymentPlan};
+use commsim::server::PrefixCacheConfig;
+use commsim::workload::{ArrivalProcess, LengthDist, PrefixProfile, WorkloadSpec};
+
+fn tiny(tp: usize, pp: usize) -> DeploymentPlan {
+    Deployment::builder().model("tiny").tp(tp).pp(pp).workload(8, 4).build().unwrap()
+}
+
+fn fixed_workload(requests: usize, rate: f64, prompt: usize, decode: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(rate),
+        prompt: LengthDist::Fixed(prompt),
+        decode: LengthDist::Fixed(decode),
+        prefix: None,
+        requests,
+    }
+}
+
+/// A request killed mid-decode re-enters the router, lands on the
+/// surviving replica, and completes — with the retry counted, the
+/// first attempt's prefill priced as waste (reconciling with
+/// `CostModel::prefill_price`), and an E2E that spans both attempts.
+#[test]
+fn killed_request_retries_on_surviving_replica_and_pays_wasted_prefill() {
+    let plan = tiny(2, 1);
+    let spec = FleetSpec::colocated(&plan, 2).unwrap();
+    let wl = fixed_workload(1, 1000.0, 8, 4);
+
+    let healthy = spec.clone().simulate(&wl, 42).unwrap();
+    assert_eq!(healthy.completed, 1);
+    let h = healthy.per_request[0].model.expect("healthy request is priced");
+    assert_eq!(healthy.per_request[0].replica, 0, "lone request takes the first replica");
+
+    // Place the outage mid-decode: after the first token, with at least
+    // two decode steps still to run (decode_len = 4), so the fail event
+    // lands at an iteration boundary while the flight is live.
+    let arrival = h.finished_at_s - h.e2e_s;
+    let first_token = arrival + h.queue_s + h.ttft_s;
+    let t_fail = 0.5 * (first_token + h.finished_at_s);
+    assert!(first_token < t_fail && t_fail < h.finished_at_s);
+
+    let faulty = spec
+        .with_faults(FaultSpec::none().with_outage(0, t_fail, 1.0))
+        .unwrap()
+        .simulate(&wl, 42)
+        .unwrap();
+    assert_eq!(faulty.completed, 1, "the retry serves the request");
+    assert_eq!(faulty.failed, 0);
+    let m = &faulty.per_request[0];
+    assert_eq!(m.retries, 1, "one failure, one retry");
+    assert_eq!(m.replica, 1, "re-routed to the surviving replica");
+    // The dead replica had prefilled the whole (uncached) prompt: that
+    // work is priced as waste, exactly at the cost model's rate.
+    let cm = plan.cost_model();
+    assert_eq!(m.wasted_prefill_s, cm.prefill_price(8), "wasted = priced first prefill");
+    assert_eq!(faulty.retries, 1);
+    assert_eq!(faulty.wasted_prefill_s, m.wasted_prefill_s);
+    let f = m.model.expect("retried request still priced");
+    assert!(
+        f.e2e_s > h.e2e_s,
+        "E2E spans both attempts: {} vs healthy {}",
+        f.e2e_s,
+        h.e2e_s
+    );
+    assert!(f.e2e_s > m.wasted_prefill_s, "the waste sits inside the E2E span");
+}
+
+/// An outage empties the replica's prefix cache: post-recovery requests
+/// prefill the shared prefix again (more cold misses than the healthy
+/// run), and goodput against a healthy-calibrated SLO strictly drops —
+/// stranded requests ride out the downtime inside their E2E.
+#[test]
+fn outage_loses_prefix_warmth_and_strictly_cuts_goodput() {
+    let wl = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(2000.0),
+        prompt: LengthDist::Fixed(24),
+        decode: LengthDist::Fixed(4),
+        prefix: Some(PrefixProfile::SystemPrompt { shared: 16 }),
+        requests: 8,
+    };
+    let cache = PrefixCacheConfig { block_tokens: 8, capacity_bytes: 64 << 20 };
+    let spec = FleetSpec::colocated(&tiny(2, 1), 1).unwrap().with_prefix_cache(cache).unwrap();
+
+    let healthy = spec.clone().simulate(&wl, 3).unwrap();
+    assert_eq!(healthy.completed, 8);
+    let misses = |s: &commsim::fleet::FleetSummary| {
+        s.per_request.iter().filter(|m| m.cached_prompt_tokens == 0).count()
+    };
+    assert_eq!(misses(&healthy), 1, "healthy: only the first request is cold");
+
+    // Drop the replica strictly inside the completion span: the cold
+    // first request's miss is already frozen in its record, and at
+    // least one request still has to (re-)admit after recovery — on a
+    // freshly emptied cache.
+    let finishes: Vec<f64> =
+        healthy.per_request.iter().map(|m| m.model.expect("priced").finished_at_s).collect();
+    let first_done = finishes.iter().copied().fold(f64::INFINITY, f64::min);
+    let last_done = finishes.iter().copied().fold(0.0f64, f64::max);
+    assert!(first_done < last_done, "completions are staggered");
+    let t_fail = 0.5 * (first_done + last_done);
+    let down_s = 2.0 * healthy.model.makespan_s;
+
+    let faulty = spec
+        .with_faults(FaultSpec::none().with_outage(0, t_fail, down_s))
+        .unwrap()
+        .simulate(&wl, 3)
+        .unwrap();
+    assert_eq!(faulty.completed, 8, "everything still serves, post-recovery");
+    assert_eq!(faulty.failed, 0);
+    assert!(
+        misses(&faulty) > misses(&healthy),
+        "cold restart forces fresh prefix misses: {} vs {}",
+        misses(&faulty),
+        misses(&healthy)
+    );
+    // Goodput against the healthy run's own worst E2E: the healthy
+    // fleet scores a perfect 1.0 by construction; under the outage,
+    // stranded requests carry the downtime in their E2E and miss it.
+    let worst_e2e = healthy
+        .per_request
+        .iter()
+        .map(|m| m.model.unwrap().e2e_s)
+        .fold(0.0f64, f64::max);
+    let slo = SloTarget { e2e_p95_s: Some(worst_e2e), ..Default::default() };
+    assert_eq!(healthy.goodput(&slo), 1.0);
+    assert!(
+        faulty.goodput(&slo) < healthy.goodput(&slo),
+        "goodput under churn must drop: {} vs {}",
+        faulty.goodput(&slo),
+        healthy.goodput(&slo)
+    );
+}
+
+/// Losing the decode pool mid-request wastes the prefill work (twice:
+/// the shipped attempt and the blocked re-prefill), strands the request
+/// until recovery, and still serves it — two retries, two KV shipments.
+#[test]
+fn decode_pool_outage_wastes_prefill_and_reships_kv() {
+    let prefill = tiny(2, 1);
+    let decode = tiny(1, 2);
+    let spec = FleetSpec::disaggregated(&prefill, 1, &decode, 1).unwrap();
+    let wl = fixed_workload(1, 1000.0, 8, 4);
+
+    let healthy = spec.clone().simulate(&wl, 5).unwrap();
+    assert_eq!(healthy.completed, 1);
+    let h = healthy.per_request[0].model.expect("priced");
+    let kv_once = healthy.per_request[0].kv_transfer_bytes;
+    assert!(kv_once > 0.0);
+
+    // Fail the decode replica early in the decode phase — while the KV
+    // is on the wire or the handed-off sequence has just started.
+    let arrival = h.finished_at_s - h.e2e_s;
+    let first_token = arrival + h.queue_s + h.ttft_s;
+    let t_fail = first_token + 0.25 * (h.finished_at_s - first_token);
+    let down_s = 1.0; // far past the healthy makespan: recovery gates completion
+
+    let faulty = spec
+        .with_faults(FaultSpec::none().with_outage(1, t_fail, down_s))
+        .unwrap()
+        .simulate(&wl, 5)
+        .unwrap();
+    assert_eq!(faulty.completed, 1);
+    assert_eq!(faulty.failed, 0);
+    let m = &faulty.per_request[0];
+    // Retry #1: the decode-side loss (dead flight or dead handoff
+    // target). Retry #2: the re-prefilled attempt finds the decode pool
+    // still down and strands until recovery.
+    assert_eq!(m.retries, 2, "decode loss + blocked re-prefill");
+    let cm = prefill.cost_model();
+    assert!(
+        m.wasted_prefill_s >= 2.0 * cm.prefill_price(8),
+        "both dead prefill passes are priced as waste: {} vs {}",
+        m.wasted_prefill_s,
+        2.0 * cm.prefill_price(8)
+    );
+    assert!(
+        m.kv_transfer_bytes >= 2.0 * kv_once,
+        "the KV ships once per attempt that reaches the wire"
+    );
+    let f = m.model.expect("priced");
+    assert!(f.e2e_s > down_s, "the request rides out the decode-pool downtime");
+    assert!(f.e2e_s > h.e2e_s);
+}
+
+/// A link-degradation window covering the run slows every KV handoff
+/// (same bytes, strictly more wire seconds) and lengthens the run.
+#[test]
+fn degradation_window_slows_kv_handoffs_but_ships_the_same_bytes() {
+    let spec = FleetSpec::disaggregated(&tiny(2, 1), 1, &tiny(1, 2), 1).unwrap();
+    let wl = fixed_workload(6, 1000.0, 8, 4);
+    let healthy = spec.clone().simulate(&wl, 5).unwrap();
+    assert_eq!(healthy.completed, 6);
+    let degraded = spec
+        .with_faults(FaultSpec::none().with_degrade_window(0.0, 1.0e9, 4.0))
+        .unwrap()
+        .simulate(&wl, 5)
+        .unwrap();
+    assert_eq!(degraded.completed, 6);
+    assert_eq!(
+        degraded.kv_transfer_bytes, healthy.kv_transfer_bytes,
+        "a slow wire moves the same bytes"
+    );
+    assert!(
+        degraded.kv_transfer_s > healthy.kv_transfer_s,
+        "4x-degraded handoffs must cost more wire time: {} vs {}",
+        degraded.kv_transfer_s,
+        healthy.kv_transfer_s
+    );
+    assert!(degraded.model.e2e.p95_s >= healthy.model.e2e.p95_s);
+    assert_eq!(degraded.retries, 0, "windows slow links; they kill nothing");
+}
+
+/// Churn (MTBF/MTTR exponential processes) is a pure function of the
+/// seed: two runs agree bitwise, including per-request retry counts.
+#[test]
+fn churn_is_bitwise_deterministic_per_seed() {
+    let spec = FleetSpec::colocated(&tiny(1, 1), 3).unwrap();
+    let wl = fixed_workload(24, 500.0, 8, 4);
+    let healthy = spec.clone().simulate(&wl, 7).unwrap();
+    let m = healthy.model.makespan_s;
+    let churn = spec.with_faults(FaultSpec::none().with_churn(m, m / 5.0)).unwrap();
+
+    let a = churn.simulate(&wl, 7).unwrap();
+    let b = churn.simulate(&wl, 7).unwrap();
+    assert_eq!(a.model, b.model, "same seed, same model summary under churn");
+    assert_eq!(a.retries, b.retries);
+    assert_eq!(a.wasted_prefill_s, b.wasted_prefill_s);
+    assert_eq!(a.per_request.len(), b.per_request.len());
+    for (x, y) in a.per_request.iter().zip(b.per_request.iter()) {
+        assert_eq!(x.request_id, y.request_id);
+        assert_eq!(x.replica, y.replica);
+        assert_eq!(x.retries, y.retries);
+        assert_eq!(x.model, y.model);
+    }
+    assert_eq!(a.requests, 24);
+    assert_eq!(a.completed + a.failed, 24, "every request reaches a terminal state");
+}
