@@ -1,0 +1,145 @@
+//! End-to-end elastic-fleet driver (the autoscale analogue of
+//! `churn_e2e`, and the CI autoscale smoke test).
+//!
+//! Three checks on the model clock, all structural (no artifacts):
+//!
+//! 1. **Zero-action identity** — attaching a policy that can never act
+//!    (`min == max`, unreachable thresholds, migration disabled)
+//!    reproduces the static fleet bitwise: same model summary, same
+//!    per-request records, same provisioned GPU·seconds, same traced
+//!    bytes. Elasticity costs nothing when it does nothing.
+//! 2. **The headline claim** — under a bursty trace, the elastic fleet
+//!    (floor 1, ceiling 3) meets the same end-to-end SLO the static
+//!    3-replica fleet meets, with *strictly fewer* provisioned
+//!    GPU·seconds: capacity follows load instead of being held at peak.
+//! 3. **Every action is priced** — the elastic run's scale-ups paid a
+//!    weight cold-start (model seconds over the fleet wire) and any
+//!    live KV migration paid α–β wire time; nothing is free, and the
+//!    run stays bitwise-deterministic per seed.
+
+use commsim::autoscale::AutoscalePolicy;
+use commsim::fleet::{FleetSummary, RouterPolicy, SloTarget};
+use commsim::plan::Deployment;
+use commsim::workload::{ArrivalProcess, LengthDist, WorkloadSpec};
+
+/// Worst per-request model-time E2E of a run (the tightest SLO the run
+/// meets on every request).
+fn worst_e2e(s: &FleetSummary) -> f64 {
+    s.per_request
+        .iter()
+        .filter_map(|m| m.model.as_ref().map(|t| t.e2e_s))
+        .fold(0.0f64, f64::max)
+}
+
+fn main() -> anyhow::Result<()> {
+    let (sp, sd) = (32usize, 16usize);
+    let requests = 48usize;
+    let seed = 0xE1A57u64;
+    let plan = Deployment::builder().model("8b").tp(2).workload(sp, sd).build()?;
+    // Bursty offered load: epochs of 6 back-to-back arrivals with long
+    // idle gaps (long-run rate 3 req/s), so the peak needs ~3 replicas
+    // while the average needs ~1 — the gap elasticity exists to close.
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::bursty(3.0, 6),
+        prompt: LengthDist::Fixed(sp),
+        decode: LengthDist::Fixed(sd),
+        prefix: None,
+        requests,
+    };
+    println!("autoscale e2e: {} x1..3 — {requests} requests, seed {seed:#x}\n", plan.label());
+
+    // Static baseline: provisioned for the peak, the whole run.
+    let fixed = plan
+        .fleet(3)?
+        .with_router(RouterPolicy::LeastOutstandingTokens)
+        .simulate(&workload, seed)?;
+    anyhow::ensure!(fixed.completed == requests && fixed.failed == 0);
+
+    // --- 1. zero-action identity ---------------------------------------
+    // min == max keeps every replica active, the queue target is
+    // unreachable, and migration is disabled: the controller ticks but
+    // only ever Holds.
+    let mut inert = AutoscalePolicy::target_queue(3, 3, 1e9, 1.0);
+    inert.migrate_queue_gap = 0;
+    let held = plan
+        .fleet(3)?
+        .with_router(RouterPolicy::LeastOutstandingTokens)
+        .with_autoscale(inert)?
+        .simulate(&workload, seed)?;
+    anyhow::ensure!(
+        held.model == fixed.model,
+        "a never-acting policy must reproduce the static model summary bitwise"
+    );
+    anyhow::ensure!(held.per_request.len() == fixed.per_request.len());
+    for (a, b) in held.per_request.iter().zip(fixed.per_request.iter()) {
+        anyhow::ensure!(
+            a.request_id == b.request_id && a.replica == b.replica && a.model == b.model,
+            "per-request records must match the static run"
+        );
+    }
+    anyhow::ensure!(held.provisioned_gpu_s == fixed.provisioned_gpu_s);
+    anyhow::ensure!(held.comm_bytes == fixed.comm_bytes);
+    anyhow::ensure!(held.cold_starts == 0 && held.migrations == 0);
+    println!("zero-action OK: inert policy is the static fleet, bitwise");
+
+    // --- 2. same SLO, strictly fewer provisioned GPU*s ------------------
+    let policy = AutoscalePolicy::target_queue(1, 3, 1.5, 1.0);
+    let elastic = || -> anyhow::Result<FleetSummary> {
+        Ok(plan
+            .fleet(3)?
+            .with_router(RouterPolicy::LeastOutstandingTokens)
+            .with_autoscale(policy.clone())?
+            .simulate(&workload, seed)?)
+    };
+    let flexed = elastic()?;
+    anyhow::ensure!(flexed.completed == requests, "elasticity never loses a request");
+    anyhow::ensure!(flexed.failed == 0);
+    // The operator's SLO: the tightest E2E bound both deployments meet
+    // on every request.
+    let slo = SloTarget {
+        e2e_p95_s: Some(worst_e2e(&fixed).max(worst_e2e(&flexed))),
+        ..Default::default()
+    };
+    let (gf, ge) = (fixed.goodput(&slo), flexed.goodput(&slo));
+    anyhow::ensure!(gf == 1.0 && ge == 1.0, "both fleets meet the shared SLO ({gf}, {ge})");
+    anyhow::ensure!(
+        flexed.provisioned_gpu_s < fixed.provisioned_gpu_s,
+        "elastic must provision strictly fewer GPU*s ({:.3} vs {:.3})",
+        flexed.provisioned_gpu_s,
+        fixed.provisioned_gpu_s
+    );
+    println!(
+        "headline OK: goodput {ge:.3} at the static fleet's SLO with {:.1} GPU*s \
+         provisioned vs {:.1} static ({:.0}% saved)",
+        flexed.provisioned_gpu_s,
+        fixed.provisioned_gpu_s,
+        100.0 * (1.0 - flexed.provisioned_gpu_s / fixed.provisioned_gpu_s)
+    );
+
+    // --- 3. every elasticity action is priced ---------------------------
+    anyhow::ensure!(flexed.cold_starts >= 1, "the bursts must trigger a scale-up");
+    anyhow::ensure!(flexed.cold_start_s > 0.0, "scale-up is never free");
+    if flexed.migrations > 0 {
+        anyhow::ensure!(flexed.kv_migration_bytes > 0.0 && flexed.kv_migration_s > 0.0);
+    }
+    let again = elastic()?;
+    anyhow::ensure!(
+        again.model == flexed.model
+            && again.cold_starts == flexed.cold_starts
+            && again.migrations == flexed.migrations
+            && again.provisioned_gpu_s == flexed.provisioned_gpu_s,
+        "same policy + seed must reproduce the elastic run bitwise"
+    );
+    println!(
+        "pricing OK: {} cold start(s) costing {:.3}s, {} migration(s) shipping {:.1} KiB \
+         in {:.4}s — all on the model clock, reproducible per seed",
+        flexed.cold_starts,
+        flexed.cold_start_s,
+        flexed.migrations,
+        flexed.kv_migration_bytes / 1024.0,
+        flexed.kv_migration_s
+    );
+
+    println!("\nautoscale_e2e OK");
+    Ok(())
+}

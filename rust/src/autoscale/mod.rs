@@ -1,0 +1,449 @@
+//! Model-clock autoscaling — the control loop that makes fleet topology
+//! an *output* of the simulation instead of an input.
+//!
+//! The paper's recommendation space (TP for short sequences, PP for
+//! volume, hybrid needs tuning) is static; production load is not. This
+//! module closes the loop inside one [`crate::fleet`] simulation: an
+//! [`AutoscalePolicy`] (target queue depth and/or a rolling model-time
+//! SLO percentile over a sliding window) is watched by a [`Controller`]
+//! whose scale-check ticks ride the fleet's discrete-event heap and
+//! emit [`ScaleDecision`]s:
+//!
+//! - **ScaleUp** activates a parked replica after a weight cold-start
+//!   priced as per-GPU shard bytes over the interconnect
+//!   ([`crate::faults::cold_start_s`] over the possibly-degraded fleet
+//!   wire) — elasticity is never free;
+//! - **ScaleDown** drains a replica gracefully (no new admissions,
+//!   in-flight requests finish), choosing the victim with
+//!   [`choose_victim`]: least loaded first, and at equal load the one
+//!   whose prefix cache holds the least [`warm_prefix_value`] — a warm
+//!   cache is capacity the fleet would otherwise re-prefill;
+//! - **Migrate** rebalances a hot replica by shipping one live
+//!   sequence's resident KV (`Sp·kv_bytes_per_token` at the migration
+//!   tick) to the coolest replica via [`crate::cluster::NetModel::p2p`]
+//!   — the same α–β pricing as the disaggregated prefill→decode
+//!   handoff — instead of queueing behind the hot spot.
+//!
+//! Tick jitter draws from its own salted RNG stream
+//! ([`crate::workload::AUTOSCALE_STREAM_SALT`]), so attaching a policy
+//! never perturbs the arrival/length/prefix/fault streams; a policy
+//! that never acts (`min_replicas == max_replicas`, unreachable
+//! thresholds) leaves every simulation output bitwise-identical to the
+//! static fleet.
+
+use std::collections::VecDeque;
+
+use crate::plan::PlanError;
+use crate::server::PrefixCacheStats;
+use crate::workload::{Rng64, AUTOSCALE_STREAM_SALT};
+
+/// When and how far a fleet may change shape. Attached to a fleet with
+/// [`crate::fleet::FleetSpec::with_autoscale`]; the spec's replica list
+/// is the *maximum* pool (`max_replicas` must equal it), of which
+/// `min_replicas` are active from t = 0 and the rest start parked.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Replicas that are always provisioned (the standing fleet).
+    pub min_replicas: usize,
+    /// Hard ceiling — must equal the fleet spec's replica count.
+    pub max_replicas: usize,
+    /// Sliding-window span (model seconds) over which queue-depth and
+    /// SLO signals are aggregated.
+    pub window_s: f64,
+    /// Scale-check cadence (model seconds); each tick lands at
+    /// `interval_s` times a jitter in [0.9, 1.1) from the autoscale RNG
+    /// stream, desynchronizing the control loop from the workload.
+    pub interval_s: f64,
+    /// Scale up when the window's mean queue depth per active replica
+    /// exceeds this.
+    pub scale_up_queue: f64,
+    /// Scale down when the window's mean queue depth per active replica
+    /// falls below this (must be `< scale_up_queue` — the deadband
+    /// between them prevents flapping).
+    pub scale_down_queue: f64,
+    /// Optional rolling SLO trigger: scale up whenever the p95 of
+    /// model-time E2E latencies completing inside the window exceeds
+    /// this, regardless of queue depth (and never scale down while it
+    /// does).
+    pub slo_e2e_p95_s: Option<f64>,
+    /// Rebalance trigger: when the spread between the hottest and
+    /// coolest active replica's queue depth reaches this many requests,
+    /// migrate one live sequence instead of scaling (0 disables
+    /// migration).
+    pub migrate_queue_gap: usize,
+}
+
+impl AutoscalePolicy {
+    /// A target-queue-depth policy between `min` and `max` replicas:
+    /// scale up above `target_queue` mean depth per replica, down below
+    /// a quarter of it, check every `window_s / 4`, and migrate when
+    /// two replicas diverge by twice the target. Refine with the struct
+    /// fields or [`Self::with_slo_e2e_p95`].
+    pub fn target_queue(min: usize, max: usize, target_queue: f64, window_s: f64) -> Self {
+        Self {
+            min_replicas: min,
+            max_replicas: max,
+            window_s,
+            interval_s: window_s / 4.0,
+            scale_up_queue: target_queue,
+            scale_down_queue: target_queue / 4.0,
+            slo_e2e_p95_s: None,
+            migrate_queue_gap: (target_queue * 2.0).ceil() as usize,
+        }
+    }
+
+    /// Add a rolling p95 E2E SLO trigger (model seconds).
+    pub fn with_slo_e2e_p95(mut self, s: f64) -> Self {
+        self.slo_e2e_p95_s = Some(s);
+        self
+    }
+
+    /// Disable live KV migration (scale decisions only).
+    pub fn without_migration(mut self) -> Self {
+        self.migrate_queue_gap = 0;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), PlanError> {
+        if self.min_replicas < 1 || self.min_replicas > self.max_replicas {
+            return Err(PlanError::AutoscaleBoundsInvalid {
+                min: self.min_replicas,
+                max: self.max_replicas,
+            });
+        }
+        check_positive_finite("window seconds", self.window_s)?;
+        check_positive_finite("check interval seconds", self.interval_s)?;
+        check_positive_finite("scale-up queue depth", self.scale_up_queue)?;
+        if !self.scale_down_queue.is_finite() || self.scale_down_queue < 0.0 {
+            return Err(PlanError::AutoscaleValueInvalid {
+                what: "scale-down queue depth",
+                value: format!("{} (need finite, >= 0)", self.scale_down_queue),
+            });
+        }
+        if self.scale_down_queue >= self.scale_up_queue {
+            return Err(PlanError::AutoscaleValueInvalid {
+                what: "scale-down queue depth",
+                value: format!(
+                    "{} (must be < scale-up depth {} — the deadband prevents flapping)",
+                    self.scale_down_queue, self.scale_up_queue
+                ),
+            });
+        }
+        if let Some(s) = self.slo_e2e_p95_s {
+            check_positive_finite("E2E p95 SLO seconds", s)?;
+        }
+        Ok(())
+    }
+}
+
+fn check_positive_finite(what: &'static str, v: f64) -> Result<(), PlanError> {
+    if v.is_finite() && v > 0.0 {
+        Ok(())
+    } else {
+        Err(PlanError::AutoscaleValueInvalid {
+            what,
+            value: format!("{v} (need finite, > 0)"),
+        })
+    }
+}
+
+/// What the controller tells the fleet loop to do at a scale-check
+/// tick. The controller decides *direction*; the fleet owns mechanism
+/// (which replica spawns, which drains via [`choose_victim`], which
+/// sequence ships).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Activate one parked replica (after its priced cold start).
+    ScaleUp,
+    /// Drain one active replica (no new admissions; park when empty).
+    ScaleDown,
+    /// Ship one live sequence from the hottest to the coolest replica.
+    Migrate,
+}
+
+/// The fleet state a scale-check tick observes (all in model time).
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot<'a> {
+    pub now_s: f64,
+    /// Replicas currently routable (alive, active, not draining).
+    pub active: usize,
+    /// Replicas mid-cold-start (count toward capacity so one burst does
+    /// not trigger a spawn per tick).
+    pub pending_up: usize,
+    /// Total queue depth (queued + in-flight requests) over active
+    /// replicas.
+    pub queue_depth_total: usize,
+    /// Hottest minus coolest active replica's queue depth.
+    pub hottest_gap: usize,
+    /// Model-time E2E latencies of requests that finished inside the
+    /// sliding window.
+    pub recent_e2e_s: &'a [f64],
+}
+
+/// The autoscale control loop: owns the policy, the sliding window of
+/// queue-depth samples, and the jitter RNG stream. One per simulation;
+/// deterministic per (policy, seed).
+#[derive(Debug, Clone)]
+pub struct Controller {
+    policy: AutoscalePolicy,
+    rng: Rng64,
+    /// (tick time, mean queue depth per active replica) samples, pruned
+    /// to the sliding window.
+    depth_samples: VecDeque<(f64, f64)>,
+}
+
+impl Controller {
+    pub fn new(policy: AutoscalePolicy, seed: u64) -> Self {
+        Self {
+            policy,
+            rng: Rng64::new(seed ^ AUTOSCALE_STREAM_SALT),
+            depth_samples: VecDeque::new(),
+        }
+    }
+
+    pub fn policy(&self) -> &AutoscalePolicy {
+        &self.policy
+    }
+
+    /// Model time of the next scale-check tick: `interval_s` from `now`
+    /// times a jitter in [0.9, 1.1) drawn from the autoscale stream.
+    pub fn next_tick_after(&mut self, now_s: f64) -> f64 {
+        now_s + self.policy.interval_s * (0.9 + 0.2 * self.rng.next_f64())
+    }
+
+    /// Mean queue depth per active replica over the current window
+    /// (the signal the thresholds compare against; 0 with no samples).
+    pub fn rolling_queue_depth(&self) -> f64 {
+        if self.depth_samples.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.depth_samples.iter().map(|&(_, d)| d).sum();
+        sum / self.depth_samples.len() as f64
+    }
+
+    /// Record one tick's snapshot into the sliding window and decide.
+    /// Scale-up wins over everything (an overloaded fleet rebalances by
+    /// growing); migration rebalances when capacity is right but skewed;
+    /// scale-down needs the window calm on *both* signals.
+    pub fn tick(&mut self, snap: &FleetSnapshot<'_>) -> ScaleDecision {
+        let per_replica = snap.queue_depth_total as f64 / (snap.active.max(1)) as f64;
+        self.depth_samples.push_back((snap.now_s, per_replica));
+        let horizon = snap.now_s - self.policy.window_s;
+        while self.depth_samples.front().is_some_and(|&(t, _)| t < horizon) {
+            self.depth_samples.pop_front();
+        }
+        let mean_depth = self.rolling_queue_depth();
+        let slo_hot = match self.policy.slo_e2e_p95_s {
+            Some(target) => rolling_p95(snap.recent_e2e_s) > Some(target),
+            None => false,
+        };
+        let provisioned = snap.active + snap.pending_up;
+        if (mean_depth > self.policy.scale_up_queue || slo_hot)
+            && provisioned < self.policy.max_replicas
+        {
+            return ScaleDecision::ScaleUp;
+        }
+        if self.policy.migrate_queue_gap > 0
+            && snap.hottest_gap >= self.policy.migrate_queue_gap
+            && snap.active >= 2
+        {
+            return ScaleDecision::Migrate;
+        }
+        if mean_depth < self.policy.scale_down_queue
+            && !slo_hot
+            && snap.pending_up == 0
+            && snap.active > self.policy.min_replicas
+        {
+            return ScaleDecision::ScaleDown;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// Nearest-rank p95 of a sample set (None when empty) — the rolling SLO
+/// signal, also behind `ReplicaStats::rolling_ttft_p95_s`. A copy is
+/// sorted; the windows involved are small.
+pub fn rolling_p95(samples: &[f64]) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    let idx = ((0.95 * s.len() as f64).ceil() as usize).clamp(1, s.len()) - 1;
+    Some(s[idx])
+}
+
+/// Ranking score of a replica's warm prefix cache: resident KV bytes ×
+/// the cache's observed mean hit tokens per prompt. Draining a replica
+/// throws this away — every future hit it would have served gets
+/// re-prefilled somewhere cold — so scale-down prefers victims with the
+/// least of it.
+pub fn warm_prefix_value(resident_bytes: usize, stats: &PrefixCacheStats) -> f64 {
+    if stats.observed == 0 {
+        return 0.0;
+    }
+    resident_bytes as f64 * (stats.hit_tokens as f64 / stats.observed as f64)
+}
+
+/// One replica's claim to survive a scale-down.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DrainCandidate {
+    pub replica: usize,
+    /// Outstanding work (prompt + decode tokens still owed).
+    pub load: usize,
+    /// [`warm_prefix_value`] of its prefix cache (0 without one).
+    pub warm_bytes: f64,
+}
+
+/// Pick the scale-down victim: least loaded first; at equal load the
+/// *coldest* cache drains (never the replica whose warm prefix value is
+/// highest while an equally-loaded colder one exists); index breaks
+/// exact ties for determinism.
+pub fn choose_victim(candidates: &[DrainCandidate]) -> Option<usize> {
+    candidates
+        .iter()
+        .min_by(|a, b| {
+            a.load
+                .cmp(&b.load)
+                .then(a.warm_bytes.total_cmp(&b.warm_bytes))
+                .then(a.replica.cmp(&b.replica))
+        })
+        .map(|c| c.replica)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AutoscalePolicy {
+        AutoscalePolicy::target_queue(1, 4, 4.0, 1.0)
+    }
+
+    #[test]
+    fn policy_validation_rejects_degenerate_knobs() {
+        assert!(policy().validate().is_ok());
+        let e = AutoscalePolicy { min_replicas: 0, ..policy() }.validate().unwrap_err();
+        assert!(matches!(e, PlanError::AutoscaleBoundsInvalid { min: 0, max: 4 }));
+        let e = AutoscalePolicy { min_replicas: 5, ..policy() }.validate().unwrap_err();
+        assert!(matches!(e, PlanError::AutoscaleBoundsInvalid { min: 5, max: 4 }));
+        assert!(AutoscalePolicy { window_s: 0.0, ..policy() }.validate().is_err());
+        assert!(AutoscalePolicy { interval_s: f64::NAN, ..policy() }.validate().is_err());
+        assert!(AutoscalePolicy { scale_up_queue: -1.0, ..policy() }.validate().is_err());
+        // The deadband: down threshold must sit strictly below up.
+        let e = AutoscalePolicy { scale_down_queue: 4.0, ..policy() }.validate().unwrap_err();
+        assert!(e.to_string().contains("deadband"), "{e}");
+        assert!(policy().with_slo_e2e_p95(0.0).validate().is_err());
+        assert!(policy().with_slo_e2e_p95(0.5).validate().is_ok());
+    }
+
+    #[test]
+    fn ticks_jitter_inside_their_band_and_are_seed_deterministic() {
+        let mut a = Controller::new(policy(), 7);
+        let mut b = Controller::new(policy(), 7);
+        let mut c = Controller::new(policy(), 8);
+        let mut differs = false;
+        let mut t = 0.0;
+        for _ in 0..64 {
+            let (na, nb, nc) = (a.next_tick_after(t), b.next_tick_after(t), c.next_tick_after(t));
+            assert_eq!(na, nb, "same seed, same jitter stream");
+            differs |= na != nc;
+            let interval = policy().interval_s;
+            assert!(na - t >= 0.9 * interval && na - t < 1.1 * interval);
+            t = na;
+        }
+        assert!(differs, "different seeds draw different jitter");
+    }
+
+    fn snap(now_s: f64, active: usize, depth: usize) -> FleetSnapshot<'static> {
+        FleetSnapshot {
+            now_s,
+            active,
+            pending_up: 0,
+            queue_depth_total: depth,
+            hottest_gap: 0,
+            recent_e2e_s: &[],
+        }
+    }
+
+    #[test]
+    fn controller_scales_on_queue_depth_with_a_deadband() {
+        let mut c = Controller::new(policy(), 1);
+        // Sustained depth above target → grow, until the pool is full.
+        assert_eq!(c.tick(&snap(0.25, 1, 10)), ScaleDecision::ScaleUp);
+        assert_eq!(c.tick(&snap(0.50, 2, 20)), ScaleDecision::ScaleUp);
+        let full = FleetSnapshot { pending_up: 2, ..snap(0.75, 2, 20) };
+        assert_eq!(c.tick(&full), ScaleDecision::Hold, "cold-starting counts as capacity");
+        // A calm window (old hot samples pruned) → drain back down.
+        for i in 0..8 {
+            let d = c.tick(&snap(2.0 + 0.25 * i as f64, 4, 0));
+            if i >= 4 {
+                assert_eq!(d, ScaleDecision::ScaleDown, "tick {i}");
+            }
+        }
+        // Never below the floor.
+        let mut c = Controller::new(policy(), 1);
+        assert_eq!(c.tick(&snap(0.25, 1, 0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn slo_trigger_scales_up_and_blocks_scale_down() {
+        let p = policy().with_slo_e2e_p95(0.1);
+        let mut c = Controller::new(p, 1);
+        let slow = [0.5f64; 8];
+        let hot = FleetSnapshot { recent_e2e_s: &slow, ..snap(0.25, 1, 0) };
+        assert_eq!(c.tick(&hot), ScaleDecision::ScaleUp, "SLO breach grows an idle fleet");
+        let hot2 = FleetSnapshot { recent_e2e_s: &slow, ..snap(0.5, 4, 0) };
+        assert_eq!(c.tick(&hot2), ScaleDecision::Hold, "full pool, still hot: hold");
+        let calm = FleetSnapshot { recent_e2e_s: &[0.01], ..snap(3.0, 4, 0) };
+        let mut last = ScaleDecision::Hold;
+        for i in 0..6 {
+            last = c.tick(&FleetSnapshot { now_s: 3.0 + 0.25 * i as f64, ..calm.clone() });
+        }
+        assert_eq!(last, ScaleDecision::ScaleDown, "calm window drains");
+    }
+
+    #[test]
+    fn migration_fires_on_queue_skew_when_capacity_is_right() {
+        let mut c = Controller::new(policy(), 1);
+        let skew = FleetSnapshot { hottest_gap: 8, ..snap(0.25, 2, 4) };
+        assert_eq!(c.tick(&skew), ScaleDecision::Migrate);
+        // Disabled migration never fires.
+        let mut c = Controller::new(policy().without_migration(), 1);
+        let skew = FleetSnapshot { hottest_gap: 8, ..snap(0.25, 2, 4) };
+        assert_ne!(c.tick(&skew), ScaleDecision::Migrate);
+        // One replica cannot rebalance with itself.
+        let mut c = Controller::new(policy(), 1);
+        let solo = FleetSnapshot { hottest_gap: 8, ..snap(0.25, 1, 4) };
+        assert_ne!(c.tick(&solo), ScaleDecision::Migrate);
+    }
+
+    #[test]
+    fn victim_selection_spares_warm_caches_at_equal_load() {
+        let c = |replica, load, warm_bytes| DrainCandidate { replica, load, warm_bytes };
+        assert_eq!(choose_victim(&[]), None);
+        // Load dominates: the near-idle replica drains even if cold.
+        assert_eq!(choose_victim(&[c(0, 100, 0.0), c(1, 2, 1e9)]), Some(1));
+        // Equal load: the cold replica drains, never the warm one.
+        assert_eq!(choose_victim(&[c(0, 5, 8e6), c(1, 5, 0.0)]), Some(1));
+        assert_eq!(choose_victim(&[c(0, 5, 0.0), c(1, 5, 8e6)]), Some(0));
+        // Exact ties resolve by index, deterministically.
+        assert_eq!(choose_victim(&[c(2, 5, 1.0), c(1, 5, 1.0)]), Some(1));
+    }
+
+    #[test]
+    fn warm_value_is_resident_bytes_times_hit_rate() {
+        let cold = PrefixCacheStats::default();
+        assert_eq!(warm_prefix_value(1 << 20, &cold), 0.0);
+        let s = PrefixCacheStats { observed: 10, hit_tokens: 40, ..Default::default() };
+        assert_eq!(warm_prefix_value(1000, &s), 1000.0 * 4.0);
+    }
+
+    #[test]
+    fn rolling_p95_is_nearest_rank() {
+        assert_eq!(rolling_p95(&[]), None);
+        assert_eq!(rolling_p95(&[3.0]), Some(3.0));
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(rolling_p95(&v), Some(95.0));
+    }
+}

@@ -55,6 +55,9 @@ use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashMap};
 use std::time::Duration;
 
+use crate::autoscale::{
+    choose_victim, AutoscalePolicy, Controller, DrainCandidate, FleetSnapshot, ScaleDecision,
+};
 use crate::cluster::NetModel;
 use crate::comm::{CollectiveKind, Stage, TraceSummary};
 use crate::engine::Engine;
@@ -116,6 +119,10 @@ pub struct FleetSpec {
     /// Fault-injection spec ([`FaultSpec::none`] by default — a healthy
     /// fleet, bitwise-identical to a spec without the field).
     faults: FaultSpec,
+    /// Elasticity policy (`None`: a static fleet, every replica active
+    /// for the whole run). With a policy, the replica list above is the
+    /// *maximum* pool; `min_replicas` of it are active at t = 0.
+    autoscale: Option<AutoscalePolicy>,
 }
 
 /// Fleet members must serve the same model structurally; numeric plans
@@ -152,6 +159,7 @@ impl FleetSpec {
             gpus_per_node: 4,
             prefix_cache: None,
             faults: FaultSpec::none(),
+            autoscale: None,
         })
     }
 
@@ -188,6 +196,7 @@ impl FleetSpec {
             gpus_per_node: 4,
             prefix_cache: None,
             faults: FaultSpec::none(),
+            autoscale: None,
         })
     }
 
@@ -257,6 +266,32 @@ impl FleetSpec {
         Ok(self)
     }
 
+    /// Attach a model-clock autoscale policy ([`crate::autoscale`]).
+    /// The spec's replica list becomes the *maximum* pool — the policy's
+    /// `max_replicas` must equal it — of which `min_replicas` are active
+    /// from t = 0; the rest park until the controller spawns them
+    /// (paying the weight cold-start). Colocated fleets only: elastic
+    /// disaggregated pools are a roadmap follow-on. A policy that never
+    /// acts leaves every output bitwise-identical to the static fleet.
+    pub fn with_autoscale(mut self, policy: AutoscalePolicy) -> Result<Self, PlanError> {
+        if self.is_disaggregated() {
+            return Err(PlanError::AutoscaleDisaggUnsupported);
+        }
+        policy.validate()?;
+        if policy.max_replicas != self.replicas.len() {
+            return Err(PlanError::AutoscaleReplicaMismatch {
+                max_replicas: policy.max_replicas,
+                replicas: self.replicas.len(),
+            });
+        }
+        self.autoscale = Some(policy);
+        Ok(self)
+    }
+
+    pub fn autoscale(&self) -> Option<&AutoscalePolicy> {
+        self.autoscale.as_ref()
+    }
+
     pub fn faults(&self) -> &FaultSpec {
         &self.faults
     }
@@ -320,7 +355,11 @@ impl FleetSpec {
         }
         let pfx = if self.prefix_cache.is_some() { " +pfx" } else { "" };
         let flt = if self.faults.is_none() { "" } else { " +faults" };
-        format!("{} [{}{pfx}{flt}]", parts.join(" + "), self.router.label())
+        let aut = match &self.autoscale {
+            Some(p) => format!(" +auto[{}..{}]", p.min_replicas, p.max_replicas),
+            None => String::new(),
+        };
+        format!("{} [{}{pfx}{flt}{aut}]", parts.join(" + "), self.router.label())
     }
 
     /// Run the fleet against an open-loop workload. Deterministic per
@@ -430,6 +469,51 @@ impl FleetSpec {
             next_seq += 1;
         }
 
+        // Elasticity machinery. With an autoscale policy, replicas
+        // `0..min` start active and the rest park; controller
+        // scale-check ticks ride the event heap (jitter from the
+        // autoscale RNG stream — arrivals/lengths/prefixes/faults are
+        // unperturbed) and every action is priced in model time: a
+        // scale-up pays the weight cold-start over the fleet wire, a
+        // migration ships live KV through `NetModel::p2p`. Without a
+        // policy no state ever changes and no tick is scheduled —
+        // bitwise-identical to the pre-autoscale loop.
+        let mut states: Vec<ReplState> = match &self.autoscale {
+            Some(p) => (0..n)
+                .map(|i| if i < p.min_replicas { ReplState::Active } else { ReplState::Parked })
+                .collect(),
+            None => vec![ReplState::Active; n],
+        };
+        // The serve-pool routing mask: alive AND active (draining
+        // replicas finish their work but admit nothing new).
+        let mut routable: Vec<bool> =
+            (0..n).map(|i| alive[i] && states[i] == ReplState::Active).collect();
+        let mut controller = self.autoscale.clone().map(|p| Controller::new(p, seed));
+        if let Some(ctl) = controller.as_mut() {
+            heap.push(Reverse(Event {
+                at: ctl.next_tick_after(0.0),
+                seq: next_seq,
+                kind: EventKind::ScaleTick,
+            }));
+            next_seq += 1;
+        }
+        // Provisioned-capacity accounting: a replica's clock runs from
+        // activation (the scale-up decision — GPUs are held while the
+        // weights stream in) to park or end-of-run.
+        let mut prov_start: Vec<Option<f64>> = states
+            .iter()
+            .map(|s| if *s == ReplState::Parked { None } else { Some(0.0) })
+            .collect();
+        let mut provisioned_s = vec![0.0f64; n];
+        let mut cold_starts = 0usize;
+        let mut cold_start_total_s = 0.0f64;
+        let mut migrations = 0usize;
+        let mut kv_migration_bytes = 0.0f64;
+        let mut kv_migration_s = 0.0f64;
+        // Per-replica (tick time, queue depth) samples behind the
+        // rolling-window signals reported in `ReplicaStats`.
+        let mut depth_samples: Vec<Vec<(f64, usize)>> = vec![Vec::new(); n];
+
         let mut pending: HashMap<u64, Pending> = HashMap::new();
         let mut completed: Vec<FleetRequestMetrics> = Vec::new();
         let mut stats: Vec<ReplicaStats> = self
@@ -444,6 +528,9 @@ impl FleetSpec {
                 max_depth: 0,
                 tokens: 0,
                 cached_tokens: 0,
+                provisioned_s: 0.0,
+                rolling_queue_depth: 0.0,
+                rolling_ttft_p95_s: 0.0,
             })
             .collect();
         let mut kv_total_bytes = 0.0f64;
@@ -505,7 +592,7 @@ impl FleetSpec {
                                 })
                                 .collect();
                             let live: Vec<bool> =
-                                serve_pool.iter().map(|&i| alive[i]).collect();
+                                serve_pool.iter().map(|&i| routable[i]).collect();
                             let pick = arrival_router
                                 .route_masked(&loads, &live)
                                 .map(|slot| serve_pool[slot]);
@@ -589,7 +676,7 @@ impl FleetSpec {
                                     ev.at,
                                     &mut replicas,
                                     &serve_pool,
-                                    &alive,
+                                    &routable,
                                     &mut arrival_router,
                                     &mut pending,
                                     &mut stats,
@@ -656,6 +743,16 @@ impl FleetSpec {
                             }
                             if alive[replica] {
                                 alive[replica] = false;
+                                routable[replica] = false;
+                                // A draining replica that dies parks
+                                // immediately: its GPUs release now, not
+                                // at drain completion.
+                                if states[replica] == ReplState::Draining {
+                                    states[replica] = ReplState::Parked;
+                                    if let Some(s) = prov_start[replica].take() {
+                                        provisioned_s[replica] += (ev.at - s).max(0.0);
+                                    }
+                                }
                                 let lost = replicas[replica].fail(kv_per_token[replica])?;
                                 for l in &lost {
                                     let p = pending
@@ -682,7 +779,7 @@ impl FleetSpec {
                                         ev.at,
                                         &mut replicas,
                                         &serve_pool,
-                                        &alive,
+                                        &routable,
                                         &mut arrival_router,
                                         &mut pending,
                                         &mut stats,
@@ -712,13 +809,17 @@ impl FleetSpec {
                             // revives the replica.
                             if !alive[replica] && ev.at >= down_until[replica] {
                                 alive[replica] = true;
+                                // A replica the controller parked (or is
+                                // still cold-starting) recovers its
+                                // health but not a routing slot.
+                                routable[replica] = states[replica] == ReplState::Active;
                                 for id in std::mem::take(&mut stranded) {
                                     route_retry(
                                         id,
                                         ev.at,
                                         &mut replicas,
                                         &serve_pool,
-                                        &alive,
+                                        &routable,
                                         &mut arrival_router,
                                         &mut pending,
                                         &mut stats,
@@ -727,6 +828,290 @@ impl FleetSpec {
                                         disagg,
                                     );
                                 }
+                            }
+                        }
+                        EventKind::ScaleTick => {
+                            // Stop ticking once the offered load is fully
+                            // served — otherwise the heap never drains.
+                            if completed.len() >= total_requests {
+                                continue;
+                            }
+                            let ctl = controller
+                                .as_mut()
+                                .expect("ScaleTick only scheduled with a policy");
+                            let active_idx: Vec<usize> =
+                                (0..n).filter(|&i| routable[i]).collect();
+                            let mut depth_total = 0usize;
+                            let mut hot_depth = 0usize;
+                            let mut cool_depth = usize::MAX;
+                            for &i in &active_idx {
+                                let d = replicas[i].queue_depth();
+                                depth_samples[i].push((ev.at, d));
+                                depth_total += d;
+                                hot_depth = hot_depth.max(d);
+                                cool_depth = cool_depth.min(d);
+                            }
+                            let hottest_gap = if active_idx.is_empty() {
+                                0
+                            } else {
+                                hot_depth - cool_depth
+                            };
+                            let pending_up = states
+                                .iter()
+                                .filter(|&&s| s == ReplState::ColdStarting)
+                                .count();
+                            let horizon = ev.at - ctl.policy().window_s;
+                            let recent: Vec<f64> = completed
+                                .iter()
+                                .filter_map(|m| m.model.as_ref())
+                                .filter(|t| t.finished_at_s >= horizon)
+                                .map(|t| t.e2e_s)
+                                .collect();
+                            let decision = ctl.tick(&FleetSnapshot {
+                                now_s: ev.at,
+                                active: active_idx.len(),
+                                pending_up,
+                                queue_depth_total: depth_total,
+                                hottest_gap,
+                                recent_e2e_s: &recent,
+                            });
+                            match decision {
+                                ScaleDecision::Hold => {}
+                                ScaleDecision::ScaleUp => {
+                                    // Lowest-index healthy parked replica
+                                    // spawns; GPUs are held from the
+                                    // decision while the weights stream
+                                    // in over the (possibly degraded)
+                                    // fleet wire.
+                                    if let Some(r) = (0..n).find(|&i| {
+                                        alive[i] && states[i] == ReplState::Parked
+                                    }) {
+                                        states[r] = ReplState::ColdStarting;
+                                        prov_start[r] = Some(ev.at);
+                                        let wire = nets[r]
+                                            .degraded(self.faults.wire_factor(ev.at));
+                                        let cost = cold_start_s(
+                                            self.arch(),
+                                            plans[r].shape().dtype_bytes,
+                                            &wire,
+                                        );
+                                        cold_starts += 1;
+                                        cold_start_total_s += cost;
+                                        heap.push(Reverse(Event {
+                                            at: ev.at + cost,
+                                            seq: next_seq,
+                                            kind: EventKind::ScaleUpDone { replica: r },
+                                        }));
+                                        next_seq += 1;
+                                    }
+                                }
+                                ScaleDecision::ScaleDown => {
+                                    if active_idx.len() > ctl.policy().min_replicas {
+                                        let candidates: Vec<DrainCandidate> = active_idx
+                                            .iter()
+                                            .map(|&i| DrainCandidate {
+                                                replica: i,
+                                                load: replicas[i]
+                                                    .load()
+                                                    .outstanding_tokens,
+                                                warm_bytes: replicas[i]
+                                                    .warm_prefix_value(),
+                                            })
+                                            .collect();
+                                        if let Some(v) = choose_victim(&candidates) {
+                                            states[v] = ReplState::Draining;
+                                            routable[v] = false;
+                                            if !replicas[v].runnable() {
+                                                // Already idle: park (and
+                                                // release GPUs) now.
+                                                states[v] = ReplState::Parked;
+                                                if let Some(s) = prov_start[v].take() {
+                                                    provisioned_s[v] +=
+                                                        (ev.at - s).max(0.0);
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                                ScaleDecision::Migrate => {
+                                    // Hottest → coolest active replica by
+                                    // queue depth, first index winning
+                                    // ties; ship the live sequence with
+                                    // the most remaining decode work.
+                                    let mut hot = active_idx[0];
+                                    let mut cool = active_idx[0];
+                                    for &i in &active_idx[1..] {
+                                        if replicas[i].queue_depth()
+                                            > replicas[hot].queue_depth()
+                                        {
+                                            hot = i;
+                                        }
+                                        if replicas[i].queue_depth()
+                                            < replicas[cool].queue_depth()
+                                        {
+                                            cool = i;
+                                        }
+                                    }
+                                    // One migration per request: a
+                                    // sequence that already carries a
+                                    // merged source pass stays put.
+                                    let pick = replicas[hot]
+                                        .migration_candidates()
+                                        .into_iter()
+                                        .find(|id| {
+                                            pending
+                                                .get(id)
+                                                .is_some_and(|p| p.prefill.is_none())
+                                        });
+                                    if hot != cool {
+                                        if let Some(id) = pick {
+                                            if let Some(m) = replicas[hot].migrate_out(id)?
+                                            {
+                                                // Resident KV below the
+                                                // re-prefilled token ships
+                                                // through the same α–β p2p
+                                                // path as a disagg handoff.
+                                                let bytes =
+                                                    (m.context * kv_per_token[hot]) as f64;
+                                                let crosses = nodes[hot] != nodes[cool];
+                                                let wire = nets[hot].degraded(
+                                                    self.faults.wire_factor(ev.at),
+                                                );
+                                                let cost =
+                                                    wire.p2p(bytes, crosses).total();
+                                                migrations += 1;
+                                                kv_migration_bytes += bytes;
+                                                kv_migration_s += cost;
+                                                let p = pending
+                                                    .get_mut(&id)
+                                                    .expect("candidate filter checked");
+                                                p.kv_bytes += bytes;
+                                                p.kv_s += cost;
+                                                let token = m.done.last_token;
+                                                p.prefill = Some(m.done);
+                                                heap.push(Reverse(Event {
+                                                    at: ev.at + cost,
+                                                    seq: next_seq,
+                                                    kind: EventKind::Migrate {
+                                                        id,
+                                                        token,
+                                                        remaining: m.remaining,
+                                                        context: m.context,
+                                                        replica: cool,
+                                                        attempt: p.attempt,
+                                                    },
+                                                }));
+                                                next_seq += 1;
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            heap.push(Reverse(Event {
+                                at: ctl.next_tick_after(ev.at),
+                                seq: next_seq,
+                                kind: EventKind::ScaleTick,
+                            }));
+                            next_seq += 1;
+                        }
+                        EventKind::ScaleUpDone { replica } => {
+                            // A fault can fell the replica mid-load; it
+                            // then joins the pool through the Recover
+                            // path instead.
+                            if states[replica] == ReplState::ColdStarting {
+                                states[replica] = ReplState::Active;
+                                // The weight reload behind the cold start
+                                // means the prefix cache comes back empty.
+                                replicas[replica].reset_cold(kv_per_token[replica]);
+                                routable[replica] = alive[replica];
+                                if routable[replica] {
+                                    for id in std::mem::take(&mut stranded) {
+                                        route_retry(
+                                            id,
+                                            ev.at,
+                                            &mut replicas,
+                                            &serve_pool,
+                                            &routable,
+                                            &mut arrival_router,
+                                            &mut pending,
+                                            &mut stats,
+                                            &mut completed,
+                                            &mut stranded,
+                                            disagg,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        EventKind::Migrate { id, token, remaining, context, replica, attempt } => {
+                            // A fault retried the request while its KV
+                            // was on the wire: the shipment belongs to a
+                            // dead attempt — drop it.
+                            if pending.get(&id).map(|p| p.attempt) != Some(attempt) {
+                                continue;
+                            }
+                            if !routable[replica] {
+                                // The target left the pool (fault or
+                                // drain) mid-shipment: the source pass is
+                                // sunk; the request retries from scratch.
+                                let p = pending.get_mut(&id).expect("attempt matched");
+                                p.attempt += 1;
+                                p.retries += 1;
+                                if let Some(pf) = p.prefill.take() {
+                                    p.wasted_prefill_s += plans[p.replica]
+                                        .cost_model()
+                                        .prefill_price(pf.prompt_tokens - pf.cached_tokens);
+                                }
+                                route_retry(
+                                    id,
+                                    ev.at,
+                                    &mut replicas,
+                                    &serve_pool,
+                                    &routable,
+                                    &mut arrival_router,
+                                    &mut pending,
+                                    &mut stats,
+                                    &mut completed,
+                                    &mut stranded,
+                                    disagg,
+                                );
+                                continue;
+                            }
+                            // Restore the sequence mid-decode: 1-token
+                            // prompt (the last sampled token) over the
+                            // shipped cached-KV context — exactly the
+                            // disaggregated handoff's admission shape, so
+                            // the remaining decode positions (and tokens)
+                            // continue the source bitwise.
+                            let req =
+                                Request { id, prompt: vec![token], decode_len: remaining };
+                            if let Err(e) = replicas[replica].submit(req, ev.at, context) {
+                                let p = pending.remove(&id).expect("migration tracked");
+                                let pf =
+                                    p.prefill.as_ref().expect("source pass preceded migration");
+                                completed.push(FleetRequestMetrics {
+                                    request_id: id,
+                                    replica: p.replica,
+                                    decode_replica: None,
+                                    prompt_tokens: p.prompt_tokens,
+                                    generated_tokens: pf.generated,
+                                    cached_prompt_tokens: pf.cached_tokens,
+                                    saved_prefill_s: pf.saved_prefill_s,
+                                    saved_prefill_bytes: pf.saved_prefill_bytes,
+                                    kv_transfer_bytes: p.kv_bytes,
+                                    kv_transfer_s: p.kv_s,
+                                    retries: p.retries,
+                                    wasted_prefill_s: p.wasted_prefill_s,
+                                    model: Some(anchored(&p, pf)),
+                                    error: Some(e.to_string()),
+                                });
+                            } else {
+                                let p = pending.get_mut(&id).expect("attempt matched");
+                                p.replica = replica;
+                                stats[replica].assigned += 1;
+                                stats[replica].max_depth = stats[replica]
+                                    .max_depth
+                                    .max(replicas[replica].queue_depth());
                             }
                         }
                     }
@@ -738,26 +1123,62 @@ impl FleetSpec {
                     match roles[bi] {
                         ReplicaRole::Serve => {
                             let p = pending.remove(&d.id).expect("routed request tracked");
-                            completed.push(FleetRequestMetrics {
-                                request_id: d.id,
-                                replica: p.replica,
-                                decode_replica: None,
-                                prompt_tokens: d.prompt_tokens,
-                                generated_tokens: d.generated,
-                                cached_prompt_tokens: d.cached_tokens,
-                                saved_prefill_s: d.saved_prefill_s,
-                                saved_prefill_bytes: d.saved_prefill_bytes,
-                                kv_transfer_bytes: 0.0,
-                                kv_transfer_s: 0.0,
-                                retries: p.retries,
-                                wasted_prefill_s: p.wasted_prefill_s,
-                                model: if d.rejected {
-                                    None
+                            if let Some(pf) = p.prefill.as_ref() {
+                                // Migrated mid-decode: merge the source
+                                // pass with this (target) pass, exactly
+                                // like a disaggregated prefill + decode
+                                // pair — TTFT from the source, the tail
+                                // (with the KV shipment inside the
+                                // inter-token gap) from the target.
+                                let (model, generated) = if d.rejected {
+                                    (Some(anchored(&p, pf)), pf.generated)
                                 } else {
-                                    Some(anchored(&p, &d))
-                                },
-                                error: d.error.clone(),
-                            });
+                                    let mut t = merge_times(pf, &d);
+                                    t.queue_s = pf.admitted_s - p.arrival_s;
+                                    t.e2e_s = d.last_token_s - p.arrival_s;
+                                    (Some(t), pf.generated + d.generated)
+                                };
+                                completed.push(FleetRequestMetrics {
+                                    request_id: d.id,
+                                    replica: p.replica,
+                                    decode_replica: None,
+                                    prompt_tokens: p.prompt_tokens,
+                                    generated_tokens: generated,
+                                    // Cache hits happened on the source
+                                    // replica; the 1-token restore prompt
+                                    // never hits.
+                                    cached_prompt_tokens: pf.cached_tokens,
+                                    saved_prefill_s: pf.saved_prefill_s,
+                                    saved_prefill_bytes: pf.saved_prefill_bytes,
+                                    kv_transfer_bytes: p.kv_bytes,
+                                    kv_transfer_s: p.kv_s,
+                                    retries: p.retries,
+                                    wasted_prefill_s: p.wasted_prefill_s,
+                                    model,
+                                    error: d.error.clone(),
+                                });
+                            } else {
+                                completed.push(FleetRequestMetrics {
+                                    request_id: d.id,
+                                    replica: p.replica,
+                                    decode_replica: None,
+                                    prompt_tokens: d.prompt_tokens,
+                                    generated_tokens: d.generated,
+                                    cached_prompt_tokens: d.cached_tokens,
+                                    saved_prefill_s: d.saved_prefill_s,
+                                    saved_prefill_bytes: d.saved_prefill_bytes,
+                                    kv_transfer_bytes: 0.0,
+                                    kv_transfer_s: 0.0,
+                                    retries: p.retries,
+                                    wasted_prefill_s: p.wasted_prefill_s,
+                                    model: if d.rejected {
+                                        None
+                                    } else {
+                                        Some(anchored(&p, &d))
+                                    },
+                                    error: d.error.clone(),
+                                });
+                            }
                         }
                         ReplicaRole::Prefill => {
                             if d.rejected || d.error.is_some() {
@@ -912,6 +1333,14 @@ impl FleetSpec {
                         }
                     }
                 }
+                // A draining replica parks (releasing its GPUs) the
+                // moment its last in-flight request leaves.
+                if states[bi] == ReplState::Draining && !replicas[bi].runnable() {
+                    states[bi] = ReplState::Parked;
+                    if let Some(s) = prov_start[bi].take() {
+                        provisioned_s[bi] += (replicas[bi].now() - s).max(0.0);
+                    }
+                }
             }
 
             for (i, r) in replicas.iter().enumerate() {
@@ -919,6 +1348,48 @@ impl FleetSpec {
                 stats[i].cached_tokens = r.cached_tokens_total();
             }
         }
+
+        // Close every still-open provisioned interval at the model-time
+        // end of the run (static replicas run the whole span; a drained
+        // one already closed at its park).
+        let end_s = completed
+            .iter()
+            .filter_map(|m| m.model.as_ref())
+            .map(|t| t.finished_at_s)
+            .fold(0.0f64, f64::max);
+        for i in 0..n {
+            if let Some(s) = prov_start[i].take() {
+                provisioned_s[i] += (end_s - s).max(0.0);
+            }
+            stats[i].provisioned_s = provisioned_s[i];
+        }
+        // Rolling-window signals as of end-of-run (what the controller's
+        // last tick saw, for the CLI table and post-mortems).
+        if let Some(p) = &self.autoscale {
+            let horizon = end_s - p.window_s;
+            for i in 0..n {
+                let tail: Vec<f64> = depth_samples[i]
+                    .iter()
+                    .filter(|&&(t, _)| t >= horizon)
+                    .map(|&(_, d)| d as f64)
+                    .collect();
+                if !tail.is_empty() {
+                    stats[i].rolling_queue_depth =
+                        tail.iter().sum::<f64>() / tail.len() as f64;
+                }
+                let ttfts: Vec<f64> = completed
+                    .iter()
+                    .filter(|m| m.replica == i)
+                    .filter_map(|m| m.model.as_ref())
+                    .filter(|t| t.finished_at_s >= horizon)
+                    .map(|t| t.ttft_s)
+                    .collect();
+                stats[i].rolling_ttft_p95_s =
+                    crate::autoscale::rolling_p95(&ttfts).unwrap_or(0.0);
+            }
+        }
+        let provisioned_gpu_s: f64 =
+            stats.iter().map(|s| s.gpus as f64 * s.provisioned_s).sum();
 
         // Aggregate through the serving stack's own summary path so the
         // model-time percentiles share one implementation (and a
@@ -944,7 +1415,7 @@ impl FleetSpec {
             .collect();
         let agg = ServeSummary::from_metrics(&wall, Duration::ZERO);
 
-        let mut comm_bytes = kv_total_bytes;
+        let mut comm_bytes = kv_total_bytes + kv_migration_bytes;
         for (i, e) in engines.iter().enumerate() {
             comm_bytes +=
                 traced_comm_bytes(&e.trace().summary(), self.replicas[i].plan.layout().pp);
@@ -965,6 +1436,12 @@ impl FleetSpec {
             wasted_prefill_s: agg.wasted_prefill_s,
             kv_transfer_bytes: kv_total_bytes,
             kv_transfer_s: kv_total_s,
+            kv_migration_bytes,
+            kv_migration_s,
+            cold_starts,
+            cold_start_s: cold_start_total_s,
+            migrations,
+            provisioned_gpu_s,
             comm_bytes,
         })
     }
@@ -1015,7 +1492,7 @@ fn route_retry(
     at: f64,
     replicas: &mut [Replica<'_>],
     serve_pool: &[usize],
-    alive: &[bool],
+    routable: &[bool],
     router: &mut Router,
     pending: &mut HashMap<u64, Pending>,
     stats: &mut [ReplicaStats],
@@ -1031,7 +1508,7 @@ fn route_retry(
             None => replicas[i].load(),
         })
         .collect();
-    let live: Vec<bool> = serve_pool.iter().map(|&i| alive[i]).collect();
+    let live: Vec<bool> = serve_pool.iter().map(|&i| routable[i]).collect();
     let Some(slot) = router.route_masked(&loads, &live) else {
         stranded.push(id);
         return;
@@ -1167,6 +1644,42 @@ enum EventKind {
     /// A replica comes back (MTTR draw or outage end, plus the weight
     /// cold-start) and takes traffic again.
     Recover { replica: usize, churned: bool },
+    /// Autoscale controller scale-check (scheduled only with a policy
+    /// attached; jittered by the autoscale RNG stream).
+    ScaleTick,
+    /// A scale-up's weight cold-start finished: the replica joins the
+    /// routable pool (unless a fault felled it mid-load).
+    ScaleUpDone { replica: usize },
+    /// A live KV migration's shipment arrives at the target replica —
+    /// the elasticity analogue of `Handoff`, carrying the same restore
+    /// payload (1-token prompt over `context` cached-KV tokens).
+    Migrate {
+        id: u64,
+        token: i32,
+        remaining: usize,
+        context: usize,
+        replica: usize,
+        /// [`Pending::attempt`] at shipment time (stale migrations from a
+        /// retried attempt are dropped on delivery).
+        attempt: u32,
+    },
+}
+
+/// Lifecycle of a replica under autoscaling. Static fleets (no policy)
+/// hold every replica at `Active` forever — the mask the router sees is
+/// then exactly the fault-injection `alive` mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplState {
+    /// In the routing pool (when alive).
+    Active,
+    /// Scale-up issued; weights streaming in. Counts toward provisioned
+    /// capacity but takes no traffic until `ScaleUpDone`.
+    ColdStarting,
+    /// Scale-down issued: admits nothing new, finishes its in-flight
+    /// work, then parks.
+    Draining,
+    /// Deprovisioned (or never provisioned): holds no GPUs.
+    Parked,
 }
 
 impl PartialEq for Event {
@@ -1207,10 +1720,12 @@ pub struct FleetRequestMetrics {
     pub saved_prefill_s: f64,
     /// Corrected prefill communication bytes the cached prefix saved.
     pub saved_prefill_bytes: f64,
-    /// KV-cache bytes shipped prefill → decode (0 when colocated).
+    /// KV-cache bytes shipped on the request's behalf: the prefill →
+    /// decode handoff under disaggregation, or a live autoscale
+    /// migration's resident context (0 when the request never moved).
     pub kv_transfer_bytes: f64,
-    /// Modeled wire time of the KV handoff (stamped into the request's
-    /// timeline: the decode pool sees the request only after it).
+    /// Modeled wire time of those shipments (stamped into the request's
+    /// timeline: the receiving replica sees the sequence only after it).
     pub kv_transfer_s: f64,
     /// Times the request was re-routed after losing its replica to a
     /// fault (0 on a healthy fleet).
@@ -1239,6 +1754,16 @@ pub struct ReplicaStats {
     pub tokens: usize,
     /// Prompt tokens the replica served out of its prefix cache.
     pub cached_tokens: usize,
+    /// Model seconds this replica was provisioned (activation — GPUs
+    /// held from the scale-up decision, weights streaming — to park or
+    /// end-of-run). Equals the run's makespan on a static fleet.
+    pub provisioned_s: f64,
+    /// Mean queue depth over the controller's last sliding window
+    /// (0 without an autoscale policy or samples).
+    pub rolling_queue_depth: f64,
+    /// Nearest-rank p95 TTFT of this replica's completions inside the
+    /// last sliding window (0 without a policy or completions).
+    pub rolling_ttft_p95_s: f64,
 }
 
 /// Aggregate of one fleet simulation.
@@ -1271,8 +1796,26 @@ pub struct FleetSummary {
     pub kv_transfer_bytes: f64,
     /// Total modeled KV-handoff wire seconds.
     pub kv_transfer_s: f64,
+    /// Total live-KV bytes shipped by autoscale migrations (0 without a
+    /// policy).
+    pub kv_migration_bytes: f64,
+    /// Total modeled wire seconds of those migrations.
+    pub kv_migration_s: f64,
+    /// Autoscale cold starts paid (scale-up weight loads; fault-recovery
+    /// reloads are accounted inside the churn timeline instead).
+    pub cold_starts: usize,
+    /// Total model seconds spent streaming weights for those scale-ups.
+    pub cold_start_s: f64,
+    /// Live KV migrations performed.
+    pub migrations: usize,
+    /// GPU·seconds provisioned: Σ over replicas of GPUs × provisioned
+    /// model time. A static fleet pays `total_gpus × makespan`; an
+    /// elastic one pays only for what it kept active — the headline
+    /// cost axis autoscaling trades against latency.
+    pub provisioned_gpu_s: f64,
     /// Traced corrected collective volume across all replicas plus KV
-    /// handoffs (the fleet-level analogue of Eq. 1–7 totals).
+    /// handoffs and autoscale migrations (the fleet-level analogue of
+    /// Eq. 1–7 totals).
     pub comm_bytes: f64,
 }
 
@@ -1581,5 +2124,112 @@ mod tests {
         // Prefill pool generated exactly one token per request.
         assert_eq!(s.replicas[0].tokens, 6);
         assert_eq!(s.replicas[1].tokens, 6 * 3);
+    }
+
+    #[test]
+    fn autoscale_spec_validation_and_label() {
+        use crate::autoscale::AutoscalePolicy;
+        let plan = tiny_plan(2, 1);
+        // The policy ceiling must equal the spec's (maximum) pool.
+        let spec = FleetSpec::colocated(&plan, 2).unwrap();
+        assert!(matches!(
+            spec.clone()
+                .with_autoscale(AutoscalePolicy::target_queue(1, 4, 4.0, 0.1))
+                .unwrap_err(),
+            PlanError::AutoscaleReplicaMismatch { max_replicas: 4, replicas: 2 }
+        ));
+        // Degenerate policies are rejected through the same validator.
+        assert!(matches!(
+            spec.clone()
+                .with_autoscale(AutoscalePolicy::target_queue(0, 2, 4.0, 0.1))
+                .unwrap_err(),
+            PlanError::AutoscaleBoundsInvalid { .. }
+        ));
+        // Elastic disaggregated pools are a roadmap follow-on.
+        let d = FleetSpec::disaggregated(&plan, 1, &tiny_plan(1, 2), 1).unwrap();
+        assert!(matches!(
+            d.with_autoscale(AutoscalePolicy::target_queue(1, 2, 4.0, 0.1)).unwrap_err(),
+            PlanError::AutoscaleDisaggUnsupported
+        ));
+        let spec = spec
+            .with_autoscale(AutoscalePolicy::target_queue(1, 2, 4.0, 0.1))
+            .unwrap();
+        assert!(spec.label().ends_with("[round-robin +auto[1..2]]"), "{}", spec.label());
+        assert_eq!(spec.autoscale().unwrap().max_replicas, 2);
+    }
+
+    #[test]
+    fn never_acting_policy_is_bitwise_identical_to_the_static_fleet() {
+        let spec = FleetSpec::colocated(&tiny_plan(2, 1), 2).unwrap();
+        let wl = workload(12, 2000.0);
+        let stat = spec.clone().simulate(&wl, 7).unwrap();
+        // min == max (no parked pool to grow into, no floor to drain
+        // toward) and unreachable thresholds: the controller ticks but
+        // every decision is Hold.
+        let policy = crate::autoscale::AutoscalePolicy::target_queue(2, 2, 1e9, 0.05);
+        let auto = spec.with_autoscale(policy).unwrap().simulate(&wl, 7).unwrap();
+        assert_eq!(stat.model, auto.model, "no-op ticks must not perturb the DES");
+        assert_eq!(
+            stat.replicas.iter().map(|r| r.assigned).collect::<Vec<_>>(),
+            auto.replicas.iter().map(|r| r.assigned).collect::<Vec<_>>(),
+        );
+        assert_eq!(auto.cold_starts, 0);
+        assert_eq!(auto.migrations, 0);
+        assert_eq!(auto.kv_migration_bytes, 0.0);
+        // Both fleets pay full static provisioning: every GPU from t=0
+        // to the end of the run.
+        let end = stat
+            .per_request
+            .iter()
+            .filter_map(|m| m.model.as_ref())
+            .map(|t| t.finished_at_s)
+            .fold(0.0f64, f64::max);
+        assert_eq!(stat.provisioned_gpu_s, 4.0 * end);
+        assert_eq!(auto.provisioned_gpu_s, stat.provisioned_gpu_s);
+    }
+
+    #[test]
+    fn elastic_fleet_pays_cold_starts_and_provisions_the_second_replica_late() {
+        // One standing replica, one parked; a hot open loop forces a
+        // scale-up whose cold start and late provisioning both show up
+        // in the summary.
+        let policy = crate::autoscale::AutoscalePolicy::target_queue(1, 2, 0.5, 0.02)
+            .without_migration();
+        let spec = FleetSpec::colocated(&tiny_plan(2, 1), 2)
+            .unwrap()
+            .with_router(RouterPolicy::LeastOutstandingTokens)
+            .with_autoscale(policy)
+            .unwrap();
+        let wl = workload(24, 3000.0);
+        let s = spec.simulate(&wl, 11).unwrap();
+        assert_eq!(s.completed, 24);
+        assert_eq!(s.failed, 0);
+        assert!(s.cold_starts >= 1, "hot loop must trigger a scale-up");
+        assert!(s.cold_start_s > 0.0);
+        assert!(
+            s.replicas[1].provisioned_s > 0.0,
+            "the spawned replica holds GPUs from its activation"
+        );
+        assert!(
+            s.replicas[1].provisioned_s < s.replicas[0].provisioned_s,
+            "the second replica was provisioned strictly later: {} vs {}",
+            s.replicas[1].provisioned_s,
+            s.replicas[0].provisioned_s
+        );
+        let end = s
+            .per_request
+            .iter()
+            .filter_map(|m| m.model.as_ref())
+            .map(|t| t.finished_at_s)
+            .fold(0.0f64, f64::max);
+        assert!(
+            s.provisioned_gpu_s < 4.0 * end,
+            "elastic provisioning undercuts static max-N over the same span"
+        );
+        // Elasticity is deterministic per seed like everything else.
+        let t = spec.simulate(&wl, 11).unwrap();
+        assert_eq!(s.model, t.model);
+        assert_eq!(s.cold_starts, t.cold_starts);
+        assert_eq!(s.provisioned_gpu_s, t.provisioned_gpu_s);
     }
 }

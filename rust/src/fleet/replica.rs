@@ -70,11 +70,34 @@ pub(crate) struct LostRequest {
     pub wasted_prefill_s: f64,
 }
 
+/// A live sequence checkpointed off a replica by
+/// [`Replica::migrate_out`]: the partial pass's model-clock record plus
+/// everything the target replica needs to restore it mid-decode via
+/// cached-context admission.
+#[derive(Debug, Clone)]
+pub(crate) struct MigratedSeq {
+    /// The source pass (tokens generated so far, TTFT, last token) —
+    /// merged with the target pass at completion, exactly like a
+    /// disaggregated prefill record.
+    pub done: ReplicaDone,
+    /// Decode tokens still owed after the migration.
+    pub remaining: usize,
+    /// Cached-KV token count to ship and resubmit with: every token
+    /// below the re-prefilled last one (`context + Sp + generated - 1`),
+    /// so the target's decode positions continue the source's sequence
+    /// bitwise.
+    pub context: usize,
+}
+
 /// In-flight model-clock bookkeeping (mirror of the serving loop's
 /// `ModelFlight`).
 struct Flight {
     arrival_s: f64,
     admitted_s: f64,
+    /// Cached-KV tokens shipped with the submission (a disaggregated
+    /// handoff or a live migration; 0 on first service) — a second
+    /// migration stacks on top of it.
+    context: usize,
     prompt_tokens: usize,
     cached_tokens: usize,
     saved_prefill_s: f64,
@@ -271,6 +294,7 @@ impl<'e> Replica<'e> {
                 Flight {
                     arrival_s,
                     admitted_s,
+                    context,
                     prompt_tokens,
                     cached_tokens: cached,
                     saved_prefill_s,
@@ -382,6 +406,77 @@ impl<'e> Replica<'e> {
             self.prefix = Some(PrefixCache::new(cache.config(), kv_bytes_per_token));
         }
         Ok(lost)
+    }
+
+    /// Live sequences eligible for KV migration — admitted, mid-decode
+    /// (first token out, budget not exhausted) — most-remaining-work
+    /// first (those benefit most from moving), ids breaking ties for
+    /// determinism over the flight map's arbitrary order.
+    pub fn migration_candidates(&self) -> Vec<SeqId> {
+        let mut c: Vec<(usize, SeqId)> = self
+            .flights
+            .iter()
+            .filter(|(_, f)| {
+                f.first_token_s.is_some() && f.generated >= 1 && f.generated < f.decode_budget
+            })
+            .map(|(&id, f)| (f.decode_budget - f.generated, id))
+            .collect();
+        c.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        c.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// Checkpoint a live mid-decode sequence off this replica: cancel it
+    /// in the session, free its scheduler blocks, and return everything
+    /// the fleet needs to restore it elsewhere ([`MigratedSeq`]). The
+    /// target resubmits a 1-token prompt (the last sampled token) over
+    /// `context` cached-KV tokens, so its decode positions — and hence
+    /// every remaining structural token — continue the unmigrated
+    /// sequence bitwise. `None` when the sequence is not migratable
+    /// (unknown, still prefilling, or already finished).
+    pub fn migrate_out(&mut self, id: SeqId) -> Result<Option<MigratedSeq>> {
+        let migratable = self.flights.get(&id).is_some_and(|f| {
+            f.first_token_s.is_some() && f.generated >= 1 && f.generated < f.decode_budget
+        });
+        if !migratable {
+            return Ok(None);
+        }
+        let f = self.flights.remove(&id).expect("checked above");
+        self.session.cancel(id);
+        self.scheduler.finish(id)?;
+        let remaining = f.decode_budget - f.generated;
+        // The prompt's share retired at first token; only the unproduced
+        // decode tail leaves with the sequence.
+        self.outstanding_tokens = self.outstanding_tokens.saturating_sub(remaining);
+        let context = f.context + f.prompt_tokens + f.generated - 1;
+        Ok(Some(MigratedSeq {
+            done: Self::finish_flight(id, &f, None),
+            remaining,
+            context,
+        }))
+    }
+
+    /// Warm prefix-cache value of this replica
+    /// ([`crate::autoscale::warm_prefix_value`]: resident KV bytes ×
+    /// observed hit rate) — the capacity a scale-down would throw away.
+    /// 0 without a cache.
+    pub fn warm_prefix_value(&self) -> f64 {
+        match &self.prefix {
+            Some(cache) => {
+                crate::autoscale::warm_prefix_value(cache.resident_bytes(), &cache.stats())
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Re-activate a parked (previously drained) replica: the weight
+    /// reload behind the scale-up cold start also means its prefix
+    /// cache comes back empty. Flights and queue are empty by
+    /// construction (a replica only parks once drained).
+    pub fn reset_cold(&mut self, kv_bytes_per_token: usize) {
+        debug_assert!(!self.runnable(), "only a drained replica re-activates");
+        if let Some(cache) = self.prefix.take() {
+            self.prefix = Some(PrefixCache::new(cache.config(), kv_bytes_per_token));
+        }
     }
 
     fn finish_flight(id: SeqId, f: &Flight, error: Option<String>) -> ReplicaDone {

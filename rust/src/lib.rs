@@ -88,6 +88,13 @@
 //!   KV-cache handoffs priced through the α–β link model; plus the
 //!   capacity sweep that finds the cheapest fleet meeting an SLO target
 //!   (`commsim fleet` on the CLI).
+//! - [`autoscale`] — model-clock elasticity over the fleet: an
+//!   [`autoscale::AutoscalePolicy`] (target queue depth and/or rolling
+//!   SLO percentile over a sliding window) drives a controller that
+//!   spawns replicas with α–β-priced weight cold-starts, drains victims
+//!   chosen by warm prefix-cache value, and live-migrates a hot
+//!   replica's sequences (resident KV shipped via `NetModel::p2p`) —
+//!   every elasticity action is paid for in model time.
 //! - [`faults`] — seeded fault injection over the fleet: replica churn
 //!   (MTBF/MTTR exponential processes and scripted outages; failed
 //!   replicas drop their queues, retried requests lose cache warmth,
@@ -102,6 +109,7 @@
 //! serving path is pure Rust.
 
 pub mod analysis;
+pub mod autoscale;
 pub mod cluster;
 pub mod comm;
 pub mod engine;

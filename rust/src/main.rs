@@ -18,6 +18,7 @@
 
 use std::collections::HashMap;
 
+use commsim::autoscale::AutoscalePolicy;
 use commsim::comm::Stage;
 use commsim::faults::FaultSpec;
 use commsim::fleet::{self, FleetSpec, RouterPolicy, SloTarget};
@@ -61,6 +62,12 @@ COMMANDS:
             --prefix-cache-mb N (per-replica prefix-cache budget; default 64)
             --slo-e2e-p95 S (report the cheapest fleet meeting E2E p95 <= S)
             --gpus-per-node N (fleet node grid; prices KV handoffs)
+            elastic autoscaling (--autoscale switches to a static-vs-elastic
+            comparison: cold-started scale-ups, warm-aware drains and live
+            KV migration, all priced on the model clock):
+            --autoscale Q (scale to hold mean queue depth near Q)
+            --min-replicas N (elastic floor; the ceiling is --replicas-max)
+            --scale-window S (controller sliding window, model seconds)
             fault injection (any of these switches to a per-policy churn
             table over a fixed fleet of --replicas-max replicas):
             --mtbf S (mean model-seconds between failures, per replica)
@@ -111,6 +118,9 @@ const FLEET_FLAGS: &[&str] = &[
     "prefix_cache_mb",
     "slo_e2e_p95",
     "gpus_per_node",
+    "autoscale",
+    "min_replicas",
+    "scale_window",
     "mtbf",
     "mttr",
     "straggler",
@@ -589,6 +599,101 @@ fn fleet_churn_table(
     Ok(())
 }
 
+/// The elastic mode of `fleet`: every static size in the elastic range
+/// vs one autoscaled fleet on the same seed — elasticity actions
+/// (cold starts, drains, live KV migrations) priced on the model clock.
+#[allow(clippy::too_many_arguments)]
+fn fleet_autoscale_table(
+    base: &commsim::plan::DeploymentPlan,
+    f: &Flags,
+    workload: &WorkloadSpec,
+    seed: u64,
+    gpn: usize,
+    prefix_cache: Option<PrefixCacheConfig>,
+    router: RouterPolicy,
+    max_replicas: usize,
+    slo_e2e: Option<f64>,
+) -> anyhow::Result<()> {
+    let target_q = f.float("autoscale", 4.0)?;
+    anyhow::ensure!(
+        target_q > 0.0 && target_q.is_finite(),
+        "--autoscale wants a positive target queue depth (got {target_q})"
+    );
+    let min = f.num("min_replicas", 1)?;
+    let window = f.float("scale_window", 0.5)?;
+    let mut policy = AutoscalePolicy::target_queue(min, max_replicas, target_q, window);
+    if let Some(slo) = slo_e2e {
+        // The SLO flag both judges goodput and arms the policy's
+        // rolling-percentile scale-up trigger.
+        policy = policy.with_slo_e2e_p95(slo);
+    }
+    let finish = |mut s: FleetSpec| -> anyhow::Result<FleetSpec> {
+        s = s.with_router(router).with_gpus_per_node(gpn)?;
+        if let Some(cache) = prefix_cache {
+            s = s.with_prefix_cache(cache)?;
+        }
+        Ok(s)
+    };
+    let target = SloTarget { e2e_p95_s: slo_e2e, ..SloTarget::default() };
+    println!(
+        "elastic fleet: {} x[{min}..{max_replicas}], seed {seed:#x} — target \
+         queue depth {target_q}, window {window}s{}\n\
+         goodput = error-free requests inside every set SLO target / offered \
+         (no SLO flag: completion rate)\n",
+        base.label(),
+        match slo_e2e {
+            Some(s) => format!(", SLO trigger E2E p95 <= {s}s"),
+            None => String::new(),
+        }
+    );
+    let row = |label: String, s: &fleet::FleetSummary| -> Vec<String> {
+        vec![
+            label,
+            format!("{:.3}", s.goodput(&target)),
+            format!("{:.4}", s.model.e2e.p99_s),
+            format!("{:.3}", s.provisioned_gpu_s),
+            format!("{} ({:.1} ms)", s.cold_starts, s.cold_start_s * 1e3),
+            s.migrations.to_string(),
+            if s.kv_migration_bytes > 0.0 {
+                format!(
+                    "{} ({:.2} ms)",
+                    report::fmt_bytes(s.kv_migration_bytes),
+                    s.kv_migration_s * 1e3
+                )
+            } else {
+                "-".to_string()
+            },
+            format!("{}/{}", s.completed, s.requests),
+        ]
+    };
+    let mut rows = Vec::new();
+    for n in min..=max_replicas {
+        let summary = finish(base.fleet(n)?)?.simulate(workload, seed)?;
+        rows.push(row(format!("static x{n}"), &summary));
+    }
+    let elastic = finish(base.fleet(max_replicas)?.with_autoscale(policy)?)?
+        .simulate(workload, seed)?;
+    rows.push(row(format!("elastic {min}..{max_replicas}"), &elastic));
+    print!(
+        "{}",
+        report::render_table(
+            "static sizes vs the elastic fleet (same seed: paired runs)",
+            &[
+                "Fleet",
+                "goodput",
+                "E2E p99 (s)",
+                "GPU*s provisioned",
+                "cold starts",
+                "migrations",
+                "KV migrated",
+                "served",
+            ],
+            &rows,
+        )
+    );
+    Ok(())
+}
+
 fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 16)?);
     let requests = f.num("requests", 24)?;
@@ -672,6 +777,37 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     // capacity sweep compares fleet shapes, the churn table compares
     // router policies on one fixed fleet, healthy vs faulty, same seed.
     let faults = fleet_faults(f)?;
+
+    // --autoscale switches `fleet` into elastic mode: static fleets at
+    // every size in the elastic range vs one autoscaled fleet, same seed.
+    if f.opt("autoscale").is_some() {
+        anyhow::ensure!(
+            faults.is_none(),
+            "--autoscale and fault injection are separate `fleet` modes — \
+             drop one of them"
+        );
+        return fleet_autoscale_table(
+            &base,
+            f,
+            &workload,
+            seed,
+            gpn,
+            prefix_cache,
+            router,
+            max_replicas,
+            slo_e2e,
+        );
+    }
+    // The policy-shape knobs only mean something under --autoscale (same
+    // no-silent-ignore rule as the prefix knobs above).
+    for flag in ["min_replicas", "scale_window"] {
+        anyhow::ensure!(
+            f.opt(flag).is_none(),
+            "--{} shapes the --autoscale policy; it needs --autoscale Q",
+            flag.replace('_', "-")
+        );
+    }
+
     if !faults.is_none() {
         let policies = match f.opt("router") {
             // An explicit --router narrows the table to that policy.
@@ -876,12 +1012,18 @@ fn cmd_bench_diff(f: &Flags) -> anyhow::Result<()> {
                 .map_err(|e| anyhow::anyhow!("parsing '{path}': {e}"))
         };
         let diff = report::bench_diff(&read(old_dir)?, &read(new_dir)?, tolerance)?;
+        // Wall time is advisory: shown for trend-watching, never gated
+        // on (host clocks are machine- and load-dependent).
+        let wall = match &diff.wall {
+            Some(w) => format!(" [wall {:.2}s -> {:.2}s, advisory]", w.old, w.new),
+            None => String::new(),
+        };
         if diff.is_clean() {
-            println!("  {name}: OK");
+            println!("  {name}: OK{wall}");
             continue;
         }
         println!(
-            "  {name}: {} regressions, {} improvements, {} notes",
+            "  {name}: {} regressions, {} improvements, {} notes{wall}",
             diff.regressions.len(),
             diff.improvements.len(),
             diff.notes.len()
@@ -1117,6 +1259,35 @@ mod tests {
         let f = Flags::parse("fleet", &args(&["--mttr", "0.5"]), FLEET_FLAGS).unwrap();
         let err = fleet_faults(&f).unwrap_err();
         assert!(err.to_string().contains("--mtbf"), "{err}");
+    }
+
+    #[test]
+    fn fleet_autoscale_flags_parse_with_defaults() {
+        let f = Flags::parse(
+            "fleet",
+            &args(&[
+                "--autoscale",
+                "2.5",
+                "--min-replicas",
+                "1",
+                "--scale-window",
+                "0.25",
+                "--replicas-max",
+                "4",
+            ]),
+            FLEET_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(f.float("autoscale", 4.0).unwrap(), 2.5);
+        assert_eq!(f.num("min_replicas", 1).unwrap(), 1);
+        assert_eq!(f.float("scale_window", 0.5).unwrap(), 0.25);
+        assert_eq!(f.num("replicas_max", 3).unwrap(), 4);
+        // Omitted knobs fall back to their documented defaults.
+        let f = Flags::parse("fleet", &args(&["--autoscale", "4"]), FLEET_FLAGS).unwrap();
+        assert_eq!(f.num("min_replicas", 1).unwrap(), 1);
+        assert_eq!(f.float("scale_window", 0.5).unwrap(), 0.5);
+        // The policy the flags assemble validates.
+        AutoscalePolicy::target_queue(1, 4, 2.5, 0.25).validate().unwrap();
     }
 
     #[test]

@@ -68,6 +68,19 @@ pub enum PlanError {
     /// knob; `value` is the offending value, pre-formatted so the variant
     /// stays `Eq`).
     FaultValueInvalid { what: &'static str, value: String },
+    /// Autoscale replica bounds are out of order (need 1 <= min <= max).
+    AutoscaleBoundsInvalid { min: usize, max: usize },
+    /// An autoscale knob is out of its domain (`what` names the knob;
+    /// `value` is the offending value, pre-formatted so the variant
+    /// stays `Eq`).
+    AutoscaleValueInvalid { what: &'static str, value: String },
+    /// The policy's ceiling disagrees with the spec's replica pool: a
+    /// fleet spec lists its *maximum* replicas and the policy's
+    /// `max_replicas` must equal that count.
+    AutoscaleReplicaMismatch { max_replicas: usize, replicas: usize },
+    /// Autoscaling drives colocated serve fleets; elastic disaggregated
+    /// pools (scale-to-zero prefill) are a roadmap follow-on.
+    AutoscaleDisaggUnsupported,
 }
 
 impl fmt::Display for PlanError {
@@ -166,6 +179,25 @@ impl fmt::Display for PlanError {
             PlanError::FaultValueInvalid { what, value } => {
                 write!(f, "fault injection: {what} is invalid ({value})")
             }
+            PlanError::AutoscaleBoundsInvalid { min, max } => write!(
+                f,
+                "autoscale bounds need 1 <= min <= max replicas \
+                 (got min={min}, max={max})"
+            ),
+            PlanError::AutoscaleValueInvalid { what, value } => {
+                write!(f, "autoscale: {what} is invalid ({value})")
+            }
+            PlanError::AutoscaleReplicaMismatch { max_replicas, replicas } => write!(
+                f,
+                "autoscale max_replicas={max_replicas} but the fleet spec \
+                 lists {replicas} replicas — the spec's replica list is the \
+                 maximum pool, so the two must agree"
+            ),
+            PlanError::AutoscaleDisaggUnsupported => write!(
+                f,
+                "autoscaling drives colocated serve fleets only — elastic \
+                 disaggregated prefill/decode pools are not supported yet"
+            ),
         }
     }
 }

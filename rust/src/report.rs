@@ -9,7 +9,9 @@
 //! has no serde): flat string/number fields only. [`parse_bench_json`]
 //! reads those documents back and [`bench_diff`] compares two runs of
 //! one bench, flagging numeric fields that grew past a tolerance — the
-//! CI perf-trajectory gate (`commsim bench-diff`).
+//! CI perf-trajectory gate (`commsim bench-diff`). Each artifact also
+//! carries an advisory `wall_s` stamp (host seconds the bench ran);
+//! wall time is diffed on its own channel and never gates.
 
 use crate::analysis::{InferenceShape, OpCountModel, ParallelLayout, VolumeModel};
 use crate::comm::{CollectiveKind, Stage, TraceSummary};
@@ -231,18 +233,40 @@ fn json_object(fields: &[(String, JsonValue)]) -> String {
     format!("{{{}}}", inner.join(", "))
 }
 
+/// The advisory wall-clock param [`BenchJson::write`] stamps on every
+/// artifact: how many host seconds the bench ran for, measured from
+/// construction to write. Host timing is noisy (machine, load,
+/// codegen), so [`bench_diff`] reports its movement separately
+/// ([`BenchDiff::wall`]) and never fails on it — the gate stays on
+/// modeled numbers only.
+const WALL_FIELD: &str = "wall_s";
+
 /// Machine-readable bench result: scenario parameters plus one flat
 /// object per result row, rendered as stable, diffable JSON.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct BenchJson {
     name: String,
     params: Vec<(String, JsonValue)>,
     rows: Vec<Vec<(String, JsonValue)>>,
+    /// When this document was started; [`Self::write`] turns the
+    /// elapsed span into the advisory [`WALL_FIELD`] param.
+    created: std::time::Instant,
+}
+
+impl Default for BenchJson {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            params: Vec::new(),
+            rows: Vec::new(),
+            created: std::time::Instant::now(),
+        }
+    }
 }
 
 impl BenchJson {
     pub fn new(name: &str) -> Self {
-        Self { name: name.to_string(), params: Vec::new(), rows: Vec::new() }
+        Self { name: name.to_string(), ..Self::default() }
     }
 
     /// Record one scenario parameter (model, Sp, Sd, ...).
@@ -271,8 +295,13 @@ impl BenchJson {
         )
     }
 
-    /// Write the document to `path`.
-    pub fn write(&self, path: &str) -> crate::Result<()> {
+    /// Write the document to `path`, stamping the advisory wall-clock
+    /// param first (elapsed host seconds since construction — see
+    /// [`WALL_FIELD`]). Idempotent: a re-write replaces the stamp.
+    pub fn write(&mut self, path: &str) -> crate::Result<()> {
+        let wall = self.created.elapsed().as_secs_f64();
+        self.params.retain(|(k, _)| k != WALL_FIELD);
+        self.param(WALL_FIELD, wall);
         std::fs::write(path, self.render())
             .map_err(|e| anyhow::anyhow!("writing bench JSON '{path}': {e}"))
     }
@@ -549,9 +578,16 @@ pub struct BenchDiff {
     /// not meaningful for the affected rows. Reported, not failed on —
     /// benches legitimately evolve.
     pub notes: Vec<String>,
+    /// Movement of the advisory `wall_s` param (host seconds the bench
+    /// ran for). Wall clocks are machine- and load-dependent, so this
+    /// is informational only: never a regression, never considered by
+    /// [`Self::is_clean`]. `None` when either run lacks the stamp.
+    pub wall: Option<BenchDelta>,
 }
 
 impl BenchDiff {
+    /// Nothing moved past the tolerance and nothing changed shape.
+    /// Deliberately ignores [`Self::wall`] — wall time is advisory.
     pub fn is_clean(&self) -> bool {
         self.regressions.is_empty() && self.improvements.is_empty() && self.notes.is_empty()
     }
@@ -636,8 +672,19 @@ pub fn bench_diff(old: &BenchJson, new: &BenchJson, tolerance: f64) -> crate::Re
     );
     let mut out = BenchDiff { bench: old.name.clone(), ..Default::default() };
     // Changed params mean the scenarios differ — numbers aren't
-    // comparable, so everything param-side is a note.
+    // comparable, so everything param-side is a note. The one
+    // exception is the writer's advisory wall-clock stamp, which moves
+    // on every run by construction: it gets its own side channel.
     for (key, ov) in &old.params {
+        if key == WALL_FIELD {
+            let nv = new.params.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+            if let (Some(o), Some(n)) = (numeric(ov), nv.and_then(numeric)) {
+                if o.is_finite() && n.is_finite() {
+                    out.wall = Some(BenchDelta { row: None, field: key.clone(), old: o, new: n });
+                }
+            }
+            continue;
+        }
         match new.params.iter().find(|(k, _)| k == key) {
             Some((_, nv)) if nv == ov => {}
             Some((_, nv)) => out.notes.push(format!(
@@ -801,6 +848,45 @@ mod tests {
         let d = bench_diff(&p, &q, 0.05).unwrap();
         assert!(d.regressions.is_empty());
         assert_eq!(d.notes.len(), 1);
+    }
+
+    #[test]
+    fn wall_time_stamp_is_written_once_and_diffs_as_advisory_only() {
+        // write() stamps wall_s; a re-write replaces the stamp instead
+        // of duplicating it.
+        let path = std::env::temp_dir().join("BENCH_commsim_wall_test.json");
+        let path = path.to_str().unwrap();
+        let mut j = BenchJson::new("wall");
+        j.param("model", "8b");
+        j.write(path).unwrap();
+        j.write(path).unwrap();
+        let back = parse_bench_json(&std::fs::read_to_string(path).unwrap()).unwrap();
+        std::fs::remove_file(path).ok();
+        let walls: Vec<_> = back.params().iter().filter(|(k, _)| k == "wall_s").collect();
+        assert_eq!(walls.len(), 1, "{:?}", back.params());
+        assert!(matches!(&walls[0].1, JsonValue::Num(s) if *s >= 0.0), "{:?}", walls[0]);
+
+        // The differ routes wall_s to the advisory channel: a run 10x
+        // slower in wall time is still clean, but the movement is kept.
+        let doc = |wall: Option<f64>| {
+            let mut j = BenchJson::new("w");
+            j.param("model", "8b");
+            if let Some(w) = wall {
+                j.param("wall_s", w);
+            }
+            j.row(&[("modeled_s", JsonValue::from(1.0))]);
+            j
+        };
+        let d = bench_diff(&doc(Some(1.0)), &doc(Some(10.0)), 0.05).unwrap();
+        assert!(d.is_clean(), "{d:?}");
+        let w = d.wall.as_ref().unwrap();
+        assert_eq!((w.old, w.new), (1.0, 10.0));
+        // Stamp appearing (first run after the writer gained it) or
+        // disappearing never dirties the diff.
+        let d = bench_diff(&doc(None), &doc(Some(1.0)), 0.05).unwrap();
+        assert!(d.is_clean() && d.wall.is_none(), "{d:?}");
+        let d = bench_diff(&doc(Some(1.0)), &doc(None), 0.05).unwrap();
+        assert!(d.is_clean() && d.wall.is_none(), "{d:?}");
     }
 
     #[test]

@@ -38,13 +38,40 @@
 
 use crate::server::Request;
 
+// Every derived PRNG stream in the crate is `Rng64::new(seed ^ SALT)`
+// for a documented salt below (the arrival stream is the raw seed —
+// salt 0 — for bitwise compatibility with `server::serve_poisson`).
+// Distinct salts land on unrelated splitmix64 states, so the streams
+// are pairwise independent under one shared seed: toggling any axis
+// (lengths, prefixes, faults, autoscaling) never perturbs another, and
+// A/B comparisons stay paired. `streams_are_pairwise_independent`
+// below guards the invariant.
+
+/// Seed salt of the request-length stream: prompt/decode length draws
+/// in [`WorkloadSpec::generate`] run on `Rng64::new(seed ^
+/// LENGTH_STREAM_SALT)`, independent of the arrival stream — swapping a
+/// length distribution moves no arrival.
+pub const LENGTH_STREAM_SALT: u64 = 0x5EED_FACE_CAFE_F00D;
+
+/// Seed salt of the prefix-group stream: [`PrefixProfile`] group
+/// assignments run on `Rng64::new(seed ^ PREFIX_STREAM_SALT)` — adding
+/// a prefix profile moves no arrival and resizes no prompt.
+pub const PREFIX_STREAM_SALT: u64 = 0x00DE_FACE_0F_C0FFEE;
+
 /// Seed salt of the fault-injection stream ([`crate::faults`]): churn
 /// failure/repair draws run on `Rng64::new(seed ^ FAULT_STREAM_SALT ^
 /// mix(replica))`, a fourth independent stream next to the arrival,
-/// length, and prefix-group streams below — so enabling faults never
+/// length, and prefix-group streams — so enabling faults never
 /// perturbs when requests arrive, how long they are, or which prefix
 /// group they join (fault A/B comparisons stay paired).
 pub const FAULT_STREAM_SALT: u64 = 0xFA17_FA17_DEAD_BEEF;
+
+/// Seed salt of the autoscale-controller stream ([`crate::autoscale`]):
+/// scale-check tick jitter runs on `Rng64::new(seed ^
+/// AUTOSCALE_STREAM_SALT)`, a fifth independent stream — so attaching
+/// an autoscale policy never perturbs arrivals, lengths, prefix
+/// groups, or fault draws (elastic-vs-static comparisons stay paired).
+pub const AUTOSCALE_STREAM_SALT: u64 = 0xE1A5_71C5_CA1E_D0D5;
 
 /// SplitMix64 — the one-shot seed scramble (a bijection, so distinct
 /// seeds stay distinct and every seed lands on a well-mixed state).
@@ -380,8 +407,8 @@ impl WorkloadSpec {
     pub fn generate(&self, seed: u64) -> crate::Result<Vec<TimedRequest>> {
         self.validate()?;
         let offsets = self.arrivals.offsets(self.requests, seed);
-        let mut lengths = Rng64::new(seed ^ 0x5EED_FACE_CAFE_F00D);
-        let mut groups = Rng64::new(seed ^ 0x00DE_FACE_0F_C0FFEE);
+        let mut lengths = Rng64::new(seed ^ LENGTH_STREAM_SALT);
+        let mut groups = Rng64::new(seed ^ PREFIX_STREAM_SALT);
         Ok(offsets
             .into_iter()
             .enumerate()
@@ -430,6 +457,42 @@ mod tests {
         for _ in 0..1000 {
             let u = z.next_f64();
             assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    /// Every salted stream (arrival = salt 0, lengths, prefix groups,
+    /// faults, autoscale jitter) must be pairwise independent under one
+    /// shared seed: no two salts may collide, and no two streams may
+    /// replay each other's draws — otherwise toggling one axis would
+    /// silently perturb another and A/B comparisons would unpair.
+    #[test]
+    fn streams_are_pairwise_independent() {
+        let salts: [(&str, u64); 5] = [
+            ("arrival", 0),
+            ("length", LENGTH_STREAM_SALT),
+            ("prefix", PREFIX_STREAM_SALT),
+            ("fault", FAULT_STREAM_SALT),
+            ("autoscale", AUTOSCALE_STREAM_SALT),
+        ];
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            for (i, &(na, a)) in salts.iter().enumerate() {
+                for &(nb, b) in &salts[i + 1..] {
+                    assert_ne!(a, b, "salts {na}/{nb} collide");
+                    let mut ra = Rng64::new(seed ^ a);
+                    let mut rb = Rng64::new(seed ^ b);
+                    let sa: Vec<u64> = (0..16).map(|_| ra.next_u64()).collect();
+                    let sb: Vec<u64> = (0..16).map(|_| rb.next_u64()).collect();
+                    assert_ne!(sa, sb, "streams {na}/{nb} alias under seed {seed}");
+                    // No lagged replay either: stream b never starts
+                    // somewhere inside stream a's first draws.
+                    let mut long_a = Rng64::new(seed ^ a);
+                    let la: Vec<u64> = (0..64).map(|_| long_a.next_u64()).collect();
+                    assert!(
+                        !la.windows(16).any(|w| w == sb.as_slice()),
+                        "stream {nb} replays a window of {na} under seed {seed}"
+                    );
+                }
+            }
         }
     }
 

@@ -1,0 +1,192 @@
+//! Elastic-fleet integration — the migration contract's acceptance
+//! suite. Live KV migration claims the moved sequence is *transparent*:
+//! the remaining decode stream is bitwise-identical to the unmigrated
+//! run (same tokens, same priced per-step latencies), and the shipped
+//! bytes reconcile exactly with `(Sp + g − 1) · kv_bytes_per_token` at
+//! the migration tick. Both halves are checked here: once at the
+//! session level (the mechanism), once through the fleet DES (the
+//! accounting).
+
+use commsim::autoscale::AutoscalePolicy;
+use commsim::engine::{SequenceInput, StepKind};
+use commsim::fleet::RouterPolicy;
+use commsim::plan::Deployment;
+use commsim::workload::{ArrivalProcess, LengthDist, WorkloadSpec};
+
+/// (a) Session-level replay of `migrate_out`'s contract: cut a sequence
+/// after `g` tokens, restore it on a fresh engine as a 1-token prompt
+/// (the last sampled token) over `Sp + g − 1` cached-KV tokens, and the
+/// rest of the run is bitwise-identical to never migrating — token
+/// values agree, and every post-intake decode step prices to the exact
+/// same `model_latency_s` bits, because the restored decode positions
+/// (hence per-iteration KV lengths) continue the original sequence
+/// exactly. Only the intake prefill (the migration's priced cost) is
+/// new.
+#[test]
+fn migrated_sequence_decode_stream_is_bitwise_identical() {
+    const SP: usize = 8;
+    const SD: usize = 12;
+    let plan =
+        Deployment::builder().model("tiny").tp(2).pp(1).workload(SP, SD).build().unwrap();
+
+    // Reference: one unmigrated sequence; record every token and the
+    // priced latency of the step that emitted it.
+    let mut ref_engine = plan.engine().unwrap();
+    let mut reference = ref_engine.session();
+    reference
+        .admit(SequenceInput { id: 7, prompt: vec![0; SP], max_new_tokens: SD })
+        .unwrap();
+    let mut ref_tokens: Vec<i32> = Vec::new();
+    let mut ref_price: Vec<f64> = Vec::new();
+    while !reference.is_idle() {
+        let out = reference.step().unwrap();
+        let price = out.model_latency_s.expect("structural plan engines are priced");
+        assert!(price > 0.0, "every iteration costs model time");
+        for ev in &out.events {
+            ref_tokens.push(ev.token);
+            ref_price.push(price);
+        }
+    }
+    drop(reference);
+    assert_eq!(ref_tokens.len(), SD, "prefill token + Sd - 1 decode tokens");
+
+    for cut in [1usize, SD / 2, SD - 1] {
+        // Source replica: prefill + (cut − 1) decode iterations, i.e.
+        // exactly `cut` tokens out, then the sequence leaves.
+        let mut src_engine = plan.engine().unwrap();
+        let mut source = src_engine.session();
+        source
+            .admit(SequenceInput { id: 7, prompt: vec![0; SP], max_new_tokens: SD })
+            .unwrap();
+        let mut tokens: Vec<i32> = Vec::new();
+        let mut prices: Vec<f64> = Vec::new();
+        while tokens.len() < cut {
+            let out = source.step().unwrap();
+            let price = out.model_latency_s.unwrap();
+            for ev in &out.events {
+                tokens.push(ev.token);
+                prices.push(price);
+            }
+        }
+        assert_eq!(&tokens[..], &ref_tokens[..cut], "pre-cut stream matches (cut={cut})");
+        // What `migrate_out` ships: the last sampled token plus the
+        // resident context `Sp + g − 1` (everything already written to
+        // the source KV cache except the token about to be decoded).
+        let last = *tokens.last().unwrap();
+        let context = SP + cut - 1;
+        drop(source);
+
+        // Target replica: cached-context intake, remaining budget.
+        let mut dst_engine = plan.engine().unwrap();
+        let mut target = dst_engine.session();
+        target
+            .admit_with_context(
+                SequenceInput { id: 7, prompt: vec![last], max_new_tokens: SD - cut },
+                context,
+            )
+            .unwrap();
+        let mut intake_price = None;
+        while !target.is_idle() {
+            let out = target.step().unwrap();
+            let price = out.model_latency_s.unwrap();
+            if out.kind == StepKind::Prefill {
+                intake_price = Some(price);
+            }
+            for ev in &out.events {
+                tokens.push(ev.token);
+                prices.push(price);
+            }
+        }
+        assert_eq!(tokens, ref_tokens, "full stream matches after restore (cut={cut})");
+        // The intake prefill is the migration's cost — present, priced,
+        // and excluded from the identity below.
+        let intake = intake_price.expect("restore runs an intake prefill");
+        assert!(intake > 0.0, "the migration intake is never free");
+        // Every decode step after the intake reprices to the exact
+        // same bits as the unmigrated run.
+        for i in (cut + 1)..SD {
+            assert_eq!(
+                prices[i].to_bits(),
+                ref_price[i].to_bits(),
+                "decode step for token {i} reprices bitwise (cut={cut})"
+            );
+        }
+    }
+}
+
+/// (b) Fleet-level accounting under forced migration. A 2-replica
+/// colocated fleet with scale-up unreachable (queue target 1e9) and
+/// scale-down blocked (min == max) leaves Migrate as the only possible
+/// decision; `migrate_queue_gap = 1` arms it on the standing
+/// round-robin imbalance (9 requests over 2 replicas). The 3B model at
+/// TP1/PP1 makes every prefill cost hundreds of model-milliseconds
+/// against a ~10 ms tick interval, so ticks land mid-flight and
+/// migrations must fire. Checked: bytes ship once per migrated request
+/// at a whole-token multiple of `kv_bytes_per_token` inside
+/// `[Sp, Sp + Sd − 2]`, land in the migration counters (per-request and
+/// fleet) and never in the disaggregation handoff counters, no request
+/// is lost, and the elastic DES stays a pure function of the seed.
+#[test]
+fn forced_migration_bytes_reconcile_with_kv_per_token() {
+    const SP: usize = 8;
+    const SD: usize = 32;
+    let plan = Deployment::builder().model("3b").tp(1).pp(1).workload(SP, SD).build().unwrap();
+    let kv = plan.arch().kv_bytes_per_token(plan.shape().dtype_bytes);
+    let mut policy = AutoscalePolicy::target_queue(2, 2, 1e9, 0.04);
+    policy.migrate_queue_gap = 1;
+    policy.validate().unwrap();
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(2000.0),
+        prompt: LengthDist::Fixed(SP),
+        decode: LengthDist::Fixed(SD),
+        prefix: None,
+        requests: 9,
+    };
+    let run = || {
+        plan.fleet(2)
+            .unwrap()
+            .with_router(RouterPolicy::RoundRobin)
+            .with_autoscale(policy.clone())
+            .unwrap()
+            .simulate(&workload, 0xE1A5)
+            .unwrap()
+    };
+    let s = run();
+    assert_eq!(s.completed, 9, "migration never loses a request");
+    assert_eq!(s.failed, 0);
+    assert!(s.migrations >= 1, "forced-gap policy must migrate");
+    assert!(s.kv_migration_bytes > 0.0, "migrated KV is accounted");
+    assert!(s.kv_migration_s > 0.0, "migrated KV pays wire time");
+    assert_eq!(s.kv_transfer_bytes, 0.0, "colocated fleet: no disagg handoff bytes");
+    assert_eq!(s.kv_transfer_s, 0.0, "colocated fleet: no disagg handoff time");
+    assert_eq!(s.cold_starts, 0, "scale-up was unreachable");
+
+    // Per-request reconciliation: migration bytes ride the request's
+    // kv_transfer_bytes channel, exactly once per migrated request, at
+    // `(Sp + g − 1) · kv_bytes_per_token` for a cut g in [1, Sd − 1].
+    let shipped: f64 = s.per_request.iter().map(|r| r.kv_transfer_bytes).sum();
+    assert_eq!(shipped, s.kv_migration_bytes, "per-request bytes sum to the fleet counter");
+    let migrated: Vec<_> =
+        s.per_request.iter().filter(|r| r.kv_transfer_bytes > 0.0).collect();
+    assert_eq!(migrated.len(), s.migrations, "one shipment per migrated request");
+    for r in &migrated {
+        let tokens = r.kv_transfer_bytes / kv as f64;
+        assert_eq!(tokens.fract(), 0.0, "whole KV tokens ship (request {})", r.request_id);
+        let t = tokens as usize;
+        assert!(
+            (SP..=SP + SD - 2).contains(&t),
+            "request {} shipped {t} tokens outside [{SP}, {}]",
+            r.request_id,
+            SP + SD - 2
+        );
+        assert!(r.kv_transfer_s > 0.0, "request {} shipped for free", r.request_id);
+    }
+
+    // Same seed, same everything: elasticity does not break the DES's
+    // determinism contract.
+    let b = run();
+    assert_eq!(s.model, b.model, "same seed, same model summary");
+    assert_eq!(s.migrations, b.migrations);
+    assert_eq!(s.kv_migration_bytes, b.kv_migration_bytes);
+    assert_eq!(s.kv_migration_s, b.kv_migration_s);
+}

@@ -492,6 +492,54 @@ fn prop_two_level_allreduce_between_nvlink_and_ib() {
     }
 }
 
+/// Scale-down victim selection: for any fleet of drain candidates, the
+/// victim always carries the minimum outstanding load, and within that
+/// load class it is never the warmest cache while an equally-loaded
+/// strictly colder replica exists — warm prefix caches survive drains.
+#[test]
+fn prop_drain_victim_never_warmest_among_equally_loaded() {
+    use commsim::autoscale::{choose_victim, DrainCandidate};
+    let mut rng = Rng::new(0xD12A1);
+    for case in 0..300 {
+        let n = rng.usize_in(2, 8);
+        let candidates: Vec<DrainCandidate> = (0..n)
+            .map(|replica| DrainCandidate {
+                replica,
+                // Coarse buckets force load ties; warmth varies freely.
+                load: rng.usize_in(0, 3) * 100,
+                warm_bytes: (rng.usize_in(0, 5) * 1000) as f64,
+            })
+            .collect();
+        let victim = choose_victim(&candidates).unwrap();
+        let v = candidates.iter().find(|c| c.replica == victim).unwrap();
+        let min_load = candidates.iter().map(|c| c.load).min().unwrap();
+        assert_eq!(v.load, min_load, "case {case}: victim must be least-loaded");
+        // Nobody in the victim's load class is strictly colder.
+        for c in candidates.iter().filter(|c| c.load == v.load) {
+            assert!(
+                c.warm_bytes >= v.warm_bytes,
+                "case {case}: drained r{victim} (warm {}) over colder r{} (warm {})",
+                v.warm_bytes,
+                c.replica,
+                c.warm_bytes
+            );
+        }
+        // The headline property: the warmest equally-loaded replica is
+        // never the victim while a colder peer exists.
+        let warmest = candidates
+            .iter()
+            .filter(|c| c.load == min_load)
+            .max_by(|a, b| a.warm_bytes.total_cmp(&b.warm_bytes))
+            .unwrap();
+        if candidates
+            .iter()
+            .any(|c| c.load == min_load && c.warm_bytes < warmest.warm_bytes)
+        {
+            assert_ne!(victim, warmest.replica, "case {case}");
+        }
+    }
+}
+
 /// Percentile is monotone in p and bounded by min/max.
 #[test]
 fn prop_percentile_monotone_bounded() {
