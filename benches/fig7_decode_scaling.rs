@@ -163,7 +163,12 @@ fn decode_allreduce_at_batch(batch: usize) -> anyhow::Result<(usize, usize)> {
     {
         let mut session = engine.session();
         for id in 0..batch as u64 {
-            session.admit(SequenceInput { id, prompt: vec![0; 16], max_new_tokens: 8 })?;
+            session.admit(SequenceInput {
+                id,
+                prompt: vec![0; 16].into(),
+                start: 0,
+                max_new_tokens: 8,
+            })?;
         }
         while !session.is_idle() {
             session.step()?;

@@ -1,0 +1,116 @@
+//! Microbenchmark: fleet DES throughput at scale.
+//!
+//! A 100k-request Poisson trace over an 8-replica colocated tiny fleet
+//! exercises the simulator's hot path — the replica-clock index, the
+//! allocation-free routing snapshots, and summary-only tracing — and
+//! reports the wall-clock event rate. Every number in the JSON artifact
+//! is a deterministic modeled quantity (bench-diff gates those); the
+//! wall clock is stamped as the advisory `wall_s` only.
+
+use commsim::fleet::{self, FleetSpec, RouterPolicy, SloTarget};
+use commsim::plan::Deployment;
+use commsim::report::{bench_json_path, BenchJson, JsonValue};
+use commsim::server::SchedulerConfig;
+use commsim::workload::{ArrivalProcess, LengthDist, WorkloadSpec};
+
+const REQUESTS: usize = 100_000;
+const REPLICAS: usize = 8;
+const SEED: u64 = 0xF1EE7;
+
+fn main() -> anyhow::Result<()> {
+    let plan = Deployment::builder().model("tiny").tp(1).pp(1).workload(8, 2).build()?;
+    // An effectively-unbounded queue: the bench measures DES throughput,
+    // and offered load beyond the fleet's service rate must pile up in
+    // queues (stretching makespan deterministically), not overflow into
+    // rejections.
+    let sched = SchedulerConfig { max_queue: REQUESTS, ..SchedulerConfig::default() };
+    let spec = FleetSpec::colocated(&plan, REPLICAS)?
+        .with_scheduler(sched)
+        .with_router(RouterPolicy::LeastOutstandingTokens);
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(20_000.0),
+        prompt: LengthDist::Fixed(8),
+        decode: LengthDist::Fixed(2),
+        prefix: None,
+        requests: REQUESTS,
+    };
+
+    println!(
+        "fleet DES microbenchmark: {REQUESTS} requests over {REPLICAS} colocated tiny \
+         replicas, seed={SEED:#x}\n"
+    );
+    let start = std::time::Instant::now();
+    let s = spec.simulate(&workload, SEED)?;
+    let wall = start.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        s.completed == REQUESTS && s.failed == 0,
+        "the fleet must serve the whole trace ({} completed, {} failed)",
+        s.completed,
+        s.failed
+    );
+    println!(
+        "simulate: {wall:.3} s wall, {} DES events -> {:.0} events/s",
+        s.events,
+        s.events as f64 / wall.max(1e-9)
+    );
+    println!(
+        "model: makespan {:.3} s, TTFT p95 {:.3} ms, E2E p95 {:.3} s, comm {:.3e} B",
+        s.model.makespan_s,
+        s.model.ttft.p95_s * 1e3,
+        s.model.e2e.p95_s,
+        s.comm_bytes
+    );
+
+    // Capacity sweep, threaded vs sequential, over a smaller paired
+    // trace: same candidates, same seed — the outputs are asserted
+    // identical, only the wall clock differs.
+    let sweep_wl = WorkloadSpec { requests: 10_000, ..workload };
+    let sweep_specs = || -> anyhow::Result<Vec<FleetSpec>> {
+        (1..=4)
+            .map(|n| {
+                Ok(FleetSpec::colocated(&plan, n)?
+                    .with_router(RouterPolicy::LeastOutstandingTokens))
+            })
+            .collect()
+    };
+    let target = SloTarget::default();
+    let t0 = std::time::Instant::now();
+    let seq = fleet::capacity_sweep_sequential(sweep_specs()?, &sweep_wl, SEED, target)?;
+    let seq_wall = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let thr = fleet::capacity_sweep(sweep_specs()?, &sweep_wl, SEED, target)?;
+    let thr_wall = t1.elapsed().as_secs_f64();
+    for (a, b) in seq.iter().zip(&thr) {
+        anyhow::ensure!(
+            format!("{a:?}") == format!("{b:?}"),
+            "threaded sweep must match the sequential path bitwise"
+        );
+    }
+    println!(
+        "\ncapacity sweep (4 candidates x 10k requests): sequential {seq_wall:.3} s, \
+         threaded {thr_wall:.3} s ({:.2}x) — outputs bitwise-identical",
+        seq_wall / thr_wall.max(1e-9)
+    );
+
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("fleet_micro");
+        j.param("model", "tiny")
+            .param("requests", REQUESTS)
+            .param("replicas", REPLICAS)
+            .param("router", "least-tokens");
+        // Modeled numbers only: bench-diff gates these rows, so nothing
+        // wall-clock-derived may appear here (wall_s is stamped at the
+        // artifact's top level as advisory metadata).
+        j.row(&[
+            ("makespan_s", JsonValue::from(s.model.makespan_s)),
+            ("ttft_p95_s", JsonValue::from(s.model.ttft.p95_s)),
+            ("tpot_p95_s", JsonValue::from(s.model.tpot.p95_s)),
+            ("e2e_p95_s", JsonValue::from(s.model.e2e.p95_s)),
+            ("comm_bytes", JsonValue::from(s.comm_bytes)),
+            ("events", JsonValue::from(s.events as usize)),
+        ]);
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

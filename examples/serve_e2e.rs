@@ -27,7 +27,10 @@ fn requests(n: u64, sp: usize, vocab: i32, decode_len: usize) -> Vec<Request> {
     (0..n)
         .map(|id| Request {
             id,
-            prompt: (0..sp as i32).map(|i| (id as i32 * 131 + 7 * i) % vocab).collect(),
+            prompt: (0..sp as i32)
+                .map(|i| (id as i32 * 131 + 7 * i) % vocab)
+                .collect::<Vec<i32>>()
+                .into(),
             decode_len,
         })
         .collect()
@@ -80,8 +83,18 @@ fn structural_demo() -> anyhow::Result<()> {
     let mut engine = plan.engine()?;
     {
         let mut session = engine.session();
-        session.admit(SequenceInput { id: 0, prompt: vec![0; 32], max_new_tokens: 4 })?;
-        session.admit(SequenceInput { id: 1, prompt: vec![0; 32], max_new_tokens: 3 })?;
+        session.admit(SequenceInput {
+            id: 0,
+            prompt: vec![0; 32].into(),
+            start: 0,
+            max_new_tokens: 4,
+        })?;
+        session.admit(SequenceInput {
+            id: 1,
+            prompt: vec![0; 32].into(),
+            start: 0,
+            max_new_tokens: 3,
+        })?;
         println!("[stream] iteration-level token events:");
         while !session.is_idle() {
             let out = session.step()?;

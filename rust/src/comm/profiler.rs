@@ -83,6 +83,13 @@ impl CommRecord {
 #[derive(Debug, Default)]
 pub struct TraceSink {
     records: Mutex<Vec<CommRecord>>,
+    /// Summary-only mode: when `Some`, every record folds into this
+    /// running [`TraceSummary`] at record time and the per-record `Vec`
+    /// stays empty — consumers that only ever read [`Self::summary`]
+    /// (the fleet DES) keep O(1) memory over million-record runs.
+    /// Retained mode (`None`, the default) is unchanged and stays the
+    /// path for trace/figure consumers that read [`Self::snapshot`].
+    folded: Mutex<Option<TraceSummary>>,
     enabled: std::sync::atomic::AtomicBool,
     /// Iteration context stamped onto every record: the session step
     /// counter and the active batch size (0 = no context). The coordinator
@@ -101,6 +108,7 @@ impl TraceSink {
     pub fn new() -> Arc<Self> {
         Arc::new(Self {
             records: Mutex::new(Vec::new()),
+            folded: Mutex::new(None),
             enabled: std::sync::atomic::AtomicBool::new(true),
             step: std::sync::atomic::AtomicU64::new(0),
             batch: std::sync::atomic::AtomicUsize::new(0),
@@ -111,6 +119,19 @@ impl TraceSink {
     /// Disable recording (perf runs measure the engine without tracing).
     pub fn set_enabled(&self, on: bool) {
         self.enabled.store(on, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Switch between summary-only and retained tracing. In summary-only
+    /// mode each record is folded into a running [`TraceSummary`] at
+    /// record time via [`TraceSummary::fold`] — the same accumulation
+    /// step [`TraceSummary::from_records`] runs, so [`Self::summary`] is
+    /// bitwise-identical across modes — and the per-record `Vec` is
+    /// never grown ([`Self::snapshot`] stays empty). Switching in either
+    /// direction resets both stores so one summary never mixes streams.
+    pub fn set_summary_only(&self, on: bool) {
+        let mut folded = self.folded.lock().expect("sink poisoned");
+        self.records.lock().expect("sink poisoned").clear();
+        *folded = on.then(TraceSummary::default);
     }
 
     /// Attach the cost model that prices every subsequent record
@@ -143,6 +164,13 @@ impl TraceSink {
             if let Some(pricer) = self.pricer.get() {
                 rec.modeled_s = pricer.price_record(&rec);
             }
+            {
+                let mut folded = self.folded.lock().expect("sink poisoned");
+                if let Some(summary) = folded.as_mut() {
+                    summary.fold(&rec);
+                    return;
+                }
+            }
             self.records.lock().expect("sink poisoned").push(rec);
         }
     }
@@ -156,6 +184,10 @@ impl TraceSink {
     }
 
     pub fn clear(&self) {
+        let mut folded = self.folded.lock().expect("sink poisoned");
+        if let Some(summary) = folded.as_mut() {
+            *summary = TraceSummary::default();
+        }
         self.records.lock().expect("sink poisoned").clear();
     }
 
@@ -165,6 +197,9 @@ impl TraceSink {
     }
 
     pub fn summary(&self) -> TraceSummary {
+        if let Some(summary) = self.folded.lock().expect("sink poisoned").as_ref() {
+            return summary.clone();
+        }
         TraceSummary::from_records(&self.snapshot())
     }
 }
@@ -190,7 +225,7 @@ pub struct OpAggregate {
 }
 
 /// Full aggregation of a trace, with the paper's viewing conventions.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TraceSummary {
     /// Global (all ranks) per-row aggregates.
     pub global: BTreeMap<AggKey, OpAggregate>,
@@ -213,45 +248,51 @@ pub struct TraceSummary {
 
 impl TraceSummary {
     pub fn from_records(records: &[CommRecord]) -> Self {
-        let n_ranks = records.iter().map(|r| r.rank + 1).max().unwrap_or(0);
-        let mut global: BTreeMap<AggKey, OpAggregate> = BTreeMap::new();
-        let mut per_rank: Vec<BTreeMap<AggKey, OpAggregate>> =
-            vec![BTreeMap::new(); n_ranks];
-        let mut per_batch: BTreeMap<usize, BTreeMap<AggKey, OpAggregate>> = BTreeMap::new();
-        let mut step_comm_s: BTreeMap<u64, f64> = BTreeMap::new();
+        let mut out = Self::default();
         for rec in records {
-            let key = AggKey {
-                op: rec.op,
-                stage: rec.stage,
-                shape: rec.shape.clone(),
-            };
-            let add = |map: &mut BTreeMap<AggKey, OpAggregate>| {
-                let agg = map.entry(key.clone()).or_default();
-                agg.count += 1;
-                agg.total_message_bytes += rec.message_bytes();
-                agg.corrected_volume_bytes += rec.corrected_bytes();
-                agg.modeled_time_s += rec.modeled_s;
-            };
-            add(&mut global);
-            add(&mut per_rank[rec.rank]);
-            if let Some(b) = rec.batch {
-                add(per_batch.entry(b).or_default());
-            }
-            if let Some(step) = rec.step {
-                if rec.modeled_s > 0.0 {
-                    // Count each op once: every member of a collective
-                    // records it at the same price, so the d records
-                    // share it; a Send is the transfer's single priced
-                    // record (Recv prices to zero).
-                    let share = match rec.op {
-                        CollectiveKind::Send | CollectiveKind::Recv => rec.modeled_s,
-                        _ => rec.modeled_s / rec.group_size.max(1) as f64,
-                    };
-                    *step_comm_s.entry(step).or_insert(0.0) += share;
-                }
+            out.fold(rec);
+        }
+        out
+    }
+
+    /// Fold one record into the aggregates — the single accumulation step
+    /// shared by [`Self::from_records`] and the sink's summary-only mode
+    /// ([`TraceSink::set_summary_only`]), so the two modes produce
+    /// identical summaries by construction (same additions, same order).
+    pub fn fold(&mut self, rec: &CommRecord) {
+        if self.per_rank.len() <= rec.rank {
+            self.per_rank.resize_with(rec.rank + 1, BTreeMap::new);
+        }
+        let key = AggKey {
+            op: rec.op,
+            stage: rec.stage,
+            shape: rec.shape.clone(),
+        };
+        let add = |map: &mut BTreeMap<AggKey, OpAggregate>| {
+            let agg = map.entry(key.clone()).or_default();
+            agg.count += 1;
+            agg.total_message_bytes += rec.message_bytes();
+            agg.corrected_volume_bytes += rec.corrected_bytes();
+            agg.modeled_time_s += rec.modeled_s;
+        };
+        add(&mut self.global);
+        add(&mut self.per_rank[rec.rank]);
+        if let Some(b) = rec.batch {
+            add(self.per_batch.entry(b).or_default());
+        }
+        if let Some(step) = rec.step {
+            if rec.modeled_s > 0.0 {
+                // Count each op once: every member of a collective
+                // records it at the same price, so the d records
+                // share it; a Send is the transfer's single priced
+                // record (Recv prices to zero).
+                let share = match rec.op {
+                    CollectiveKind::Send | CollectiveKind::Recv => rec.modeled_s,
+                    _ => rec.modeled_s / rec.group_size.max(1) as f64,
+                };
+                *self.step_comm_s.entry(step).or_insert(0.0) += share;
             }
         }
-        Self { global, per_rank, per_batch, step_comm_s }
     }
 
     /// Count for (op, stage) summed over shapes, global across ranks.
@@ -498,6 +539,39 @@ mod tests {
         let bare = TraceSink::new();
         bare.record(rec(CollectiveKind::AllReduce, Stage::Prefill, 0, &[16, 8]));
         assert_eq!(bare.snapshot()[0].modeled_s, 0.0);
+    }
+
+    #[test]
+    fn summary_only_mode_folds_at_record_time_identically() {
+        // The same record stream through a retained sink and a
+        // summary-only sink must summarize identically (shared fold), and
+        // the summary-only sink must retain nothing.
+        let stream = |sink: &TraceSink| {
+            sink.record(rec(CollectiveKind::AllReduce, Stage::Prefill, 0, &[16, 8]));
+            sink.set_iteration(2, 3);
+            for rank in 0..2 {
+                sink.record(rec(CollectiveKind::AllReduce, Stage::Decode, rank, &[3, 8]));
+            }
+            sink.record(rec(CollectiveKind::Send, Stage::Decode, 1, &[1, 8]));
+            sink.clear_iteration();
+            sink.record(rec(CollectiveKind::Gather, Stage::Decode, 2, &[64128]));
+        };
+        let retained = TraceSink::new();
+        stream(&retained);
+        let folded = TraceSink::new();
+        folded.set_summary_only(true);
+        stream(&folded);
+        assert_eq!(retained.summary(), folded.summary());
+        assert_eq!(retained.len(), 5);
+        assert!(folded.is_empty(), "summary-only mode must not retain records");
+        // clear() resets the running summary, not just the record vec.
+        folded.clear();
+        assert_eq!(folded.summary(), TraceSummary::default());
+        // Leaving summary-only mode returns to retained recording.
+        folded.set_summary_only(false);
+        stream(&folded);
+        assert_eq!(folded.len(), 5);
+        assert_eq!(folded.summary(), retained.summary());
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod kv;
 pub mod session;
 pub mod worker;
 
-pub use session::{SequenceInput, Session, StepKind, StepOutcome, TokenEvent};
+pub use session::{PromptTokens, SequenceInput, Session, StepKind, StepOutcome, TokenEvent};
 
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -317,7 +317,8 @@ impl Engine {
         let mut session = Session::new(self);
         session.admit(SequenceInput {
             id: 0,
-            prompt: prompt.to_vec(),
+            prompt: prompt.to_vec().into(),
+            start: 0,
             max_new_tokens: decode_len,
         })?;
         let mut tokens = Vec::with_capacity(decode_len);

@@ -41,11 +41,23 @@ use crate::Result;
 use super::worker::WorkerCmd;
 use super::Engine;
 
+/// Shared, immutable prompt tokens. Prompts flow from workload generation
+/// through routers, pending tables, admission queues, and disaggregated
+/// handoffs; an `Arc` makes every hop a refcount bump instead of a
+/// token-vector copy (`Arc`, not `Rc`, so fleet sweeps can run candidates
+/// on threads).
+pub type PromptTokens = std::sync::Arc<Vec<i32>>;
+
 /// One sequence admitted into a [`Session`].
 #[derive(Debug, Clone)]
 pub struct SequenceInput {
     pub id: SeqId,
-    pub prompt: Vec<i32>,
+    pub prompt: PromptTokens,
+    /// First prompt position this session must prefill: tokens before
+    /// `start` are already resident (a prefix-cache hit), so the engine
+    /// prefills — and prices — only `prompt[start..]` without the caller
+    /// copying the suffix out. 0 for ordinary admissions.
+    pub start: usize,
     /// Total tokens to generate; the first comes out of prefill (the
     /// paper's S_d counting).
     pub max_new_tokens: usize,
@@ -205,7 +217,7 @@ impl<'e> Session<'e> {
     /// start past the cached span. Structural engines only: numeric
     /// backends hold real KV state and cannot fake a warm cache.
     pub fn admit_with_context(&mut self, seq: SequenceInput, cached_tokens: usize) -> Result<()> {
-        if seq.prompt.is_empty() {
+        if seq.prompt.len() <= seq.start {
             anyhow::bail!("empty prompt");
         }
         if seq.max_new_tokens == 0 {
@@ -217,7 +229,7 @@ impl<'e> Session<'e> {
             anyhow::bail!("sequence {} already live in this session", seq.id);
         }
         if let super::EngineMode::Numeric(store) = &self.engine.cfg.mode {
-            if cached_tokens > 0 {
+            if cached_tokens > 0 || seq.start > 0 {
                 anyhow::bail!(
                     "cached-context admission needs a structural engine: numeric \
                      backends hold real KV state and cannot fake a warm cache"
@@ -289,7 +301,10 @@ impl<'e> Session<'e> {
         self.step_index += 1;
         self.engine.steps_issued = self.step_index;
         self.engine.sink.set_iteration(step_index, 1);
-        let prompt_len = seq.prompt.len();
+        // Only the uncached suffix reaches the workers: `start` tokens are
+        // already resident, so length-driven pricing and decode positions
+        // see exactly what a suffix-vector admission would have seen.
+        let prompt_len = seq.prompt.len() - seq.start;
         let start = Instant::now();
         // Reset clears the backend's whole KV state, so it is only safe
         // when no other sequence is mid-decode: with an empty active set it
@@ -300,7 +315,7 @@ impl<'e> Session<'e> {
         if self.active.is_empty() {
             self.engine.broadcast(WorkerCmd::Reset)?;
         }
-        self.engine.broadcast(WorkerCmd::Prefill { tokens: seq.prompt.clone() })?;
+        self.engine.broadcast(WorkerCmd::Prefill { tokens: seq.prompt[seq.start..].to_vec() })?;
         let logits = self.engine.recv_logits()?;
         let latency = start.elapsed();
         let model_latency_s = self
@@ -316,7 +331,7 @@ impl<'e> Session<'e> {
         } else {
             self.active.push(ActiveSeq {
                 id: seq.id,
-                prompt_len: seq.prompt.len(),
+                prompt_len,
                 context,
                 max_new_tokens: seq.max_new_tokens,
                 last_token: token,
@@ -430,7 +445,7 @@ mod tests {
     }
 
     fn seq(id: SeqId, prompt: usize, max_new: usize) -> SequenceInput {
-        SequenceInput { id, prompt: vec![0; prompt], max_new_tokens: max_new }
+        SequenceInput { id, prompt: vec![0; prompt].into(), start: 0, max_new_tokens: max_new }
     }
 
     #[test]
@@ -622,6 +637,36 @@ mod tests {
         let mut engine = structural_engine(1, 1);
         let mut s = engine.session();
         assert!(s.admit_with_context(seq(2, 0, 1), 8).is_err(), "empty prompt");
+    }
+
+    #[test]
+    fn range_admission_prefills_only_the_suffix() {
+        // A replica with 64 prompt tokens cached admits the *full* prompt
+        // with `start: 64` instead of copying the suffix out; pricing and
+        // decode positions must match a suffix-vector admission exactly.
+        let run = |input: SequenceInput| {
+            let mut engine = structural_engine(2, 1);
+            let mut s = engine.session();
+            s.admit_with_context(input, 64).unwrap();
+            let p = s.step().unwrap().model_latency_s.unwrap();
+            let d = s.step().unwrap().model_latency_s.unwrap();
+            (p, d)
+        };
+        let suffix = run(seq(0, 4, 2));
+        let ranged = run(SequenceInput {
+            id: 0,
+            prompt: vec![0; 68].into(),
+            start: 64,
+            max_new_tokens: 2,
+        });
+        assert_eq!(suffix, ranged, "range admission reprices nothing");
+        // A fully-cached prompt leaves nothing to prefill — rejected like
+        // an empty one.
+        let mut engine = structural_engine(1, 1);
+        let mut s = engine.session();
+        let all_cached =
+            SequenceInput { id: 1, prompt: vec![0; 8].into(), start: 8, max_new_tokens: 1 };
+        assert!(s.admit(all_cached).is_err(), "empty suffix");
     }
 
     #[test]

@@ -67,8 +67,8 @@ use crate::perfmodel::Calibration;
 use crate::plan::{DeploymentPlan, PlanError};
 use crate::server::prefix_cache::chain_hashes;
 use crate::server::{
-    ModelRequestTimes, ModelServeSummary, PrefixCache, PrefixCacheConfig, Request,
-    RequestMetrics, SchedulerConfig, ServeSummary,
+    ModelRequestTimes, ModelServeSummary, PrefixCache, PrefixCacheConfig, PromptTokens,
+    Request, RequestMetrics, SchedulerConfig, ServeSummary,
 };
 use crate::workload::WorkloadSpec;
 
@@ -416,6 +416,13 @@ impl FleetSpec {
 
         let mut engines: Vec<Engine> =
             plans.iter().map(|p| p.engine()).collect::<crate::Result<Vec<_>>>()?;
+        // Fleet accounting only ever reads the folded trace summary
+        // (`traced_comm_bytes` below), so fold each `CommRecord` at
+        // record time instead of retaining a per-record Vec that grows
+        // with every priced iteration of every replica.
+        for e in &engines {
+            e.trace().set_summary_only(true);
+        }
 
         let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::with_capacity(timed.len());
         let mut next_seq = 0u64;
@@ -535,6 +542,10 @@ impl FleetSpec {
             .collect();
         let mut kv_total_bytes = 0.0f64;
         let mut kv_total_s = 0.0f64;
+        // DES loop iterations (event deliveries + replica advances): a
+        // deterministic measure of simulation work, and the numerator
+        // the CLI's advisory events/sec rate is computed from.
+        let mut events: u64 = 0;
 
         {
             let mut replicas: Vec<Replica<'_>> = engines
@@ -555,15 +566,16 @@ impl FleetSpec {
             // Cache-affinity needs a per-(replica, request) hit estimate;
             // the other policies route on the plain load snapshot.
             let estimate_hits = self.router.wants_prefix_estimates();
+            // The clock index replaces the per-iteration `min_by` rescan
+            // over all replicas; it is re-synced at every point a
+            // replica's clock or runnability can change. All replicas
+            // start idle, so the index starts empty.
+            let mut clocks = ClockIndex::new(n);
+            let mut scratch = RouteScratch::default();
 
             loop {
                 // Earliest replica with work, by (model clock, index).
-                let busy: Option<(usize, f64)> = replicas
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, r)| r.runnable())
-                    .map(|(i, r)| (i, r.now()))
-                    .min_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+                let busy: Option<(usize, f64)> = clocks.min();
                 // Deliver the next event iff it precedes every pending
                 // iteration; otherwise run the earliest iteration (events
                 // are delivered at iteration boundaries, exactly like the
@@ -574,6 +586,7 @@ impl FleetSpec {
                     (None, Some(_)) => false,
                     (None, None) => break,
                 };
+                events += 1;
                 if deliver {
                     let Reverse(ev) = heap.pop().expect("deliver branch peeked an event");
                     match ev.kind {
@@ -584,23 +597,21 @@ impl FleetSpec {
                                 (true, Some(c)) => Some(chain_hashes(c.block_tokens, &req.prompt)),
                                 _ => None,
                             };
-                            let loads: Vec<ReplicaLoad> = serve_pool
-                                .iter()
-                                .map(|&i| match &chain {
-                                    Some(c) => replicas[i].load_for_chain(c, req.prompt.len()),
-                                    None => replicas[i].load(),
-                                })
-                                .collect();
-                            let live: Vec<bool> =
-                                serve_pool.iter().map(|&i| routable[i]).collect();
+                            scratch.snapshot(&serve_pool, &routable, |i| match &chain {
+                                Some(c) => replicas[i].load_for_chain(c, req.prompt.len()),
+                                None => replicas[i].load(),
+                            });
                             let pick = arrival_router
-                                .route_masked(&loads, &live)
+                                .route_masked(&scratch.loads, &scratch.live)
                                 .map(|slot| serve_pool[slot]);
                             let id = req.id;
                             pending.insert(
                                 id,
                                 Pending {
-                                    request: req.clone(),
+                                    // An `Arc` bump, not a token copy: a
+                                    // fault-injection retry rebuilds the
+                                    // Request from these shared tokens.
+                                    prompt: req.prompt.clone(),
                                     arrival_s: ev.at,
                                     chain,
                                     attempt: 0,
@@ -628,7 +639,9 @@ impl FleetSpec {
                             } else {
                                 req
                             };
-                            if let Err(e) = replicas[pick].submit(sub, ev.at, 0) {
+                            let submitted = replicas[pick].submit(sub, ev.at, 0);
+                            refresh_clock(&mut clocks, &replicas, pick);
+                            if let Err(e) = submitted {
                                 let p = pending.remove(&id).expect("just inserted");
                                 completed.push(FleetRequestMetrics {
                                     request_id: id,
@@ -675,6 +688,8 @@ impl FleetSpec {
                                     id,
                                     ev.at,
                                     &mut replicas,
+                                    &mut clocks,
+                                    &mut scratch,
                                     &serve_pool,
                                     &routable,
                                     &mut arrival_router,
@@ -687,8 +702,10 @@ impl FleetSpec {
                                 continue;
                             }
                             let req =
-                                Request { id, prompt: vec![token], decode_len: remaining };
-                            if let Err(e) = replicas[replica].submit(req, ev.at, context) {
+                                Request { id, prompt: vec![token].into(), decode_len: remaining };
+                            let submitted = replicas[replica].submit(req, ev.at, context);
+                            refresh_clock(&mut clocks, &replicas, replica);
+                            if let Err(e) = submitted {
                                 let p = pending.remove(&id).expect("handoff tracked");
                                 let pf = p.prefill.as_ref().expect("prefill preceded handoff");
                                 completed.push(FleetRequestMetrics {
@@ -754,6 +771,7 @@ impl FleetSpec {
                                     }
                                 }
                                 let lost = replicas[replica].fail(kv_per_token[replica])?;
+                                refresh_clock(&mut clocks, &replicas, replica);
                                 for l in &lost {
                                     let p = pending
                                         .get_mut(&l.id)
@@ -778,6 +796,8 @@ impl FleetSpec {
                                         l.id,
                                         ev.at,
                                         &mut replicas,
+                                        &mut clocks,
+                                        &mut scratch,
                                         &serve_pool,
                                         &routable,
                                         &mut arrival_router,
@@ -818,6 +838,8 @@ impl FleetSpec {
                                         id,
                                         ev.at,
                                         &mut replicas,
+                                        &mut clocks,
+                                        &mut scratch,
                                         &serve_pool,
                                         &routable,
                                         &mut arrival_router,
@@ -967,6 +989,13 @@ impl FleetSpec {
                                         if let Some(id) = pick {
                                             if let Some(m) = replicas[hot].migrate_out(id)?
                                             {
+                                                // The source may have gone
+                                                // idle when its flight left.
+                                                refresh_clock(
+                                                    &mut clocks,
+                                                    &replicas,
+                                                    hot,
+                                                );
                                                 // Resident KV below the
                                                 // re-prefilled token ships
                                                 // through the same α–β p2p
@@ -1030,6 +1059,8 @@ impl FleetSpec {
                                             id,
                                             ev.at,
                                             &mut replicas,
+                                            &mut clocks,
+                                            &mut scratch,
                                             &serve_pool,
                                             &routable,
                                             &mut arrival_router,
@@ -1066,6 +1097,8 @@ impl FleetSpec {
                                     id,
                                     ev.at,
                                     &mut replicas,
+                                    &mut clocks,
+                                    &mut scratch,
                                     &serve_pool,
                                     &routable,
                                     &mut arrival_router,
@@ -1084,8 +1117,10 @@ impl FleetSpec {
                             // the remaining decode positions (and tokens)
                             // continue the source bitwise.
                             let req =
-                                Request { id, prompt: vec![token], decode_len: remaining };
-                            if let Err(e) = replicas[replica].submit(req, ev.at, context) {
+                                Request { id, prompt: vec![token].into(), decode_len: remaining };
+                            let submitted = replicas[replica].submit(req, ev.at, context);
+                            refresh_clock(&mut clocks, &replicas, replica);
+                            if let Err(e) = submitted {
                                 let p = pending.remove(&id).expect("migration tracked");
                                 let pf =
                                     p.prefill.as_ref().expect("source pass preceded migration");
@@ -1119,7 +1154,9 @@ impl FleetSpec {
                 }
 
                 let (bi, _) = busy.expect("non-deliver branch has a runnable replica");
-                for d in replicas[bi].advance()? {
+                let done = replicas[bi].advance()?;
+                refresh_clock(&mut clocks, &replicas, bi);
+                for d in done {
                     match roles[bi] {
                         ReplicaRole::Serve => {
                             let p = pending.remove(&d.id).expect("routed request tracked");
@@ -1233,11 +1270,9 @@ impl FleetSpec {
                             // Route the decode replica now, price the KV
                             // migration, and deliver the request to the
                             // decode pool once the wire drains.
-                            let loads: Vec<ReplicaLoad> =
-                                decode_pool.iter().map(|&i| replicas[i].load()).collect();
-                            let live: Vec<bool> =
-                                decode_pool.iter().map(|&i| alive[i]).collect();
-                            let Some(slot) = handoff_router.route_masked(&loads, &live)
+                            scratch.snapshot(&decode_pool, &alive, |i| replicas[i].load());
+                            let Some(slot) =
+                                handoff_router.route_masked(&scratch.loads, &scratch.live)
                             else {
                                 // The whole decode pool is down: the
                                 // prefill work is wasted; the request
@@ -1443,6 +1478,7 @@ impl FleetSpec {
             migrations,
             provisioned_gpu_s,
             comm_bytes,
+            events,
         })
     }
 }
@@ -1491,6 +1527,8 @@ fn route_retry(
     id: u64,
     at: f64,
     replicas: &mut [Replica<'_>],
+    clocks: &mut ClockIndex,
+    scratch: &mut RouteScratch,
     serve_pool: &[usize],
     routable: &[bool],
     router: &mut Router,
@@ -1501,27 +1539,25 @@ fn route_retry(
     disagg: bool,
 ) {
     let Some(p) = pending.get(&id) else { return };
-    let loads: Vec<ReplicaLoad> = serve_pool
-        .iter()
-        .map(|&i| match &p.chain {
-            Some(c) => replicas[i].load_for_chain(c, p.request.prompt.len()),
-            None => replicas[i].load(),
-        })
-        .collect();
-    let live: Vec<bool> = serve_pool.iter().map(|&i| routable[i]).collect();
-    let Some(slot) = router.route_masked(&loads, &live) else {
+    scratch.snapshot(serve_pool, routable, |i| match &p.chain {
+        Some(c) => replicas[i].load_for_chain(c, p.prompt.len()),
+        None => replicas[i].load(),
+    });
+    let Some(slot) = router.route_masked(&scratch.loads, &scratch.live) else {
         stranded.push(id);
         return;
     };
     let pick = serve_pool[slot];
-    let sub = if disagg {
-        Request { id, prompt: p.request.prompt.clone(), decode_len: 1 }
-    } else {
-        p.request.clone()
+    let sub = Request {
+        id,
+        prompt: p.prompt.clone(),
+        decode_len: if disagg { 1 } else { p.decode_len },
     };
     let pm = pending.get_mut(&id).expect("present above");
     pm.replica = pick;
-    match replicas[pick].submit(sub, at, 0) {
+    let submitted = replicas[pick].submit(sub, at, 0);
+    refresh_clock(clocks, replicas, pick);
+    match submitted {
         Ok(()) => {
             stats[pick].assigned += 1;
             stats[pick].max_depth = stats[pick].max_depth.max(replicas[pick].queue_depth());
@@ -1595,9 +1631,10 @@ fn traced_comm_bytes(summary: &TraceSummary, pp: usize) -> f64 {
 
 /// Fleet-level bookkeeping of one in-flight request.
 struct Pending {
-    /// The original request, kept so a fault-injection retry can
-    /// resubmit it verbatim.
-    request: Request,
+    /// The original prompt tokens (an `Arc` bump, shared with every
+    /// attempt's Request), so a fault-injection retry can resubmit the
+    /// request verbatim without the DES cloning token vectors.
+    prompt: PromptTokens,
     /// First arrival time — a retried request anchors queue/E2E here,
     /// not at its resubmission.
     arrival_s: f64,
@@ -1616,6 +1653,106 @@ struct Pending {
     prefill: Option<ReplicaDone>,
     kv_bytes: f64,
     kv_s: f64,
+}
+
+/// Replica model-clock key ordered by [`f64::total_cmp`] — the exact
+/// ordering the DES's old brute-force `min_by` scan used, so the index
+/// reproduces its choices bitwise.
+#[derive(Debug, Clone, Copy)]
+struct ClockKey(f64);
+
+impl PartialEq for ClockKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for ClockKey {}
+
+impl PartialOrd for ClockKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ClockKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Incrementally-maintained index of runnable replicas' model clocks.
+///
+/// The fleet DES needs "earliest runnable replica, ties to the lowest
+/// index" on *every* loop iteration; rescanning all replicas makes each
+/// iteration O(n). This index is updated only at the points where a
+/// replica's clock or runnability can change (submit, advance, fail,
+/// migrate), so the per-iteration delivery choice is `min()` over a
+/// `BTreeSet` — O(log n) maintenance, O(1) reads — and, because the set
+/// is ordered by `(total_cmp clock, index)`, it agrees with the
+/// brute-force scan on every input, NaNs and negative zeros included.
+#[derive(Debug, Default)]
+pub struct ClockIndex {
+    /// Runnable replicas, ordered by (clock, index).
+    set: std::collections::BTreeSet<(ClockKey, usize)>,
+    /// Per-replica mirror of what the set holds (`None`: not runnable),
+    /// so updates can remove the stale entry without a scan.
+    entries: Vec<Option<f64>>,
+}
+
+impl ClockIndex {
+    pub fn new(n: usize) -> Self {
+        Self { set: std::collections::BTreeSet::new(), entries: vec![None; n] }
+    }
+
+    /// Record replica `i`'s state: `Some(clock)` while it has work,
+    /// `None` once it goes idle.
+    pub fn set(&mut self, i: usize, clock: Option<f64>) {
+        if let Some(old) = self.entries[i] {
+            self.set.remove(&(ClockKey(old), i));
+        }
+        self.entries[i] = clock;
+        if let Some(c) = clock {
+            self.set.insert((ClockKey(c), i));
+        }
+    }
+
+    /// Earliest runnable replica and its clock — `(index, clock)`, ties
+    /// on the clock resolving to the lowest index.
+    pub fn min(&self) -> Option<(usize, f64)> {
+        self.set.iter().next().map(|&(k, i)| (i, k.0))
+    }
+}
+
+/// Re-sync one replica's entry in the clock index. Called after every
+/// operation that can change the replica's clock or runnability.
+fn refresh_clock(idx: &mut ClockIndex, replicas: &[Replica<'_>], i: usize) {
+    idx.set(i, replicas[i].runnable().then(|| replicas[i].now()));
+}
+
+/// Reusable routing buffers: the DES routes on every arrival and retry,
+/// and the load/liveness snapshots would otherwise allocate two fresh
+/// vectors per request.
+#[derive(Default)]
+struct RouteScratch {
+    loads: Vec<ReplicaLoad>,
+    live: Vec<bool>,
+}
+
+impl RouteScratch {
+    /// Fill the buffers for `pool`, then route: loads via `load_of`,
+    /// liveness from `routable`.
+    fn snapshot(
+        &mut self,
+        pool: &[usize],
+        routable: &[bool],
+        mut load_of: impl FnMut(usize) -> ReplicaLoad,
+    ) {
+        self.loads.clear();
+        self.loads.extend(pool.iter().map(|&i| load_of(i)));
+        self.live.clear();
+        self.live.extend(pool.iter().map(|&i| routable[i]));
+    }
 }
 
 #[derive(Debug)]
@@ -1817,6 +1954,10 @@ pub struct FleetSummary {
     /// handoffs and autoscale migrations (the fleet-level analogue of
     /// Eq. 1–7 totals).
     pub comm_bytes: f64,
+    /// DES loop iterations executed (event deliveries + replica
+    /// advances): a deterministic measure of simulation work, the
+    /// numerator behind the CLI's advisory events/sec rate.
+    pub events: u64,
 }
 
 impl FleetSummary {
@@ -1885,23 +2026,55 @@ pub struct FleetCandidate {
 }
 
 /// Simulate every candidate fleet against one workload (same seed — the
-/// comparisons are paired).
+/// comparisons are paired), one OS thread per candidate.
+///
+/// Candidate simulations share no mutable state and each is
+/// deterministic per `(spec, workload, seed)`, so running them
+/// concurrently changes nothing observable: results come back in spec
+/// order with every modeled number bitwise-identical to
+/// [`capacity_sweep_sequential`] (a test and a CI byte-diff hold the two
+/// paths to that).
 pub fn capacity_sweep(
     specs: Vec<FleetSpec>,
     workload: &WorkloadSpec,
     seed: u64,
     target: SloTarget,
 ) -> crate::Result<Vec<FleetCandidate>> {
-    specs
-        .into_iter()
-        .map(|spec| {
-            let summary = spec.simulate(workload, seed)?;
-            let meets_slo = summary.failed == 0
-                && summary.completed == summary.requests
-                && target.met_by(&summary.model);
-            Ok(FleetCandidate { spec, summary, meets_slo })
-        })
-        .collect()
+    std::thread::scope(|s| {
+        let handles: Vec<_> = specs
+            .into_iter()
+            .map(|spec| s.spawn(move || sweep_one(spec, workload, seed, target)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep thread panicked"))
+            .collect()
+    })
+}
+
+/// [`capacity_sweep`] on the calling thread. Kept alongside the threaded
+/// path so byte-identity between the two stays checkable (the CLI's
+/// `--sweep sequential` escape hatch routes here).
+pub fn capacity_sweep_sequential(
+    specs: Vec<FleetSpec>,
+    workload: &WorkloadSpec,
+    seed: u64,
+    target: SloTarget,
+) -> crate::Result<Vec<FleetCandidate>> {
+    specs.into_iter().map(|spec| sweep_one(spec, workload, seed, target)).collect()
+}
+
+fn sweep_one(
+    spec: FleetSpec,
+    workload: &WorkloadSpec,
+    seed: u64,
+    target: SloTarget,
+) -> crate::Result<FleetCandidate> {
+    let summary = spec.simulate(workload, seed)?;
+    let meets_slo = summary.failed == 0
+        && summary.completed == summary.requests
+        && target.met_by(&summary.model);
+    Ok(FleetCandidate { spec, summary, meets_slo })
 }
 
 /// The cheapest (fewest GPUs) candidate meeting its SLO, if any; ties
@@ -2231,5 +2404,71 @@ mod tests {
         assert_eq!(s.model, t.model);
         assert_eq!(s.cold_starts, t.cold_starts);
         assert_eq!(s.provisioned_gpu_s, t.provisioned_gpu_s);
+    }
+
+    #[test]
+    fn clock_index_min_matches_the_brute_force_scan() {
+        // Drive the index with a deterministic pseudo-random update
+        // stream (splitmix64) and check `min()` against a rescan of the
+        // mirror after every step — including ties, +0.0/-0.0, and
+        // re-idling entries.
+        let mut x = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let n = 9;
+        let mut idx = ClockIndex::new(n);
+        let mut mirror: Vec<Option<f64>> = vec![None; n];
+        for _ in 0..4000 {
+            let i = (next() % n as u64) as usize;
+            let clock = match next() % 4 {
+                0 => None,
+                1 => Some(0.0 * if next() % 2 == 0 { 1.0 } else { -1.0 }),
+                // Coarse quantization to force plenty of exact ties.
+                _ => Some((next() % 16) as f64 * 0.125),
+            };
+            idx.set(i, clock);
+            mirror[i] = clock;
+            let brute = mirror
+                .iter()
+                .enumerate()
+                .filter_map(|(j, c)| c.map(|c| (j, c)))
+                .min_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+            let got = idx.min();
+            assert_eq!(
+                got.map(|(j, c)| (j, c.to_bits())),
+                brute.map(|(j, c)| (j, c.to_bits())),
+                "index diverged from the brute-force scan"
+            );
+        }
+    }
+
+    #[test]
+    fn threaded_capacity_sweep_matches_sequential_bitwise() {
+        let specs = || {
+            vec![
+                FleetSpec::colocated(&tiny_plan(2, 1), 1).unwrap(),
+                FleetSpec::colocated(&tiny_plan(2, 1), 2)
+                    .unwrap()
+                    .with_router(RouterPolicy::LeastOutstandingTokens),
+                FleetSpec::disaggregated(&tiny_plan(2, 1), 1, &tiny_plan(1, 2), 1).unwrap(),
+            ]
+        };
+        let wl = workload(10, 1500.0);
+        let target = SloTarget { e2e_p95_s: Some(10.0), ..Default::default() };
+        let seq = capacity_sweep_sequential(specs(), &wl, 7, target).unwrap();
+        let thr = capacity_sweep(specs(), &wl, 7, target).unwrap();
+        assert_eq!(seq.len(), thr.len());
+        for (a, b) in seq.iter().zip(&thr) {
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "threaded sweep must match the sequential path bitwise"
+            );
+        }
     }
 }

@@ -22,6 +22,7 @@ use std::collections::HashMap;
 
 use crate::engine::kv::SeqId;
 use crate::engine::{Session, SequenceInput};
+use crate::server::prefix_cache::chain_hashes;
 use crate::server::{PrefixCache, Request, Scheduler, SchedulerConfig};
 use crate::simtime::CostModel;
 use crate::Result;
@@ -122,6 +123,11 @@ pub(crate) struct Replica<'e> {
     /// Model-time arrival offset and cached-context token count of
     /// submitted-but-not-admitted requests.
     arrivals: HashMap<SeqId, (f64, usize)>,
+    /// Block chain hashes of queued prompts, computed once at submission
+    /// — every admission pass probes (and the eventual admit observes)
+    /// this instead of rehashing the prompt. Only populated with a prefix
+    /// cache attached; entries leave with their request.
+    chains: HashMap<SeqId, Vec<u64>>,
     flights: HashMap<SeqId, Flight>,
     outstanding_tokens: usize,
     tokens_served: usize,
@@ -143,6 +149,7 @@ impl<'e> Replica<'e> {
             prefix,
             cost,
             arrivals: HashMap::new(),
+            chains: HashMap::new(),
             flights: HashMap::new(),
             outstanding_tokens: 0,
             tokens_served: 0,
@@ -215,7 +222,14 @@ impl<'e> Replica<'e> {
         // budget 1) still weighs its whole prompt with the
         // least-outstanding-tokens router.
         let tokens = req.prompt.len() + req.decode_len;
+        let chain = self
+            .prefix
+            .as_ref()
+            .map(|cache| chain_hashes(cache.config().block_tokens, &req.prompt));
         self.scheduler.submit(req)?;
+        if let Some(chain) = chain {
+            self.chains.insert(id, chain);
+        }
         self.arrivals.insert(id, (at_s, context));
         self.outstanding_tokens += tokens;
         Ok(())
@@ -229,10 +243,14 @@ impl<'e> Replica<'e> {
         // Admission (mirror of the serving loop's step 2, with the
         // prefix-cache hint shrinking the KV charge and the prefill).
         loop {
-            // Raw lookup: `admit_next_with_cached` owns the clamp that
-            // keeps at least one token prefilling.
+            // Raw lookup over the chain hashed once at submission:
+            // `admit_next_with_cached` owns the clamp that keeps at least
+            // one token prefilling.
             let cached_hint = match (&self.prefix, self.scheduler.peek()) {
-                (Some(cache), Some(head)) => cache.lookup(&head.prompt),
+                (Some(cache), Some(head)) => match self.chains.get(&head.id) {
+                    Some(chain) => cache.lookup_chain(chain),
+                    None => cache.lookup(&head.prompt),
+                },
                 _ => 0,
             };
             let Some(admitted) = self.scheduler.admit_next_with_cached(cached_hint)? else {
@@ -244,13 +262,20 @@ impl<'e> Replica<'e> {
             let prompt_tokens = req.prompt.len();
             let decode_len = req.decode_len;
             let (arrival_s, context) = self.arrivals.remove(&id).unwrap_or((0.0, 0));
-            let suffix = req.prompt[cached..].to_vec();
-            let input = SequenceInput { id, prompt: suffix, max_new_tokens: decode_len };
+            // Range admission off the shared prompt tokens — no suffix
+            // copy per admission.
+            let input = SequenceInput {
+                id,
+                prompt: req.prompt.clone(),
+                start: cached,
+                max_new_tokens: decode_len,
+            };
             // The cached prefix sits below the request's own context (a
             // disaggregated decode-pool handoff ships `context` tokens;
             // colocated serving has context 0): decode positions start
             // past both.
             if let Err(e) = self.session.admit_with_context(input, context + cached) {
+                self.chains.remove(&id);
                 self.scheduler.finish(id)?;
                 self.outstanding_tokens =
                     self.outstanding_tokens.saturating_sub(prompt_tokens + decode_len);
@@ -275,7 +300,14 @@ impl<'e> Replica<'e> {
                 // Only admitted prompts enter the cache — a rejected
                 // admission computes no KV.
                 let now_s = self.session.model_now().unwrap_or(0.0);
-                cache.observe(&req.prompt, now_s);
+                match self.chains.remove(&id) {
+                    Some(chain) => {
+                        cache.observe_chain(&chain, now_s);
+                    }
+                    None => {
+                        cache.observe(&req.prompt, now_s);
+                    }
+                }
             }
             let (saved_prefill_s, saved_prefill_bytes) = if cached > 0 {
                 (
@@ -401,6 +433,7 @@ impl<'e> Replica<'e> {
             lost.push(LostRequest { id: req.id, wasted_prefill_s: 0.0 });
         }
         self.arrivals.clear();
+        self.chains.clear();
         self.outstanding_tokens = 0;
         if let Some(cache) = self.prefix.take() {
             self.prefix = Some(PrefixCache::new(cache.config(), kv_bytes_per_token));

@@ -130,12 +130,33 @@ impl Router {
     /// successors instead of queueing behind a dead socket.
     pub fn route_masked(&mut self, loads: &[ReplicaLoad], alive: &[bool]) -> Option<usize> {
         assert_eq!(loads.len(), alive.len(), "one alive flag per replica load");
-        let live: Vec<usize> = (0..loads.len()).filter(|&i| alive[i]).collect();
-        if live.is_empty() {
+        // Allocation-free masking (this runs once per routed request):
+        // the policies walk the mask in place instead of densifying the
+        // live pool into temporary vectors. Because the dense copy
+        // enumerated live replicas in ascending index order, "k-th live
+        // index" and "(key, index)-argmin over live entries" reproduce
+        // the old picks exactly.
+        let n_live = alive.iter().filter(|&&a| a).count();
+        if n_live == 0 {
             return None;
         }
-        let masked: Vec<ReplicaLoad> = live.iter().map(|&i| loads[i]).collect();
-        Some(live[self.route(&masked)])
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let k = self.next_rr % n_live;
+                self.next_rr = self.next_rr.wrapping_add(1);
+                (0..loads.len()).filter(|&i| alive[i]).nth(k)
+            }
+            RouterPolicy::LeastOutstandingTokens => {
+                argmin_masked(loads, alive, |l| l.outstanding_tokens as i64)
+            }
+            RouterPolicy::ShortestQueue => {
+                argmin_masked(loads, alive, |l| l.queue_depth as i64)
+            }
+            RouterPolicy::CacheAffinity => argmin_masked(loads, alive, |l| {
+                l.outstanding_tokens as i64
+                    - CACHE_AFFINITY_HIT_WEIGHT * l.prefix_hit_tokens as i64
+            }),
+        }
     }
 }
 
@@ -147,6 +168,20 @@ fn argmin_by(loads: &[ReplicaLoad], key: impl Fn(&ReplicaLoad) -> i64) -> usize 
         .min_by_key(|(i, l)| (key(l), *i))
         .map(|(i, _)| i)
         .expect("non-empty pool")
+}
+
+/// [`argmin_by`] over the live entries only; `None` with none alive.
+fn argmin_masked(
+    loads: &[ReplicaLoad],
+    alive: &[bool],
+    key: impl Fn(&ReplicaLoad) -> i64,
+) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| alive[i])
+        .min_by_key(|(i, l)| (key(l), *i))
+        .map(|(i, _)| i)
 }
 
 #[cfg(test)]

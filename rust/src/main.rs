@@ -62,6 +62,9 @@ COMMANDS:
             --prefix-cache-mb N (per-replica prefix-cache budget; default 64)
             --slo-e2e-p95 S (report the cheapest fleet meeting E2E p95 <= S)
             --gpus-per-node N (fleet node grid; prices KV handoffs)
+            --sweep threaded|sequential (candidate execution; default
+                              threaded — one OS thread per candidate,
+                              bitwise-identical output either way)
             elastic autoscaling (--autoscale switches to a static-vs-elastic
             comparison: cold-started scale-ups, warm-aware drains and live
             KV migration, all priced on the model clock):
@@ -125,6 +128,7 @@ const FLEET_FLAGS: &[&str] = &[
     "mttr",
     "straggler",
     "degrade",
+    "sweep",
 ];
 const BENCH_DIFF_FLAGS: &[&str] = &["old", "new", "tolerance"];
 
@@ -373,7 +377,10 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     let reqs: Vec<Request> = (0..requests as u64)
         .map(|id| Request {
             id,
-            prompt: (0..sp as i32).map(|i| (id as i32 * 31 + i) % vocab).collect(),
+            prompt: (0..sp as i32)
+                .map(|i| (id as i32 * 31 + i) % vocab)
+                .collect::<Vec<i32>>()
+                .into(),
             decode_len,
         })
         .collect();
@@ -715,6 +722,15 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
         None => None,
     };
     let gpn = f.num("gpus_per_node", 4)?;
+    // Candidate execution strategy for the capacity sweep. Threaded and
+    // sequential runs are bitwise-identical (asserted in-tree and
+    // byte-diffed in CI), so the flag only trades wall-clock — the
+    // chosen mode never appears in stdout.
+    let sweep_mode = f.str("sweep", "threaded");
+    anyhow::ensure!(
+        matches!(sweep_mode.as_str(), "threaded" | "sequential"),
+        "--sweep '{sweep_mode}' unknown (threaded|sequential)"
+    );
 
     // Shared-prefix traffic: the profile shapes the workload's prompts
     // (and enables per-replica prefix caches on every candidate fleet).
@@ -786,6 +802,11 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
             "--autoscale and fault injection are separate `fleet` modes — \
              drop one of them"
         );
+        anyhow::ensure!(
+            f.opt("sweep").is_none(),
+            "--sweep picks the capacity sweep's execution; the autoscale \
+             comparison runs its fleets one at a time"
+        );
         return fleet_autoscale_table(
             &base,
             f,
@@ -809,6 +830,11 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     }
 
     if !faults.is_none() {
+        anyhow::ensure!(
+            f.opt("sweep").is_none(),
+            "--sweep picks the capacity sweep's execution; the churn table \
+             runs its fleets one at a time"
+        );
         let policies = match f.opt("router") {
             // An explicit --router narrows the table to that policy.
             Some(_) => vec![router],
@@ -880,7 +906,20 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
         }
     );
     let target = SloTarget { e2e_p95_s: slo_e2e, ..SloTarget::default() };
-    let candidates = fleet::capacity_sweep(specs, &workload, seed, target)?;
+    let sweep_start = std::time::Instant::now();
+    let candidates = if sweep_mode == "sequential" {
+        fleet::capacity_sweep_sequential(specs, &workload, seed, target)?
+    } else {
+        fleet::capacity_sweep(specs, &workload, seed, target)?
+    };
+    let sweep_wall = sweep_start.elapsed().as_secs_f64();
+    let sim_events: u64 = candidates.iter().map(|c| c.summary.events).sum();
+    // Advisory wall-clock rate on stderr only: seeded stdout stays
+    // byte-identical across runs, machines, and --sweep modes.
+    eprintln!(
+        "sweep wall: {sweep_wall:.3} s, {sim_events} DES events ({:.0} events/s)",
+        sim_events as f64 / sweep_wall.max(1e-9)
+    );
 
     let mut rows = Vec::new();
     for c in &candidates {
@@ -1259,6 +1298,15 @@ mod tests {
         let f = Flags::parse("fleet", &args(&["--mttr", "0.5"]), FLEET_FLAGS).unwrap();
         let err = fleet_faults(&f).unwrap_err();
         assert!(err.to_string().contains("--mtbf"), "{err}");
+    }
+
+    #[test]
+    fn fleet_sweep_flag_parses() {
+        let f = Flags::parse("fleet", &args(&["--sweep", "sequential"]), FLEET_FLAGS).unwrap();
+        assert_eq!(f.str("sweep", "threaded"), "sequential");
+        // Default when the flag is omitted.
+        let f = Flags::parse("fleet", &args(&[]), FLEET_FLAGS).unwrap();
+        assert_eq!(f.str("sweep", "threaded"), "threaded");
     }
 
     #[test]

@@ -82,14 +82,31 @@ pub struct LatencyPercentiles {
 impl LatencyPercentiles {
     /// One NaN-filter + sort, three nearest-rank lookups.
     pub fn from_samples(samples: &[f64]) -> Self {
-        let mut v: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+        Self::from_sorted(&sorted_clean(samples))
+    }
+
+    /// p50/p95/p99 straight off an already-sorted, NaN-free buffer — the
+    /// single-sort contract every percentile path shares: each series is
+    /// sorted exactly once and all three ranks read the same buffer.
+    pub fn from_sorted(v: &[f64]) -> Self {
         if v.is_empty() {
             return Self::default();
         }
-        v.sort_by(|a, b| a.total_cmp(b));
+        debug_assert!(
+            v.windows(2).all(|w| w[0] <= w[1]),
+            "from_sorted wants a sorted, NaN-free buffer"
+        );
         let rank = |p: f64| v[nearest_rank(p, v.len())];
         Self { p50_s: rank(50.0), p95_s: rank(95.0), p99_s: rank(99.0) }
     }
+}
+
+/// NaN-filtered, total-order-sorted copy of `samples` — the shared
+/// preprocessing of every percentile path.
+fn sorted_clean(samples: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+    v.sort_by(|a, b| a.total_cmp(b));
+    v
 }
 
 /// Nearest-rank index for percentile `p` over `len` sorted samples.
@@ -181,19 +198,36 @@ fn mean_or_zero(samples: &[f64]) -> f64 {
 /// are ignored, and an empty (or all-NaN) input yields `0.0`.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p));
-    let mut v: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+    let v = sorted_clean(samples);
     if v.is_empty() {
         return 0.0;
     }
-    v.sort_by(|a, b| a.total_cmp(b));
     v[nearest_rank(p, v.len())]
 }
 
 impl ServeSummary {
     pub fn from_metrics(metrics: &[RequestMetrics], wall: Duration) -> Self {
         let wall_s = wall.as_secs_f64();
-        let total_tokens: usize = metrics.iter().map(|m| m.generated_tokens).sum();
-        let failed = metrics.iter().filter(|m| m.error.is_some()).count();
+        // Every scalar total comes out of one pass over the metrics (the
+        // in-order f64 sums are bitwise what the per-field `sum()` chains
+        // computed). The latency series are collected separately because
+        // each one band-filters differently (see `banded_samples`).
+        let mut total_tokens = 0usize;
+        let mut failed = 0usize;
+        let mut cached_prompt_tokens = 0usize;
+        let mut saved_prefill_s = 0.0;
+        let mut saved_prefill_bytes = 0.0;
+        let mut retries = 0usize;
+        let mut wasted_prefill_s = 0.0;
+        for m in metrics {
+            total_tokens += m.generated_tokens;
+            failed += usize::from(m.error.is_some());
+            cached_prompt_tokens += m.cached_prompt_tokens;
+            saved_prefill_s += m.saved_prefill_s;
+            saved_prefill_bytes += m.saved_prefill_bytes;
+            retries += m.retries;
+            wasted_prefill_s += m.wasted_prefill_s;
+        }
         // Latency bands come from requests that actually produced the
         // measured quantity (see `banded_samples`). E2E covers every
         // token-producing request (a mid-decode bail consumed real wall
@@ -215,11 +249,11 @@ impl ServeSummary {
             tpot: LatencyPercentiles::from_samples(&tpots),
             e2e: LatencyPercentiles::from_samples(&e2es),
             e2e_mean_s: mean_or_zero(&e2es),
-            cached_prompt_tokens: metrics.iter().map(|m| m.cached_prompt_tokens).sum(),
-            saved_prefill_s: metrics.iter().map(|m| m.saved_prefill_s).sum(),
-            saved_prefill_bytes: metrics.iter().map(|m| m.saved_prefill_bytes).sum(),
-            retries: metrics.iter().map(|m| m.retries).sum(),
-            wasted_prefill_s: metrics.iter().map(|m| m.wasted_prefill_s).sum(),
+            cached_prompt_tokens,
+            saved_prefill_s,
+            saved_prefill_bytes,
+            retries,
+            wasted_prefill_s,
             model: Self::model_summary(metrics, total_tokens),
         }
     }
@@ -284,6 +318,34 @@ mod tests {
         assert_eq!(percentile(&v, 100.0), 4.0);
         assert_eq!(percentile(&v, 50.0), 3.0); // rank round(0.5*3)=2 -> 3.0
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn summary_percentiles_match_single_call_percentile_bitwise() {
+        // The summary now sorts each latency series exactly once and reads
+        // p50/p95/p99 off the same sorted buffer. That restructuring must be
+        // invisible: every percentile stays bitwise equal to the one-shot
+        // `percentile()` helper over the raw series.
+        let metrics: Vec<RequestMetrics> = (0..37u64)
+            .map(|i| {
+                let x = ((i.wrapping_mul(2654435761) % 97) as f64) * 0.013 + 0.001;
+                m(i, x, x * 0.1, x * 2.0, None)
+            })
+            .collect();
+        let s = ServeSummary::from_metrics(&metrics, Duration::from_secs_f64(1.0));
+        let ttfts: Vec<f64> = metrics.iter().map(|m| m.ttft_s).collect();
+        let tpots: Vec<f64> = metrics.iter().map(|m| m.tpot_s).collect();
+        let e2es: Vec<f64> = metrics.iter().map(|m| m.e2e_s).collect();
+        for (band, series) in [(&s.ttft, &ttfts), (&s.tpot, &tpots), (&s.e2e, &e2es)] {
+            assert_eq!(band.p50_s.to_bits(), percentile(series, 50.0).to_bits());
+            assert_eq!(band.p95_s.to_bits(), percentile(series, 95.0).to_bits());
+            assert_eq!(band.p99_s.to_bits(), percentile(series, 99.0).to_bits());
+        }
+        // from_sorted over a pre-sorted buffer is the same as from_samples.
+        assert_eq!(
+            LatencyPercentiles::from_sorted(&sorted_clean(&ttfts)),
+            LatencyPercentiles::from_samples(&ttfts)
+        );
     }
 
     #[test]

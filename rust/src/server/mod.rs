@@ -25,7 +25,7 @@ pub use metrics::{
     ServeSummary,
 };
 pub use prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheStats};
-pub use scheduler::{Request, Scheduler, SchedulerConfig};
+pub use scheduler::{PromptTokens, Request, Scheduler, SchedulerConfig};
 
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -242,9 +242,14 @@ impl Server {
                 let cached = admitted.cached_tokens;
                 let id = req.id;
                 let prompt_tokens = req.prompt.len();
-                let suffix = req.prompt[cached..].to_vec();
-                let input =
-                    SequenceInput { id, prompt: suffix, max_new_tokens: req.decode_len };
+                // Range admission: the session prefills `prompt[cached..]`
+                // off the shared tokens — no suffix copy per admission.
+                let input = SequenceInput {
+                    id,
+                    prompt: req.prompt.clone(),
+                    start: cached,
+                    max_new_tokens: req.decode_len,
+                };
                 if let Err(e) = session.admit_with_context(input, cached) {
                     // The scheduler admitted something the session rejects
                     // (e.g. a wrong-length prompt for numeric artifacts):
@@ -454,7 +459,9 @@ mod tests {
     }
 
     fn reqs(n: u64, prompt: usize, decode: usize) -> Vec<Request> {
-        (0..n).map(|id| Request { id, prompt: vec![0; prompt], decode_len: decode }).collect()
+        (0..n)
+            .map(|id| Request { id, prompt: vec![0; prompt].into(), decode_len: decode })
+            .collect()
     }
 
     #[test]
@@ -584,7 +591,7 @@ mod tests {
         // Two requests with an identical 16-token prompt, served one at a
         // time: the second hits the whole prompt (clamped to 15 so one
         // token still prefills).
-        let prompt: Vec<i32> = (0..16).collect();
+        let prompt: PromptTokens = (0..16).collect::<Vec<i32>>().into();
         let reqs = vec![
             Request { id: 0, prompt: prompt.clone(), decode_len: 4 },
             Request { id: 1, prompt: prompt.clone(), decode_len: 4 },

@@ -193,6 +193,15 @@ impl PrefixCache {
     /// the shared prefix roots.
     pub fn observe(&mut self, prompt: &[i32], now_s: f64) -> usize {
         let chain = self.chain(prompt);
+        self.observe_chain(&chain, now_s)
+    }
+
+    /// [`Self::observe`] over a precomputed [`chain_hashes`] chain (must
+    /// have been built with this cache's block size) — so an admission
+    /// loop that probed with [`Self::lookup_chain`] never rehashes the
+    /// prompt. Identical effect, tick for tick, to [`Self::observe`] on
+    /// the prompt the chain was built from.
+    pub fn observe_chain(&mut self, chain: &[u64], now_s: f64) -> usize {
         let mut hit_blocks = 0usize;
         for h in &chain {
             if !self.blocks.contains_key(h) {
@@ -333,6 +342,21 @@ mod tests {
         assert_eq!(t1, t2, "hit traces are bitwise-identical");
         assert_eq!(s1, s2);
         assert!(s1.hit_tokens > 0, "repeating groups produce hits");
+    }
+
+    #[test]
+    fn observe_chain_matches_observe() {
+        let mk = || {
+            PrefixCache::new(PrefixCacheConfig { block_tokens: 4, capacity_bytes: 512 }, 16)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for i in 0..40u64 {
+            let p = prompt(i % 3, 12, i, (i % 5) as usize);
+            let chain = chain_hashes(4, &p);
+            assert_eq!(a.observe(&p, i as f64), b.observe_chain(&chain, i as f64));
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(a.resident_blocks(), b.resident_blocks());
     }
 
     #[test]

@@ -17,11 +17,13 @@ use std::time::Instant;
 use crate::engine::kv::{KvBlockManager, SeqId};
 use crate::Result;
 
+pub use crate::engine::session::PromptTokens;
+
 /// One queued generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: SeqId,
-    pub prompt: Vec<i32>,
+    pub prompt: PromptTokens,
     pub decode_len: usize,
 }
 
@@ -175,7 +177,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, prompt: usize, decode: usize) -> Request {
-        Request { id, prompt: vec![0; prompt], decode_len: decode }
+        Request { id, prompt: vec![0; prompt].into(), decode_len: decode }
     }
 
     fn cfg(kv_blocks: usize, kv_block_size: usize, max_batch: usize) -> SchedulerConfig {

@@ -430,7 +430,7 @@ impl WorkloadSpec {
                     at_s,
                     prefix_group: group,
                     shared_tokens: shared,
-                    request: Request { id, prompt, decode_len },
+                    request: Request { id, prompt: prompt.into(), decode_len },
                 }
             })
             .collect())

@@ -34,7 +34,7 @@ fn migrated_sequence_decode_stream_is_bitwise_identical() {
     let mut ref_engine = plan.engine().unwrap();
     let mut reference = ref_engine.session();
     reference
-        .admit(SequenceInput { id: 7, prompt: vec![0; SP], max_new_tokens: SD })
+        .admit(SequenceInput { id: 7, prompt: vec![0; SP].into(), start: 0, max_new_tokens: SD })
         .unwrap();
     let mut ref_tokens: Vec<i32> = Vec::new();
     let mut ref_price: Vec<f64> = Vec::new();
@@ -56,7 +56,12 @@ fn migrated_sequence_decode_stream_is_bitwise_identical() {
         let mut src_engine = plan.engine().unwrap();
         let mut source = src_engine.session();
         source
-            .admit(SequenceInput { id: 7, prompt: vec![0; SP], max_new_tokens: SD })
+            .admit(SequenceInput {
+                id: 7,
+                prompt: vec![0; SP].into(),
+                start: 0,
+                max_new_tokens: SD,
+            })
             .unwrap();
         let mut tokens: Vec<i32> = Vec::new();
         let mut prices: Vec<f64> = Vec::new();
@@ -81,7 +86,12 @@ fn migrated_sequence_decode_stream_is_bitwise_identical() {
         let mut target = dst_engine.session();
         target
             .admit_with_context(
-                SequenceInput { id: 7, prompt: vec![last], max_new_tokens: SD - cut },
+                SequenceInput {
+                    id: 7,
+                    prompt: vec![last].into(),
+                    start: 0,
+                    max_new_tokens: SD - cut,
+                },
                 context,
             )
             .unwrap();

@@ -99,7 +99,7 @@ fn single_replica_fleet_reproduces_serve_poisson_bitwise() {
 
     let mut server = plan.server(cfg).unwrap();
     let reqs: Vec<Request> = (0..n as u64)
-        .map(|id| Request { id, prompt: vec![0; 8], decode_len: 6 })
+        .map(|id| Request { id, prompt: vec![0; 8].into(), decode_len: 6 })
         .collect();
     let served = server.serve_poisson(reqs, rate, seed).unwrap();
     assert_eq!(served.completed, n);
@@ -123,6 +123,35 @@ fn single_replica_fleet_reproduces_serve_poisson_bitwise() {
         assert_eq!(s.generated_tokens, f.generated_tokens);
         assert_eq!(s.model, f.model, "request {}", s.request_id);
     }
+}
+
+/// The hot path at scale: 100k requests through a 4-replica fleet, run
+/// twice on one seed, must agree bitwise on everything — the replica-clock
+/// index, the scratch-buffer routing, and summary-only trace folding are
+/// pure optimizations, not approximations. Decode length 1 keeps each
+/// request prefill-only so the debug-profile run stays fast while the DES
+/// still churns through every arrival/advance/route decision.
+#[test]
+fn hundred_thousand_request_double_run_is_bitwise_identical() {
+    let cfg = SchedulerConfig { max_queue: 100_000, ..SchedulerConfig::default() };
+    let workload = fixed_workload(100_000, 20_000.0, 8, 1);
+    let run = || -> FleetSummary {
+        tiny(1, 1)
+            .fleet(4)
+            .unwrap()
+            .with_scheduler(cfg)
+            .with_router(RouterPolicy::LeastOutstandingTokens)
+            .simulate(&workload, 0xBEEF)
+            .unwrap()
+    };
+    let a = run();
+    assert_eq!(a.completed, 100_000, "the fleet serves the whole trace");
+    assert_eq!(a.failed, 0);
+    let b = run();
+    // Debug formatting renders every f64 exactly, so string equality over
+    // the full summary (aggregate percentiles + 100k per-request records)
+    // is a bitwise check.
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "double run diverged");
 }
 
 /// KV-handoff accounting: every disaggregated request ships exactly the

@@ -72,7 +72,7 @@ fn structural_poisson_serving_model_time_is_seed_deterministic() {
             .server(SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() })
             .unwrap();
         let reqs: Vec<Request> = (0..10u64)
-            .map(|id| Request { id, prompt: vec![0; 64], decode_len: 12 })
+            .map(|id| Request { id, prompt: vec![0; 64].into(), decode_len: 12 })
             .collect();
         let summary = server.serve_poisson(reqs, 20.0, seed).unwrap();
         assert_eq!(summary.completed, 10);
@@ -99,7 +99,7 @@ fn unpriced_engines_serve_wall_clock_only() {
         SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 16, max_batch: 2 },
     );
     let summary = server
-        .serve_batch(vec![Request { id: 0, prompt: vec![0; 8], decode_len: 4 }])
+        .serve_batch(vec![Request { id: 0, prompt: vec![0; 8].into(), decode_len: 4 }])
         .unwrap();
     assert_eq!(summary.completed, 1);
     assert!(summary.model.is_none(), "no pricing -> no model-time summary");

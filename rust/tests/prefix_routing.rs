@@ -139,7 +139,7 @@ fn served_hit_ttft_is_the_suffix_prefill_breakdown() {
     )
     .with_prefix_cache(PrefixCacheConfig { block_tokens: 4, capacity_bytes: 1 << 20 })
     .unwrap();
-    let prompt: Vec<i32> = (100..116).collect();
+    let prompt: commsim::server::PromptTokens = (100..116).collect::<Vec<i32>>().into();
     let summary = srv
         .serve_batch(vec![
             Request { id: 0, prompt: prompt.clone(), decode_len: 2 },

@@ -258,7 +258,8 @@ fn prop_scheduler_fcfs_conservation() {
             let prompt = rng.usize_in(1, bs * 2);
             let decode = rng.usize_in(1, bs * 2);
             if prompt + decode <= blocks * bs {
-                s.submit(Request { id, prompt: vec![0; prompt], decode_len: decode }).unwrap();
+                s.submit(Request { id, prompt: vec![0; prompt].into(), decode_len: decode })
+                    .unwrap();
                 submitted.push(id);
             }
         }

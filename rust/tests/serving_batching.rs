@@ -28,7 +28,7 @@ fn server(tp: usize, max_batch: usize) -> Server {
 fn short_requests(lens: &[usize]) -> Vec<Request> {
     lens.iter()
         .enumerate()
-        .map(|(id, &decode_len)| Request { id: id as u64, prompt: vec![0; 8], decode_len })
+        .map(|(id, &decode_len)| Request { id: id as u64, prompt: vec![0; 8].into(), decode_len })
         .collect()
 }
 
@@ -111,7 +111,7 @@ fn single_request_serving_is_byte_identical_to_generate() {
     let mut srv = plan
         .server(SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 8, max_batch: 4 })
         .unwrap();
-    srv.submit(Request { id: 0, prompt: vec![0; 16], decode_len: 8 }).unwrap();
+    srv.submit(Request { id: 0, prompt: vec![0; 16].into(), decode_len: 8 }).unwrap();
     let served = srv.run_to_completion().unwrap();
     assert_eq!(served.len(), 1);
     assert_eq!(served[0].generated_tokens, 8);
@@ -129,8 +129,12 @@ fn token_events_stream_and_slots_refill() {
     let plan = structural_plan(1, 1);
     let mut engine = plan.engine().unwrap();
     let mut session = engine.session();
-    session.admit(SequenceInput { id: 0, prompt: vec![0; 4], max_new_tokens: 4 }).unwrap();
-    session.admit(SequenceInput { id: 1, prompt: vec![0; 4], max_new_tokens: 2 }).unwrap();
+    session
+        .admit(SequenceInput { id: 0, prompt: vec![0; 4].into(), start: 0, max_new_tokens: 4 })
+        .unwrap();
+    session
+        .admit(SequenceInput { id: 1, prompt: vec![0; 4].into(), start: 0, max_new_tokens: 2 })
+        .unwrap();
 
     let mut events = Vec::new();
     let mut decode_batches = Vec::new();
@@ -163,9 +167,9 @@ fn token_events_stream_and_slots_refill() {
     let mut srv = server(1, 2);
     let summary = srv
         .serve_batch(vec![
-            Request { id: 0, prompt: vec![0; 8], decode_len: 20 },
-            Request { id: 1, prompt: vec![0; 8], decode_len: 4 },
-            Request { id: 2, prompt: vec![0; 8], decode_len: 4 },
+            Request { id: 0, prompt: vec![0; 8].into(), decode_len: 20 },
+            Request { id: 1, prompt: vec![0; 8].into(), decode_len: 4 },
+            Request { id: 2, prompt: vec![0; 8].into(), decode_len: 4 },
         ])
         .unwrap();
     assert_eq!(summary.completed, 3);
@@ -188,7 +192,9 @@ fn batch_tagged_volume_matches_analytical_payload() {
     {
         let mut session = engine.session();
         for id in 0..5u64 {
-            session.admit(SequenceInput { id, prompt: vec![0; 8], max_new_tokens: 6 }).unwrap();
+            session
+                .admit(SequenceInput { id, prompt: vec![0; 8].into(), start: 0, max_new_tokens: 6 })
+                .unwrap();
         }
         while !session.is_idle() {
             session.step().unwrap();
