@@ -4,7 +4,9 @@
 //! The paper's motivating figure shows the fraction of execution time spent
 //! in communication per layout. The plan facade's SLO simulator decomposes
 //! every phase into {compute, comm, framework overhead} (perfmodel::slo);
-//! this bench prints the same series.
+//! this bench prints the same series, plus an int8-wire variant of each
+//! layout (Flash-Communication-style compressed collectives) to show how
+//! much of the comm share a quantized wire claws back.
 
 use commsim::model::ModelArch;
 use commsim::plan::Deployment;
@@ -13,40 +15,49 @@ use commsim::report::{bench_json_path, render_table, BenchJson, JsonValue};
 fn main() -> anyhow::Result<()> {
     let arch = ModelArch::llama31_8b();
     let layouts = [(2usize, 1usize), (4, 1), (1, 2), (1, 4), (2, 2)];
+    let wire_variants = [16u32, 8];
 
     let mut rows = Vec::new();
     let mut fractions = Vec::new();
     let mut series = Vec::new();
     for (tp, pp) in layouts {
-        let plan = Deployment::builder()
-            .arch(arch.clone())
-            .tp(tp)
-            .pp(pp)
-            .workload(128, 128)
-            .build()?;
-        let shape = plan.shape();
-        let r = plan.simulate();
-        let f = r.comm_fraction(shape);
-        fractions.push(((tp, pp), f));
-        let steps = (shape.decode_len - 1) as f64;
-        let compute = r.prefill.compute_s + steps * r.decode_step.compute_s;
-        let comm = r.prefill.comm_s + steps * r.decode_step.comm_s;
-        let overhead = r.prefill.overhead_s + steps * r.decode_step.overhead_s;
-        series.push((tp, pp, f, compute, comm, overhead, r.e2e_s));
-        rows.push(vec![
-            plan.layout().label(),
-            format!("{:.1}%", f * 100.0),
-            format!("{:.1} ms", compute * 1e3),
-            format!("{:.1} ms", comm * 1e3),
-            format!("{:.1} ms", overhead * 1e3),
-            format!("{:.3} s", r.e2e_s),
-        ]);
+        for bits in wire_variants {
+            let mut builder = Deployment::builder()
+                .arch(arch.clone())
+                .tp(tp)
+                .pp(pp)
+                .workload(128, 128);
+            if bits != 16 {
+                builder = builder.collective_tuning(bits, 0.0);
+            }
+            let plan = builder.build()?;
+            let shape = plan.shape();
+            let r = plan.simulate();
+            let f = r.comm_fraction(shape);
+            if bits == 16 {
+                fractions.push(((tp, pp), f));
+            }
+            let steps = (shape.decode_len - 1) as f64;
+            let compute = r.prefill.compute_s + steps * r.decode_step.compute_s;
+            let comm = r.prefill.comm_s + steps * r.decode_step.comm_s;
+            let overhead = r.prefill.overhead_s + steps * r.decode_step.overhead_s;
+            series.push((tp, pp, bits, f, compute, comm, overhead, r.e2e_s));
+            rows.push(vec![
+                plan.layout().label(),
+                format!("{bits}"),
+                format!("{:.1}%", f * 100.0),
+                format!("{:.1} ms", compute * 1e3),
+                format!("{:.1} ms", comm * 1e3),
+                format!("{:.1} ms", overhead * 1e3),
+                format!("{:.3} s", r.e2e_s),
+            ]);
+        }
     }
     print!(
         "{}",
         render_table(
             "Fig. 1 — comm/compute breakdown, Llama-3.1-8B, Sp=Sd=128",
-            &["Layout", "Comm fraction", "Compute", "Comm", "Framework", "E2E"],
+            &["Layout", "Wire bits", "Comm fraction", "Compute", "Comm", "Framework", "E2E"],
             &rows,
         )
     );
@@ -54,10 +65,11 @@ fn main() -> anyhow::Result<()> {
     if let Some(path) = bench_json_path()? {
         let mut j = BenchJson::new("fig1_comm_compute_breakdown");
         j.param("model", arch.name.as_str()).param("sp", 128usize).param("sd", 128usize);
-        for (tp, pp, f, compute, comm, overhead, e2e) in &series {
+        for (tp, pp, bits, f, compute, comm, overhead, e2e) in &series {
             j.row(&[
                 ("tp", JsonValue::from(*tp)),
                 ("pp", JsonValue::from(*pp)),
+                ("wire_bits", JsonValue::from(*bits as usize)),
                 ("comm_fraction", JsonValue::from(*f)),
                 ("compute_s", JsonValue::from(*compute)),
                 ("comm_s", JsonValue::from(*comm)),
@@ -80,6 +92,21 @@ fn main() -> anyhow::Result<()> {
     };
     anyhow::ensure!(f(4, 1) > f(1, 4), "TP must be more comm-bound than PP");
     anyhow::ensure!(f(4, 1) > f(2, 1), "comm fraction grows with TP degree");
+    // The compressed wire never costs comm time (quant/dequant priced in)
+    // and never touches compute.
+    for (tp, pp) in layouts {
+        let pick = |bits: u32| {
+            series
+                .iter()
+                .find(|(t, p, b, ..)| *t == tp && *p == pp && *b == bits)
+                .copied()
+                .unwrap()
+        };
+        let fp16 = pick(16);
+        let int8 = pick(8);
+        anyhow::ensure!(int8.5 <= fp16.5, "int8 comm exceeds fp16 at tp{tp}xpp{pp}");
+        anyhow::ensure!(int8.4 == fp16.4, "wire precision moved compute at tp{tp}xpp{pp}");
+    }
     println!("\nFig. 1 shape holds: TP4 comm share {:.1}% > TP2 {:.1}% > PP4 {:.1}%",
         f(4,1) * 100.0, f(2,1) * 100.0, f(1,4) * 100.0);
     Ok(())

@@ -55,6 +55,20 @@ fn main() -> anyhow::Result<()> {
             fmt_bytes(m_bytes as f64),
             if ok { "OK".into() } else { "MISMATCH".into() },
         ]);
+        // Compressed-wire variants are derived, not traced: traces keep the
+        // logical bf16 volume (so the analytic-vs-observed match above is
+        // wire-precision-independent) and the wire factor scales it.
+        for bits in [8u32, 4] {
+            let wire_bytes = a_bytes * bits as f64 / 16.0;
+            rows.push(vec![
+                format!("{} @int{bits} wire", arch.name),
+                "".into(),
+                "".into(),
+                fmt_bytes(wire_bytes),
+                "".into(),
+                "derived".into(),
+            ]);
+        }
     }
     print!(
         "{}",
@@ -81,6 +95,8 @@ fn main() -> anyhow::Result<()> {
                 ("measured_count", JsonValue::from(*m_count)),
                 ("analytic_bytes", JsonValue::from(*a_bytes)),
                 ("measured_bytes", JsonValue::from(*m_bytes)),
+                ("wire_bytes_int8", JsonValue::from(a_bytes * 0.5)),
+                ("wire_bytes_int4", JsonValue::from(a_bytes * 0.25)),
             ]);
         }
         j.write(&path)?;

@@ -5,5 +5,5 @@
 pub mod netmodel;
 pub mod topology;
 
-pub use netmodel::{CollectiveCost, LinkClass, LinkParams, NetModel};
+pub use netmodel::{CollectiveCost, CollectiveTuning, LinkClass, LinkParams, NetModel};
 pub use topology::{Placement, Topology};

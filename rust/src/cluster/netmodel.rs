@@ -66,6 +66,66 @@ impl CollectiveCost {
     }
 }
 
+/// Collective tuning — wire precision and compute–comm overlap for TP
+/// AllReduce/AllGather payloads (Flash Communication, arXiv:2412.04964).
+///
+/// The default (16-bit wire, zero overlap) prices every collective exactly
+/// as the untuned model — bitwise, with no branch taken on the quantized
+/// formulas. Non-default tunings are only constructible through the
+/// validated plan builder
+/// ([`Deployment::builder().collective_tuning(..)`](crate::plan::Deployment::collective_tuning))
+/// or the CLI's `--wire-bits`/`--overlap` flags: the constructor is
+/// crate-private, so no caller can bypass the `PlanError` validation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveTuning {
+    wire_bits: u32,
+    overlap: f64,
+}
+
+impl Default for CollectiveTuning {
+    fn default() -> Self {
+        Self { wire_bits: 16, overlap: 0.0 }
+    }
+}
+
+impl CollectiveTuning {
+    /// Crate-private: validation lives in `plan::Deployment::build` — the
+    /// only producers of non-default tunings are the plan builder and the
+    /// CLI flags layered on it.
+    pub(crate) fn new(wire_bits: u32, overlap: f64) -> Self {
+        debug_assert!(matches!(wire_bits, 4 | 8 | 16), "plan validation owns the gate");
+        debug_assert!((0.0..=1.0).contains(&overlap));
+        Self { wire_bits, overlap }
+    }
+
+    /// Wire precision of AllReduce/AllGather payloads, in bits (16 = the
+    /// untuned fp16/bf16 wire; 8 and 4 quantize).
+    pub fn wire_bits(&self) -> u32 {
+        self.wire_bits
+    }
+
+    /// Fraction of per-stage compute that exposed collective time can hide
+    /// under (0.0 = fully exposed, the eager-mode default).
+    pub fn overlap(&self) -> f64 {
+        self.overlap
+    }
+
+    /// Wire-byte scale `wire_bits / 16` (exactly 1.0 at the default).
+    pub fn wire_factor(&self) -> f64 {
+        f64::from(self.wire_bits) / 16.0
+    }
+
+    /// Whether the quantized collective variants are in play.
+    pub fn quantizes(&self) -> bool {
+        self.wire_bits < 16
+    }
+
+    /// Whether any knob departs from the untuned default.
+    pub fn is_default(&self) -> bool {
+        self.wire_bits == 16 && self.overlap == 0.0
+    }
+}
+
 impl Default for NetModel {
     fn default() -> Self {
         Self {
@@ -169,6 +229,61 @@ impl NetModel {
         CollectiveCost {
             latency_s: algebra::allgather_steps(d) * p.alpha_s,
             transfer_s: CollectiveKind::AllGather.correction_factor(d) * n_out_bytes / p.bus_bw,
+        }
+    }
+
+    /// [`Self::allreduce`] under a [`CollectiveTuning`]: with a quantized
+    /// wire the ring's `2(d−1)` launches collapse to the Flash
+    /// Communication all-to-all + all-gather pair and the transfer term
+    /// carries `wire_bits/16` of the bytes. An untuned wire (16 bits)
+    /// takes the untuned path — bitwise.
+    pub fn allreduce_tuned(
+        &self,
+        n_bytes: f64,
+        d: usize,
+        crosses_nodes: bool,
+        tuning: CollectiveTuning,
+    ) -> CollectiveCost {
+        if !tuning.quantizes() {
+            return self.allreduce(n_bytes, d, crosses_nodes);
+        }
+        if d <= 1 {
+            return CollectiveCost { latency_s: 0.0, transfer_s: 0.0 };
+        }
+        let p = self.group_params(crosses_nodes);
+        CollectiveCost {
+            latency_s: algebra::quantized_allreduce_steps(d) * p.alpha_s,
+            transfer_s: CollectiveKind::AllReduce.correction_factor(d)
+                * n_bytes
+                * tuning.wire_factor()
+                / p.bus_bw,
+        }
+    }
+
+    /// [`Self::allgather`] under a [`CollectiveTuning`]: the two-step
+    /// quantized all-gather pays at most two launches and ships
+    /// `wire_bits/16` of the gathered bytes. Untuned wires take the
+    /// untuned path — bitwise.
+    pub fn allgather_tuned(
+        &self,
+        n_out_bytes: f64,
+        d: usize,
+        crosses_nodes: bool,
+        tuning: CollectiveTuning,
+    ) -> CollectiveCost {
+        if !tuning.quantizes() {
+            return self.allgather(n_out_bytes, d, crosses_nodes);
+        }
+        if d <= 1 {
+            return CollectiveCost { latency_s: 0.0, transfer_s: 0.0 };
+        }
+        let p = self.group_params(crosses_nodes);
+        CollectiveCost {
+            latency_s: algebra::two_step_allgather_steps(d) * p.alpha_s,
+            transfer_s: CollectiveKind::AllGather.correction_factor(d)
+                * n_out_bytes
+                * tuning.wire_factor()
+                / p.bus_bw,
         }
     }
 
@@ -389,6 +504,67 @@ mod tests {
                     nm.collective(op, 8192.0, 4, crosses),
                     "{op:?} crosses={crosses}: factor 1.0 perturbed the cost"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn default_tuning_is_bitwise_the_untuned_collective() {
+        let nm = NetModel::default();
+        let t = CollectiveTuning::default();
+        assert!(t.is_default() && !t.quantizes());
+        assert_eq!(t.wire_factor(), 1.0);
+        for crosses in [false, true] {
+            for bytes in [1.0, 8192.0, 1.0e6, 1.0e9] {
+                for d in [1usize, 2, 4, 8] {
+                    assert_eq!(
+                        nm.allreduce_tuned(bytes, d, crosses, t),
+                        nm.allreduce(bytes, d, crosses)
+                    );
+                    assert_eq!(
+                        nm.allgather_tuned(bytes, d, crosses, t),
+                        nm.allgather(bytes, d, crosses)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_wires_never_undercut_on_neither_term() {
+        // Monotonicity the property suite leans on: fewer wire bits never
+        // increase either α–β term, on both fabrics, at every group size.
+        let nm = NetModel::default();
+        let tunings = [
+            CollectiveTuning::default(),
+            CollectiveTuning::new(8, 0.0),
+            CollectiveTuning::new(4, 0.0),
+        ];
+        for crosses in [false, true] {
+            for bytes in [1.0, 8192.0, 1.0e6, 1.0e9] {
+                for d in [2usize, 3, 4, 8, 16] {
+                    for pair in tunings.windows(2) {
+                        let (hi, lo) = (pair[0], pair[1]);
+                        let ar_hi = nm.allreduce_tuned(bytes, d, crosses, hi);
+                        let ar_lo = nm.allreduce_tuned(bytes, d, crosses, lo);
+                        assert!(
+                            ar_lo.latency_s <= ar_hi.latency_s
+                                && ar_lo.transfer_s <= ar_hi.transfer_s,
+                            "AllReduce {}b -> {}b crosses={crosses} bytes={bytes} d={d}",
+                            hi.wire_bits(),
+                            lo.wire_bits()
+                        );
+                        let ag_hi = nm.allgather_tuned(bytes, d, crosses, hi);
+                        let ag_lo = nm.allgather_tuned(bytes, d, crosses, lo);
+                        assert!(
+                            ag_lo.latency_s <= ag_hi.latency_s
+                                && ag_lo.transfer_s <= ag_hi.transfer_s,
+                            "AllGather {}b -> {}b crosses={crosses} bytes={bytes} d={d}",
+                            hi.wire_bits(),
+                            lo.wire_bits()
+                        );
+                    }
+                }
             }
         }
     }

@@ -122,6 +122,12 @@ pub struct Engine {
     /// (`TraceSummary::step_comm_s`) never conflates two sessions'
     /// iterations into one bucket.
     steps_issued: u64,
+    /// Collective seconds the pricing model hid behind compute over this
+    /// engine's lifetime (the `CollectiveTuning` overlap factor). Exactly
+    /// 0.0 at the default tuning; accumulates across sessions like
+    /// `steps_issued` so serving summaries can report it after the
+    /// session is gone.
+    hidden_comm_s: f64,
 }
 
 impl Engine {
@@ -230,12 +236,18 @@ impl Engine {
             }
         }
 
-        Ok(Self { cfg, cmd_txs, out_rx, sink, joins, steps_issued: 0 })
+        Ok(Self { cfg, cmd_txs, out_rx, sink, joins, steps_issued: 0, hidden_comm_s: 0.0 })
     }
 
     /// The shared communication trace.
     pub fn trace(&self) -> std::sync::Arc<TraceSink> {
         self.sink.clone()
+    }
+
+    /// Collective seconds hidden behind compute by the pricing model's
+    /// overlap tuning over this engine's lifetime (0.0 when untuned).
+    pub fn hidden_comm_s(&self) -> f64 {
+        self.hidden_comm_s
     }
 
     pub fn config(&self) -> &EngineConfig {

@@ -318,10 +318,14 @@ impl<'e> Session<'e> {
         self.engine.broadcast(WorkerCmd::Prefill { tokens: seq.prompt[seq.start..].to_vec() })?;
         let logits = self.engine.recv_logits()?;
         let latency = start.elapsed();
-        let model_latency_s = self
-            .model
-            .as_mut()
-            .map(|m| m.cost.post_prefill(&mut m.timeline, prompt_len));
+        let model_latency_s = match self.model.as_mut() {
+            Some(m) => {
+                let (dt, hidden) = m.cost.post_prefill(&mut m.timeline, prompt_len);
+                self.engine.hidden_comm_s += hidden;
+                Some(dt)
+            }
+            None => None,
+        };
         let token = argmax(&logits) as i32;
         let is_last = seq.max_new_tokens == 1;
         let events = vec![TokenEvent { seq: seq.id, token, index: 0, is_last }];
@@ -368,10 +372,14 @@ impl<'e> Session<'e> {
         self.engine.broadcast(WorkerCmd::Decode { tokens, positions })?;
         let logits = self.engine.recv_logits()?;
         let latency = start.elapsed();
-        let model_latency_s = self
-            .model
-            .as_mut()
-            .map(|m| m.cost.post_decode(&mut m.timeline, &kv_lens));
+        let model_latency_s = match self.model.as_mut() {
+            Some(m) => {
+                let (dt, hidden) = m.cost.post_decode(&mut m.timeline, &kv_lens);
+                self.engine.hidden_comm_s += hidden;
+                Some(dt)
+            }
+            None => None,
+        };
         let next = batched_argmax(&logits, self.engine.cfg.layout.tp, batch);
         let mut events = Vec::with_capacity(batch);
         let mut finished = Vec::new();

@@ -52,7 +52,7 @@ mod router;
 pub use router::{ReplicaLoad, Router, RouterPolicy, CACHE_AFFINITY_HIT_WEIGHT};
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::time::Duration;
 
 use crate::autoscale::{
@@ -523,6 +523,14 @@ impl FleetSpec {
 
         let mut pending: HashMap<u64, Pending> = HashMap::new();
         let mut completed: Vec<FleetRequestMetrics> = Vec::new();
+        // Rolling E2E window behind the controller's SLO signal,
+        // maintained incrementally: each tick folds in only the
+        // completions recorded since the previous tick and retires the
+        // aged-out head, instead of rescanning every completed request
+        // (which made tick cost grow linearly over a long run). Entries
+        // are (finished_at_s, e2e_s) in completion order.
+        let mut e2e_window: VecDeque<(f64, f64)> = VecDeque::new();
+        let mut e2e_scanned = 0usize;
         let mut stats: Vec<ReplicaStats> = self
             .replicas
             .iter()
@@ -883,11 +891,29 @@ impl FleetSpec {
                                 .filter(|&&s| s == ReplState::ColdStarting)
                                 .count();
                             let horizon = ev.at - ctl.policy().window_s;
-                            let recent: Vec<f64> = completed
+                            // ScaleTick times are strictly increasing, so
+                            // the horizon is monotone and the head can
+                            // retire for good. Completion order is not
+                            // finished-at order, though, so mid-queue
+                            // entries that aged out stay put and are
+                            // filtered on read — keeping `recent` bitwise
+                            // what a full rescan of `completed` produced.
+                            for m in &completed[e2e_scanned..] {
+                                if let Some(t) = m.model.as_ref() {
+                                    e2e_window.push_back((t.finished_at_s, t.e2e_s));
+                                }
+                            }
+                            e2e_scanned = completed.len();
+                            while e2e_window
+                                .front()
+                                .is_some_and(|&(f, _)| f < horizon)
+                            {
+                                e2e_window.pop_front();
+                            }
+                            let recent: Vec<f64> = e2e_window
                                 .iter()
-                                .filter_map(|m| m.model.as_ref())
-                                .filter(|t| t.finished_at_s >= horizon)
-                                .map(|t| t.e2e_s)
+                                .filter(|&&(f, _)| f >= horizon)
+                                .map(|&(_, e)| e)
                                 .collect();
                             let decision = ctl.tick(&FleetSnapshot {
                                 now_s: ev.at,
@@ -1451,9 +1477,15 @@ impl FleetSpec {
         let agg = ServeSummary::from_metrics(&wall, Duration::ZERO);
 
         let mut comm_bytes = kv_total_bytes + kv_migration_bytes;
+        let mut wire_saved_bytes = 0.0f64;
+        let mut hidden_comm_s = 0.0f64;
         for (i, e) in engines.iter().enumerate() {
-            comm_bytes +=
-                traced_comm_bytes(&e.trace().summary(), self.replicas[i].plan.layout().pp);
+            let summary = e.trace().summary();
+            comm_bytes += traced_comm_bytes(&summary, self.replicas[i].plan.layout().pp);
+            hidden_comm_s += e.hidden_comm_s();
+            if let Some(cm) = e.cost_model() {
+                wire_saved_bytes += cm.wire_saved_bytes(&summary);
+            }
         }
 
         Ok(FleetSummary {
@@ -1478,6 +1510,8 @@ impl FleetSpec {
             migrations,
             provisioned_gpu_s,
             comm_bytes,
+            wire_saved_bytes,
+            hidden_comm_s,
             events,
         })
     }
@@ -1952,8 +1986,18 @@ pub struct FleetSummary {
     pub provisioned_gpu_s: f64,
     /// Traced corrected collective volume across all replicas plus KV
     /// handoffs and autoscale migrations (the fleet-level analogue of
-    /// Eq. 1–7 totals).
+    /// Eq. 1–7 totals). Traces record logical fp16 payloads, so this is
+    /// independent of the wire precision; the quantized transports'
+    /// saving is `wire_saved_bytes`.
     pub comm_bytes: f64,
+    /// Collective wire bytes the plans' [`crate::cluster::CollectiveTuning`]
+    /// saved across all replicas — logical AllReduce/AllGather volume ×
+    /// (1 − wire factor). Exactly 0.0 at the default 16-bit tuning.
+    pub wire_saved_bytes: f64,
+    /// Modeled collective seconds hidden behind compute by the tuning's
+    /// overlap factor, summed over every replica's engine. Exactly 0.0
+    /// at the default (no-overlap) tuning.
+    pub hidden_comm_s: f64,
     /// DES loop iterations executed (event deliveries + replica
     /// advances): a deterministic measure of simulation work, the
     /// numerator behind the CLI's advisory events/sec rate.

@@ -37,8 +37,10 @@ USAGE: commsim <COMMAND> [--flag value]...
 COMMANDS:
   analyze   Analytical communication volume and op counts (Eq. 1-7)
             --model 3b|8b|13b|tiny  --tp N  --pp N  --sp N  --sd N
+            --wire-bits 16|8|4  --overlap F (collective tuning, see below)
   trace     Run the structural engine; compare trace vs analytical model
             --model ...  --tp N  --pp N  --sp N  --sd N
+            --wire-bits 16|8|4  --overlap F
   slo       Simulate TTFT/TPOT/E2E on the paper's testbed model
             --model ...  --tp N  --pp N  --sp N  --sd N  --gpus-per-node N
   serve     Serve requests through the continuous-batching scheduler
@@ -48,6 +50,7 @@ COMMANDS:
                       --arrival-rate R (Poisson req/s; omit for all-at-once)
                       --seed N (arrival PRNG seed; --arrival-rate only)
             structural runs also report model-time SLOs (priced timeline)
+            --wire-bits 16|8|4  --overlap F (structural only)
   fleet     Capacity-sweep a multi-replica fleet on the model clock
             --model 3b|8b|13b|tiny  --tp N  --pp N  --sp N  --sd N
             --replicas-max N (colocated fleet sizes 1..=N; a disaggregated
@@ -78,6 +81,14 @@ COMMANDS:
             --straggler R:F[,R:F...] (replica R prices collectives F x slower)
             --degrade T0:T1:F[,...] (fleet wire F x slower in [T0, T1) s)
             deterministic: the same --seed reproduces every number bitwise
+            collective tuning (validated by the deployment plan, uniform
+            across analyze/trace/serve/fleet):
+            --wire-bits 16|8|4 (collective wire precision; 16 = untuned
+                              fp16/bf16, 8|4 = Flash-Communication-style
+                              quantized AllReduce/AllGather transports
+                              that pay a quant/dequant compute term)
+            --overlap F (fraction of each stage's compute that can hide
+                              exposed collective time, in [0, 1])
   bench-diff Compare two directories of BENCH_*.json perf artifacts
             --old DIR  --new DIR  --tolerance F (relative, default 0.05)
             exits non-zero when any modeled seconds/bytes grew past the
@@ -86,7 +97,7 @@ COMMANDS:
 ";
 
 /// Flags accepted by `analyze` (normalized: dashes become underscores).
-const ANALYZE_FLAGS: &[&str] = &["model", "tp", "pp", "sp", "sd"];
+const ANALYZE_FLAGS: &[&str] = &["model", "tp", "pp", "sp", "sd", "wire_bits", "overlap"];
 /// `trace` takes the same set as `analyze`.
 const TRACE_FLAGS: &[&str] = ANALYZE_FLAGS;
 const SLO_FLAGS: &[&str] = &["model", "tp", "pp", "sp", "sd", "gpus_per_node"];
@@ -101,6 +112,8 @@ const SERVE_FLAGS: &[&str] = &[
     "concurrency",
     "arrival_rate",
     "seed",
+    "wire_bits",
+    "overlap",
 ];
 const TABLES_FLAGS: &[&str] = &[];
 const FLEET_FLAGS: &[&str] = &[
@@ -129,6 +142,8 @@ const FLEET_FLAGS: &[&str] = &[
     "straggler",
     "degrade",
     "sweep",
+    "wire_bits",
+    "overlap",
 ];
 const BENCH_DIFF_FLAGS: &[&str] = &["old", "new", "tolerance"];
 
@@ -189,6 +204,29 @@ impl Flags {
     }
 }
 
+/// Parse the collective-tuning flags shared by analyze/trace/serve/fleet.
+/// `None` when neither flag was given: the plan builder is then never
+/// touched and every output stays bitwise-identical to a run without the
+/// flags. Domain validation ([16|8|4] bits, overlap in [0, 1]) lives in
+/// the deployment plan — the CLI only parses numbers.
+fn tuning_flags(f: &Flags) -> anyhow::Result<Option<(u32, f64)>> {
+    if f.opt("wire_bits").is_none() && f.opt("overlap").is_none() {
+        return Ok(None);
+    }
+    let bits = f.num("wire_bits", 16)? as u32;
+    let overlap = f.float("overlap", 0.0)?;
+    Ok(Some((bits, overlap)))
+}
+
+/// Header fragment for an explicitly tuned run (empty without the flags,
+/// keeping seeded default stdout byte-identical across builds).
+fn tuning_desc(tuning: Option<(u32, f64)>) -> String {
+    match tuning {
+        Some((bits, ov)) => format!(" wire-bits={bits} overlap={ov}"),
+        None => String::new(),
+    }
+}
+
 /// Nearest allowed flag within edit distance 2, for typo suggestions.
 fn closest_flag<'a>(key: &str, allowed: &[&'a str]) -> Option<&'a str> {
     allowed
@@ -218,17 +256,22 @@ fn edit_distance(a: &str, b: &str) -> usize {
 
 fn cmd_analyze(f: &Flags) -> anyhow::Result<()> {
     let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 128)?);
-    let plan = Deployment::builder()
+    let tuning = tuning_flags(f)?;
+    let mut builder = Deployment::builder()
         .model(&f.str("model", "8b"))
         .tp(f.num("tp", 2)?)
         .pp(f.num("pp", 1)?)
-        .workload(sp, sd)
-        .build()?;
+        .workload(sp, sd);
+    if let Some((bits, ov)) = tuning {
+        builder = builder.collective_tuning(bits, ov);
+    }
+    let plan = builder.build()?;
     let vr = plan.analyze();
     println!(
-        "model={} layout={} Sp={sp} Sd={sd} (BF16)",
+        "model={} layout={} Sp={sp} Sd={sd} (BF16){}",
         plan.arch().name,
-        plan.layout().label()
+        plan.layout().label(),
+        tuning_desc(tuning)
     );
     println!("{}", report::volume_line(plan.arch(), plan.layout(), plan.shape()));
     for stage in [Stage::Prefill, Stage::Decode] {
@@ -248,18 +291,27 @@ fn cmd_analyze(f: &Flags) -> anyhow::Result<()> {
 
 fn cmd_trace(f: &Flags) -> anyhow::Result<()> {
     let (sp, sd) = (f.num("sp", 128)?, f.num("sd", 128)?);
-    let plan = Deployment::builder()
+    let tuning = tuning_flags(f)?;
+    let mut builder = Deployment::builder()
         .model(&f.str("model", "8b"))
         .tp(f.num("tp", 2)?)
         .pp(f.num("pp", 1)?)
-        .workload(sp, sd)
-        .build()?;
+        .workload(sp, sd);
+    if let Some((bits, ov)) = tuning {
+        builder = builder.collective_tuning(bits, ov);
+    }
+    let plan = builder.build()?;
     let summary = plan.trace()?;
     eprintln!("generated {sd} tokens (structural)");
     print!(
         "{}",
         report::comparison_table(
-            &format!("{} {} Sp={sp} Sd={sd}", plan.arch().name, plan.layout().label()),
+            &format!(
+                "{} {} Sp={sp} Sd={sd}{}",
+                plan.arch().name,
+                plan.layout().label(),
+                tuning_desc(tuning)
+            ),
             plan.arch(),
             plan.layout(),
             plan.shape(),
@@ -327,6 +379,14 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     // mode are rejected — a flag must never be silently ignored while
     // numbers come out (same rule as the per-subcommand allow-lists).
     let structural = f.opt("model").is_some();
+    let tuning = tuning_flags(f)?;
+    if !structural && tuning.is_some() {
+        anyhow::bail!(
+            "--wire-bits/--overlap tune the priced model timeline; they need \
+             structural serving (--model ...) — numeric PJRT serving executes \
+             real kernels and has no collective pricing to tune"
+        );
+    }
     if structural && f.opt("artifacts").is_some() {
         anyhow::bail!(
             "--artifacts conflicts with --model: structural serving (--model) \
@@ -349,12 +409,15 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     let (plan, sp) = match f.opt("model") {
         Some(model) => {
             let sp = f.num("sp", 32)?;
-            let plan = Deployment::builder()
+            let mut builder = Deployment::builder()
                 .model(model)
                 .tp(f.num("tp", 2)?)
                 .pp(f.num("pp", 1)?)
-                .workload(sp, decode_len)
-                .build()?;
+                .workload(sp, decode_len);
+            if let Some((bits, ov)) = tuning {
+                builder = builder.collective_tuning(bits, ov);
+            }
+            let plan = builder.build()?;
             (plan, sp)
         }
         None => {
@@ -385,10 +448,13 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         })
         .collect();
     let summary = if arrival_rate > 0.0 {
-        println!("arrivals: Poisson rate={arrival_rate} req/s seed={seed:#x} ({seed})");
+        println!(
+            "arrivals: Poisson rate={arrival_rate} req/s seed={seed:#x} ({seed}){}",
+            tuning_desc(tuning)
+        );
         server.serve_poisson(reqs, arrival_rate, seed)?
     } else {
-        println!("arrivals: all-at-once");
+        println!("arrivals: all-at-once{}", tuning_desc(tuning));
         server.serve_batch(reqs)?
     };
     println!(
@@ -438,6 +504,15 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         println!(
             "  E2E  p50/p99 {:.3}/{:.3} s (mean {:.3} s, includes queueing)",
             mt.e2e.p50_s, mt.e2e.p99_s, mt.e2e_mean_s
+        );
+    }
+    // Only explicitly tuned runs print the tuning accounting: default
+    // stdout stays byte-identical for the seeded CI diffs.
+    if tuning.is_some() {
+        println!(
+            "collective tuning: {} saved on the wire, {:.3} ms of comm hidden by overlap",
+            report::fmt_bytes(summary.wire_saved_bytes),
+            summary.hidden_comm_s * 1e3
         );
     }
     // Batched-decode comm accounting: AllReduce volume per active batch
@@ -769,12 +844,21 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     let prefix_cache = (profile.is_some() || f.opt("prefix_cache_mb").is_some())
         .then_some(PrefixCacheConfig { block_tokens: 16, capacity_bytes: cache_mb << 20 });
 
-    let base = Deployment::builder()
-        .model(&f.str("model", "8b"))
-        .tp(f.num("tp", 2)?)
-        .pp(f.num("pp", 1)?)
-        .workload(sp, sd)
-        .build()?;
+    let tuning = tuning_flags(f)?;
+    let tuned = |mut b: commsim::plan::Deployment| -> commsim::plan::Deployment {
+        if let Some((bits, ov)) = tuning {
+            b = b.collective_tuning(bits, ov);
+        }
+        b
+    };
+    let base = tuned(
+        Deployment::builder()
+            .model(&f.str("model", "8b"))
+            .tp(f.num("tp", 2)?)
+            .pp(f.num("pp", 1)?)
+            .workload(sp, sd),
+    )
+    .build()?;
     let arch = base.arch().clone();
     let workload = WorkloadSpec {
         arrivals: if burst > 1 {
@@ -807,6 +891,9 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
             "--sweep picks the capacity sweep's execution; the autoscale \
              comparison runs its fleets one at a time"
         );
+        if let Some((bits, ov)) = tuning {
+            println!("collective tuning: wire-bits={bits} overlap={ov}");
+        }
         return fleet_autoscale_table(
             &base,
             f,
@@ -846,6 +933,9 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
             ],
         };
         let target = SloTarget { e2e_p95_s: slo_e2e, ..SloTarget::default() };
+        if let Some((bits, ov)) = tuning {
+            println!("collective tuning: wire-bits={bits} overlap={ov}");
+        }
         return fleet_churn_table(
             &base,
             max_replicas,
@@ -876,12 +966,12 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
         specs.push(finish(base.fleet(n)?)?);
     }
     let prefill_plan = if arch.supports_tp(4) {
-        Deployment::builder().arch(arch.clone()).tp(4).pp(1).workload(sp, sd).build()?
+        tuned(Deployment::builder().arch(arch.clone()).tp(4).pp(1).workload(sp, sd)).build()?
     } else {
         base.clone()
     };
     let decode_plan = if arch.supports_pp(4) {
-        Deployment::builder().arch(arch.clone()).tp(1).pp(4).workload(sp, sd).build()?
+        tuned(Deployment::builder().arch(arch.clone()).tp(1).pp(4).workload(sp, sd)).build()?
     } else {
         base.clone()
     };
@@ -889,7 +979,7 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
 
     println!(
         "fleet capacity sweep: model={} workload={requests}x(Sp={sp}, Sd={sd}) \
-         arrivals={} rate={rate}/s seed={seed:#x} router={}{}",
+         arrivals={} rate={rate}/s seed={seed:#x} router={}{}{}",
         arch.name,
         if burst > 1 {
             format!("bursty({burst})")
@@ -903,7 +993,8 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
                 p.label()
             ),
             None => String::new(),
-        }
+        },
+        tuning_desc(tuning)
     );
     let target = SloTarget { e2e_p95_s: slo_e2e, ..SloTarget::default() };
     let sweep_start = std::time::Instant::now();
@@ -974,6 +1065,19 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
             &rows,
         )
     );
+    // Tuned sweeps report what the quantized/overlapped collectives
+    // bought, fleet-wide (absent without the flags — seeded default
+    // stdout stays byte-identical).
+    if tuning.is_some() {
+        let saved: f64 = candidates.iter().map(|c| c.summary.wire_saved_bytes).sum();
+        let hidden: f64 = candidates.iter().map(|c| c.summary.hidden_comm_s).sum();
+        println!(
+            "collective tuning across all candidates: {} saved on the wire, \
+             {:.3} ms of comm hidden by overlap",
+            report::fmt_bytes(saved),
+            hidden * 1e3
+        );
+    }
     match slo_e2e {
         Some(slo) => match fleet::cheapest(&candidates) {
             Some(c) => println!(
@@ -1336,6 +1440,46 @@ mod tests {
         assert_eq!(f.float("scale_window", 0.5).unwrap(), 0.5);
         // The policy the flags assemble validates.
         AutoscalePolicy::target_queue(1, 4, 2.5, 0.25).validate().unwrap();
+    }
+
+    #[test]
+    fn tuning_flags_parse_uniformly_across_subcommands() {
+        for (cmd, flags) in [
+            ("analyze", ANALYZE_FLAGS),
+            ("trace", TRACE_FLAGS),
+            ("serve", SERVE_FLAGS),
+            ("fleet", FLEET_FLAGS),
+        ] {
+            let f = Flags::parse(cmd, &args(&["--wire-bits", "8", "--overlap", "0.5"]), flags)
+                .unwrap();
+            assert_eq!(tuning_flags(&f).unwrap(), Some((8, 0.5)), "{cmd}");
+            // Without the flags: no tuning, so the builder is untouched
+            // and the run stays bitwise-default.
+            let f = Flags::parse(cmd, &args(&[]), flags).unwrap();
+            assert_eq!(tuning_flags(&f).unwrap(), None, "{cmd}");
+        }
+        // One flag implies the other's default.
+        let f = Flags::parse("analyze", &args(&["--wire-bits", "4"]), ANALYZE_FLAGS).unwrap();
+        assert_eq!(tuning_flags(&f).unwrap(), Some((4, 0.0)));
+        let f = Flags::parse("analyze", &args(&["--overlap", "0.25"]), ANALYZE_FLAGS).unwrap();
+        assert_eq!(tuning_flags(&f).unwrap(), Some((16, 0.25)));
+        // Headers describe tuned runs and stay byte-identical otherwise.
+        assert_eq!(tuning_desc(Some((8, 0.5))), " wire-bits=8 overlap=0.5");
+        assert_eq!(tuning_desc(None), "");
+        // Domain validation is the plan's, not the CLI's: a width the
+        // model doesn't price surfaces as the typed PlanError.
+        let err = Deployment::builder()
+            .model("8b")
+            .tp(2)
+            .workload(64, 8)
+            .collective_tuning(12, 0.0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("wire precision"), "{err}");
+        // `slo` keeps its strict flag set (uniformity is for the four
+        // subcommands that price serving paths).
+        let err = Flags::parse("slo", &args(&["--wire-bits", "8"]), SLO_FLAGS).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --wire-bits"), "{err}");
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //!   TP=4 PP=2).
 
 
-use crate::cluster::netmodel::{LinkParams, NetModel};
+use crate::cluster::netmodel::{CollectiveTuning, LinkParams, NetModel};
 use crate::perfmodel::compute::ComputeModel;
 
 /// Full constant set used by [`super::slo::SloSimulator`].
@@ -33,6 +33,11 @@ use crate::perfmodel::compute::ComputeModel;
 pub struct Calibration {
     pub compute: ComputeModel,
     pub net: NetModel,
+    /// Collective variants in play — wire precision + overlap factor for
+    /// TP AllReduce/AllGather payloads. The default (16-bit, 0.0) prices
+    /// bitwise-identically to the untuned model; non-default values only
+    /// enter through the validated plan builder.
+    pub tuning: CollectiveTuning,
     /// Fixed request-intake cost included in TTFT (seconds).
     pub ttft_base_s: f64,
     /// vLLM prefill-path overhead: `max(0, a − b·log2(t))` (seconds).
@@ -57,6 +62,7 @@ impl Default for Calibration {
                 nvlink: LinkParams { alpha_s: 1.0e-6, bus_bw: 300.0e9 },
                 ib: LinkParams { alpha_s: 14.0e-6, bus_bw: 40.0e9 },
             },
+            tuning: CollectiveTuning::default(),
             ttft_base_s: 0.0,
             ttft_tp_fit_a_s: 0.210,
             ttft_tp_fit_b_s: 0.060,

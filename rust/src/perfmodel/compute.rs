@@ -80,6 +80,16 @@ impl ComputeModel {
         self.decode_time(arch, arch.layers, kv_len, t)
     }
 
+    /// Quant + dequant cost of moving `n_bytes` (logical BF16 payload)
+    /// through a low-bit wire: both casts stream the tensor through HBM
+    /// once, so the pair is priced as two memory-bound passes. Charged per
+    /// collective launch when a [`crate::cluster::CollectiveTuning`]
+    /// narrows the wire below 16 bits (Flash Communication §3 models the
+    /// same fused quantization as bandwidth-bound, arXiv:2412.04964).
+    pub fn quant_dequant_time(&self, n_bytes: f64) -> f64 {
+        2.0 * n_bytes / (self.hbm_bw * self.eff_decode)
+    }
+
     /// One *batched* decode iteration of `layers` layers sharded over `t`
     /// GPUs: the weight shard streams from HBM once (shared by every
     /// sequence in the batch), each sequence's KV cache streams at its own
@@ -149,6 +159,17 @@ mod tests {
         let cm = ComputeModel::default();
         let arch = ModelArch::llama31_8b();
         assert!(cm.full_decode_time(&arch, 4096, 1) > cm.full_decode_time(&arch, 1, 1));
+    }
+
+    #[test]
+    fn quant_dequant_is_two_hbm_passes() {
+        let cm = ComputeModel::default();
+        let n = 1.0e6;
+        let expect = 2.0 * n / (cm.hbm_bw * cm.eff_decode);
+        assert_eq!(cm.quant_dequant_time(n), expect);
+        assert_eq!(cm.quant_dequant_time(0.0), 0.0);
+        // Linear in bytes: doubling the payload doubles the cast cost.
+        assert!((cm.quant_dequant_time(2.0 * n) - 2.0 * expect).abs() < 1e-18);
     }
 
     #[test]

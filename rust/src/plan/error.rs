@@ -81,6 +81,13 @@ pub enum PlanError {
     /// Autoscaling drives colocated serve fleets; elastic disaggregated
     /// pools (scale-to-zero prefill) are a roadmap follow-on.
     AutoscaleDisaggUnsupported,
+    /// The collective tuning's wire precision is not a modeled width
+    /// (16 = untuned fp16/bf16, 8 and 4 = quantized variants).
+    TuningBitsInvalid { bits: u32 },
+    /// The collective tuning's compute–comm overlap factor is outside
+    /// `[0, 1]` or not finite (`value` pre-formatted so the variant
+    /// stays `Eq`).
+    TuningOverlapInvalid { value: String },
 }
 
 impl fmt::Display for PlanError {
@@ -198,6 +205,16 @@ impl fmt::Display for PlanError {
                 "autoscaling drives colocated serve fleets only — elastic \
                  disaggregated prefill/decode pools are not supported yet"
             ),
+            PlanError::TuningBitsInvalid { bits } => write!(
+                f,
+                "collective tuning: wire precision must be 16, 8 or 4 bits \
+                 (got {bits})"
+            ),
+            PlanError::TuningOverlapInvalid { value } => write!(
+                f,
+                "collective tuning: overlap factor must be a finite value \
+                 in [0, 1] (got {value})"
+            ),
         }
     }
 }
@@ -231,6 +248,12 @@ mod tests {
         };
         let s = e.to_string();
         assert!(s.contains("TP=4 PP=2") && s.contains("8 GPUs") && s.contains("has 4"), "{s}");
+
+        let e = PlanError::TuningBitsInvalid { bits: 12 };
+        assert!(e.to_string().contains("got 12"), "{e}");
+        let e = PlanError::TuningOverlapInvalid { value: "1.5".into() };
+        let s = e.to_string();
+        assert!(s.contains("[0, 1]") && s.contains("1.5"), "{s}");
     }
 
     #[test]

@@ -80,6 +80,7 @@ pub struct Deployment {
     workload: Option<(usize, usize)>,
     dtype_bytes: Option<usize>,
     calibration: Option<Calibration>,
+    tuning: Option<(u32, f64)>,
     artifacts: Option<ArtifactStore>,
 }
 
@@ -95,6 +96,7 @@ impl Default for Deployment {
             workload: None,
             dtype_bytes: None,
             calibration: None,
+            tuning: None,
             artifacts: None,
         }
     }
@@ -167,6 +169,25 @@ impl Deployment {
     /// Override the SLO simulator's calibrated constants.
     pub fn calibration(mut self, calibration: Calibration) -> Self {
         self.calibration = Some(calibration);
+        self
+    }
+
+    /// Collective variants for the plan's TP AllReduce/AllGather payloads:
+    /// `wire_bits` is the on-wire precision (16 = the untuned fp16/bf16
+    /// wire; 8 and 4 price the Flash-Communication-style quantized
+    /// variants plus their quant/dequant compute), `overlap` is the
+    /// fraction of per-stage compute that collective time can hide under
+    /// (0.0 = fully exposed, the measured stack's eager mode). Validation
+    /// happens in `build()` — out-of-domain values surface as
+    /// [`PlanError::TuningBitsInvalid`] / [`PlanError::TuningOverlapInvalid`].
+    /// This is the *only* way to construct a non-default
+    /// [`crate::cluster::CollectiveTuning`]: the raw constructor is
+    /// crate-private, and everything downstream of the plan (cost model,
+    /// engines, servers, fleets — including `with_autoscale` /
+    /// `with_faults` members) inherits the tuning through the plan's
+    /// calibration.
+    pub fn collective_tuning(mut self, wire_bits: u32, overlap: f64) -> Self {
+        self.tuning = Some((wire_bits, overlap));
         self
     }
 
@@ -295,11 +316,21 @@ impl Deployment {
         }
         let placement =
             Placement::new(topology, layout).expect("layout validated against topology");
+        let mut calibration = self.calibration.unwrap_or_default();
+        if let Some((wire_bits, overlap)) = self.tuning {
+            if !matches!(wire_bits, 4 | 8 | 16) {
+                return Err(PlanError::TuningBitsInvalid { bits: wire_bits });
+            }
+            if !overlap.is_finite() || !(0.0..=1.0).contains(&overlap) {
+                return Err(PlanError::TuningOverlapInvalid { value: overlap.to_string() });
+            }
+            calibration.tuning = crate::cluster::CollectiveTuning::new(wire_bits, overlap);
+        }
         Ok(DeploymentPlan {
             arch,
             placement,
             shape,
-            calibration: self.calibration.unwrap_or_default(),
+            calibration,
             artifacts: self.artifacts,
         })
     }
@@ -391,6 +422,12 @@ impl DeploymentPlan {
     /// Whether `engine()`/`server()` will execute real numeric compute.
     pub fn is_numeric(&self) -> bool {
         self.artifacts.is_some()
+    }
+
+    /// The plan's collective tuning (wire precision + overlap factor),
+    /// as validated by the builder.
+    pub fn collective_tuning(&self) -> crate::cluster::CollectiveTuning {
+        self.calibration.tuning
     }
 
     /// Human-readable identity, e.g. `Llama-3.1-8B TP=2 PP=2`.
@@ -622,6 +659,36 @@ mod tests {
             Deployment::builder().model("8b").gpus_per_node(0).build().unwrap_err(),
             PlanError::ZeroDegree { .. }
         ));
+    }
+
+    #[test]
+    fn collective_tuning_validates_and_threads_into_the_calibration() {
+        // Out-of-domain knobs surface as typed errors.
+        let err = Deployment::builder().model("8b").collective_tuning(12, 0.0).build();
+        assert_eq!(err.unwrap_err(), PlanError::TuningBitsInvalid { bits: 12 });
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            let err =
+                Deployment::builder().model("8b").collective_tuning(8, bad).build().unwrap_err();
+            assert!(matches!(err, PlanError::TuningOverlapInvalid { .. }), "{bad}: {err}");
+        }
+        // No tuning call -> the identity default, bitwise.
+        let plain = Deployment::builder().model("8b").tp(2).build().unwrap();
+        assert!(plain.collective_tuning().is_default());
+        // An explicit identity tuning is the same default.
+        let explicit =
+            Deployment::builder().model("8b").tp(2).collective_tuning(16, 0.0).build().unwrap();
+        assert_eq!(explicit.collective_tuning(), plain.collective_tuning());
+        assert_eq!(explicit.simulate(), plain.simulate(), "identity tuning reprices nothing");
+        // A quantized wire reaches the cost model and cheapens comm.
+        let int8 =
+            Deployment::builder().model("8b").tp(2).collective_tuning(8, 0.0).build().unwrap();
+        assert_eq!(int8.collective_tuning().wire_bits(), 8);
+        assert!(int8.collective_tuning().quantizes());
+        let shape = int8.shape();
+        let tuned = int8.cost_model().prefill_breakdown(shape);
+        let untuned = plain.cost_model().prefill_breakdown(shape);
+        assert!(tuned.comm_s < untuned.comm_s);
+        assert_eq!(tuned.compute_s, untuned.compute_s);
     }
 
     #[test]

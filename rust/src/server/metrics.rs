@@ -162,6 +162,16 @@ pub struct ServeSummary {
     pub retries: usize,
     /// Total model-time prefill seconds burned on failed attempts.
     pub wasted_prefill_s: f64,
+    /// Wire bytes the plan's quantized collectives kept off the fabric:
+    /// traced AllReduce/AllGather corrected volume × `(1 − wire_bits/16)`.
+    /// Exactly 0.0 at the default 16-bit tuning. Stamped by the serving
+    /// layer after the run (it needs the engine's trace, which
+    /// `from_metrics` does not see).
+    pub wire_saved_bytes: f64,
+    /// Collective seconds the tuning's overlap factor hid behind compute
+    /// across the run (0.0 at the default zero overlap). Stamped by the
+    /// serving layer after the run.
+    pub hidden_comm_s: f64,
     /// Model-time percentiles from the priced timeline — present when the
     /// run served through a pricing engine (structural plans), absent on
     /// wall-clock-only (numeric) serving.
@@ -254,6 +264,8 @@ impl ServeSummary {
             saved_prefill_bytes,
             retries,
             wasted_prefill_s,
+            wire_saved_bytes: 0.0,
+            hidden_comm_s: 0.0,
             model: Self::model_summary(metrics, total_tokens),
         }
     }

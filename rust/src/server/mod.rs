@@ -127,15 +127,37 @@ impl Server {
         Ok(&self.completed[first..])
     }
 
+    /// Wire bytes the engine's quantized collectives have kept off the
+    /// fabric so far, plus its overlap-hidden collective seconds — both
+    /// exactly 0.0 at the default tuning. Sampled before/after a serve
+    /// call so each summary reports its own run's deltas even when one
+    /// server serves several batches.
+    fn tuning_totals(&self) -> (f64, f64) {
+        let hidden = self.engine.hidden_comm_s();
+        let saved = match self.engine.cost_model() {
+            Some(cm) if cm.cal.tuning.quantizes() => {
+                cm.wire_saved_bytes(&self.engine.trace().summary())
+            }
+            _ => 0.0,
+        };
+        (saved, hidden)
+    }
+
     /// Serve a batch of requests arriving all at once and summarize.
     pub fn serve_batch(&mut self, requests: Vec<Request>) -> Result<ServeSummary> {
         let wall_start = Instant::now();
         let first = self.completed.len();
+        let (saved0, hidden0) = self.tuning_totals();
         for r in requests {
             self.submit(r)?;
         }
         self.drive(VecDeque::new())?;
-        Ok(ServeSummary::from_metrics(&self.completed[first..], wall_start.elapsed()))
+        let mut summary =
+            ServeSummary::from_metrics(&self.completed[first..], wall_start.elapsed());
+        let (saved1, hidden1) = self.tuning_totals();
+        summary.wire_saved_bytes = saved1 - saved0;
+        summary.hidden_comm_s = hidden1 - hidden0;
+        Ok(summary)
     }
 
     /// Serve with open-loop Poisson arrivals at `rate_per_s`: request `i`
@@ -153,11 +175,17 @@ impl Server {
         anyhow::ensure!(rate_per_s > 0.0, "arrival rate must be positive (req/s)");
         let wall_start = Instant::now();
         let first = self.completed.len();
+        let (saved0, hidden0) = self.tuning_totals();
         let offsets =
             crate::workload::ArrivalProcess::poisson(rate_per_s).offsets(requests.len(), seed);
         let arrivals: VecDeque<(f64, Request)> = offsets.into_iter().zip(requests).collect();
         self.drive(arrivals)?;
-        Ok(ServeSummary::from_metrics(&self.completed[first..], wall_start.elapsed()))
+        let mut summary =
+            ServeSummary::from_metrics(&self.completed[first..], wall_start.elapsed());
+        let (saved1, hidden1) = self.tuning_totals();
+        summary.wire_saved_bytes = saved1 - saved0;
+        summary.hidden_comm_s = hidden1 - hidden0;
+        Ok(summary)
     }
 
     pub fn completed(&self) -> &[RequestMetrics] {

@@ -49,6 +49,30 @@ pub fn allgather_steps(d: usize) -> f64 {
     }
 }
 
+/// Quantized AllReduce launch count: the Flash Communication decomposition
+/// (all-to-all + all-gather, arXiv:2412.04964 §3) replaces the ring's
+/// `2(d−1)` serialized launches with two fused kernels regardless of `d`.
+pub fn quantized_allreduce_steps(d: usize) -> f64 {
+    if d <= 1 {
+        0.0
+    } else {
+        2.0
+    }
+}
+
+/// Two-step all-gather launch count: stage the quantized payload through a
+/// per-node leader, so `d > 2` groups pay two launches instead of the
+/// ring's `d−1` (a two-member group still needs only its single exchange).
+pub fn two_step_allgather_steps(d: usize) -> f64 {
+    if d <= 1 {
+        0.0
+    } else if d == 2 {
+        1.0
+    } else {
+        2.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,6 +99,19 @@ mod tests {
             assert!(allreduce_factor(d + 1) > allreduce_factor(d));
             assert!(allgather_factor(d + 1) > allgather_factor(d));
             assert!(allreduce_steps(d + 1) > allreduce_steps(d));
+        }
+    }
+
+    #[test]
+    fn quantized_variants_never_exceed_the_ring_launch_counts() {
+        assert_eq!(quantized_allreduce_steps(1), 0.0);
+        assert_eq!(two_step_allgather_steps(1), 0.0);
+        assert_eq!(quantized_allreduce_steps(2), 2.0);
+        assert_eq!(two_step_allgather_steps(2), 1.0);
+        assert_eq!(two_step_allgather_steps(4), 2.0);
+        for d in 2..64usize {
+            assert!(quantized_allreduce_steps(d) <= allreduce_steps(d));
+            assert!(two_step_allgather_steps(d) <= allgather_steps(d));
         }
     }
 }

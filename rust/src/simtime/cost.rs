@@ -22,7 +22,7 @@
 
 use crate::analysis::{InferenceShape, ParallelLayout};
 use crate::cluster::{CollectiveCost, Placement, Topology};
-use crate::comm::{CollectiveKind, CommRecord};
+use crate::comm::{CollectiveKind, CommRecord, Stage, TraceSummary};
 use crate::model::ModelArch;
 use crate::perfmodel::Calibration;
 
@@ -84,6 +84,13 @@ impl CostModel {
     /// Per-step communication time of stage `s`: `window`-token TP
     /// collectives, `sampled`-token logits gather on the last stage, and
     /// boundary p2p wire time (attributed to the sending stage).
+    ///
+    /// AllReduce/AllGather payloads honor the calibration's
+    /// [`crate::cluster::CollectiveTuning`]: a quantized wire prices the
+    /// variant formulas plus one quant/dequant HBM pass-pair per launch
+    /// ([`crate::perfmodel::ComputeModel::quant_dequant_time`]). The
+    /// default tuning never touches the variant paths, so it is bitwise
+    /// the untuned model.
     fn stage_comm(&self, s: usize, window: usize, sampled: usize) -> f64 {
         let (t, p) = (self.layout().tp, self.layout().pp);
         let b = self.cal.compute.dtype_bytes;
@@ -91,6 +98,7 @@ impl CostModel {
         let msg = window as f64 * h * b;
         let crosses = self.stage_crosses[s];
         let net = &self.cal.net;
+        let tuning = self.cal.tuning;
         let mut time = 0.0;
 
         if t > 1 {
@@ -98,9 +106,17 @@ impl CostModel {
             if s == 0 {
                 ars += 1; // vocab-parallel embedding
             }
-            time += ars as f64 * net.allreduce(msg, t, crosses).total();
+            let mut ar = net.allreduce_tuned(msg, t, crosses, tuning).total();
+            if tuning.quantizes() {
+                ar += self.cal.compute.quant_dequant_time(msg);
+            }
+            time += ars as f64 * ar;
             if p > 1 && s > 0 {
-                time += 2.0 * net.allgather(msg, t, crosses).total();
+                let mut ag = net.allgather_tuned(msg, t, crosses, tuning).total();
+                if tuning.quantizes() {
+                    ag += self.cal.compute.quant_dequant_time(msg);
+                }
+                time += 2.0 * ag;
             }
             if s == p - 1 {
                 // Logits gather of v/t slices, once per sampled token (one
@@ -146,24 +162,43 @@ impl CostModel {
         crossings as f64 * self.cal.internode_handoff(t)
     }
 
-    /// Roofline compute and serialized comm of pipeline stage `s` during a
-    /// prefill of `prompt_len` tokens — the one per-stage formula both the
-    /// closed-form breakdown and the timeline posting consume.
-    fn prefill_stage_cost(&self, s: usize, prompt_len: usize) -> (f64, f64) {
+    /// Split a stage's serialized comm into (exposed, hidden) under the
+    /// tuning's overlap factor: up to `overlap · compute` of collective
+    /// time hides behind the stage's compute. The zero-overlap default
+    /// returns `(comm, 0.0)` without touching the arithmetic — bitwise
+    /// the untuned exposure.
+    fn apply_overlap(&self, compute: f64, comm: f64) -> (f64, f64) {
+        let ov = self.cal.tuning.overlap();
+        if ov == 0.0 {
+            return (comm, 0.0);
+        }
+        let hidden = (ov * compute).min(comm);
+        (comm - hidden, hidden)
+    }
+
+    /// Roofline compute, *exposed* comm, and overlap-hidden comm of
+    /// pipeline stage `s` during a prefill of `prompt_len` tokens — the
+    /// one per-stage formula both the closed-form breakdown and the
+    /// timeline posting consume. With one microbatch per iteration the
+    /// per-stage overlap window is the per-iteration window.
+    fn prefill_stage_cost(&self, s: usize, prompt_len: usize) -> (f64, f64, f64) {
         let (t, p) = (self.layout().tp, self.layout().pp);
         let layers = self.arch.stage_layers(p, s);
         let compute = self.cal.compute.prefill_time(&self.arch, layers, prompt_len, t);
-        (compute, self.stage_comm(s, prompt_len, 1))
+        let (exposed, hidden) = self.apply_overlap(compute, self.stage_comm(s, prompt_len, 1));
+        (compute, exposed, hidden)
     }
 
     /// Per-stage costs of one decode iteration over `kv_lens` (weights
     /// stream once, KV per sequence, `[B, h]` collective payloads).
-    fn decode_stage_cost(&self, s: usize, kv_lens: &[usize]) -> (f64, f64) {
+    /// Returns (compute, exposed comm, overlap-hidden comm).
+    fn decode_stage_cost(&self, s: usize, kv_lens: &[usize]) -> (f64, f64, f64) {
         let (t, p) = (self.layout().tp, self.layout().pp);
         let batch = kv_lens.len();
         let layers = self.arch.stage_layers(p, s);
         let compute = self.cal.compute.decode_batch_time(&self.arch, layers, kv_lens, t);
-        (compute, self.stage_comm(s, batch, batch))
+        let (exposed, hidden) = self.apply_overlap(compute, self.stage_comm(s, batch, batch));
+        (compute, exposed, hidden)
     }
 
     /// Prefill phase breakdown → TTFT (closed form; only
@@ -173,12 +208,24 @@ impl CostModel {
         let mut compute = 0.0;
         let mut comm = 0.0;
         for s in 0..self.layout().pp {
-            let (c, m) = self.prefill_stage_cost(s, sp);
+            let (c, m, _hidden) = self.prefill_stage_cost(s, sp);
             compute += c;
             comm += m;
         }
         let overhead = self.prefill_overhead();
         PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
+    }
+
+    /// Collective seconds a `prompt_len`-token prefill hides behind
+    /// compute under the tuning's overlap factor (0.0 at the default).
+    pub fn prefill_hidden_comm_s(&self, prompt_len: usize) -> f64 {
+        (0..self.layout().pp).map(|s| self.prefill_stage_cost(s, prompt_len).2).sum()
+    }
+
+    /// Collective seconds one decode iteration over `kv_lens` hides behind
+    /// compute under the tuning's overlap factor (0.0 at the default).
+    pub fn decode_hidden_comm_s(&self, kv_lens: &[usize]) -> f64 {
+        (0..self.layout().pp).map(|s| self.decode_stage_cost(s, kv_lens).2).sum()
     }
 
     /// Closed-form price (seconds) of a `prompt_len`-token prefill — the
@@ -223,7 +270,7 @@ impl CostModel {
         let mut compute = 0.0;
         let mut comm = 0.0;
         for s in 0..self.layout().pp {
-            let (c, m) = self.decode_stage_cost(s, kv_lens);
+            let (c, m, _hidden) = self.decode_stage_cost(s, kv_lens);
             compute += c;
             comm += m;
         }
@@ -233,8 +280,10 @@ impl CostModel {
 
     /// Replay one prefill iteration onto the timeline (per-stage compute,
     /// TP collectives, boundary handoffs, coordinator round-trip).
-    /// Returns the iteration's model-time duration.
-    pub fn post_prefill(&self, tl: &mut Timeline, prompt_len: usize) -> f64 {
+    /// Returns the iteration's model-time duration plus the collective
+    /// seconds the tuning's overlap factor hid behind compute (0.0 at the
+    /// default).
+    pub fn post_prefill(&self, tl: &mut Timeline, prompt_len: usize) -> (f64, f64) {
         self.post_iteration(
             tl,
             |s, cm| cm.prefill_stage_cost(s, prompt_len),
@@ -243,8 +292,9 @@ impl CostModel {
     }
 
     /// Replay one decode iteration over `kv_lens` onto the timeline.
-    /// Returns the iteration's model-time duration.
-    pub fn post_decode(&self, tl: &mut Timeline, kv_lens: &[usize]) -> f64 {
+    /// Returns the iteration's model-time duration plus its overlap-hidden
+    /// collective seconds (0.0 at the default).
+    pub fn post_decode(&self, tl: &mut Timeline, kv_lens: &[usize]) -> (f64, f64) {
         assert!(!kv_lens.is_empty(), "decode iteration needs >= 1 sequence");
         self.post_iteration(
             tl,
@@ -254,18 +304,20 @@ impl CostModel {
     }
 
     /// Walk the pipeline stages in order (one microbatch — stages are
-    /// strictly serial), posting each stage's compute and collective time
-    /// on its TP group's ranks and coupling boundaries with P2P events
-    /// (wire time is inside the sending stage's comm term). Ends with a
-    /// coordinator barrier carrying the framework overhead.
+    /// strictly serial), posting each stage's compute and *exposed*
+    /// collective time on its TP group's ranks and coupling boundaries
+    /// with P2P events (wire time is inside the sending stage's comm
+    /// term). Ends with a coordinator barrier carrying the framework
+    /// overhead. Returns (duration, overlap-hidden comm seconds).
     fn post_iteration(
         &self,
         tl: &mut Timeline,
-        stage_cost: impl Fn(usize, &Self) -> (f64, f64),
+        stage_cost: impl Fn(usize, &Self) -> (f64, f64, f64),
         overhead_s: f64,
-    ) -> f64 {
+    ) -> (f64, f64) {
         let p = self.layout().pp;
         let start = tl.max_time();
+        let mut hidden_total = 0.0;
         for s in 0..p {
             let ranks = self.placement.tp_group(s);
             if s > 0 {
@@ -274,14 +326,15 @@ impl CostModel {
                     tl.post_p2p(a, b, 0.0);
                 }
             }
-            let (compute, comm) = stage_cost(s, self);
+            let (compute, comm, hidden) = stage_cost(s, self);
+            hidden_total += hidden;
             for &r in &ranks {
                 tl.post_compute(r, compute);
             }
             tl.post_collective(&ranks, comm);
         }
         tl.sync_all(overhead_s);
-        tl.max_time() - start
+        (tl.max_time() - start, hidden_total)
     }
 
     /// What-if: price stage `s`'s TP AllReduce under the two-level
@@ -317,6 +370,26 @@ impl CostModel {
         self.cal.net.allreduce(n_bytes, t, self.stage_crosses[pp_stage])
     }
 
+    /// Wire bytes the tuning's quantized collectives kept off the fabric
+    /// across a traced run: the paper-view AllReduce/AllGather corrected
+    /// volume (the payloads the wire precision applies to — traces record
+    /// logical BF16 bytes regardless of tuning) scaled by
+    /// `1 − wire_bits/16`. Exactly 0.0 at the default 16-bit wire, with
+    /// no summary walk.
+    pub fn wire_saved_bytes(&self, summary: &TraceSummary) -> f64 {
+        let tuning = self.cal.tuning;
+        if !tuning.quantizes() {
+            return 0.0;
+        }
+        let mut bytes = 0.0;
+        for op in [CollectiveKind::AllReduce, CollectiveKind::AllGather] {
+            for stage in [Stage::Prefill, Stage::Decode] {
+                bytes += summary.paper_view(op, stage).corrected_volume_bytes;
+            }
+        }
+        bytes * (1.0 - tuning.wire_factor())
+    }
+
     /// Whether the TP group owning `rank` spans nodes (cached).
     fn group_crosses(&self, rank: usize) -> bool {
         let tp = self.layout().tp;
@@ -327,7 +400,10 @@ impl CostModel {
     /// Price one traced communication record (seconds of modeled link
     /// time). P2P wire time is attributed to the `Send` record once —
     /// `Recv` prices to zero so per-stream sums do not double-count the
-    /// same transfer.
+    /// same transfer. AllReduce/AllGather records honor the calibration's
+    /// [`crate::cluster::CollectiveTuning`] (quantized-variant wire cost
+    /// plus one quant/dequant pass-pair); every other op — and the whole
+    /// dispatch at the default tuning — prices untuned.
     pub fn price_record(&self, rec: &CommRecord) -> f64 {
         if rec.op == CollectiveKind::Recv {
             return 0.0;
@@ -343,6 +419,29 @@ impl CostModel {
             },
             _ => self.group_crosses(rec.rank.min(total.saturating_sub(1))),
         };
+        let tuning = self.cal.tuning;
+        if tuning.quantizes() {
+            let quant = self.cal.compute.quant_dequant_time(bytes);
+            match rec.op {
+                CollectiveKind::AllReduce => {
+                    return self
+                        .cal
+                        .net
+                        .allreduce_tuned(bytes, rec.group_size, crosses, tuning)
+                        .total()
+                        + quant;
+                }
+                CollectiveKind::AllGather => {
+                    return self
+                        .cal
+                        .net
+                        .allgather_tuned(bytes, rec.group_size, crosses, tuning)
+                        .total()
+                        + quant;
+                }
+                _ => {}
+            }
+        }
         self.cal.net.collective(rec.op, bytes, rec.group_size, crosses).total()
     }
 }
@@ -389,7 +488,8 @@ mod tests {
         for (tp, pp) in [(2usize, 1usize), (4, 1), (1, 4), (2, 2), (8, 1), (2, 4)] {
             let cm = cost(tp, pp);
             let mut tl = Timeline::new(cm.placement.layout.world_size());
-            let dur = cm.post_prefill(&mut tl, 128);
+            let (dur, hidden) = cm.post_prefill(&mut tl, 128);
+            assert_eq!(hidden, 0.0, "default tuning hides nothing");
             let closed = cm.prefill_breakdown(shape128()).total();
             assert!(
                 (dur - closed).abs() <= 1e-9 * closed.abs().max(1.0),
@@ -406,14 +506,14 @@ mod tests {
             let s = shape128();
             let kv = s.prefill_len + s.decode_len / 2;
             let mut tl = Timeline::new(cm.placement.layout.world_size());
-            let d1 = cm.post_decode(&mut tl, &[kv]);
+            let (d1, _) = cm.post_decode(&mut tl, &[kv]);
             let closed = cm.decode_step_breakdown(s).total();
             assert!(
                 (d1 - closed).abs() <= 1e-9 * closed.abs().max(1.0),
                 "tp={tp} pp={pp}: posted {d1} vs closed {closed}"
             );
             let before = tl.max_time();
-            let d2 = cm.post_decode(&mut tl, &[kv + 1]);
+            let (d2, _) = cm.post_decode(&mut tl, &[kv + 1]);
             assert!((tl.max_time() - (before + d2)).abs() < 1e-15, "clock accumulates");
         }
     }
@@ -448,6 +548,88 @@ mod tests {
                 "tp={tp} pp={pp}: gather term must cancel in the difference"
             );
         }
+    }
+
+    #[test]
+    fn quantized_wire_shrinks_comm_and_overlap_hides_it() {
+        use crate::cluster::CollectiveTuning;
+        let base = cost(4, 1);
+        let s = shape128();
+        let b0 = base.prefill_breakdown(s);
+        let d0 = base.decode_step_breakdown(s);
+        assert_eq!(base.prefill_hidden_comm_s(128), 0.0, "default hides nothing");
+
+        // An int8 wire shrinks comm in both phases without touching
+        // compute or overhead.
+        let mut int8 = base.clone();
+        int8.cal.tuning = CollectiveTuning::new(8, 0.0);
+        let b8 = int8.prefill_breakdown(s);
+        let d8 = int8.decode_step_breakdown(s);
+        assert!(b8.comm_s < b0.comm_s, "{} vs {}", b8.comm_s, b0.comm_s);
+        assert!(d8.comm_s < d0.comm_s);
+        assert_eq!(b8.compute_s, b0.compute_s);
+        assert_eq!(b8.overhead_s, b0.overhead_s);
+
+        // Overlap on an untouched wire: exposed + hidden reassembles the
+        // untuned comm exactly, and hidden stays under ov · compute.
+        let mut ov = base.clone();
+        ov.cal.tuning = CollectiveTuning::new(16, 0.5);
+        let bov = ov.prefill_breakdown(s);
+        let hidden = ov.prefill_hidden_comm_s(128);
+        assert!(hidden > 0.0 && bov.comm_s < b0.comm_s);
+        assert!(
+            (bov.comm_s + hidden - b0.comm_s).abs() <= 1e-12 * b0.comm_s,
+            "exposed {} + hidden {hidden} must reassemble untuned {}",
+            bov.comm_s,
+            b0.comm_s
+        );
+        assert!(hidden <= 0.5 * b0.compute_s * (1.0 + 1e-12));
+        let kv = s.prefill_len + s.decode_len / 2;
+        let dh = ov.decode_hidden_comm_s(&[kv]);
+        let dov = ov.decode_step_breakdown(s);
+        assert!((dov.comm_s + dh - d0.comm_s).abs() <= 1e-12 * d0.comm_s);
+
+        // The posting path reports the same hidden seconds it withheld.
+        let mut tl = Timeline::new(ov.placement.layout.world_size());
+        let (_, posted_hidden) = ov.post_prefill(&mut tl, 128);
+        assert_eq!(posted_hidden, hidden);
+    }
+
+    #[test]
+    fn tuned_price_record_matches_variant_formulas() {
+        use crate::cluster::CollectiveTuning;
+        let mut cm = cost(4, 1);
+        cm.cal.tuning = CollectiveTuning::new(8, 0.0);
+        let rec = |op: CollectiveKind| CommRecord {
+            op,
+            stage: Stage::Decode,
+            rank: 0,
+            group_size: 4,
+            shape: vec![4096],
+            elems: 4096,
+            dtype_bytes: 2,
+            peer: None,
+            step: None,
+            batch: None,
+            modeled_s: 0.0,
+        };
+        let quant = cm.cal.compute.quant_dequant_time(8192.0);
+        let ar = cm.price_record(&rec(CollectiveKind::AllReduce));
+        let want =
+            cm.cal.net.allreduce_tuned(8192.0, 4, false, cm.cal.tuning).total() + quant;
+        assert!((ar - want).abs() < 1e-18);
+        let ag = cm.price_record(&rec(CollectiveKind::AllGather));
+        let want_ag =
+            cm.cal.net.allgather_tuned(8192.0, 4, false, cm.cal.tuning).total() + quant;
+        assert!((ag - want_ag).abs() < 1e-18);
+        // Other ops are untouched by the wire precision.
+        let base = cost(4, 1);
+        assert_eq!(
+            cm.price_record(&rec(CollectiveKind::Gather)),
+            base.price_record(&rec(CollectiveKind::Gather))
+        );
+        // And cheaper than the untuned pricing of the same records.
+        assert!(ar < base.price_record(&rec(CollectiveKind::AllReduce)));
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Collective-tuning integration: wire-precision savings stamped on serve
+//! and fleet summaries must reconcile with the analytical `VolumeModel`
+//! (Eq. 1–7) — the saved bytes are logical AllReduce/AllGather volume ×
+//! (1 − wire factor), nothing more — and the default tuning must stamp
+//! exact zeros everywhere.
+
+use commsim::analysis::{InferenceShape, VolumeModel};
+use commsim::model::DTYPE_BYTES_BF16;
+use commsim::plan::{Deployment, DeploymentPlan};
+use commsim::server::{Request, SchedulerConfig};
+use commsim::workload::{ArrivalProcess, LengthDist, WorkloadSpec};
+
+fn tuned_plan(
+    model: &str,
+    tp: usize,
+    pp: usize,
+    sp: usize,
+    sd: usize,
+    bits: u32,
+) -> DeploymentPlan {
+    Deployment::builder()
+        .model(model)
+        .tp(tp)
+        .pp(pp)
+        .workload(sp, sd)
+        .collective_tuning(bits, 0.0)
+        .build()
+        .unwrap()
+}
+
+/// Analytic wire bytes saved for one (Sp, Sd) request under the plan's
+/// tuning: the per-worker AllReduce + AllGather paper-view volume scaled
+/// by (1 − wire factor). Gather and P2P ride the wire untouched.
+fn analytic_saved(plan: &DeploymentPlan, sp: usize, sd: usize) -> f64 {
+    let shape = InferenceShape::new(sp, sd, DTYPE_BYTES_BF16);
+    let v = VolumeModel::new(plan.arch().clone()).volume(plan.layout(), shape);
+    (v.allreduce + v.allgather) * (1.0 - plan.collective_tuning().wire_factor())
+}
+
+fn close(a: f64, b: f64, what: &str) {
+    let denom = b.abs().max(1.0);
+    assert!((a - b).abs() / denom < 1e-9, "{what}: {a} vs {b}");
+}
+
+/// One int8 request through the serving loop: the stamped savings are
+/// exactly half of Eq. 1's AllReduce volume (wire factor 8/16 = 0.5).
+#[test]
+fn int8_serve_savings_reconcile_with_eq1() {
+    let (sp, sd) = (32usize, 8usize);
+    let plan = tuned_plan("3b", 2, 1, sp, sd, 8);
+    let mut server = plan.server(SchedulerConfig::default()).unwrap();
+    let summary = server
+        .serve_batch(vec![Request { id: 0, prompt: vec![0; sp].into(), decode_len: sd }])
+        .unwrap();
+    assert_eq!(summary.completed, 1);
+    close(summary.wire_saved_bytes, analytic_saved(&plan, sp, sd), "int8 serve vs Eq.1");
+    // Zero overlap hides nothing, exactly.
+    assert_eq!(summary.hidden_comm_s, 0.0);
+}
+
+/// Savings are additive across requests: N identical requests save N×
+/// one request's analytic delta, batched decode included.
+#[test]
+fn savings_are_additive_across_requests() {
+    let (sp, sd, n) = (16usize, 6usize, 3u64);
+    let plan = tuned_plan("3b", 2, 1, sp, sd, 8);
+    let mut server = plan
+        .server(SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() })
+        .unwrap();
+    let reqs: Vec<Request> = (0..n)
+        .map(|id| Request { id, prompt: vec![0; sp].into(), decode_len: sd })
+        .collect();
+    let summary = server.serve_batch(reqs).unwrap();
+    assert_eq!(summary.completed, n as usize);
+    close(
+        summary.wire_saved_bytes,
+        n as f64 * analytic_saved(&plan, sp, sd),
+        "N requests vs N × Eq.1 delta",
+    );
+}
+
+/// Hybrid TP×PP at 4-bit wire: both tuned classes (AllReduce layer/embedding
+/// traffic and stage-entry AllGathers) shrink by 1 − 4/16 = 3/4 of Eq. 4–5.
+#[test]
+fn int4_hybrid_savings_cover_allreduce_and_allgather() {
+    let (sp, sd) = (16usize, 4usize);
+    let plan = tuned_plan("8b", 2, 2, sp, sd, 4);
+    assert_eq!(plan.collective_tuning().wire_factor(), 0.25);
+    let mut server = plan.server(SchedulerConfig::default()).unwrap();
+    let summary = server
+        .serve_batch(vec![Request { id: 0, prompt: vec![0; sp].into(), decode_len: sd }])
+        .unwrap();
+    assert_eq!(summary.completed, 1);
+    let expect = analytic_saved(&plan, sp, sd);
+    assert!(expect > 0.0, "hybrid layout must have tunable volume");
+    close(summary.wire_saved_bytes, expect, "int4 hybrid vs Eq.4+5 delta");
+}
+
+/// The default (16-bit, no-overlap) tuning stamps exact zeros — not small
+/// numbers — on the serve summary.
+#[test]
+fn default_tuning_stamps_exact_zeros() {
+    let plan = Deployment::builder().model("3b").tp(2).workload(32, 8).build().unwrap();
+    assert!(plan.collective_tuning().is_default());
+    let mut server = plan.server(SchedulerConfig::default()).unwrap();
+    let summary = server
+        .serve_batch(vec![Request { id: 0, prompt: vec![0; 32].into(), decode_len: 8 }])
+        .unwrap();
+    assert_eq!(summary.wire_saved_bytes, 0.0);
+    assert_eq!(summary.hidden_comm_s, 0.0);
+}
+
+/// A 1-replica fleet inherits the plan's tuning through calibration and
+/// reproduces the serving loop's tuning accounting bitwise.
+#[test]
+fn single_replica_fleet_matches_serve_tuning_accounting() {
+    let plan = Deployment::builder()
+        .model("tiny")
+        .tp(2)
+        .workload(8, 6)
+        .collective_tuning(8, 0.25)
+        .build()
+        .unwrap();
+    let cfg = SchedulerConfig { kv_blocks: 64, kv_block_size: 16, max_queue: 64, max_batch: 2 };
+    let (rate, seed, n) = (2000.0, 42u64, 8usize);
+
+    let mut server = plan.server(cfg).unwrap();
+    let reqs: Vec<Request> = (0..n as u64)
+        .map(|id| Request { id, prompt: vec![0; 8].into(), decode_len: 6 })
+        .collect();
+    let served = server.serve_poisson(reqs, rate, seed).unwrap();
+    assert_eq!(served.completed, n);
+    assert!(served.wire_saved_bytes > 0.0, "int8 serving saves wire bytes");
+    assert!(served.hidden_comm_s > 0.0, "overlap hides some collective time");
+
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(rate),
+        prompt: LengthDist::Fixed(8),
+        decode: LengthDist::Fixed(6),
+        prefix: None,
+        requests: n,
+    };
+    let fleet = plan.fleet(1).unwrap().with_scheduler(cfg).simulate(&workload, seed).unwrap();
+    assert_eq!(fleet.completed, n);
+    assert_eq!(fleet.wire_saved_bytes, served.wire_saved_bytes, "bitwise saved bytes");
+    assert_eq!(fleet.hidden_comm_s, served.hidden_comm_s, "bitwise hidden comm");
+}

@@ -113,15 +113,15 @@ fn unpriced_engines_serve_wall_clock_only() {
 fn timeline_composes_iterations() {
     let cm = CostModel::on_cardinal(ModelArch::llama31_8b(), ParallelLayout::new(2, 2));
     let mut tl = Timeline::new(4);
-    let prefill = cm.post_prefill(&mut tl, 128);
-    let d1 = cm.post_decode(&mut tl, &[129]);
-    let d2 = cm.post_decode(&mut tl, &[130]);
+    let (prefill, _) = cm.post_prefill(&mut tl, 128);
+    let (d1, _) = cm.post_decode(&mut tl, &[129]);
+    let (d2, _) = cm.post_decode(&mut tl, &[130]);
     assert!(prefill > d1, "prefill dominates a decode step");
     assert!(d1 > 0.0 && d2 >= d1, "KV growth never makes a step cheaper");
     let end = tl.max_time();
     assert!((end - (prefill + d1 + d2)).abs() <= 1e-9 * end);
     // Idle jump to a later arrival, then keep serving.
     tl.advance_all_to(end + 1.0);
-    let d3 = cm.post_decode(&mut tl, &[131]);
+    let (d3, _) = cm.post_decode(&mut tl, &[131]);
     assert!((tl.max_time() - (end + 1.0 + d3)).abs() <= 1e-9 * tl.max_time());
 }

@@ -586,6 +586,63 @@ fn prop_engine_token_conservation() {
     }
 }
 
+/// Collective tuning over a seeded sweep of deployments: fewer wire bits
+/// never increase modeled communication seconds (the quant/dequant
+/// compute term is priced inside the comm figure, so this is the honest
+/// end-to-end comparison), compute/overhead never move with the wire,
+/// overlap only ever reduces the *exposed* comm, and the explicit
+/// `(16, 0.0)` tuning is bitwise identical to untuned pricing.
+#[test]
+fn prop_wire_bits_monotone_and_explicit_default_bitwise() {
+    use commsim::plan::Deployment;
+    let mut rng = Rng::new(0x0B17);
+    for case in 0..24 {
+        let (tp, pp) = *rng.choose(&[(2usize, 1usize), (4, 1), (8, 1), (2, 2), (4, 2)]);
+        let model = *rng.choose(&["3b", "8b", "13b"]);
+        let sp = rng.usize_in(1, 512);
+        let sd = rng.usize_in(1, 128);
+        let build = |tuning: Option<(u32, f64)>| {
+            let mut b = Deployment::builder().model(model).tp(tp).pp(pp).workload(sp, sd);
+            if let Some((bits, ov)) = tuning {
+                b = b.collective_tuning(bits, ov);
+            }
+            b.build().unwrap()
+        };
+        let shape = build(None).shape();
+        let breakdowns = |tuning: Option<(u32, f64)>| {
+            let cm = build(tuning).cost_model();
+            (cm.prefill_breakdown(shape), cm.decode_step_breakdown(shape))
+        };
+        let (p16, d16) = breakdowns(None);
+        let (pe, de) = breakdowns(Some((16, 0.0)));
+        assert_eq!(p16, pe, "case {case}: explicit default must price bitwise-untuned");
+        assert_eq!(d16, de, "case {case}");
+        let (p8, d8) = breakdowns(Some((8, 0.0)));
+        let (p4, d4) = breakdowns(Some((4, 0.0)));
+        for (wide, narrow, what) in [
+            (p16.comm_s, p8.comm_s, "prefill 16->8"),
+            (p8.comm_s, p4.comm_s, "prefill 8->4"),
+            (d16.comm_s, d8.comm_s, "decode 16->8"),
+            (d8.comm_s, d4.comm_s, "decode 8->4"),
+        ] {
+            assert!(
+                narrow <= wide,
+                "case {case} {model} tp={tp} pp={pp} {what}: {narrow} > {wide}"
+            );
+        }
+        assert_eq!(p8.compute_s, p16.compute_s, "case {case}: wire never touches compute");
+        assert_eq!(p4.overhead_s, p16.overhead_s, "case {case}");
+        assert_eq!(d4.compute_s, d16.compute_s, "case {case}");
+        // Overlap alone: exposed comm shrinks (never grows), compute is
+        // untouched, and totals never increase.
+        let ov = (rng.f32_unit() as f64).abs().min(1.0);
+        let (pov, dov) = breakdowns(Some((16, ov)));
+        assert!(pov.comm_s <= p16.comm_s && dov.comm_s <= d16.comm_s, "case {case}");
+        assert_eq!(pov.compute_s, p16.compute_s, "case {case}");
+        assert!(pov.total() <= p16.total() && dov.total() <= d16.total(), "case {case}");
+    }
+}
+
 /// Every plan yielded by `DeploymentPlan::sweep` is actually constructible:
 /// the engine spawns its worker group and serves a request — the sweep's
 /// feasibility filter and the engine's own layout checks must agree.
