@@ -1,0 +1,129 @@
+//! Chunked-prefill pricing ledger: what a Sarathi-style split costs the
+//! prompt owner and what it saves the decode victims.
+//!
+//! For a long prompt on a colocated replica, one-shot prefill stalls every
+//! in-flight decode for the full prefill duration. Splitting the prompt
+//! into token-budgeted chunks and fusing each chunk with the running
+//! decode batch (one mixed iteration) re-prices the interference: the
+//! owner's TTFT stretches by the extra per-chunk launches and gathers,
+//! while each victim's stall shrinks to the chunk compute plus the comm
+//! *growth* of the fused window — the per-launch α terms are paid by the
+//! decode iteration that runs anyway. This bench prints both sides of
+//! that ledger per layout and budget, and pins the qualitative claims.
+
+use commsim::analysis::{InferenceShape, ParallelLayout};
+use commsim::model::ModelArch;
+use commsim::report::{bench_json_path, render_table, BenchJson, JsonValue};
+use commsim::simtime::CostModel;
+
+fn main() -> anyhow::Result<()> {
+    let arch = ModelArch::llama31_8b();
+    let prompt = 2048usize;
+    let victims = 4usize; // in-flight decodes sharing the replica
+    let layouts = [(2usize, 1usize), (4, 1), (2, 2)];
+    let budgets = [256usize, 512, 1024];
+
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for (tp, pp) in layouts {
+        let cm = CostModel::on_cardinal(arch.clone(), ParallelLayout::new(tp, pp));
+        let one_shot = cm.prefill_breakdown(InferenceShape::new(prompt, 1, 2));
+        let label = ParallelLayout::new(tp, pp).label();
+        rows.push(vec![
+            label.clone(),
+            "one-shot".into(),
+            "1".into(),
+            format!("{:.1} ms", one_shot.total() * 1e3),
+            "—".into(),
+            format!("{:.1} ms", one_shot.total() * 1e3),
+            "100.0%".into(),
+        ]);
+        series.push((tp, pp, 0usize, 1usize, one_shot.total(), one_shot.total()));
+
+        for budget in budgets {
+            // Price the split: each chunk rides one mixed iteration with
+            // the decode batch, whose contexts advance a token per step.
+            let mut kv_lens = vec![prompt + 64; victims];
+            let mut owner = 0.0; // Σ chunk iteration price → the owner's TTFT stretch
+            let mut compute = 0.0;
+            let mut comm = 0.0;
+            let mut stall = 0.0; // Σ (mixed − decode-only) → per-victim TPOT stretch
+            let mut chunks = 0usize;
+            let mut start = 0usize;
+            while start < prompt {
+                let len = budget.min(prompt - start);
+                let chunk = cm.prefill_chunk_breakdown(start, len);
+                owner += chunk.total();
+                compute += chunk.compute_s;
+                comm += chunk.comm_s;
+                stall += cm.mixed_iteration(start, len, &kv_lens).total()
+                    - cm.decode_iteration(&kv_lens).total();
+                for kv in kv_lens.iter_mut() {
+                    *kv += 1;
+                }
+                start += len;
+                chunks += 1;
+            }
+
+            // The chunk split never underprices the one-shot prefill: the
+            // attention quadratic telescopes exactly, and every extra chunk
+            // pays its own collective launches and logits gather.
+            anyhow::ensure!(
+                (compute - one_shot.compute_s).abs() <= 1e-9 * one_shot.compute_s,
+                "chunk compute must telescope to the one-shot prefill at {label} budget {budget}"
+            );
+            anyhow::ensure!(
+                comm > one_shot.comm_s && owner > one_shot.total(),
+                "a {chunks}-chunk split must cost the owner more than one-shot at {label}"
+            );
+            // The victims' ledger runs the other way: fused launches cancel
+            // the α terms against the decode iteration that runs anyway, so
+            // the summed stall lands strictly below the one-shot stall.
+            anyhow::ensure!(
+                stall < one_shot.total(),
+                "chunked victim stall must undercut the one-shot stall at {label} budget {budget}"
+            );
+
+            rows.push(vec![
+                label.clone(),
+                format!("{budget}"),
+                format!("{chunks}"),
+                format!("{:.1} ms", owner * 1e3),
+                format!("+{:.2} ms", (owner - one_shot.total()) * 1e3),
+                format!("{:.1} ms", stall * 1e3),
+                format!("{:.1}%", stall / one_shot.total() * 100.0),
+            ]);
+            series.push((tp, pp, budget, chunks, owner, stall));
+        }
+    }
+    print!(
+        "{}",
+        render_table(
+            "Chunked prefill — owner cost vs decode-victim stall, Llama-3.1-8B, Sp=2048, 4 victims",
+            &["Layout", "Budget", "Chunks", "Owner prefill", "vs one-shot", "Victim stall", "of one-shot"],
+            &rows,
+        )
+    );
+
+    if let Some(path) = bench_json_path()? {
+        let mut j = BenchJson::new("chunked_prefill_interference");
+        j.param("model", arch.name.as_str())
+            .param("sp", prompt)
+            .param("victims", victims);
+        for (tp, pp, budget, chunks, owner, stall) in &series {
+            j.row(&[
+                ("tp", JsonValue::from(*tp)),
+                ("pp", JsonValue::from(*pp)),
+                ("chunk_tokens", JsonValue::from(*budget)),
+                ("chunks", JsonValue::from(*chunks)),
+                ("owner_prefill_s", JsonValue::from(*owner)),
+                ("victim_stall_s", JsonValue::from(*stall)),
+            ]);
+        }
+        j.write(&path)?;
+        println!("wrote {path}");
+    }
+
+    println!("\nLedger holds: every split costs the owner, every split spares the victims.");
+    Ok(())
+}

@@ -65,6 +65,12 @@ pub struct EngineConfig {
     /// engines) drives the session's model-time clock. `None` disables
     /// pricing entirely.
     pub pricing: Option<CostModel>,
+    /// Sarathi-style chunked-prefill budget: a prompt (suffix) longer
+    /// than this many tokens prefills in budget-sized chunks interleaved
+    /// with decode iterations of the running batch (mixed batches).
+    /// `None` — the default — takes the unchunked one-shot prefill code
+    /// path on every request, bitwise. Structural engines only.
+    pub chunk_tokens: Option<usize>,
 }
 
 impl EngineConfig {
@@ -72,7 +78,14 @@ impl EngineConfig {
     /// against the paper's 4-GPU-node topology with just enough nodes.
     pub fn structural(arch: ModelArch, layout: ParallelLayout) -> Self {
         let pricing = Some(CostModel::on_cardinal(arch.clone(), layout));
-        Self { arch, layout, mode: EngineMode::Structural, trace_dtype_bytes: 2, pricing }
+        Self {
+            arch,
+            layout,
+            mode: EngineMode::Structural,
+            trace_dtype_bytes: 2,
+            pricing,
+            chunk_tokens: None,
+        }
     }
 
     /// Numeric engine over built artifacts (f32 tiny model). Wall clocks
@@ -84,7 +97,14 @@ impl EngineConfig {
             mode: EngineMode::Numeric(store),
             trace_dtype_bytes: 4,
             pricing: None,
+            chunk_tokens: None,
         }
+    }
+
+    /// Set the chunked-prefill budget (`None` keeps the one-shot path).
+    pub fn with_chunk_tokens(mut self, chunk_tokens: Option<usize>) -> Self {
+        self.chunk_tokens = chunk_tokens;
+        self
     }
 
     /// Replace the pricing cost model (e.g. a plan's custom topology or
@@ -145,6 +165,15 @@ impl Engine {
             if !store.supports_tp(t) {
                 anyhow::bail!("artifacts not built for tp={t}");
             }
+            if cfg.chunk_tokens.is_some() {
+                anyhow::bail!(
+                    "chunked prefill needs a structural engine: numeric PJRT \
+                     executables are fixed-shape and cannot split a prompt"
+                );
+            }
+        }
+        if cfg.chunk_tokens == Some(0) {
+            anyhow::bail!("chunked prefill budget must be >= 1 token");
         }
 
         let world = layout.world_size();
@@ -339,8 +368,10 @@ impl Engine {
         while !session.is_idle() {
             let out = session.step()?;
             match out.kind {
+                // A chunked prompt prefills over several iterations; the
+                // last one emits the first token, so TTFT lands there.
                 StepKind::Prefill => ttft = start.elapsed(),
-                StepKind::Decode => step_latencies.push(out.latency),
+                StepKind::Decode | StepKind::Mixed => step_latencies.push(out.latency),
                 StepKind::Idle => break,
             }
             for e in out.events {

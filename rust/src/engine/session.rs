@@ -77,10 +77,15 @@ pub struct TokenEvent {
 /// What kind of iteration a [`Session::step`] call ran.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StepKind {
-    /// Prefill of one admitted sequence (emits its first token).
+    /// Prefill work for one admitted sequence with nothing decoding: a
+    /// one-shot prompt (emits its first token) or one chunk of a
+    /// chunked prompt (only the last chunk emits).
     Prefill,
     /// One decode iteration over the whole active batch.
     Decode,
+    /// One fused iteration: a prefill chunk plus a decode over the
+    /// active batch — chunked prefill's mixed batch (Sarathi-style).
+    Mixed,
     /// Nothing to do — no admitted or active sequences.
     Idle,
 }
@@ -108,6 +113,17 @@ pub struct StepOutcome {
     /// on structural engines with a pricing cost model, `None` otherwise
     /// (numeric engines report real wall time instead).
     pub model_latency_s: Option<f64>,
+    /// Model-time latency this iteration added to each mid-decode
+    /// sequence on top of a pure decode step — the prefill/decode
+    /// interference disaggregation removes and chunking amortizes. A
+    /// one-shot prefill stalls every decoding sequence for its whole
+    /// duration; a mixed step stretches them by the fused price minus
+    /// the decode-alone price. Empty when nothing was decoding, on
+    /// decode/idle steps, and on unpriced engines.
+    pub interference: Vec<(SeqId, f64)>,
+    /// Set on the iteration that finishes a chunked prefill: the owner
+    /// sequence and how many chunks its prompt took.
+    pub chunk_owner: Option<(SeqId, u32)>,
 }
 
 struct ActiveSeq {
@@ -120,6 +136,21 @@ struct ActiveSeq {
     max_new_tokens: usize,
     last_token: i32,
     generated: usize,
+}
+
+/// A prompt midway through Sarathi-style chunked prefill: its uncached
+/// suffix is prefilled [`crate::engine::EngineConfig::chunk_tokens`]
+/// tokens at a time, each chunk fused with a decode iteration of the
+/// active batch (a *mixed* step) so decoding sequences keep streaming
+/// while the long prompt fills in.
+struct ChunkedPrefill {
+    seq: SequenceInput,
+    /// Tokens cached before the prompt (disaggregated intake).
+    context: usize,
+    /// Suffix tokens already prefilled by earlier chunks.
+    done: usize,
+    /// Chunks issued so far.
+    chunks: u32,
 }
 
 /// The session's virtual clock: a pricing cost model plus the per-rank
@@ -138,6 +169,11 @@ pub struct Session<'e> {
     /// token count (0 for ordinary admissions).
     waiting_prefill: VecDeque<(SequenceInput, usize)>,
     active: Vec<ActiveSeq>,
+    /// Chunked-prefill budget (from the engine config); `None` keeps
+    /// every prompt on the one-shot prefill path bitwise.
+    chunk_tokens: Option<usize>,
+    /// The prompt currently being prefilled chunk by chunk, if any.
+    current_chunk: Option<ChunkedPrefill>,
     step_index: u64,
     model: Option<ModelClock>,
 }
@@ -157,10 +193,13 @@ impl<'e> Session<'e> {
         // left off, so per-step trace aggregation stays unambiguous
         // across sessions on one engine.
         let step_index = engine.steps_issued;
+        let chunk_tokens = engine.cfg.chunk_tokens;
         Self {
             engine,
             waiting_prefill: VecDeque::new(),
             active: Vec::new(),
+            chunk_tokens,
+            current_chunk: None,
             step_index,
             model,
         }
@@ -183,7 +222,7 @@ impl<'e> Session<'e> {
 
     /// Sequences the session is working on (admitted + decoding).
     pub fn live(&self) -> usize {
-        self.waiting_prefill.len() + self.active.len()
+        self.waiting_prefill.len() + self.active.len() + usize::from(self.current_chunk.is_some())
     }
 
     /// True when no sequence is admitted or decoding.
@@ -191,9 +230,34 @@ impl<'e> Session<'e> {
         self.live() == 0
     }
 
-    /// Admitted sequences that have not been prefilled yet.
+    /// Admitted sequences that have not finished prefilling yet (a
+    /// prompt midway through its chunks counts).
     pub fn pending_prefills(&self) -> usize {
-        self.waiting_prefill.len()
+        self.waiting_prefill.len() + usize::from(self.current_chunk.is_some())
+    }
+
+    /// True when the next [`Self::step`] call runs a decode iteration
+    /// over the active batch — the serving loop's cue to reserve KV for
+    /// the token each active sequence is about to write. Without
+    /// chunked prefill this is exactly `pending_prefills() == 0`; with
+    /// a chunk in progress (or a long prompt about to start one) the
+    /// next step is *mixed*, so the active batch decodes alongside the
+    /// chunk and still needs its per-token growth.
+    pub fn decode_in_next_step(&self) -> bool {
+        if self.current_chunk.is_some() {
+            return !self.active.is_empty();
+        }
+        match self.waiting_prefill.front() {
+            Some((seq, _)) => self.needs_chunking(seq) && !self.active.is_empty(),
+            None => true,
+        }
+    }
+
+    /// Whether a prompt's uncached suffix overflows the chunk budget
+    /// and therefore prefills chunk by chunk. Always false with the
+    /// budget unset — every prompt takes the one-shot path bitwise.
+    fn needs_chunking(&self, seq: &SequenceInput) -> bool {
+        self.chunk_tokens.is_some_and(|budget| seq.prompt.len() - seq.start > budget)
     }
 
     /// Ids currently in the decode batch, in batch order.
@@ -225,6 +289,7 @@ impl<'e> Session<'e> {
         }
         if self.waiting_prefill.iter().any(|(s, _)| s.id == seq.id)
             || self.active.iter().any(|s| s.id == seq.id)
+            || self.current_chunk.as_ref().is_some_and(|cp| cp.seq.id == seq.id)
         {
             anyhow::bail!("sequence {} already live in this session", seq.id);
         }
@@ -268,6 +333,12 @@ impl<'e> Session<'e> {
             self.waiting_prefill.remove(i);
             return true;
         }
+        if self.current_chunk.as_ref().is_some_and(|cp| cp.seq.id == id) {
+            // Chunks already prefilled are wasted work — the caller's
+            // KV release drops them like any bailed sequence.
+            self.current_chunk = None;
+            return true;
+        }
         if let Some(i) = self.active.iter().position(|s| s.id == id) {
             self.active.remove(i);
             return true;
@@ -275,11 +346,20 @@ impl<'e> Session<'e> {
         false
     }
 
-    /// Run one engine iteration: the prefill of the oldest admitted
-    /// sequence if any is waiting, else one decode iteration over the
-    /// active batch, else an idle no-op.
+    /// Run one engine iteration: the next chunk of an in-progress
+    /// chunked prefill (fused with a decode of the active batch when
+    /// one is running), else the prefill of the oldest admitted
+    /// sequence — chunked when its suffix overflows the budget — else
+    /// one decode iteration over the active batch, else an idle no-op.
     pub fn step(&mut self) -> Result<StepOutcome> {
+        if self.current_chunk.is_some() {
+            return self.chunk_step();
+        }
         if let Some((seq, context)) = self.waiting_prefill.pop_front() {
+            if self.needs_chunking(&seq) {
+                self.current_chunk = Some(ChunkedPrefill { seq, context, done: 0, chunks: 0 });
+                return self.chunk_step();
+            }
             return self.prefill_step(seq, context);
         }
         if !self.active.is_empty() {
@@ -293,6 +373,8 @@ impl<'e> Session<'e> {
             finished: Vec::new(),
             latency: Duration::ZERO,
             model_latency_s: None,
+            interference: Vec::new(),
+            chunk_owner: None,
         })
     }
 
@@ -326,6 +408,15 @@ impl<'e> Session<'e> {
             }
             None => None,
         };
+        // A one-shot prefill with sequences mid-decode stalls each of
+        // them for the whole iteration — the interference that makes
+        // colocated serving lose to disaggregation on TPOT.
+        let interference: Vec<(SeqId, f64)> = match model_latency_s {
+            Some(dt) if !self.active.is_empty() => {
+                self.active.iter().map(|s| (s.id, dt)).collect()
+            }
+            _ => Vec::new(),
+        };
         let token = argmax(&logits) as i32;
         let is_last = seq.max_new_tokens == 1;
         let events = vec![TokenEvent { seq: seq.id, token, index: 0, is_last }];
@@ -350,6 +441,132 @@ impl<'e> Session<'e> {
             finished,
             latency,
             model_latency_s,
+            interference,
+            chunk_owner: None,
+        })
+    }
+
+    /// One chunk of an in-progress chunked prefill. With sequences
+    /// mid-decode this is a *mixed* iteration: the chunk and one decode
+    /// token per active sequence run as a single fused launch — the
+    /// worker protocol has no fused command, so the decode rides the
+    /// same step tag and the pricing charges [`CostModel::post_mixed`]'s
+    /// single iteration instead of two. Only the final chunk emits the
+    /// owner's first token.
+    fn chunk_step(&mut self) -> Result<StepOutcome> {
+        let mut cp = self.current_chunk.take().expect("a chunk is in progress");
+        let budget = self.chunk_tokens.expect("chunked prefill enabled");
+        let suffix_len = cp.seq.prompt.len() - cp.seq.start;
+        let chunk_start = cp.done;
+        let len = budget.min(suffix_len - cp.done);
+        let last_chunk = cp.done + len == suffix_len;
+        let decode_batch = self.active.len();
+        let batch = 1 + decode_batch;
+        let step_index = self.step_index;
+        self.step_index += 1;
+        self.engine.steps_issued = self.step_index;
+        self.engine.sink.set_iteration(step_index, batch);
+        let start = Instant::now();
+        // Same safety rule as the one-shot path: Reset wipes the whole
+        // KV state, so only the *first* chunk with nothing else live
+        // may issue it.
+        if cp.done == 0 && self.active.is_empty() {
+            self.engine.broadcast(WorkerCmd::Reset)?;
+        }
+        let lo = cp.seq.start + cp.done;
+        self.engine
+            .broadcast(WorkerCmd::Prefill { tokens: cp.seq.prompt[lo..lo + len].to_vec() })?;
+        let chunk_logits = self.engine.recv_logits()?;
+        let mut victim_logits = None;
+        let mut kv_lens = Vec::new();
+        if decode_batch > 0 {
+            let tokens: Vec<i32> = self.active.iter().map(|s| s.last_token).collect();
+            let positions: Vec<usize> = self
+                .active
+                .iter()
+                .map(|s| s.context + s.prompt_len + s.generated - 1)
+                .collect();
+            kv_lens = positions.iter().map(|&p| p + 1).collect();
+            self.engine.broadcast(WorkerCmd::Decode { tokens, positions })?;
+            victim_logits = Some(self.engine.recv_logits()?);
+        }
+        let latency = start.elapsed();
+        let mut interference = Vec::new();
+        let model_latency_s = match self.model.as_mut() {
+            Some(m) => {
+                let (dt, hidden) = if decode_batch > 0 {
+                    m.cost.post_mixed(&mut m.timeline, chunk_start, len, &kv_lens)
+                } else {
+                    m.cost.post_prefill_chunk(&mut m.timeline, chunk_start, len)
+                };
+                self.engine.hidden_comm_s += hidden;
+                if decode_batch > 0 {
+                    // What the victims pay for sharing the iteration:
+                    // the fused price minus the decode they would have
+                    // run alone.
+                    let stretch = dt - m.cost.decode_iteration(&kv_lens).total();
+                    interference = self.active.iter().map(|s| (s.id, stretch)).collect();
+                }
+                Some(dt)
+            }
+            None => None,
+        };
+        cp.done += len;
+        cp.chunks += 1;
+        let mut events = Vec::with_capacity(batch);
+        let mut finished = Vec::new();
+        let mut chunk_owner = None;
+        let mut owner_active = None;
+        if last_chunk {
+            let token = argmax(&chunk_logits) as i32;
+            let is_last = cp.seq.max_new_tokens == 1;
+            events.push(TokenEvent { seq: cp.seq.id, token, index: 0, is_last });
+            chunk_owner = Some((cp.seq.id, cp.chunks));
+            if is_last {
+                finished.push(cp.seq.id);
+            } else {
+                owner_active = Some(ActiveSeq {
+                    id: cp.seq.id,
+                    prompt_len: suffix_len,
+                    context: cp.context,
+                    max_new_tokens: cp.seq.max_new_tokens,
+                    last_token: token,
+                    generated: 1,
+                });
+            }
+        } else {
+            self.current_chunk = Some(cp);
+        }
+        if let Some(logits) = victim_logits {
+            let next = batched_argmax(&logits, self.engine.cfg.layout.tp, decode_batch);
+            for (seq, &token_id) in self.active.iter_mut().zip(next.iter()) {
+                let token = token_id as i32;
+                seq.last_token = token;
+                let index = seq.generated;
+                seq.generated += 1;
+                let is_last = seq.generated == seq.max_new_tokens;
+                events.push(TokenEvent { seq: seq.id, token, index, is_last });
+                if is_last {
+                    finished.push(seq.id);
+                }
+            }
+            self.active.retain(|s| s.generated < s.max_new_tokens);
+        }
+        // The owner joins the decode batch only after the victims'
+        // rows were walked — its first decode token comes next step.
+        if let Some(owner) = owner_active {
+            self.active.push(owner);
+        }
+        Ok(StepOutcome {
+            kind: if decode_batch > 0 { StepKind::Mixed } else { StepKind::Prefill },
+            step_index,
+            batch,
+            events,
+            finished,
+            latency,
+            model_latency_s,
+            interference,
+            chunk_owner,
         })
     }
 
@@ -403,6 +620,8 @@ impl<'e> Session<'e> {
             finished,
             latency,
             model_latency_s,
+            interference: Vec::new(),
+            chunk_owner: None,
         })
     }
 }
@@ -675,6 +894,173 @@ mod tests {
         let all_cached =
             SequenceInput { id: 1, prompt: vec![0; 8].into(), start: 8, max_new_tokens: 1 };
         assert!(s.admit(all_cached).is_err(), "empty suffix");
+    }
+
+    fn chunked_engine(tp: usize, pp: usize, budget: usize) -> Engine {
+        Engine::new(
+            EngineConfig::structural(ModelArch::tiny(), ParallelLayout::new(tp, pp))
+                .with_chunk_tokens(Some(budget)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn chunked_prefill_splits_the_prompt_and_emits_on_the_last_chunk() {
+        let mut engine = chunked_engine(2, 1, 32);
+        let mut s = engine.session();
+        s.admit(seq(0, 100, 3)).unwrap();
+        assert_eq!(s.pending_prefills(), 1);
+        // 100 suffix tokens under a 32-token budget: 4 chunk iterations
+        // (32+32+32+4), nothing else decoding, so all pure prefills.
+        let mut dts = Vec::new();
+        for i in 0..4 {
+            assert!(!s.decode_in_next_step(), "no active batch during chunk {i}");
+            assert_eq!(s.pending_prefills(), 1, "owner counts until its last chunk");
+            let out = s.step().unwrap();
+            assert_eq!(out.kind, StepKind::Prefill);
+            assert_eq!(out.batch, 1);
+            assert!(out.interference.is_empty(), "no victims to interfere with");
+            dts.push(out.model_latency_s.unwrap());
+            if i < 3 {
+                assert!(out.events.is_empty(), "mid-prompt chunks emit nothing");
+                assert_eq!(out.chunk_owner, None);
+            } else {
+                assert_eq!(
+                    out.events,
+                    vec![TokenEvent { seq: 0, token: 0, index: 0, is_last: false }],
+                    "the last chunk emits the first token"
+                );
+                assert_eq!(out.chunk_owner, Some((0, 4)));
+            }
+        }
+        // Equal-length chunks get pricier as the attended context grows.
+        assert!(dts[2] > dts[0], "chunk 3 ({}) vs chunk 1 ({})", dts[2], dts[0]);
+        // Interleaving never creates free work: the chunk total beats
+        // the one-shot prefill price (extra launches + overheads).
+        let cm = crate::simtime::CostModel::on_cardinal(
+            ModelArch::tiny(),
+            ParallelLayout::new(2, 1),
+        );
+        let one_shot =
+            cm.prefill_breakdown(crate::analysis::InferenceShape::new(100, 3, 2)).total();
+        let total: f64 = dts.iter().sum();
+        assert!(total > one_shot, "chunked {total} must outprice one-shot {one_shot}");
+        // The owner then decodes like any sequence.
+        assert!(s.decode_in_next_step());
+        let d = s.step().unwrap();
+        assert_eq!(d.kind, StepKind::Decode);
+        assert_eq!(d.events[0], TokenEvent { seq: 0, token: 0, index: 1, is_last: false });
+        s.step().unwrap();
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn chunk_budget_at_or_above_the_prompt_is_bitwise_unchunked() {
+        let run = |chunk: Option<usize>| {
+            let mut engine = Engine::new(
+                EngineConfig::structural(ModelArch::tiny(), ParallelLayout::new(2, 2))
+                    .with_chunk_tokens(chunk),
+            )
+            .unwrap();
+            let mut s = engine.session();
+            s.admit(seq(0, 64, 4)).unwrap();
+            s.admit(seq(1, 24, 6)).unwrap();
+            let mut log = Vec::new();
+            while !s.is_idle() {
+                let out = s.step().unwrap();
+                log.push((out.kind, out.batch, out.events.clone(), out.model_latency_s));
+            }
+            (log, s.model_now())
+        };
+        let unset = run(None);
+        // The longest suffix is exactly 64 tokens: a 64-token budget
+        // never splits (chunking needs a strict overflow), and a huge
+        // budget trivially never splits — both take the one-shot code
+        // path, so every outcome and clock reading is bitwise equal.
+        assert_eq!(unset, run(Some(64)));
+        assert_eq!(unset, run(Some(100_000)));
+    }
+
+    #[test]
+    fn mixed_steps_decode_victims_alongside_the_chunk_and_price_interference() {
+        let mut engine = chunked_engine(2, 1, 32);
+        let mut s = engine.session();
+        // A short prompt prefills one-shot (under budget) and decodes.
+        s.admit(seq(0, 8, 16)).unwrap();
+        let p = s.step().unwrap();
+        assert_eq!(p.kind, StepKind::Prefill);
+        assert_eq!(p.chunk_owner, None, "under-budget prompts are not chunked");
+        assert_eq!(s.step().unwrap().kind, StepKind::Decode);
+        // A long prompt arrives: its 3 chunks (80 = 32+32+16) fuse with
+        // the victim's decode stream as mixed iterations.
+        s.admit(seq(1, 80, 4)).unwrap();
+        for i in 0..3 {
+            assert!(s.decode_in_next_step(), "a mixed step decodes the victim");
+            let out = s.step().unwrap();
+            assert_eq!(out.kind, StepKind::Mixed);
+            assert_eq!(out.batch, 2, "chunk owner + one victim");
+            let dt = out.model_latency_s.unwrap();
+            // The victim advanced (its event) and paid for sharing.
+            let victim: Vec<&TokenEvent> =
+                out.events.iter().filter(|e| e.seq == 0).collect();
+            assert_eq!(victim.len(), 1);
+            assert_eq!(victim[0].index, 2 + i, "victim streams through every chunk");
+            assert_eq!(out.interference.len(), 1);
+            let (vid, stretch) = out.interference[0];
+            assert_eq!(vid, 0);
+            assert!(
+                stretch > 0.0 && stretch < dt,
+                "interference in (0, dt): {stretch} vs {dt}"
+            );
+            if i < 2 {
+                assert!(out.events.iter().all(|e| e.seq != 1), "owner still prefilling");
+                assert_eq!(out.chunk_owner, None);
+            } else {
+                assert!(out.events.iter().any(|e| e.seq == 1 && e.index == 0));
+                assert_eq!(out.chunk_owner, Some((1, 3)));
+            }
+        }
+        // Both sequences now decode together.
+        let d = s.step().unwrap();
+        assert_eq!((d.kind, d.batch), (StepKind::Decode, 2));
+        assert!(d.interference.is_empty(), "pure decode interferes with nothing");
+        while !s.is_idle() {
+            s.step().unwrap();
+        }
+    }
+
+    #[test]
+    fn one_shot_prefill_stamps_the_stall_on_decoding_victims() {
+        // Without chunking, a prefill landing mid-decode stalls the
+        // running batch for its whole duration — that stall is now
+        // priced interference (what disaggregation removes).
+        let mut engine = structural_engine(2, 1);
+        let mut s = engine.session();
+        s.admit(seq(0, 8, 8)).unwrap();
+        s.step().unwrap();
+        s.step().unwrap();
+        s.admit(seq(1, 16, 2)).unwrap();
+        let out = s.step().unwrap();
+        assert_eq!(out.kind, StepKind::Prefill);
+        let dt = out.model_latency_s.unwrap();
+        assert_eq!(out.interference, vec![(0, dt)], "victim stalled the full prefill");
+        while !s.is_idle() {
+            s.step().unwrap();
+        }
+    }
+
+    #[test]
+    fn cancel_and_duplicate_guards_cover_an_in_progress_chunk() {
+        let mut engine = chunked_engine(1, 1, 16);
+        let mut s = engine.session();
+        s.admit(seq(5, 48, 4)).unwrap();
+        let out = s.step().unwrap();
+        assert!(out.events.is_empty(), "first of 3 chunks");
+        assert_eq!(s.live(), 1, "mid-chunk owner is live");
+        assert!(s.admit(seq(5, 8, 1)).is_err(), "duplicate of the chunking owner");
+        assert!(s.cancel(5), "cancel drops the in-progress chunk");
+        assert!(s.is_idle());
+        assert_eq!(s.step().unwrap().kind, StepKind::Idle);
     }
 
     #[test]

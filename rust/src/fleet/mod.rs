@@ -664,6 +664,8 @@ impl FleetSpec {
                                     kv_transfer_s: 0.0,
                                     retries: p.retries,
                                     wasted_prefill_s: p.wasted_prefill_s,
+                                    prefill_chunks: 0,
+                                    interference_s: 0.0,
                                     model: None,
                                     error: Some(e.to_string()),
                                 });
@@ -729,6 +731,8 @@ impl FleetSpec {
                                     kv_transfer_s: p.kv_s,
                                     retries: p.retries,
                                     wasted_prefill_s: p.wasted_prefill_s,
+                                    prefill_chunks: pf.prefill_chunks,
+                                    interference_s: pf.interference_s,
                                     model: Some(anchored(&p, pf)),
                                     error: Some(e.to_string()),
                                 });
@@ -1163,6 +1167,8 @@ impl FleetSpec {
                                     kv_transfer_s: p.kv_s,
                                     retries: p.retries,
                                     wasted_prefill_s: p.wasted_prefill_s,
+                                    prefill_chunks: pf.prefill_chunks,
+                                    interference_s: pf.interference_s,
                                     model: Some(anchored(&p, pf)),
                                     error: Some(e.to_string()),
                                 });
@@ -1217,6 +1223,11 @@ impl FleetSpec {
                                     kv_transfer_s: p.kv_s,
                                     retries: p.retries,
                                     wasted_prefill_s: p.wasted_prefill_s,
+                                    // A rejected target pass carries zero
+                                    // chunk/interference totals, so the
+                                    // sums stay the source pass's.
+                                    prefill_chunks: pf.prefill_chunks,
+                                    interference_s: pf.interference_s + d.interference_s,
                                     model,
                                     error: d.error.clone(),
                                 });
@@ -1234,6 +1245,8 @@ impl FleetSpec {
                                     kv_transfer_s: 0.0,
                                     retries: p.retries,
                                     wasted_prefill_s: p.wasted_prefill_s,
+                                    prefill_chunks: d.prefill_chunks,
+                                    interference_s: d.interference_s,
                                     model: if d.rejected {
                                         None
                                     } else {
@@ -1259,6 +1272,8 @@ impl FleetSpec {
                                     kv_transfer_s: 0.0,
                                     retries: p.retries,
                                     wasted_prefill_s: p.wasted_prefill_s,
+                                    prefill_chunks: d.prefill_chunks,
+                                    interference_s: d.interference_s,
                                     model: if d.rejected {
                                         None
                                     } else {
@@ -1286,6 +1301,8 @@ impl FleetSpec {
                                     kv_transfer_s: 0.0,
                                     retries: p.retries,
                                     wasted_prefill_s: p.wasted_prefill_s,
+                                    prefill_chunks: d.prefill_chunks,
+                                    interference_s: d.interference_s,
                                     model: Some(anchored(p, &d)),
                                     error: None,
                                 };
@@ -1388,6 +1405,12 @@ impl FleetSpec {
                                 kv_transfer_s: p.kv_s,
                                 retries: p.retries,
                                 wasted_prefill_s: p.wasted_prefill_s,
+                                // Chunking lives in the prefill pool; the
+                                // decode pool's 1-token intake is always
+                                // one-shot, but its victims' stalls behind
+                                // intake prefills still accumulate.
+                                prefill_chunks: pf.prefill_chunks,
+                                interference_s: pf.interference_s + d.interference_s,
                                 model,
                                 error: d.error.clone(),
                             });
@@ -1470,6 +1493,8 @@ impl FleetSpec {
                 e2e_s: 0.0,
                 retries: m.retries,
                 wasted_prefill_s: m.wasted_prefill_s,
+                prefill_chunks: m.prefill_chunks,
+                interference_s: m.interference_s,
                 model: m.model,
                 error: m.error.clone(),
             })
@@ -1501,6 +1526,8 @@ impl FleetSpec {
             saved_prefill_bytes: agg.saved_prefill_bytes,
             retries: agg.retries,
             wasted_prefill_s: agg.wasted_prefill_s,
+            chunked_requests: agg.chunked_requests,
+            interference_s: agg.interference_s,
             kv_transfer_bytes: kv_total_bytes,
             kv_transfer_s: kv_total_s,
             kv_migration_bytes,
@@ -1611,6 +1638,8 @@ fn route_retry(
                 kv_transfer_s: p.kv_s,
                 retries: p.retries,
                 wasted_prefill_s: p.wasted_prefill_s,
+                prefill_chunks: 0,
+                interference_s: 0.0,
                 model: None,
                 error: Some(e.to_string()),
             });
@@ -1905,6 +1934,15 @@ pub struct FleetRequestMetrics {
     /// their replica — work done, paid for in the request's E2E span,
     /// and thrown away.
     pub wasted_prefill_s: f64,
+    /// Prefill iterations the serving attempt used: 1 for a one-shot
+    /// prefill, `ceil(suffix / chunk_tokens)` when the chunked-prefill
+    /// budget split the prompt, 0 when the request never prefilled.
+    pub prefill_chunks: usize,
+    /// Model seconds this request lost as a decode *victim* to other
+    /// requests' prefill work on its replica: full stalls behind
+    /// one-shot prefills plus the per-iteration stretch of sharing
+    /// mixed chunk+decode batches. Summed across disaggregated passes.
+    pub interference_s: f64,
     /// Model-clock latencies; `None` when the request never entered an
     /// engine (queue overflow / admission rejection).
     pub model: Option<ModelRequestTimes>,
@@ -1963,6 +2001,12 @@ pub struct FleetSummary {
     pub retries: usize,
     /// Total model-time prefill seconds lost to replica failures.
     pub wasted_prefill_s: f64,
+    /// Requests whose prefill was split into more than one chunk by a
+    /// chunked-prefill budget (0 with the knob unset).
+    pub chunked_requests: usize,
+    /// Total model seconds requests lost as decode victims to other
+    /// requests' prefill work (one-shot stalls + mixed-batch stretch).
+    pub interference_s: f64,
     /// Total KV-cache bytes shipped prefill → decode.
     pub kv_transfer_bytes: f64,
     /// Total modeled KV-handoff wire seconds.
@@ -2448,6 +2492,108 @@ mod tests {
         assert_eq!(s.model, t.model);
         assert_eq!(s.cold_starts, t.cold_starts);
         assert_eq!(s.provisioned_gpu_s, t.provisioned_gpu_s);
+    }
+
+    #[test]
+    fn retried_requests_anchor_e2e_at_the_first_arrival() {
+        // Regression for the retry path's timekeeping: queued requests
+        // drained off a dead replica lose their scheduler enqueue
+        // instants, so the fleet must anchor a retry's queue/E2E on
+        // `Pending.arrival_s` — never on resubmission time.
+        //
+        // The DES is bitwise-deterministic up to the first fault event,
+        // so a healthy baseline run tells us exactly when replica 0 is
+        // mid-service: kill it halfway through its last request's
+        // lifetime and that request is guaranteed to be displaced.
+        let wl = workload(12, 2000.0);
+        let healthy =
+            FleetSpec::colocated(&tiny_plan(2, 1), 2).unwrap().simulate(&wl, 7).unwrap();
+        let target = healthy
+            .per_request
+            .iter()
+            .filter(|m| m.replica == 0)
+            .filter_map(|m| m.model.as_ref())
+            .max_by(|a, b| a.finished_at_s.total_cmp(&b.finished_at_s))
+            .expect("round-robin routes half the requests to replica 0");
+        let arrival = target.finished_at_s - target.e2e_s;
+        let outage_at = (arrival + target.finished_at_s) / 2.0;
+        let spec = FleetSpec::colocated(&tiny_plan(2, 1), 2)
+            .unwrap()
+            .with_faults(FaultSpec::none().with_outage(0, outage_at, 1e3))
+            .unwrap();
+        let s = spec.simulate(&wl, 7).unwrap();
+        assert_eq!(s.requests, 12);
+        assert!(s.retries >= 1, "the outage must displace at least one request");
+        let retried: Vec<_> = s
+            .per_request
+            .iter()
+            .filter(|m| m.retries > 0 && m.error.is_none())
+            .collect();
+        assert!(!retried.is_empty(), "a displaced request must complete on replica 1");
+        for m in &retried {
+            let t = m.model.as_ref().unwrap();
+            let derived_arrival = t.finished_at_s - t.e2e_s;
+            assert!(
+                derived_arrival < outage_at + 1e-9,
+                "request {}: E2E must span from the pre-outage arrival \
+                 (derived arrival {derived_arrival}, outage at {outage_at})",
+                m.request_id
+            );
+            assert!(t.queue_s > 0.0 && t.e2e_s >= t.queue_s);
+        }
+    }
+
+    #[test]
+    fn chunk_budget_at_or_above_every_prompt_is_bitwise_identical() {
+        // A budget no prompt exceeds must branch onto the one-shot
+        // prefill code path everywhere — same modeled clocks, bitwise.
+        let plain = FleetSpec::colocated(&tiny_plan(2, 1), 2).unwrap();
+        let roomy_plan = Deployment::builder()
+            .model("tiny")
+            .tp(2)
+            .workload(8, 4)
+            .chunked_prefill(64)
+            .build()
+            .unwrap();
+        let roomy = FleetSpec::colocated(&roomy_plan, 2).unwrap();
+        let wl = workload(12, 2000.0);
+        let a = plain.simulate(&wl, 7).unwrap();
+        let b = roomy.simulate(&wl, 7).unwrap();
+        assert_eq!(a.model, b.model, "an idle chunk budget must not reprice anything");
+        assert_eq!(b.chunked_requests, 0);
+        assert!(b.per_request.iter().all(|m| m.prefill_chunks == 1));
+        assert_eq!(a.interference_s, b.interference_s, "same stalls either way");
+    }
+
+    #[test]
+    fn chunked_fleet_splits_prefills_and_stays_deterministic() {
+        let plan = Deployment::builder()
+            .model("tiny")
+            .tp(2)
+            .workload(48, 4)
+            .chunked_prefill(16)
+            .build()
+            .unwrap();
+        let spec = FleetSpec::colocated(&plan, 2).unwrap();
+        let wl = WorkloadSpec {
+            arrivals: ArrivalProcess::poisson(2000.0),
+            prompt: LengthDist::Fixed(48),
+            decode: LengthDist::Fixed(4),
+            prefix: None,
+            requests: 12,
+        };
+        let a = spec.simulate(&wl, 7).unwrap();
+        assert_eq!(a.completed, 12);
+        assert_eq!(a.chunked_requests, 12, "every 48-token prompt splits on a 16-token budget");
+        for m in &a.per_request {
+            assert_eq!(m.prefill_chunks, 3, "ceil(48 / 16) chunks, request {}", m.request_id);
+            assert!(m.interference_s >= 0.0);
+        }
+        // Chunking on is as deterministic per seed as chunking off.
+        let b = spec.simulate(&wl, 7).unwrap();
+        assert_eq!(a.model, b.model, "same seed, same chunked schedule, bitwise");
+        assert_eq!(a.interference_s, b.interference_s);
+        assert_eq!(a.chunked_requests, b.chunked_requests);
     }
 
     #[test]

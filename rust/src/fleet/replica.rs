@@ -56,6 +56,12 @@ pub(crate) struct ReplicaDone {
     /// session admission rejection) — such requests carry no model times,
     /// matching the serving loop's convention.
     pub rejected: bool,
+    /// Prefill iterations the prompt took on this replica (1 one-shot,
+    /// more under chunked prefill, 0 when rejected).
+    pub prefill_chunks: usize,
+    /// Model-time seconds other prompts' prefill work stole from this
+    /// sequence's decode stream on this replica.
+    pub interference_s: f64,
     pub error: Option<String>,
 }
 
@@ -110,6 +116,10 @@ struct Flight {
     last_token_s: f64,
     last_token: i32,
     generated: usize,
+    /// Prefill iterations the prompt took (1 one-shot; chunked counts).
+    prefill_chunks: usize,
+    /// Interference seconds absorbed while decoding on this replica.
+    interference_s: f64,
 }
 
 pub(crate) struct Replica<'e> {
@@ -292,6 +302,8 @@ impl<'e> Replica<'e> {
                     first_token_s: None,
                     last_token_s: arrival_s,
                     rejected: true,
+                    prefill_chunks: 0,
+                    interference_s: 0.0,
                     error: Some(e.to_string()),
                 });
                 continue;
@@ -336,6 +348,8 @@ impl<'e> Replica<'e> {
                     last_token_s: admitted_s,
                     last_token: 0,
                     generated: 0,
+                    prefill_chunks: 1,
+                    interference_s: 0.0,
                 },
             );
         }
@@ -353,8 +367,10 @@ impl<'e> Replica<'e> {
             return Ok(done);
         }
 
-        // Pre-decode KV growth with mid-decode bail-out (step 4).
-        if self.session.pending_prefills() == 0 {
+        // Pre-decode KV growth with mid-decode bail-out (step 4) — also
+        // ahead of a mixed chunk+decode iteration, where the active
+        // batch writes a token alongside the chunk.
+        if self.session.decode_in_next_step() {
             for id in self.session.active_ids() {
                 if self.scheduler.grow(id).is_ok() {
                     continue;
@@ -376,9 +392,20 @@ impl<'e> Replica<'e> {
             }
         }
 
-        // One engine iteration (prefill or batched decode; step 5).
+        // One engine iteration (prefill, chunk, mixed, or batched
+        // decode; step 5).
         let outcome = self.session.step()?;
         let now = self.now();
+        for &(victim, stretch) in &outcome.interference {
+            if let Some(f) = self.flights.get_mut(&victim) {
+                f.interference_s += stretch;
+            }
+        }
+        if let Some((owner, chunks)) = outcome.chunk_owner {
+            if let Some(f) = self.flights.get_mut(&owner) {
+                f.prefill_chunks = chunks as usize;
+            }
+        }
         for e in &outcome.events {
             if let Some(f) = self.flights.get_mut(&e.seq) {
                 f.generated += 1;
@@ -429,7 +456,11 @@ impl<'e> Replica<'e> {
             };
             lost.push(LostRequest { id, wasted_prefill_s: wasted });
         }
-        for req in self.scheduler.drain_waiting() {
+        // Queued requests sank no prefill; their enqueue instants are
+        // dropped here because the fleet anchors E2E/goodput on the
+        // model-clock arrival the router preserved (`Pending.arrival_s`),
+        // not on host instants.
+        for (req, _enqueued_at) in self.scheduler.drain_waiting() {
             lost.push(LostRequest { id: req.id, wasted_prefill_s: 0.0 });
         }
         self.arrivals.clear();
@@ -526,6 +557,8 @@ impl<'e> Replica<'e> {
             first_token_s: f.first_token_s,
             last_token_s: f.last_token_s,
             rejected: false,
+            prefill_chunks: f.prefill_chunks,
+            interference_s: f.interference_s,
             error,
         }
     }

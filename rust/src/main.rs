@@ -51,6 +51,9 @@ COMMANDS:
                       --seed N (arrival PRNG seed; --arrival-rate only)
             structural runs also report model-time SLOs (priced timeline)
             --wire-bits 16|8|4  --overlap F (structural only)
+            --chunk-tokens N (Sarathi-style chunked prefill: prompts longer
+                              than N prefill in N-token chunks interleaved
+                              with running decodes; structural only)
   fleet     Capacity-sweep a multi-replica fleet on the model clock
             --model 3b|8b|13b|tiny  --tp N  --pp N  --sp N  --sd N
             --replicas-max N (colocated fleet sizes 1..=N; a disaggregated
@@ -89,6 +92,10 @@ COMMANDS:
                               that pay a quant/dequant compute term)
             --overlap F (fraction of each stage's compute that can hide
                               exposed collective time, in [0, 1])
+            --chunk-tokens N (chunked prefill on the colocated replicas
+                              and the disaggregated decode pool; the
+                              prefill pool has no decodes to interleave
+                              and always runs one-shot)
   bench-diff Compare two directories of BENCH_*.json perf artifacts
             --old DIR  --new DIR  --tolerance F (relative, default 0.05)
             exits non-zero when any modeled seconds/bytes grew past the
@@ -114,6 +121,7 @@ const SERVE_FLAGS: &[&str] = &[
     "seed",
     "wire_bits",
     "overlap",
+    "chunk_tokens",
 ];
 const TABLES_FLAGS: &[&str] = &[];
 const FLEET_FLAGS: &[&str] = &[
@@ -144,6 +152,7 @@ const FLEET_FLAGS: &[&str] = &[
     "sweep",
     "wire_bits",
     "overlap",
+    "chunk_tokens",
 ];
 const BENCH_DIFF_FLAGS: &[&str] = &["old", "new", "tolerance"];
 
@@ -223,6 +232,25 @@ fn tuning_flags(f: &Flags) -> anyhow::Result<Option<(u32, f64)>> {
 fn tuning_desc(tuning: Option<(u32, f64)>) -> String {
     match tuning {
         Some((bits, ov)) => format!(" wire-bits={bits} overlap={ov}"),
+        None => String::new(),
+    }
+}
+
+/// Parse `--chunk-tokens`. `None` without the flag: the plan builder is
+/// never touched and every prefill stays one-shot, bitwise. Domain
+/// validation (budget >= 1) lives in the deployment plan.
+fn chunk_flag(f: &Flags) -> anyhow::Result<Option<usize>> {
+    match f.opt("chunk_tokens") {
+        Some(_) => Ok(Some(f.num("chunk_tokens", 0)?)),
+        None => Ok(None),
+    }
+}
+
+/// Header fragment for a chunked run (empty without the flag, keeping
+/// seeded default stdout byte-identical across builds).
+fn chunk_desc(chunk: Option<usize>) -> String {
+    match chunk {
+        Some(tokens) => format!(" chunk-tokens={tokens}"),
         None => String::new(),
     }
 }
@@ -387,6 +415,14 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
              real kernels and has no collective pricing to tune"
         );
     }
+    let chunk = chunk_flag(f)?;
+    if !structural && chunk.is_some() {
+        anyhow::bail!(
+            "--chunk-tokens splits prefills on the priced model timeline; it \
+             needs structural serving (--model ...) — numeric PJRT prefill \
+             graphs are fixed-length and cannot split a prompt"
+        );
+    }
     if structural && f.opt("artifacts").is_some() {
         anyhow::bail!(
             "--artifacts conflicts with --model: structural serving (--model) \
@@ -416,6 +452,9 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
                 .workload(sp, decode_len);
             if let Some((bits, ov)) = tuning {
                 builder = builder.collective_tuning(bits, ov);
+            }
+            if let Some(tokens) = chunk {
+                builder = builder.chunked_prefill(tokens);
             }
             let plan = builder.build()?;
             (plan, sp)
@@ -449,12 +488,13 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         .collect();
     let summary = if arrival_rate > 0.0 {
         println!(
-            "arrivals: Poisson rate={arrival_rate} req/s seed={seed:#x} ({seed}){}",
-            tuning_desc(tuning)
+            "arrivals: Poisson rate={arrival_rate} req/s seed={seed:#x} ({seed}){}{}",
+            tuning_desc(tuning),
+            chunk_desc(chunk)
         );
         server.serve_poisson(reqs, arrival_rate, seed)?
     } else {
-        println!("arrivals: all-at-once{}", tuning_desc(tuning));
+        println!("arrivals: all-at-once{}{}", tuning_desc(tuning), chunk_desc(chunk));
         server.serve_batch(reqs)?
     };
     println!(
@@ -513,6 +553,17 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
             "collective tuning: {} saved on the wire, {:.3} ms of comm hidden by overlap",
             report::fmt_bytes(summary.wire_saved_bytes),
             summary.hidden_comm_s * 1e3
+        );
+    }
+    // Chunked runs report the interference ledger (absent without the
+    // flag — seeded default stdout stays byte-identical).
+    if chunk.is_some() {
+        println!(
+            "chunked prefill: {} of {} requests split; {:.3} ms of decode \
+             interference priced onto victims",
+            summary.chunked_requests,
+            summary.requests,
+            summary.interference_s * 1e3
         );
     }
     // Batched-decode comm accounting: AllReduce volume per active batch
@@ -851,13 +902,21 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
         }
         b
     };
-    let base = tuned(
-        Deployment::builder()
-            .model(&f.str("model", "8b"))
-            .tp(f.num("tp", 2)?)
-            .pp(f.num("pp", 1)?)
-            .workload(sp, sd),
-    )
+    // Chunked prefill applies to the colocated replicas and the
+    // disaggregated *decode* pool (where intake prefills interleave with
+    // running decodes); the prefill pool runs whole prompts back to back
+    // with nothing to interleave, so it never takes the knob.
+    let chunk = chunk_flag(f)?;
+    let chunked = |b: commsim::plan::Deployment| -> commsim::plan::Deployment {
+        match chunk {
+            Some(tokens) => b.chunked_prefill(tokens),
+            None => b,
+        }
+    };
+    let (tp, pp) = (f.num("tp", 2)?, f.num("pp", 1)?);
+    let base = chunked(tuned(
+        Deployment::builder().model(&f.str("model", "8b")).tp(tp).pp(pp).workload(sp, sd),
+    ))
     .build()?;
     let arch = base.arch().clone();
     let workload = WorkloadSpec {
@@ -893,6 +952,9 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
         );
         if let Some((bits, ov)) = tuning {
             println!("collective tuning: wire-bits={bits} overlap={ov}");
+        }
+        if let Some(tokens) = chunk {
+            println!("chunked prefill: budget={tokens} tokens");
         }
         return fleet_autoscale_table(
             &base,
@@ -936,6 +998,9 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
         if let Some((bits, ov)) = tuning {
             println!("collective tuning: wire-bits={bits} overlap={ov}");
         }
+        if let Some(tokens) = chunk {
+            println!("chunked prefill: budget={tokens} tokens");
+        }
         return fleet_churn_table(
             &base,
             max_replicas,
@@ -967,11 +1032,17 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
     }
     let prefill_plan = if arch.supports_tp(4) {
         tuned(Deployment::builder().arch(arch.clone()).tp(4).pp(1).workload(sp, sd)).build()?
+    } else if chunk.is_some() {
+        // Chunk-free copy of the base layout (see above: the prefill
+        // pool never chunks).
+        tuned(Deployment::builder().arch(arch.clone()).tp(tp).pp(pp).workload(sp, sd))
+            .build()?
     } else {
         base.clone()
     };
     let decode_plan = if arch.supports_pp(4) {
-        tuned(Deployment::builder().arch(arch.clone()).tp(1).pp(4).workload(sp, sd)).build()?
+        chunked(tuned(Deployment::builder().arch(arch.clone()).tp(1).pp(4).workload(sp, sd)))
+            .build()?
     } else {
         base.clone()
     };
@@ -979,7 +1050,7 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
 
     println!(
         "fleet capacity sweep: model={} workload={requests}x(Sp={sp}, Sd={sd}) \
-         arrivals={} rate={rate}/s seed={seed:#x} router={}{}{}",
+         arrivals={} rate={rate}/s seed={seed:#x} router={}{}{}{}",
         arch.name,
         if burst > 1 {
             format!("bursty({burst})")
@@ -994,7 +1065,8 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
             ),
             None => String::new(),
         },
-        tuning_desc(tuning)
+        tuning_desc(tuning),
+        chunk_desc(chunk)
     );
     let target = SloTarget { e2e_p95_s: slo_e2e, ..SloTarget::default() };
     let sweep_start = std::time::Instant::now();
@@ -1077,6 +1149,20 @@ fn cmd_fleet(f: &Flags) -> anyhow::Result<()> {
             report::fmt_bytes(saved),
             hidden * 1e3
         );
+    }
+    // Chunked sweeps report the interference ledger per candidate
+    // (absent without the flag — seeded default stdout stays
+    // byte-identical).
+    if chunk.is_some() {
+        println!("chunked prefill (requests split / decode interference priced):");
+        for c in &candidates {
+            println!(
+                "  {}: {} split, {:.3} ms",
+                c.spec.label(),
+                c.summary.chunked_requests,
+                c.summary.interference_s * 1e3
+            );
+        }
     }
     match slo_e2e {
         Some(slo) => match fleet::cheapest(&candidates) {
@@ -1480,6 +1566,36 @@ mod tests {
         // subcommands that price serving paths).
         let err = Flags::parse("slo", &args(&["--wire-bits", "8"]), SLO_FLAGS).unwrap_err();
         assert!(err.to_string().contains("unknown flag --wire-bits"), "{err}");
+    }
+
+    #[test]
+    fn chunk_flag_parses_on_serve_and_fleet_only() {
+        for (cmd, flags) in [("serve", SERVE_FLAGS), ("fleet", FLEET_FLAGS)] {
+            let f = Flags::parse(cmd, &args(&["--chunk-tokens", "512"]), flags).unwrap();
+            assert_eq!(chunk_flag(&f).unwrap(), Some(512), "{cmd}");
+            // Without the flag: no chunking, the builder is untouched
+            // and every prefill stays one-shot, bitwise.
+            let f = Flags::parse(cmd, &args(&[]), flags).unwrap();
+            assert_eq!(chunk_flag(&f).unwrap(), None, "{cmd}");
+        }
+        // Headers describe chunked runs and stay byte-identical otherwise.
+        assert_eq!(chunk_desc(Some(512)), " chunk-tokens=512");
+        assert_eq!(chunk_desc(None), "");
+        // Domain validation is the plan's: a zero budget surfaces as the
+        // typed PlanError, not a mid-DES panic.
+        let err = Deployment::builder()
+            .model("8b")
+            .tp(2)
+            .workload(64, 8)
+            .chunked_prefill(0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("budget must be >= 1"), "{err}");
+        // analyze/trace describe one-shot request shapes; they reject
+        // the serving-schedule knob outright.
+        let err =
+            Flags::parse("analyze", &args(&["--chunk-tokens", "256"]), ANALYZE_FLAGS).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --chunk-tokens"), "{err}");
     }
 
     #[test]

@@ -59,6 +59,39 @@ impl ComputeModel {
         self.prefill_flops(arch, layers, s_p) / (t as f64 * self.peak_flops * self.eff_prefill)
     }
 
+    /// FLOPs to prefill one chunk of `len` tokens at offset `start` of a
+    /// prompt (Sarathi-style chunked prefill): the GEMM term covers only
+    /// the chunk's tokens, while each chunk token attends over everything
+    /// before it — the quadratic term telescopes as
+    /// `(start+len)² − start²`, so summing chunk FLOPs over a full split
+    /// reproduces [`Self::prefill_flops`] exactly.
+    pub fn prefill_chunk_flops(
+        &self,
+        arch: &ModelArch,
+        layers: usize,
+        start: usize,
+        len: usize,
+    ) -> f64 {
+        let per_token_gemm = 2.0 * Self::layer_params(arch);
+        let qd = (arch.heads * arch.head_dim) as f64;
+        let end = (start + len) as f64;
+        let attn = qd * (end * end - (start as f64) * (start as f64));
+        layers as f64 * (len as f64 * per_token_gemm + 4.0 * attn)
+    }
+
+    /// Wall time of one prefill chunk sharded over `t` GPUs (seconds).
+    pub fn prefill_chunk_time(
+        &self,
+        arch: &ModelArch,
+        layers: usize,
+        start: usize,
+        len: usize,
+        t: usize,
+    ) -> f64 {
+        self.prefill_chunk_flops(arch, layers, start, len)
+            / (t as f64 * self.peak_flops * self.eff_prefill)
+    }
+
     /// Decode-step wall time of `layers` layers sharded over `t` GPUs:
     /// stream the local weight shard + the KV cache once from HBM.
     pub fn decode_time(
@@ -170,6 +203,44 @@ mod tests {
         assert_eq!(cm.quant_dequant_time(0.0), 0.0);
         // Linear in bytes: doubling the payload doubles the cast cost.
         assert!((cm.quant_dequant_time(2.0 * n) - 2.0 * expect).abs() < 1e-18);
+    }
+
+    #[test]
+    fn chunk_flops_telescope_to_the_one_shot_prefill() {
+        let cm = ComputeModel::default();
+        let arch = ModelArch::llama32_3b();
+        for (s_p, chunk) in [(128usize, 32usize), (100, 48), (257, 64), (64, 64), (64, 128)] {
+            let one_shot = cm.prefill_flops(&arch, arch.layers, s_p);
+            let mut sum = 0.0;
+            let mut start = 0usize;
+            while start < s_p {
+                let len = chunk.min(s_p - start);
+                sum += cm.prefill_chunk_flops(&arch, arch.layers, start, len);
+                start += len;
+            }
+            // The quadratic attention term telescopes exactly; float
+            // summation noise is the only slack.
+            assert!(
+                (sum - one_shot).abs() / one_shot < 1e-12,
+                "Sp={s_p} chunk={chunk}: {sum} vs {one_shot}"
+            );
+        }
+        // A chunk covering the whole prompt is the one-shot formula (up
+        // to float association — the serving path never relies on this:
+        // an unchunked prompt takes the one-shot code path by branch).
+        let whole = cm.prefill_chunk_flops(&arch, arch.layers, 0, 128);
+        let one = cm.prefill_flops(&arch, arch.layers, 128);
+        assert!((whole - one).abs() / one < 1e-12);
+        // Later chunks cost more than earlier equal-length chunks (they
+        // attend over more context).
+        assert!(
+            cm.prefill_chunk_flops(&arch, arch.layers, 96, 32)
+                > cm.prefill_chunk_flops(&arch, arch.layers, 0, 32)
+        );
+        assert!(
+            cm.prefill_chunk_time(&arch, arch.layers, 96, 32, 2)
+                < cm.prefill_chunk_time(&arch, arch.layers, 96, 32, 1)
+        );
     }
 
     #[test]

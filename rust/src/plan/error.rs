@@ -88,6 +88,9 @@ pub enum PlanError {
     /// `[0, 1]` or not finite (`value` pre-formatted so the variant
     /// stays `Eq`).
     TuningOverlapInvalid { value: String },
+    /// The chunked-prefill token budget is zero — a chunk must carry at
+    /// least one prompt token per iteration.
+    ChunkTokensInvalid { tokens: usize },
 }
 
 impl fmt::Display for PlanError {
@@ -215,6 +218,11 @@ impl fmt::Display for PlanError {
                 "collective tuning: overlap factor must be a finite value \
                  in [0, 1] (got {value})"
             ),
+            PlanError::ChunkTokensInvalid { tokens } => write!(
+                f,
+                "chunked prefill: the token budget must be >= 1 (got \
+                 {tokens}) — omit .chunked_prefill() for one-shot prefill"
+            ),
         }
     }
 }
@@ -254,6 +262,10 @@ mod tests {
         let e = PlanError::TuningOverlapInvalid { value: "1.5".into() };
         let s = e.to_string();
         assert!(s.contains("[0, 1]") && s.contains("1.5"), "{s}");
+
+        let e = PlanError::ChunkTokensInvalid { tokens: 0 };
+        let s = e.to_string();
+        assert!(s.contains(">= 1") && s.contains("got 0"), "{s}");
     }
 
     #[test]

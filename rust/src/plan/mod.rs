@@ -81,6 +81,7 @@ pub struct Deployment {
     dtype_bytes: Option<usize>,
     calibration: Option<Calibration>,
     tuning: Option<(u32, f64)>,
+    chunk_tokens: Option<usize>,
     artifacts: Option<ArtifactStore>,
 }
 
@@ -97,6 +98,7 @@ impl Default for Deployment {
             dtype_bytes: None,
             calibration: None,
             tuning: None,
+            chunk_tokens: None,
             artifacts: None,
         }
     }
@@ -188,6 +190,23 @@ impl Deployment {
     /// calibration.
     pub fn collective_tuning(mut self, wire_bits: u32, overlap: f64) -> Self {
         self.tuning = Some((wire_bits, overlap));
+        self
+    }
+
+    /// Sarathi-style chunked-prefill budget for the plan's engines,
+    /// servers and fleets: a prompt (suffix) longer than `tokens`
+    /// prefills in `tokens`-sized chunks interleaved with decode
+    /// iterations of already-admitted sequences, trading the owner's
+    /// TTFT for the victims' TPOT instead of stalling decodes behind
+    /// one monolithic prefill. Validation happens in `build()` — a zero
+    /// budget surfaces as [`PlanError::ChunkTokensInvalid`]. Not
+    /// calling this (or a budget at/above every prompt length) keeps
+    /// the one-shot prefill path bitwise. Chunking is a serving-schedule
+    /// knob: `analyze()`/`simulate()` still describe the one-shot
+    /// request shape, and numeric plans reject the knob at `engine()`
+    /// time (PJRT prefill graphs are fixed-length).
+    pub fn chunked_prefill(mut self, tokens: usize) -> Self {
+        self.chunk_tokens = Some(tokens);
         self
     }
 
@@ -326,11 +345,15 @@ impl Deployment {
             }
             calibration.tuning = crate::cluster::CollectiveTuning::new(wire_bits, overlap);
         }
+        if self.chunk_tokens == Some(0) {
+            return Err(PlanError::ChunkTokensInvalid { tokens: 0 });
+        }
         Ok(DeploymentPlan {
             arch,
             placement,
             shape,
             calibration,
+            chunk_tokens: self.chunk_tokens,
             artifacts: self.artifacts,
         })
     }
@@ -390,6 +413,7 @@ pub struct DeploymentPlan {
     placement: Placement,
     shape: InferenceShape,
     calibration: Calibration,
+    chunk_tokens: Option<usize>,
     artifacts: Option<ArtifactStore>,
 }
 
@@ -428,6 +452,12 @@ impl DeploymentPlan {
     /// as validated by the builder.
     pub fn collective_tuning(&self) -> crate::cluster::CollectiveTuning {
         self.calibration.tuning
+    }
+
+    /// The plan's chunked-prefill token budget (`None` = one-shot
+    /// prefill), as validated by the builder.
+    pub fn chunk_tokens(&self) -> Option<usize> {
+        self.chunk_tokens
     }
 
     /// Human-readable identity, e.g. `Llama-3.1-8B TP=2 PP=2`.
@@ -515,8 +545,13 @@ impl DeploymentPlan {
     /// (numeric serving keeps wall clocks as its primary latency).
     pub fn engine(&self) -> crate::Result<Engine> {
         let cfg = match &self.artifacts {
+            // Numeric configs keep the chunk knob too: Engine::new owns
+            // the "PJRT prefill graphs are fixed-length" rejection, so a
+            // chunked numeric plan fails loudly instead of silently
+            // serving one-shot.
             Some(store) => EngineConfig::numeric(store.clone(), self.layout())
-                .with_pricing(self.cost_model()),
+                .with_pricing(self.cost_model())
+                .with_chunk_tokens(self.chunk_tokens),
             None => self.structural_config(),
         };
         Engine::new(cfg)
@@ -532,6 +567,7 @@ impl DeploymentPlan {
             mode: EngineMode::Structural,
             trace_dtype_bytes: DTYPE_BYTES_BF16,
             pricing: Some(self.cost_model()),
+            chunk_tokens: self.chunk_tokens,
         }
     }
 
@@ -689,6 +725,39 @@ mod tests {
         let untuned = plain.cost_model().prefill_breakdown(shape);
         assert!(tuned.comm_s < untuned.comm_s);
         assert_eq!(tuned.compute_s, untuned.compute_s);
+    }
+
+    #[test]
+    fn chunked_prefill_validates_and_threads_into_the_engine() {
+        // A zero budget is a typed construction error, not a DES panic.
+        let err = Deployment::builder().model("8b").chunked_prefill(0).build().unwrap_err();
+        assert_eq!(err, PlanError::ChunkTokensInvalid { tokens: 0 });
+        // No call -> one-shot prefill, and the engine config agrees.
+        let plain = Deployment::builder().model("3b").tp(2).build().unwrap();
+        assert_eq!(plain.chunk_tokens(), None);
+        assert_eq!(plain.engine().unwrap().config().chunk_tokens, None);
+        // A positive budget survives into the plan and its engines.
+        let chunked =
+            Deployment::builder().model("3b").tp(2).chunked_prefill(256).build().unwrap();
+        assert_eq!(chunked.chunk_tokens(), Some(256));
+        assert_eq!(chunked.engine().unwrap().config().chunk_tokens, Some(256));
+        // The knob reschedules serving; it does not change the request
+        // shape the analytical models describe.
+        assert_eq!(chunked.analyze().volume, plain.analyze().volume);
+        assert_eq!(chunked.simulate(), plain.simulate());
+        // Numeric plans reject the knob at engine() time: PJRT prefill
+        // graphs are fixed-length, so chunking cannot be served.
+        const META: &str = "model=tiny-llama\nvocab=512\nhidden=256\nintermediate=768\n\
+            layers=4\nheads=8\nhead_dim=32\nmax_seq=128\nprefill_len=32\nseed=0\n\
+            dtype=f32\ntp_degrees=1,2,4\n";
+        let store = ArtifactStore {
+            dir: std::path::PathBuf::from("/nonexistent"),
+            meta: ArtifactMeta::parse(META).unwrap(),
+        };
+        let numeric =
+            Deployment::builder().artifacts(store).chunked_prefill(16).build().unwrap();
+        let err = numeric.engine().unwrap_err().to_string();
+        assert!(err.contains("chunked prefill"), "{err}");
     }
 
     #[test]

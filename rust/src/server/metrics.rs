@@ -61,6 +61,17 @@ pub struct RequestMetrics {
     /// `CostModel::prefill_price` of the prefilled suffix). 0 on a
     /// fault-free path.
     pub wasted_prefill_s: f64,
+    /// Prefill iterations this request's prompt took: 1 on the one-shot
+    /// path, `ceil(suffix / chunk_tokens)` under chunked prefill, 0 for
+    /// requests rejected before prefilling.
+    pub prefill_chunks: usize,
+    /// Model-time seconds other requests' prefill work added to this
+    /// request's decode stream: full stalls under one-shot prefills
+    /// landing mid-decode, fused-minus-decode-alone stretch in mixed
+    /// chunked iterations. The per-request face of prefill/decode
+    /// interference — what disaggregation removes and chunking
+    /// amortizes. 0 without a pricing cost model.
+    pub interference_s: f64,
     /// Model-time latencies from the priced timeline (structural serving);
     /// `None` on unpriced engines and on requests rejected before
     /// admission.
@@ -172,6 +183,12 @@ pub struct ServeSummary {
     /// across the run (0.0 at the default zero overlap). Stamped by the
     /// serving layer after the run.
     pub hidden_comm_s: f64,
+    /// Requests whose prompt prefilled in more than one chunk (0 with
+    /// chunked prefill off).
+    pub chunked_requests: usize,
+    /// Total model-time seconds prefill work stole from decoding
+    /// requests across the run (Σ per-request `interference_s`).
+    pub interference_s: f64,
     /// Model-time percentiles from the priced timeline — present when the
     /// run served through a pricing engine (structural plans), absent on
     /// wall-clock-only (numeric) serving.
@@ -179,10 +196,13 @@ pub struct ServeSummary {
 }
 
 /// Band filtering shared by the wall- and model-clock summaries: samples
-/// of one latency metric over requests that generated at least
-/// `min_tokens` tokens (so a request rejected before any token cannot
-/// drag p50 toward a fictitious perfect SLO). The accessor returns `None`
-/// for requests without the clock in question.
+/// of one latency metric over *error-free* requests that generated at
+/// least `min_tokens` tokens. Errored requests stamp placeholder `0.0`
+/// latencies (a bailed sequence never finished its span; a rejected one
+/// never started), and a zero sample deflates p50 toward a fictitious
+/// perfect SLO — failures are counted in `failed`/goodput, never in the
+/// latency bands. The accessor returns `None` for requests without the
+/// clock in question.
 fn banded_samples(
     metrics: &[RequestMetrics],
     min_tokens: usize,
@@ -190,7 +210,7 @@ fn banded_samples(
 ) -> Vec<f64> {
     metrics
         .iter()
-        .filter(|m| m.generated_tokens >= min_tokens)
+        .filter(|m| m.error.is_none() && m.generated_tokens >= min_tokens)
         .filter_map(value)
         .collect()
 }
@@ -229,6 +249,8 @@ impl ServeSummary {
         let mut saved_prefill_bytes = 0.0;
         let mut retries = 0usize;
         let mut wasted_prefill_s = 0.0;
+        let mut chunked_requests = 0usize;
+        let mut interference_s = 0.0;
         for m in metrics {
             total_tokens += m.generated_tokens;
             failed += usize::from(m.error.is_some());
@@ -237,12 +259,13 @@ impl ServeSummary {
             saved_prefill_bytes += m.saved_prefill_bytes;
             retries += m.retries;
             wasted_prefill_s += m.wasted_prefill_s;
+            chunked_requests += usize::from(m.prefill_chunks > 1);
+            interference_s += m.interference_s;
         }
-        // Latency bands come from requests that actually produced the
-        // measured quantity (see `banded_samples`). E2E covers every
-        // token-producing request (a mid-decode bail consumed real wall
-        // time); requests_per_s counts completed requests only, never
-        // rejected ones.
+        // Latency bands come from error-free requests that actually
+        // produced the measured quantity (see `banded_samples`);
+        // requests_per_s counts completed requests only, never rejected
+        // or bailed ones.
         let ttfts = banded_samples(metrics, 1, |m| Some(m.ttft_s));
         let tpots = banded_samples(metrics, 2, |m| Some(m.tpot_s));
         let e2es = banded_samples(metrics, 1, |m| Some(m.e2e_s));
@@ -266,6 +289,8 @@ impl ServeSummary {
             wasted_prefill_s,
             wire_saved_bytes: 0.0,
             hidden_comm_s: 0.0,
+            chunked_requests,
+            interference_s,
             model: Self::model_summary(metrics, total_tokens),
         }
     }
@@ -318,6 +343,8 @@ mod tests {
             e2e_s,
             retries: 0,
             wasted_prefill_s: 0.0,
+            prefill_chunks: 1,
+            interference_s: 0.0,
             model: None,
             error,
         }
@@ -481,5 +508,62 @@ mod tests {
         assert!((s.e2e.p50_s - 0.4).abs() < 1e-9, "rejected request's 0.05s stays out");
         // Throughput counts completed requests, not rejected ones.
         assert!((s.requests_per_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn errored_requests_with_partial_tokens_stay_out_of_latency_bands() {
+        // A mid-decode bail-out produced real tokens but stamps a
+        // placeholder tpot_s of 0.0 (its span never finished). That zero
+        // must not deflate p50: the band filter keys on `error`, not
+        // just token counts.
+        let mut bailed = m(1, 0.05, 0.0, 0.1, Some("KV pool exhausted".into()));
+        bailed.generated_tokens = 5; // partial progress, still errored
+        let mut bailed_model = bailed.clone();
+        bailed_model.request_id = 3;
+        bailed_model.model = Some(ModelRequestTimes {
+            queue_s: 0.0,
+            ttft_s: 0.0,
+            tpot_s: 0.0,
+            e2e_s: 0.0,
+            finished_at_s: 0.0,
+        });
+        let mut ok = m(0, 0.2, 0.03, 0.5, None);
+        ok.model = Some(ModelRequestTimes {
+            queue_s: 0.0,
+            ttft_s: 0.2,
+            tpot_s: 0.03,
+            e2e_s: 0.5,
+            finished_at_s: 0.5,
+        });
+        let s = ServeSummary::from_metrics(
+            &[ok, bailed, bailed_model],
+            Duration::from_secs(1),
+        );
+        assert_eq!((s.completed, s.failed), (1, 2));
+        // Without the error filter these would read 0.0 (two zero
+        // samples out of three put the median on a placeholder).
+        assert!((s.tpot.p50_s - 0.03).abs() < 1e-12, "wall tpot band excludes failures");
+        assert!((s.ttft.p50_s - 0.2).abs() < 1e-12);
+        assert!((s.e2e.p50_s - 0.5).abs() < 1e-12);
+        let mt = s.model.expect("one priced request");
+        assert!((mt.tpot.p50_s - 0.03).abs() < 1e-12, "model tpot band excludes failures");
+        assert!((mt.ttft.p50_s - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunk_and_interference_totals_sum_across_requests() {
+        let mut a = m(0, 0.1, 0.01, 0.2, None);
+        a.prefill_chunks = 4;
+        a.interference_s = 0.002;
+        let mut b = m(1, 0.1, 0.01, 0.2, None);
+        b.prefill_chunks = 1; // one-shot prompt: not a chunked request
+        b.interference_s = 0.001;
+        let s = ServeSummary::from_metrics(&[a, b], Duration::from_secs(1));
+        assert_eq!(s.chunked_requests, 1);
+        assert!((s.interference_s - 0.003).abs() < 1e-15);
+        // The unchunked path stays all-zero.
+        let s = ServeSummary::from_metrics(&[m(0, 0.1, 0.01, 0.2, None)], Duration::ZERO);
+        assert_eq!(s.chunked_requests, 0);
+        assert_eq!(s.interference_s, 0.0);
     }
 }

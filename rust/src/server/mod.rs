@@ -53,6 +53,11 @@ struct InFlight {
     first_token_at: Option<Instant>,
     last_token_at: Instant,
     generated: usize,
+    /// Prefill iterations the prompt took (1 one-shot; chunked counts).
+    prefill_chunks: usize,
+    /// Model-time seconds other prompts' prefill work stole from this
+    /// request's decode stream.
+    interference_s: f64,
     model: Option<ModelFlight>,
 }
 
@@ -243,6 +248,8 @@ impl Server {
                         e2e_s: 0.0,
                         retries: 0,
                         wasted_prefill_s: 0.0,
+                        prefill_chunks: 0,
+                        interference_s: 0.0,
                         model: None,
                         error: Some(e.to_string()),
                     });
@@ -297,6 +304,8 @@ impl Server {
                         e2e_s: queue_s,
                         retries: 0,
                         wasted_prefill_s: 0.0,
+                        prefill_chunks: 0,
+                        interference_s: 0.0,
                         model: None,
                         error: Some(e.to_string()),
                     });
@@ -342,6 +351,8 @@ impl Server {
                         first_token_at: None,
                         last_token_at: now,
                         generated: 0,
+                        prefill_chunks: 1,
+                        interference_s: 0.0,
                         model,
                     },
                 );
@@ -371,10 +382,12 @@ impl Server {
                 }
             }
 
-            // 4. Before a decode iteration, reserve KV for the token each
-            //    active sequence is about to write; bail out the ones the
-            //    pool cannot hold (blocks released, error in the metrics).
-            if session.pending_prefills() == 0 {
+            // 4. Before an iteration that decodes the active batch (a
+            //    pure decode, or a mixed chunk+decode step), reserve KV
+            //    for the token each active sequence is about to write;
+            //    bail out the ones the pool cannot hold (blocks
+            //    released, error in the metrics).
+            if session.decode_in_next_step() {
                 for id in session.active_ids() {
                     if self.scheduler.grow(id).is_ok() {
                         continue;
@@ -393,10 +406,24 @@ impl Server {
                 }
             }
 
-            // 5. One engine iteration (prefill or batched decode).
+            // 5. One engine iteration (prefill, chunk, mixed, or
+            //    batched decode).
             let outcome = session.step()?;
             let now = Instant::now();
             let now_model = session.model_now();
+            // Interference bookkeeping: seconds this iteration's prefill
+            // work added to each mid-decode victim, and the chunk count
+            // of a prompt that just finished prefilling.
+            for &(victim, stretch) in &outcome.interference {
+                if let Some(info) = in_flight.get_mut(&victim) {
+                    info.interference_s += stretch;
+                }
+            }
+            if let Some((owner, chunks)) = outcome.chunk_owner {
+                if let Some(info) = in_flight.get_mut(&owner) {
+                    info.prefill_chunks = chunks as usize;
+                }
+            }
             for e in &outcome.events {
                 if let Some(info) = in_flight.get_mut(&e.seq) {
                     info.generated += 1;
@@ -465,6 +492,8 @@ impl Server {
             // fleet's fault-injection path stamps these.
             retries: 0,
             wasted_prefill_s: 0.0,
+            prefill_chunks: info.prefill_chunks,
+            interference_s: info.interference_s,
             model,
             error,
         }

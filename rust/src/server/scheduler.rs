@@ -103,6 +103,11 @@ impl Scheduler {
         if request.prompt.is_empty() {
             anyhow::bail!("empty prompt");
         }
+        if request.decode_len == 0 {
+            // Catch it at the front door: downstream the session would
+            // only trip an assert mid-iteration, deep in a DES run.
+            anyhow::bail!("decode_len must be >= 1 (a request generates at least one token)");
+        }
         let total = request.prompt.len() + request.decode_len;
         if total > self.cfg.kv_blocks * self.cfg.kv_block_size {
             anyhow::bail!("request of {total} tokens can never fit the KV pool");
@@ -163,12 +168,16 @@ impl Scheduler {
         self.kv.release(id)
     }
 
-    /// Empty the waiting queue and return the still-unadmitted requests,
-    /// in FCFS order — the replica-failure path ([`crate::faults`]): a
-    /// dead replica's queue is handed back to the router. Queued requests
-    /// hold no KV, so there is nothing else to release.
-    pub fn drain_waiting(&mut self) -> Vec<Request> {
-        self.waiting.drain(..).map(|(r, _)| r).collect()
+    /// Empty the waiting queue and return the still-unadmitted requests
+    /// with their original enqueue instants, in FCFS order — the
+    /// replica-failure path ([`crate::faults`]): a dead replica's queue
+    /// is handed back to the router. Keeping `enqueued_at` lets the
+    /// retry path count queueing — and therefore E2E/goodput — from the
+    /// request's first arrival instead of silently restarting its
+    /// clock. Queued requests hold no KV, so there is nothing else to
+    /// release.
+    pub fn drain_waiting(&mut self) -> Vec<(Request, Instant)> {
+        self.waiting.drain(..).collect()
     }
 }
 
@@ -226,8 +235,15 @@ mod tests {
         s.submit(req(2, 16, 4)).unwrap();
         s.submit(req(3, 16, 4)).unwrap();
         assert_eq!(s.admit_next().unwrap().unwrap().request.id, 1);
+        let before_drain = Instant::now();
         let drained = s.drain_waiting();
-        assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(drained.iter().map(|(r, _)| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        for (_, enqueued_at) in &drained {
+            assert!(
+                *enqueued_at <= before_drain,
+                "drained requests keep their original enqueue instant"
+            );
+        }
         assert_eq!(s.queue_len(), 0);
         assert_eq!(s.running_len(), 1, "admitted sequences are the caller's to cancel");
         assert!(s.drain_waiting().is_empty());
@@ -275,12 +291,12 @@ mod tests {
 
     #[test]
     fn cached_hint_charges_only_the_suffix() {
-        // Pool: 2 blocks x 16 tokens. A 32-token prompt fills it alone —
-        // but with 16 tokens cached, admission charges one block, so a
-        // second hinted request still fits.
-        let mut s = Scheduler::new(cfg(2, 16, 4));
-        s.submit(req(1, 32, 0)).unwrap();
-        s.submit(req(2, 32, 0)).unwrap();
+        // Pool: 3 blocks x 16 tokens. A 32-token prompt takes 2 blocks
+        // uncached — but with 16 tokens cached, admission charges one
+        // block, so a second hinted request fits alongside.
+        let mut s = Scheduler::new(cfg(3, 16, 4));
+        s.submit(req(1, 32, 1)).unwrap();
+        s.submit(req(2, 32, 1)).unwrap();
         assert_eq!(s.peek().unwrap().id, 1);
         let a = s.admit_next_with_cached(16).unwrap().unwrap();
         assert_eq!((a.request.id, a.cached_tokens), (1, 16));
@@ -293,13 +309,13 @@ mod tests {
         s.finish(2).unwrap();
         // The hint is clamped: a fully-cached prompt still prefills (and
         // charges) at least one token.
-        s.submit(req(3, 16, 0)).unwrap();
+        s.submit(req(3, 16, 1)).unwrap();
         let c = s.admit_next_with_cached(999).unwrap().unwrap();
         assert_eq!(c.cached_tokens, 15, "at least one token stays uncached");
         assert_eq!(s.kv().used_blocks(), 1);
         s.finish(3).unwrap();
         // admit_next is exactly the zero-hint path.
-        s.submit(req(4, 16, 0)).unwrap();
+        s.submit(req(4, 16, 1)).unwrap();
         let d = s.admit_next().unwrap().unwrap();
         assert_eq!(d.cached_tokens, 0);
         assert_eq!(s.kv().used_blocks(), 1, "full prompt charged");
@@ -312,6 +328,9 @@ mod tests {
         let mut s = Scheduler::new(cfg(2, 4, 8));
         assert!(s.submit(req(1, 64, 64)).is_err(), "can never fit");
         assert!(s.submit(req(2, 0, 4)).is_err(), "empty prompt");
+        let zero_decode = s.submit(req(12, 4, 0));
+        assert!(zero_decode.is_err(), "zero decode span caught at submit, not mid-DES");
+        assert!(zero_decode.unwrap_err().to_string().contains("decode_len"));
         for id in 3..11 {
             s.submit(req(id, 4, 2)).unwrap();
         }

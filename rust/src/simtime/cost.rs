@@ -189,6 +189,97 @@ impl CostModel {
         (compute, exposed, hidden)
     }
 
+    /// Framework overhead of one prefill *chunk* iteration: the first
+    /// chunk pays the full prefill intake (the request enters the engine
+    /// there); every later chunk is one more engine step.
+    fn chunk_overhead(&self, start: usize) -> f64 {
+        if start == 0 {
+            self.prefill_overhead()
+        } else {
+            self.cal.step_overhead_s
+        }
+    }
+
+    /// Per-stage costs of one chunked-prefill iteration: `len` chunk
+    /// tokens starting at prompt offset `start`. Compute is the chunk's
+    /// roofline time (GEMMs over the chunk, attention over the growing
+    /// `start..start+len × context` window); collectives carry the
+    /// chunk's `[len, h]` activation volume with one sampled token (the
+    /// last-stage logits gather runs once per prefill command). Returns
+    /// (compute, exposed comm, overlap-hidden comm).
+    fn prefill_chunk_stage_cost(&self, s: usize, start: usize, len: usize) -> (f64, f64, f64) {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        let layers = self.arch.stage_layers(p, s);
+        let compute = self.cal.compute.prefill_chunk_time(&self.arch, layers, start, len, t);
+        let (exposed, hidden) = self.apply_overlap(compute, self.stage_comm(s, len, 1));
+        (compute, exposed, hidden)
+    }
+
+    /// Per-stage costs of one *mixed* iteration: a `len`-token prefill
+    /// chunk at offset `start` fused with a decode step over `kv_lens`.
+    /// Compute is chunk + batched decode; collectives are launched once
+    /// over the fused `[len + B, h]` activation window and the logits
+    /// gather samples `1 + B` tokens (the chunk's probe plus every decode
+    /// victim). Returns (compute, exposed comm, overlap-hidden comm).
+    fn mixed_stage_cost(
+        &self,
+        s: usize,
+        start: usize,
+        len: usize,
+        kv_lens: &[usize],
+    ) -> (f64, f64, f64) {
+        let (t, p) = (self.layout().tp, self.layout().pp);
+        let batch = kv_lens.len();
+        let layers = self.arch.stage_layers(p, s);
+        let compute = self.cal.compute.prefill_chunk_time(&self.arch, layers, start, len, t)
+            + self.cal.compute.decode_batch_time(&self.arch, layers, kv_lens, t);
+        let (exposed, hidden) =
+            self.apply_overlap(compute, self.stage_comm(s, len + batch, 1 + batch));
+        (compute, exposed, hidden)
+    }
+
+    /// Closed-form breakdown of one chunked-prefill iteration: `len`
+    /// tokens starting at offset `start` of the (uncached) prompt suffix,
+    /// attending over everything before them. The first chunk pays the
+    /// prefill intake overhead; later chunks pay one engine step each, so
+    /// a multi-chunk split never underprices the one-shot prefill.
+    pub fn prefill_chunk_breakdown(&self, start: usize, len: usize) -> PhaseBreakdown {
+        assert!(len >= 1, "prefill chunk needs >= 1 token");
+        let mut compute = 0.0;
+        let mut comm = 0.0;
+        for s in 0..self.layout().pp {
+            let (c, m, _hidden) = self.prefill_chunk_stage_cost(s, start, len);
+            compute += c;
+            comm += m;
+        }
+        PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: self.chunk_overhead(start) }
+    }
+
+    /// Closed-form breakdown of one mixed iteration (one prefill chunk +
+    /// a decode step over the running batch), priced as a single fused
+    /// launch: weights stream once, collectives carry the fused window,
+    /// and the overhead is the chunk's plus the decode handoff — so the
+    /// chunk owner's TTFT and every decode victim's TPOT stretch by the
+    /// same honest iteration time.
+    pub fn mixed_iteration(
+        &self,
+        chunk_start: usize,
+        chunk_len: usize,
+        kv_lens: &[usize],
+    ) -> PhaseBreakdown {
+        assert!(chunk_len >= 1, "mixed iteration needs a >= 1 token chunk");
+        assert!(!kv_lens.is_empty(), "mixed iteration needs >= 1 decode sequence");
+        let mut compute = 0.0;
+        let mut comm = 0.0;
+        for s in 0..self.layout().pp {
+            let (c, m, _hidden) = self.mixed_stage_cost(s, chunk_start, chunk_len, kv_lens);
+            compute += c;
+            comm += m;
+        }
+        let overhead = self.chunk_overhead(chunk_start) + self.decode_handoff_overhead();
+        PhaseBreakdown { compute_s: compute, comm_s: comm, overhead_s: overhead }
+    }
+
     /// Per-stage costs of one decode iteration over `kv_lens` (weights
     /// stream once, KV per sequence, `[B, h]` collective payloads).
     /// Returns (compute, exposed comm, overlap-hidden comm).
@@ -288,6 +379,38 @@ impl CostModel {
             tl,
             |s, cm| cm.prefill_stage_cost(s, prompt_len),
             self.prefill_overhead(),
+        )
+    }
+
+    /// Replay one chunked-prefill iteration onto the timeline (the
+    /// posting analogue of [`Self::prefill_chunk_breakdown`]). Returns
+    /// (duration, overlap-hidden comm seconds).
+    pub fn post_prefill_chunk(&self, tl: &mut Timeline, start: usize, len: usize) -> (f64, f64) {
+        assert!(len >= 1, "prefill chunk needs >= 1 token");
+        self.post_iteration(
+            tl,
+            |s, cm| cm.prefill_chunk_stage_cost(s, start, len),
+            self.chunk_overhead(start),
+        )
+    }
+
+    /// Replay one mixed iteration (prefill chunk + decode batch) onto the
+    /// timeline as a single fused launch (the posting analogue of
+    /// [`Self::mixed_iteration`]). Returns (duration, overlap-hidden comm
+    /// seconds).
+    pub fn post_mixed(
+        &self,
+        tl: &mut Timeline,
+        chunk_start: usize,
+        chunk_len: usize,
+        kv_lens: &[usize],
+    ) -> (f64, f64) {
+        assert!(chunk_len >= 1, "mixed iteration needs a >= 1 token chunk");
+        assert!(!kv_lens.is_empty(), "mixed iteration needs >= 1 decode sequence");
+        self.post_iteration(
+            tl,
+            |s, cm| cm.mixed_stage_cost(s, chunk_start, chunk_len, kv_lens),
+            self.chunk_overhead(chunk_start) + self.decode_handoff_overhead(),
         )
     }
 
@@ -547,6 +670,111 @@ mod tests {
                     <= 1e-9 * saved_bytes.abs().max(1.0),
                 "tp={tp} pp={pp}: gather term must cancel in the difference"
             );
+        }
+    }
+
+    #[test]
+    fn chunk_breakdowns_never_underprice_the_one_shot_prefill() {
+        // Property: for every layout and chunk budget, Σ chunk breakdowns
+        // ≥ the one-shot prefill — interleaving never creates free work.
+        // Compute telescopes to (float-)equality; the extra collective
+        // launches and per-chunk logits gathers make comm strictly grow,
+        // and the per-chunk step overheads make overhead grow.
+        for (tp, pp) in [(1usize, 1usize), (2, 1), (4, 1), (1, 4), (2, 2), (8, 1)] {
+            let cm = cost(tp, pp);
+            for (sp, budget) in [(128usize, 32usize), (257, 64), (96, 100), (512, 128)] {
+                let one_shot = cm.prefill_breakdown(InferenceShape::new(sp, 1, 2));
+                let mut sum = PhaseBreakdown::default();
+                let mut chunks = 0usize;
+                let mut start = 0usize;
+                while start < sp {
+                    let len = budget.min(sp - start);
+                    let b = cm.prefill_chunk_breakdown(start, len);
+                    sum.compute_s += b.compute_s;
+                    sum.comm_s += b.comm_s;
+                    sum.overhead_s += b.overhead_s;
+                    chunks += 1;
+                    start += len;
+                }
+                assert!(
+                    (sum.compute_s - one_shot.compute_s).abs()
+                        <= 1e-9 * one_shot.compute_s.max(1e-30),
+                    "tp={tp} pp={pp} sp={sp} budget={budget}: chunk compute telescopes"
+                );
+                assert!(
+                    sum.total() >= one_shot.total() * (1.0 - 1e-12),
+                    "tp={tp} pp={pp} sp={sp} budget={budget}: Σ chunks {} < one-shot {}",
+                    sum.total(),
+                    one_shot.total()
+                );
+                if chunks > 1 {
+                    assert!(
+                        sum.total() > one_shot.total(),
+                        "tp={tp} pp={pp} sp={sp} budget={budget}: a real split must \
+                         cost strictly more (extra launches + step overheads)"
+                    );
+                    if tp > 1 {
+                        assert!(sum.comm_s > one_shot.comm_s, "extra gathers per chunk");
+                    }
+                    assert!(sum.overhead_s > one_shot.overhead_s, "per-chunk step overhead");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_iteration_prices_chunk_and_victims_as_one_fused_launch() {
+        let cm = cost(4, 1);
+        let kv = [200usize, 150, 300];
+        let mixed = cm.mixed_iteration(64, 32, &kv);
+        let chunk = cm.prefill_chunk_breakdown(64, 32);
+        let decode = cm.decode_iteration(&kv);
+        // Fused compute is the sum of the parts (weights stream per term
+        // today; the fusion saving is in comm launches and overhead).
+        assert!(
+            (mixed.compute_s - (chunk.compute_s + decode.compute_s)).abs()
+                <= 1e-12 * (chunk.compute_s + decode.compute_s),
+            "mixed compute {} vs parts {}",
+            mixed.compute_s,
+            chunk.compute_s + decode.compute_s
+        );
+        // One fused launch per collective: cheaper than launching the
+        // chunk's and the decode step's collectives separately...
+        assert!(mixed.comm_s < chunk.comm_s + decode.comm_s);
+        // ...but dearer than either alone (the payload grew).
+        assert!(mixed.comm_s > chunk.comm_s && mixed.comm_s > decode.comm_s);
+        // One step's overhead, not two: the chunk's plus the decode
+        // handoff (0 at pp=1, so here exactly the chunk's).
+        assert_eq!(mixed.overhead_s, chunk.overhead_s);
+        // The decode victims see real interference: the mixed iteration
+        // costs strictly more than the pure decode step they would have
+        // run alone.
+        assert!(mixed.total() > decode.total());
+        // First-chunk mixed steps pay the prefill intake once.
+        let first = cm.mixed_iteration(0, 32, &kv);
+        assert!(first.overhead_s > cm.mixed_iteration(32, 32, &kv).overhead_s);
+    }
+
+    #[test]
+    fn posted_chunk_and_mixed_match_their_closed_forms() {
+        for (tp, pp) in [(2usize, 1usize), (4, 1), (1, 4), (2, 2), (8, 1), (2, 4)] {
+            let cm = cost(tp, pp);
+            let mut tl = Timeline::new(cm.placement.layout.world_size());
+            let (d1, h1) = cm.post_prefill_chunk(&mut tl, 0, 64);
+            assert_eq!(h1, 0.0, "default tuning hides nothing");
+            let closed = cm.prefill_chunk_breakdown(0, 64).total();
+            assert!(
+                (d1 - closed).abs() <= 1e-9 * closed.abs().max(1.0),
+                "tp={tp} pp={pp}: posted chunk {d1} vs closed {closed}"
+            );
+            let before = tl.max_time();
+            let (d2, _) = cm.post_mixed(&mut tl, 64, 64, &[128, 192]);
+            let closed2 = cm.mixed_iteration(64, 64, &[128, 192]).total();
+            assert!(
+                (d2 - closed2).abs() <= 1e-9 * closed2.abs().max(1.0),
+                "tp={tp} pp={pp}: posted mixed {d2} vs closed {closed2}"
+            );
+            assert!((tl.max_time() - (before + d2)).abs() < 1e-12, "clock accumulates");
         }
     }
 
